@@ -1,0 +1,109 @@
+//! Capacity planning: "how many GPUs does my edge site need?"
+//!
+//! The operator-facing workflow the paper motivates (Fig 7 / the 27%
+//! cost saving): given a target prompt rate, a latency budget and a
+//! satisfaction SLO, sweep compute capacity under each
+//! latency-management scheme and report the cheapest feasible
+//! deployment — first with the fast analytic tandem model, then
+//! validated with the full SLS.
+//!
+//! Run: `cargo run --release --example capacity_planning -- [--rate 60] [--alpha 0.95]`
+
+use icc6g::config::{SchemeConfig, SimConfig};
+use icc6g::coordinator::{min_capacity_from_curve, sweep_gpu_capacity};
+use icc6g::llm::{CostModel, GpuSpec, JobSpec};
+use icc6g::queueing::analytic::{scheme_satisfaction, SystemParams};
+use icc6g::queueing::{Policy, Scheme};
+use icc6g::util::args::{Args, OptSpec};
+use icc6g::util::bench::{cell, Table};
+
+fn main() -> anyhow::Result<()> {
+    let specs = [
+        OptSpec { name: "rate", help: "target prompt rate (prompts/s)", takes_value: true, default: Some("60") },
+        OptSpec { name: "alpha", help: "satisfaction SLO", takes_value: true, default: Some("0.95") },
+        OptSpec { name: "horizon", help: "SLS seconds per point", takes_value: true, default: Some("10") },
+    ];
+    let args = Args::parse(std::env::args().skip(1), &specs)?;
+    let rate = args.get_f64("rate")?.unwrap();
+    let alpha = args.get_f64("alpha")?.unwrap();
+    let horizon = args.get_f64("horizon")?.unwrap();
+
+    let job = JobSpec::table1();
+    println!(
+        "workload: {} prompts/s of {}+{} token jobs, {} ms budget, SLO {alpha}\n",
+        rate,
+        job.n_input,
+        job.n_output,
+        job.b_total * 1e3
+    );
+
+    // --- analytic first pass: tandem M/M/1 with μ2 from the roofline --
+    println!("== analytic screening (tandem M/M/1) ==");
+    let mut analytic = Table::new(
+        "min ×A100 by scheme (analytic)",
+        &["scheme", "min xA100", "T_comp@cap (ms)"],
+    );
+    for scheme in Scheme::fig4_schemes() {
+        // smallest g where satisfaction(rate) >= alpha
+        let mut found: Option<f64> = None;
+        for g10 in 10..400u32 {
+            let g = g10 as f64 / 10.0;
+            let mu2 = 1.0 / CostModel::new(GpuSpec::a100().scaled(g)).total_latency(&job);
+            if mu2 <= rate {
+                continue; // unstable
+            }
+            let p = SystemParams { mu1: 900.0, mu2, b_total: job.b_total };
+            let sat = match scheme.policy {
+                Policy::Joint => scheme_satisfaction(&p, &scheme, rate),
+                Policy::Disjoint { .. } => scheme_satisfaction(&p, &scheme, rate),
+            };
+            if sat >= alpha {
+                found = Some(g);
+                break;
+            }
+        }
+        match found {
+            Some(g) => {
+                let t = CostModel::new(GpuSpec::a100().scaled(g)).total_latency(&job);
+                analytic.row(&[scheme.name.to_string(), cell(g, 1), cell(t * 1e3, 1)]);
+            }
+            None => analytic.row(&[scheme.name.to_string(), "infeasible".into(), "-".into()]),
+        }
+    }
+    analytic.print();
+
+    // --- SLS validation ----------------------------------------------
+    println!("\n== SLS validation (full 5G uplink + compute queue) ==");
+    let mut base = SimConfig::table1();
+    base.n_ues = rate.round() as u32; // 1 prompt/s/UE
+    base.horizon = horizon;
+    let grid: Vec<f64> = (4..=20).map(|i| i as f64).collect();
+    let mut sls = Table::new("min ×A100 by scheme (SLS)", &["scheme", "min xA100"]);
+    let mut icc_min = None;
+    let mut dis_min = None;
+    for scheme in SchemeConfig::fig6_schemes() {
+        let pts = sweep_gpu_capacity(&base, scheme, &grid, 2);
+        let m = min_capacity_from_curve(&pts, alpha);
+        if scheme.priority_scheme {
+            icc_min = m;
+        } else if m.is_some() && dis_min.is_none() {
+            dis_min = m;
+        }
+        sls.row(&[
+            scheme.name.to_string(),
+            m.map(|x| cell(x, 1)).unwrap_or_else(|| "not reached".into()),
+        ]);
+    }
+    sls.print();
+
+    if let (Some(icc), Some(dis)) = (icc_min, dis_min) {
+        println!(
+            "\nICC saves {:.0}% of compute vs the best disjoint deployment \
+             ({:.1} vs {:.1} ×A100; paper reports 27%).",
+            (1.0 - icc / dis) * 100.0,
+            icc,
+            dis
+        );
+    }
+    Ok(())
+}

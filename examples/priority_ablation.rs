@@ -1,0 +1,59 @@
+//! Ablation of the ICC priority scheme's two components (paper §IV-B):
+//!
+//! 1. **Job-aware packet prioritization** (MAC: job SDUs preempt
+//!    background traffic), and
+//! 2. **Priority-based job queueing + hopeless-drop** (compute node:
+//!    EDF on `T_gen + b_total − T_comm`, drop jobs that cannot finish).
+//!
+//! We run the joint-RAN deployment with each combination toggled,
+//! showing where the gains actually come from.
+//!
+//! Run: `cargo run --release --example priority_ablation`
+
+use icc6g::config::{Deployment, Management, SchemeConfig, SimConfig};
+use icc6g::sim::Sls;
+use icc6g::util::bench::{cell, Table};
+
+fn main() {
+    let rates = [60u32, 75, 90];
+    let mut t = Table::new(
+        "ICC priority-scheme ablation (joint management, RAN 5ms)",
+        &["prompts/s", "packet-prio", "job-queue", "satisfaction", "dropped", "avg_comm_ms", "avg_comp_ms"],
+    );
+
+    for &rate in &rates {
+        for (pkt, queue) in [(false, false), (true, false), (false, true), (true, true)] {
+            let mut cfg = SimConfig::table1();
+            cfg.n_ues = rate;
+            cfg.horizon = 12.0;
+            cfg.seed = 17;
+            // Custom scheme: joint management at the RAN with the two
+            // priority components controlled independently. (We bypass
+            // `with_scheme`, which would re-sync the MAC toggle.)
+            cfg.scheme = SchemeConfig {
+                name: "custom",
+                deployment: Deployment::Ran,
+                management: Management::Joint,
+                priority_scheme: queue, // drives the compute-node queue
+            };
+            cfg.mac.job_priority = pkt; // the MAC half, decoupled
+            let r = Sls::new(cfg).run().report;
+            t.row(&[
+                cell(rate as f64, 0),
+                pkt.to_string(),
+                queue.to_string(),
+                cell(r.satisfaction_rate(), 4),
+                r.n_dropped.to_string(),
+                cell(r.comm.mean() * 1e3, 2),
+                cell(r.comp.mean() * 1e3, 2),
+            ]);
+        }
+    }
+    t.print();
+    let _ = t.write_csv("ablation_priority.csv");
+    println!(
+        "\nReading: packet-prio shaves the uplink tail; the deadline job\n\
+         queue + drop rule is what preserves satisfaction past the knee\n\
+         (it stops wasting GPU time on already-hopeless jobs)."
+    );
+}

@@ -1,0 +1,61 @@
+//! Quickstart: the public API in ~60 lines.
+//!
+//! 1. Closed-form theory (Fig 4): service capacity of ICC vs 5G MEC.
+//! 2. One system-level simulation run of each scheme.
+//! 3. (If `make artifacts` has run) a real LLM generation over PJRT.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use icc6g::config::{SchemeConfig, SimConfig};
+use icc6g::queueing::analytic::{scheme_satisfaction, SystemParams};
+use icc6g::queueing::{service_capacity, Scheme};
+use icc6g::runtime::{tokenizer, Engine};
+use icc6g::sim::run_scheme;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. Theory: tandem M/M/1 with joint vs disjoint budgets -----
+    let params = SystemParams::paper(); // μ1=900, μ2=100, b=80 ms
+    println!("== Theory (Fig 4) ==");
+    for scheme in Scheme::fig4_schemes() {
+        let cap = service_capacity(
+            |l| scheme_satisfaction(&params, &scheme, l),
+            0.95,
+            params.stability_limit() - 1e-6,
+            1e-6,
+        );
+        println!("  {:<24} λ* = {:>6.2} jobs/s", scheme.name, cap.lambda_star);
+    }
+
+    // --- 2. System-level simulation (Fig 6 point at 60 prompts/s) ---
+    println!("\n== SLS (one Fig 6 point, 60 UEs × 1 prompt/s) ==");
+    let mut cfg = SimConfig::table1();
+    cfg.horizon = 10.0;
+    for scheme in SchemeConfig::fig6_schemes() {
+        let r = run_scheme(&cfg, scheme, 1);
+        println!(
+            "  {:<32} satisfaction {:.3}  (comm {:.1} ms, comp {:.1} ms)",
+            scheme.name,
+            r.satisfaction_rate(),
+            r.comm.mean() * 1e3,
+            r.comp.mean() * 1e3,
+        );
+    }
+
+    // --- 3. Real serving path (needs `make artifacts`) --------------
+    let dir = Engine::default_artifacts_dir();
+    if dir.join("prefill.hlo.txt").exists() {
+        println!("\n== Real LLM over PJRT ==");
+        let engine = Engine::load(&dir)?;
+        let prompt = tokenizer::encode("Integrated communication and computing");
+        let (out, stats) = engine.generate(&prompt, 12)?;
+        println!(
+            "  generated {} tokens in {:.1} ms ({:.0} tok/s)",
+            out.len(),
+            (stats.prefill_s + stats.decode_s) * 1e3,
+            stats.tokens_per_sec()
+        );
+    } else {
+        println!("\n(skipping real-model demo: run `make artifacts` first)");
+    }
+    Ok(())
+}

@@ -1,0 +1,136 @@
+"""AOT export: lower the L2 model to HLO *text* + dump weights/metadata.
+
+Outputs (under ``artifacts/``, built once by ``make artifacts``; Python
+never runs on the request path):
+
+* ``prefill.hlo.txt`` / ``decode.hlo.txt`` — HLO text of the jitted
+  prefill / decode functions. HLO **text** (not ``.serialize()``) is the
+  interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+  instruction ids that the xla crate's xla_extension 0.5.1 rejects
+  (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+  round-trips cleanly. See /opt/xla-example/README.md.
+* ``weights.bin`` — little-endian binary of all parameters in
+  ``model.param_order()`` order (format below), loaded by
+  rust/src/runtime/weights.rs.
+* ``model_meta.txt`` — ``key value`` lines with the architecture config
+  so the Rust runtime can size its buffers without reparsing HLO.
+* ``golden_trace.txt`` — prompt token ids + greedy continuation, used by
+  the Rust integration test to prove bit-exact cross-language serving.
+
+weights.bin format:
+  magic  b"ICCW"  | u32 version=1 | u32 n_tensors
+  per tensor: u32 name_len | name (utf-8) | u32 rank | u32 dims[rank]
+              | f32 data (row-major)
+"""
+
+import argparse
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import (ModelConfig, decode, flatten_params, generate_greedy,
+                    init_params, param_order, prefill)
+
+GOLDEN_PROMPT = "The 6G network integrates communication and computing."
+N_GOLDEN_OUTPUT = 15  # matches Table I output prompt size
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def write_weights(path, cfg, params):
+    names = [n for n, _ in param_order(cfg)]
+    with open(path, "wb") as f:
+        f.write(b"ICCW")
+        f.write(struct.pack("<II", 1, len(names)))
+        for name in names:
+            arr = jax.device_get(params[name]).astype("float32")
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            f.write(arr.tobytes())
+
+
+def byte_tokenize(text: str, bos: int = 256):
+    """Byte-level tokenizer mirrored by rust/src/runtime/tokenizer.rs."""
+    return [bos] + [b for b in text.encode("utf-8")]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = ModelConfig()
+    params = init_params(cfg, seed=args.seed)
+    flat = flatten_params(cfg, params)
+    flat_specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in flat]
+
+    # NOTE(xla-0.5.1): the rust side cannot read multi-element tuple
+    # outputs (PjRtBuffer::ToLiteralSync CHECK-fails on tuple shapes
+    # with >1 leaf; 1-tuples work — see /opt/xla-example). We therefore
+    # export wrappers returning ONE concatenated f32 vector
+    # [logits | k_cache | v_cache]; rust/src/runtime/engine.rs splits
+    # it at the offsets derived from model_meta.txt.
+    def prefill_flat(f, t):
+        logits, k, v = prefill(cfg, f, t)
+        return (jnp.concatenate(
+            [logits.reshape(-1), k.reshape(-1), v.reshape(-1)]),)
+
+    def decode_flat(f, t, p, kc, vc):
+        logits, k, v = decode(cfg, f, t, p, kc, vc)
+        return (jnp.concatenate(
+            [logits.reshape(-1), k.reshape(-1), v.reshape(-1)]),)
+
+    # --- prefill ---
+    tok_spec = jax.ShapeDtypeStruct((cfg.max_seq,), jnp.int32)
+    lowered = jax.jit(prefill_flat).lower(flat_specs, tok_spec)
+    text = to_hlo_text(lowered)
+    with open(os.path.join(args.out_dir, "prefill.hlo.txt"), "w") as f:
+        f.write(text)
+    print(f"prefill.hlo.txt: {len(text)} chars")
+
+    # --- decode ---
+    i1 = jax.ShapeDtypeStruct((1,), jnp.int32)
+    kv = jax.ShapeDtypeStruct(
+        (cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim), jnp.float32)
+    lowered = jax.jit(decode_flat).lower(flat_specs, i1, i1, kv, kv)
+    text = to_hlo_text(lowered)
+    with open(os.path.join(args.out_dir, "decode.hlo.txt"), "w") as f:
+        f.write(text)
+    print(f"decode.hlo.txt: {len(text)} chars")
+
+    # --- weights + metadata ---
+    write_weights(os.path.join(args.out_dir, "weights.bin"), cfg, params)
+    with open(os.path.join(args.out_dir, "model_meta.txt"), "w") as f:
+        for k, v in [("vocab", cfg.vocab), ("d_model", cfg.d_model),
+                     ("n_layers", cfg.n_layers), ("n_heads", cfg.n_heads),
+                     ("head_dim", cfg.head_dim), ("d_ffn", cfg.d_ffn),
+                     ("max_seq", cfg.max_seq), ("seed", args.seed),
+                     ("n_params", cfg.n_params)]:
+            f.write(f"{k} {v}\n")
+
+    # --- golden trace for the Rust integration test ---
+    prompt = byte_tokenize(GOLDEN_PROMPT)[: cfg.max_seq - N_GOLDEN_OUTPUT]
+    out = generate_greedy(cfg, params, prompt, N_GOLDEN_OUTPUT)
+    with open(os.path.join(args.out_dir, "golden_trace.txt"), "w") as f:
+        f.write("prompt " + " ".join(map(str, prompt)) + "\n")
+        f.write("output " + " ".join(map(str, out)) + "\n")
+    print(f"golden trace: {len(prompt)} prompt -> {len(out)} output tokens")
+    print(f"model: {cfg.n_params/1e6:.2f}M params")
+
+
+if __name__ == "__main__":
+    main()

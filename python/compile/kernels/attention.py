@@ -1,0 +1,138 @@
+"""L1 Pallas attention kernels (prefill flash-attention + single-token decode).
+
+TPU-idiomatic structure, CPU-interpretable execution:
+
+* Tiling is expressed with ``BlockSpec`` — the HBM→VMEM schedule a CUDA
+  flash-attention would express with threadblocks + shared memory. Each
+  grid step sees one (head, q-block) tile in "VMEM" and streams K/V
+  blocks with an online-softmax accumulator.
+* All kernels are lowered with ``interpret=True``: the CPU PJRT plugin
+  cannot execute Mosaic custom-calls, and interpret mode lowers to plain
+  HLO ops that the Rust runtime (xla crate, PJRT CPU) can run. Real-TPU
+  perf is therefore *estimated* from the block geometry (see DESIGN.md
+  §Hardware-Adaptation), not measured.
+* Numerics: logits/softmax/accumulation in float32 regardless of input
+  dtype (bfloat16 inputs are upcast per-tile, as the MXU would).
+
+Correctness oracle: kernels.ref.attention_ref / decode_attention_ref.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Finite stand-in for -inf: keeps the online-softmax update NaN-free on
+# fully-masked tiles (exp(NEG_BIG - NEG_BIG) would be exp(0) only if a
+# row's running max never left NEG_BIG, which cannot happen for causal
+# attention because column 0 is always visible to every row).
+NEG_BIG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, seq,
+                  scale, causal):
+    """One (head, q-block) grid step of causal flash attention."""
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale          # [block_q, d]
+    d = q.shape[-1]
+
+    m = jnp.full((block_q,), NEG_BIG, jnp.float32)      # running row max
+    l = jnp.zeros((block_q,), jnp.float32)              # running denom
+    acc = jnp.zeros((block_q, d), jnp.float32)          # running numerator
+
+    rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+
+    num_kblocks = seq // block_k
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = k_ref[pl.dslice(j * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.dslice(j * block_k, block_k), :].astype(jnp.float32)
+        logits = q @ k.T                                # [block_q, block_k]
+        if causal:
+            cols = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (1, block_k), 1)
+            logits = jnp.where(rows >= cols, logits, NEG_BIG)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        alpha = jnp.exp(m - m_new)                      # rescale old state
+        p = jnp.exp(logits - m_new[:, None])
+        # Masked entries: exp(NEG_BIG - m_new) underflows to exactly 0.
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    # NOTE(tpu-perf): a production Mosaic kernel would bound this loop at
+    # the causal frontier (j <= qi); interpret mode keeps the full range
+    # for structural simplicity — masked tiles contribute exact zeros.
+    m, l, acc = jax.lax.fori_loop(0, num_kblocks, body, (m, l, acc))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, block_q=32, block_k=32,
+                    interpret=True):
+    """Causal multi-head flash attention.
+
+    q, k, v: [H, S, D] with S divisible by both block sizes.
+    Returns [H, S, D] in q.dtype.
+    """
+    h, s, d = q.shape
+    if s % block_q or s % block_k:
+        raise ValueError(f"seq {s} not divisible by blocks ({block_q},{block_k})")
+    scale = 1.0 / math.sqrt(d)
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, seq=s, scale=scale,
+        causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(h, s // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda hh, i: (hh, i, 0)),
+            pl.BlockSpec((None, s, d), lambda hh, i: (hh, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda hh, i: (hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda hh, i: (hh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, s_max, scale):
+    """One head of single-query decode attention over the KV cache."""
+    cur_len = len_ref[0]
+    q = q_ref[...].astype(jnp.float32) * scale          # [d]
+    k = k_ref[...].astype(jnp.float32)                  # [s_max, d]
+    v = v_ref[...].astype(jnp.float32)                  # [s_max, d]
+    logits = k @ q                                      # [s_max]
+    valid = jax.lax.iota(jnp.int32, s_max) < cur_len
+    logits = jnp.where(valid, logits, NEG_BIG)
+    m = jnp.max(logits)
+    p = jnp.exp(logits - m)
+    out = (p @ v) / jnp.sum(p)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cur_len, *, interpret=True):
+    """Single-token decode attention.
+
+    q: [H, D]; k_cache, v_cache: [H, S_max, D]; cur_len: scalar int32
+    (number of valid cache rows). Returns [H, D].
+    """
+    h, s_max, d = k_cache.shape
+    scale = 1.0 / math.sqrt(d)
+    cur_len_arr = jnp.reshape(cur_len, (1,)).astype(jnp.int32)
+    kernel = functools.partial(_decode_kernel, s_max=s_max, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda hh: (0,)),
+            pl.BlockSpec((None, d), lambda hh: (hh, 0)),
+            pl.BlockSpec((None, s_max, d), lambda hh: (hh, 0, 0)),
+            pl.BlockSpec((None, s_max, d), lambda hh: (hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, d), lambda hh: (hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, d), q.dtype),
+        interpret=interpret,
+    )(cur_len_arr, q, k_cache, v_cache)

@@ -1,0 +1,71 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this
+package must match its oracle to numerical tolerance (see
+python/tests/test_kernel.py, which sweeps shapes and dtypes with
+hypothesis). Keep these implementations maximally simple — no tiling,
+no tricks — so that a mismatch always indicts the kernel, not the ref.
+"""
+
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-5):
+    """RMSNorm: x * w / sqrt(mean(x^2) + eps), normalized over last axis."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * (1.0 / jnp.sqrt(var + eps)) * w.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale=None):
+    """Multi-head attention oracle.
+
+    q, k, v: [H, S, D].  Returns [H, S, D].
+    Causal mask applied if `causal`; softmax in float32.
+    """
+    h, s, d = q.shape
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    logits = jnp.einsum(
+        "hqd,hkd->hqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, :, :], logits, -jnp.inf)
+    p = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, cur_len):
+    """Single-token decode attention oracle.
+
+    q: [H, D] query for the current position.
+    k_cache, v_cache: [H, S_max, D]; only positions < cur_len are valid.
+    cur_len: scalar int (number of valid cache entries, including the
+    current token's KV which the caller has already written).
+    Returns [H, D].
+    """
+    h, s_max, d = k_cache.shape
+    scale = 1.0 / (d ** 0.5)
+    logits = jnp.einsum(
+        "hd,hsd->hs", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    valid = jnp.arange(s_max) < cur_len
+    logits = jnp.where(valid[None, :], logits, -jnp.inf)
+    p = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("hs,hsd->hd", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def swiglu_ref(x, w_gate, w_up, w_down):
+    """SwiGLU MLP oracle: down( silu(x@gate) * (x@up) )."""
+    x32 = x.astype(jnp.float32)
+    g = x32 @ w_gate.astype(jnp.float32)
+    u = x32 @ w_up.astype(jnp.float32)
+    act = g * (1.0 / (1.0 + jnp.exp(-g)))  # silu
+    out = (act * u) @ w_down.astype(jnp.float32)
+    return out.astype(x.dtype)

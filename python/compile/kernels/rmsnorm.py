@@ -1,0 +1,44 @@
+"""L1 Pallas fused RMSNorm kernel.
+
+Row-parallel RMSNorm over the last axis: each grid step normalizes one
+block of rows entirely in "VMEM" (one HBM read + one HBM write per
+element — the memory-bound optimum). float32 statistics regardless of
+input dtype. Oracle: kernels.ref.rmsnorm_ref.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)                  # [block_rows, d]
+    w = w_ref[...].astype(jnp.float32)                  # [d]
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps) * w).astype(o_ref.dtype)
+
+
+def rmsnorm(x, w, *, eps=1e-5, block_rows=32, interpret=True):
+    """Fused RMSNorm. x: [N, D] (or [D]); w: [D]. Returns x.dtype."""
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None, :]
+    n, d = x.shape
+    block_rows = min(block_rows, n)
+    if n % block_rows:
+        raise ValueError(f"rows {n} not divisible by block_rows {block_rows}")
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=interpret,
+    )(x, w)
+    return out[0] if squeeze else out

@@ -1,0 +1,218 @@
+"""L2: tiny Llama-2-style transformer (JAX), calling the L1 Pallas kernels.
+
+This is the *served* model of the reproduction: the paper evaluates
+Llama-2-7B with an analytic roofline latency model (Eqs 7-8, implemented
+in rust/src/llm/); the serving stack itself runs this ~6M-parameter
+architectural twin end-to-end (RMSNorm + RoPE + causal MHA + SwiGLU),
+AOT-lowered to HLO text and executed from the Rust coordinator via PJRT.
+
+Two entry points, both fixed-shape for AOT export:
+
+* ``prefill(flat_params, tokens[S_max])`` → (logits[S_max, V],
+  k_cache[L, H, S_max, Dh], v_cache[...]) — processes the (padded)
+  prompt; causality guarantees positions < n_input are unaffected by
+  padding, and decode masks cache rows >= cur_len.
+* ``decode(flat_params, token[1], pos[1], k_cache, v_cache)`` →
+  (logits[V], k_cache', v_cache') — one autoregressive step; writes the
+  new KV at ``pos`` and attends over ``pos+1`` rows.
+
+Weights are runtime inputs (NOT baked into the HLO) so the artifacts
+stay small; aot.py exports them to ``artifacts/weights.bin`` in the
+order given by ``param_order()`` and the Rust runtime feeds them back as
+PJRT literals in that same order.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import flash_attention, decode_attention
+from .kernels.rmsnorm import rmsnorm
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyperparameters of the tiny Llama."""
+    vocab: int = 512          # byte-level tokens + specials (see tokenizer)
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    head_dim: int = 32        # n_heads * head_dim == d_model
+    d_ffn: int = 704          # SwiGLU hidden (~8/3 * d_model, mult of 32)
+    max_seq: int = 64
+    rope_theta: float = 10000.0
+
+    @property
+    def n_params(self) -> int:
+        c = self
+        per_layer = 4 * c.d_model * c.d_model + 3 * c.d_model * c.d_ffn \
+            + 2 * c.d_model
+        return (c.vocab * c.d_model * 2 + c.n_layers * per_layer + c.d_model)
+
+
+def param_order(cfg: ModelConfig):
+    """Canonical (name, shape) list — defines weights.bin and HLO arg order."""
+    c = cfg
+    L, D, F, H, Dh, V = (c.n_layers, c.d_model, c.d_ffn, c.n_heads,
+                         c.head_dim, c.vocab)
+    return [
+        ("embed", (V, D)),
+        ("wq", (L, D, H * Dh)),
+        ("wk", (L, D, H * Dh)),
+        ("wv", (L, D, H * Dh)),
+        ("wo", (L, H * Dh, D)),
+        ("w_gate", (L, D, F)),
+        ("w_up", (L, D, F)),
+        ("w_down", (L, F, D)),
+        ("norm_attn", (L, D)),
+        ("norm_mlp", (L, D)),
+        ("norm_f", (D,)),
+        ("unembed", (D, V)),
+    ]
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Deterministic scaled-normal init, returned as a name→array dict."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for i, (name, shape) in enumerate(param_order(cfg)):
+        k = jax.random.fold_in(key, i)
+        if name.startswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            params[name] = (jax.random.normal(k, shape, jnp.float32)
+                            * (1.0 / jnp.sqrt(fan_in)))
+    return params
+
+
+def flatten_params(cfg: ModelConfig, params):
+    return [params[name] for name, _ in param_order(cfg)]
+
+
+def unflatten_params(cfg: ModelConfig, flat):
+    return {name: arr for (name, _), arr in zip(param_order(cfg), flat)}
+
+
+def _rope_tables(cfg: ModelConfig):
+    """cos/sin tables [S_max, Dh/2] (constants folded into the HLO)."""
+    half = cfg.head_dim // 2
+    inv_freq = 1.0 / (cfg.rope_theta
+                      ** (jnp.arange(half, dtype=jnp.float32) / half))
+    t = jnp.arange(cfg.max_seq, dtype=jnp.float32)
+    ang = jnp.outer(t, inv_freq)                         # [S, half]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _apply_rope(x, cos, sin):
+    """Rotate pairs (x0, x1) of the head dim. x: [..., S, Dh] with
+    cos/sin broadcastable [S, Dh/2]."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attn_prefill(cfg, x, wq, wk, wv, wo, cos, sin):
+    """Causal MHA over the full (padded) sequence via the flash kernel."""
+    s, d = x.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    q = (x @ wq).reshape(s, H, Dh).transpose(1, 0, 2)    # [H, S, Dh]
+    k = (x @ wk).reshape(s, H, Dh).transpose(1, 0, 2)
+    v = (x @ wv).reshape(s, H, Dh).transpose(1, 0, 2)
+    q = _apply_rope(q, cos[None], sin[None])
+    k = _apply_rope(k, cos[None], sin[None])
+    o = flash_attention(q, k, v, causal=True,
+                        block_q=min(32, s), block_k=min(32, s))
+    o = o.transpose(1, 0, 2).reshape(s, H * Dh) @ wo
+    return o, k, v
+
+
+def _mlp(x, w_gate, w_up, w_down):
+    g = x @ w_gate
+    return (jax.nn.silu(g) * (x @ w_up)) @ w_down
+
+
+def prefill(cfg: ModelConfig, flat_params, tokens):
+    """Process a padded prompt. tokens: int32[S_max].
+
+    Returns (logits[S_max, V], k_cache[L,H,S_max,Dh], v_cache[...]).
+    """
+    p = unflatten_params(cfg, flat_params)
+    cos, sin = _rope_tables(cfg)
+    x = p["embed"][tokens]                               # [S, D]
+
+    def layer(x, ws):
+        (wq, wk, wv, wo, wg, wu, wd, na, nm) = ws
+        h, k, v = _attn_prefill(cfg, rmsnorm(x, na), wq, wk, wv, wo, cos, sin)
+        x = x + h
+        x = x + _mlp(rmsnorm(x, nm), wg, wu, wd)
+        return x, (k, v)
+
+    xs = (p["wq"], p["wk"], p["wv"], p["wo"], p["w_gate"], p["w_up"],
+          p["w_down"], p["norm_attn"], p["norm_mlp"])
+    x, (k_cache, v_cache) = jax.lax.scan(layer, x, xs)
+    logits = rmsnorm(x, p["norm_f"]) @ p["unembed"]
+    return logits, k_cache, v_cache
+
+
+def decode(cfg: ModelConfig, flat_params, token, pos, k_cache, v_cache):
+    """One autoregressive step.
+
+    token: int32[1]; pos: int32[1] (the position this token occupies);
+    caches: [L, H, S_max, Dh]. Returns (logits[V], k_cache', v_cache').
+    """
+    p = unflatten_params(cfg, flat_params)
+    cos, sin = _rope_tables(cfg)
+    H, Dh = cfg.n_heads, cfg.head_dim
+    pos_s = pos[0]
+    cos_p = jax.lax.dynamic_slice_in_dim(cos, pos_s, 1)  # [1, Dh/2]
+    sin_p = jax.lax.dynamic_slice_in_dim(sin, pos_s, 1)
+    x = p["embed"][token[0]]                             # [D]
+
+    def layer(x, ws):
+        (wq, wk, wv, wo, wg, wu, wd, na, nm, kc, vc) = ws
+        h_in = rmsnorm(x, na)
+        q = (h_in @ wq).reshape(H, 1, Dh)                # [H, 1, Dh]
+        k = (h_in @ wk).reshape(H, 1, Dh)
+        v = (h_in @ wv).reshape(H, 1, Dh)
+        q = _apply_rope(q, cos_p[None], sin_p[None])[:, 0, :]   # [H, Dh]
+        k = _apply_rope(k, cos_p[None], sin_p[None])
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, pos_s, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, pos_s, 0))
+        o = decode_attention(q, kc, vc, pos_s + 1)       # [H, Dh]
+        x = x + o.reshape(H * Dh) @ wo
+        x = x + _mlp(rmsnorm(x, nm), wg, wu, wd)
+        return x, (kc, vc)
+
+    xs = (p["wq"], p["wk"], p["wv"], p["wo"], p["w_gate"], p["w_up"],
+          p["w_down"], p["norm_attn"], p["norm_mlp"], k_cache, v_cache)
+    x, (k_new, v_new) = jax.lax.scan(layer, x, xs)
+    logits = rmsnorm(x, p["norm_f"]) @ p["unembed"]
+    return logits, k_new, v_new
+
+
+def generate_greedy(cfg: ModelConfig, params, prompt_tokens, n_output):
+    """Reference autoregressive generation (prefill + greedy decode loop).
+
+    Used by the build-time tests and to emit the golden trace the Rust
+    integration test replays. Returns the list of generated token ids.
+    """
+    flat = flatten_params(cfg, params)
+    s = cfg.max_seq
+    toks = jnp.zeros((s,), jnp.int32).at[: len(prompt_tokens)].set(
+        jnp.array(prompt_tokens, jnp.int32))
+    logits, kc, vc = jax.jit(
+        lambda f, t: prefill(cfg, f, t))(flat, toks)
+    n_in = len(prompt_tokens)
+    out = []
+    tok = int(jnp.argmax(logits[n_in - 1]))
+    dec = jax.jit(lambda f, t, p, k, v: decode(cfg, f, t, p, k, v))
+    for i in range(n_output):
+        out.append(tok)
+        if n_in + i >= s:
+            break
+        lg, kc, vc = dec(flat, jnp.array([tok], jnp.int32),
+                         jnp.array([n_in + i], jnp.int32), kc, vc)
+        tok = int(jnp.argmax(lg))
+    return out

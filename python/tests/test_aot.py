@@ -1,0 +1,82 @@
+"""AOT export tests: HLO text validity, weights.bin format, golden trace."""
+
+import io
+import os
+import struct
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.model import ModelConfig, init_params, param_order
+
+CFG = ModelConfig(vocab=64, d_model=64, n_layers=2, n_heads=4, head_dim=16,
+                  d_ffn=96, max_seq=32)
+
+
+def test_to_hlo_text_roundtrip_simple():
+    """A trivial jitted fn must lower to parseable HLO text with ENTRY."""
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "f32[4]" in text
+
+
+def test_write_weights_format(tmp_path):
+    params = init_params(CFG, seed=0)
+    path = tmp_path / "w.bin"
+    aot.write_weights(str(path), CFG, params)
+    data = path.read_bytes()
+    buf = io.BytesIO(data)
+    assert buf.read(4) == b"ICCW"
+    version, n = struct.unpack("<II", buf.read(8))
+    assert version == 1
+    assert n == len(param_order(CFG))
+    for name, shape in param_order(CFG):
+        (nlen,) = struct.unpack("<I", buf.read(4))
+        assert buf.read(nlen).decode() == name
+        (rank,) = struct.unpack("<I", buf.read(4))
+        dims = struct.unpack(f"<{rank}I", buf.read(4 * rank))
+        assert dims == shape
+        nel = int(np.prod(shape))
+        arr = np.frombuffer(buf.read(4 * nel), dtype="<f4").reshape(shape)
+        np.testing.assert_allclose(arr, np.asarray(params[name]), rtol=0,
+                                   atol=0)
+    assert buf.read() == b""  # no trailing bytes
+
+
+def test_byte_tokenize():
+    toks = aot.byte_tokenize("ab")
+    assert toks == [256, 97, 98]
+    assert all(0 <= t < 512 for t in toks)
+
+
+def test_byte_tokenize_utf8_multibyte():
+    toks = aot.byte_tokenize("é")  # 2-byte utf-8
+    assert len(toks) == 3
+    assert toks[0] == 256
+
+
+@pytest.mark.slow
+def test_full_export_artifacts_exist():
+    """make artifacts must have produced every artifact (run after make)."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    if not os.path.isdir(art):
+        pytest.skip("artifacts/ not built yet (run `make artifacts`)")
+    for f in ["prefill.hlo.txt", "decode.hlo.txt", "weights.bin",
+              "model_meta.txt", "golden_trace.txt"]:
+        path = os.path.join(art, f)
+        assert os.path.exists(path), f
+        assert os.path.getsize(path) > 0, f
+    with open(os.path.join(art, "prefill.hlo.txt")) as fh:
+        assert "ENTRY" in fh.read()
+    with open(os.path.join(art, "golden_trace.txt")) as fh:
+        lines = fh.read().strip().splitlines()
+    assert lines[0].startswith("prompt ") and lines[1].startswith("output ")
+    out_toks = [int(x) for x in lines[1].split()[1:]]
+    assert len(out_toks) == aot.N_GOLDEN_OUTPUT

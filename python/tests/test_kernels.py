@@ -1,0 +1,185 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the CORE correctness signal for the compute layer: hypothesis
+sweeps shapes/dtypes and asserts allclose against kernels/ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import decode_attention, flash_attention
+from compile.kernels.rmsnorm import rmsnorm
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------- flash
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.sampled_from([1, 2, 4, 8]),
+    s=st.sampled_from([32, 64, 128]),
+    d=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_attention_matches_ref(h, s, d, seed):
+    key = jax.random.PRNGKey(seed)
+    q, k, v = (_rand(jax.random.fold_in(key, i), (h, s, d), jnp.float32)
+               for i in range(3))
+    out = flash_attention(q, k, v, causal=True)
+    exp = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, exp, **TOL[jnp.float32])
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_flash_attention_bf16(seed):
+    key = jax.random.PRNGKey(seed)
+    q, k, v = (_rand(jax.random.fold_in(key, i), (4, 64, 32), jnp.bfloat16)
+               for i in range(3))
+    out = flash_attention(q, k, v)
+    exp = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(out.astype(np.float32),
+                               exp.astype(np.float32), **TOL[jnp.bfloat16])
+
+
+@pytest.mark.parametrize("block_q,block_k", [(16, 16), (16, 32), (32, 16),
+                                             (32, 64), (64, 32)])
+def test_flash_attention_block_shapes(block_q, block_k):
+    """Result must be invariant to the tiling — pure schedule change."""
+    key = jax.random.PRNGKey(7)
+    q, k, v = (_rand(jax.random.fold_in(key, i), (2, 64, 32), jnp.float32)
+               for i in range(3))
+    out = flash_attention(q, k, v, block_q=block_q, block_k=block_k)
+    exp = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(out, exp, **TOL[jnp.float32])
+
+
+def test_flash_attention_non_causal():
+    key = jax.random.PRNGKey(3)
+    q, k, v = (_rand(jax.random.fold_in(key, i), (2, 32, 16), jnp.float32)
+               for i in range(3))
+    out = flash_attention(q, k, v, causal=False)
+    exp = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(out, exp, **TOL[jnp.float32])
+
+
+def test_flash_attention_rejects_ragged_seq():
+    q = jnp.zeros((1, 48, 16))
+    with pytest.raises(ValueError):
+        flash_attention(q, q, q, block_q=32, block_k=32)
+
+
+def test_flash_attention_first_row_is_v0():
+    """Causal row 0 attends only to position 0 → output == v[:, 0]."""
+    key = jax.random.PRNGKey(11)
+    q, k, v = (_rand(jax.random.fold_in(key, i), (3, 32, 16), jnp.float32)
+               for i in range(3))
+    out = flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(out[:, 0, :], v[:, 0, :], rtol=1e-6, atol=1e-6)
+
+
+# --------------------------------------------------------------- decode
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.sampled_from([1, 4, 8]),
+    s_max=st.sampled_from([16, 64, 128]),
+    d=st.sampled_from([16, 32]),
+    frac=st.floats(0.01, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_attention_matches_ref(h, s_max, d, frac, seed):
+    key = jax.random.PRNGKey(seed)
+    cur_len = max(1, int(frac * s_max))
+    q = _rand(key, (h, d), jnp.float32)
+    kc = _rand(jax.random.fold_in(key, 1), (h, s_max, d), jnp.float32)
+    vc = _rand(jax.random.fold_in(key, 2), (h, s_max, d), jnp.float32)
+    out = decode_attention(q, kc, vc, cur_len)
+    exp = ref.decode_attention_ref(q, kc, vc, cur_len)
+    np.testing.assert_allclose(out, exp, **TOL[jnp.float32])
+
+
+def test_decode_attention_ignores_stale_cache():
+    """Rows >= cur_len must not affect the output."""
+    key = jax.random.PRNGKey(5)
+    h, s_max, d, cur = 2, 32, 16, 9
+    q = _rand(key, (h, d), jnp.float32)
+    kc = _rand(jax.random.fold_in(key, 1), (h, s_max, d), jnp.float32)
+    vc = _rand(jax.random.fold_in(key, 2), (h, s_max, d), jnp.float32)
+    out1 = decode_attention(q, kc, vc, cur)
+    kc2 = kc.at[:, cur:, :].set(1e6)
+    vc2 = vc.at[:, cur:, :].set(-1e6)
+    out2 = decode_attention(q, kc2, vc2, cur)
+    np.testing.assert_allclose(out1, out2, rtol=1e-6, atol=1e-6)
+
+
+def test_decode_attention_len1_returns_v0():
+    key = jax.random.PRNGKey(6)
+    q = _rand(key, (4, 32), jnp.float32)
+    kc = _rand(jax.random.fold_in(key, 1), (4, 64, 32), jnp.float32)
+    vc = _rand(jax.random.fold_in(key, 2), (4, 64, 32), jnp.float32)
+    out = decode_attention(q, kc, vc, 1)
+    np.testing.assert_allclose(out, vc[:, 0, :], rtol=1e-6, atol=1e-6)
+
+
+def test_decode_matches_last_row_of_flash():
+    """Decode with a full cache == last causal row of prefill attention."""
+    key = jax.random.PRNGKey(8)
+    h, s, d = 4, 32, 16
+    q, k, v = (_rand(jax.random.fold_in(key, i), (h, s, d), jnp.float32)
+               for i in range(3))
+    full = flash_attention(q, k, v, causal=True)
+    last = decode_attention(q[:, -1, :], k, v, s)
+    np.testing.assert_allclose(last, full[:, -1, :], rtol=2e-5, atol=2e-5)
+
+
+# -------------------------------------------------------------- rmsnorm
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([1, 4, 32, 64]),
+    d=st.sampled_from([16, 128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rmsnorm_matches_ref(n, d, seed):
+    key = jax.random.PRNGKey(seed)
+    x = _rand(key, (n, d), jnp.float32)
+    w = _rand(jax.random.fold_in(key, 1), (d,), jnp.float32)
+    np.testing.assert_allclose(rmsnorm(x, w), ref.rmsnorm_ref(x, w),
+                               **TOL[jnp.float32])
+
+
+def test_rmsnorm_1d_input():
+    key = jax.random.PRNGKey(2)
+    x = _rand(key, (128,), jnp.float32)
+    w = jnp.ones((128,))
+    out = rmsnorm(x, w)
+    assert out.shape == (128,)
+    np.testing.assert_allclose(out, ref.rmsnorm_ref(x, w), **TOL[jnp.float32])
+
+
+def test_rmsnorm_unit_output_scale():
+    """With w=1, the RMS of the output is ~1."""
+    x = jax.random.normal(jax.random.PRNGKey(4), (32, 256)) * 7.3
+    out = rmsnorm(x, jnp.ones((256,)))
+    rms = np.sqrt(np.mean(np.asarray(out) ** 2, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-2)
+
+
+def test_rmsnorm_scale_invariance():
+    """RMSNorm(c*x) == RMSNorm(x) for c > 0 (up to eps)."""
+    x = jax.random.normal(jax.random.PRNGKey(9), (8, 128))
+    w = jax.random.normal(jax.random.PRNGKey(10), (128,))
+    a = rmsnorm(x, w)
+    b = rmsnorm(100.0 * x, w)
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)

@@ -1,0 +1,128 @@
+"""L2 model tests: shapes, prefill/decode consistency, determinism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (ModelConfig, decode, flatten_params,
+                           generate_greedy, init_params, param_order,
+                           prefill, unflatten_params)
+
+CFG = ModelConfig(vocab=64, d_model=64, n_layers=2, n_heads=4, head_dim=16,
+                  d_ffn=96, max_seq=32)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, seed=0)
+
+
+@pytest.fixture(scope="module")
+def flat(params):
+    return flatten_params(CFG, params)
+
+
+def test_param_order_shapes(params):
+    for name, shape in param_order(CFG):
+        assert params[name].shape == shape, name
+
+
+def test_n_params_counts_everything(params):
+    total = sum(int(np.prod(p.shape)) for p in params.values())
+    assert total == CFG.n_params
+
+
+def test_unflatten_roundtrip(params, flat):
+    back = unflatten_params(CFG, flat)
+    assert set(back) == set(params)
+    for k in params:
+        np.testing.assert_array_equal(back[k], params[k])
+
+
+def test_prefill_shapes(flat):
+    toks = jnp.zeros((CFG.max_seq,), jnp.int32)
+    logits, kc, vc = prefill(CFG, flat, toks)
+    assert logits.shape == (CFG.max_seq, CFG.vocab)
+    assert kc.shape == (CFG.n_layers, CFG.n_heads, CFG.max_seq, CFG.head_dim)
+    assert vc.shape == kc.shape
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_decode_shapes(flat):
+    toks = jnp.zeros((CFG.max_seq,), jnp.int32)
+    _, kc, vc = prefill(CFG, flat, toks)
+    logits, kc2, vc2 = decode(CFG, flat, jnp.array([3], jnp.int32),
+                              jnp.array([5], jnp.int32), kc, vc)
+    assert logits.shape == (CFG.vocab,)
+    assert kc2.shape == kc.shape and vc2.shape == vc.shape
+
+
+def test_prefill_causality_padding_invariance(flat):
+    """Padding tokens beyond n_input must not change logits before it."""
+    n = 10
+    body = jnp.arange(n, dtype=jnp.int32) % CFG.vocab
+    t1 = jnp.zeros((CFG.max_seq,), jnp.int32).at[:n].set(body)
+    t2 = t1.at[n:].set(7)  # different padding
+    l1, _, _ = prefill(CFG, flat, t1)
+    l2, _, _ = prefill(CFG, flat, t2)
+    np.testing.assert_allclose(l1[:n], l2[:n], rtol=1e-5, atol=1e-5)
+
+
+def test_decode_reproduces_prefill_logits(flat):
+    """Feeding tokens one-by-one through decode must reproduce prefill's
+    per-position logits (the KV-cache path equals the parallel path)."""
+    n = 8
+    toks = (jnp.arange(n, dtype=jnp.int32) * 3 + 1) % CFG.vocab
+    padded = jnp.zeros((CFG.max_seq,), jnp.int32).at[:n].set(toks)
+    ref_logits, _, _ = prefill(CFG, flat, padded)
+
+    kc = jnp.zeros((CFG.n_layers, CFG.n_heads, CFG.max_seq, CFG.head_dim))
+    vc = jnp.zeros_like(kc)
+    for i in range(n):
+        lg, kc, vc = decode(CFG, flat, toks[i:i + 1],
+                            jnp.array([i], jnp.int32), kc, vc)
+        np.testing.assert_allclose(lg, ref_logits[i], rtol=5e-4, atol=5e-4)
+
+
+def test_decode_updates_only_its_position(flat):
+    kc = jnp.full((CFG.n_layers, CFG.n_heads, CFG.max_seq, CFG.head_dim), 9.0)
+    vc = jnp.full_like(kc, -9.0)
+    pos = 4
+    _, kc2, vc2 = decode(CFG, flat, jnp.array([1], jnp.int32),
+                         jnp.array([pos], jnp.int32), kc, vc)
+    mask = np.ones(CFG.max_seq, bool)
+    mask[pos] = False
+    np.testing.assert_array_equal(np.asarray(kc2)[:, :, mask, :],
+                                  np.asarray(kc)[:, :, mask, :])
+    assert not np.array_equal(np.asarray(kc2)[:, :, pos, :],
+                              np.asarray(kc)[:, :, pos, :])
+
+
+def test_generate_greedy_deterministic(params):
+    out1 = generate_greedy(CFG, params, [1, 2, 3], 6)
+    out2 = generate_greedy(CFG, params, [1, 2, 3], 6)
+    assert out1 == out2
+    assert len(out1) == 6
+    assert all(0 <= t < CFG.vocab for t in out1)
+
+
+def test_init_params_seed_determinism():
+    a = init_params(CFG, seed=1)
+    b = init_params(CFG, seed=1)
+    c = init_params(CFG, seed=2)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    assert any(not np.array_equal(a[k], c[k]) for k in a
+               if not k.startswith("norm"))
+
+
+def test_rope_position_dependence(flat):
+    """Causal attention over the *set* {5,6} is order-invariant without
+    positional encoding; RoPE must break that symmetry, so the logits at
+    position 1 of [5,6,...] and [6,5,...] must differ."""
+    ta = jnp.zeros((CFG.max_seq,), jnp.int32).at[0].set(5).at[1].set(6)
+    tb = jnp.zeros((CFG.max_seq,), jnp.int32).at[0].set(6).at[1].set(5)
+    la, _, _ = prefill(CFG, flat, ta)
+    lb, _, _ = prefill(CFG, flat, tb)
+    assert not np.allclose(la[1], lb[1], rtol=1e-3)

@@ -1,0 +1,175 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! * wireline-latency sweep (where does "move compute closer" stop
+//!   paying?) — extends Fig 6's 5 vs 20 ms comparison,
+//! * disjoint budget-split sweep (is the paper's 24/56 split a good
+//!   one?),
+//! * SR-period sensitivity (the MAC grant-cycle modeling knob),
+//! * scheduler policy (PF vs RR),
+//! * priority-scheme decomposition (packet prio vs deadline queue).
+//!
+//! Run: `cargo bench --bench ablations`
+
+use icc6g::config::{Deployment, Management, SchemeConfig, SimConfig};
+use icc6g::coordinator::{capacity_from_curve, sweep_arrival_rates};
+use icc6g::mac::SchedulingPolicy;
+use icc6g::queueing::analytic::{disjoint_satisfaction, SystemParams};
+use icc6g::queueing::{service_capacity, Scheme};
+use icc6g::sim::Sls;
+use icc6g::util::bench::{cell, Table};
+
+fn base() -> SimConfig {
+    let mut c = SimConfig::table1();
+    c.horizon = 12.0;
+    c.warmup = 1.5;
+    c
+}
+
+/// Capacity of an arbitrary scheme config over a coarse rate grid.
+fn capacity(schm: SchemeConfig, mutate: impl Fn(&mut SimConfig)) -> f64 {
+    let rates: Vec<f64> = (2..=11).map(|i| 10.0 * i as f64).collect();
+    let mut b = base();
+    mutate(&mut b);
+    let pts = sweep_arrival_rates(&b, schm, &rates, 2);
+    capacity_from_curve(&pts, 0.95)
+}
+
+fn ablate_wireline() {
+    let mut t = Table::new(
+        "Ablation A — wireline latency sweep (joint mgmt + priority)",
+        &["t_wireline_ms", "capacity (prompts/s)"],
+    );
+    for (dep, ms) in [
+        (Deployment::Ran, 5.0),
+        (Deployment::Mec, 20.0),
+        (Deployment::Cloud, 50.0),
+    ] {
+        let schm = SchemeConfig {
+            name: "joint+prio",
+            deployment: dep,
+            management: Management::Joint,
+            priority_scheme: true,
+        };
+        t.row(&[cell(ms, 0), cell(capacity(schm, |_| {}), 1)]);
+    }
+    t.print();
+    t.write_csv("ablation_wireline.csv").expect("csv");
+}
+
+fn ablate_budget_split() {
+    // Analytic: the 24/56 split vs alternatives, at the paper's rates.
+    let p = SystemParams::paper();
+    let mut t = Table::new(
+        "Ablation B — disjoint budget split (analytic capacity, RAN 5ms)",
+        &["b_comm_ms", "b_comp_ms", "capacity (jobs/s)"],
+    );
+    let mut best = (0.0, 0.0f64);
+    for comm_ms in [8.0, 16.0, 24.0, 32.0, 40.0] {
+        let bc = comm_ms / 1e3;
+        let cap = service_capacity(
+            |l| disjoint_satisfaction(&p, l, 0.005, bc, p.b_total - bc),
+            0.95,
+            p.stability_limit() - 1e-6,
+            1e-6,
+        )
+        .lambda_star;
+        if cap > best.1 {
+            best = (comm_ms, cap);
+        }
+        t.row(&[cell(comm_ms, 0), cell(80.0 - comm_ms, 0), cell(cap, 2)]);
+    }
+    // joint as the upper bound
+    let joint = service_capacity(
+        |l| icc6g::queueing::analytic::scheme_satisfaction(&p, &Scheme::icc_joint_ran(), l),
+        0.95,
+        p.stability_limit() - 1e-6,
+        1e-6,
+    )
+    .lambda_star;
+    t.row(&["joint".into(), "joint".into(), cell(joint, 2)]);
+    t.print();
+    t.write_csv("ablation_budget_split.csv").expect("csv");
+    println!(
+        "best static split ({} ms comm) still {:.0}% below joint",
+        best.0,
+        (1.0 - best.1 / joint) * 100.0
+    );
+}
+
+fn ablate_sr_period() {
+    // The shared-PUCCH scaling term dominates the floor period, so the
+    // meaningful knob is slots-per-UE. Swept for the MEC baseline,
+    // whose 4 ms effective comm budget makes it the sensitive scheme.
+    let mut t = Table::new(
+        "Ablation C — SR dimensioning sensitivity (capacity, MEC vs ICC)",
+        &["sr_slots_per_ue", "MEC capacity", "ICC capacity"],
+    );
+    for per_ue in [0.0, 0.125, 0.25, 0.5, 1.0] {
+        let mec = capacity(SchemeConfig::mec(), |c| {
+            c.mac.sr_slots_per_ue = per_ue;
+        });
+        let icc = capacity(SchemeConfig::icc(), |c| {
+            c.mac.sr_slots_per_ue = per_ue;
+        });
+        t.row(&[cell(per_ue, 3), cell(mec, 1), cell(icc, 1)]);
+    }
+    t.print();
+    t.write_csv("ablation_sr_period.csv").expect("csv");
+    println!("(ICC is insensitive — its dedicated job-SR bypasses the shared cycle)");
+}
+
+fn ablate_scheduler_policy() {
+    let mut t = Table::new(
+        "Ablation D — MAC scheduler policy (ICC)",
+        &["policy", "capacity (prompts/s)"],
+    );
+    for (name, pol) in [
+        ("proportional-fair", SchedulingPolicy::ProportionalFair),
+        ("round-robin", SchedulingPolicy::RoundRobin),
+    ] {
+        let cap = capacity(SchemeConfig::icc(), |c| {
+            c.mac.policy = pol;
+        });
+        t.row(&[name.to_string(), cell(cap, 1)]);
+    }
+    t.print();
+    t.write_csv("ablation_scheduler.csv").expect("csv");
+}
+
+fn ablate_priority_components() {
+    let mut t = Table::new(
+        "Ablation E — priority-scheme decomposition (90 prompts/s, joint RAN)",
+        &["packet_prio", "deadline_queue", "satisfaction", "dropped"],
+    );
+    for (pkt, queue) in [(false, false), (true, false), (false, true), (true, true)] {
+        let mut cfg = base();
+        cfg.n_ues = 90;
+        cfg.scheme = SchemeConfig {
+            name: "custom",
+            deployment: Deployment::Ran,
+            management: Management::Joint,
+            priority_scheme: queue,
+        };
+        cfg.mac.job_priority = pkt;
+        cfg.seed = 21;
+        let r = Sls::new(cfg).run().report;
+        t.row(&[
+            pkt.to_string(),
+            queue.to_string(),
+            cell(r.satisfaction_rate(), 4),
+            r.n_dropped.to_string(),
+        ]);
+    }
+    t.print();
+    t.write_csv("ablation_components.csv").expect("csv");
+}
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    ablate_wireline();
+    ablate_budget_split();
+    ablate_sr_period();
+    ablate_scheduler_policy();
+    ablate_priority_components();
+    println!("\nablation suite wall: {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,108 @@
+//! Bench target regenerating **Fig 4** (paper §III-B): job-satisfaction
+//! curves of the three latency-management schemes over the tandem
+//! M/M/1 model, the α = 95% service capacities, the +98% headline, and
+//! a Monte-Carlo cross-validation of the closed forms.
+//!
+//! Run: `cargo bench --bench fig4_theory`
+//! Output: console tables + CSVs under bench_out/.
+
+use icc6g::queueing::analytic::{scheme_satisfaction, SystemParams};
+use icc6g::queueing::tandem_mc::empirical_satisfaction;
+use icc6g::queueing::{service_capacity, Scheme};
+use icc6g::util::bench::{bench_fn, cell, fmt_ns, Table};
+
+fn main() {
+    let p = SystemParams::paper();
+    let schemes = Scheme::fig4_schemes();
+    let alpha = 0.95;
+
+    // --- the paper's curves (25 λ points, 3 schemes) -----------------
+    let mut curves = Table::new(
+        "Fig 4 — satisfaction vs λ (μ1=900, μ2=100, b_total=80ms)",
+        &["lambda", schemes[0].name, schemes[1].name, schemes[2].name],
+    );
+    let npts = 25;
+    for i in 0..npts {
+        let lambda = 2.0 + (p.stability_limit() - 4.0) * i as f64 / (npts - 1) as f64;
+        curves.row(&[
+            cell(lambda, 1),
+            cell(scheme_satisfaction(&p, &schemes[0], lambda), 4),
+            cell(scheme_satisfaction(&p, &schemes[1], lambda), 4),
+            cell(scheme_satisfaction(&p, &schemes[2], lambda), 4),
+        ]);
+    }
+    curves.print();
+    curves.write_csv("fig4_curves.csv").expect("csv");
+
+    // --- service capacities + headline -------------------------------
+    let caps: Vec<f64> = schemes
+        .iter()
+        .map(|s| {
+            service_capacity(
+                |l| scheme_satisfaction(&p, s, l),
+                alpha,
+                p.stability_limit() - 1e-6,
+                1e-6,
+            )
+            .lambda_star
+        })
+        .collect();
+    let mut cap_t = Table::new(
+        "Fig 4 — service capacity at α=0.95 (paper headline: +98%)",
+        &["scheme", "lambda*", "vs MEC"],
+    );
+    for (s, c) in schemes.iter().zip(&caps) {
+        cap_t.row(&[
+            s.name.to_string(),
+            cell(*c, 2),
+            format!("{:+.1}%", (c / caps[2] - 1.0) * 100.0),
+        ]);
+    }
+    cap_t.print();
+    cap_t.write_csv("fig4_capacity.csv").expect("csv");
+    println!(
+        "\nheadline: ICC joint-RAN vs 5G MEC = {:+.1}% (paper: +98%)",
+        (caps[0] / caps[2] - 1.0) * 100.0
+    );
+
+    // --- Monte-Carlo validation of the closed forms ------------------
+    let mut mc = Table::new(
+        "Fig 4 — analytic vs 60k-job Monte Carlo",
+        &["lambda", "scheme", "analytic", "simulated", "abs_err"],
+    );
+    let mut max_err: f64 = 0.0;
+    for &lambda in &[20.0, 40.0, 60.0, 80.0] {
+        for s in &schemes {
+            let ana = scheme_satisfaction(&p, s, lambda);
+            let emp = empirical_satisfaction(&p, s, lambda, 60_000, 42);
+            max_err = max_err.max((ana - emp).abs());
+            mc.row(&[
+                cell(lambda, 0),
+                s.name.to_string(),
+                cell(ana, 4),
+                cell(emp, 4),
+                cell((ana - emp).abs(), 4),
+            ]);
+        }
+    }
+    mc.print();
+    mc.write_csv("fig4_mc.csv").expect("csv");
+    assert!(max_err < 0.02, "closed forms diverge from MC: {max_err}");
+    println!("max |analytic − MC| = {max_err:.4} (< 0.02 required)");
+
+    // --- timing: how fast is the analytic layer? ---------------------
+    let r = bench_fn("scheme_satisfaction (1 eval)", 100, 10_000, 0.2, || {
+        scheme_satisfaction(&p, &schemes[0], 55.0)
+    });
+    println!("\n{}", r.report());
+    let r = bench_fn("service_capacity (full bisection)", 5, 200, 0.2, || {
+        service_capacity(
+            |l| scheme_satisfaction(&p, &schemes[0], l),
+            alpha,
+            p.stability_limit() - 1e-6,
+            1e-6,
+        )
+    });
+    println!("{}", r.report());
+    println!("\n(capacity solve = {} — interactive capacity planning is free)", fmt_ns(r.mean_ns));
+}

@@ -1,0 +1,75 @@
+//! Bench target regenerating **Fig 6** (paper §IV-C): SLS
+//! job-satisfaction + average latency bars vs prompt arrival rate for
+//! the three schemes, plus the α = 95% service capacities and the
+//! +60% headline.
+//!
+//! Run: `cargo bench --bench fig6_capacity`
+//! (≈ 1 min: 12 rates × 3 schemes × 3 seeds × 20 s simulated)
+
+use icc6g::config::{SchemeConfig, SimConfig};
+use icc6g::coordinator::{capacity_from_curve, sweep_arrival_rates};
+use icc6g::util::bench::{cell, Table};
+
+fn main() {
+    let mut base = SimConfig::table1();
+    base.horizon = 20.0;
+    base.warmup = 3.0;
+    let seeds = 4;
+    let alpha = 0.95;
+    // 5-prompt/s grid resolves the α-crossings; the paper's plot uses
+    // a similar resolution (10..120 prompts/s).
+    let rates: Vec<f64> = (2..=24).map(|i| 5.0 * i as f64).collect();
+    let schemes = SchemeConfig::fig6_schemes();
+
+    let t0 = std::time::Instant::now();
+    let mut curves = Table::new(
+        "Fig 6 — SLS satisfaction + latency bars vs prompt arrival rate",
+        &["rate", "scheme", "satisfaction", "avg_comm_ms", "avg_comp_ms"],
+    );
+    let mut caps = Vec::new();
+    let mut total_jobs = 0u64;
+    for scheme in schemes {
+        let pts = sweep_arrival_rates(&base, scheme, &rates, seeds);
+        for p in &pts {
+            curves.row(&[
+                cell(p.x, 0),
+                scheme.name.to_string(),
+                cell(p.satisfaction, 4),
+                cell(p.avg_comm_ms, 2),
+                cell(p.avg_comp_ms, 2),
+            ]);
+            total_jobs += (p.x * (base.horizon - base.warmup) * seeds as f64) as u64;
+        }
+        caps.push((scheme.name, capacity_from_curve(&pts, alpha)));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    curves.print();
+    curves.write_csv("fig6_curves.csv").expect("csv");
+
+    let mut cap_t = Table::new(
+        "Fig 6 — service capacity at α=0.95 (paper: ICC 80, MEC 50, +60%)",
+        &["scheme", "capacity (prompts/s)", "vs MEC"],
+    );
+    let mec = caps[2].1;
+    for (name, c) in &caps {
+        cap_t.row(&[
+            name.to_string(),
+            cell(*c, 1),
+            format!("{:+.1}%", (c / mec - 1.0) * 100.0),
+        ]);
+    }
+    cap_t.print();
+    cap_t.write_csv("fig6_capacity.csv").expect("csv");
+
+    let icc = caps[0].1;
+    println!(
+        "\nheadline: ICC {icc:.0} vs MEC {mec:.0} prompts/s = {:+.1}% (paper: +60%)",
+        (icc / mec - 1.0) * 100.0
+    );
+    println!(
+        "bench wall: {wall:.1}s for {} scheme-rate points (~{:.0} simulated jobs)",
+        rates.len() * 3,
+        total_jobs as f64
+    );
+    assert!(icc > mec, "ICC must beat MEC");
+}

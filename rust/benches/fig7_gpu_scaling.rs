@@ -1,0 +1,67 @@
+//! Bench target regenerating **Fig 7** (paper §IV-C): SLS
+//! job-satisfaction + average tokens/s vs compute-node capacity
+//! (×A100) at 60 UEs × 1 prompt/s, plus the minimum capacity meeting
+//! α = 95% and the −27% hardware-cost headline.
+//!
+//! Run: `cargo bench --bench fig7_gpu_scaling`
+
+use icc6g::config::{SchemeConfig, SimConfig};
+use icc6g::coordinator::{min_capacity_from_curve, sweep_gpu_capacity};
+use icc6g::util::bench::{cell, Table};
+
+fn main() {
+    let mut base = SimConfig::table1();
+    base.n_ues = 60;
+    base.horizon = 20.0;
+    base.warmup = 2.0;
+    let seeds = 3;
+    let alpha = 0.95;
+    let grid: Vec<f64> = (4..=16).map(|i| i as f64).collect();
+    let schemes = SchemeConfig::fig6_schemes();
+
+    let t0 = std::time::Instant::now();
+    let mut curves = Table::new(
+        "Fig 7 — SLS satisfaction + tokens/s vs compute capacity (×A100)",
+        &["xA100", "scheme", "satisfaction", "avg_tokens_per_s"],
+    );
+    let mut mins = Vec::new();
+    for scheme in schemes {
+        let pts = sweep_gpu_capacity(&base, scheme, &grid, seeds);
+        for p in &pts {
+            curves.row(&[
+                cell(p.x, 0),
+                scheme.name.to_string(),
+                cell(p.satisfaction, 4),
+                cell(p.avg_tokens_per_sec, 1),
+            ]);
+        }
+        mins.push((scheme.name, min_capacity_from_curve(&pts, alpha)));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    curves.print();
+    curves.write_csv("fig7_curves.csv").expect("csv");
+
+    let mut m = Table::new(
+        "Fig 7 — min ×A100 for α=0.95 (paper: ICC 8, disjoint-RAN 11, −27%)",
+        &["scheme", "min xA100"],
+    );
+    for (name, v) in &mins {
+        m.row(&[
+            name.to_string(),
+            v.map(|x| cell(x, 1)).unwrap_or_else(|| "not reached".into()),
+        ]);
+    }
+    m.print();
+    m.write_csv("fig7_capacity.csv").expect("csv");
+
+    let icc = mins[0].1.expect("ICC must reach the SLO");
+    let best_disjoint = mins[1].1.or(mins[2].1);
+    if let Some(d) = best_disjoint {
+        println!(
+            "\nheadline: ICC {icc:.1} vs best-disjoint {d:.1} ×A100 = −{:.0}% hardware (paper: −27%)",
+            (1.0 - icc / d) * 100.0
+        );
+        assert!(icc < d, "ICC must need less compute");
+    }
+    println!("bench wall: {wall:.1}s for {} scheme-capacity points", grid.len() * 3);
+}

@@ -1,0 +1,167 @@
+//! Hot-path microbenchmarks — the §Perf instrumentation.
+//!
+//! L3 targets (DESIGN.md §7): the SLS event loop must sustain ≥1 M
+//! events/s; queue operations must be allocation-light; the analytic
+//! layer must be effectively free. The PJRT serving path reports
+//! tokens/s when artifacts exist.
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+use icc6g::compute::{ComputeJob, ComputeNode, Discipline};
+use icc6g::config::{SchemeConfig, SimConfig};
+use icc6g::dess::EventQueue;
+use icc6g::mac::{MacConfig, Sdu, SduKind, UeMac, UlScheduler};
+use icc6g::phy::channel::LargeScale;
+use icc6g::phy::Carrier;
+use icc6g::queueing::analytic::{scheme_satisfaction, SystemParams};
+use icc6g::queueing::tandem_mc::simulate_tandem;
+use icc6g::queueing::Scheme;
+use icc6g::rng::Rng;
+use icc6g::runtime::{tokenizer, Engine};
+use icc6g::sim::Sls;
+use icc6g::util::bench::bench_fn;
+
+fn bench_event_queue() {
+    // Schedule + pop 10k events per iteration.
+    let r = bench_fn("dess: 10k schedule+pop", 3, 50, 0.3, || {
+        let mut q = EventQueue::new();
+        for i in 0..10_000u32 {
+            q.schedule_at((i % 97) as f64, i);
+        }
+        let mut acc = 0u64;
+        while let Some((_, e)) = q.pop() {
+            acc += e as u64;
+        }
+        acc
+    });
+    println!("{}", r.report());
+    let events_per_sec = 20_000.0 / (r.mean_ns * 1e-9);
+    println!("  → {:.1} M queue ops/s", events_per_sec / 1e6);
+}
+
+fn bench_compute_node() {
+    let r = bench_fn("compute: 1k enqueue+complete (EDF+drop)", 3, 100, 0.3, || {
+        let mut node =
+            ComputeNode::new(Discipline::DeadlinePriority { drop_hopeless: true }, 2);
+        let mut t = 0.0;
+        for i in 0..1000u64 {
+            t += 0.001;
+            let evs = node.enqueue(
+                ComputeJob {
+                    job_id: i,
+                    t_gen: t,
+                    t_comm: 0.002,
+                    deadline: t + 0.08,
+                    service_time: 0.011,
+                },
+                t,
+            );
+            std::hint::black_box(&evs);
+            if node.busy_servers() > 0 && i % 3 == 0 {
+                let evs = node.complete(t + 0.011);
+                std::hint::black_box(&evs);
+            }
+        }
+        node.queue_len()
+    });
+    println!("{}", r.report());
+}
+
+fn bench_mac_slot() {
+    let carrier = Carrier::table1();
+    let sched = UlScheduler::new(MacConfig::default(), carrier);
+    let mut rng = Rng::new(1);
+    let mut drop_rng = Rng::new(2);
+    let mut ues: Vec<UeMac> = (0..60)
+        .map(|i| {
+            UeMac::new(LargeScale::drop(&mut drop_rng, 35.0, 300.0)).with_sr_phase(i)
+        })
+        .collect();
+    let mut slot = 0u64;
+    let r = bench_fn("mac: one 60-UE slot (backlogged)", 10, 2_000, 0.3, || {
+        for (i, ue) in ues.iter_mut().enumerate() {
+            if ue.buffered_bytes() < 2000 {
+                ue.note_arrival(slot, 4, 2);
+                ue.push_bg_sdu(Sdu {
+                    kind: SduKind::Background,
+                    total_bytes: 500,
+                    bytes_left: 500,
+                    t_arrival: slot as f64 * 0.00025 + i as f64 * 1e-9,
+                });
+            }
+        }
+        let out = sched.schedule_slot(slot, &mut ues, &mut rng);
+        slot += 1;
+        out.len()
+    });
+    println!("{}", r.report());
+    let slots_per_sec = 1.0 / (r.mean_ns * 1e-9);
+    println!(
+        "  → {:.0} slots/s = {:.0}× realtime at 60 kHz SCS",
+        slots_per_sec,
+        slots_per_sec * 0.25e-3
+    );
+}
+
+fn bench_tandem_mc() {
+    let p = SystemParams::paper();
+    let r = bench_fn("queueing: 50k-job tandem MC", 1, 20, 0.5, || {
+        simulate_tandem(&p, 60.0, 0.005, 50_000, 7).len()
+    });
+    println!("{}", r.report());
+    let jobs_per_sec = 50_000.0 / (r.mean_ns * 1e-9);
+    println!("  → {:.1} M simulated jobs/s", jobs_per_sec / 1e6);
+}
+
+fn bench_analytic() {
+    let p = SystemParams::paper();
+    let s = Scheme::mec_disjoint();
+    let r = bench_fn("queueing: disjoint closed form", 1000, 100_000, 0.2, || {
+        scheme_satisfaction(&p, &s, 55.0)
+    });
+    println!("{}", r.report());
+}
+
+fn bench_full_sls() {
+    let mut cfg = SimConfig::table1().with_scheme(SchemeConfig::icc());
+    cfg.n_ues = 60;
+    cfg.horizon = 5.0;
+    cfg.warmup = 0.5;
+    let r = bench_fn("sls: 5s simulated, 60 UEs, ICC", 1, 5, 1.0, || {
+        Sls::new(cfg.clone()).run().report.n_jobs
+    });
+    println!("{}", r.report());
+    let sim_per_wall = 5.0 / (r.mean_ns * 1e-9);
+    println!("  → {sim_per_wall:.0}× realtime (5 s simulated per {:.0} ms wall)", r.mean_ns / 1e6);
+}
+
+fn bench_engine() {
+    let dir = Engine::default_artifacts_dir();
+    if !dir.join("prefill.hlo.txt").exists() {
+        println!("engine: skipped (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::load(&dir).expect("engine");
+    let prompt = tokenizer::encode("benchmarking the serving hot path");
+    let r = bench_fn("engine: prefill(34 tok)", 2, 20, 1.0, || {
+        engine.prefill(&prompt).unwrap().0.len()
+    });
+    println!("{}", r.report());
+    let r = bench_fn("engine: generate 15 tokens", 1, 10, 2.0, || {
+        engine.generate(&prompt, 15).unwrap().0.len()
+    });
+    println!("{}", r.report());
+    let toks_per_sec = 15.0 / (r.mean_ns * 1e-9);
+    println!("  → {toks_per_sec:.0} tok/s end-to-end (prefill amortized)");
+}
+
+fn main() {
+    println!("=== §Perf hot-path microbenchmarks ===\n");
+    bench_event_queue();
+    bench_compute_node();
+    bench_mac_slot();
+    bench_tandem_mc();
+    bench_analytic();
+    bench_full_sls();
+    bench_engine();
+}

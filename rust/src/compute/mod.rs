@@ -1,0 +1,310 @@
+//! Computing-node queueing (paper §IV-B item 2).
+//!
+//! The node serves LLM jobs with deterministic service times from the
+//! roofline model. Two disciplines:
+//!
+//! * **FIFO** — the 5G-MEC baseline.
+//! * **Deadline priority** — ICC's priority-based job queueing: jobs
+//!   are ordered by `T_gen + b_total − T_comm` (the communication-aware
+//!   effective deadline; a job that already burned much of its budget
+//!   in the air interface is served earlier), and any job whose
+//!   *expected completion* would exceed `T_gen + b_total` is dropped
+//!   rather than wasting GPU time.
+//!
+//! The node is a passive state machine: the owning simulator drives it
+//! with `enqueue`/`complete` and schedules the returned completion
+//! events on its own calendar.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// A job as seen by the computing node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ComputeJob {
+    pub job_id: u64,
+    /// Generation time at the UE.
+    pub t_gen: f64,
+    /// Observed communication latency (UE→BS, incl. uplink queueing).
+    pub t_comm: f64,
+    /// Absolute deadline `t_gen + b_total`.
+    pub deadline: f64,
+    /// Deterministic service time (roofline).
+    pub service_time: f64,
+}
+
+impl ComputeJob {
+    /// ICC priority key: `T_gen + b_total − T_comm` — smaller = serve
+    /// earlier (paper §IV-B).
+    pub fn priority_key(&self) -> f64 {
+        self.deadline - self.t_comm
+    }
+}
+
+/// Queue ordering.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Discipline {
+    Fifo,
+    /// ICC deadline priority; `drop_hopeless` enables the paper's drop
+    /// rule at service start.
+    DeadlinePriority { drop_hopeless: bool },
+}
+
+/// Heap entry for the priority discipline (min-heap on key).
+#[derive(Debug)]
+struct PrioEntry {
+    key: f64,
+    seq: u64,
+    job: ComputeJob,
+}
+
+impl PartialEq for PrioEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key && self.seq == other.seq
+    }
+}
+impl Eq for PrioEntry {}
+impl PartialOrd for PrioEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for PrioEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .key
+            .partial_cmp(&self.key)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// What happened when the node accepted / finished a job.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum NodeEvent {
+    /// Service began; completion fires at the given absolute time.
+    Started { job: ComputeJob, completes_at: f64 },
+    /// Job was dropped by the hopeless-deadline rule.
+    Dropped { job: ComputeJob },
+}
+
+/// The computing node.
+#[derive(Debug)]
+pub struct ComputeNode {
+    discipline: Discipline,
+    /// Parallel servers (1 for a tensor-parallel-aggregated pool).
+    n_servers: u32,
+    busy: u32,
+    fifo: VecDeque<ComputeJob>,
+    prio: BinaryHeap<PrioEntry>,
+    seq: u64,
+    /// Running count of dropped jobs.
+    pub dropped: u64,
+}
+
+impl ComputeNode {
+    pub fn new(discipline: Discipline, n_servers: u32) -> Self {
+        assert!(n_servers >= 1);
+        Self {
+            discipline,
+            n_servers,
+            busy: 0,
+            fifo: VecDeque::new(),
+            prio: BinaryHeap::new(),
+            seq: 0,
+            dropped: 0,
+        }
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.fifo.len() + self.prio.len()
+    }
+
+    pub fn busy_servers(&self) -> u32 {
+        self.busy
+    }
+
+    fn push(&mut self, job: ComputeJob) {
+        match self.discipline {
+            Discipline::Fifo => self.fifo.push_back(job),
+            Discipline::DeadlinePriority { .. } => {
+                let seq = self.seq;
+                self.seq += 1;
+                self.prio.push(PrioEntry { key: job.priority_key(), seq, job });
+            }
+        }
+    }
+
+    fn pop(&mut self) -> Option<ComputeJob> {
+        match self.discipline {
+            Discipline::Fifo => self.fifo.pop_front(),
+            Discipline::DeadlinePriority { .. } => self.prio.pop().map(|e| e.job),
+        }
+    }
+
+    /// Try to start jobs on free servers at time `now`, applying the
+    /// drop rule. Returns the resulting events (possibly several drops
+    /// followed by starts).
+    fn dispatch(&mut self, now: f64) -> Vec<NodeEvent> {
+        let mut events = Vec::new();
+        while self.busy < self.n_servers {
+            let Some(job) = self.pop() else { break };
+            let drop_rule = matches!(
+                self.discipline,
+                Discipline::DeadlinePriority { drop_hopeless: true }
+            );
+            if drop_rule && now + job.service_time > job.deadline {
+                self.dropped += 1;
+                events.push(NodeEvent::Dropped { job });
+                continue;
+            }
+            self.busy += 1;
+            events.push(NodeEvent::Started { job, completes_at: now + job.service_time });
+        }
+        events
+    }
+
+    /// A job arrives at the node's queue at time `now`.
+    pub fn enqueue(&mut self, job: ComputeJob, now: f64) -> Vec<NodeEvent> {
+        self.push(job);
+        self.dispatch(now)
+    }
+
+    /// A server finished at time `now`; pull the next job(s) in.
+    pub fn complete(&mut self, now: f64) -> Vec<NodeEvent> {
+        assert!(self.busy > 0, "complete() with no busy server");
+        self.busy -= 1;
+        self.dispatch(now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: u64, t_gen: f64, t_comm: f64, deadline: f64, svc: f64) -> ComputeJob {
+        ComputeJob { job_id: id, t_gen, t_comm, deadline, service_time: svc }
+    }
+
+    #[test]
+    fn fifo_orders_by_arrival() {
+        let mut n = ComputeNode::new(Discipline::Fifo, 1);
+        let ev = n.enqueue(job(1, 0.0, 0.01, 0.08, 0.02), 0.0);
+        assert!(matches!(ev[0], NodeEvent::Started { job: j, .. } if j.job_id == 1));
+        n.enqueue(job(2, 0.0, 0.01, 0.08, 0.02), 0.001);
+        n.enqueue(job(3, 0.0, 0.01, 0.08, 0.02), 0.002);
+        let ev = n.complete(0.02);
+        assert!(matches!(ev[0], NodeEvent::Started { job: j, .. } if j.job_id == 2));
+        let ev = n.complete(0.04);
+        assert!(matches!(ev[0], NodeEvent::Started { job: j, .. } if j.job_id == 3));
+    }
+
+    #[test]
+    fn priority_orders_by_effective_deadline() {
+        let mut n = ComputeNode::new(
+            Discipline::DeadlinePriority { drop_hopeless: false },
+            1,
+        );
+        // occupy the server
+        n.enqueue(job(0, 0.0, 0.0, 1.0, 0.050), 0.0);
+        // job 1: late deadline, tiny comm → key 0.20
+        n.enqueue(job(1, 0.12, 0.0, 0.20, 0.01), 0.01);
+        // job 2: earlier effective deadline: key 0.15 - 0.04 = 0.11
+        n.enqueue(job(2, 0.07, 0.04, 0.15, 0.01), 0.02);
+        let ev = n.complete(0.05);
+        assert!(matches!(ev[0], NodeEvent::Started { job: j, .. } if j.job_id == 2));
+        let ev = n.complete(0.06);
+        assert!(matches!(ev[0], NodeEvent::Started { job: j, .. } if j.job_id == 1));
+    }
+
+    #[test]
+    fn priority_uses_comm_latency() {
+        // Same absolute deadline; the job that spent more time in the
+        // air interface must be served first (paper's key).
+        let mut n = ComputeNode::new(
+            Discipline::DeadlinePriority { drop_hopeless: false },
+            1,
+        );
+        n.enqueue(job(0, 0.0, 0.0, 1.0, 0.05), 0.0);
+        n.enqueue(job(1, 0.0, 0.010, 0.08, 0.01), 0.01); // key 0.07
+        n.enqueue(job(2, 0.0, 0.030, 0.08, 0.01), 0.01); // key 0.05
+        let ev = n.complete(0.05);
+        assert!(matches!(ev[0], NodeEvent::Started { job: j, .. } if j.job_id == 2));
+    }
+
+    #[test]
+    fn hopeless_jobs_dropped_at_dispatch() {
+        let mut n = ComputeNode::new(
+            Discipline::DeadlinePriority { drop_hopeless: true },
+            1,
+        );
+        n.enqueue(job(0, 0.0, 0.0, 1.0, 0.050), 0.0);
+        // deadline 0.06, service 0.02, will dispatch at 0.05 → 0.07 > 0.06
+        n.enqueue(job(1, 0.0, 0.0, 0.060, 0.020), 0.01);
+        n.enqueue(job(2, 0.0, 0.0, 0.100, 0.020), 0.01);
+        let ev = n.complete(0.05);
+        assert_eq!(ev.len(), 2);
+        assert!(matches!(ev[0], NodeEvent::Dropped { job: j } if j.job_id == 1));
+        assert!(matches!(ev[1], NodeEvent::Started { job: j, .. } if j.job_id == 2));
+        assert_eq!(n.dropped, 1);
+    }
+
+    #[test]
+    fn fifo_never_drops() {
+        let mut n = ComputeNode::new(Discipline::Fifo, 1);
+        n.enqueue(job(0, 0.0, 0.0, 0.01, 0.5), 0.0);
+        n.enqueue(job(1, 0.0, 0.0, 0.01, 0.5), 0.0);
+        let ev = n.complete(0.5); // way past both deadlines
+        assert!(matches!(ev[0], NodeEvent::Started { .. }));
+        assert_eq!(n.dropped, 0);
+    }
+
+    #[test]
+    fn multi_server_parallelism() {
+        let mut n = ComputeNode::new(Discipline::Fifo, 2);
+        let e1 = n.enqueue(job(1, 0.0, 0.0, 1.0, 0.1), 0.0);
+        let e2 = n.enqueue(job(2, 0.0, 0.0, 1.0, 0.1), 0.0);
+        assert!(matches!(e1[0], NodeEvent::Started { .. }));
+        assert!(matches!(e2[0], NodeEvent::Started { .. }));
+        assert_eq!(n.busy_servers(), 2);
+        let e3 = n.enqueue(job(3, 0.0, 0.0, 1.0, 0.1), 0.01);
+        assert!(e3.is_empty(), "both servers busy → queued");
+        assert_eq!(n.queue_len(), 1);
+    }
+
+    #[test]
+    fn work_conservation() {
+        // Server never idles while the queue is non-empty.
+        let mut n = ComputeNode::new(Discipline::Fifo, 1);
+        n.enqueue(job(1, 0.0, 0.0, 1.0, 0.1), 0.0);
+        for id in 2..10 {
+            n.enqueue(job(id, 0.0, 0.0, 1.0, 0.1), 0.0);
+        }
+        let mut t = 0.1;
+        let mut completions = 1;
+        loop {
+            let ev = n.complete(t);
+            if ev.is_empty() {
+                break;
+            }
+            completions += 1;
+            t += 0.1;
+        }
+        assert_eq!(completions, 9);
+        assert_eq!(n.queue_len(), 0);
+        assert_eq!(n.busy_servers(), 0);
+    }
+
+    #[test]
+    fn fifo_ties_stable() {
+        let mut n = ComputeNode::new(
+            Discipline::DeadlinePriority { drop_hopeless: false },
+            1,
+        );
+        n.enqueue(job(0, 0.0, 0.0, 1.0, 0.05), 0.0);
+        // identical keys → FIFO among equals (seq tiebreak)
+        n.enqueue(job(1, 0.0, 0.01, 0.08, 0.01), 0.01);
+        n.enqueue(job(2, 0.0, 0.01, 0.08, 0.01), 0.02);
+        let ev = n.complete(0.05);
+        assert!(matches!(ev[0], NodeEvent::Started { job: j, .. } if j.job_id == 1));
+    }
+}

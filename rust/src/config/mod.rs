@@ -1,0 +1,296 @@
+//! Typed simulation configuration with Table I defaults and TOML
+//! loading (`util::tomlmini`).
+
+use crate::llm::{GpuSpec, JobSpec};
+use crate::mac::{HarqConfig, MacConfig, SchedulingPolicy};
+use crate::phy::Carrier;
+use crate::traffic::{BackgroundConfig, JobTrafficConfig};
+use crate::util::tomlmini::Document;
+
+/// Deployment of the computing node (drives the wireline constant).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Deployment {
+    /// Compute inside the RAN node (paper: 5 ms).
+    Ran,
+    /// Operator MEC site behind the UPF (paper: 20 ms).
+    Mec,
+    /// Remote cloud (motivating baseline; not in Fig 4/6 but used by
+    /// the examples).
+    Cloud,
+}
+
+impl Deployment {
+    pub fn wireline_latency(&self) -> f64 {
+        match self {
+            Deployment::Ran => 0.005,
+            Deployment::Mec => 0.020,
+            Deployment::Cloud => 0.050,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "ran" => Some(Self::Ran),
+            "mec" => Some(Self::Mec),
+            "cloud" => Some(Self::Cloud),
+            _ => None,
+        }
+    }
+}
+
+/// Latency-management mode.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Management {
+    Joint,
+    /// With the paper's split: b_comm = 24 ms, b_comp = 56 ms.
+    Disjoint { b_comm: f64, b_comp: f64 },
+}
+
+/// The full ICC-vs-MEC scheme: deployment + management + priority
+/// scheme toggle (paper §IV-B).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SchemeConfig {
+    pub name: &'static str,
+    pub deployment: Deployment,
+    pub management: Management,
+    /// Job-aware packet prioritization + deadline job queue + drop.
+    pub priority_scheme: bool,
+}
+
+impl SchemeConfig {
+    /// ICC: RAN compute, joint management, priority scheme on.
+    pub fn icc() -> Self {
+        Self {
+            name: "ICC (joint, RAN 5ms, priority)",
+            deployment: Deployment::Ran,
+            management: Management::Joint,
+            priority_scheme: true,
+        }
+    }
+
+    /// Disjoint management at a RAN node (the "move compute closer"
+    /// half-step of Fig 6).
+    pub fn disjoint_ran() -> Self {
+        Self {
+            name: "Disjoint (RAN 5ms)",
+            deployment: Deployment::Ran,
+            management: Management::Disjoint { b_comm: 0.024, b_comp: 0.056 },
+            priority_scheme: false,
+        }
+    }
+
+    /// 5G MEC baseline: disjoint, 20 ms wireline, FIFO everything.
+    pub fn mec() -> Self {
+        Self {
+            name: "5G MEC (disjoint, 20ms)",
+            deployment: Deployment::Mec,
+            management: Management::Disjoint { b_comm: 0.024, b_comp: 0.056 },
+            priority_scheme: false,
+        }
+    }
+
+    /// The three Fig 6 schemes in paper order.
+    pub fn fig6_schemes() -> [SchemeConfig; 3] {
+        [Self::icc(), Self::disjoint_ran(), Self::mec()]
+    }
+}
+
+/// Everything the SLS needs for one run.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub n_ues: u32,
+    /// Cell geometry for UE drops (meters).
+    pub cell_r_min: f64,
+    pub cell_r_max: f64,
+    pub carrier: Carrier,
+    pub mac: MacConfig,
+    pub job_traffic: JobTrafficConfig,
+    pub background: BackgroundConfig,
+    pub job: JobSpec,
+    /// Per-server compute capacity (a tensor-parallel pool is one
+    /// "server"; see DESIGN.md on the Fig 6 vs Fig 7 topologies).
+    pub gpu: GpuSpec,
+    /// Parallel servers at the computing node (jobs are not split
+    /// across servers).
+    pub n_gpus: u32,
+    pub scheme: SchemeConfig,
+    /// Simulated wall-clock horizon (seconds).
+    pub horizon: f64,
+    /// Warmup discarded from metrics (seconds).
+    pub warmup: f64,
+    pub seed: u64,
+}
+
+impl SimConfig {
+    /// Table I defaults (Fig 6 setup with 2× GH200-NVL2).
+    pub fn table1() -> Self {
+        Self {
+            n_ues: 60,
+            cell_r_min: 35.0,
+            cell_r_max: 300.0,
+            carrier: Carrier::table1(),
+            mac: MacConfig::default(),
+            job_traffic: JobTrafficConfig::default(),
+            background: BackgroundConfig::default(),
+            job: JobSpec::table1(),
+            // Fig 6 node: two GH200-NVL2 modules (each module = 2
+            // superchips, aggregated) acting as parallel servers.
+            gpu: GpuSpec::gh200_nvl2().scaled(2.0),
+            n_gpus: 2,
+            scheme: SchemeConfig::mec(),
+            horizon: 20.0,
+            warmup: 2.0,
+            seed: 1,
+        }
+    }
+
+    /// Apply a scheme preset (also syncs the MAC priority flag).
+    pub fn with_scheme(mut self, scheme: SchemeConfig) -> Self {
+        self.scheme = scheme;
+        self.mac.job_priority = scheme.priority_scheme;
+        self
+    }
+
+    /// Total offered prompt rate (prompts/s) across the cell.
+    pub fn offered_rate(&self) -> f64 {
+        self.n_ues as f64 * self.job_traffic.rate_per_ue
+    }
+
+    /// Override fields from a mini-TOML document. Unknown keys error.
+    pub fn apply_toml(&mut self, doc: &Document) -> anyhow::Result<()> {
+        for key in doc.keys() {
+            match key {
+                "sim.n_ues" => self.n_ues = doc.i64(key).unwrap() as u32,
+                "sim.horizon" => self.horizon = doc.f64(key).unwrap(),
+                "sim.warmup" => self.warmup = doc.f64(key).unwrap(),
+                "sim.seed" => self.seed = doc.i64(key).unwrap() as u64,
+                "sim.cell_r_min" => self.cell_r_min = doc.f64(key).unwrap(),
+                "sim.cell_r_max" => self.cell_r_max = doc.f64(key).unwrap(),
+                "traffic.rate_per_ue" => {
+                    self.job_traffic.rate_per_ue = doc.f64(key).unwrap()
+                }
+                "traffic.input_tokens" => {
+                    self.job_traffic.input_tokens = doc.i64(key).unwrap() as u32
+                }
+                "traffic.background_bps" => {
+                    self.background.rate_bps = doc.f64(key).unwrap()
+                }
+                "job.output_tokens" => self.job.n_output = doc.i64(key).unwrap() as u32,
+                "job.b_total" => self.job.b_total = doc.f64(key).unwrap(),
+                "gpu.model" => {
+                    let name = doc.str(key).unwrap();
+                    self.gpu = GpuSpec::by_name(name)
+                        .ok_or_else(|| anyhow::anyhow!("unknown GPU '{name}'"))?;
+                }
+                "gpu.scale" => self.gpu = self.gpu.scaled(doc.f64(key).unwrap()),
+                "gpu.count" => self.n_gpus = doc.i64(key).unwrap() as u32,
+                "mac.policy" => {
+                    self.mac.policy = match doc.str(key).unwrap() {
+                        "pf" => SchedulingPolicy::ProportionalFair,
+                        "rr" => SchedulingPolicy::RoundRobin,
+                        other => anyhow::bail!("unknown mac.policy '{other}'"),
+                    }
+                }
+                "mac.bler" => {
+                    self.mac.harq = HarqConfig { bler: doc.f64(key).unwrap(), ..self.mac.harq }
+                }
+                "scheme.preset" => {
+                    let s = match doc.str(key).unwrap() {
+                        "icc" => SchemeConfig::icc(),
+                        "disjoint_ran" => SchemeConfig::disjoint_ran(),
+                        "mec" => SchemeConfig::mec(),
+                        other => anyhow::bail!("unknown scheme '{other}'"),
+                    };
+                    *self = self.clone().with_scheme(s);
+                }
+                other => anyhow::bail!("unknown config key '{other}'"),
+            }
+        }
+        // keep job tokens in sync with traffic tokens
+        self.job.n_input = self.job_traffic.input_tokens;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper() {
+        let c = SimConfig::table1();
+        assert_eq!(c.carrier.freq_hz, 3.7e9);
+        assert_eq!(c.carrier.bandwidth_hz, 100e6);
+        assert_eq!(c.carrier.numerology.scs_hz(), 60_000.0);
+        assert_eq!(c.background.rate_bps, 500_000.0);
+        assert_eq!(c.job_traffic.rate_per_ue, 1.0);
+        assert_eq!(c.job_traffic.input_tokens, 15);
+        assert_eq!(c.job.n_output, 15);
+        assert!((c.job.b_total - 0.080).abs() < 1e-12);
+        // Llama-2-7B FP16
+        assert!((c.job.c_llm - 14e9).abs() < 1.0);
+        assert!((c.job.m_llm - 14e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn deployment_wireline_constants() {
+        assert_eq!(Deployment::Ran.wireline_latency(), 0.005);
+        assert_eq!(Deployment::Mec.wireline_latency(), 0.020);
+        assert_eq!(Deployment::parse("RAN"), Some(Deployment::Ran));
+        assert_eq!(Deployment::parse("x"), None);
+    }
+
+    #[test]
+    fn scheme_presets() {
+        let icc = SchemeConfig::icc();
+        assert_eq!(icc.deployment, Deployment::Ran);
+        assert_eq!(icc.management, Management::Joint);
+        assert!(icc.priority_scheme);
+        let mec = SchemeConfig::mec();
+        assert_eq!(mec.deployment, Deployment::Mec);
+        assert!(!mec.priority_scheme);
+        match mec.management {
+            Management::Disjoint { b_comm, b_comp } => {
+                assert!((b_comm - 0.024).abs() < 1e-12);
+                assert!((b_comp - 0.056).abs() < 1e-12);
+            }
+            _ => panic!("mec must be disjoint"),
+        }
+    }
+
+    #[test]
+    fn with_scheme_syncs_mac_priority() {
+        let c = SimConfig::table1().with_scheme(SchemeConfig::icc());
+        assert!(c.mac.job_priority);
+        let c = c.with_scheme(SchemeConfig::mec());
+        assert!(!c.mac.job_priority);
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let mut c = SimConfig::table1();
+        let doc = Document::parse(
+            "[sim]\nn_ues = 80\nseed = 9\n[gpu]\nmodel = \"a100\"\nscale = 8\n[scheme]\npreset = \"icc\"",
+        )
+        .unwrap();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.n_ues, 80);
+        assert_eq!(c.seed, 9);
+        assert!((c.gpu.a100_equivalents() - 8.0).abs() < 1e-9);
+        assert!(c.mac.job_priority);
+    }
+
+    #[test]
+    fn toml_unknown_key_rejected() {
+        let mut c = SimConfig::table1();
+        let doc = Document::parse("nonsense = 1").unwrap();
+        assert!(c.apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn offered_rate() {
+        let mut c = SimConfig::table1();
+        c.n_ues = 80;
+        assert_eq!(c.offered_rate(), 80.0);
+    }
+}

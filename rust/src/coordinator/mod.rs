@@ -1,0 +1,192 @@
+//! The ICC coordinator — the paper's system contribution.
+//!
+//! Ties the evaluation together: runs schemes over the SLS, searches
+//! service capacity (max prompt rate at ≥ α satisfaction, Fig 6) and
+//! minimum compute capacity (min ×A100 at ≥ α satisfaction, Fig 7),
+//! and exposes the scheme presets. The *serving* coordinator (live
+//! request routing over the PJRT runtime) lives in [`crate::server`];
+//! this module is the evaluation/orchestration brain shared by both.
+
+use crate::config::{SchemeConfig, SimConfig};
+use crate::llm::GpuSpec;
+use crate::metrics::SimReport;
+use crate::sim::run_scheme;
+
+/// A point of a satisfaction-vs-load curve.
+#[derive(Debug, Clone, Copy)]
+pub struct CurvePoint {
+    /// Offered prompt rate (prompts/s) or capacity (×A100), per sweep.
+    pub x: f64,
+    pub satisfaction: f64,
+    pub avg_comm_ms: f64,
+    pub avg_comp_ms: f64,
+    pub avg_tokens_per_sec: f64,
+}
+
+impl CurvePoint {
+    pub fn from_report(x: f64, r: &SimReport) -> Self {
+        Self {
+            x,
+            satisfaction: r.satisfaction_rate(),
+            avg_comm_ms: r.comm.mean() * 1e3,
+            avg_comp_ms: r.comp.mean() * 1e3,
+            avg_tokens_per_sec: r.tokens_per_sec.mean(),
+        }
+    }
+}
+
+/// Sweep satisfaction over prompt arrival rates by scaling the number
+/// of UEs (paper Fig 6: "each UE generates 1 prompt/s and we scale the
+/// number of UEs"). `seeds` > 1 averages independent replications.
+pub fn sweep_arrival_rates(
+    base: &SimConfig,
+    scheme: SchemeConfig,
+    rates: &[f64],
+    seeds: u32,
+) -> Vec<CurvePoint> {
+    rates
+        .iter()
+        .map(|&rate| {
+            let mut cfg = base.clone();
+            cfg.n_ues = (rate / cfg.job_traffic.rate_per_ue).round().max(1.0) as u32;
+            let mut agg: Option<SimReport> = None;
+            for s in 0..seeds {
+                let r = run_scheme(&cfg, scheme, base.seed + 1000 * s as u64);
+                agg = Some(match agg {
+                    None => r,
+                    Some(mut a) => {
+                        a.n_jobs += r.n_jobs;
+                        a.n_satisfied += r.n_satisfied;
+                        a.n_dropped += r.n_dropped;
+                        a.comm.merge(&r.comm);
+                        a.comp.merge(&r.comp);
+                        a.e2e.merge(&r.e2e);
+                        a.tokens_per_sec.merge(&r.tokens_per_sec);
+                        a
+                    }
+                });
+            }
+            CurvePoint::from_report(rate, &agg.unwrap())
+        })
+        .collect()
+}
+
+/// Sweep satisfaction over compute capacity (×A100), fixed 60 UEs
+/// (paper Fig 7).
+pub fn sweep_gpu_capacity(
+    base: &SimConfig,
+    scheme: SchemeConfig,
+    capacities: &[f64],
+    seeds: u32,
+) -> Vec<CurvePoint> {
+    capacities
+        .iter()
+        .map(|&cap| {
+            let mut cfg = base.clone();
+            cfg.gpu = GpuSpec::a100().scaled(cap);
+            cfg.n_gpus = 1; // aggregated tensor-parallel pool
+            let mut agg: Option<SimReport> = None;
+            for s in 0..seeds {
+                let r = run_scheme(&cfg, scheme, base.seed + 1000 * s as u64);
+                agg = Some(match agg {
+                    None => r,
+                    Some(mut a) => {
+                        a.n_jobs += r.n_jobs;
+                        a.n_satisfied += r.n_satisfied;
+                        a.comm.merge(&r.comm);
+                        a.comp.merge(&r.comp);
+                        a.e2e.merge(&r.e2e);
+                        a.tokens_per_sec.merge(&r.tokens_per_sec);
+                        a
+                    }
+                });
+            }
+            CurvePoint::from_report(cap, &agg.unwrap())
+        })
+        .collect()
+}
+
+/// Service capacity from a swept curve: the largest x whose
+/// satisfaction ≥ α, linearly interpolating the crossing between grid
+/// points (NaN-free; returns 0 if the first point already misses α).
+pub fn capacity_from_curve(points: &[CurvePoint], alpha: f64) -> f64 {
+    let mut last_ok: Option<&CurvePoint> = None;
+    for p in points {
+        if p.satisfaction >= alpha {
+            last_ok = Some(p);
+        } else if let Some(prev) = last_ok {
+            // interpolate the α crossing between prev and p
+            let dy = prev.satisfaction - p.satisfaction;
+            if dy <= 1e-12 {
+                return prev.x;
+            }
+            let w = (prev.satisfaction - alpha) / dy;
+            return prev.x + w * (p.x - prev.x);
+        }
+    }
+    last_ok.map(|p| p.x).unwrap_or(0.0)
+}
+
+/// Minimum capacity (×A100) achieving α from a Fig 7-style sweep:
+/// smallest x with satisfaction ≥ α (interpolated). `None` if never
+/// reached.
+pub fn min_capacity_from_curve(points: &[CurvePoint], alpha: f64) -> Option<f64> {
+    let mut prev: Option<&CurvePoint> = None;
+    for p in points {
+        if p.satisfaction >= alpha {
+            if let Some(q) = prev {
+                if q.satisfaction < alpha {
+                    let dy = p.satisfaction - q.satisfaction;
+                    if dy > 1e-12 {
+                        let w = (alpha - q.satisfaction) / dy;
+                        return Some(q.x + w * (p.x - q.x));
+                    }
+                }
+            }
+            return Some(p.x);
+        }
+        prev = Some(p);
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(x: f64, s: f64) -> CurvePoint {
+        CurvePoint { x, satisfaction: s, avg_comm_ms: 0.0, avg_comp_ms: 0.0, avg_tokens_per_sec: 0.0 }
+    }
+
+    #[test]
+    fn capacity_interpolates_crossing() {
+        let pts = [pt(10.0, 1.0), pt(20.0, 0.99), pt(30.0, 0.90)];
+        let c = capacity_from_curve(&pts, 0.95);
+        // crossing between 20 (0.99) and 30 (0.90): 20 + 10·(0.04/0.09)
+        assert!((c - (20.0 + 10.0 * 0.04 / 0.09)).abs() < 1e-9, "c = {c}");
+    }
+
+    #[test]
+    fn capacity_all_above_returns_last() {
+        let pts = [pt(10.0, 1.0), pt(20.0, 0.99)];
+        assert_eq!(capacity_from_curve(&pts, 0.95), 20.0);
+    }
+
+    #[test]
+    fn capacity_all_below_returns_zero() {
+        let pts = [pt(10.0, 0.5), pt(20.0, 0.4)];
+        assert_eq!(capacity_from_curve(&pts, 0.95), 0.0);
+    }
+
+    #[test]
+    fn min_capacity_interpolates() {
+        let pts = [pt(4.0, 0.5), pt(8.0, 0.93), pt(12.0, 0.97)];
+        let c = min_capacity_from_curve(&pts, 0.95).unwrap();
+        assert!((c - (8.0 + 4.0 * 0.02 / 0.04)).abs() < 1e-9, "c = {c}");
+        assert_eq!(min_capacity_from_curve(&pts, 0.99), None);
+        assert_eq!(min_capacity_from_curve(&pts, 0.4).unwrap(), 4.0);
+    }
+
+    // Integration-style checks of the real sweeps live in
+    // rust/tests/integration_sim.rs (they need seconds, not micros).
+}

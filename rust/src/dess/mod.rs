@@ -1,0 +1,204 @@
+//! Discrete-event simulation core.
+//!
+//! A deterministic event calendar: events are `(time, seq, payload)`
+//! triples in a binary min-heap; ties in time break by insertion
+//! sequence so runs are exactly reproducible. The SLS (`sim/`), the
+//! tandem-queue Monte Carlo (`queueing/tandem_mc.rs`) and the compute
+//! node all run on this engine.
+//!
+//! Time is `f64` seconds. The engine is intentionally generic over the
+//! event payload `E`; components pattern-match their own payloads.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// An entry in the event calendar.
+struct Entry<E> {
+    time: f64,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for min-heap: earliest time first, then lowest seq.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The event calendar / simulation clock.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    now: f64,
+    seq: u64,
+    processed: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new(), now: 0.0, seq: 0, processed: 0 }
+    }
+
+    /// Current simulation time (seconds).
+    #[inline]
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Number of events popped so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `event` at absolute time `at` (must be >= now).
+    pub fn schedule_at(&mut self, at: f64, event: E) {
+        debug_assert!(at >= self.now - 1e-12, "scheduling into the past: {at} < {}", self.now);
+        debug_assert!(at.is_finite());
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { time: at.max(self.now), seq, event });
+    }
+
+    /// Schedule `event` after a relative delay.
+    #[inline]
+    pub fn schedule_in(&mut self, delay: f64, event: E) {
+        self.schedule_at(self.now + delay, event);
+    }
+
+    /// Pop the next event, advancing the clock. Returns `(time, event)`.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        let entry = self.heap.pop()?;
+        debug_assert!(entry.time >= self.now - 1e-12);
+        self.now = entry.time;
+        self.processed += 1;
+        Some((entry.time, entry.event))
+    }
+
+    /// Peek at the next event time without popping.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    /// Run until `horizon` (exclusive) or queue exhaustion, invoking
+    /// `handler(now, event, queue)` for each event. The handler may
+    /// schedule further events.
+    pub fn run_until(&mut self, horizon: f64, mut handler: impl FnMut(f64, E, &mut Self)) {
+        loop {
+            match self.heap.peek() {
+                Some(&Entry { time, .. }) if time < horizon => {
+                    let (t, ev) = self.pop().unwrap();
+                    handler(t, ev, self);
+                }
+                _ => break,
+            }
+        }
+        // Advance the clock to the horizon even if the calendar drained.
+        if self.now < horizon {
+            self.now = horizon;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(3.0, "c");
+        q.schedule_at(1.0, "a");
+        q.schedule_at(2.0, "b");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+        assert_eq!(q.now(), 3.0);
+        assert_eq!(q.processed(), 3);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(1.0, 1);
+        q.schedule_at(1.0, 2);
+        q.schedule_at(1.0, 3);
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn relative_scheduling_uses_current_time() {
+        let mut q = EventQueue::new();
+        q.schedule_at(5.0, "first");
+        q.pop();
+        q.schedule_in(2.0, "second");
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 7.0);
+    }
+
+    #[test]
+    fn run_until_respects_horizon() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.schedule_at(i as f64, i);
+        }
+        let mut seen = Vec::new();
+        q.run_until(5.0, |_, e, _| seen.push(e));
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+        assert_eq!(q.now(), 5.0);
+        assert_eq!(q.len(), 5); // 5..9 still queued
+    }
+
+    #[test]
+    fn handler_can_schedule_cascade() {
+        let mut q = EventQueue::new();
+        q.schedule_at(0.0, 0u32);
+        let mut count = 0;
+        q.run_until(100.0, |_, depth, q| {
+            count += 1;
+            if depth < 9 {
+                q.schedule_in(1.0, depth + 1);
+            }
+        });
+        assert_eq!(count, 10);
+        assert_eq!(q.now(), 100.0);
+    }
+
+    #[test]
+    fn empty_queue_behaviour() {
+        let mut q: EventQueue<()> = EventQueue::new();
+        assert!(q.is_empty());
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.peek_time(), None);
+    }
+}

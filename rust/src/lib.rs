@@ -1,0 +1,40 @@
+//! # icc6g — 6G EdgeAI: Integrated Communication and Computing
+//!
+//! Production-grade reproduction of *"6G EdgeAI: Performance Evaluation
+//! and Analysis"* (CS.DC 2025): an **Integrated Communication and
+//! Computing (ICC)** serving stack in which LLM compute nodes live
+//! inside the RAN and communication + computing latency budgets are
+//! managed **jointly**.
+//!
+//! The crate is organized in three tiers (see DESIGN.md):
+//!
+//! * **Substrates** — [`rng`], [`dess`] (discrete-event engine),
+//!   [`util`] (args/config/stats/property tests).
+//! * **Models** — [`queueing`] (tandem M/M/1 theory, Fig 4), [`phy`] +
+//!   [`mac`] + [`traffic`] (5G uplink SLS), [`llm`] (roofline cost
+//!   model, Eqs 7–8), [`compute`] (compute-node queueing).
+//! * **System** — [`coordinator`] (joint/disjoint latency management,
+//!   the paper's contribution), [`sim`] (end-to-end SLS, Figs 6–7),
+//!   [`runtime`] + [`server`] (real PJRT-backed LLM serving path).
+//!
+//! Python/JAX/Pallas exist only on the build path (`make artifacts`);
+//! the serving hot path is pure Rust + PJRT.
+
+pub mod compute;
+pub mod config;
+pub mod coordinator;
+pub mod dess;
+pub mod llm;
+pub mod mac;
+pub mod metrics;
+pub mod phy;
+pub mod queueing;
+pub mod rng;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod traffic;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,107 @@
+//! GPU catalog: datasheet specs used by the roofline model.
+//!
+//! Numbers are dense (non-sparse) FP16/BF16 tensor throughput and peak
+//! memory bandwidth from the public datasheets the paper cites ([17]
+//! GH200, [18] A100). "Capacity scaling" (Fig 7's ×A100 axis) is
+//! modeled as perfect tensor-parallel aggregation of both compute and
+//! bandwidth — the same abstraction the paper uses when it scales the
+//! computing node "relative to a single A100".
+
+/// Peak specs of one accelerator (or an aggregated pool).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Dense FP16 tensor throughput, FLOP/s.
+    pub comp_flops: f64,
+    /// Peak HBM bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// HBM capacity, bytes (sanity checks: model must fit).
+    pub mem_bytes: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA A100 SXM 80GB: 312 TFLOPS dense FP16, 2.039 TB/s HBM2e.
+    pub fn a100() -> Self {
+        Self { name: "A100-SXM-80GB", comp_flops: 312e12, mem_bw: 2.039e12, mem_bytes: 80e9 }
+    }
+
+    /// NVIDIA H100 SXM: 989 TFLOPS dense FP16, 3.35 TB/s HBM3.
+    pub fn h100() -> Self {
+        Self { name: "H100-SXM", comp_flops: 989e12, mem_bw: 3.35e12, mem_bytes: 80e9 }
+    }
+
+    /// NVIDIA GH200-NVL2 (one superchip of the NVL2 pair): H200-class
+    /// GPU — 989 TFLOPS dense FP16, 4.9 TB/s HBM3e, 144 GB.
+    pub fn gh200_nvl2() -> Self {
+        Self { name: "GH200-NVL2", comp_flops: 989e12, mem_bw: 4.9e12, mem_bytes: 144e9 }
+    }
+
+    /// Look up by case-insensitive name.
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "a100" => Some(Self::a100()),
+            "h100" => Some(Self::h100()),
+            "gh200" | "gh200-nvl2" | "gh200_nvl2" => Some(Self::gh200_nvl2()),
+            _ => None,
+        }
+    }
+
+    /// Aggregate `factor` of these accelerators (perfect tensor-parallel
+    /// scaling of compute + bandwidth + capacity, as in Fig 7's x-axis).
+    pub fn scaled(&self, factor: f64) -> Self {
+        assert!(factor > 0.0);
+        Self {
+            name: self.name,
+            comp_flops: self.comp_flops * factor,
+            mem_bw: self.mem_bw * factor,
+            mem_bytes: self.mem_bytes * factor,
+        }
+    }
+
+    /// Capacity of this spec expressed in A100 units (Fig 7's axis).
+    pub fn a100_equivalents(&self) -> f64 {
+        self.mem_bw / GpuSpec::a100().mem_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_values() {
+        let a = GpuSpec::a100();
+        assert_eq!(a.comp_flops, 312e12);
+        assert_eq!(a.mem_bw, 2.039e12);
+        let g = GpuSpec::gh200_nvl2();
+        assert!(g.mem_bw > 2.0 * a.mem_bw);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert_eq!(GpuSpec::by_name("A100").unwrap().name, "A100-SXM-80GB");
+        assert_eq!(GpuSpec::by_name("gh200-nvl2").unwrap().name, "GH200-NVL2");
+        assert!(GpuSpec::by_name("tpu-v5p").is_none());
+    }
+
+    #[test]
+    fn scaling_is_linear() {
+        let a = GpuSpec::a100().scaled(11.0);
+        assert!((a.comp_flops - 11.0 * 312e12).abs() < 1.0);
+        assert!((a.a100_equivalents() - 11.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_scale_rejected() {
+        GpuSpec::a100().scaled(0.0);
+    }
+
+    #[test]
+    fn model_fits_in_memory_sanity() {
+        // Llama-2-7B FP16 = 14 GB must fit in every catalog entry.
+        for g in [GpuSpec::a100(), GpuSpec::h100(), GpuSpec::gh200_nvl2()] {
+            assert!(g.mem_bytes > 14e9, "{}", g.name);
+        }
+    }
+}

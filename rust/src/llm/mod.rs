@@ -1,0 +1,192 @@
+//! LLM inference workload + roofline latency model (paper §IV-A).
+//!
+//! The paper models LLM inference latency with a two-phase roofline
+//! (Eqs 7–8): the prefill phase is `max(compute, weight-load)` and each
+//! decode step is `max(per-token compute, weight-load)` — decode is
+//! memory-bound for every realistic (model, GPU) pair, which is exactly
+//! why constrained edge compute benefits from joint latency management.
+
+pub mod gpu;
+
+pub use gpu::GpuSpec;
+
+/// A translation job `J = {N_input, N_output, C_LLM, M_LLM, b_total}`
+/// (paper §IV). `c_llm` is FLOPs per token (≈ 2 × params), `m_llm` is
+/// the model footprint in bytes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JobSpec {
+    pub n_input: u32,
+    pub n_output: u32,
+    /// FLOPs per token of matmul work (≈ 2 × n_params).
+    pub c_llm: f64,
+    /// Model bytes that must stream from memory per forward pass.
+    pub m_llm: f64,
+    /// End-to-end latency budget in seconds.
+    pub b_total: f64,
+}
+
+impl JobSpec {
+    /// Table I workload: Llama-2-7B FP16, 15 input / 15 output tokens,
+    /// 80 ms end-to-end budget.
+    pub fn table1() -> Self {
+        const N_PARAMS: f64 = 7e9;
+        Self {
+            n_input: 15,
+            n_output: 15,
+            c_llm: 2.0 * N_PARAMS,      // 14 GFLOP / token
+            m_llm: 2.0 * N_PARAMS,      // FP16: 2 bytes / param = 14 GB
+            b_total: 0.080,
+        }
+    }
+
+    pub fn total_tokens(&self) -> u32 {
+        self.n_input + self.n_output
+    }
+}
+
+/// Roofline latency model over a [`GpuSpec`] (Eqs 7–8).
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    pub gpu: GpuSpec,
+}
+
+impl CostModel {
+    pub fn new(gpu: GpuSpec) -> Self {
+        Self { gpu }
+    }
+
+    /// Eq 7: `T_prefill = max(N_input·C_LLM / G_comp, M_LLM / G_membw)`.
+    pub fn prefill_latency(&self, job: &JobSpec) -> f64 {
+        let compute = job.n_input as f64 * job.c_llm / self.gpu.comp_flops;
+        let memory = job.m_llm / self.gpu.mem_bw;
+        compute.max(memory)
+    }
+
+    /// Per-output-token latency: `max(C_LLM / G_comp, M_LLM / G_membw)`.
+    pub fn token_latency(&self, job: &JobSpec) -> f64 {
+        let compute = job.c_llm / self.gpu.comp_flops;
+        let memory = job.m_llm / self.gpu.mem_bw;
+        compute.max(memory)
+    }
+
+    /// Eq 8: `T_tokengen = N_output · max(...)`.
+    pub fn tokengen_latency(&self, job: &JobSpec) -> f64 {
+        job.n_output as f64 * self.token_latency(job)
+    }
+
+    /// `T_comp = T_prefill + T_tokengen` (service time, excl. queueing).
+    pub fn total_latency(&self, job: &JobSpec) -> f64 {
+        self.prefill_latency(job) + self.tokengen_latency(job)
+    }
+
+    /// True if decoding is memory-bandwidth-bound on this GPU.
+    pub fn decode_is_memory_bound(&self, job: &JobSpec) -> bool {
+        job.m_llm / self.gpu.mem_bw > job.c_llm / self.gpu.comp_flops
+    }
+
+    /// Batched decode step (extension §IV: continuous batching): the
+    /// weight stream is amortized across the batch, compute scales with
+    /// batch size. `max(B·C/G_comp, M/G_membw)`.
+    pub fn batched_token_latency(&self, job: &JobSpec, batch: u32) -> f64 {
+        let compute = batch as f64 * job.c_llm / self.gpu.comp_flops;
+        let memory = job.m_llm / self.gpu.mem_bw;
+        compute.max(memory)
+    }
+
+    /// Arithmetic-intensity crossover batch size: smallest batch at
+    /// which batched decode becomes compute-bound.
+    pub fn saturation_batch(&self, job: &JobSpec) -> u32 {
+        let b = (job.m_llm / self.gpu.mem_bw) * self.gpu.comp_flops / job.c_llm;
+        b.ceil().max(1.0) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llm::gpu::GpuSpec;
+
+    fn llama7b() -> JobSpec {
+        JobSpec::table1()
+    }
+
+    #[test]
+    fn table1_constants() {
+        let j = llama7b();
+        assert_eq!(j.n_input, 15);
+        assert_eq!(j.n_output, 15);
+        assert!((j.c_llm - 14e9).abs() < 1.0);
+        assert!((j.m_llm - 14e9).abs() < 1.0);
+        assert!((j.b_total - 0.080).abs() < 1e-12);
+        assert_eq!(j.total_tokens(), 30);
+    }
+
+    #[test]
+    fn a100_decode_is_memory_bound() {
+        let m = CostModel::new(GpuSpec::a100());
+        let j = llama7b();
+        assert!(m.decode_is_memory_bound(&j));
+        // 14 GB / 2.039 TB/s ≈ 6.87 ms per token
+        let tok = m.token_latency(&j);
+        assert!((tok - 14e9 / 2.039e12).abs() < 1e-6, "tok = {tok}");
+        // prefill with 15 tokens: compute = 15·14e9/312e12 ≈ 0.67 ms,
+        // memory ≈ 6.87 ms → memory-bound
+        let pre = m.prefill_latency(&j);
+        assert!((pre - tok).abs() < 1e-9);
+    }
+
+    #[test]
+    fn total_latency_is_sum() {
+        let m = CostModel::new(GpuSpec::a100());
+        let j = llama7b();
+        let total = m.total_latency(&j);
+        assert!((total - (m.prefill_latency(&j) + m.tokengen_latency(&j))).abs() < 1e-12);
+        // ≈ 16 × 6.87 ms ≈ 110 ms on a single A100 — exceeds the 80 ms
+        // budget, which is why Fig 7 needs aggregated capacity ≥ ~8.
+        assert!(total > j.b_total);
+    }
+
+    #[test]
+    fn capacity_scaling_shrinks_latency_linearly() {
+        let j = llama7b();
+        let m1 = CostModel::new(GpuSpec::a100().scaled(1.0));
+        let m8 = CostModel::new(GpuSpec::a100().scaled(8.0));
+        let r = m1.total_latency(&j) / m8.total_latency(&j);
+        assert!((r - 8.0).abs() < 1e-9, "r = {r}");
+        // 8 A100-equivalents bring the job under the 80 ms budget
+        assert!(m8.total_latency(&j) < j.b_total);
+    }
+
+    #[test]
+    fn prefill_becomes_compute_bound_for_long_prompts() {
+        let m = CostModel::new(GpuSpec::a100());
+        let mut j = llama7b();
+        j.n_input = 4096;
+        let compute = j.n_input as f64 * j.c_llm / m.gpu.comp_flops;
+        assert!((m.prefill_latency(&j) - compute).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batching_amortizes_memory() {
+        let m = CostModel::new(GpuSpec::a100());
+        let j = llama7b();
+        let single = m.batched_token_latency(&j, 1);
+        let b8 = m.batched_token_latency(&j, 8);
+        // Still memory-bound at batch 8 → same step latency, 8× thpt
+        assert!((single - b8).abs() < 1e-9);
+        let sat = m.saturation_batch(&j);
+        // A100: (14e9/2.039e12)·312e12/14e9 ≈ 153
+        assert!((150..=160).contains(&sat), "sat = {sat}");
+        let big = m.batched_token_latency(&j, sat * 2);
+        assert!(big > single);
+    }
+
+    #[test]
+    fn gh200_nvl2_pair_fits_budget() {
+        // Fig 6 compute node: two GH200-NVL2 superchips, aggregated.
+        let m = CostModel::new(GpuSpec::gh200_nvl2().scaled(2.0));
+        let j = llama7b();
+        let total = m.total_latency(&j);
+        assert!(total < j.b_total, "T_comp = {:.1} ms", total * 1e3);
+    }
+}

@@ -1,0 +1,104 @@
+//! HARQ abstraction: per-TB error + retransmission timing.
+//!
+//! Link adaptation targets 10% initial BLER (see `phy::link`); each
+//! retransmission succeeds independently with combining gain halving
+//! the residual error, up to `max_tx` attempts. At this SLS
+//! granularity a failed TB keeps its bytes in the RLC buffer and the
+//! grant is wasted; the retransmission opportunity arrives after
+//! `rtt_slots` (n4 timing: 4 slots at 60 kHz = 1 ms).
+
+use crate::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct HarqConfig {
+    /// Initial-transmission block error rate.
+    pub bler: f64,
+    /// Residual-error multiplier per retransmission (chase combining).
+    pub combining_gain: f64,
+    /// Maximum transmissions (1 initial + retx).
+    pub max_tx: u8,
+    /// Slots between a NACK and the retransmission grant.
+    pub rtt_slots: u32,
+}
+
+impl Default for HarqConfig {
+    fn default() -> Self {
+        Self { bler: 0.10, combining_gain: 0.5, max_tx: 4, rtt_slots: 4 }
+    }
+}
+
+impl HarqConfig {
+    /// Error probability of the `attempt`-th transmission (0-based).
+    pub fn error_prob(&self, attempt: u8) -> f64 {
+        self.bler * self.combining_gain.powi(attempt as i32)
+    }
+
+    /// Sample the outcome of the `attempt`-th transmission.
+    pub fn transmit_ok(&self, rng: &mut Rng, attempt: u8) -> bool {
+        if attempt + 1 >= self.max_tx {
+            // Last allowed attempt: RLC-level recovery guarantees
+            // delivery at this abstraction (residual loss < 1e-4 is
+            // below this simulator's resolution).
+            return true;
+        }
+        !rng.bernoulli(self.error_prob(attempt))
+    }
+
+    /// Expected number of transmissions per TB.
+    pub fn expected_tx(&self) -> f64 {
+        let mut e = 0.0;
+        let mut p_reach = 1.0; // P(attempt i happens)
+        for i in 0..self.max_tx {
+            e += p_reach;
+            let p_fail = if i + 1 >= self.max_tx { 0.0 } else { self.error_prob(i) };
+            p_reach *= p_fail;
+        }
+        e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_prob_decays_with_attempts() {
+        let h = HarqConfig::default();
+        assert!((h.error_prob(0) - 0.10).abs() < 1e-12);
+        assert!((h.error_prob(1) - 0.05).abs() < 1e-12);
+        assert!((h.error_prob(2) - 0.025).abs() < 1e-12);
+    }
+
+    #[test]
+    fn last_attempt_always_succeeds() {
+        let h = HarqConfig::default();
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            assert!(h.transmit_ok(&mut rng, h.max_tx - 1));
+        }
+    }
+
+    #[test]
+    fn empirical_initial_bler() {
+        let h = HarqConfig::default();
+        let mut rng = Rng::new(2);
+        let n = 100_000;
+        let fails = (0..n).filter(|_| !h.transmit_ok(&mut rng, 0)).count();
+        let rate = fails as f64 / n as f64;
+        assert!((rate - 0.10).abs() < 0.005, "rate = {rate}");
+    }
+
+    #[test]
+    fn expected_tx_formula() {
+        let h = HarqConfig::default();
+        // E[tx] = 1 + 0.1 + 0.1·0.05 + 0.1·0.05·0.025 ≈ 1.105
+        let e = h.expected_tx();
+        assert!((e - (1.0 + 0.1 + 0.005 + 0.000125)).abs() < 1e-9, "e = {e}");
+    }
+
+    #[test]
+    fn zero_bler_single_shot() {
+        let h = HarqConfig { bler: 0.0, ..Default::default() };
+        assert_eq!(h.expected_tx(), 1.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! L2 protocol substrate of the SLS: RLC buffering/segmentation, HARQ,
+//! and the slot-level uplink scheduler with ICC's job-aware packet
+//! prioritization.
+
+pub mod harq;
+pub mod rlc;
+pub mod scheduler;
+
+pub use harq::HarqConfig;
+pub use rlc::{RlcBuffer, Sdu, SduDelivered, SduKind};
+pub use scheduler::{GrantResult, MacConfig, SchedulingPolicy, UeMac, UlScheduler};

@@ -1,0 +1,350 @@
+//! `icc6g` — CLI for the 6G EdgeAI ICC reproduction.
+//!
+//! Subcommands:
+//!   fig4       Fig 4: analytic curves + capacities (opt. MC validation)
+//!   fig6       Fig 6: SLS satisfaction vs prompt arrival rate
+//!   fig7       Fig 7: SLS satisfaction vs compute capacity (×A100)
+//!   simulate   One SLS run with explicit parameters / TOML config
+//!   serve      Real LLM serving over the PJRT runtime (TCP)
+//!   generate   One-shot generation through the AOT artifacts
+
+use icc6g::config::{SchemeConfig, SimConfig};
+use icc6g::coordinator::{
+    capacity_from_curve, min_capacity_from_curve, sweep_arrival_rates, sweep_gpu_capacity,
+};
+use icc6g::queueing::analytic::{scheme_satisfaction, SystemParams};
+use icc6g::queueing::tandem_mc::empirical_satisfaction;
+use icc6g::queueing::{service_capacity, Scheme};
+use icc6g::sim::run_scheme;
+use icc6g::util::args::{usage, Args, OptSpec};
+use icc6g::util::bench::{cell, Table};
+
+fn main() {
+    icc6g::util::logger::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest: Vec<String> = argv.iter().skip(1).cloned().collect();
+    let code = match cmd {
+        "theory" | "fig4" => cmd_fig4(&rest),
+        "fig6" => cmd_fig6(&rest),
+        "fig7" => cmd_fig7(&rest),
+        "simulate" => cmd_simulate(&rest),
+        "serve" => cmd_serve(&rest),
+        "generate" => cmd_generate(&rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            0
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "icc6g — 6G EdgeAI ICC reproduction\n\n\
+         Usage: icc6g <command> [options]\n\n\
+         Commands:\n\
+           fig4       analytic Fig 4 curves + service capacities (+MC check)\n\
+           fig6       SLS Fig 6: satisfaction vs prompt arrival rate\n\
+           fig7       SLS Fig 7: satisfaction vs compute capacity (xA100)\n\
+           simulate   one SLS run (--scheme icc|disjoint_ran|mec ...)\n\
+           serve      real LLM serving over PJRT (--port, --artifacts)\n\
+           generate   one-shot generation via the AOT artifacts\n\
+           help       this message\n\n\
+         Run a command with --help for its options."
+    );
+}
+
+fn cmd_fig4(argv: &[String]) -> i32 {
+    let specs = [
+        OptSpec { name: "alpha", help: "target satisfaction", takes_value: true, default: Some("0.95") },
+        OptSpec { name: "mc", help: "validate with Monte-Carlo tandem sim", takes_value: false, default: None },
+        OptSpec { name: "points", help: "number of λ grid points", takes_value: true, default: Some("25") },
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = match Args::parse(argv.iter().cloned(), &specs) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if args.flag("help") {
+        print!("{}", usage("icc6g fig4", "Fig 4: theoretical job-satisfaction curves", &specs));
+        return 0;
+    }
+    let alpha = args.get_f64("alpha").unwrap().unwrap();
+    let npts = args.get_usize("points").unwrap().unwrap().max(2);
+    let p = SystemParams::paper();
+    let schemes = Scheme::fig4_schemes();
+
+    let mut t = Table::new(
+        "Fig 4 — job satisfaction vs arrival rate (μ1=900, μ2=100, b=80ms)",
+        &["lambda", schemes[0].name, schemes[1].name, schemes[2].name],
+    );
+    for i in 0..npts {
+        let lambda = 2.0 + (p.stability_limit() - 4.0) * i as f64 / (npts - 1) as f64;
+        let row: Vec<String> = std::iter::once(cell(lambda, 1))
+            .chain(schemes.iter().map(|s| cell(scheme_satisfaction(&p, s, lambda), 4)))
+            .collect();
+        t.row(&row);
+    }
+    t.print();
+    let _ = t.write_csv("fig4_curves.csv");
+
+    let mut caps = Table::new(
+        &format!("Fig 4 — service capacity at α = {alpha} (paper: joint-RAN +98% vs MEC)"),
+        &["scheme", "capacity (jobs/s)", "vs MEC"],
+    );
+    let cap = |s: &Scheme| {
+        service_capacity(
+            |l| scheme_satisfaction(&p, s, l),
+            alpha,
+            p.stability_limit() - 1e-6,
+            1e-6,
+        )
+        .lambda_star
+    };
+    let values: Vec<f64> = schemes.iter().map(cap).collect();
+    let mec = values[2];
+    for (s, v) in schemes.iter().zip(&values) {
+        caps.row(&[s.name.to_string(), cell(*v, 2), format!("{:+.1}%", (v / mec - 1.0) * 100.0)]);
+    }
+    caps.print();
+    let _ = caps.write_csv("fig4_capacity.csv");
+
+    if args.flag("mc") {
+        let mut mc = Table::new(
+            "Fig 4 — Monte-Carlo validation (60k jobs/point)",
+            &["lambda", "scheme", "analytic", "simulated", "abs_delta"],
+        );
+        for &lambda in &[20.0, 40.0, 60.0, 80.0] {
+            for s in &schemes {
+                let ana = scheme_satisfaction(&p, s, lambda);
+                let emp = empirical_satisfaction(&p, s, lambda, 60_000, 42);
+                mc.row(&[
+                    cell(lambda, 0),
+                    s.name.to_string(),
+                    cell(ana, 4),
+                    cell(emp, 4),
+                    cell((ana - emp).abs(), 4),
+                ]);
+            }
+        }
+        mc.print();
+        let _ = mc.write_csv("fig4_mc.csv");
+    }
+    0
+}
+
+fn common_sim_specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "seed", help: "master RNG seed", takes_value: true, default: Some("1") },
+        OptSpec { name: "horizon", help: "simulated seconds", takes_value: true, default: Some("20") },
+        OptSpec { name: "seeds", help: "independent replications", takes_value: true, default: Some("3") },
+        OptSpec { name: "alpha", help: "target satisfaction", takes_value: true, default: Some("0.95") },
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ]
+}
+
+fn parse_sim_base(args: &Args) -> SimConfig {
+    let mut cfg = SimConfig::table1();
+    cfg.seed = args.get_u64("seed").unwrap().unwrap();
+    cfg.horizon = args.get_f64("horizon").unwrap().unwrap();
+    cfg
+}
+
+fn cmd_fig6(argv: &[String]) -> i32 {
+    let specs = common_sim_specs();
+    let args = match Args::parse(argv.iter().cloned(), &specs) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if args.flag("help") {
+        print!("{}", usage("icc6g fig6", "Fig 6: SLS satisfaction vs arrival rate", &specs));
+        return 0;
+    }
+    let base = parse_sim_base(&args);
+    let seeds = args.get_u64("seeds").unwrap().unwrap() as u32;
+    let alpha = args.get_f64("alpha").unwrap().unwrap();
+    let rates: Vec<f64> = (1..=12).map(|i| 10.0 * i as f64).collect();
+    let schemes = SchemeConfig::fig6_schemes();
+
+    let mut t = Table::new(
+        "Fig 6 — SLS job satisfaction + avg latencies vs prompt arrival rate",
+        &["rate", "scheme", "satisfaction", "avg_comm_ms", "avg_comp_ms"],
+    );
+    let mut caps = Vec::new();
+    for scheme in schemes {
+        let pts = sweep_arrival_rates(&base, scheme, &rates, seeds);
+        for p in &pts {
+            t.row(&[
+                cell(p.x, 0),
+                scheme.name.to_string(),
+                cell(p.satisfaction, 4),
+                cell(p.avg_comm_ms, 2),
+                cell(p.avg_comp_ms, 2),
+            ]);
+        }
+        caps.push((scheme.name, capacity_from_curve(&pts, alpha)));
+    }
+    t.print();
+    let _ = t.write_csv("fig6_curves.csv");
+
+    let mut c = Table::new(
+        &format!("Fig 6 — service capacity at α = {alpha} (paper: ICC 80, MEC 50, +60%)"),
+        &["scheme", "capacity (prompts/s)", "vs MEC"],
+    );
+    let mec = caps.last().unwrap().1;
+    for (name, v) in &caps {
+        c.row(&[name.to_string(), cell(*v, 1), format!("{:+.1}%", (v / mec - 1.0) * 100.0)]);
+    }
+    c.print();
+    let _ = c.write_csv("fig6_capacity.csv");
+    0
+}
+
+fn cmd_fig7(argv: &[String]) -> i32 {
+    let specs = common_sim_specs();
+    let args = match Args::parse(argv.iter().cloned(), &specs) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if args.flag("help") {
+        print!("{}", usage("icc6g fig7", "Fig 7: SLS satisfaction vs compute capacity", &specs));
+        return 0;
+    }
+    let mut base = parse_sim_base(&args);
+    base.n_ues = 60; // paper: 60 UEs × 1 prompt/s
+    let seeds = args.get_u64("seeds").unwrap().unwrap() as u32;
+    let alpha = args.get_f64("alpha").unwrap().unwrap();
+    let capacities: Vec<f64> = (4..=16).map(|i| i as f64).collect();
+    let schemes = SchemeConfig::fig6_schemes();
+
+    let mut t = Table::new(
+        "Fig 7 — SLS satisfaction + tokens/s vs compute capacity (×A100), 60 UEs",
+        &["xA100", "scheme", "satisfaction", "avg_tokens_per_s"],
+    );
+    let mut mins = Vec::new();
+    for scheme in schemes {
+        let pts = sweep_gpu_capacity(&base, scheme, &capacities, seeds);
+        for p in &pts {
+            t.row(&[
+                cell(p.x, 0),
+                scheme.name.to_string(),
+                cell(p.satisfaction, 4),
+                cell(p.avg_tokens_per_sec, 1),
+            ]);
+        }
+        mins.push((scheme.name, min_capacity_from_curve(&pts, alpha)));
+    }
+    t.print();
+    let _ = t.write_csv("fig7_curves.csv");
+
+    let mut c = Table::new(
+        &format!("Fig 7 — min compute for α = {alpha} (paper: ICC 8 vs disjoint-RAN 11, −27%)"),
+        &["scheme", "min xA100"],
+    );
+    for (name, v) in &mins {
+        c.row(&[
+            name.to_string(),
+            v.map(|x| cell(x, 1)).unwrap_or_else(|| "not reached".into()),
+        ]);
+    }
+    c.print();
+    let _ = c.write_csv("fig7_capacity.csv");
+    0
+}
+
+fn cmd_simulate(argv: &[String]) -> i32 {
+    let mut specs = common_sim_specs();
+    specs.extend([
+        OptSpec { name: "scheme", help: "icc | disjoint_ran | mec", takes_value: true, default: Some("icc") },
+        OptSpec { name: "ues", help: "number of UEs", takes_value: true, default: Some("60") },
+        OptSpec { name: "config", help: "TOML config file", takes_value: true, default: None },
+    ]);
+    let args = match Args::parse(argv.iter().cloned(), &specs) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if args.flag("help") {
+        print!("{}", usage("icc6g simulate", "One SLS run", &specs));
+        return 0;
+    }
+    let mut cfg = parse_sim_base(&args);
+    cfg.n_ues = args.get_u64("ues").unwrap().unwrap() as u32;
+    if let Some(path) = args.get("config") {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("cannot read {path}: {e}");
+                return 2;
+            }
+        };
+        let doc = match icc6g::util::tomlmini::Document::parse(&text) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        if let Err(e) = cfg.apply_toml(&doc) {
+            eprintln!("{e}");
+            return 2;
+        }
+    }
+    let scheme = match args.get("scheme").unwrap() {
+        "icc" => SchemeConfig::icc(),
+        "disjoint_ran" => SchemeConfig::disjoint_ran(),
+        "mec" => SchemeConfig::mec(),
+        other => {
+            eprintln!("unknown scheme '{other}'");
+            return 2;
+        }
+    };
+    let seed = cfg.seed;
+    let report = run_scheme(&cfg, scheme, seed);
+    println!("scheme       : {}", scheme.name);
+    println!("offered rate : {:.1} prompts/s", cfg.offered_rate());
+    println!("jobs         : {} ({} dropped)", report.n_jobs, report.n_dropped);
+    println!("satisfaction : {:.4}", report.satisfaction_rate());
+    println!("avg comm     : {:.2} ms", report.comm.mean() * 1e3);
+    println!("avg comp     : {:.2} ms", report.comp.mean() * 1e3);
+    println!("avg e2e      : {:.2} ms", report.e2e.mean() * 1e3);
+    println!("avg tokens/s : {:.1}", report.tokens_per_sec.mean());
+    0
+}
+
+fn cmd_serve(argv: &[String]) -> i32 {
+    match icc6g::server::cli_serve(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("serve failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_generate(argv: &[String]) -> i32 {
+    match icc6g::runtime::cli_generate(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("generate failed: {e:#}");
+            1
+        }
+    }
+}

@@ -1,0 +1,221 @@
+//! Simulation metrics: per-job outcome records and aggregated reports
+//! (satisfaction rate, latency breakdowns, tokens/s — the quantities
+//! plotted in Figs 6–7).
+
+use crate::util::stats::Welford;
+
+/// Terminal state of one translation job.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum JobFate {
+    /// Completed; satisfaction judged by the latency-management policy.
+    Completed,
+    /// Dropped at the computing node (hopeless deadline).
+    Dropped,
+    /// Still in flight when the simulation horizon hit (ignored).
+    InFlight,
+}
+
+/// Full per-job record produced by the SLS.
+#[derive(Debug, Clone, Copy)]
+pub struct JobOutcome {
+    pub job_id: u64,
+    /// Generation time at the UE.
+    pub t_gen: f64,
+    /// UE→BS communication latency (uplink queueing + transmission).
+    pub t_comm: f64,
+    /// Constant wireline latency BS→node.
+    pub t_wireline: f64,
+    /// Queueing delay at the computing node.
+    pub t_queue: f64,
+    /// LLM service time.
+    pub t_service: f64,
+    /// Total tokens (input + output) — for the tokens/s bar in Fig 7.
+    pub tokens: u32,
+    pub fate: JobFate,
+}
+
+impl JobOutcome {
+    /// Computing latency as the paper measures it (queue + service).
+    pub fn t_comp(&self) -> f64 {
+        self.t_queue + self.t_service
+    }
+
+    /// End-to-end latency (Eq 1).
+    pub fn e2e(&self) -> f64 {
+        self.t_comm + self.t_wireline + self.t_comp()
+    }
+
+    /// Tokens per second of this job (Fig 7 bar metric).
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens as f64 / self.e2e()
+    }
+}
+
+/// Latency-management evaluation (paper §III-A definitions).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LatencyManagement {
+    /// Satisfied iff E2E ≤ b_total.
+    Joint { b_total: f64 },
+    /// Satisfied iff E2E ≤ b_total AND comm (incl. wireline) ≤ b_comm
+    /// AND comp ≤ b_comp.
+    Disjoint { b_total: f64, b_comm: f64, b_comp: f64 },
+}
+
+impl LatencyManagement {
+    pub fn b_total(&self) -> f64 {
+        match *self {
+            LatencyManagement::Joint { b_total } => b_total,
+            LatencyManagement::Disjoint { b_total, .. } => b_total,
+        }
+    }
+
+    /// Definition 1: is this completed job satisfied?
+    pub fn satisfied(&self, j: &JobOutcome) -> bool {
+        if j.fate != JobFate::Completed {
+            return false;
+        }
+        match *self {
+            LatencyManagement::Joint { b_total } => j.e2e() <= b_total,
+            LatencyManagement::Disjoint { b_total, b_comm, b_comp } => {
+                j.e2e() <= b_total
+                    && j.t_comm + j.t_wireline <= b_comm
+                    && j.t_comp() <= b_comp
+            }
+        }
+    }
+}
+
+/// Aggregated simulation report.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub n_jobs: u64,
+    pub n_satisfied: u64,
+    pub n_dropped: u64,
+    pub comm: Welford,
+    pub comp: Welford,
+    pub e2e: Welford,
+    pub tokens_per_sec: Welford,
+}
+
+impl SimReport {
+    pub fn from_outcomes(outcomes: &[JobOutcome], policy: &LatencyManagement) -> Self {
+        let mut r = Self {
+            n_jobs: 0,
+            n_satisfied: 0,
+            n_dropped: 0,
+            comm: Welford::new(),
+            comp: Welford::new(),
+            e2e: Welford::new(),
+            tokens_per_sec: Welford::new(),
+        };
+        for j in outcomes {
+            match j.fate {
+                JobFate::InFlight => continue,
+                JobFate::Dropped => {
+                    r.n_jobs += 1;
+                    r.n_dropped += 1;
+                    // comm latency still observed for dropped jobs
+                    r.comm.push(j.t_comm);
+                }
+                JobFate::Completed => {
+                    r.n_jobs += 1;
+                    if policy.satisfied(j) {
+                        r.n_satisfied += 1;
+                    }
+                    r.comm.push(j.t_comm);
+                    r.comp.push(j.t_comp());
+                    r.e2e.push(j.e2e());
+                    r.tokens_per_sec.push(j.tokens_per_sec());
+                }
+            }
+        }
+        r
+    }
+
+    /// Fraction of (non-in-flight) jobs satisfied — the Y axis of
+    /// Figs 4/6/7.
+    pub fn satisfaction_rate(&self) -> f64 {
+        if self.n_jobs == 0 {
+            f64::NAN
+        } else {
+            self.n_satisfied as f64 / self.n_jobs as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn done(t_comm: f64, t_queue: f64, t_service: f64) -> JobOutcome {
+        JobOutcome {
+            job_id: 0,
+            t_gen: 0.0,
+            t_comm,
+            t_wireline: 0.005,
+            t_queue,
+            t_service,
+            tokens: 30,
+            fate: JobFate::Completed,
+        }
+    }
+
+    #[test]
+    fn e2e_composition() {
+        let j = done(0.010, 0.020, 0.030);
+        assert!((j.e2e() - 0.065).abs() < 1e-12);
+        assert!((j.t_comp() - 0.050).abs() < 1e-12);
+        assert!((j.tokens_per_sec() - 30.0 / 0.065).abs() < 1e-9);
+    }
+
+    #[test]
+    fn joint_satisfaction_boundary() {
+        let p = LatencyManagement::Joint { b_total: 0.080 };
+        assert!(p.satisfied(&done(0.010, 0.030, 0.035))); // 80 ms exactly
+        assert!(!p.satisfied(&done(0.010, 0.031, 0.035)));
+    }
+
+    #[test]
+    fn disjoint_requires_both_budgets() {
+        let p = LatencyManagement::Disjoint { b_total: 0.080, b_comm: 0.024, b_comp: 0.056 };
+        // comm = 10+5 = 15 <= 24, comp = 50 <= 56, e2e = 65 <= 80 → ok
+        assert!(p.satisfied(&done(0.010, 0.020, 0.030)));
+        // comm budget violated even though e2e fine
+        assert!(!p.satisfied(&done(0.022, 0.010, 0.010)));
+        // comp budget violated
+        assert!(!p.satisfied(&done(0.005, 0.030, 0.030)));
+    }
+
+    #[test]
+    fn joint_dominates_disjoint() {
+        let joint = LatencyManagement::Joint { b_total: 0.080 };
+        let dis = LatencyManagement::Disjoint { b_total: 0.080, b_comm: 0.024, b_comp: 0.056 };
+        // a job satisfying disjoint always satisfies joint
+        for j in [done(0.01, 0.02, 0.03), done(0.018, 0.03, 0.025), done(0.001, 0.05, 0.005)] {
+            if dis.satisfied(&j) {
+                assert!(joint.satisfied(&j));
+            }
+        }
+    }
+
+    #[test]
+    fn dropped_jobs_count_against_satisfaction() {
+        let mut j = done(0.01, 0.0, 0.0);
+        j.fate = JobFate::Dropped;
+        let outcomes = vec![j, done(0.01, 0.02, 0.03)];
+        let r = SimReport::from_outcomes(&outcomes, &LatencyManagement::Joint { b_total: 0.080 });
+        assert_eq!(r.n_jobs, 2);
+        assert_eq!(r.n_dropped, 1);
+        assert_eq!(r.n_satisfied, 1);
+        assert!((r.satisfaction_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn in_flight_ignored() {
+        let mut j = done(0.01, 0.0, 0.0);
+        j.fate = JobFate::InFlight;
+        let r = SimReport::from_outcomes(&[j], &LatencyManagement::Joint { b_total: 0.080 });
+        assert_eq!(r.n_jobs, 0);
+        assert!(r.satisfaction_rate().is_nan());
+    }
+}

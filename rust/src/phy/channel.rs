@@ -1,0 +1,231 @@
+//! Urban-macrocell channel model (3GPP TR 38.901 §7.4.1/7.4.2 UMa).
+//!
+//! Implements what the SLS needs for "certain channel realization"
+//! (paper §IV-A): UMa LOS probability, LOS/NLOS pathloss, log-normal
+//! shadowing (σ = 4 dB LOS / 6 dB NLOS), and per-slot fast fading as a
+//! Rayleigh/Rician SINR perturbation. Distances in meters, frequencies
+//! in Hz, gains in dB.
+
+use crate::rng::Rng;
+
+/// Antenna/geometry constants for the UMa scenario.
+pub const BS_HEIGHT_M: f64 = 25.0;
+pub const UT_HEIGHT_M: f64 = 1.5;
+const C: f64 = 299_792_458.0;
+
+/// A UE's (planar) position relative to the gNB at the origin.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Position {
+    pub x: f64,
+    pub y: f64,
+}
+
+impl Position {
+    pub fn dist_2d(&self) -> f64 {
+        (self.x * self.x + self.y * self.y).sqrt()
+    }
+
+    pub fn dist_3d(&self) -> f64 {
+        let dh = BS_HEIGHT_M - UT_HEIGHT_M;
+        (self.dist_2d().powi(2) + dh * dh).sqrt()
+    }
+
+    /// Uniform placement in an annulus [r_min, r_max] around the gNB.
+    pub fn random_in_cell(rng: &mut Rng, r_min: f64, r_max: f64) -> Self {
+        // Uniform over area: r = sqrt(U·(r_max²−r_min²) + r_min²)
+        let u = rng.f64();
+        let r = (u * (r_max * r_max - r_min * r_min) + r_min * r_min).sqrt();
+        let theta = rng.range(0.0, 2.0 * std::f64::consts::PI);
+        Self { x: r * theta.cos(), y: r * theta.sin() }
+    }
+}
+
+/// UMa LOS probability (TR 38.901 Table 7.4.2-1, h_UT ≤ 13 m).
+pub fn los_probability(d2d: f64) -> f64 {
+    if d2d <= 18.0 {
+        1.0
+    } else {
+        (18.0 / d2d + (-d2d / 63.0).exp() * (1.0 - 18.0 / d2d)).clamp(0.0, 1.0)
+    }
+}
+
+/// Breakpoint distance d'_BP = 4 h'_BS h'_UT f / c (effective heights:
+/// h − 1 m for UMa).
+fn breakpoint_distance(freq_hz: f64) -> f64 {
+    4.0 * (BS_HEIGHT_M - 1.0) * (UT_HEIGHT_M - 1.0).max(0.1) * freq_hz / C
+}
+
+/// UMa LOS pathloss in dB (TR 38.901 Table 7.4.1-1).
+pub fn pathloss_los_db(d3d: f64, freq_hz: f64) -> f64 {
+    let fc_ghz = freq_hz / 1e9;
+    let d2d = (d3d.powi(2) - (BS_HEIGHT_M - UT_HEIGHT_M).powi(2)).max(1.0).sqrt();
+    let dbp = breakpoint_distance(freq_hz);
+    if d2d <= dbp {
+        28.0 + 22.0 * d3d.max(1.0).log10() + 20.0 * fc_ghz.log10()
+    } else {
+        28.0 + 40.0 * d3d.max(1.0).log10() + 20.0 * fc_ghz.log10()
+            - 9.0 * (dbp.powi(2) + (BS_HEIGHT_M - UT_HEIGHT_M).powi(2)).log10()
+    }
+}
+
+/// UMa NLOS pathloss in dB: max(PL_LOS, PL'_NLOS).
+pub fn pathloss_nlos_db(d3d: f64, freq_hz: f64) -> f64 {
+    let fc_ghz = freq_hz / 1e9;
+    let pl_nlos = 13.54 + 39.08 * d3d.max(1.0).log10() + 20.0 * fc_ghz.log10()
+        - 0.6 * (UT_HEIGHT_M - 1.5);
+    pathloss_los_db(d3d, freq_hz).max(pl_nlos)
+}
+
+/// Shadow-fading standard deviations (TR 38.901 Table 7.4.1-1).
+pub const SHADOW_STD_LOS_DB: f64 = 4.0;
+pub const SHADOW_STD_NLOS_DB: f64 = 6.0;
+
+/// A UE's large-scale channel state (drawn once at drop time).
+#[derive(Debug, Clone, Copy)]
+pub struct LargeScale {
+    pub pos: Position,
+    pub los: bool,
+    pub shadow_db: f64,
+}
+
+impl LargeScale {
+    /// Drop a UE uniformly in the cell and draw LOS + shadowing.
+    pub fn drop(rng: &mut Rng, r_min: f64, r_max: f64) -> Self {
+        let pos = Position::random_in_cell(rng, r_min, r_max);
+        let los = rng.bernoulli(los_probability(pos.dist_2d()));
+        let sigma = if los { SHADOW_STD_LOS_DB } else { SHADOW_STD_NLOS_DB };
+        Self { pos, los, shadow_db: rng.normal(0.0, sigma) }
+    }
+
+    /// Total large-scale loss (pathloss + shadowing) in dB.
+    pub fn coupling_loss_db(&self, freq_hz: f64) -> f64 {
+        let d3d = self.pos.dist_3d();
+        let pl = if self.los {
+            pathloss_los_db(d3d, freq_hz)
+        } else {
+            pathloss_nlos_db(d3d, freq_hz)
+        };
+        pl + self.shadow_db
+    }
+}
+
+/// Per-slot fast-fading power gain (linear). LOS → Rician (K = 9 dB),
+/// NLOS → Rayleigh. Mean power is normalized to 1.
+pub fn fast_fading_gain(rng: &mut Rng, los: bool) -> f64 {
+    if los {
+        // Rician with K = 9 dB: dominant + scattered component.
+        let k = 10f64.powf(0.9);
+        let sigma = (1.0 / (2.0 * (k + 1.0))).sqrt();
+        let mean = (k / (k + 1.0)).sqrt();
+        let i = mean + sigma * rng.gauss();
+        let q = sigma * rng.gauss();
+        (i * i + q * q).max(1e-6)
+    } else {
+        // Rayleigh: |h|² ~ Exp(1).
+        rng.exp(1.0).max(1e-6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn los_probability_monotone_decreasing() {
+        let mut prev = 1.0;
+        for d in [1.0, 18.0, 50.0, 100.0, 200.0, 500.0] {
+            let p = los_probability(d);
+            assert!((0.0..=1.0).contains(&p));
+            assert!(p <= prev + 1e-12, "d={d}");
+            prev = p;
+        }
+        assert_eq!(los_probability(10.0), 1.0);
+        assert!(los_probability(500.0) < 0.1);
+    }
+
+    #[test]
+    fn pathloss_increases_with_distance() {
+        let f = 3.7e9;
+        let mut prev = 0.0;
+        for d in [30.0, 60.0, 120.0, 240.0, 480.0] {
+            let pl = pathloss_los_db(d, f);
+            assert!(pl > prev, "d={d}: {pl}");
+            prev = pl;
+        }
+    }
+
+    #[test]
+    fn nlos_never_below_los() {
+        let f = 3.7e9;
+        for d in [30.0, 100.0, 300.0, 800.0] {
+            assert!(pathloss_nlos_db(d, f) >= pathloss_los_db(d, f) - 1e-9);
+        }
+    }
+
+    #[test]
+    fn pathloss_sane_at_table1_geometry() {
+        // 3.7 GHz, 150 m: expect roughly 90–125 dB coupling loss.
+        let pl = pathloss_los_db(150.0, 3.7e9);
+        assert!((85.0..=115.0).contains(&pl), "LOS PL = {pl}");
+        let pn = pathloss_nlos_db(150.0, 3.7e9);
+        assert!((100.0..=135.0).contains(&pn), "NLOS PL = {pn}");
+    }
+
+    #[test]
+    fn annulus_placement_respects_bounds() {
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let p = Position::random_in_cell(&mut rng, 35.0, 300.0);
+            let d = p.dist_2d();
+            assert!((35.0..=300.0).contains(&d), "d = {d}");
+        }
+    }
+
+    #[test]
+    fn annulus_placement_uniform_over_area() {
+        // Half-area radius of [35, 300]: r_h = sqrt((35²+300²)/2) ≈ 213.6
+        let mut rng = Rng::new(2);
+        let n = 20_000;
+        let r_half = ((35.0f64.powi(2) + 300.0f64.powi(2)) / 2.0).sqrt();
+        let inside = (0..n)
+            .filter(|_| Position::random_in_cell(&mut rng, 35.0, 300.0).dist_2d() < r_half)
+            .count();
+        let frac = inside as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.02, "frac = {frac}");
+    }
+
+    #[test]
+    fn fast_fading_mean_power_unit() {
+        let mut rng = Rng::new(3);
+        for los in [true, false] {
+            let n = 100_000;
+            let mean: f64 =
+                (0..n).map(|_| fast_fading_gain(&mut rng, los)).sum::<f64>() / n as f64;
+            assert!((mean - 1.0).abs() < 0.03, "los={los}: mean = {mean}");
+        }
+    }
+
+    #[test]
+    fn rician_has_lower_variance_than_rayleigh() {
+        let mut rng = Rng::new(4);
+        let var = |los: bool, rng: &mut Rng| {
+            let n = 50_000;
+            let xs: Vec<f64> = (0..n).map(|_| fast_fading_gain(rng, los)).collect();
+            let m = xs.iter().sum::<f64>() / n as f64;
+            xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / n as f64
+        };
+        assert!(var(true, &mut rng) < var(false, &mut rng));
+    }
+
+    #[test]
+    fn coupling_loss_includes_shadowing() {
+        let mut rng = Rng::new(5);
+        let ls = LargeScale::drop(&mut rng, 35.0, 300.0);
+        let base = if ls.los {
+            pathloss_los_db(ls.pos.dist_3d(), 3.7e9)
+        } else {
+            pathloss_nlos_db(ls.pos.dist_3d(), 3.7e9)
+        };
+        assert!((ls.coupling_loss_db(3.7e9) - base - ls.shadow_db).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,220 @@
+//! Uplink link adaptation: power control, SINR, CQI/MCS, transport
+//! block sizing.
+//!
+//! Single-cell (noise-limited) uplink as in the paper's one-gNB setup;
+//! inter-cell interference is absorbed into a fixed margin. The
+//! SINR→efficiency mapping uses the 3GPP CQI table (TS 38.214 Table
+//! 5.2.2.1-3, 256QAM) with thresholds from the standard ~2 dB/CQI
+//! spacing; TBS is efficiency × data REs (a faithful simplification of
+//! the 38.214 §5.1.3.2 procedure at this granularity).
+
+use super::channel::LargeScale;
+use super::numerology::Carrier;
+
+/// UL power-control parameters (TS 38.213 §7.1 open-loop).
+#[derive(Debug, Clone, Copy)]
+pub struct PowerControl {
+    /// Max UE transmit power, dBm (23 dBm = Power Class 3).
+    pub p_max_dbm: f64,
+    /// Target received power per PRB, dBm.
+    pub p0_dbm: f64,
+    /// Fractional pathloss-compensation factor α.
+    pub alpha: f64,
+}
+
+impl Default for PowerControl {
+    fn default() -> Self {
+        Self { p_max_dbm: 23.0, p0_dbm: -80.0, alpha: 0.9 }
+    }
+}
+
+/// Receiver-side constants.
+#[derive(Debug, Clone, Copy)]
+pub struct Receiver {
+    /// gNB noise figure, dB.
+    pub noise_figure_db: f64,
+    /// Fixed interference-over-thermal margin, dB (single-cell sim
+    /// absorbing neighbor-cell interference).
+    pub interference_margin_db: f64,
+}
+
+impl Default for Receiver {
+    fn default() -> Self {
+        Self { noise_figure_db: 5.0, interference_margin_db: 2.0 }
+    }
+}
+
+const THERMAL_NOISE_DBM_PER_HZ: f64 = -174.0;
+
+/// Per-PRB uplink SINR (dB) for a UE with the given large-scale state,
+/// before fast fading.
+pub fn mean_sinr_db(
+    ls: &LargeScale,
+    carrier: &Carrier,
+    pc: &PowerControl,
+    rx: &Receiver,
+    n_prb_granted: u32,
+) -> f64 {
+    let cl = ls.coupling_loss_db(carrier.freq_hz);
+    // Open-loop PC: P = min(Pmax, P0 + 10log10(M) + α·PL)
+    let p_tx = pc
+        .p_max_dbm
+        .min(pc.p0_dbm + 10.0 * (n_prb_granted.max(1) as f64).log10() + pc.alpha * cl);
+    // Per-PRB received power
+    let p_rx_prb = p_tx - 10.0 * (n_prb_granted.max(1) as f64).log10() - cl;
+    let prb_bw = carrier.numerology.scs_hz() * 12.0;
+    let noise = THERMAL_NOISE_DBM_PER_HZ
+        + 10.0 * prb_bw.log10()
+        + rx.noise_figure_db
+        + rx.interference_margin_db;
+    p_rx_prb - noise
+}
+
+/// CQI table entry: (SINR threshold dB, spectral efficiency b/s/Hz).
+/// Efficiencies from TS 38.214 Table 5.2.2.1-3 (up to 256QAM, 7.4063);
+/// thresholds follow the standard link-level mapping (~1.9 dB apart).
+const CQI_TABLE: [(f64, f64); 15] = [
+    (-6.7, 0.1523),
+    (-4.7, 0.3770),
+    (-2.3, 0.8770),
+    (0.2, 1.4766),
+    (2.4, 1.9141),
+    (4.3, 2.4063),
+    (5.9, 2.7305),
+    (8.1, 3.3223),
+    (10.3, 3.9023),
+    (11.7, 4.5234),
+    (14.1, 5.1152),
+    (16.3, 5.5547),
+    (18.7, 6.2266),
+    (21.0, 6.9141),
+    (22.7, 7.4063),
+];
+
+/// Map SINR (dB) to CQI index (0 = out of range / lowest).
+pub fn sinr_to_cqi(sinr_db: f64) -> u8 {
+    let mut cqi = 0u8;
+    for (i, (thr, _)) in CQI_TABLE.iter().enumerate() {
+        if sinr_db >= *thr {
+            cqi = (i + 1) as u8;
+        }
+    }
+    cqi
+}
+
+/// Spectral efficiency (b/s/Hz) for a CQI index (0 → unusable).
+pub fn cqi_efficiency(cqi: u8) -> f64 {
+    if cqi == 0 || cqi as usize > CQI_TABLE.len() {
+        0.0
+    } else {
+        CQI_TABLE[cqi as usize - 1].1
+    }
+}
+
+/// Transport block size in **bytes** for a grant of `n_prb` PRBs in one
+/// slot at the given CQI.
+pub fn tbs_bytes(carrier: &Carrier, cqi: u8, n_prb: u32) -> u32 {
+    let re = carrier.data_re_per_prb_slot() as f64 * n_prb as f64;
+    let bits = re * cqi_efficiency(cqi);
+    (bits / 8.0).floor() as u32
+}
+
+/// Initial-transmission BLER at the operating point. Link adaptation
+/// targets 10% (TS 38.521 conformance assumption).
+pub const TARGET_BLER: f64 = 0.10;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::phy::channel::{LargeScale, Position};
+    use crate::rng::Rng;
+
+    fn ls_at(d: f64, los: bool) -> LargeScale {
+        LargeScale { pos: Position { x: d, y: 0.0 }, los, shadow_db: 0.0 }
+    }
+
+    #[test]
+    fn cqi_table_monotone() {
+        let mut prev_thr = f64::NEG_INFINITY;
+        let mut prev_eff = 0.0;
+        for (thr, eff) in CQI_TABLE {
+            assert!(thr > prev_thr);
+            assert!(eff > prev_eff);
+            prev_thr = thr;
+            prev_eff = eff;
+        }
+    }
+
+    #[test]
+    fn sinr_to_cqi_boundaries() {
+        assert_eq!(sinr_to_cqi(-10.0), 0);
+        assert_eq!(sinr_to_cqi(-6.7), 1);
+        assert_eq!(sinr_to_cqi(0.0), 3);
+        assert_eq!(sinr_to_cqi(23.0), 15);
+        assert_eq!(sinr_to_cqi(100.0), 15);
+    }
+
+    #[test]
+    fn cqi_efficiency_range() {
+        assert_eq!(cqi_efficiency(0), 0.0);
+        assert!((cqi_efficiency(15) - 7.4063).abs() < 1e-9);
+        assert_eq!(cqi_efficiency(16), 0.0); // out of range treated as 0
+    }
+
+    #[test]
+    fn near_ue_gets_high_cqi_far_ue_low() {
+        let c = Carrier::table1();
+        let pc = PowerControl::default();
+        let rx = Receiver::default();
+        let near = mean_sinr_db(&ls_at(50.0, true), &c, &pc, &rx, 10);
+        let far = mean_sinr_db(&ls_at(290.0, false), &c, &pc, &rx, 10);
+        assert!(near > far, "near {near} vs far {far}");
+        assert!(sinr_to_cqi(near) >= 10, "near SINR {near} → CQI too low");
+        assert!(sinr_to_cqi(far) <= 13, "far SINR {far}");
+    }
+
+    #[test]
+    fn tbs_scales_with_prbs_and_cqi() {
+        let c = Carrier::table1();
+        let t1 = tbs_bytes(&c, 10, 1);
+        let t10 = tbs_bytes(&c, 10, 10);
+        assert!((t10 as f64 / t1 as f64 - 10.0).abs() < 0.2);
+        assert!(tbs_bytes(&c, 15, 10) > tbs_bytes(&c, 5, 10));
+        assert_eq!(tbs_bytes(&c, 0, 10), 0);
+    }
+
+    #[test]
+    fn tbs_magnitude_sane() {
+        // CQI 15, 135 PRB, one 0.25 ms slot: 135·144·7.4063/8 ≈ 18 kB
+        // → ≈ 576 Mb/s instantaneous — the right order for 100 MHz UL.
+        let c = Carrier::table1();
+        let tbs = tbs_bytes(&c, 15, 135);
+        assert!((15_000..=20_000).contains(&tbs), "tbs = {tbs}");
+    }
+
+    #[test]
+    fn power_control_caps_at_pmax() {
+        // At extreme coupling loss the UE transmits at Pmax and SINR
+        // degrades 1:1 with further loss.
+        let c = Carrier::table1();
+        let pc = PowerControl::default();
+        let rx = Receiver::default();
+        let s1 = mean_sinr_db(&ls_at(250.0, false), &c, &pc, &rx, 50);
+        let s2 = mean_sinr_db(&ls_at(400.0, false), &c, &pc, &rx, 50);
+        assert!(s1 - s2 > 5.0, "{s1} vs {s2}");
+    }
+
+    #[test]
+    fn cell_edge_still_connectable_with_few_prbs() {
+        // Scheduler must be able to serve the worst drop with a small
+        // grant: 300 m NLOS + bad shadowing at 1 PRB must yield CQI ≥ 1.
+        let c = Carrier::table1();
+        let pc = PowerControl::default();
+        let rx = Receiver::default();
+        let mut worst = LargeScale::drop(&mut Rng::new(1), 35.0, 300.0);
+        worst.shadow_db = 12.0; // 2σ NLOS
+        let ls = LargeScale { pos: Position { x: 300.0, y: 0.0 }, ..worst };
+        let sinr = mean_sinr_db(&ls, &c, &pc, &rx, 1);
+        assert!(sinr_to_cqi(sinr) >= 1, "SINR {sinr} dB unusable at edge");
+    }
+}

@@ -1,0 +1,15 @@
+//! 5G physical-layer substrate of the SLS (paper §IV-A "implemented a
+//! system level simulator … using certain channel realization and
+//! protocols").
+//!
+//! * [`numerology`] — SCS/slot/PRB grid (Table I: 60 kHz, 100 MHz).
+//! * [`channel`] — TR 38.901 UMa pathloss, LOS, shadowing, fast fading.
+//! * [`link`] — UL power control, SINR, CQI/MCS mapping, TBS.
+
+pub mod channel;
+pub mod link;
+pub mod numerology;
+
+pub use channel::{LargeScale, Position};
+pub use link::{PowerControl, Receiver};
+pub use numerology::{Carrier, Numerology};

@@ -1,0 +1,139 @@
+//! 5G NR numerology: subcarrier spacing, slot timing, PRB grid.
+//!
+//! Table I uses 60 kHz SCS (μ = 2) over a 100 MHz carrier at 3.7 GHz —
+//! FR1. Per TS 38.101-1 Table 5.3.2-1, a 100 MHz / 60 kHz carrier has
+//! N_RB = 135 resource blocks; a slot at μ = 2 lasts 0.25 ms.
+
+/// NR numerology μ ∈ {0..4}: SCS = 15·2^μ kHz.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Numerology {
+    pub mu: u8,
+}
+
+impl Numerology {
+    pub fn new(mu: u8) -> Self {
+        assert!(mu <= 4, "NR defines μ in 0..=4");
+        Self { mu }
+    }
+
+    /// Table I: 60 kHz SCS.
+    pub fn scs60() -> Self {
+        Self::new(2)
+    }
+
+    /// Subcarrier spacing in Hz.
+    pub fn scs_hz(&self) -> f64 {
+        15_000.0 * (1 << self.mu) as f64
+    }
+
+    /// Slot duration in seconds (1 ms / 2^μ).
+    pub fn slot_duration(&self) -> f64 {
+        1e-3 / (1 << self.mu) as f64
+    }
+
+    /// Slots per subframe (1 ms).
+    pub fn slots_per_subframe(&self) -> u32 {
+        1 << self.mu
+    }
+}
+
+/// OFDM symbols per slot (normal cyclic prefix).
+pub const SYMBOLS_PER_SLOT: u32 = 14;
+/// Subcarriers per PRB.
+pub const SUBCARRIERS_PER_PRB: u32 = 12;
+
+/// Carrier configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Carrier {
+    pub numerology: Numerology,
+    /// Carrier frequency in Hz (Table I: 3.7 GHz).
+    pub freq_hz: f64,
+    /// Channel bandwidth in Hz (Table I: 100 MHz).
+    pub bandwidth_hz: f64,
+    /// Number of usable PRBs.
+    pub n_prb: u32,
+}
+
+impl Carrier {
+    /// Table I carrier: 3.7 GHz, 100 MHz, 60 kHz SCS → 135 PRBs
+    /// (TS 38.101-1 Table 5.3.2-1).
+    pub fn table1() -> Self {
+        Self {
+            numerology: Numerology::scs60(),
+            freq_hz: 3.7e9,
+            bandwidth_hz: 100e6,
+            n_prb: 135,
+        }
+    }
+
+    /// Approximate usable PRBs for a given BW/SCS (guard-band aware
+    /// values for the common FR1 cases, else a 0.95-utilization
+    /// approximation). Used for non-Table-I configs.
+    pub fn derive_n_prb(bandwidth_hz: f64, num: Numerology) -> u32 {
+        let known = [
+            // (bw_mhz, mu, n_rb) — TS 38.101-1 Table 5.3.2-1 excerpts
+            (100.0, 1, 273u32),
+            (100.0, 2, 135),
+            (50.0, 2, 66),
+            (40.0, 1, 106),
+            (20.0, 0, 106),
+            (20.0, 1, 51),
+        ];
+        let bw_mhz = bandwidth_hz / 1e6;
+        for (b, mu, n) in known {
+            if (bw_mhz - b).abs() < 0.5 && num.mu == mu {
+                return n;
+            }
+        }
+        let prb_bw = num.scs_hz() * SUBCARRIERS_PER_PRB as f64;
+        ((bandwidth_hz * 0.95) / prb_bw) as u32
+    }
+
+    /// Data resource elements per PRB per slot after control/DMRS
+    /// overhead (~2 of 14 symbols for UL DMRS + PUCCH).
+    pub fn data_re_per_prb_slot(&self) -> u32 {
+        SUBCARRIERS_PER_PRB * (SYMBOLS_PER_SLOT - 2)
+    }
+
+    /// Slot duration shortcut.
+    pub fn slot_duration(&self) -> f64 {
+        self.numerology.slot_duration()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scs60_timing() {
+        let n = Numerology::scs60();
+        assert_eq!(n.scs_hz(), 60_000.0);
+        assert_eq!(n.slot_duration(), 0.25e-3);
+        assert_eq!(n.slots_per_subframe(), 4);
+    }
+
+    #[test]
+    fn table1_carrier() {
+        let c = Carrier::table1();
+        assert_eq!(c.n_prb, 135);
+        assert_eq!(c.freq_hz, 3.7e9);
+        assert_eq!(c.slot_duration(), 0.25e-3);
+        assert_eq!(c.data_re_per_prb_slot(), 144);
+    }
+
+    #[test]
+    fn derive_known_and_approx() {
+        assert_eq!(Carrier::derive_n_prb(100e6, Numerology::new(2)), 135);
+        assert_eq!(Carrier::derive_n_prb(100e6, Numerology::new(1)), 273);
+        // Unknown combo falls back near 0.95 utilization
+        let n = Carrier::derive_n_prb(30e6, Numerology::new(2));
+        assert!((35..=41).contains(&n), "n = {n}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn mu_out_of_range() {
+        Numerology::new(5);
+    }
+}

@@ -1,0 +1,307 @@
+//! Closed-form job-satisfaction probabilities (paper Eqs 3–6).
+//!
+//! In steady state the tagged job's air-interface sojourn `X` and
+//! computing sojourn `Y` are independent exponentials (Lemma 1 /
+//! Burke's theorem) with rates `a = μ₁ − λ` and `b = μ₂ − λ`. With
+//! `t = b_total − t_wireline`:
+//!
+//! * **Joint** (Eq 3): `P(X + Y ≤ t)` — the hypoexponential CDF.
+//! * **Disjoint** (Eq 4): `P(X + Y ≤ t, X ≤ c₁, Y ≤ c₂)` where
+//!   `c₁ = b_comm − t_wireline` (the communication budget covers the
+//!   wireline hop) and `c₂ = b_comp`. For the paper's parameterization
+//!   (`b_comm + b_comp = b_total`) the corner constraint implies the sum
+//!   constraint and the probability factorizes; the general piecewise
+//!   closed form is implemented (and cross-checked numerically) anyway.
+
+use super::{Policy, Scheme};
+
+/// Tandem-network parameters (paper §III-B uses μ₁=900, μ₂=100 jobs/s,
+/// b_total = 80 ms).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SystemParams {
+    /// Air-interface service rate (jobs/s).
+    pub mu1: f64,
+    /// Computing service rate (jobs/s).
+    pub mu2: f64,
+    /// Total end-to-end latency budget (s).
+    pub b_total: f64,
+}
+
+impl SystemParams {
+    /// The paper's §III-B configuration.
+    pub fn paper() -> Self {
+        Self { mu1: 900.0, mu2: 100.0, b_total: 0.080 }
+    }
+
+    /// Largest λ for which both queues are stable.
+    pub fn stability_limit(&self) -> f64 {
+        self.mu1.min(self.mu2)
+    }
+}
+
+/// CDF of Exp(rate) at x (0 for x < 0).
+#[inline]
+fn exp_cdf(rate: f64, x: f64) -> f64 {
+    if x <= 0.0 { 0.0 } else { -(-rate * x).exp_m1() }
+}
+
+/// Hypoexponential CDF: `P(X + Y <= t)` for independent X~Exp(a),
+/// Y~Exp(b). Handles the a≈b confluent case.
+pub fn hypoexp_cdf(a: f64, b: f64, t: f64) -> f64 {
+    assert!(a > 0.0 && b > 0.0, "rates must be positive (a={a}, b={b})");
+    if t <= 0.0 {
+        return 0.0;
+    }
+    let p = if (a - b).abs() < 1e-9 * a.max(b) {
+        // Erlang-2 limit: 1 - e^{-at}(1 + at)
+        1.0 - (-a * t).exp() * (1.0 + a * t)
+    } else {
+        1.0 - (b * (-a * t).exp() - a * (-b * t).exp()) / (b - a)
+    };
+    p.clamp(0.0, 1.0)
+}
+
+/// `P(X + Y <= t, X <= c1, Y <= c2)` for independent exponentials —
+/// the disjoint-management satisfaction kernel, piecewise closed form.
+pub fn truncated_sum_prob(a: f64, b: f64, t: f64, c1: f64, c2: f64) -> f64 {
+    assert!(a > 0.0 && b > 0.0);
+    if t <= 0.0 || c1 <= 0.0 || c2 <= 0.0 {
+        return 0.0;
+    }
+    // Integrate over X = x in [0, u]; the Y cap is min(c2, t - x).
+    let u = c1.min(t);
+    let x0 = (t - c2).clamp(0.0, u); // cap switches from c2 to t - x at x0
+    let near = (a - b).abs() < 1e-9 * a.max(b);
+
+    // Segment 1: x in [0, x0], Y cap = c2 (constant).
+    let seg1 = if x0 > 0.0 { exp_cdf(a, x0) * exp_cdf(b, c2) } else { 0.0 };
+
+    // Segment 2: x in [x0, u], Y cap = t - x.
+    //   ∫ a e^{-ax} (1 - e^{-b(t-x)}) dx
+    // = (e^{-a x0} - e^{-a u}) - a e^{-bt} ∫_{x0}^{u} e^{-(a-b)x} dx
+    let seg2 = if u > x0 {
+        let first = (-a * x0).exp() - (-a * u).exp();
+        let second = if near {
+            a * (-b * t).exp() * (u - x0)
+        } else {
+            a * (-b * t).exp() * ((-(a - b) * x0).exp() - (-(a - b) * u).exp())
+                / (a - b)
+        };
+        first - second
+    } else {
+        0.0
+    };
+
+    (seg1 + seg2).clamp(0.0, 1.0)
+}
+
+/// Eq 3: joint-management satisfaction probability at arrival rate λ.
+/// Returns 0 outside the stability region.
+pub fn joint_satisfaction(p: &SystemParams, lambda: f64, t_wireline: f64) -> f64 {
+    if lambda <= 0.0 {
+        return if p.b_total > t_wireline { 1.0 } else { 0.0 };
+    }
+    if lambda >= p.stability_limit() {
+        return 0.0;
+    }
+    hypoexp_cdf(p.mu1 - lambda, p.mu2 - lambda, p.b_total - t_wireline)
+}
+
+/// Eq 4: disjoint-management satisfaction probability.
+pub fn disjoint_satisfaction(
+    p: &SystemParams,
+    lambda: f64,
+    t_wireline: f64,
+    b_comm: f64,
+    b_comp: f64,
+) -> f64 {
+    let t = p.b_total - t_wireline;
+    let c1 = b_comm - t_wireline;
+    let c2 = b_comp;
+    if lambda <= 0.0 {
+        return if t > 0.0 && c1 > 0.0 && c2 > 0.0 { 1.0 } else { 0.0 };
+    }
+    if lambda >= p.stability_limit() {
+        return 0.0;
+    }
+    truncated_sum_prob(p.mu1 - lambda, p.mu2 - lambda, t, c1, c2)
+}
+
+/// Satisfaction probability of an arbitrary [`Scheme`].
+pub fn scheme_satisfaction(p: &SystemParams, scheme: &Scheme, lambda: f64) -> f64 {
+    match scheme.policy {
+        Policy::Joint => joint_satisfaction(p, lambda, scheme.t_wireline),
+        Policy::Disjoint { b_comm, b_comp } => {
+            disjoint_satisfaction(p, lambda, scheme.t_wireline, b_comm, b_comp)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
+
+    /// Simpson numerical integration of the disjoint kernel, used as an
+    /// independent cross-check of the piecewise closed form.
+    fn truncated_sum_numeric(a: f64, b: f64, t: f64, c1: f64, c2: f64) -> f64 {
+        if t <= 0.0 || c1 <= 0.0 || c2 <= 0.0 {
+            return 0.0;
+        }
+        let u = c1.min(t);
+        let n = 20_000; // even
+        let h = u / n as f64;
+        let f = |x: f64| {
+            let cap = c2.min(t - x);
+            a * (-a * x).exp() * exp_cdf(b, cap)
+        };
+        let mut s = f(0.0) + f(u);
+        for i in 1..n {
+            let x = i as f64 * h;
+            s += f(x) * if i % 2 == 1 { 4.0 } else { 2.0 };
+        }
+        s * h / 3.0
+    }
+
+    #[test]
+    fn hypoexp_limits() {
+        assert_eq!(hypoexp_cdf(10.0, 20.0, 0.0), 0.0);
+        assert!(hypoexp_cdf(10.0, 20.0, 100.0) > 0.999999);
+        // symmetric in (a, b)
+        let p1 = hypoexp_cdf(3.0, 7.0, 0.4);
+        let p2 = hypoexp_cdf(7.0, 3.0, 0.4);
+        assert!((p1 - p2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hypoexp_confluent_continuity() {
+        // a → b limit must agree with the Erlang-2 closed form.
+        let b = 50.0;
+        let t = 0.03;
+        let general = hypoexp_cdf(b * (1.0 + 1e-7), b, t);
+        let limit = hypoexp_cdf(b, b, t);
+        assert!((general - limit).abs() < 1e-6, "{general} vs {limit}");
+    }
+
+    #[test]
+    fn hypoexp_dominates_single_stage() {
+        // X + Y <= t is harder than X <= t: CDF must be smaller.
+        let (a, b, t) = (30.0, 60.0, 0.05);
+        assert!(hypoexp_cdf(a, b, t) < exp_cdf(a, t));
+        assert!(hypoexp_cdf(a, b, t) < exp_cdf(b, t));
+    }
+
+    #[test]
+    fn truncated_matches_numeric_integration() {
+        // Cases covering every branch: x0=0, 0<x0<u, x0=u, c1>t, c1<t.
+        let cases = [
+            (800.0, 60.0, 0.075, 0.019, 0.056), // paper-like, c1+c2 = t
+            (800.0, 60.0, 0.075, 0.004, 0.056), // MEC-like (x0 interior)
+            (100.0, 90.0, 0.050, 0.100, 0.020), // c1 > t
+            (100.0, 90.0, 0.050, 0.020, 0.100), // c2 > t
+            (50.0, 50.0, 0.080, 0.030, 0.030),  // a == b, caps tight
+            (200.0, 30.0, 0.060, 0.050, 0.040), // c1+c2 > t (sum binds)
+        ];
+        for &(a, b, t, c1, c2) in &cases {
+            let closed = truncated_sum_prob(a, b, t, c1, c2);
+            let numeric = truncated_sum_numeric(a, b, t, c1, c2);
+            assert!(
+                (closed - numeric).abs() < 1e-6,
+                "({a},{b},{t},{c1},{c2}): closed {closed} vs numeric {numeric}"
+            );
+        }
+    }
+
+    #[test]
+    fn truncated_equals_product_when_budgets_partition() {
+        // c1 + c2 <= t ⇒ the corner constraints imply the sum constraint
+        // ⇒ P = P(X<=c1)·P(Y<=c2).
+        let (a, b) = (876.0, 53.0);
+        let (c1, c2) = (0.019, 0.056);
+        let t = c1 + c2;
+        let p = truncated_sum_prob(a, b, t, c1, c2);
+        let product = exp_cdf(a, c1) * exp_cdf(b, c2);
+        assert!((p - product).abs() < 1e-12, "{p} vs {product}");
+    }
+
+    #[test]
+    fn joint_beats_disjoint_everywhere() {
+        // Relaxing constraints can only help: joint ≥ disjoint for the
+        // same wireline latency, for all λ. (Property test.)
+        let p = SystemParams::paper();
+        check(300, |g| {
+            let lambda = g.f64_range(0.1, 99.0);
+            let bc = g.f64_range(0.001, p.b_total - 0.001);
+            let joint = joint_satisfaction(&p, lambda, 0.005);
+            let dis = disjoint_satisfaction(&p, lambda, 0.005, bc, p.b_total - bc);
+            prop_assert!(
+                joint >= dis - 1e-12,
+                "λ={lambda} bc={bc}: joint {joint} < disjoint {dis}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn satisfaction_monotone_decreasing_in_lambda() {
+        let p = SystemParams::paper();
+        for scheme in Scheme::fig4_schemes() {
+            let mut prev = f64::INFINITY;
+            for i in 0..100 {
+                let lambda = i as f64;
+                let s = scheme_satisfaction(&p, &scheme, lambda);
+                assert!(
+                    s <= prev + 1e-12,
+                    "{}: not monotone at λ={lambda}",
+                    scheme.name
+                );
+                prev = s;
+            }
+        }
+    }
+
+    #[test]
+    fn shorter_wireline_helps() {
+        let p = SystemParams::paper();
+        check(200, |g| {
+            let lambda = g.f64_range(0.1, 99.0);
+            let ran = disjoint_satisfaction(&p, lambda, 0.005, 0.024, 0.056);
+            let mec = disjoint_satisfaction(&p, lambda, 0.020, 0.024, 0.056);
+            prop_assert!(ran >= mec - 1e-12, "λ={lambda}: ran {ran} < mec {mec}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn unstable_lambda_gives_zero() {
+        let p = SystemParams::paper();
+        assert_eq!(joint_satisfaction(&p, 100.0, 0.005), 0.0);
+        assert_eq!(joint_satisfaction(&p, 150.0, 0.005), 0.0);
+        assert_eq!(disjoint_satisfaction(&p, 100.0, 0.005, 0.024, 0.056), 0.0);
+    }
+
+    #[test]
+    fn zero_lambda_limits() {
+        let p = SystemParams::paper();
+        assert_eq!(joint_satisfaction(&p, 0.0, 0.005), 1.0);
+        // budget consumed entirely by wireline → unsatisfiable
+        assert_eq!(joint_satisfaction(&p, 0.0, 0.085), 0.0);
+        assert_eq!(disjoint_satisfaction(&p, 0.0, 0.030, 0.024, 0.056), 0.0);
+    }
+
+    #[test]
+    fn probabilities_in_unit_interval() {
+        let p = SystemParams::paper();
+        check(500, |g| {
+            let lambda = g.f64_range(0.0, 120.0);
+            let tw = g.f64_range(0.0, 0.1);
+            let bc = g.f64_range(0.0, 0.1);
+            let j = joint_satisfaction(&p, lambda, tw);
+            let d = disjoint_satisfaction(&p, lambda, tw, bc, p.b_total - bc);
+            prop_assert!((0.0..=1.0).contains(&j), "joint {j}");
+            prop_assert!((0.0..=1.0).contains(&d), "disjoint {d}");
+            Ok(())
+        });
+    }
+}

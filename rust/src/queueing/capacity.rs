@@ -1,0 +1,138 @@
+//! Service-capacity solver (paper Definition 2).
+//!
+//! `λ* = sup{ λ : P(E(λ)) ≥ α }`. Every satisfaction function in this
+//! crate is monotone non-increasing in λ (more load → longer sojourns),
+//! so the sup is found by bisection over the stability interval.
+
+/// Result of a capacity search.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CapacityResult {
+    /// The service capacity λ* (jobs/s). 0 if even λ→0 misses α.
+    pub lambda_star: f64,
+    /// Satisfaction probability at λ* (≥ α unless lambda_star == 0).
+    pub p_at_star: f64,
+    /// Number of probability evaluations performed.
+    pub evals: u32,
+}
+
+/// Find `λ* = sup{λ ∈ [0, lambda_max] : p(λ) ≥ α}` by bisection.
+///
+/// `p` must be monotone non-increasing; `tol` is the absolute λ
+/// tolerance of the returned capacity.
+pub fn service_capacity(
+    mut p: impl FnMut(f64) -> f64,
+    alpha: f64,
+    lambda_max: f64,
+    tol: f64,
+) -> CapacityResult {
+    assert!((0.0..=1.0).contains(&alpha));
+    assert!(lambda_max > 0.0 && tol > 0.0);
+    let mut evals = 0u32;
+    let mut eval = |l: f64, evals: &mut u32| {
+        *evals += 1;
+        p(l)
+    };
+
+    // Degenerate: even vanishing load misses the target.
+    let p0 = eval(tol.min(lambda_max * 1e-6), &mut evals);
+    if p0 < alpha {
+        return CapacityResult { lambda_star: 0.0, p_at_star: p0, evals };
+    }
+    // Whole range feasible.
+    let p_hi = eval(lambda_max, &mut evals);
+    if p_hi >= alpha {
+        return CapacityResult { lambda_star: lambda_max, p_at_star: p_hi, evals };
+    }
+
+    let (mut lo, mut hi) = (0.0f64, lambda_max);
+    let mut p_lo = p0;
+    while hi - lo > tol {
+        let mid = 0.5 * (lo + hi);
+        let pm = eval(mid, &mut evals);
+        if pm >= alpha {
+            lo = mid;
+            p_lo = pm;
+        } else {
+            hi = mid;
+        }
+    }
+    CapacityResult { lambda_star: lo, p_at_star: p_lo, evals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::queueing::analytic::{joint_satisfaction, SystemParams};
+    use crate::queueing::Scheme;
+
+    #[test]
+    fn exact_threshold_recovered() {
+        // p(λ) = 1 - λ/100 crosses 0.95 exactly at λ = 5.
+        let r = service_capacity(|l| 1.0 - l / 100.0, 0.95, 100.0, 1e-9);
+        assert!((r.lambda_star - 5.0).abs() < 1e-6, "{}", r.lambda_star);
+        assert!(r.p_at_star >= 0.95 - 1e-9);
+    }
+
+    #[test]
+    fn infeasible_returns_zero() {
+        let r = service_capacity(|_| 0.5, 0.95, 10.0, 1e-6);
+        assert_eq!(r.lambda_star, 0.0);
+    }
+
+    #[test]
+    fn fully_feasible_returns_max() {
+        let r = service_capacity(|_| 0.99, 0.95, 10.0, 1e-6);
+        assert_eq!(r.lambda_star, 10.0);
+    }
+
+    #[test]
+    fn eval_count_is_logarithmic() {
+        let r = service_capacity(|l| 1.0 - l / 100.0, 0.95, 100.0, 1e-9);
+        assert!(r.evals < 64, "evals = {}", r.evals);
+    }
+
+    #[test]
+    fn paper_headline_98_percent_gain() {
+        // §III-B: joint-RAN capacity ≈ +98% over disjoint-MEC at α=0.95.
+        let p = SystemParams::paper();
+        let alpha = 0.95;
+        let cap = |s: Scheme| {
+            service_capacity(
+                |l| crate::queueing::analytic::scheme_satisfaction(&p, &s, l),
+                alpha,
+                p.stability_limit() - 1e-6,
+                1e-6,
+            )
+            .lambda_star
+        };
+        let joint = cap(Scheme::icc_joint_ran());
+        let dis_ran = cap(Scheme::disjoint_ran());
+        let mec = cap(Scheme::mec_disjoint());
+        // Ordering: joint > disjoint-RAN > MEC.
+        assert!(joint > dis_ran && dis_ran > mec, "{joint} {dis_ran} {mec}");
+        let gain = joint / mec - 1.0;
+        assert!(
+            (0.85..=1.15).contains(&gain),
+            "joint {joint:.2} vs mec {mec:.2}: gain {:.1}% (paper: 98%)",
+            gain * 100.0
+        );
+    }
+
+    #[test]
+    fn joint_capacity_value_sane() {
+        // Joint-RAN: solving P(X+Y <= 75ms) = 0.95 with μ1=900, μ2=100
+        // lands near λ ≈ 59–60 jobs/s.
+        let p = SystemParams::paper();
+        let r = service_capacity(
+            |l| joint_satisfaction(&p, l, 0.005),
+            0.95,
+            99.9,
+            1e-6,
+        );
+        assert!(
+            (55.0..=65.0).contains(&r.lambda_star),
+            "λ* = {}",
+            r.lambda_star
+        );
+    }
+}

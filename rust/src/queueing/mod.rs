@@ -1,0 +1,69 @@
+//! Queueing-theoretic analysis of the ICC system (paper §III, Fig 4).
+//!
+//! The system is a tandem network: an M/M/1 air-interface queue (rate
+//! μ₁) feeding, through a constant wireline delay `t_wireline`, an
+//! M/M/1 computing queue (rate μ₂). By Burke's theorem the departure
+//! process of the first queue is Poisson(λ) and the sojourn times of a
+//! tagged job in the two queues are independent (paper Lemma 1), each
+//! exponential with rates `μ₁−λ` and `μ₂−λ`.
+//!
+//! * [`analytic`] — closed-form satisfaction probabilities for joint
+//!   and disjoint latency management (Eqs 3–6).
+//! * [`tandem_mc`] — discrete-event Monte-Carlo of the same network,
+//!   used to *validate* Lemma 1 and the closed forms.
+//! * [`capacity`] — the service-capacity solver (Definition 2).
+
+pub mod analytic;
+pub mod capacity;
+pub mod tandem_mc;
+
+pub use analytic::{SystemParams, joint_satisfaction, disjoint_satisfaction};
+pub use capacity::{service_capacity, CapacityResult};
+
+/// Latency-management policy (paper §III-A).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Policy {
+    /// The entire budget `b_total` covers comm + comp jointly.
+    Joint,
+    /// `b_total` is split into a communication budget (covering
+    /// UE→BS *and* wireline) and a computing budget.
+    Disjoint { b_comm: f64, b_comp: f64 },
+}
+
+/// One of the paper's three evaluated schemes (§III-B / Fig 4).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Scheme {
+    pub name: &'static str,
+    pub policy: Policy,
+    pub t_wireline: f64,
+}
+
+impl Scheme {
+    /// Joint latency management, RAN compute node (t_wireline = 5 ms).
+    pub fn icc_joint_ran() -> Self {
+        Self { name: "ICC joint (RAN, 5ms)", policy: Policy::Joint, t_wireline: 0.005 }
+    }
+
+    /// Disjoint management, RAN node (5 ms): b_comm=24 ms, b_comp=56 ms.
+    pub fn disjoint_ran() -> Self {
+        Self {
+            name: "Disjoint (RAN, 5ms)",
+            policy: Policy::Disjoint { b_comm: 0.024, b_comp: 0.056 },
+            t_wireline: 0.005,
+        }
+    }
+
+    /// 5G MEC baseline: disjoint management, MEC node (20 ms).
+    pub fn mec_disjoint() -> Self {
+        Self {
+            name: "5G MEC disjoint (20ms)",
+            policy: Policy::Disjoint { b_comm: 0.024, b_comp: 0.056 },
+            t_wireline: 0.020,
+        }
+    }
+
+    /// All three Fig 4 schemes in the paper's order.
+    pub fn fig4_schemes() -> [Scheme; 3] {
+        [Self::icc_joint_ran(), Self::disjoint_ran(), Self::mec_disjoint()]
+    }
+}

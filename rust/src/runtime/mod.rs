@@ -1,0 +1,62 @@
+//! Rust-side model runtime: PJRT engine over the AOT artifacts.
+//!
+//! Layer responsibilities (see DESIGN.md):
+//! * python/compile (build time): author + lower the model to HLO text.
+//! * here (run time): parse, compile, execute — no Python.
+
+pub mod engine;
+pub mod tokenizer;
+pub mod weights;
+
+pub use engine::{argmax, Engine, GenStats, KvCache, ModelMeta};
+pub use weights::{Tensor, Weights};
+
+use crate::util::args::{usage, Args, OptSpec};
+use anyhow::Result;
+
+/// `icc6g generate` — one-shot generation through the artifacts.
+pub fn cli_generate(argv: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "prompt", help: "input text", takes_value: true,
+                  default: Some("The 6G network integrates communication and computing.") },
+        OptSpec { name: "tokens", help: "output tokens", takes_value: true, default: Some("15") },
+        OptSpec { name: "artifacts", help: "artifacts directory", takes_value: true, default: None },
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = Args::parse(argv.iter().cloned(), &specs)?;
+    if args.flag("help") {
+        print!("{}", usage("icc6g generate", "One-shot generation via AOT artifacts", &specs));
+        return Ok(());
+    }
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Engine::default_artifacts_dir);
+    let n_out = args.get_usize("tokens")?.unwrap();
+    let prompt_text = args.get("prompt").unwrap();
+
+    let t0 = std::time::Instant::now();
+    let engine = Engine::load(&dir)?;
+    println!(
+        "engine loaded in {:.2}s ({} params, vocab {}, max_seq {})",
+        t0.elapsed().as_secs_f64(),
+        engine.meta.n_params,
+        engine.meta.vocab,
+        engine.meta.max_seq
+    );
+
+    let mut prompt = tokenizer::encode(prompt_text);
+    let limit = engine.meta.max_seq.saturating_sub(n_out).max(1);
+    prompt.truncate(limit);
+    let (out, stats) = engine.generate(&prompt, n_out)?;
+    println!("prompt tokens : {}", prompt.len());
+    println!("output tokens : {:?}", out);
+    println!("output text   : {:?}", tokenizer::decode(&out));
+    println!(
+        "prefill {:.1} ms | decode {:.1} ms | {:.1} tok/s",
+        stats.prefill_s * 1e3,
+        stats.decode_s * 1e3,
+        stats.tokens_per_sec()
+    );
+    Ok(())
+}

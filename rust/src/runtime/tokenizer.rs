@@ -1,0 +1,64 @@
+//! Byte-level tokenizer, mirroring `python/compile/aot.py::byte_tokenize`.
+//!
+//! Token space: 0..=255 are raw UTF-8 bytes, 256 = BOS, 257 = EOS; the
+//! remainder of the 512-token vocabulary is unused padding space. The
+//! served model is a from-scratch tiny Llama, so a learned subword
+//! vocabulary would add nothing — bytes keep the Rust and Python sides
+//! trivially in lock-step (asserted by the golden-trace test).
+
+pub const BOS: i32 = 256;
+pub const EOS: i32 = 257;
+pub const VOCAB: i32 = 512;
+
+/// Encode text into token ids (BOS + raw bytes).
+pub fn encode(text: &str) -> Vec<i32> {
+    let mut toks = Vec::with_capacity(text.len() + 1);
+    toks.push(BOS);
+    toks.extend(text.as_bytes().iter().map(|&b| b as i32));
+    toks
+}
+
+/// Decode token ids back to text; non-byte tokens are dropped, invalid
+/// UTF-8 is replaced.
+pub fn decode(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .filter(|&&t| (0..256).contains(&t))
+        .map(|&t| t as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_prepends_bos() {
+        assert_eq!(encode("ab"), vec![BOS, 97, 98]);
+    }
+
+    #[test]
+    fn roundtrip_ascii() {
+        let text = "The 6G network.";
+        assert_eq!(decode(&encode(text)), text);
+    }
+
+    #[test]
+    fn roundtrip_multibyte_utf8() {
+        let text = "héllo wörld — 訳";
+        assert_eq!(decode(&encode(text)), text);
+    }
+
+    #[test]
+    fn decode_skips_specials() {
+        assert_eq!(decode(&[BOS, 104, 105, EOS]), "hi");
+    }
+
+    #[test]
+    fn all_tokens_in_vocab() {
+        for t in encode("any text at all ☃") {
+            assert!((0..VOCAB).contains(&t));
+        }
+    }
+}

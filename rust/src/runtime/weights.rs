@@ -1,0 +1,180 @@
+//! Loader for `artifacts/weights.bin` (format defined in
+//! python/compile/aot.py):
+//!
+//! ```text
+//! magic "ICCW" | u32 version=1 | u32 n_tensors
+//! per tensor: u32 name_len | name | u32 rank | u32 dims[rank] | f32 data
+//! ```
+//!
+//! Tensor order in the file is the model's canonical parameter order
+//! and must match the HLO argument order of prefill/decode.
+
+use anyhow::{bail, Context, Result};
+
+/// One parameter tensor.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// All model parameters, in canonical (= HLO argument) order.
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub tensors: Vec<Tensor>,
+}
+
+impl Weights {
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let data = std::fs::read(path)
+            .with_context(|| format!("reading weights from {}", path.display()))?;
+        Self::parse(&data)
+    }
+
+    pub fn parse(data: &[u8]) -> Result<Self> {
+        let mut cur = Cursor { data, off: 0 };
+        let magic = cur.bytes(4)?;
+        if magic != b"ICCW" {
+            bail!("bad magic {magic:?} (expected ICCW)");
+        }
+        let version = cur.u32()?;
+        if version != 1 {
+            bail!("unsupported weights version {version}");
+        }
+        let n = cur.u32()? as usize;
+        if n == 0 || n > 4096 {
+            bail!("implausible tensor count {n}");
+        }
+        let mut tensors = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name_len = cur.u32()? as usize;
+            if name_len > 256 {
+                bail!("implausible name length {name_len}");
+            }
+            let name = String::from_utf8(cur.bytes(name_len)?.to_vec())
+                .context("tensor name not utf-8")?;
+            let rank = cur.u32()? as usize;
+            if rank > 8 {
+                bail!("implausible rank {rank} for '{name}'");
+            }
+            let mut dims = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                dims.push(cur.u32()? as usize);
+            }
+            let count: usize = dims.iter().product();
+            let raw = cur.bytes(count * 4)?;
+            let mut vals = vec![0f32; count];
+            for (i, chunk) in raw.chunks_exact(4).enumerate() {
+                vals[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+            }
+            tensors.push(Tensor { name, dims, data: vals });
+        }
+        if cur.off != data.len() {
+            bail!("{} trailing bytes after last tensor", data.len() - cur.off);
+        }
+        Ok(Self { tensors })
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(Tensor::element_count).sum()
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+}
+
+struct Cursor<'a> {
+    data: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.off + n > self.data.len() {
+            bail!("weights file truncated at offset {}", self.off);
+        }
+        let s = &self.data[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes(b.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn encode(tensors: &[(&str, &[u32], &[f32])]) -> Vec<u8> {
+        let mut v = Vec::new();
+        v.extend(b"ICCW");
+        v.extend(1u32.to_le_bytes());
+        v.extend((tensors.len() as u32).to_le_bytes());
+        for (name, dims, data) in tensors {
+            v.extend((name.len() as u32).to_le_bytes());
+            v.extend(name.as_bytes());
+            v.extend((dims.len() as u32).to_le_bytes());
+            for d in *dims {
+                v.extend(d.to_le_bytes());
+            }
+            for x in *data {
+                v.extend(x.to_le_bytes());
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn roundtrip() {
+        let data = encode(&[
+            ("a", &[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            ("b", &[2], &[-1.0, 0.5]),
+        ]);
+        let w = Weights::parse(&data).unwrap();
+        assert_eq!(w.tensors.len(), 2);
+        assert_eq!(w.tensors[0].name, "a");
+        assert_eq!(w.tensors[0].dims, vec![2, 3]);
+        assert_eq!(w.tensors[1].data, vec![-1.0, 0.5]);
+        assert_eq!(w.total_params(), 8);
+        assert!(w.by_name("b").is_some());
+        assert!(w.by_name("zz").is_none());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut data = encode(&[("a", &[1], &[1.0])]);
+        data[0] = b'X';
+        assert!(Weights::parse(&data).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let data = encode(&[("a", &[4], &[1.0, 2.0, 3.0, 4.0])]);
+        assert!(Weights::parse(&data[..data.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut data = encode(&[("a", &[1], &[1.0])]);
+        data.push(0);
+        assert!(Weights::parse(&data).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let mut data = encode(&[("a", &[1], &[1.0])]);
+        data[4] = 9;
+        assert!(Weights::parse(&data).is_err());
+    }
+}

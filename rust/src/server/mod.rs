@@ -1,0 +1,380 @@
+//! Live LLM serving: a TCP front-end over the PJRT engine with
+//! ICC-style deadline-aware admission.
+//!
+//! Architecture (threads + channels; the offline registry has no
+//! tokio — see DESIGN.md §3):
+//!
+//! ```text
+//! TCP accept loop ──► connection threads ──► request channel
+//!                                                │
+//!                               inference thread (owns the Engine,
+//!                               EDF or FIFO queue, hopeless-drop)
+//!                                                │
+//!                              per-request response channels
+//! ```
+//!
+//! The PJRT engine stays confined to one thread (its handles wrap raw
+//! pointers), exactly like a GPU worker process in a production
+//! serving stack; connection handling scales out independently.
+//!
+//! Protocol (line-based, UTF-8):
+//!   request : `GEN <n_tokens> <budget_ms> <prompt text>\n`
+//!   response: `OK <e2e_ms> <queue_ms> <text>` | `DROPPED deadline` |
+//!             `ERR <msg>`
+
+use std::collections::BinaryHeap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{tokenizer, Engine};
+use crate::util::args::{usage, Args, OptSpec};
+
+/// Queue discipline of the inference thread.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServePolicy {
+    /// FIFO, never drops (5G-MEC-baseline behaviour).
+    Fifo,
+    /// Earliest-deadline-first + drop jobs that cannot finish in
+    /// budget (the ICC priority scheme).
+    DeadlinePriority,
+}
+
+impl ServePolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "fifo" => Some(Self::Fifo),
+            "edf" | "priority" => Some(Self::DeadlinePriority),
+            _ => None,
+        }
+    }
+}
+
+/// An inference request crossing the channel.
+pub struct Request {
+    pub prompt: Vec<i32>,
+    pub n_tokens: usize,
+    /// Absolute deadline (server clock).
+    pub deadline: Instant,
+    pub enqueued: Instant,
+    pub resp: mpsc::Sender<Response>,
+}
+
+/// The inference thread's answer.
+#[derive(Debug, Clone)]
+pub enum Response {
+    Ok { tokens: Vec<i32>, queue_s: f64, infer_s: f64 },
+    Dropped,
+    Err(String),
+}
+
+struct HeapEntry {
+    deadline: Instant,
+    seq: u64,
+    req: Request,
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for HeapEntry {}
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // min-heap on (deadline, seq)
+        other
+            .deadline
+            .cmp(&self.deadline)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The inference loop: owns the engine, applies the queue policy.
+/// Returns when the request channel closes.
+pub fn inference_loop(
+    engine: &Engine,
+    rx: mpsc::Receiver<Request>,
+    policy: ServePolicy,
+) -> (u64, u64) {
+    let mut heap: BinaryHeap<HeapEntry> = BinaryHeap::new();
+    let mut fifo: std::collections::VecDeque<Request> = Default::default();
+    let mut seq = 0u64;
+    let mut served = 0u64;
+    let mut dropped = 0u64;
+    // Measured per-token cost estimate for the hopeless-drop rule,
+    // refreshed from real inferences (seed with a conservative guess).
+    let mut est_per_token = 0.010f64;
+
+    loop {
+        // Fill the local queue: block only when idle.
+        let idle = heap.is_empty() && fifo.is_empty();
+        let next = if idle {
+            match rx.recv() {
+                Ok(r) => Some(r),
+                Err(_) => break,
+            }
+        } else {
+            match rx.try_recv() {
+                Ok(r) => Some(r),
+                Err(mpsc::TryRecvError::Empty) => None,
+                Err(mpsc::TryRecvError::Disconnected) if idle => break,
+                Err(mpsc::TryRecvError::Disconnected) => None,
+            }
+        };
+        if let Some(req) = next {
+            match policy {
+                ServePolicy::Fifo => fifo.push_back(req),
+                ServePolicy::DeadlinePriority => {
+                    heap.push(HeapEntry { deadline: req.deadline, seq, req });
+                    seq += 1;
+                }
+            }
+            continue; // keep draining the channel before serving
+        }
+
+        let Some(req) = (match policy {
+            ServePolicy::Fifo => fifo.pop_front(),
+            ServePolicy::DeadlinePriority => heap.pop().map(|e| e.req),
+        }) else {
+            continue;
+        };
+
+        let now = Instant::now();
+        if policy == ServePolicy::DeadlinePriority {
+            let expected = est_per_token * (req.n_tokens + 2) as f64;
+            let remaining = req.deadline.saturating_duration_since(now).as_secs_f64();
+            if expected > remaining {
+                dropped += 1;
+                let _ = req.resp.send(Response::Dropped);
+                continue;
+            }
+        }
+        let queue_s = now.duration_since(req.enqueued).as_secs_f64();
+        let t0 = Instant::now();
+        match engine.generate(&req.prompt, req.n_tokens) {
+            Ok((tokens, stats)) => {
+                let infer_s = t0.elapsed().as_secs_f64();
+                if stats.tokens_out > 0 {
+                    est_per_token = 0.7 * est_per_token
+                        + 0.3 * (infer_s / (stats.tokens_out + 1) as f64);
+                }
+                served += 1;
+                let _ = req.resp.send(Response::Ok { tokens, queue_s, infer_s });
+            }
+            Err(e) => {
+                let _ = req.resp.send(Response::Err(format!("{e:#}")));
+            }
+        }
+    }
+    (served, dropped)
+}
+
+/// Parse one protocol line into (n_tokens, budget_ms, prompt).
+pub fn parse_request_line(line: &str) -> Result<(usize, f64, String)> {
+    let mut parts = line.splitn(4, ' ');
+    let verb = parts.next().unwrap_or("");
+    if verb != "GEN" {
+        anyhow::bail!("expected 'GEN', got '{verb}'");
+    }
+    let n: usize = parts
+        .next()
+        .context("missing n_tokens")?
+        .parse()
+        .context("bad n_tokens")?;
+    let budget: f64 = parts
+        .next()
+        .context("missing budget_ms")?
+        .parse()
+        .context("bad budget_ms")?;
+    let prompt = parts.next().unwrap_or("").to_string();
+    if n == 0 || n > 256 {
+        anyhow::bail!("n_tokens out of range");
+    }
+    Ok((n, budget, prompt))
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    tx: mpsc::Sender<Request>,
+    max_seq: usize,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let line_t = line.trim_end();
+        if line_t.is_empty() {
+            continue;
+        }
+        if line_t == "PING" {
+            writeln!(stream, "PONG")?;
+            continue;
+        }
+        let t_arrive = Instant::now();
+        match parse_request_line(line_t) {
+            Ok((n_tokens, budget_ms, prompt_text)) => {
+                let mut prompt = tokenizer::encode(&prompt_text);
+                prompt.truncate(max_seq.saturating_sub(n_tokens).max(1));
+                let (rtx, rrx) = mpsc::channel();
+                let req = Request {
+                    prompt,
+                    n_tokens,
+                    deadline: t_arrive + std::time::Duration::from_secs_f64(budget_ms / 1e3),
+                    enqueued: t_arrive,
+                    resp: rtx,
+                };
+                if tx.send(req).is_err() {
+                    writeln!(stream, "ERR server shutting down")?;
+                    return Ok(());
+                }
+                match rrx.recv() {
+                    Ok(Response::Ok { tokens, queue_s, .. }) => {
+                        let e2e = t_arrive.elapsed().as_secs_f64();
+                        writeln!(
+                            stream,
+                            "OK {:.1} {:.1} {}",
+                            e2e * 1e3,
+                            queue_s * 1e3,
+                            tokenizer::decode(&tokens).replace('\n', " ")
+                        )?;
+                    }
+                    Ok(Response::Dropped) => writeln!(stream, "DROPPED deadline")?,
+                    Ok(Response::Err(e)) => writeln!(stream, "ERR {e}")?,
+                    Err(_) => writeln!(stream, "ERR inference thread gone")?,
+                }
+            }
+            Err(e) => writeln!(stream, "ERR {e}")?,
+        }
+    }
+}
+
+/// Spawn the accept loop on its own thread: each connection gets a
+/// handler thread feeding the shared request channel. Returns the
+/// accept thread's handle (runs until the listener errors/closes).
+pub fn spawn_accept_loop(
+    listener: TcpListener,
+    tx: mpsc::Sender<Request>,
+    max_seq: usize,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        for conn in listener.incoming().flatten() {
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                let _ = handle_conn(conn, tx, max_seq);
+            });
+        }
+    })
+}
+
+/// `icc6g serve` — run the TCP server until killed.
+pub fn cli_serve(argv: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "port", help: "TCP port", takes_value: true, default: Some("7070") },
+        OptSpec { name: "artifacts", help: "artifacts directory", takes_value: true, default: None },
+        OptSpec { name: "policy", help: "fifo | edf", takes_value: true, default: Some("edf") },
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = Args::parse(argv.iter().cloned(), &specs)?;
+    if args.flag("help") {
+        print!("{}", usage("icc6g serve", "Serve the tiny Llama over TCP", &specs));
+        return Ok(());
+    }
+    let port = args.get_u64("port")?.unwrap() as u16;
+    let policy = ServePolicy::parse(args.get("policy").unwrap())
+        .context("policy must be fifo|edf")?;
+    let dir = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(Engine::default_artifacts_dir);
+
+    let (tx, rx) = mpsc::channel::<Request>();
+    let listener = TcpListener::bind(("127.0.0.1", port))
+        .with_context(|| format!("binding 127.0.0.1:{port}"))?;
+    log::info!("listening on 127.0.0.1:{port} (policy {policy:?})");
+
+    // Accept loop in a separate thread; inference (engine owner) here.
+    let max_seq_guess = 64usize; // clamped again in handle_conn per request
+    spawn_accept_loop(listener, tx, max_seq_guess);
+
+    let engine = Engine::load(&dir)?;
+    log::info!("engine ready: {} params", engine.meta.n_params);
+    let (served, dropped) = inference_loop(&engine, rx, policy);
+    log::info!("server exit: served {served}, dropped {dropped}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_line_ok() {
+        let (n, b, p) = parse_request_line("GEN 15 80 hello world").unwrap();
+        assert_eq!(n, 15);
+        assert_eq!(b, 80.0);
+        assert_eq!(p, "hello world");
+    }
+
+    #[test]
+    fn parse_request_line_empty_prompt() {
+        let (n, _, p) = parse_request_line("GEN 5 100").unwrap();
+        assert_eq!(n, 5);
+        assert_eq!(p, "");
+    }
+
+    #[test]
+    fn parse_request_line_rejects_garbage() {
+        assert!(parse_request_line("PUT 1 2 x").is_err());
+        assert!(parse_request_line("GEN x 2 y").is_err());
+        assert!(parse_request_line("GEN 0 2 y").is_err());
+        assert!(parse_request_line("GEN 999 2 y").is_err());
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(ServePolicy::parse("fifo"), Some(ServePolicy::Fifo));
+        assert_eq!(ServePolicy::parse("EDF"), Some(ServePolicy::DeadlinePriority));
+        assert_eq!(ServePolicy::parse("x"), None);
+    }
+
+    #[test]
+    fn heap_orders_by_deadline() {
+        let now = Instant::now();
+        let mk = |ms: u64, seq: u64| {
+            let (tx, _rx) = mpsc::channel();
+            HeapEntry {
+                deadline: now + std::time::Duration::from_millis(ms),
+                seq,
+                req: Request {
+                    prompt: vec![1],
+                    n_tokens: 1,
+                    deadline: now + std::time::Duration::from_millis(ms),
+                    enqueued: now,
+                    resp: tx,
+                },
+            }
+        };
+        let mut h = BinaryHeap::new();
+        h.push(mk(50, 0));
+        h.push(mk(10, 1));
+        h.push(mk(30, 2));
+        assert_eq!(h.pop().unwrap().seq, 1);
+        assert_eq!(h.pop().unwrap().seq, 2);
+        assert_eq!(h.pop().unwrap().seq, 0);
+    }
+}

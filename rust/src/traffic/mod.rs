@@ -1,0 +1,135 @@
+//! Traffic generation: translation jobs (Poisson per UE) + constant
+//! background load (Table I: 0.5 Mbps/UE).
+//!
+//! Token↔byte mapping: a prompt of `n_tokens` becomes
+//! `n_tokens · bytes_per_token + request_overhead` bytes on the air
+//! interface (UTF-8 text plus framing/PDCP/IP overhead).
+
+use crate::rng::Rng;
+
+/// Job-traffic parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct JobTrafficConfig {
+    /// Poisson rate per UE (Table I: 1 job/s/UE).
+    pub rate_per_ue: f64,
+    /// Input prompt size in tokens (Table I: 15).
+    pub input_tokens: u32,
+    /// Payload bytes per token (UTF-8 text ≈ 4 B/token).
+    pub bytes_per_token: u32,
+    /// Fixed per-request overhead (JSON framing + IP/PDCP headers).
+    pub overhead_bytes: u32,
+}
+
+impl Default for JobTrafficConfig {
+    fn default() -> Self {
+        Self { rate_per_ue: 1.0, input_tokens: 15, bytes_per_token: 4, overhead_bytes: 120 }
+    }
+}
+
+impl JobTrafficConfig {
+    /// Uplink bytes of one translation request.
+    pub fn request_bytes(&self) -> u32 {
+        self.input_tokens * self.bytes_per_token + self.overhead_bytes
+    }
+}
+
+/// Background-traffic parameters (constant bit rate, packetized).
+#[derive(Debug, Clone, Copy)]
+pub struct BackgroundConfig {
+    /// Offered load per UE in bits/s (Table I: 0.5 Mbps).
+    pub rate_bps: f64,
+    /// Packet size in bytes.
+    pub packet_bytes: u32,
+}
+
+impl Default for BackgroundConfig {
+    fn default() -> Self {
+        Self { rate_bps: 500_000.0, packet_bytes: 500 }
+    }
+}
+
+impl BackgroundConfig {
+    /// Mean inter-packet gap achieving `rate_bps`.
+    pub fn mean_interval(&self) -> f64 {
+        (self.packet_bytes as f64 * 8.0) / self.rate_bps
+    }
+}
+
+/// Poisson process generator: produces the next inter-arrival gap.
+#[derive(Debug)]
+pub struct PoissonProcess {
+    rate: f64,
+    rng: Rng,
+}
+
+impl PoissonProcess {
+    pub fn new(rate: f64, rng: Rng) -> Self {
+        assert!(rate > 0.0);
+        Self { rate, rng }
+    }
+
+    /// Next inter-arrival time (exponential).
+    pub fn next_gap(&mut self) -> f64 {
+        self.rng.exp(self.rate)
+    }
+}
+
+/// Poisson-packetized background source: exponential gaps with the CBR
+/// mean (mean rate 0.5 Mbps; burstiness exercises the scheduler the
+/// way a mix of best-effort apps would).
+#[derive(Debug)]
+pub struct BackgroundSource {
+    cfg: BackgroundConfig,
+    rng: Rng,
+}
+
+impl BackgroundSource {
+    pub fn new(cfg: BackgroundConfig, rng: Rng) -> Self {
+        Self { cfg, rng }
+    }
+
+    pub fn packet_bytes(&self) -> u32 {
+        self.cfg.packet_bytes
+    }
+
+    pub fn next_gap(&mut self) -> f64 {
+        self.rng.exp(1.0 / self.cfg.mean_interval())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_bytes_table1() {
+        let c = JobTrafficConfig::default();
+        assert_eq!(c.request_bytes(), 15 * 4 + 120);
+    }
+
+    #[test]
+    fn background_interval_matches_rate() {
+        let c = BackgroundConfig::default();
+        // 500 B · 8 / 0.5 Mb/s = 8 ms
+        assert!((c.mean_interval() - 0.008).abs() < 1e-12);
+    }
+
+    #[test]
+    fn poisson_process_rate() {
+        let mut p = PoissonProcess::new(5.0, Rng::new(1));
+        let n = 100_000;
+        let total: f64 = (0..n).map(|_| p.next_gap()).sum();
+        let rate = n as f64 / total;
+        assert!((rate / 5.0 - 1.0).abs() < 0.02, "rate = {rate}");
+    }
+
+    #[test]
+    fn background_source_long_run_rate() {
+        let cfg = BackgroundConfig::default();
+        let mut src = BackgroundSource::new(cfg, Rng::new(2));
+        let n = 50_000;
+        let span: f64 = (0..n).map(|_| src.next_gap()).sum();
+        let bps = (n as f64 * cfg.packet_bytes as f64 * 8.0) / span;
+        assert!((bps / cfg.rate_bps - 1.0).abs() < 0.03, "bps = {bps}");
+    }
+}

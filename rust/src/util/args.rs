@@ -1,0 +1,188 @@
+//! Minimal CLI argument parser (the offline registry has no `clap`).
+//!
+//! Supports the subset the `icc6g` binary and the bench harness need:
+//! subcommands, `--flag`, `--key value` / `--key=value`, typed getters
+//! with defaults, and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArgError {
+    #[error("unknown option '{0}'")]
+    Unknown(String),
+    #[error("option '--{0}' expects a value")]
+    MissingValue(String),
+    #[error("invalid value '{1}' for '--{0}': {2}")]
+    Invalid(String, String, String),
+}
+
+/// Declarative option spec used for usage output and validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments: key→value options, bare flags, and positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` (without the program name) against the specs.
+    pub fn parse<I, S>(argv: I, specs: &[OptSpec]) -> Result<Self, ArgError>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().map(Into::into).peekable();
+        while let Some(arg) = it.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                let (name, inline_val) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| ArgError::Unknown(name.clone()))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| ArgError::MissingValue(name.clone()))?,
+                    };
+                    out.values.insert(name, val);
+                } else {
+                    out.flags.push(name);
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        // apply defaults
+        for spec in specs {
+            if let Some(d) = spec.default {
+                out.values.entry(spec.name.to_string()).or_insert_with(|| d.to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, ArgError> {
+        self.typed(name, |v| v.parse::<f64>())
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, ArgError> {
+        self.typed(name, |v| v.parse::<u64>())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, ArgError> {
+        self.typed(name, |v| v.parse::<usize>())
+    }
+
+    fn typed<T, E: std::fmt::Display>(
+        &self,
+        name: &str,
+        f: impl Fn(&str) -> Result<T, E>,
+    ) -> Result<Option<T>, ArgError> {
+        match self.values.get(name) {
+            None => Ok(None),
+            Some(v) => f(v).map(Some).map_err(|e| {
+                ArgError::Invalid(name.to_string(), v.clone(), e.to_string())
+            }),
+        }
+    }
+}
+
+/// Render a usage block from the specs (for `--help`).
+pub fn usage(prog: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut s = format!("{about}\n\nUsage: {prog} [options]\n\nOptions:\n");
+    for spec in specs {
+        let val = if spec.takes_value { " <v>" } else { "" };
+        let def = spec
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("  --{}{val}\n        {}{def}\n", spec.name, spec.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "rate", help: "arrival rate", takes_value: true, default: Some("1.0") },
+            OptSpec { name: "ues", help: "number of UEs", takes_value: true, default: None },
+            OptSpec { name: "verbose", help: "chatty", takes_value: false, default: None },
+        ]
+    }
+
+    #[test]
+    fn parses_key_value_and_flags() {
+        let a = Args::parse(["--rate", "2.5", "--verbose", "sim"], &specs()).unwrap();
+        assert_eq!(a.get_f64("rate").unwrap(), Some(2.5));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["sim".to_string()]);
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = Args::parse(["--ues=60"], &specs()).unwrap();
+        assert_eq!(a.get_u64("ues").unwrap(), Some(60));
+    }
+
+    #[test]
+    fn applies_defaults() {
+        let a = Args::parse(Vec::<String>::new(), &specs()).unwrap();
+        assert_eq!(a.get_f64("rate").unwrap(), Some(1.0));
+        assert_eq!(a.get_u64("ues").unwrap(), None);
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_value() {
+        assert!(matches!(
+            Args::parse(["--nope"], &specs()),
+            Err(ArgError::Unknown(_))
+        ));
+        assert!(matches!(
+            Args::parse(["--rate"], &specs()),
+            Err(ArgError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_bad_typed_value() {
+        let a = Args::parse(["--rate", "abc"], &specs()).unwrap();
+        assert!(matches!(a.get_f64("rate"), Err(ArgError::Invalid(..))));
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = usage("icc6g", "test", &specs());
+        assert!(u.contains("--rate"));
+        assert!(u.contains("default: 1.0"));
+    }
+}

@@ -1,0 +1,204 @@
+//! Micro-bench harness + figure/table output helpers (the `criterion`
+//! replacement; criterion is not in the offline registry).
+//!
+//! * [`bench_fn`] — warmup + timed iterations of a closure, returning
+//!   mean / stddev / min / p50 / p95 wall-clock per iteration.
+//! * [`Table`] — aligned console tables for "same rows the paper
+//!   reports" output, with CSV export to `bench_out/` so figures can be
+//!   re-plotted.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use super::stats::percentile;
+
+/// Result of a micro-benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.min_ns),
+        )
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f` for at least `min_iters` iterations / `min_time_s` seconds
+/// (whichever is larger), after `warmup` untimed iterations.
+pub fn bench_fn<R>(name: &str, warmup: usize, min_iters: usize, min_time_s: f64,
+                   mut f: impl FnMut() -> R) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(min_iters.max(16));
+    let start = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+        if samples.len() >= min_iters && start.elapsed().as_secs_f64() >= min_time_s {
+            break;
+        }
+        if samples.len() >= 1_000_000 {
+            break; // hard cap
+        }
+    }
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n.max(2.0);
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_ns: mean,
+        std_ns: var.sqrt(),
+        min_ns: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        p50_ns: percentile(&samples, 50.0),
+        p95_ns: percentile(&samples, 95.0),
+    }
+}
+
+/// Aligned console table + CSV export, for regenerating paper figures.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n=== {} ===", self.title);
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * (widths.len() - 1);
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// Write the table as CSV under `bench_out/<file>`.
+    pub fn write_csv(&self, file: &str) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all("bench_out")?;
+        let path = std::path::Path::new("bench_out").join(file);
+        let mut s = String::new();
+        let _ = writeln!(s, "{}", self.headers.join(","));
+        for row in &self.rows {
+            let _ = writeln!(s, "{}", row.join(","));
+        }
+        std::fs::write(&path, s)?;
+        Ok(path)
+    }
+}
+
+/// Format an f64 cell with the given number of decimals.
+pub fn cell(v: f64, decimals: usize) -> String {
+    format!("{v:.decimals$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_fn_measures_something() {
+        let r = bench_fn("noop-ish", 2, 50, 0.0, || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.iters >= 50);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.mean_ns);
+        assert!(r.p50_ns <= r.p95_ns + 1.0);
+        assert!(r.report().contains("noop-ish"));
+    }
+
+    #[test]
+    fn table_renders_aligned_and_csv() {
+        let mut t = Table::new("Fig X", &["lambda", "p_sat"]);
+        t.row(&[cell(10.0, 1), cell(0.987, 3)]);
+        t.row(&[cell(100.0, 1), cell(0.5, 3)]);
+        let s = t.render();
+        assert!(s.contains("Fig X"));
+        assert!(s.contains("0.987"));
+        let dir = std::env::temp_dir().join(format!("icc6g_tbl_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let old = std::env::current_dir().unwrap();
+        std::env::set_current_dir(&dir).unwrap();
+        let path = t.write_csv("t.csv").unwrap();
+        let csv = std::fs::read_to_string(&path).unwrap();
+        std::env::set_current_dir(old).unwrap();
+        assert!(csv.starts_with("lambda,p_sat\n"));
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into()]);
+    }
+}

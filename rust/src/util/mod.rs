@@ -1,0 +1,13 @@
+//! Shared substrates: CLI args, TOML-subset config parsing, statistics,
+//! a mini property-testing engine, and a tiny logger.
+//!
+//! These replace `clap` / `toml` / `criterion`'s stats / `proptest` /
+//! `env_logger`, none of which exist in the offline dependency universe
+//! (see DESIGN.md §3 Substitutions).
+
+pub mod args;
+pub mod bench;
+pub mod logger;
+pub mod proptest;
+pub mod stats;
+pub mod tomlmini;

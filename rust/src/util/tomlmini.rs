@@ -1,0 +1,259 @@
+//! Minimal TOML-subset parser for config files (no `serde`/`toml` in the
+//! offline registry).
+//!
+//! Supported: `[table]` / `[table.sub]` headers, `key = value` with
+//! string / integer / float / bool / homogeneous-array values, `#`
+//! comments, blank lines. Keys are exposed flat as `"table.sub.key"`.
+//! This covers everything `config/` needs; exotic TOML (dates, inline
+//! tables, multi-line strings) is intentionally rejected with an error.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// A parsed document: flat `"table.key"` → [`Value`] map.
+#[derive(Debug, Default, Clone)]
+pub struct Document {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Document {
+    pub fn parse(text: &str) -> Result<Self, TomlError> {
+        let mut doc = Document::default();
+        let mut prefix = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(h) = line.strip_prefix('[') {
+                let h = h.strip_suffix(']').ok_or_else(|| TomlError {
+                    line: lineno,
+                    msg: "unterminated table header".into(),
+                })?;
+                let h = h.trim();
+                if h.is_empty() || h.starts_with('[') {
+                    return Err(TomlError {
+                        line: lineno,
+                        msg: "bad table header (arrays-of-tables unsupported)".into(),
+                    });
+                }
+                prefix = h.to_string();
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or_else(|| TomlError {
+                line: lineno,
+                msg: "expected 'key = value'".into(),
+            })?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(TomlError { line: lineno, msg: "empty key".into() });
+            }
+            let full = if prefix.is_empty() {
+                key.to_string()
+            } else {
+                format!("{prefix}.{key}")
+            };
+            let value = parse_value(val.trim())
+                .map_err(|msg| TomlError { line: lineno, msg })?;
+            doc.entries.insert(full, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Value::as_f64)
+    }
+
+    pub fn i64(&self, key: &str) -> Option<i64> {
+        self.get(key).and_then(Value::as_i64)
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Value::as_str)
+    }
+
+    pub fn bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(Value::as_bool)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Honour '#' only outside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quote unsupported".into());
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items: Result<Vec<Value>, String> =
+            inner.split(',').map(|p| parse_value(p.trim())).collect();
+        return Ok(Value::Array(items?));
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_tables() {
+        let doc = Document::parse(
+            r#"
+# top comment
+title = "icc"
+count = 42
+rate = 2.5
+on = true
+
+[sim]
+seed = 7            # trailing comment
+label = "fig6 # not a comment"
+
+[sim.phy]
+bandwidth_mhz = 100.0
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str("title"), Some("icc"));
+        assert_eq!(doc.i64("count"), Some(42));
+        assert_eq!(doc.f64("rate"), Some(2.5));
+        assert_eq!(doc.bool("on"), Some(true));
+        assert_eq!(doc.i64("sim.seed"), Some(7));
+        assert_eq!(doc.str("sim.label"), Some("fig6 # not a comment"));
+        assert_eq!(doc.f64("sim.phy.bandwidth_mhz"), Some(100.0));
+    }
+
+    #[test]
+    fn int_promotes_to_f64() {
+        let doc = Document::parse("x = 5").unwrap();
+        assert_eq!(doc.f64("x"), Some(5.0));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = Document::parse("xs = [1, 2, 3]\nys = [1.5, 2.5]\nempty = []").unwrap();
+        let xs = doc.get("xs").unwrap().as_array().unwrap();
+        assert_eq!(xs.len(), 3);
+        assert_eq!(xs[2].as_i64(), Some(3));
+        assert_eq!(doc.get("empty").unwrap().as_array().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = Document::parse("n = 1_000_000").unwrap();
+        assert_eq!(doc.i64("n"), Some(1_000_000));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Document::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = Document::parse("x = \"unterminated").unwrap_err();
+        assert_eq!(err.line, 1);
+        let err = Document::parse("[bad\nx = 1").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn rejects_garbage_value() {
+        assert!(Document::parse("x = @@").is_err());
+    }
+}

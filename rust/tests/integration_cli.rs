@@ -1,0 +1,77 @@
+//! CLI smoke tests: run the `icc6g` binary end-to-end and check its
+//! output contains the paper's reproduction rows.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_icc6g"))
+}
+
+#[test]
+fn help_lists_commands() {
+    let out = bin().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["fig4", "fig6", "fig7", "simulate", "serve", "generate"] {
+        assert!(text.contains(cmd), "help missing '{cmd}'");
+    }
+}
+
+#[test]
+fn unknown_command_fails_with_usage() {
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn fig4_reproduces_98_percent_gain() {
+    let out = bin().args(["fig4", "--points", "5"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("service capacity"), "{text}");
+    // The joint-RAN row must report a gain in the +85..+115% band.
+    // Skip the curve-table header (which also names the scheme): the
+    // capacity row is the one that ends in a percentage.
+    let gain_line = text
+        .lines()
+        .find(|l| l.contains("ICC joint") && l.trim_end().ends_with('%'))
+        .expect("joint capacity row missing");
+    let pct: f64 = gain_line
+        .split('+')
+        .next_back()
+        .unwrap()
+        .trim_end_matches('%')
+        .trim()
+        .parse()
+        .expect("gain percentage");
+    assert!((85.0..=115.0).contains(&pct), "gain {pct}% (paper: 98%)");
+}
+
+#[test]
+fn simulate_prints_report() {
+    let out = bin()
+        .args(["simulate", "--scheme", "icc", "--ues", "20", "--horizon", "4"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for field in ["satisfaction", "avg comm", "avg comp", "avg e2e"] {
+        assert!(text.contains(field), "missing '{field}' in:\n{text}");
+    }
+}
+
+#[test]
+fn simulate_rejects_bad_scheme() {
+    let out = bin().args(["simulate", "--scheme", "zzz"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+}
+
+#[test]
+fn fig_commands_have_help() {
+    for cmd in ["fig4", "fig6", "fig7", "simulate"] {
+        let out = bin().args([cmd, "--help"]).output().unwrap();
+        assert!(out.status.success(), "{cmd} --help failed");
+        assert!(String::from_utf8_lossy(&out.stdout).contains("Options"));
+    }
+}

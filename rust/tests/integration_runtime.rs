@@ -1,0 +1,133 @@
+//! Cross-language integration: the Rust PJRT engine must reproduce the
+//! Python/JAX golden trace bit-exactly, proving L1 (Pallas kernels),
+//! L2 (JAX model) and the Rust runtime agree.
+//!
+//! These tests need `make artifacts`; they self-skip when the
+//! artifacts directory is absent (e.g. pure-Rust CI shards).
+
+use std::path::PathBuf;
+
+use icc6g::runtime::{tokenizer, Engine};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("prefill.hlo.txt").exists().then_some(dir)
+}
+
+fn load_engine() -> Option<Engine> {
+    artifacts_dir().map(|d| Engine::load(&d).expect("engine must load"))
+}
+
+/// Parse artifacts/golden_trace.txt → (prompt, expected_output).
+fn golden() -> Option<(Vec<i32>, Vec<i32>)> {
+    let dir = artifacts_dir()?;
+    let text = std::fs::read_to_string(dir.join("golden_trace.txt")).ok()?;
+    let mut prompt = None;
+    let mut output = None;
+    for line in text.lines() {
+        let mut it = line.split_whitespace();
+        match it.next() {
+            Some("prompt") => prompt = Some(it.map(|t| t.parse().unwrap()).collect()),
+            Some("output") => output = Some(it.map(|t| t.parse().unwrap()).collect()),
+            _ => {}
+        }
+    }
+    Some((prompt?, output?))
+}
+
+#[test]
+fn golden_trace_bit_exact() {
+    let (Some(engine), Some((prompt, expected))) = (load_engine(), golden()) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let (out, stats) = engine.generate(&prompt, expected.len()).unwrap();
+    assert_eq!(out, expected, "rust generation diverged from the python golden trace");
+    assert_eq!(stats.tokens_out, expected.len());
+    assert!(stats.prefill_s > 0.0 && stats.decode_s > 0.0);
+}
+
+#[test]
+fn generation_is_deterministic() {
+    let Some(engine) = load_engine() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let prompt = tokenizer::encode("determinism check");
+    let (a, _) = engine.generate(&prompt, 8).unwrap();
+    let (b, _) = engine.generate(&prompt, 8).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn decode_steps_agree_with_prefill_logits() {
+    // Prefilling [p0..pn] must give the same next-token choice as
+    // prefilling [p0..pk] and decoding the rest step by step.
+    let Some(engine) = load_engine() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let full = tokenizer::encode("abcdefgh");
+    let k = 4;
+    let (logits_full, _) = engine.prefill(&full).unwrap();
+    let v = engine.meta.vocab;
+
+    let (logits_pre, mut kv) = engine.prefill(&full[..k]).unwrap();
+    // feed tokens k..len one at a time
+    let mut last_logits: Vec<f32> = logits_pre[(k - 1) * v..k * v].to_vec();
+    for (i, &tok) in full[k..].iter().enumerate() {
+        // prefill's row (k-1+i) must match the decode path's logits
+        let row = (k + i - 1) * v..(k + i) * v;
+        let expect = &logits_full[row];
+        for (a, b) in last_logits.iter().zip(expect) {
+            assert!((a - b).abs() < 5e-3, "logits diverged: {a} vs {b}");
+        }
+        let (lg, kv2) = engine.decode_step(tok, kv).unwrap();
+        kv = kv2;
+        last_logits = lg;
+    }
+}
+
+#[test]
+fn prompt_length_limits_enforced() {
+    let Some(engine) = load_engine() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    assert!(engine.prefill(&[]).is_err());
+    let too_long = vec![1i32; engine.meta.max_seq + 1];
+    assert!(engine.prefill(&too_long).is_err());
+    // exactly max_seq is fine
+    let max = vec![1i32; engine.meta.max_seq];
+    assert!(engine.prefill(&max).is_ok());
+}
+
+#[test]
+fn generate_stops_at_cache_capacity() {
+    let Some(engine) = load_engine() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let prompt = vec![1i32; engine.meta.max_seq - 2];
+    let (out, _) = engine.generate(&prompt, 50).unwrap();
+    // only max_seq - prompt.len() = 2 decode positions exist; the
+    // first token comes from prefill, then the cache fills.
+    assert!(out.len() <= 3, "out len = {}", out.len());
+    assert!(!out.is_empty());
+}
+
+#[test]
+fn weights_match_meta_param_count() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let w = icc6g::runtime::Weights::load(&dir.join("weights.bin")).unwrap();
+    let meta = icc6g::runtime::ModelMeta::load(&dir.join("model_meta.txt")).unwrap();
+    assert_eq!(w.total_params(), meta.n_params);
+    // canonical tensor set
+    for name in ["embed", "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+                 "norm_attn", "norm_mlp", "norm_f", "unembed"] {
+        assert!(w.by_name(name).is_some(), "missing tensor {name}");
+    }
+}

@@ -1,0 +1,121 @@
+//! Serving-path integration: the inference loop's queue policies over
+//! the real PJRT engine, and the TCP protocol plumbing.
+//!
+//! Self-skips when artifacts are absent.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use icc6g::runtime::{tokenizer, Engine};
+use icc6g::server::{inference_loop, parse_request_line, Request, Response, ServePolicy};
+
+fn load_engine() -> Option<Engine> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("prefill.hlo.txt")
+        .exists()
+        .then(|| Engine::load(&dir).expect("engine must load"))
+}
+
+fn mk_request(
+    text: &str,
+    n_tokens: usize,
+    budget: Duration,
+) -> (Request, mpsc::Receiver<Response>) {
+    let (tx, rx) = mpsc::channel();
+    let now = Instant::now();
+    (
+        Request {
+            prompt: tokenizer::encode(text),
+            n_tokens,
+            deadline: now + budget,
+            enqueued: now,
+            resp: tx,
+        },
+        rx,
+    )
+}
+
+#[test]
+fn fifo_serves_all_in_order() {
+    let Some(engine) = load_engine() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let (tx, rx) = mpsc::channel::<Request>();
+    let mut receivers = Vec::new();
+    for i in 0..4 {
+        let (req, rrx) = mk_request(&format!("request {i}"), 3, Duration::from_secs(60));
+        tx.send(req).unwrap();
+        receivers.push(rrx);
+    }
+    drop(tx);
+    let (served, dropped) = inference_loop(&engine, rx, ServePolicy::Fifo);
+    assert_eq!(served, 4);
+    assert_eq!(dropped, 0);
+    for rrx in receivers {
+        match rrx.recv().unwrap() {
+            Response::Ok { tokens, .. } => assert_eq!(tokens.len(), 3),
+            other => panic!("expected Ok, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn edf_drops_hopeless_requests() {
+    let Some(engine) = load_engine() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let (tx, rx) = mpsc::channel::<Request>();
+    // An already-expired budget: must be dropped, not served.
+    let (req, rrx_dead) = mk_request("expired", 5, Duration::from_millis(0));
+    tx.send(req).unwrap();
+    // A healthy request: must be served.
+    let (req, rrx_ok) = mk_request("healthy", 3, Duration::from_secs(60));
+    tx.send(req).unwrap();
+    drop(tx);
+    let (served, dropped) = inference_loop(&engine, rx, ServePolicy::DeadlinePriority);
+    assert_eq!(served, 1, "healthy request must be served");
+    assert_eq!(dropped, 1, "expired request must be dropped");
+    assert!(matches!(rrx_dead.recv().unwrap(), Response::Dropped));
+    assert!(matches!(rrx_ok.recv().unwrap(), Response::Ok { .. }));
+}
+
+#[test]
+fn edf_orders_by_deadline_under_backlog() {
+    let Some(engine) = load_engine() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    // Enqueue BEFORE starting the loop so the scheduler sees a backlog
+    // and must pick the earliest deadline first.
+    let (tx, rx) = mpsc::channel::<Request>();
+    let (late, rrx_late) = mk_request("late deadline", 2, Duration::from_secs(120));
+    let (soon, rrx_soon) = mk_request("soon deadline", 2, Duration::from_secs(30));
+    tx.send(late).unwrap();
+    tx.send(soon).unwrap();
+    drop(tx);
+    let (served, _) = inference_loop(&engine, rx, ServePolicy::DeadlinePriority);
+    assert_eq!(served, 2);
+    let t_soon = match rrx_soon.recv().unwrap() {
+        Response::Ok { queue_s, .. } => queue_s,
+        other => panic!("{other:?}"),
+    };
+    let t_late = match rrx_late.recv().unwrap() {
+        Response::Ok { queue_s, .. } => queue_s,
+        other => panic!("{other:?}"),
+    };
+    assert!(
+        t_soon < t_late,
+        "earliest deadline must leave the queue first ({t_soon} vs {t_late})"
+    );
+}
+
+#[test]
+fn protocol_roundtrip_parsing() {
+    let (n, b, p) = parse_request_line("GEN 15 80 translate this sentence").unwrap();
+    assert_eq!((n, b, p.as_str()), (15, 80.0, "translate this sentence"));
+    assert!(parse_request_line("").is_err());
+    assert!(parse_request_line("GEN").is_err());
+}

@@ -1,0 +1,167 @@
+//! System-level integration tests: the SLS must reproduce the paper's
+//! qualitative results at reduced scale, and the analytic + simulated
+//! layers must agree directionally.
+
+use icc6g::config::{SchemeConfig, SimConfig};
+use icc6g::coordinator::{
+    capacity_from_curve, min_capacity_from_curve, sweep_arrival_rates, sweep_gpu_capacity,
+};
+use icc6g::llm::GpuSpec;
+use icc6g::queueing::analytic::{scheme_satisfaction, SystemParams};
+use icc6g::queueing::{service_capacity, Scheme};
+use icc6g::sim::run_scheme;
+
+fn base() -> SimConfig {
+    let mut c = SimConfig::table1();
+    c.horizon = 10.0;
+    c.warmup = 1.5;
+    c
+}
+
+#[test]
+fn fig6_scheme_ordering_reproduced() {
+    // Capacity(ICC) > Capacity(disjoint-RAN) > Capacity(MEC), with the
+    // ICC gain over MEC in the paper's ballpark (+60%; accept 25–110%).
+    let rates: Vec<f64> = (2..=11).map(|i| 10.0 * i as f64).collect();
+    let caps: Vec<f64> = SchemeConfig::fig6_schemes()
+        .into_iter()
+        .map(|s| capacity_from_curve(&sweep_arrival_rates(&base(), s, &rates, 2), 0.95))
+        .collect();
+    let (icc, dis, mec) = (caps[0], caps[1], caps[2]);
+    assert!(icc > dis && dis >= mec, "ordering violated: {caps:?}");
+    let gain = icc / mec - 1.0;
+    assert!((0.25..=1.1).contains(&gain), "ICC gain {:.1}% (paper: 60%)", gain * 100.0);
+}
+
+#[test]
+fn fig7_compute_savings_reproduced() {
+    // ICC needs fewer ×A100 than the disjoint schemes (paper: 8 vs 11).
+    let caps: Vec<f64> = (5..=14).map(|i| i as f64).collect();
+    let mut b = base();
+    b.n_ues = 60;
+    let mins: Vec<Option<f64>> = SchemeConfig::fig6_schemes()
+        .into_iter()
+        .map(|s| min_capacity_from_curve(&sweep_gpu_capacity(&b, s, &caps, 2), 0.95))
+        .collect();
+    let icc = mins[0].expect("ICC must reach 95%");
+    assert!((6.0..=10.0).contains(&icc), "ICC min capacity {icc} (paper: 8)");
+    if let Some(dis) = mins[1] {
+        assert!(icc < dis, "ICC {icc} must need less than disjoint {dis}");
+        let saving = 1.0 - icc / dis;
+        assert!(saving > 0.08, "saving {:.1}% too small", saving * 100.0);
+    }
+}
+
+#[test]
+fn priority_scheme_gain_vanishes_with_abundant_compute() {
+    // Paper Fig 7 discussion: as GPU capacity grows, joint-vs-disjoint
+    // disparity diminishes.
+    let mut b = base();
+    b.n_ues = 60;
+    let caps = [24.0];
+    let icc = sweep_gpu_capacity(&b, SchemeConfig::icc(), &caps, 2)[0].satisfaction;
+    let dis = sweep_gpu_capacity(&b, SchemeConfig::disjoint_ran(), &caps, 2)[0].satisfaction;
+    assert!(icc > 0.97 && dis > 0.93, "icc {icc}, dis {dis}");
+    assert!((icc - dis).abs() < 0.06, "gap should be small at 24×A100: {icc} vs {dis}");
+}
+
+#[test]
+fn satisfaction_decreases_with_load_in_sls() {
+    let rates = [20.0, 60.0, 100.0];
+    let pts = sweep_arrival_rates(&base(), SchemeConfig::mec(), &rates, 2);
+    assert!(pts[0].satisfaction >= pts[1].satisfaction);
+    assert!(pts[1].satisfaction >= pts[2].satisfaction);
+}
+
+#[test]
+fn comm_latency_grows_with_load() {
+    // Fig 6 bar plot: average communication latency climbs with the
+    // prompt arrival rate (more PRB contention + queueing).
+    let rates = [20.0, 110.0];
+    let pts = sweep_arrival_rates(&base(), SchemeConfig::mec(), &rates, 2);
+    assert!(
+        pts[1].avg_comm_ms > pts[0].avg_comm_ms,
+        "comm {:.2} -> {:.2} ms",
+        pts[0].avg_comm_ms,
+        pts[1].avg_comm_ms
+    );
+}
+
+#[test]
+fn analytic_and_sls_capacities_same_regime() {
+    // The tandem-queue abstraction and the SLS are different models,
+    // but both must put the three schemes in the same order and within
+    // a factor ~2 of each other's capacity estimates.
+    let p = SystemParams::paper();
+    let theory: Vec<f64> = Scheme::fig4_schemes()
+        .iter()
+        .map(|s| {
+            service_capacity(
+                |l| scheme_satisfaction(&p, s, l),
+                0.95,
+                p.stability_limit() - 1e-6,
+                1e-6,
+            )
+            .lambda_star
+        })
+        .collect();
+    let rates: Vec<f64> = (2..=11).map(|i| 10.0 * i as f64).collect();
+    let sls: Vec<f64> = SchemeConfig::fig6_schemes()
+        .into_iter()
+        .map(|s| capacity_from_curve(&sweep_arrival_rates(&base(), s, &rates, 2), 0.95))
+        .collect();
+    for (t, s) in theory.iter().zip(&sls) {
+        let ratio = s / t;
+        assert!((0.5..=2.5).contains(&ratio), "theory {t:.1} vs sls {s:.1}");
+    }
+}
+
+#[test]
+fn dropped_jobs_only_under_priority_scheme() {
+    let mut cfg = base();
+    cfg.n_ues = 100; // overload
+    let icc = run_scheme(&cfg, SchemeConfig::icc(), 7);
+    let mec = run_scheme(&cfg, SchemeConfig::mec(), 7);
+    assert!(icc.n_dropped > 0, "ICC must shed hopeless jobs under overload");
+    assert_eq!(mec.n_dropped, 0, "FIFO baseline never drops");
+}
+
+#[test]
+fn wireline_only_difference_between_ran_and_mec_disjoint() {
+    // Same management, same priority config — only the wireline
+    // constant differs, so RAN-disjoint must dominate MEC.
+    let mut cfg = base();
+    cfg.n_ues = 55;
+    let ran = run_scheme(&cfg, SchemeConfig::disjoint_ran(), 11);
+    let mec = run_scheme(&cfg, SchemeConfig::mec(), 11);
+    assert!(
+        ran.satisfaction_rate() >= mec.satisfaction_rate() - 0.02,
+        "ran {} vs mec {}",
+        ran.satisfaction_rate(),
+        mec.satisfaction_rate()
+    );
+}
+
+#[test]
+fn gpu_scaling_monotone_in_sls() {
+    let mut b = base();
+    b.n_ues = 60;
+    let caps = [5.0, 9.0, 14.0];
+    let pts = sweep_gpu_capacity(&b, SchemeConfig::icc(), &caps, 2);
+    assert!(pts[0].satisfaction <= pts[1].satisfaction + 0.02);
+    assert!(pts[1].satisfaction <= pts[2].satisfaction + 0.02);
+    // tokens/s also improves with capacity
+    assert!(pts[2].avg_tokens_per_sec > pts[0].avg_tokens_per_sec);
+}
+
+#[test]
+fn a100_capacity_sanity_vs_roofline() {
+    // One aggregated pool of g A100s serves ≈ g/0.110 jobs/s; at
+    // g = 12 and λ = 60 the system must be comfortably stable.
+    let mut cfg = base();
+    cfg.n_ues = 60;
+    cfg.gpu = GpuSpec::a100().scaled(12.0);
+    cfg.n_gpus = 1;
+    let r = run_scheme(&cfg, SchemeConfig::icc(), 5);
+    assert!(r.satisfaction_rate() > 0.9, "sat = {}", r.satisfaction_rate());
+}

@@ -82,7 +82,7 @@ fn main() -> anyhow::Result<()> {
     let mut icc_min = None;
     let mut dis_min = None;
     for scheme in SchemeConfig::fig6_schemes() {
-        let pts = sweep_gpu_capacity(&base, scheme, &grid, 2);
+        let pts = sweep_gpu_capacity(&base, &scheme, &grid, 2);
         let m = min_capacity_from_curve(&pts, alpha);
         if scheme.priority_scheme {
             icc_min = m;

@@ -1,0 +1,68 @@
+//! Mixed workloads over a multi-node edge tier — the Scenario API in
+//! one page.
+//!
+//! Three job classes (translation / chat / summarization, each with
+//! its own arrival rate, token distributions and latency budget) share
+//! one cell and two GH200-class compute nodes. The token-sampled
+//! service model draws each job's output length, and the least-loaded
+//! router balances the nodes. We run the same mix under ICC and the
+//! 5G-MEC baseline and print the per-class satisfaction rates.
+//!
+//! Run: `cargo run --release --example mixed_workloads`
+
+use icc6g::config::SchemeConfig;
+use icc6g::llm::GpuSpec;
+use icc6g::scenario::{
+    RoutingPolicy, ScenarioBuilder, ServiceModelKind, WorkloadClass,
+};
+use icc6g::util::bench::{cell, Table};
+
+fn main() {
+    let mut t = Table::new(
+        "Mixed workloads: per-class satisfaction (2 nodes, token-sampled service)",
+        &["scheme", "class", "jobs", "dropped", "satisfaction", "avg_e2e_ms"],
+    );
+
+    for scheme in [SchemeConfig::icc(), SchemeConfig::mec()] {
+        let scenario = ScenarioBuilder::new()
+            .scheme(scheme.clone())
+            .n_ues(20)
+            .horizon(12.0)
+            .warmup(2.0)
+            .seed(7)
+            .workload(WorkloadClass::translation())
+            .workload(WorkloadClass::chat())
+            .workload(WorkloadClass::summarization())
+            .node(GpuSpec::gh200_nvl2().scaled(2.0), 1)
+            .node(GpuSpec::gh200_nvl2().scaled(2.0), 1)
+            .service_kind(ServiceModelKind::TokenSampled)
+            .routing(RoutingPolicy::LeastLoaded)
+            .build();
+        let res = scenario.run();
+        for c in &res.report.per_class {
+            t.row(&[
+                scheme.name.clone(),
+                c.name.clone(),
+                c.n_jobs.to_string(),
+                c.n_dropped.to_string(),
+                cell(c.satisfaction_rate(), 4),
+                cell(c.e2e.mean() * 1e3, 2),
+            ]);
+        }
+        println!(
+            "{}: overall satisfaction {:.4} over {} jobs ({} events, {:.0}x realtime)",
+            scheme.name,
+            res.report.satisfaction_rate(),
+            res.report.n_jobs,
+            res.events,
+            res.speedup,
+        );
+    }
+    t.print();
+    let _ = t.write_csv("mixed_workloads.csv");
+    println!(
+        "\nReading: the tight 80 ms translation budget is where ICC's joint\n\
+         management earns its keep; the relaxed chat/summarization budgets\n\
+         survive the MEC baseline's extra wireline + disjoint split."
+    );
+}

@@ -30,12 +30,12 @@ fn main() {
             // Custom scheme: joint management at the RAN with the two
             // priority components controlled independently. (We bypass
             // `with_scheme`, which would re-sync the MAC toggle.)
-            cfg.scheme = SchemeConfig {
-                name: "custom",
-                deployment: Deployment::Ran,
-                management: Management::Joint,
-                priority_scheme: queue, // drives the compute-node queue
-            };
+            cfg.scheme = SchemeConfig::builder()
+                .name("custom")
+                .deployment(Deployment::Ran)
+                .management(Management::Joint)
+                .priority(queue) // drives the compute-node queue
+                .build();
             cfg.mac.job_priority = pkt; // the MAC half, decoupled
             let r = Sls::new(cfg).run().report;
             t.row(&[

@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     let mut cfg = SimConfig::table1();
     cfg.horizon = 10.0;
     for scheme in SchemeConfig::fig6_schemes() {
-        let r = run_scheme(&cfg, scheme, 1);
+        let r = run_scheme(&cfg, scheme.clone(), 1);
         println!(
             "  {:<32} satisfaction {:.3}  (comm {:.1} ms, comp {:.1} ms)",
             scheme.name,

@@ -30,7 +30,7 @@ fn capacity(schm: SchemeConfig, mutate: impl Fn(&mut SimConfig)) -> f64 {
     let rates: Vec<f64> = (2..=11).map(|i| 10.0 * i as f64).collect();
     let mut b = base();
     mutate(&mut b);
-    let pts = sweep_arrival_rates(&b, schm, &rates, 2);
+    let pts = sweep_arrival_rates(&b, &schm, &rates, 2);
     capacity_from_curve(&pts, 0.95)
 }
 
@@ -44,12 +44,12 @@ fn ablate_wireline() {
         (Deployment::Mec, 20.0),
         (Deployment::Cloud, 50.0),
     ] {
-        let schm = SchemeConfig {
-            name: "joint+prio",
-            deployment: dep,
-            management: Management::Joint,
-            priority_scheme: true,
-        };
+        let schm = SchemeConfig::builder()
+            .name("joint+prio")
+            .deployment(dep)
+            .management(Management::Joint)
+            .priority(true)
+            .build();
         t.row(&[cell(ms, 0), cell(capacity(schm, |_| {}), 1)]);
     }
     t.print();
@@ -144,12 +144,12 @@ fn ablate_priority_components() {
     for (pkt, queue) in [(false, false), (true, false), (false, true), (true, true)] {
         let mut cfg = base();
         cfg.n_ues = 90;
-        cfg.scheme = SchemeConfig {
-            name: "custom",
-            deployment: Deployment::Ran,
-            management: Management::Joint,
-            priority_scheme: queue,
-        };
+        cfg.scheme = SchemeConfig::builder()
+            .name("custom")
+            .deployment(Deployment::Ran)
+            .management(Management::Joint)
+            .priority(queue)
+            .build();
         cfg.mac.job_priority = pkt;
         cfg.seed = 21;
         let r = Sls::new(cfg).run().report;

@@ -28,19 +28,19 @@ fn main() {
     );
     let mut caps = Vec::new();
     let mut total_jobs = 0u64;
-    for scheme in schemes {
+    for scheme in &schemes {
         let pts = sweep_arrival_rates(&base, scheme, &rates, seeds);
         for p in &pts {
             curves.row(&[
                 cell(p.x, 0),
-                scheme.name.to_string(),
+                scheme.name.clone(),
                 cell(p.satisfaction, 4),
                 cell(p.avg_comm_ms, 2),
                 cell(p.avg_comp_ms, 2),
             ]);
             total_jobs += (p.x * (base.horizon - base.warmup) * seeds as f64) as u64;
         }
-        caps.push((scheme.name, capacity_from_curve(&pts, alpha)));
+        caps.push((scheme.name.clone(), capacity_from_curve(&pts, alpha)));
     }
     let wall = t0.elapsed().as_secs_f64();
     curves.print();

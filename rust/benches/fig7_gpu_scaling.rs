@@ -25,17 +25,17 @@ fn main() {
         &["xA100", "scheme", "satisfaction", "avg_tokens_per_s"],
     );
     let mut mins = Vec::new();
-    for scheme in schemes {
+    for scheme in &schemes {
         let pts = sweep_gpu_capacity(&base, scheme, &grid, seeds);
         for p in &pts {
             curves.row(&[
                 cell(p.x, 0),
-                scheme.name.to_string(),
+                scheme.name.clone(),
                 cell(p.satisfaction, 4),
                 cell(p.avg_tokens_per_sec, 1),
             ]);
         }
-        mins.push((scheme.name, min_capacity_from_curve(&pts, alpha)));
+        mins.push((scheme.name.clone(), min_capacity_from_curve(&pts, alpha)));
     }
     let wall = t0.elapsed().as_secs_f64();
     curves.print();

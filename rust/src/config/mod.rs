@@ -47,10 +47,12 @@ pub enum Management {
 }
 
 /// The full ICC-vs-MEC scheme: deployment + management + priority
-/// scheme toggle (paper §IV-B).
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// scheme toggle (paper §IV-B). Assemble custom schemes with
+/// [`SchemeConfig::builder`]; the paper presets are thin wrappers over
+/// the same builder.
+#[derive(Debug, Clone, PartialEq)]
 pub struct SchemeConfig {
-    pub name: &'static str,
+    pub name: String,
     pub deployment: Deployment,
     pub management: Management,
     /// Job-aware packet prioritization + deadline job queue + drop.
@@ -58,40 +60,121 @@ pub struct SchemeConfig {
 }
 
 impl SchemeConfig {
+    /// Start assembling a custom scheme (defaults: RAN deployment,
+    /// joint management, priority scheme off, auto-generated name).
+    pub fn builder() -> SchemeBuilder {
+        SchemeBuilder::default()
+    }
+
     /// ICC: RAN compute, joint management, priority scheme on.
     pub fn icc() -> Self {
-        Self {
-            name: "ICC (joint, RAN 5ms, priority)",
-            deployment: Deployment::Ran,
-            management: Management::Joint,
-            priority_scheme: true,
-        }
+        Self::builder()
+            .name("ICC (joint, RAN 5ms, priority)")
+            .deployment(Deployment::Ran)
+            .management(Management::Joint)
+            .priority(true)
+            .build()
     }
 
     /// Disjoint management at a RAN node (the "move compute closer"
     /// half-step of Fig 6).
     pub fn disjoint_ran() -> Self {
-        Self {
-            name: "Disjoint (RAN 5ms)",
-            deployment: Deployment::Ran,
-            management: Management::Disjoint { b_comm: 0.024, b_comp: 0.056 },
-            priority_scheme: false,
-        }
+        Self::builder()
+            .name("Disjoint (RAN 5ms)")
+            .deployment(Deployment::Ran)
+            .management(Management::Disjoint { b_comm: 0.024, b_comp: 0.056 })
+            .build()
     }
 
     /// 5G MEC baseline: disjoint, 20 ms wireline, FIFO everything.
     pub fn mec() -> Self {
-        Self {
-            name: "5G MEC (disjoint, 20ms)",
-            deployment: Deployment::Mec,
-            management: Management::Disjoint { b_comm: 0.024, b_comp: 0.056 },
-            priority_scheme: false,
-        }
+        Self::builder()
+            .name("5G MEC (disjoint, 20ms)")
+            .deployment(Deployment::Mec)
+            .management(Management::Disjoint { b_comm: 0.024, b_comp: 0.056 })
+            .build()
     }
 
     /// The three Fig 6 schemes in paper order.
     pub fn fig6_schemes() -> [SchemeConfig; 3] {
         [Self::icc(), Self::disjoint_ran(), Self::mec()]
+    }
+
+    /// Look up a named preset (the `scheme.preset` TOML / CLI values).
+    pub fn preset(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "icc" => Some(Self::icc()),
+            "disjoint_ran" => Some(Self::disjoint_ran()),
+            "mec" => Some(Self::mec()),
+            _ => None,
+        }
+    }
+}
+
+/// Builder for [`SchemeConfig`] — the extension point for schemes the
+/// paper does not enumerate (e.g. joint management at a cloud site, or
+/// custom disjoint splits).
+#[derive(Debug, Clone)]
+pub struct SchemeBuilder {
+    name: Option<String>,
+    deployment: Deployment,
+    management: Management,
+    priority_scheme: bool,
+}
+
+impl Default for SchemeBuilder {
+    fn default() -> Self {
+        Self {
+            name: None,
+            deployment: Deployment::Ran,
+            management: Management::Joint,
+            priority_scheme: false,
+        }
+    }
+}
+
+impl SchemeBuilder {
+    pub fn name(mut self, name: impl Into<String>) -> Self {
+        self.name = Some(name.into());
+        self
+    }
+
+    pub fn deployment(mut self, d: Deployment) -> Self {
+        self.deployment = d;
+        self
+    }
+
+    pub fn management(mut self, m: Management) -> Self {
+        self.management = m;
+        self
+    }
+
+    pub fn priority(mut self, on: bool) -> Self {
+        self.priority_scheme = on;
+        self
+    }
+
+    pub fn build(self) -> SchemeConfig {
+        let name = self.name.unwrap_or_else(|| {
+            let mgmt = match self.management {
+                Management::Joint => "joint".to_string(),
+                Management::Disjoint { b_comm, b_comp } => {
+                    format!("disjoint {:.0}/{:.0}ms", b_comm * 1e3, b_comp * 1e3)
+                }
+            };
+            format!(
+                "{mgmt}, {:?} {:.0}ms{}",
+                self.deployment,
+                self.deployment.wireline_latency() * 1e3,
+                if self.priority_scheme { ", priority" } else { "" }
+            )
+        });
+        SchemeConfig {
+            name,
+            deployment: self.deployment,
+            management: self.management,
+            priority_scheme: self.priority_scheme,
+        }
     }
 }
 
@@ -146,8 +229,8 @@ impl SimConfig {
 
     /// Apply a scheme preset (also syncs the MAC priority flag).
     pub fn with_scheme(mut self, scheme: SchemeConfig) -> Self {
-        self.scheme = scheme;
         self.mac.job_priority = scheme.priority_scheme;
+        self.scheme = scheme;
         self
     }
 
@@ -194,21 +277,128 @@ impl SimConfig {
                 "mac.bler" => {
                     self.mac.harq = HarqConfig { bler: doc.f64(key).unwrap(), ..self.mac.harq }
                 }
-                "scheme.preset" => {
-                    let s = match doc.str(key).unwrap() {
-                        "icc" => SchemeConfig::icc(),
-                        "disjoint_ran" => SchemeConfig::disjoint_ran(),
-                        "mec" => SchemeConfig::mec(),
-                        other => anyhow::bail!("unknown scheme '{other}'"),
-                    };
-                    *self = self.clone().with_scheme(s);
-                }
+                // Scheme keys are applied together after this loop so
+                // `scheme.preset` composes with field overrides
+                // regardless of key order; apply_scheme_toml owns the
+                // key set and rejects unknown ones.
+                k if k.starts_with("scheme.") => {}
                 other => anyhow::bail!("unknown config key '{other}'"),
             }
         }
+        self.apply_scheme_toml(doc)?;
         // keep job tokens in sync with traffic tokens
         self.job.n_input = self.job_traffic.input_tokens;
         Ok(())
+    }
+
+    /// Assemble the scheme from `[scheme]` keys: an optional preset as
+    /// the base, then builder-style field overrides. This function owns
+    /// the `[scheme]` key set — callers skip `scheme.`-prefixed keys
+    /// and rely on it to reject unknown or mistyped ones.
+    pub(crate) fn apply_scheme_toml(&mut self, doc: &Document) -> anyhow::Result<()> {
+        let mut present = false;
+        for key in doc.keys().filter(|k| k.starts_with("scheme.")) {
+            match key {
+                "scheme.preset" | "scheme.deployment" | "scheme.management"
+                | "scheme.b_comm" | "scheme.b_comp" | "scheme.priority" => present = true,
+                other => anyhow::bail!("unknown scheme key '{other}'"),
+            }
+        }
+        if !present {
+            return Ok(());
+        }
+        let base = match typed_str(doc, "scheme.preset")? {
+            Some(p) => SchemeConfig::preset(p)
+                .ok_or_else(|| anyhow::anyhow!("unknown scheme '{p}'"))?,
+            None => self.scheme.clone(),
+        };
+        let mut deployment = base.deployment;
+        let mut management = base.management;
+        let mut priority = base.priority_scheme;
+        let mut overridden = false;
+        if let Some(s) = typed_str(doc, "scheme.deployment")? {
+            deployment = Deployment::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown deployment '{s}'"))?;
+            overridden = true;
+        }
+        if let Some(m) = typed_str(doc, "scheme.management")? {
+            management = match m {
+                "joint" => Management::Joint,
+                "disjoint" => Management::Disjoint { b_comm: 0.024, b_comp: 0.056 },
+                other => anyhow::bail!("unknown management '{other}'"),
+            };
+            overridden = true;
+        }
+        for (key, pick) in [("scheme.b_comm", 0usize), ("scheme.b_comp", 1usize)] {
+            if let Some(v) = typed_f64(doc, key)? {
+                match &mut management {
+                    Management::Disjoint { b_comm, b_comp } => {
+                        *(if pick == 0 { b_comm } else { b_comp }) = v;
+                    }
+                    Management::Joint => {
+                        anyhow::bail!("'{key}' requires disjoint management")
+                    }
+                }
+                overridden = true;
+            }
+        }
+        if let Some(v) = doc.get("scheme.priority") {
+            priority = v
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("'scheme.priority' must be a bool"))?;
+            overridden = true;
+        }
+        // No-op overrides keep the base's recognizable label; real
+        // changes get an auto-generated one from the builder.
+        let unchanged = deployment == base.deployment
+            && management == base.management
+            && priority == base.priority_scheme;
+        let scheme = if overridden && !unchanged {
+            SchemeConfig::builder()
+                .deployment(deployment)
+                .management(management)
+                .priority(priority)
+                .build()
+        } else {
+            base
+        };
+        *self = self.clone().with_scheme(scheme);
+        Ok(())
+    }
+}
+
+/// Present-but-mistyped config values must error, not be ignored.
+/// Shared with the scenario TOML loader.
+pub(crate) fn typed_str<'a>(
+    doc: &'a Document,
+    key: &str,
+) -> anyhow::Result<Option<&'a str>> {
+    match doc.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_str()
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("'{key}' must be a string")),
+    }
+}
+
+pub(crate) fn typed_f64(doc: &Document, key: &str) -> anyhow::Result<Option<f64>> {
+    match doc.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("'{key}' must be a number")),
+    }
+}
+
+pub(crate) fn typed_i64(doc: &Document, key: &str) -> anyhow::Result<Option<i64>> {
+    match doc.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_i64()
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("'{key}' must be an integer")),
     }
 }
 
@@ -285,6 +475,66 @@ mod tests {
         let mut c = SimConfig::table1();
         let doc = Document::parse("nonsense = 1").unwrap();
         assert!(c.apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn scheme_builder_assembles_custom_schemes() {
+        let s = SchemeConfig::builder()
+            .deployment(Deployment::Cloud)
+            .management(Management::Disjoint { b_comm: 0.030, b_comp: 0.050 })
+            .priority(true)
+            .build();
+        assert_eq!(s.deployment, Deployment::Cloud);
+        assert!(s.priority_scheme);
+        assert!(!s.name.is_empty(), "auto-generated label expected");
+        let named = SchemeConfig::builder().name("mine").build();
+        assert_eq!(named.name, "mine");
+        // presets route through the same builder
+        assert_eq!(SchemeConfig::preset("icc"), Some(SchemeConfig::icc()));
+        assert_eq!(SchemeConfig::preset("zzz"), None);
+    }
+
+    #[test]
+    fn toml_scheme_field_overrides_compose_with_preset() {
+        let mut c = SimConfig::table1();
+        let doc = Document::parse(
+            "[scheme]\npreset = \"mec\"\ndeployment = \"ran\"\nb_comm = 0.030",
+        )
+        .unwrap();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.scheme.deployment, Deployment::Ran);
+        match c.scheme.management {
+            Management::Disjoint { b_comm, b_comp } => {
+                assert!((b_comm - 0.030).abs() < 1e-12);
+                assert!((b_comp - 0.056).abs() < 1e-12);
+            }
+            _ => panic!("must stay disjoint"),
+        }
+        assert!(!c.scheme.priority_scheme);
+        assert!(!c.mac.job_priority);
+    }
+
+    #[test]
+    fn toml_budget_split_requires_disjoint() {
+        let mut c = SimConfig::table1();
+        let doc =
+            Document::parse("[scheme]\npreset = \"icc\"\nb_comm = 0.030").unwrap();
+        assert!(c.apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn toml_scheme_rejects_mistyped_and_unknown_keys() {
+        // mistyped values must error, not be silently dropped
+        for bad in [
+            "[scheme]\ndeployment = 1",
+            "[scheme]\nb_comm = \"0.03\"\nmanagement = \"disjoint\"",
+            "[scheme]\npriority = \"yes\"",
+            "[scheme]\nfrobnicate = true",
+        ] {
+            let mut c = SimConfig::table1();
+            let doc = Document::parse(bad).unwrap();
+            assert!(c.apply_toml(&doc).is_err(), "accepted: {bad}");
+        }
     }
 
     #[test]

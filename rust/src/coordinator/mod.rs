@@ -40,7 +40,7 @@ impl CurvePoint {
 /// number of UEs"). `seeds` > 1 averages independent replications.
 pub fn sweep_arrival_rates(
     base: &SimConfig,
-    scheme: SchemeConfig,
+    scheme: &SchemeConfig,
     rates: &[f64],
     seeds: u32,
 ) -> Vec<CurvePoint> {
@@ -51,17 +51,11 @@ pub fn sweep_arrival_rates(
             cfg.n_ues = (rate / cfg.job_traffic.rate_per_ue).round().max(1.0) as u32;
             let mut agg: Option<SimReport> = None;
             for s in 0..seeds {
-                let r = run_scheme(&cfg, scheme, base.seed + 1000 * s as u64);
+                let r = run_scheme(&cfg, scheme.clone(), base.seed + 1000 * s as u64);
                 agg = Some(match agg {
                     None => r,
                     Some(mut a) => {
-                        a.n_jobs += r.n_jobs;
-                        a.n_satisfied += r.n_satisfied;
-                        a.n_dropped += r.n_dropped;
-                        a.comm.merge(&r.comm);
-                        a.comp.merge(&r.comp);
-                        a.e2e.merge(&r.e2e);
-                        a.tokens_per_sec.merge(&r.tokens_per_sec);
+                        a.merge(&r);
                         a
                     }
                 });
@@ -75,7 +69,7 @@ pub fn sweep_arrival_rates(
 /// (paper Fig 7).
 pub fn sweep_gpu_capacity(
     base: &SimConfig,
-    scheme: SchemeConfig,
+    scheme: &SchemeConfig,
     capacities: &[f64],
     seeds: u32,
 ) -> Vec<CurvePoint> {
@@ -87,16 +81,11 @@ pub fn sweep_gpu_capacity(
             cfg.n_gpus = 1; // aggregated tensor-parallel pool
             let mut agg: Option<SimReport> = None;
             for s in 0..seeds {
-                let r = run_scheme(&cfg, scheme, base.seed + 1000 * s as u64);
+                let r = run_scheme(&cfg, scheme.clone(), base.seed + 1000 * s as u64);
                 agg = Some(match agg {
                     None => r,
                     Some(mut a) => {
-                        a.n_jobs += r.n_jobs;
-                        a.n_satisfied += r.n_satisfied;
-                        a.comm.merge(&r.comm);
-                        a.comp.merge(&r.comp);
-                        a.e2e.merge(&r.e2e);
-                        a.tokens_per_sec.merge(&r.tokens_per_sec);
+                        a.merge(&r);
                         a
                     }
                 });

@@ -14,8 +14,11 @@
 //!   [`mac`] + [`traffic`] (5G uplink SLS), [`llm`] (roofline cost
 //!   model, Eqs 7–8), [`compute`] (compute-node queueing).
 //! * **System** — [`coordinator`] (joint/disjoint latency management,
-//!   the paper's contribution), [`sim`] (end-to-end SLS, Figs 6–7),
-//!   [`runtime`] + [`server`] (real PJRT-backed LLM serving path).
+//!   the paper's contribution), [`scenario`] (the composable Scenario
+//!   API: N workload classes, pluggable service models, multi-node
+//!   routing), [`sim`] (the legacy single-scenario SLS, now a thin
+//!   wrapper over [`scenario`], Figs 6–7), [`runtime`] + [`server`]
+//!   (real PJRT-backed LLM serving path).
 //!
 //! Python/JAX/Pallas exist only on the build path (`make artifacts`);
 //! the serving hot path is pure Rust + PJRT.
@@ -31,6 +34,7 @@ pub mod phy;
 pub mod queueing;
 pub mod rng;
 pub mod runtime;
+pub mod scenario;
 pub mod server;
 pub mod sim;
 pub mod traffic;

@@ -5,6 +5,7 @@
 //!   fig6       Fig 6: SLS satisfaction vs prompt arrival rate
 //!   fig7       Fig 7: SLS satisfaction vs compute capacity (×A100)
 //!   simulate   One SLS run with explicit parameters / TOML config
+//!   scenario   One multi-class / multi-node Scenario-API run
 //!   serve      Real LLM serving over the PJRT runtime (TCP)
 //!   generate   One-shot generation through the AOT artifacts
 
@@ -15,6 +16,7 @@ use icc6g::coordinator::{
 use icc6g::queueing::analytic::{scheme_satisfaction, SystemParams};
 use icc6g::queueing::tandem_mc::empirical_satisfaction;
 use icc6g::queueing::{service_capacity, Scheme};
+use icc6g::scenario::{RoutingPolicy, ScenarioBuilder, ServiceModelKind, WorkloadClass};
 use icc6g::sim::run_scheme;
 use icc6g::util::args::{usage, Args, OptSpec};
 use icc6g::util::bench::{cell, Table};
@@ -29,6 +31,7 @@ fn main() {
         "fig6" => cmd_fig6(&rest),
         "fig7" => cmd_fig7(&rest),
         "simulate" => cmd_simulate(&rest),
+        "scenario" => cmd_scenario(&rest),
         "serve" => cmd_serve(&rest),
         "generate" => cmd_generate(&rest),
         "help" | "--help" | "-h" => {
@@ -53,6 +56,7 @@ fn print_help() {
            fig6       SLS Fig 6: satisfaction vs prompt arrival rate\n\
            fig7       SLS Fig 7: satisfaction vs compute capacity (xA100)\n\
            simulate   one SLS run (--scheme icc|disjoint_ran|mec ...)\n\
+           scenario   one Scenario-API run (multi-class, multi-node)\n\
            serve      real LLM serving over PJRT (--port, --artifacts)\n\
            generate   one-shot generation via the AOT artifacts\n\
            help       this message\n\n\
@@ -142,6 +146,13 @@ fn cmd_fig4(argv: &[String]) -> i32 {
     0
 }
 
+/// Read + parse a TOML config file; the caller prints the error and
+/// exits 2.
+fn load_toml(path: &str) -> Result<icc6g::util::tomlmini::Document, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+    icc6g::util::tomlmini::Document::parse(&text).map_err(|e| e.to_string())
+}
+
 fn common_sim_specs() -> Vec<OptSpec> {
     vec![
         OptSpec { name: "seed", help: "master RNG seed", takes_value: true, default: Some("1") },
@@ -183,18 +194,18 @@ fn cmd_fig6(argv: &[String]) -> i32 {
         &["rate", "scheme", "satisfaction", "avg_comm_ms", "avg_comp_ms"],
     );
     let mut caps = Vec::new();
-    for scheme in schemes {
+    for scheme in &schemes {
         let pts = sweep_arrival_rates(&base, scheme, &rates, seeds);
         for p in &pts {
             t.row(&[
                 cell(p.x, 0),
-                scheme.name.to_string(),
+                scheme.name.clone(),
                 cell(p.satisfaction, 4),
                 cell(p.avg_comm_ms, 2),
                 cell(p.avg_comp_ms, 2),
             ]);
         }
-        caps.push((scheme.name, capacity_from_curve(&pts, alpha)));
+        caps.push((scheme.name.clone(), capacity_from_curve(&pts, alpha)));
     }
     t.print();
     let _ = t.write_csv("fig6_curves.csv");
@@ -237,17 +248,17 @@ fn cmd_fig7(argv: &[String]) -> i32 {
         &["xA100", "scheme", "satisfaction", "avg_tokens_per_s"],
     );
     let mut mins = Vec::new();
-    for scheme in schemes {
+    for scheme in &schemes {
         let pts = sweep_gpu_capacity(&base, scheme, &capacities, seeds);
         for p in &pts {
             t.row(&[
                 cell(p.x, 0),
-                scheme.name.to_string(),
+                scheme.name.clone(),
                 cell(p.satisfaction, 4),
                 cell(p.avg_tokens_per_sec, 1),
             ]);
         }
-        mins.push((scheme.name, min_capacity_from_curve(&pts, alpha)));
+        mins.push((scheme.name.clone(), min_capacity_from_curve(&pts, alpha)));
     }
     t.print();
     let _ = t.write_csv("fig7_curves.csv");
@@ -287,15 +298,18 @@ fn cmd_simulate(argv: &[String]) -> i32 {
     }
     let mut cfg = parse_sim_base(&args);
     cfg.n_ues = args.get_u64("ues").unwrap().unwrap() as u32;
+    // The CLI preset is the base; a `[scheme]` table in the config
+    // file refines or replaces it.
+    let scheme = match SchemeConfig::preset(args.get("scheme").unwrap()) {
+        Some(s) => s,
+        None => {
+            eprintln!("unknown scheme '{}'", args.get("scheme").unwrap());
+            return 2;
+        }
+    };
+    cfg = cfg.with_scheme(scheme);
     if let Some(path) = args.get("config") {
-        let text = match std::fs::read_to_string(path) {
-            Ok(t) => t,
-            Err(e) => {
-                eprintln!("cannot read {path}: {e}");
-                return 2;
-            }
-        };
-        let doc = match icc6g::util::tomlmini::Document::parse(&text) {
+        let doc = match load_toml(path) {
             Ok(d) => d,
             Err(e) => {
                 eprintln!("{e}");
@@ -307,18 +321,10 @@ fn cmd_simulate(argv: &[String]) -> i32 {
             return 2;
         }
     }
-    let scheme = match args.get("scheme").unwrap() {
-        "icc" => SchemeConfig::icc(),
-        "disjoint_ran" => SchemeConfig::disjoint_ran(),
-        "mec" => SchemeConfig::mec(),
-        other => {
-            eprintln!("unknown scheme '{other}'");
-            return 2;
-        }
-    };
     let seed = cfg.seed;
-    let report = run_scheme(&cfg, scheme, seed);
-    println!("scheme       : {}", scheme.name);
+    let scheme_name = cfg.scheme.name.clone();
+    let report = run_scheme(&cfg, cfg.scheme.clone(), seed);
+    println!("scheme       : {scheme_name}");
     println!("offered rate : {:.1} prompts/s", cfg.offered_rate());
     println!("jobs         : {} ({} dropped)", report.n_jobs, report.n_dropped);
     println!("satisfaction : {:.4}", report.satisfaction_rate());
@@ -326,6 +332,141 @@ fn cmd_simulate(argv: &[String]) -> i32 {
     println!("avg comp     : {:.2} ms", report.comp.mean() * 1e3);
     println!("avg e2e      : {:.2} ms", report.e2e.mean() * 1e3);
     println!("avg tokens/s : {:.1}", report.tokens_per_sec.mean());
+    0
+}
+
+fn cmd_scenario(argv: &[String]) -> i32 {
+    let specs = [
+        OptSpec { name: "config", help: "scenario TOML file ([[workload]]/[[node]] tables)", takes_value: true, default: None },
+        OptSpec { name: "scheme", help: "icc | disjoint_ran | mec", takes_value: true, default: Some("icc") },
+        OptSpec { name: "ues", help: "number of UEs", takes_value: true, default: Some("20") },
+        OptSpec { name: "nodes", help: "compute nodes (demo mix)", takes_value: true, default: Some("2") },
+        OptSpec { name: "routing", help: "least_loaded | rr | affinity", takes_value: true, default: Some("least_loaded") },
+        OptSpec { name: "service", help: "roofline | token_sampled", takes_value: true, default: Some("token_sampled") },
+        OptSpec { name: "horizon", help: "simulated seconds", takes_value: true, default: Some("12") },
+        OptSpec { name: "seed", help: "master RNG seed", takes_value: true, default: Some("1") },
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = match Args::parse(argv.iter().cloned(), &specs) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if args.flag("help") {
+        print!(
+            "{}",
+            usage(
+                "icc6g scenario",
+                "One Scenario-API run: composable workloads on a multi-node tier",
+                &specs
+            )
+        );
+        return 0;
+    }
+    let scheme = match SchemeConfig::preset(args.get("scheme").unwrap()) {
+        Some(s) => s,
+        None => {
+            eprintln!("unknown scheme '{}'", args.get("scheme").unwrap());
+            return 2;
+        }
+    };
+    let Some(routing) = RoutingPolicy::parse(args.get("routing").unwrap()) else {
+        eprintln!("unknown routing policy '{}'", args.get("routing").unwrap());
+        return 2;
+    };
+    let Some(service) = ServiceModelKind::parse(args.get("service").unwrap()) else {
+        eprintln!("unknown service model '{}'", args.get("service").unwrap());
+        return 2;
+    };
+    let (ues, seed, n_nodes, horizon) = match (
+        args.get_u64("ues"),
+        args.get_u64("seed"),
+        args.get_u64("nodes"),
+        args.get_f64("horizon"),
+    ) {
+        (Ok(u), Ok(s), Ok(n), Ok(h)) => {
+            (u.unwrap(), s.unwrap(), n.unwrap(), h.unwrap())
+        }
+        (Err(e), ..) | (_, Err(e), ..) | (_, _, Err(e), _) | (_, _, _, Err(e)) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if !(1..=1_000_000).contains(&ues) {
+        eprintln!("--ues must be in 1..=1000000");
+        return 2;
+    }
+    if horizon <= 0.0 {
+        eprintln!("--horizon must be positive");
+        return 2;
+    }
+    if !(1..=1024).contains(&n_nodes) {
+        eprintln!("--nodes must be in 1..=1024");
+        return 2;
+    }
+    // Built-in demo mix: 3 classes over N identical nodes. A config
+    // file's [[workload]]/[[node]] tables replace these defaults.
+    let mut b = ScenarioBuilder::new()
+        .scheme(scheme)
+        .n_ues(ues as u32)
+        .horizon(horizon)
+        .seed(seed)
+        .routing(routing)
+        .service_kind(service)
+        .workload(WorkloadClass::translation())
+        .workload(WorkloadClass::chat())
+        .workload(WorkloadClass::summarization());
+    for _ in 0..n_nodes {
+        b = b.node(icc6g::llm::GpuSpec::gh200_nvl2().scaled(2.0), 1);
+    }
+    if let Some(path) = args.get("config") {
+        let doc = match load_toml(path) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        b = match b.apply_toml(&doc) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+    }
+    let scenario = b.build();
+    let res = scenario.run();
+    println!("scheme       : {}", scenario.scheme().name);
+    println!("service      : {}", scenario.service_name());
+    println!(
+        "routing      : {} over {} node(s)",
+        scenario.routing().name(),
+        scenario.nodes().len()
+    );
+    println!("offered rate : {:.1} jobs/s", scenario.offered_rate());
+    println!("jobs         : {} ({} dropped)", res.report.n_jobs, res.report.n_dropped);
+    println!("satisfaction : {:.4}", res.report.satisfaction_rate());
+    println!("events       : {}", res.events);
+    let mut t = Table::new(
+        "per-class breakdown",
+        &["class", "jobs", "dropped", "satisfaction", "avg_comm_ms", "avg_comp_ms", "avg_e2e_ms"],
+    );
+    for c in &res.report.per_class {
+        t.row(&[
+            c.name.clone(),
+            c.n_jobs.to_string(),
+            c.n_dropped.to_string(),
+            cell(c.satisfaction_rate(), 4),
+            cell(c.comm.mean() * 1e3, 2),
+            cell(c.comp.mean() * 1e3, 2),
+            cell(c.e2e.mean() * 1e3, 2),
+        ]);
+    }
+    t.print();
+    let _ = t.write_csv("scenario_classes.csv");
     0
 }
 

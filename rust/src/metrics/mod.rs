@@ -19,6 +19,8 @@ pub enum JobFate {
 #[derive(Debug, Clone, Copy)]
 pub struct JobOutcome {
     pub job_id: u64,
+    /// Workload class the job belongs to (0 for single-class runs).
+    pub class_id: u32,
     /// Generation time at the UE.
     pub t_gen: f64,
     /// UE→BS communication latency (uplink queueing + transmission).
@@ -85,6 +87,75 @@ impl LatencyManagement {
     }
 }
 
+/// Per-workload-class slice of a [`SimReport`] (multi-class scenarios;
+/// the quantities a per-class SLO would be judged on).
+#[derive(Debug, Clone)]
+pub struct ClassReport {
+    pub name: String,
+    pub n_jobs: u64,
+    pub n_satisfied: u64,
+    pub n_dropped: u64,
+    pub comm: Welford,
+    pub comp: Welford,
+    pub e2e: Welford,
+    pub tokens_per_sec: Welford,
+}
+
+impl ClassReport {
+    fn new(name: String) -> Self {
+        Self {
+            name,
+            n_jobs: 0,
+            n_satisfied: 0,
+            n_dropped: 0,
+            comm: Welford::new(),
+            comp: Welford::new(),
+            e2e: Welford::new(),
+            tokens_per_sec: Welford::new(),
+        }
+    }
+
+    fn observe(&mut self, j: &JobOutcome, policy: &LatencyManagement) {
+        match j.fate {
+            JobFate::InFlight => {}
+            JobFate::Dropped => {
+                self.n_jobs += 1;
+                self.n_dropped += 1;
+                // comm latency still observed for dropped jobs
+                self.comm.push(j.t_comm);
+            }
+            JobFate::Completed => {
+                self.n_jobs += 1;
+                if policy.satisfied(j) {
+                    self.n_satisfied += 1;
+                }
+                self.comm.push(j.t_comm);
+                self.comp.push(j.t_comp());
+                self.e2e.push(j.e2e());
+                self.tokens_per_sec.push(j.tokens_per_sec());
+            }
+        }
+    }
+
+    pub fn satisfaction_rate(&self) -> f64 {
+        if self.n_jobs == 0 {
+            f64::NAN
+        } else {
+            self.n_satisfied as f64 / self.n_jobs as f64
+        }
+    }
+
+    fn merge(&mut self, other: &ClassReport) {
+        self.n_jobs += other.n_jobs;
+        self.n_satisfied += other.n_satisfied;
+        self.n_dropped += other.n_dropped;
+        self.comm.merge(&other.comm);
+        self.comp.merge(&other.comp);
+        self.e2e.merge(&other.e2e);
+        self.tokens_per_sec.merge(&other.tokens_per_sec);
+    }
+}
+
 /// Aggregated simulation report.
 #[derive(Debug, Clone)]
 pub struct SimReport {
@@ -95,11 +166,85 @@ pub struct SimReport {
     pub comp: Welford,
     pub e2e: Welford,
     pub tokens_per_sec: Welford,
+    /// Per-workload-class breakdown. Populated by
+    /// [`SimReport::from_outcomes_per_class`]; empty for single-policy
+    /// reports built with [`SimReport::from_outcomes`].
+    pub per_class: Vec<ClassReport>,
 }
 
 impl SimReport {
     pub fn from_outcomes(outcomes: &[JobOutcome], policy: &LatencyManagement) -> Self {
-        let mut r = Self {
+        let mut all = ClassReport::new(String::new());
+        for j in outcomes {
+            all.observe(j, policy);
+        }
+        let mut r = Self::empty();
+        r.absorb(&all);
+        r
+    }
+
+    /// Build the report for a multi-class run: each outcome is judged
+    /// by its own class policy, and the overall totals are the exact
+    /// sums/merges of the per-class slices.
+    pub fn from_outcomes_per_class(
+        outcomes: &[JobOutcome],
+        classes: &[(String, LatencyManagement)],
+    ) -> Self {
+        let mut per: Vec<ClassReport> =
+            classes.iter().map(|(name, _)| ClassReport::new(name.clone())).collect();
+        for j in outcomes {
+            let cls = j.class_id as usize;
+            assert!(cls < per.len(), "outcome class {cls} out of range");
+            per[cls].observe(j, &classes[cls].1);
+        }
+        let mut r = Self::empty();
+        for cr in &per {
+            r.absorb(cr);
+        }
+        r.per_class = per;
+        r
+    }
+
+    /// Fold one per-class slice into the overall totals.
+    fn absorb(&mut self, cr: &ClassReport) {
+        self.n_jobs += cr.n_jobs;
+        self.n_satisfied += cr.n_satisfied;
+        self.n_dropped += cr.n_dropped;
+        self.comm.merge(&cr.comm);
+        self.comp.merge(&cr.comp);
+        self.e2e.merge(&cr.e2e);
+        self.tokens_per_sec.merge(&cr.tokens_per_sec);
+    }
+
+    /// Merge an independent replication into this report, keeping the
+    /// "per-class slices sum to the totals" invariant: matching class
+    /// lists merge slice-wise; mismatched ones clear `per_class`
+    /// rather than leave a stale single-replication breakdown.
+    pub fn merge(&mut self, other: &SimReport) {
+        self.n_jobs += other.n_jobs;
+        self.n_satisfied += other.n_satisfied;
+        self.n_dropped += other.n_dropped;
+        self.comm.merge(&other.comm);
+        self.comp.merge(&other.comp);
+        self.e2e.merge(&other.e2e);
+        self.tokens_per_sec.merge(&other.tokens_per_sec);
+        let classes_match = self.per_class.len() == other.per_class.len()
+            && self
+                .per_class
+                .iter()
+                .zip(&other.per_class)
+                .all(|(a, b)| a.name == b.name);
+        if classes_match {
+            for (a, b) in self.per_class.iter_mut().zip(&other.per_class) {
+                a.merge(b);
+            }
+        } else {
+            self.per_class.clear();
+        }
+    }
+
+    fn empty() -> Self {
+        Self {
             n_jobs: 0,
             n_satisfied: 0,
             n_dropped: 0,
@@ -107,29 +252,8 @@ impl SimReport {
             comp: Welford::new(),
             e2e: Welford::new(),
             tokens_per_sec: Welford::new(),
-        };
-        for j in outcomes {
-            match j.fate {
-                JobFate::InFlight => continue,
-                JobFate::Dropped => {
-                    r.n_jobs += 1;
-                    r.n_dropped += 1;
-                    // comm latency still observed for dropped jobs
-                    r.comm.push(j.t_comm);
-                }
-                JobFate::Completed => {
-                    r.n_jobs += 1;
-                    if policy.satisfied(j) {
-                        r.n_satisfied += 1;
-                    }
-                    r.comm.push(j.t_comm);
-                    r.comp.push(j.t_comp());
-                    r.e2e.push(j.e2e());
-                    r.tokens_per_sec.push(j.tokens_per_sec());
-                }
-            }
+            per_class: Vec::new(),
         }
-        r
     }
 
     /// Fraction of (non-in-flight) jobs satisfied — the Y axis of
@@ -150,6 +274,7 @@ mod tests {
     fn done(t_comm: f64, t_queue: f64, t_service: f64) -> JobOutcome {
         JobOutcome {
             job_id: 0,
+            class_id: 0,
             t_gen: 0.0,
             t_comm,
             t_wireline: 0.005,
@@ -217,5 +342,39 @@ mod tests {
         let r = SimReport::from_outcomes(&[j], &LatencyManagement::Joint { b_total: 0.080 });
         assert_eq!(r.n_jobs, 0);
         assert!(r.satisfaction_rate().is_nan());
+    }
+
+    #[test]
+    fn per_class_totals_sum_to_overall() {
+        // Two classes with different budgets: the strict class fails
+        // where the lenient one passes, and the overall report is the
+        // exact sum of the slices.
+        let mut tight = done(0.010, 0.030, 0.035); // e2e = 80 ms
+        tight.class_id = 0;
+        let mut loose = done(0.010, 0.030, 0.035);
+        loose.class_id = 1;
+        let mut dropped = done(0.02, 0.0, 0.0);
+        dropped.class_id = 1;
+        dropped.fate = JobFate::Dropped;
+        let classes = vec![
+            ("tight".to_string(), LatencyManagement::Joint { b_total: 0.070 }),
+            ("loose".to_string(), LatencyManagement::Joint { b_total: 0.100 }),
+        ];
+        let r = SimReport::from_outcomes_per_class(&[tight, loose, dropped], &classes);
+        assert_eq!(r.per_class.len(), 2);
+        assert_eq!(r.per_class[0].name, "tight");
+        assert_eq!(r.per_class[0].n_satisfied, 0);
+        assert_eq!(r.per_class[1].n_satisfied, 1);
+        assert_eq!(r.per_class[1].n_dropped, 1);
+        let (mut jobs, mut sat, mut drop_) = (0, 0, 0);
+        for c in &r.per_class {
+            jobs += c.n_jobs;
+            sat += c.n_satisfied;
+            drop_ += c.n_dropped;
+        }
+        assert_eq!(r.n_jobs, jobs);
+        assert_eq!(r.n_satisfied, sat);
+        assert_eq!(r.n_dropped, drop_);
+        assert_eq!(r.comm.count(), 3);
     }
 }

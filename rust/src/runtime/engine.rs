@@ -15,6 +15,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use super::weights::Weights;
+use super::xla;
 
 /// Architecture metadata from `artifacts/model_meta.txt`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

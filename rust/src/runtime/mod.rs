@@ -7,6 +7,7 @@
 pub mod engine;
 pub mod tokenizer;
 pub mod weights;
+mod xla;
 
 pub use engine::{argmax, Engine, GenStats, KvCache, ModelMeta};
 pub use weights::{Tensor, Weights};

@@ -1,0 +1,348 @@
+//! The scenario event loop: the Fig 5 pipeline generalized to N
+//! workload classes and M compute nodes.
+//!
+//! ```text
+//! UE job gen (per class) ──► RLC buffers ──► slot scheduler ──► gNB
+//!      │                          ▲                              │
+//!  background ────────────────────┘               wireline (RAN/MEC)
+//!                                                                ▼
+//!   per-class outcomes ◄── ServiceModel ◄── Routing ──► node 0..M
+//! ```
+//!
+//! Stream discipline: every entity draws from its own substream of the
+//! master seed from a disjoint id range (no aliasing up to the 1 M UE
+//! config cap), the event-handler logic mirrors the legacy `Sls::run`
+//! loop line for line, and `TokenDist::Fixed` consumes no randomness —
+//! so single-class runs are exactly as deterministic and statistically
+//! identical to the seed SLS.
+
+use crate::compute::{ComputeJob, ComputeNode, Discipline, NodeEvent};
+use crate::config::{Management, SchemeConfig};
+use crate::dess::EventQueue;
+use crate::mac::{Sdu, SduKind, UeMac};
+use crate::mac::UlScheduler;
+use crate::metrics::{JobFate, JobOutcome, LatencyManagement, SimReport};
+use crate::phy::channel::LargeScale;
+use crate::rng::Rng;
+
+use super::routing::NodeView;
+use super::Scenario;
+
+/// Map a scheme to the node queue discipline.
+pub fn discipline_of(scheme: &SchemeConfig) -> Discipline {
+    if scheme.priority_scheme {
+        Discipline::DeadlinePriority { drop_hopeless: true }
+    } else {
+        Discipline::Fifo
+    }
+}
+
+/// Map a scheme to the satisfaction policy for one class budget.
+pub fn management_of(scheme: &SchemeConfig, b_total: f64) -> LatencyManagement {
+    match scheme.management {
+        Management::Joint => LatencyManagement::Joint { b_total },
+        Management::Disjoint { b_comm, b_comp } => {
+            LatencyManagement::Disjoint { b_total, b_comm, b_comp }
+        }
+    }
+}
+
+/// Result of one scenario run.
+#[derive(Debug)]
+pub struct ScenarioResult {
+    pub outcomes: Vec<JobOutcome>,
+    /// Aggregate report with `per_class` populated.
+    pub report: SimReport,
+    /// Simulated events processed.
+    pub events: u64,
+    /// Simulated seconds per wall-clock second.
+    pub speedup: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    /// MAC slot boundary.
+    Slot,
+    /// Job of `class` generated at UE `ue`.
+    JobArrival { ue: usize, class: usize },
+    /// Background packet at UE `ue`.
+    BgArrival { ue: usize },
+    /// Prompt fully received at gNB crossed the wireline.
+    ComputeEnqueue { job: u64 },
+    /// Compute node `node` finished `job`.
+    ComputeDone { node: usize, job: u64 },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct JobState {
+    class: usize,
+    t_gen: f64,
+    /// Set when the last prompt byte reaches the gNB.
+    t_comm: Option<f64>,
+    t_node_arrival: Option<f64>,
+    t_service_start: Option<f64>,
+    /// Realized prompt length (sampled at generation).
+    n_input: u32,
+    /// Realized output length (set when the service model prices it).
+    n_output: u32,
+    /// Realized service time (set at node arrival).
+    service_time: f64,
+    fate: JobFate,
+    measured: bool,
+}
+
+/// Node-event plumbing: schedule completions for started jobs, mark
+/// drops.
+fn apply_node_events(
+    node: usize,
+    events: Vec<NodeEvent>,
+    jobs: &mut [JobState],
+    q: &mut EventQueue<Ev>,
+    now: f64,
+) {
+    for ev in events {
+        match ev {
+            NodeEvent::Started { job, completes_at } => {
+                jobs[job.job_id as usize].t_service_start = Some(now);
+                q.schedule_at(completes_at, Ev::ComputeDone { node, job: job.job_id });
+            }
+            NodeEvent::Dropped { job } => {
+                jobs[job.job_id as usize].fate = JobFate::Dropped;
+            }
+        }
+    }
+}
+
+pub(super) fn run(sc: &Scenario) -> ScenarioResult {
+    let wall0 = std::time::Instant::now();
+    let cfg = &sc.base;
+    let master = cfg.seed;
+    let slot_dur = cfg.carrier.slot_duration();
+    let n_ues = cfg.n_ues as usize;
+    let n_classes = sc.classes.len();
+    assert!(n_classes > 0, "scenario needs at least one workload class");
+    assert!(!sc.nodes.is_empty(), "scenario needs at least one compute node");
+
+    let scheduler = UlScheduler::new(cfg.mac, cfg.carrier);
+    let discipline = discipline_of(&cfg.scheme);
+    let mut nodes: Vec<ComputeNode> =
+        sc.nodes.iter().map(|n| ComputeNode::new(discipline, n.n_servers)).collect();
+    let mut router = sc.make_router();
+    let t_wireline = cfg.scheme.deployment.wireline_latency();
+
+    // Independent randomness per concern, with disjoint stream-id
+    // ranges: per-(class, UE) job streams start at 0x1000_0000 and are
+    // spaced 0x100_0000 per class (well above the 1 M UE config cap);
+    // background streams live at 0x2000 + ue, far below them.
+    let mut rng_drop = Rng::substream(master, 0xD0);
+    let mut rng_mac = Rng::substream(master, 0xAC);
+    let mut rng_svc = Rng::substream(master, 0x5E);
+    let mut job_rng: Vec<Vec<Rng>> = (0..n_classes)
+        .map(|c| {
+            (0..n_ues)
+                .map(|ue| {
+                    Rng::substream(
+                        master,
+                        0x1000_0000 + 0x100_0000 * c as u64 + ue as u64,
+                    )
+                })
+                .collect()
+        })
+        .collect();
+    let mut ue_bg_rng: Vec<Rng> =
+        (0..n_ues).map(|ue| Rng::substream(master, 0x2000 + ue as u64)).collect();
+
+    // Drop UEs in the cell (staggered SR phases).
+    let mut ues: Vec<UeMac> = (0..n_ues)
+        .map(|i| {
+            UeMac::new(LargeScale::drop(&mut rng_drop, cfg.cell_r_min, cfg.cell_r_max))
+                .with_sr_phase(i as u64)
+        })
+        .collect();
+
+    let mut jobs: Vec<JobState> = Vec::with_capacity(4096);
+    let mut q: EventQueue<Ev> = EventQueue::new();
+    // Reused per-enqueue routing snapshot (keeps the hot path
+    // allocation-free).
+    let mut views: Vec<NodeView> = Vec::with_capacity(sc.nodes.len());
+
+    // Prime arrival processes + the slot clock.
+    for ue in 0..n_ues {
+        for (c, class) in sc.classes.iter().enumerate() {
+            let gap = job_rng[c][ue].exp(class.rate_per_ue);
+            q.schedule_at(gap, Ev::JobArrival { ue, class: c });
+        }
+        let bg_rate = 1.0 / cfg.background.mean_interval();
+        q.schedule_at(ue_bg_rng[ue].exp(bg_rate), Ev::BgArrival { ue });
+    }
+    q.schedule_at(slot_dur, Ev::Slot);
+
+    let sr_period = cfg.mac.effective_sr_period(cfg.n_ues);
+    let sr_proc = cfg.mac.grant_proc_slots;
+    let bg_bytes = cfg.background.packet_bytes;
+    let drain_horizon = cfg.horizon + 2.0;
+    let mut slot_idx: u64 = 0;
+
+    while let Some(t) = q.peek_time() {
+        if t > drain_horizon {
+            break;
+        }
+        let (now, ev) = q.pop().unwrap();
+        match ev {
+            Ev::JobArrival { ue, class } => {
+                if now < cfg.horizon {
+                    let spec = &sc.classes[class];
+                    let n_input = spec.input_tokens.sample(&mut job_rng[class][ue]);
+                    let job_id = jobs.len() as u64;
+                    jobs.push(JobState {
+                        class,
+                        t_gen: now,
+                        t_comm: None,
+                        t_node_arrival: None,
+                        t_service_start: None,
+                        n_input,
+                        n_output: 0,
+                        service_time: 0.0,
+                        fate: JobFate::InFlight,
+                        measured: now >= cfg.warmup,
+                    });
+                    let arrival_slot = (now / slot_dur) as u64;
+                    ues[ue].note_arrival(arrival_slot, sr_period, sr_proc);
+                    if cfg.mac.job_priority {
+                        // ICC job-aware prioritization: dedicated SR
+                        // resource bypasses the shared cycle.
+                        ues[ue].note_job_arrival_expedited(arrival_slot, sr_proc);
+                    }
+                    let bytes = spec.request_bytes(n_input);
+                    ues[ue].push_job_sdu(Sdu {
+                        kind: SduKind::Job { job_id },
+                        total_bytes: bytes,
+                        bytes_left: bytes,
+                        t_arrival: now,
+                    });
+                    let gap = job_rng[class][ue].exp(spec.rate_per_ue);
+                    q.schedule_in(gap, Ev::JobArrival { ue, class });
+                }
+            }
+            Ev::BgArrival { ue } => {
+                if now < cfg.horizon {
+                    let arrival_slot = (now / slot_dur) as u64;
+                    ues[ue].note_arrival(arrival_slot, sr_period, sr_proc);
+                    ues[ue].push_bg_sdu(Sdu {
+                        kind: SduKind::Background,
+                        total_bytes: bg_bytes,
+                        bytes_left: bg_bytes,
+                        t_arrival: now,
+                    });
+                    let bg_rate = 1.0 / cfg.background.mean_interval();
+                    q.schedule_in(ue_bg_rng[ue].exp(bg_rate), Ev::BgArrival { ue });
+                }
+            }
+            Ev::Slot => {
+                let results = scheduler.schedule_slot(slot_idx, &mut ues, &mut rng_mac);
+                slot_idx += 1;
+                // TBs land at the end of the slot.
+                let t_rx = now + slot_dur;
+                for r in results {
+                    for d in r.delivered {
+                        if let SduKind::Job { job_id } = d.kind {
+                            let js = &mut jobs[job_id as usize];
+                            js.t_comm = Some(t_rx - js.t_gen);
+                            q.schedule_at(
+                                t_rx + t_wireline,
+                                Ev::ComputeEnqueue { job: job_id },
+                            );
+                        }
+                    }
+                }
+                // Keep the slot clock running while anything is active.
+                let active =
+                    now < cfg.horizon || ues.iter().any(|u| u.buffered_bytes() > 0);
+                if active {
+                    q.schedule_in(slot_dur, Ev::Slot);
+                }
+            }
+            Ev::ComputeEnqueue { job } => {
+                let (class_id, n_input, t_gen, t_comm) = {
+                    let js = &jobs[job as usize];
+                    (js.class, js.n_input, js.t_gen, js.t_comm.expect("enqueue before comm done"))
+                };
+                let spec = &sc.classes[class_id];
+                views.clear();
+                views.extend(nodes.iter().zip(sc.nodes.iter()).map(|(n, s)| NodeView {
+                    queue_len: n.queue_len(),
+                    busy_servers: n.busy_servers(),
+                    n_servers: s.n_servers,
+                }));
+                let target = router.pick(class_id, &views);
+                // A routing bug must fail loudly: silently clamping
+                // would report single-node results as multi-node.
+                assert!(
+                    target < nodes.len(),
+                    "Routing::pick returned {target} for {} nodes",
+                    nodes.len()
+                );
+                let demand =
+                    sc.service.realize(spec, n_input, &sc.nodes[target].gpu, &mut rng_svc);
+                {
+                    let js = &mut jobs[job as usize];
+                    js.n_output = demand.n_output;
+                    js.service_time = demand.service_time;
+                    js.t_node_arrival = Some(now);
+                }
+                let cj = ComputeJob {
+                    job_id: job,
+                    t_gen,
+                    t_comm,
+                    deadline: t_gen + spec.b_total,
+                    service_time: demand.service_time,
+                };
+                let evs = nodes[target].enqueue(cj, now);
+                apply_node_events(target, evs, &mut jobs, &mut q, now);
+            }
+            Ev::ComputeDone { node, job } => {
+                jobs[job as usize].fate = JobFate::Completed;
+                let evs = nodes[node].complete(now);
+                apply_node_events(node, evs, &mut jobs, &mut q, now);
+            }
+        }
+    }
+
+    // Assemble outcomes for measured jobs.
+    let outcomes: Vec<JobOutcome> = jobs
+        .iter()
+        .enumerate()
+        .filter(|(_, j)| j.measured)
+        .map(|(id, j)| {
+            let (t_queue, t_service) = match (j.t_node_arrival, j.t_service_start) {
+                (Some(a), Some(s)) => (s - a, j.service_time),
+                _ => (0.0, 0.0),
+            };
+            JobOutcome {
+                job_id: id as u64,
+                class_id: j.class as u32,
+                t_gen: j.t_gen,
+                t_comm: j.t_comm.unwrap_or(0.0),
+                t_wireline,
+                t_queue,
+                t_service,
+                tokens: j.n_input + j.n_output,
+                fate: j.fate,
+            }
+        })
+        .collect();
+
+    let class_policies: Vec<(String, LatencyManagement)> = sc
+        .classes
+        .iter()
+        .map(|c| (c.name.clone(), management_of(&cfg.scheme, c.b_total)))
+        .collect();
+    let report = SimReport::from_outcomes_per_class(&outcomes, &class_policies);
+    let wall = wall0.elapsed().as_secs_f64();
+    ScenarioResult {
+        outcomes,
+        report,
+        events: q.processed(),
+        speedup: if wall > 0.0 { cfg.horizon / wall } else { f64::INFINITY },
+    }
+}

@@ -1,0 +1,530 @@
+//! The composable Scenario API — the crate's simulation entry point.
+//!
+//! The legacy [`crate::sim::Sls`] ran exactly one job class, one
+//! deterministic service time, and one compute node. A [`Scenario`]
+//! instead assembles:
+//!
+//! * N [`WorkloadClass`]es (own arrival rate, token distributions,
+//!   model constants, and latency budget each),
+//! * a pluggable [`ServiceModel`] (deterministic roofline or per-job
+//!   token-sampled prefill/decode),
+//! * M compute nodes behind a [`Routing`] policy (least-loaded,
+//!   round-robin, class-affinity),
+//!
+//! on top of the same 5G uplink SLS substrate (PHY/MAC/traffic). The
+//! legacy API is preserved as a thin wrapper: `Sls::new(cfg)` builds a
+//! single-class scenario via [`ScenarioBuilder::from_sim_config`]
+//! whose event loop preserves the legacy `Sls::run` semantics (same
+//! handler logic, per-entity substreams, deterministic per seed; the
+//! substream *ids* were re-spaced to kill a >4096-UE aliasing bug, so
+//! per-seed realizations differ from the seed repo's).
+//!
+//! ```no_run
+//! use icc6g::config::SchemeConfig;
+//! use icc6g::llm::GpuSpec;
+//! use icc6g::scenario::{RoutingPolicy, ScenarioBuilder, ServiceModelKind, WorkloadClass};
+//!
+//! let result = ScenarioBuilder::new()
+//!     .scheme(SchemeConfig::icc())
+//!     .n_ues(60)
+//!     .workload(WorkloadClass::chat())
+//!     .workload(WorkloadClass::translation())
+//!     .node(GpuSpec::gh200_nvl2().scaled(2.0), 1)
+//!     .node(GpuSpec::gh200_nvl2().scaled(2.0), 1)
+//!     .service_kind(ServiceModelKind::TokenSampled)
+//!     .routing(RoutingPolicy::LeastLoaded)
+//!     .build()
+//!     .run();
+//! for class in &result.report.per_class {
+//!     println!("{}: {:.3}", class.name, class.satisfaction_rate());
+//! }
+//! ```
+
+mod engine;
+pub mod routing;
+pub mod service;
+pub mod workload;
+
+pub use engine::{discipline_of, management_of, ScenarioResult};
+pub use routing::{ClassAffinity, LeastLoaded, NodeView, RoundRobin, Routing, RoutingPolicy};
+pub use service::{
+    RooflineService, ServiceDemand, ServiceModel, ServiceModelKind, TokenSampledService,
+};
+pub use workload::{workloads_from_toml, workloads_to_toml, TokenDist, WorkloadClass};
+
+use crate::config::{typed_f64, typed_i64, typed_str, SchemeConfig, SimConfig};
+use crate::llm::GpuSpec;
+use crate::util::tomlmini::Document;
+
+/// One compute node of the tier: an aggregated accelerator pool and
+/// its number of parallel servers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeSpec {
+    pub gpu: GpuSpec,
+    pub n_servers: u32,
+}
+
+/// Factory producing a fresh router per run (routers may keep per-run
+/// state, e.g. the round-robin cursor).
+type RouterFactory = Box<dyn Fn() -> Box<dyn Routing>>;
+
+/// A fully-assembled scenario. `run` is `&self` and fully
+/// deterministic: calling it again reproduces the identical
+/// trajectory. Independent replications need distinct seeds — build
+/// one scenario per seed via [`ScenarioBuilder::seed`] (as the
+/// coordinator sweeps do).
+pub struct Scenario {
+    pub(crate) base: SimConfig,
+    pub(crate) classes: Vec<WorkloadClass>,
+    pub(crate) nodes: Vec<NodeSpec>,
+    pub(crate) service: Box<dyn ServiceModel>,
+    pub(crate) routing: RoutingPolicy,
+    pub(crate) router_factory: Option<RouterFactory>,
+}
+
+impl std::fmt::Debug for Scenario {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Scenario")
+            .field("base", &self.base)
+            .field("classes", &self.classes)
+            .field("nodes", &self.nodes)
+            .field("service", &self.service)
+            .field("routing", &self.routing)
+            .field("custom_router", &self.router_factory.is_some())
+            .finish()
+    }
+}
+
+impl Scenario {
+    pub fn builder() -> ScenarioBuilder {
+        ScenarioBuilder::new()
+    }
+
+    /// Run the simulation and aggregate per-class + overall reports.
+    pub fn run(&self) -> ScenarioResult {
+        engine::run(self)
+    }
+
+    pub fn classes(&self) -> &[WorkloadClass] {
+        &self.classes
+    }
+
+    pub fn nodes(&self) -> &[NodeSpec] {
+        &self.nodes
+    }
+
+    pub fn scheme(&self) -> &SchemeConfig {
+        &self.base.scheme
+    }
+
+    /// The configured built-in policy (ignored when a custom router
+    /// was installed via [`ScenarioBuilder::routing_model`]).
+    pub fn routing(&self) -> RoutingPolicy {
+        self.routing
+    }
+
+    /// A fresh router for one run.
+    pub(crate) fn make_router(&self) -> Box<dyn Routing> {
+        match &self.router_factory {
+            Some(factory) => factory(),
+            None => self.routing.build(),
+        }
+    }
+
+    pub fn service_name(&self) -> &'static str {
+        self.service.name()
+    }
+
+    /// Total offered job rate across the cell (jobs/s, all classes).
+    pub fn offered_rate(&self) -> f64 {
+        self.base.n_ues as f64 * self.classes.iter().map(|c| c.rate_per_ue).sum::<f64>()
+    }
+}
+
+/// Assembles a [`Scenario`] from workload classes, a compute tier, a
+/// service model and a routing policy, on top of a radio/scheme base
+/// (Table I defaults unless overridden).
+pub struct ScenarioBuilder {
+    base: SimConfig,
+    classes: Vec<WorkloadClass>,
+    nodes: Vec<NodeSpec>,
+    service: Box<dyn ServiceModel>,
+    routing: RoutingPolicy,
+    router_factory: Option<RouterFactory>,
+}
+
+impl std::fmt::Debug for ScenarioBuilder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ScenarioBuilder")
+            .field("base", &self.base)
+            .field("classes", &self.classes)
+            .field("nodes", &self.nodes)
+            .field("service", &self.service)
+            .field("routing", &self.routing)
+            .field("custom_router", &self.router_factory.is_some())
+            .finish()
+    }
+}
+
+impl Default for ScenarioBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ScenarioBuilder {
+    pub fn new() -> Self {
+        Self {
+            base: SimConfig::table1(),
+            classes: Vec::new(),
+            nodes: Vec::new(),
+            service: Box::new(RooflineService),
+            routing: RoutingPolicy::LeastLoaded,
+            router_factory: None,
+        }
+    }
+
+    /// Mirror a legacy [`SimConfig`] as a single-class, single-node
+    /// scenario (the [`crate::sim::Sls`] compatibility path).
+    pub fn from_sim_config(cfg: &SimConfig) -> Self {
+        Self {
+            base: cfg.clone(),
+            classes: vec![WorkloadClass::from_legacy(&cfg.job_traffic, &cfg.job)],
+            nodes: vec![NodeSpec { gpu: cfg.gpu, n_servers: cfg.n_gpus }],
+            service: Box::new(RooflineService),
+            routing: RoutingPolicy::LeastLoaded,
+            router_factory: None,
+        }
+    }
+
+    /// Apply a scheme (also syncs the MAC priority flag).
+    pub fn scheme(mut self, scheme: SchemeConfig) -> Self {
+        self.base = self.base.with_scheme(scheme);
+        self
+    }
+
+    pub fn n_ues(mut self, n: u32) -> Self {
+        assert!(n >= 1);
+        self.base.n_ues = n;
+        self
+    }
+
+    pub fn horizon(mut self, seconds: f64) -> Self {
+        assert!(seconds > 0.0);
+        self.base.horizon = seconds;
+        self
+    }
+
+    pub fn warmup(mut self, seconds: f64) -> Self {
+        assert!(seconds >= 0.0);
+        self.base.warmup = seconds;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.base.seed = seed;
+        self
+    }
+
+    /// Add one workload class.
+    pub fn workload(mut self, class: WorkloadClass) -> Self {
+        self.classes.push(class);
+        self
+    }
+
+    /// Add one compute node.
+    pub fn node(mut self, gpu: GpuSpec, n_servers: u32) -> Self {
+        assert!(n_servers >= 1);
+        self.nodes.push(NodeSpec { gpu, n_servers });
+        self
+    }
+
+    /// Install an arbitrary service model implementation.
+    pub fn service_model(mut self, model: Box<dyn ServiceModel>) -> Self {
+        self.service = model;
+        self
+    }
+
+    /// Install one of the built-in service models.
+    pub fn service_kind(self, kind: ServiceModelKind) -> Self {
+        self.service_model(kind.build())
+    }
+
+    pub fn routing(mut self, policy: RoutingPolicy) -> Self {
+        self.routing = policy;
+        self.router_factory = None;
+        self
+    }
+
+    /// Install a custom [`Routing`] implementation. The factory is
+    /// invoked once per `run` so router state (cursors, histories)
+    /// stays per-run.
+    pub fn routing_model(
+        mut self,
+        factory: impl Fn() -> Box<dyn Routing> + 'static,
+    ) -> Self {
+        self.router_factory = Some(Box::new(factory));
+        self
+    }
+
+    /// Override builder state from a TOML document: `[scenario]` /
+    /// `[scheme]` / `[service]` / `[routing]` tables plus
+    /// `[[workload]]` and `[[node]]` arrays. Unknown keys error.
+    pub fn apply_toml(mut self, doc: &Document) -> anyhow::Result<Self> {
+        for key in doc.keys() {
+            let structural = [("workload.", "workload"), ("node.", "node")]
+                .into_iter()
+                .find_map(|(p, name)| key.strip_prefix(p).map(|rest| (rest, name)));
+            if let Some((rest, name)) = structural {
+                // Parsed structurally below — but only `[[...]]` tables
+                // flatten to "<name>.<idx>.<field>" AND register an
+                // array count. A plain `[workload]` (or a hand-written
+                // `[workload.0]`) would otherwise be silently dropped.
+                let consumed = rest
+                    .split('.')
+                    .next()
+                    .and_then(|s| s.parse::<usize>().ok())
+                    .map_or(false, |i| i < doc.array_len(name));
+                if !consumed {
+                    anyhow::bail!("'{key}': use [[{name}]] array-of-tables syntax");
+                }
+                continue;
+            }
+            match key {
+                // Values are pulled through the shared typed helpers
+                // after this name-validation loop.
+                "scenario.n_ues" | "scenario.horizon" | "scenario.warmup"
+                | "scenario.seed" | "service.model" | "routing.policy" => {}
+                // apply_scheme_toml owns the [scheme] key set and
+                // rejects unknown or mistyped ones.
+                k if k.starts_with("scheme.") => {}
+                other => anyhow::bail!("unknown scenario key '{other}'"),
+            }
+        }
+        if let Some(v) = typed_i64(doc, "scenario.n_ues")? {
+            if !(1..=1_000_000).contains(&v) {
+                anyhow::bail!("'scenario.n_ues' must be in 1..=1000000, got {v}");
+            }
+            self.base.n_ues = v as u32;
+        }
+        if let Some(v) = typed_f64(doc, "scenario.horizon")? {
+            if v <= 0.0 {
+                anyhow::bail!("'scenario.horizon' must be positive, got {v}");
+            }
+            self.base.horizon = v;
+        }
+        if let Some(v) = typed_f64(doc, "scenario.warmup")? {
+            if v < 0.0 {
+                anyhow::bail!("'scenario.warmup' must be >= 0, got {v}");
+            }
+            self.base.warmup = v;
+        }
+        if let Some(v) = typed_i64(doc, "scenario.seed")? {
+            if v < 0 {
+                anyhow::bail!("'scenario.seed' must be >= 0, got {v}");
+            }
+            self.base.seed = v as u64;
+        }
+        if let Some(s) = typed_str(doc, "service.model")? {
+            let kind = ServiceModelKind::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown service model '{s}'"))?;
+            self.service = kind.build();
+        }
+        if let Some(s) = typed_str(doc, "routing.policy")? {
+            self.routing = RoutingPolicy::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown routing policy '{s}'"))?;
+            self.router_factory = None;
+        }
+        self.base.apply_scheme_toml(doc)?;
+        let workloads = workloads_from_toml(doc)?;
+        if !workloads.is_empty() {
+            self.classes = workloads;
+        }
+        let n_nodes = doc.array_len("node");
+        if n_nodes > 0 {
+            self.nodes.clear();
+            for i in 0..n_nodes {
+                let prefix = format!("node.{i}.");
+                // Unscaled default so a bare `scale = N` means exactly
+                // N of this accelerator, not N x an implicit pool.
+                let mut gpu = GpuSpec::gh200_nvl2();
+                let mut servers = 1u32;
+                for key in doc.keys().filter(|k| k.starts_with(prefix.as_str())) {
+                    let field = &key[prefix.len()..];
+                    let missing = || anyhow::anyhow!("bad value for '{key}'");
+                    match field {
+                        // BTreeMap key order guarantees "gpu" is seen
+                        // before "scale".
+                        "gpu" => {
+                            let name = doc.str(key).ok_or_else(missing)?;
+                            gpu = GpuSpec::by_name(name)
+                                .ok_or_else(|| anyhow::anyhow!("unknown GPU '{name}'"))?;
+                        }
+                        "scale" => {
+                            let v = doc.f64(key).ok_or_else(missing)?;
+                            if v <= 0.0 {
+                                anyhow::bail!("'{key}' must be positive, got {v}");
+                            }
+                            gpu = gpu.scaled(v);
+                        }
+                        "servers" => {
+                            servers = workload::u32_field(doc, key, 1, 1024)?
+                        }
+                        other => anyhow::bail!("unknown node key '{other}'"),
+                    }
+                }
+                self.nodes.push(NodeSpec { gpu, n_servers: servers });
+            }
+        }
+        Ok(self)
+    }
+
+    /// Finalize. An empty class list defaults to the Table I
+    /// translation workload; an empty node list to the base config's
+    /// compute node.
+    pub fn build(mut self) -> Scenario {
+        if self.classes.is_empty() {
+            self.classes.push(WorkloadClass::from_legacy(
+                &self.base.job_traffic,
+                &self.base.job,
+            ));
+        }
+        if self.nodes.is_empty() {
+            self.nodes.push(NodeSpec { gpu: self.base.gpu, n_servers: self.base.n_gpus });
+        }
+        Scenario {
+            base: self.base,
+            classes: self.classes,
+            nodes: self.nodes,
+            service: self.service,
+            routing: self.routing,
+            router_factory: self.router_factory,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small(builder: ScenarioBuilder) -> ScenarioBuilder {
+        builder.n_ues(20).horizon(5.0).warmup(1.0)
+    }
+
+    #[test]
+    fn builder_defaults_reproduce_table1_shape() {
+        let s = small(ScenarioBuilder::new().scheme(SchemeConfig::icc())).build();
+        assert_eq!(s.classes().len(), 1);
+        assert_eq!(s.nodes().len(), 1);
+        assert_eq!(s.nodes()[0].n_servers, 2);
+        assert!((s.offered_rate() - 20.0).abs() < 1e-12);
+        let r = s.run();
+        assert!(r.report.n_jobs > 30, "n = {}", r.report.n_jobs);
+        assert!(r.events > 0);
+        assert_eq!(r.report.per_class.len(), 1);
+    }
+
+    #[test]
+    fn multi_class_run_reports_each_class() {
+        let s = small(
+            ScenarioBuilder::new()
+                .scheme(SchemeConfig::icc())
+                .workload(WorkloadClass::translation())
+                .workload(WorkloadClass::chat())
+                .workload(WorkloadClass::summarization())
+                .node(GpuSpec::gh200_nvl2().scaled(2.0), 1)
+                .node(GpuSpec::gh200_nvl2().scaled(2.0), 1)
+                .service_kind(ServiceModelKind::TokenSampled),
+        )
+        .build();
+        let r = s.run();
+        assert_eq!(r.report.per_class.len(), 3);
+        assert_eq!(r.report.per_class[0].name, "translation");
+        assert_eq!(r.report.per_class[1].name, "chat");
+        for c in &r.report.per_class {
+            assert!(c.n_jobs > 0, "class '{}' generated no jobs", c.name);
+        }
+        let sum: u64 = r.report.per_class.iter().map(|c| c.n_jobs).sum();
+        assert_eq!(sum, r.report.n_jobs);
+    }
+
+    #[test]
+    fn toml_assembles_full_scenario() {
+        let doc = Document::parse(
+            "[scenario]\nn_ues = 12\nhorizon = 4.0\nseed = 3\n\
+             [scheme]\npreset = \"icc\"\n\
+             [service]\nmodel = \"token_sampled\"\n\
+             [routing]\npolicy = \"rr\"\n\
+             [[node]]\ngpu = \"a100\"\nscale = 8\n\
+             [[node]]\ngpu = \"a100\"\nscale = 8\nservers = 2\n\
+             [[workload]]\nname = \"chat\"\nrate_per_ue = 0.4\ninput = \"geometric:32\"\noutput = \"geometric:64\"\nb_total = 0.5\n",
+        )
+        .unwrap();
+        let s = ScenarioBuilder::new().apply_toml(&doc).unwrap().build();
+        assert_eq!(s.base.n_ues, 12);
+        assert_eq!(s.base.seed, 3);
+        assert!(s.base.scheme.priority_scheme);
+        assert_eq!(s.service_name(), "token_sampled");
+        assert_eq!(s.routing(), RoutingPolicy::RoundRobin);
+        assert_eq!(s.nodes().len(), 2);
+        assert_eq!(s.nodes()[1].n_servers, 2);
+        assert!((s.nodes()[0].gpu.a100_equivalents() - 8.0).abs() < 1e-9);
+        assert_eq!(s.classes().len(), 1);
+        assert_eq!(s.classes()[0].name, "chat");
+    }
+
+    #[test]
+    fn toml_rejects_unknown_scenario_key() {
+        let doc = Document::parse("[scenario]\nn_uez = 10").unwrap();
+        assert!(ScenarioBuilder::new().apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn custom_routing_model_is_pluggable() {
+        #[derive(Debug)]
+        struct PinToLast;
+        impl Routing for PinToLast {
+            fn name(&self) -> &'static str {
+                "pin_to_last"
+            }
+            fn pick(&mut self, _class_id: usize, nodes: &[NodeView]) -> usize {
+                nodes.len().saturating_sub(1)
+            }
+        }
+        let s = small(
+            ScenarioBuilder::new()
+                .scheme(SchemeConfig::icc())
+                .node(GpuSpec::gh200_nvl2().scaled(2.0), 1)
+                .node(GpuSpec::gh200_nvl2().scaled(2.0), 1)
+                .routing_model(|| Box::new(PinToLast)),
+        )
+        .build();
+        let r = s.run();
+        assert!(r.report.n_jobs > 30, "n = {}", r.report.n_jobs);
+        assert!(r.report.comp.count() > 0, "custom router must serve jobs");
+    }
+
+    #[test]
+    fn toml_rejects_out_of_range_scenario_values() {
+        for bad in [
+            "[scenario]\nn_ues = -1",
+            "[scenario]\nn_ues = 0",
+            "[scenario]\nhorizon = 0",
+            "[scenario]\nwarmup = -2.0",
+        ] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(
+                ScenarioBuilder::new().apply_toml(&doc).is_err(),
+                "accepted: {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn toml_rejects_single_bracket_workload_table() {
+        // A plain [workload] table must error loudly, not be dropped.
+        let doc = Document::parse("[workload]\nname = \"chat\"").unwrap();
+        let err = ScenarioBuilder::new().apply_toml(&doc).unwrap_err();
+        assert!(err.to_string().contains("[[workload]]"), "{err}");
+    }
+}

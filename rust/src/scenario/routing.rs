@@ -1,0 +1,178 @@
+//! Routing policies over a multi-node compute tier.
+//!
+//! The legacy SLS owned exactly one `ComputeNode`; a scenario owns N
+//! and a [`Routing`] policy decides which node serves each delivered
+//! prompt. Policies see only cheap per-node load summaries
+//! ([`NodeView`]), mirroring what an edge orchestrator can actually
+//! observe per decision.
+
+/// Snapshot of one node's load at routing time.
+#[derive(Debug, Clone, Copy)]
+pub struct NodeView {
+    pub queue_len: usize,
+    pub busy_servers: u32,
+    pub n_servers: u32,
+}
+
+impl NodeView {
+    /// Jobs in the system at this node (queued + in service).
+    pub fn load(&self) -> usize {
+        self.queue_len + self.busy_servers as usize
+    }
+}
+
+/// A routing decision maker. Policies may keep state (e.g. the
+/// round-robin cursor); the engine calls `pick` once per job.
+pub trait Routing: std::fmt::Debug {
+    fn name(&self) -> &'static str;
+
+    /// Choose a node index in `0..nodes.len()` for a job of `class_id`.
+    fn pick(&mut self, class_id: usize, nodes: &[NodeView]) -> usize;
+}
+
+/// Send each job to the node with the fewest jobs in system (ties go
+/// to the lowest index, keeping runs deterministic).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LeastLoaded;
+
+impl Routing for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least_loaded"
+    }
+
+    fn pick(&mut self, _class_id: usize, nodes: &[NodeView]) -> usize {
+        nodes
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, n)| n.load())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// Cycle through nodes regardless of load.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl Routing for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round_robin"
+    }
+
+    fn pick(&mut self, _class_id: usize, nodes: &[NodeView]) -> usize {
+        if nodes.is_empty() {
+            return 0;
+        }
+        let i = self.next % nodes.len();
+        self.next = (self.next + 1) % nodes.len();
+        i
+    }
+}
+
+/// Pin each workload class to one node (`class % n_nodes`) — the
+/// placement that keeps per-class KV/weight state warm.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ClassAffinity;
+
+impl Routing for ClassAffinity {
+    fn name(&self) -> &'static str {
+        "class_affinity"
+    }
+
+    fn pick(&mut self, class_id: usize, nodes: &[NodeView]) -> usize {
+        if nodes.is_empty() {
+            return 0;
+        }
+        class_id % nodes.len()
+    }
+}
+
+/// Config-level routing selector (`[routing] policy = "..."`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutingPolicy {
+    #[default]
+    LeastLoaded,
+    RoundRobin,
+    ClassAffinity,
+}
+
+impl RoutingPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "least_loaded" | "least-loaded" | "lld" => Some(Self::LeastLoaded),
+            "round_robin" | "round-robin" | "rr" => Some(Self::RoundRobin),
+            "class_affinity" | "class-affinity" | "affinity" => Some(Self::ClassAffinity),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::LeastLoaded => "least_loaded",
+            Self::RoundRobin => "round_robin",
+            Self::ClassAffinity => "class_affinity",
+        }
+    }
+
+    pub fn build(self) -> Box<dyn Routing> {
+        match self {
+            Self::LeastLoaded => Box::new(LeastLoaded),
+            Self::RoundRobin => Box::<RoundRobin>::default(),
+            Self::ClassAffinity => Box::new(ClassAffinity),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn views(loads: &[(usize, u32)]) -> Vec<NodeView> {
+        loads
+            .iter()
+            .map(|&(q, b)| NodeView { queue_len: q, busy_servers: b, n_servers: 2 })
+            .collect()
+    }
+
+    #[test]
+    fn least_loaded_picks_min_with_stable_ties() {
+        let mut r = LeastLoaded;
+        assert_eq!(r.pick(0, &views(&[(3, 2), (0, 1), (2, 0)])), 1);
+        // tie between 0 and 2 → lowest index
+        assert_eq!(r.pick(0, &views(&[(1, 0), (5, 1), (1, 0)])), 0);
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = RoundRobin::default();
+        let v = views(&[(0, 0), (0, 0), (0, 0)]);
+        let picks: Vec<usize> = (0..6).map(|_| r.pick(0, &v)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn class_affinity_pins_classes() {
+        let mut r = ClassAffinity;
+        let v = views(&[(9, 2), (0, 0)]);
+        assert_eq!(r.pick(0, &v), 0, "affinity ignores load");
+        assert_eq!(r.pick(1, &v), 1);
+        assert_eq!(r.pick(2, &v), 0);
+    }
+
+    #[test]
+    fn policy_parse_and_names() {
+        assert_eq!(RoutingPolicy::parse("rr"), Some(RoutingPolicy::RoundRobin));
+        assert_eq!(RoutingPolicy::parse("least_loaded"), Some(RoutingPolicy::LeastLoaded));
+        assert_eq!(RoutingPolicy::parse("affinity"), Some(RoutingPolicy::ClassAffinity));
+        assert_eq!(RoutingPolicy::parse("??"), None);
+        for p in [
+            RoutingPolicy::LeastLoaded,
+            RoutingPolicy::RoundRobin,
+            RoutingPolicy::ClassAffinity,
+        ] {
+            assert_eq!(p.build().name(), p.name());
+        }
+    }
+}

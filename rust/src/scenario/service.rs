@@ -1,0 +1,175 @@
+//! Pluggable LLM service-time models.
+//!
+//! The legacy SLS computed one deterministic roofline latency in
+//! `Sls::new` and charged it to every job. A [`ServiceModel`] instead
+//! realizes each job's compute demand when it reaches a node, which is
+//! what lets one scenario mix classes with different models, prompt
+//! lengths, and output-length variability:
+//!
+//! * [`RooflineService`] — the paper's Eqs 7–8: deterministic prefill +
+//!   decode at the class's mean output length. Consumes no randomness,
+//!   preserving the legacy SLS's deterministic service times.
+//! * [`TokenSampledService`] — draws the output length per job from the
+//!   class distribution and prices prefill/decode on the realized
+//!   token counts. This is the service-time variability that mixed
+//!   LLM serving studies (arXiv:2411.17712) show dominates tail
+//!   latency.
+
+use crate::llm::{CostModel, GpuSpec};
+use crate::rng::Rng;
+
+use super::workload::WorkloadClass;
+
+/// A realized job's compute demand.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServiceDemand {
+    /// Output length charged to the job.
+    pub n_output: u32,
+    /// Service time in seconds on the chosen node.
+    pub service_time: f64,
+}
+
+/// Maps (class, realized prompt, node capacity) → service demand.
+pub trait ServiceModel: std::fmt::Debug {
+    fn name(&self) -> &'static str;
+
+    /// Realize one job. `rng` is a dedicated service stream; models
+    /// that are deterministic must not consume it.
+    fn realize(
+        &self,
+        class: &WorkloadClass,
+        n_input: u32,
+        gpu: &GpuSpec,
+        rng: &mut Rng,
+    ) -> ServiceDemand;
+}
+
+/// Deterministic two-phase roofline (paper Eqs 7–8) at the class's
+/// mean output length.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RooflineService;
+
+impl ServiceModel for RooflineService {
+    fn name(&self) -> &'static str {
+        "roofline"
+    }
+
+    fn realize(
+        &self,
+        class: &WorkloadClass,
+        n_input: u32,
+        gpu: &GpuSpec,
+        _rng: &mut Rng,
+    ) -> ServiceDemand {
+        let n_output = class.output_tokens.mean().round().max(1.0) as u32;
+        let spec = class.job_spec(n_input, n_output);
+        let m = CostModel::new(*gpu);
+        ServiceDemand { n_output, service_time: m.total_latency(&spec) }
+    }
+}
+
+/// Prefill/decode roofline on per-job sampled output lengths.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TokenSampledService;
+
+impl ServiceModel for TokenSampledService {
+    fn name(&self) -> &'static str {
+        "token_sampled"
+    }
+
+    fn realize(
+        &self,
+        class: &WorkloadClass,
+        n_input: u32,
+        gpu: &GpuSpec,
+        rng: &mut Rng,
+    ) -> ServiceDemand {
+        let n_output = class.output_tokens.sample(rng).max(1);
+        let spec = class.job_spec(n_input, n_output);
+        let m = CostModel::new(*gpu);
+        ServiceDemand { n_output, service_time: m.total_latency(&spec) }
+    }
+}
+
+/// Config-level service-model selector (`[service] model = "..."`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ServiceModelKind {
+    #[default]
+    Roofline,
+    TokenSampled,
+}
+
+impl ServiceModelKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "roofline" | "deterministic" => Some(Self::Roofline),
+            "token_sampled" | "token-sampled" | "sampled" => Some(Self::TokenSampled),
+            _ => None,
+        }
+    }
+
+    pub fn build(self) -> Box<dyn ServiceModel> {
+        match self {
+            Self::Roofline => Box::new(RooflineService),
+            Self::TokenSampled => Box::new(TokenSampledService),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llm::JobSpec;
+    use crate::scenario::workload::TokenDist;
+    use crate::traffic::JobTrafficConfig;
+
+    fn table1_class() -> WorkloadClass {
+        WorkloadClass::from_legacy(&JobTrafficConfig::default(), &JobSpec::table1())
+    }
+
+    #[test]
+    fn roofline_matches_cost_model_and_is_deterministic() {
+        let class = table1_class();
+        let gpu = GpuSpec::gh200_nvl2().scaled(2.0);
+        let mut rng = Rng::new(1);
+        let before = rng.clone().u64();
+        let d = RooflineService.realize(&class, 15, &gpu, &mut rng);
+        // no randomness consumed
+        assert_eq!(rng.clone().u64(), before);
+        let expect = CostModel::new(gpu).total_latency(&JobSpec::table1());
+        assert!((d.service_time - expect).abs() < 1e-15);
+        assert_eq!(d.n_output, 15);
+    }
+
+    #[test]
+    fn token_sampled_varies_with_output_length() {
+        let class = table1_class().with_output(TokenDist::Geometric { mean: 32.0 });
+        let gpu = GpuSpec::a100().scaled(8.0);
+        let mut rng = Rng::new(7);
+        let demands: Vec<ServiceDemand> =
+            (0..64).map(|_| TokenSampledService.realize(&class, 15, &gpu, &mut rng)).collect();
+        let distinct: std::collections::BTreeSet<u32> =
+            demands.iter().map(|d| d.n_output).collect();
+        assert!(distinct.len() > 5, "output lengths should vary: {distinct:?}");
+        // longer outputs must cost more
+        let mut sorted = demands.clone();
+        sorted.sort_by(|a, b| a.n_output.cmp(&b.n_output));
+        for w in sorted.windows(2) {
+            if w[0].n_output < w[1].n_output {
+                assert!(w[0].service_time < w[1].service_time);
+            }
+        }
+    }
+
+    #[test]
+    fn kind_parses_and_builds() {
+        assert_eq!(ServiceModelKind::parse("roofline"), Some(ServiceModelKind::Roofline));
+        assert_eq!(
+            ServiceModelKind::parse("token_sampled"),
+            Some(ServiceModelKind::TokenSampled)
+        );
+        assert_eq!(ServiceModelKind::parse("magic"), None);
+        assert_eq!(ServiceModelKind::Roofline.build().name(), "roofline");
+        assert_eq!(ServiceModelKind::TokenSampled.build().name(), "token_sampled");
+    }
+}

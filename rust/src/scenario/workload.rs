@@ -1,0 +1,376 @@
+//! Workload classes: the per-class traffic + job shape of a scenario.
+//!
+//! A [`WorkloadClass`] bundles what the legacy single-job API spread
+//! across `JobTrafficConfig` and `JobSpec`: its own Poisson arrival
+//! rate, input/output token *distributions* (mixed LLM workloads have
+//! variable prompt and generation lengths), the byte footprint on the
+//! air interface, the served model's roofline constants, and the
+//! per-class latency budget. A scenario composes N of these.
+
+use crate::llm::JobSpec;
+use crate::rng::Rng;
+use crate::traffic::JobTrafficConfig;
+use crate::util::tomlmini::Document;
+
+/// Token-length distribution of a prompt or a generation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TokenDist {
+    /// Every job has exactly `n` tokens (the paper's Table I shape).
+    Fixed(u32),
+    /// Uniform over `lo..=hi`.
+    Uniform { lo: u32, hi: u32 },
+    /// Shifted geometric on {1, 2, ...} with the given mean — the
+    /// classic model for LLM output lengths (EOS is a per-token coin).
+    Geometric { mean: f64 },
+}
+
+impl TokenDist {
+    pub fn mean(&self) -> f64 {
+        match *self {
+            TokenDist::Fixed(n) => n as f64,
+            TokenDist::Uniform { lo, hi } => (lo as f64 + hi as f64) / 2.0,
+            TokenDist::Geometric { mean } => mean,
+        }
+    }
+
+    /// Draw a realization. `Fixed` consumes no randomness, which
+    /// keeps single-class scenarios statistically identical to the
+    /// legacy SLS.
+    pub fn sample(&self, rng: &mut Rng) -> u32 {
+        match *self {
+            TokenDist::Fixed(n) => n,
+            TokenDist::Uniform { lo, hi } => {
+                let (lo, hi) = (lo.min(hi), lo.max(hi));
+                lo + rng.below((hi - lo + 1) as u64) as u32
+            }
+            TokenDist::Geometric { mean } => {
+                if mean <= 1.0 {
+                    return 1;
+                }
+                let p = 1.0 / mean;
+                // inversion: k = ceil(ln(1-u) / ln(1-p)) on {1, 2, ...}
+                let u = rng.f64();
+                let k = ((1.0 - u).ln() / (1.0 - p).ln()).ceil();
+                k.max(1.0).min(u32::MAX as f64) as u32
+            }
+        }
+    }
+
+    /// Parse the config syntax: `"fixed:15"`, `"uniform:64..128"`,
+    /// `"geometric:96"`. A bare integer means `fixed`.
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.trim();
+        if let Ok(n) = s.parse::<u32>() {
+            return Some(TokenDist::Fixed(n));
+        }
+        let (kind, arg) = s.split_once(':')?;
+        match kind.trim() {
+            "fixed" => arg.trim().parse().ok().map(TokenDist::Fixed),
+            "uniform" => {
+                let (lo, hi) = arg.split_once("..")?;
+                let lo = lo.trim().parse().ok()?;
+                let hi = hi.trim().parse().ok()?;
+                (lo <= hi).then_some(TokenDist::Uniform { lo, hi })
+            }
+            "geometric" => {
+                let mean: f64 = arg.trim().parse().ok()?;
+                (mean >= 1.0).then_some(TokenDist::Geometric { mean })
+            }
+            _ => None,
+        }
+    }
+
+    /// Inverse of [`TokenDist::parse`] (config round-trips).
+    pub fn to_config_string(&self) -> String {
+        match *self {
+            TokenDist::Fixed(n) => format!("fixed:{n}"),
+            TokenDist::Uniform { lo, hi } => format!("uniform:{lo}..{hi}"),
+            TokenDist::Geometric { mean } => format!("geometric:{mean}"),
+        }
+    }
+}
+
+/// One workload class of a scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadClass {
+    pub name: String,
+    /// Poisson arrival rate per UE (jobs/s).
+    pub rate_per_ue: f64,
+    pub input_tokens: TokenDist,
+    pub output_tokens: TokenDist,
+    /// Payload bytes per prompt token on the air interface.
+    pub bytes_per_token: u32,
+    /// Fixed per-request overhead (framing + IP/PDCP headers).
+    pub overhead_bytes: u32,
+    /// FLOPs per token of the served model (≈ 2 × params).
+    pub c_llm: f64,
+    /// Model bytes streamed from memory per forward pass.
+    pub m_llm: f64,
+    /// End-to-end latency budget (seconds).
+    pub b_total: f64,
+}
+
+impl WorkloadClass {
+    /// A class with the Table I defaults under the given name; adjust
+    /// with the `with_*` setters.
+    pub fn new(name: impl Into<String>) -> Self {
+        let t = JobTrafficConfig::default();
+        let j = JobSpec::table1();
+        Self {
+            name: name.into(),
+            rate_per_ue: t.rate_per_ue,
+            input_tokens: TokenDist::Fixed(t.input_tokens),
+            output_tokens: TokenDist::Fixed(j.n_output),
+            bytes_per_token: t.bytes_per_token,
+            overhead_bytes: t.overhead_bytes,
+            c_llm: j.c_llm,
+            m_llm: j.m_llm,
+            b_total: j.b_total,
+        }
+    }
+
+    /// The paper's Table I workload: 15+15 fixed tokens, 80 ms budget.
+    pub fn translation() -> Self {
+        Self::new("translation")
+    }
+
+    /// Interactive chat: geometric prompt/response lengths, sub-second
+    /// budget (cf. arXiv:2411.17712's mixed LLM workloads).
+    pub fn chat() -> Self {
+        Self::new("chat")
+            .with_rate(0.3)
+            .with_input(TokenDist::Geometric { mean: 48.0 })
+            .with_output(TokenDist::Geometric { mean: 96.0 })
+            .with_budget(0.500)
+    }
+
+    /// Document summarization: long uniform prompts, short fixed
+    /// summaries, relaxed budget.
+    pub fn summarization() -> Self {
+        Self::new("summarization")
+            .with_rate(0.1)
+            .with_input(TokenDist::Uniform { lo: 256, hi: 512 })
+            .with_output(TokenDist::Fixed(64))
+            .with_budget(0.400)
+    }
+
+    /// Build a class from the legacy single-job config pair (the
+    /// [`crate::sim::Sls`] compatibility path). The prompt length
+    /// follows `traffic.input_tokens` — the same sync direction
+    /// `SimConfig::apply_toml` enforces onto `job.n_input`; a config
+    /// that desyncs the two pub fields by hand is represented by the
+    /// traffic-side value for both bytes and compute.
+    pub fn from_legacy(traffic: &JobTrafficConfig, job: &JobSpec) -> Self {
+        Self {
+            name: "translation".into(),
+            rate_per_ue: traffic.rate_per_ue,
+            input_tokens: TokenDist::Fixed(traffic.input_tokens),
+            output_tokens: TokenDist::Fixed(job.n_output),
+            bytes_per_token: traffic.bytes_per_token,
+            overhead_bytes: traffic.overhead_bytes,
+            c_llm: job.c_llm,
+            m_llm: job.m_llm,
+            b_total: job.b_total,
+        }
+    }
+
+    pub fn with_rate(mut self, rate_per_ue: f64) -> Self {
+        assert!(rate_per_ue > 0.0);
+        self.rate_per_ue = rate_per_ue;
+        self
+    }
+
+    pub fn with_input(mut self, d: TokenDist) -> Self {
+        self.input_tokens = d;
+        self
+    }
+
+    pub fn with_output(mut self, d: TokenDist) -> Self {
+        self.output_tokens = d;
+        self
+    }
+
+    pub fn with_budget(mut self, b_total: f64) -> Self {
+        assert!(b_total > 0.0);
+        self.b_total = b_total;
+        self
+    }
+
+    /// Serve this class with a different model (FLOPs/token, bytes).
+    pub fn with_model(mut self, c_llm: f64, m_llm: f64) -> Self {
+        self.c_llm = c_llm;
+        self.m_llm = m_llm;
+        self
+    }
+
+    /// Uplink bytes of one request with a realized prompt length.
+    /// Saturating: absurd token × byte configurations clamp at
+    /// `u32::MAX` instead of wrapping to a tiny SDU.
+    pub fn request_bytes(&self, n_input: u32) -> u32 {
+        n_input
+            .saturating_mul(self.bytes_per_token)
+            .saturating_add(self.overhead_bytes)
+    }
+
+    /// The [`JobSpec`] of one realized job of this class.
+    pub fn job_spec(&self, n_input: u32, n_output: u32) -> JobSpec {
+        JobSpec {
+            n_input,
+            n_output,
+            c_llm: self.c_llm,
+            m_llm: self.m_llm,
+            b_total: self.b_total,
+        }
+    }
+}
+
+/// Serialize classes as `[[workload]]` tables (the inverse of
+/// [`workloads_from_toml`]). The mini-TOML dialect cannot represent
+/// embedded double quotes in strings, so they are stripped from names.
+pub fn workloads_to_toml(classes: &[WorkloadClass]) -> String {
+    let mut out = String::new();
+    for c in classes {
+        let name: String = c.name.chars().filter(|&ch| ch != '"').collect();
+        out.push_str("[[workload]]\n");
+        out.push_str(&format!("name = \"{name}\"\n"));
+        out.push_str(&format!("rate_per_ue = {}\n", c.rate_per_ue));
+        out.push_str(&format!("input = \"{}\"\n", c.input_tokens.to_config_string()));
+        out.push_str(&format!("output = \"{}\"\n", c.output_tokens.to_config_string()));
+        out.push_str(&format!("bytes_per_token = {}\n", c.bytes_per_token));
+        out.push_str(&format!("overhead_bytes = {}\n", c.overhead_bytes));
+        out.push_str(&format!("c_llm = {}\n", c.c_llm));
+        out.push_str(&format!("m_llm = {}\n", c.m_llm));
+        out.push_str(&format!("b_total = {}\n\n", c.b_total));
+    }
+    out
+}
+
+/// Integer field guard: present-but-mistyped or out-of-range values
+/// must error, not wrap through an `as` cast.
+pub(crate) fn u32_field(doc: &Document, key: &str, lo: i64, hi: i64) -> anyhow::Result<u32> {
+    let v = doc
+        .i64(key)
+        .ok_or_else(|| anyhow::anyhow!("bad value for '{key}'"))?;
+    if !(lo..=hi).contains(&v) {
+        anyhow::bail!("'{key}' must be in {lo}..={hi}, got {v}");
+    }
+    Ok(v as u32)
+}
+
+/// Parse every `[[workload]]` table of a document. Unknown keys inside
+/// a workload table are rejected.
+pub fn workloads_from_toml(doc: &Document) -> anyhow::Result<Vec<WorkloadClass>> {
+    let n = doc.array_len("workload");
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let prefix = format!("workload.{i}.");
+        let mut w = WorkloadClass::new(format!("class{i}"));
+        for key in doc.keys().filter(|k| k.starts_with(prefix.as_str())) {
+            let field = &key[prefix.len()..];
+            let missing = || anyhow::anyhow!("bad value for '{key}'");
+            match field {
+                "name" => w.name = doc.str(key).ok_or_else(missing)?.to_string(),
+                "rate_per_ue" => w.rate_per_ue = doc.f64(key).ok_or_else(missing)?,
+                "input" => {
+                    let s = doc.str(key).ok_or_else(missing)?;
+                    w.input_tokens = TokenDist::parse(s)
+                        .ok_or_else(|| anyhow::anyhow!("bad token dist '{s}'"))?;
+                }
+                "output" => {
+                    let s = doc.str(key).ok_or_else(missing)?;
+                    w.output_tokens = TokenDist::parse(s)
+                        .ok_or_else(|| anyhow::anyhow!("bad token dist '{s}'"))?;
+                }
+                "bytes_per_token" => {
+                    w.bytes_per_token = u32_field(doc, key, 1, 1_000_000)?
+                }
+                "overhead_bytes" => {
+                    w.overhead_bytes = u32_field(doc, key, 0, 1_000_000)?
+                }
+                "c_llm" => w.c_llm = doc.f64(key).ok_or_else(missing)?,
+                "m_llm" => w.m_llm = doc.f64(key).ok_or_else(missing)?,
+                "b_total" => w.b_total = doc.f64(key).ok_or_else(missing)?,
+                other => anyhow::bail!("unknown workload key '{other}'"),
+            }
+        }
+        if w.rate_per_ue <= 0.0 || w.b_total <= 0.0 || w.c_llm <= 0.0 || w.m_llm <= 0.0 {
+            anyhow::bail!(
+                "workload '{}' needs positive rate, budget, and model constants",
+                w.name
+            );
+        }
+        out.push(w);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tomlmini::Document;
+
+    #[test]
+    fn dist_means_and_samples() {
+        let mut rng = Rng::new(1);
+        assert_eq!(TokenDist::Fixed(15).sample(&mut rng), 15);
+        assert_eq!(TokenDist::Fixed(15).mean(), 15.0);
+        let u = TokenDist::Uniform { lo: 10, hi: 20 };
+        assert_eq!(u.mean(), 15.0);
+        for _ in 0..200 {
+            let x = u.sample(&mut rng);
+            assert!((10..=20).contains(&x));
+        }
+        let g = TokenDist::Geometric { mean: 40.0 };
+        let n = 20_000;
+        let sum: f64 = (0..n).map(|_| g.sample(&mut rng) as f64).sum();
+        let m = sum / n as f64;
+        assert!((m / 40.0 - 1.0).abs() < 0.05, "mean = {m}");
+        assert!((0..1000).all(|_| g.sample(&mut rng) >= 1));
+    }
+
+    #[test]
+    fn dist_parse_round_trip() {
+        for d in [
+            TokenDist::Fixed(15),
+            TokenDist::Uniform { lo: 64, hi: 128 },
+            TokenDist::Geometric { mean: 96.0 },
+        ] {
+            assert_eq!(TokenDist::parse(&d.to_config_string()), Some(d));
+        }
+        assert_eq!(TokenDist::parse("15"), Some(TokenDist::Fixed(15)));
+        assert_eq!(TokenDist::parse("uniform:9..3"), None);
+        assert_eq!(TokenDist::parse("zipf:2"), None);
+    }
+
+    #[test]
+    fn legacy_class_matches_table1() {
+        let w = WorkloadClass::from_legacy(
+            &JobTrafficConfig::default(),
+            &JobSpec::table1(),
+        );
+        assert_eq!(w.request_bytes(15), 15 * 4 + 120);
+        assert_eq!(w.input_tokens, TokenDist::Fixed(15));
+        assert_eq!(w.output_tokens, TokenDist::Fixed(15));
+        assert!((w.b_total - 0.080).abs() < 1e-12);
+        let spec = w.job_spec(15, 15);
+        assert_eq!(spec.total_tokens(), 30);
+    }
+
+    #[test]
+    fn workload_toml_round_trip() {
+        let classes =
+            vec![WorkloadClass::chat(), WorkloadClass::translation(), WorkloadClass::summarization()];
+        let text = workloads_to_toml(&classes);
+        let doc = Document::parse(&text).unwrap();
+        let back = workloads_from_toml(&doc).unwrap();
+        assert_eq!(classes, back);
+    }
+
+    #[test]
+    fn workload_toml_rejects_unknown_key() {
+        let doc =
+            Document::parse("[[workload]]\nname = \"x\"\nfrobnicate = 3").unwrap();
+        let err = workloads_from_toml(&doc).unwrap_err();
+        assert!(err.to_string().contains("frobnicate"), "{err}");
+    }
+}

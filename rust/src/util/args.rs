@@ -6,15 +6,26 @@
 
 use std::collections::BTreeMap;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ArgError {
-    #[error("unknown option '{0}'")]
     Unknown(String),
-    #[error("option '--{0}' expects a value")]
     MissingValue(String),
-    #[error("invalid value '{1}' for '--{0}': {2}")]
     Invalid(String, String, String),
 }
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArgError::Unknown(name) => write!(f, "unknown option '{name}'"),
+            ArgError::MissingValue(name) => write!(f, "option '--{name}' expects a value"),
+            ArgError::Invalid(name, value, why) => {
+                write!(f, "invalid value '{value}' for '--{name}': {why}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ArgError {}
 
 /// Declarative option spec used for usage output and validation.
 #[derive(Debug, Clone)]

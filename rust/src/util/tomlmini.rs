@@ -1,11 +1,14 @@
 //! Minimal TOML-subset parser for config files (no `serde`/`toml` in the
 //! offline registry).
 //!
-//! Supported: `[table]` / `[table.sub]` headers, `key = value` with
-//! string / integer / float / bool / homogeneous-array values, `#`
-//! comments, blank lines. Keys are exposed flat as `"table.sub.key"`.
-//! This covers everything `config/` needs; exotic TOML (dates, inline
-//! tables, multi-line strings) is intentionally rejected with an error.
+//! Supported: `[table]` / `[table.sub]` headers, `[[table]]`
+//! arrays-of-tables, `key = value` with string / integer / float /
+//! bool / homogeneous-array values, `#` comments, blank lines. Keys
+//! are exposed flat as `"table.sub.key"`; the i-th `[[workload]]`
+//! table flattens to `"workload.<i>.key"` and its count is available
+//! via [`Document::array_len`]. This covers everything `config/` and
+//! `scenario/` need; exotic TOML (dates, inline tables, multi-line
+//! strings) is intentionally rejected with an error.
 
 use std::collections::BTreeMap;
 
@@ -56,17 +59,26 @@ impl Value {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("toml parse error at line {line}: {msg}")]
+#[derive(Debug)]
 pub struct TomlError {
     pub line: usize,
     pub msg: String,
 }
 
-/// A parsed document: flat `"table.key"` → [`Value`] map.
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// A parsed document: flat `"table.key"` → [`Value`] map, plus the
+/// per-name element counts of `[[table]]` arrays-of-tables.
 #[derive(Debug, Default, Clone)]
 pub struct Document {
     entries: BTreeMap<String, Value>,
+    array_counts: BTreeMap<String, usize>,
 }
 
 impl Document {
@@ -79,16 +91,35 @@ impl Document {
             if line.is_empty() {
                 continue;
             }
+            if let Some(h) = line.strip_prefix("[[") {
+                // Array-of-tables header: [[name]] opens element i and
+                // flattens its keys under "name.i.".
+                let h = h.strip_suffix("]]").ok_or_else(|| TomlError {
+                    line: lineno,
+                    msg: "unterminated array-of-tables header".into(),
+                })?;
+                let h = h.trim();
+                if h.is_empty() || h.contains('[') || h.contains(']') {
+                    return Err(TomlError {
+                        line: lineno,
+                        msg: "bad array-of-tables header".into(),
+                    });
+                }
+                let n = doc.array_counts.entry(h.to_string()).or_insert(0);
+                prefix = format!("{h}.{n}");
+                *n += 1;
+                continue;
+            }
             if let Some(h) = line.strip_prefix('[') {
                 let h = h.strip_suffix(']').ok_or_else(|| TomlError {
                     line: lineno,
                     msg: "unterminated table header".into(),
                 })?;
                 let h = h.trim();
-                if h.is_empty() || h.starts_with('[') {
+                if h.is_empty() || h.contains('[') || h.contains(']') {
                     return Err(TomlError {
                         line: lineno,
-                        msg: "bad table header (arrays-of-tables unsupported)".into(),
+                        msg: "bad table header".into(),
                     });
                 }
                 prefix = h.to_string();
@@ -136,6 +167,11 @@ impl Document {
 
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.entries.keys().map(|s| s.as_str())
+    }
+
+    /// Number of `[[name]]` tables in the document (0 if none).
+    pub fn array_len(&self, name: &str) -> usize {
+        self.array_counts.get(name).copied().unwrap_or(0)
     }
 }
 
@@ -255,5 +291,28 @@ bandwidth_mhz = 100.0
     #[test]
     fn rejects_garbage_value() {
         assert!(Document::parse("x = @@").is_err());
+    }
+
+    #[test]
+    fn array_of_tables_flattens_with_indices() {
+        let doc = Document::parse(
+            "[[workload]]\nname = \"chat\"\nrate = 0.5\n\n\
+             [[workload]]\nname = \"summarize\"\nrate = 0.1\n\n\
+             [routing]\npolicy = \"least_loaded\"",
+        )
+        .unwrap();
+        assert_eq!(doc.array_len("workload"), 2);
+        assert_eq!(doc.array_len("node"), 0);
+        assert_eq!(doc.str("workload.0.name"), Some("chat"));
+        assert_eq!(doc.f64("workload.0.rate"), Some(0.5));
+        assert_eq!(doc.str("workload.1.name"), Some("summarize"));
+        assert_eq!(doc.str("routing.policy"), Some("least_loaded"));
+    }
+
+    #[test]
+    fn array_of_tables_header_errors() {
+        let err = Document::parse("[[workload]\nx = 1").unwrap_err();
+        assert_eq!(err.line, 1);
+        assert!(Document::parse("[[ ]]").is_err());
     }
 }

@@ -69,9 +69,28 @@ fn simulate_rejects_bad_scheme() {
 
 #[test]
 fn fig_commands_have_help() {
-    for cmd in ["fig4", "fig6", "fig7", "simulate"] {
+    for cmd in ["fig4", "fig6", "fig7", "simulate", "scenario"] {
         let out = bin().args([cmd, "--help"]).output().unwrap();
         assert!(out.status.success(), "{cmd} --help failed");
         assert!(String::from_utf8_lossy(&out.stdout).contains("Options"));
     }
+}
+
+#[test]
+fn scenario_prints_per_class_breakdown() {
+    let out = bin()
+        .args(["scenario", "--ues", "10", "--horizon", "3", "--nodes", "2"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for field in ["per-class breakdown", "translation", "chat", "summarization", "events"] {
+        assert!(text.contains(field), "missing '{field}' in:\n{text}");
+    }
+}
+
+#[test]
+fn scenario_rejects_bad_routing() {
+    let out = bin().args(["scenario", "--routing", "zzz"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
 }

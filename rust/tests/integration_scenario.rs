@@ -1,0 +1,165 @@
+//! Integration tests for the Scenario API: mixed-workload determinism,
+//! per-class accounting, multi-node routing, TOML round-trips, and
+//! equivalence of the legacy `Sls` wrapper with a hand-built
+//! single-class scenario.
+
+use icc6g::config::{SchemeConfig, SimConfig};
+use icc6g::llm::GpuSpec;
+use icc6g::metrics::SimReport;
+use icc6g::scenario::{
+    workloads_from_toml, workloads_to_toml, RoutingPolicy, ScenarioBuilder,
+    ServiceModelKind, TokenDist, WorkloadClass,
+};
+use icc6g::sim::Sls;
+use icc6g::util::tomlmini::Document;
+
+fn mixed_builder(seed: u64) -> ScenarioBuilder {
+    ScenarioBuilder::new()
+        .scheme(SchemeConfig::icc())
+        .n_ues(30)
+        .horizon(6.0)
+        .warmup(1.0)
+        .seed(seed)
+        .workload(WorkloadClass::translation())
+        .workload(WorkloadClass::chat())
+        .workload(WorkloadClass::summarization())
+        .node(GpuSpec::gh200_nvl2().scaled(2.0), 1)
+        .node(GpuSpec::gh200_nvl2().scaled(2.0), 1)
+        .service_kind(ServiceModelKind::TokenSampled)
+        .routing(RoutingPolicy::LeastLoaded)
+}
+
+#[test]
+fn mixed_workloads_deterministic_given_seed() {
+    let a = mixed_builder(11).build().run();
+    let b = mixed_builder(11).build().run();
+    assert_eq!(a.report.n_jobs, b.report.n_jobs);
+    assert_eq!(a.report.n_satisfied, b.report.n_satisfied);
+    assert_eq!(a.report.n_dropped, b.report.n_dropped);
+    assert_eq!(a.events, b.events);
+    assert!((a.report.e2e.mean() - b.report.e2e.mean()).abs() < 1e-12);
+    for (ca, cb) in a.report.per_class.iter().zip(&b.report.per_class) {
+        assert_eq!(ca.n_jobs, cb.n_jobs, "class '{}'", ca.name);
+        assert_eq!(ca.n_satisfied, cb.n_satisfied, "class '{}'", ca.name);
+    }
+    // a different seed must change the trajectory
+    let c = mixed_builder(12).build().run();
+    assert!(
+        (a.report.e2e.mean() - c.report.e2e.mean()).abs() > 1e-12,
+        "different seeds must diverge"
+    );
+}
+
+#[test]
+fn per_class_reports_sum_to_overall() {
+    let res = mixed_builder(5).build().run();
+    assert_eq!(res.report.per_class.len(), 3);
+    let (mut jobs, mut sat, mut dropped, mut comm_n) = (0u64, 0u64, 0u64, 0u64);
+    for c in &res.report.per_class {
+        assert!(c.n_jobs > 0, "class '{}' generated no jobs", c.name);
+        jobs += c.n_jobs;
+        sat += c.n_satisfied;
+        dropped += c.n_dropped;
+        comm_n += c.comm.count();
+    }
+    assert_eq!(jobs, res.report.n_jobs);
+    assert_eq!(sat, res.report.n_satisfied);
+    assert_eq!(dropped, res.report.n_dropped);
+    assert_eq!(comm_n, res.report.comm.count());
+    assert!(res.events > res.report.n_jobs);
+}
+
+#[test]
+fn routing_policies_all_serve_the_mix() {
+    for policy in [
+        RoutingPolicy::LeastLoaded,
+        RoutingPolicy::RoundRobin,
+        RoutingPolicy::ClassAffinity,
+    ] {
+        let res = mixed_builder(3).routing(policy).build().run();
+        assert!(
+            res.report.n_jobs > 50,
+            "{}: n = {}",
+            policy.name(),
+            res.report.n_jobs
+        );
+        let completed = res.report.comp.count();
+        assert!(completed > 0, "{}: nothing served", policy.name());
+    }
+}
+
+#[test]
+fn single_class_scenario_matches_legacy_sls() {
+    // The wrapper path and a hand-built single-class scenario must
+    // produce the same trajectory (same streams, same event order).
+    let mut cfg = SimConfig::table1().with_scheme(SchemeConfig::icc());
+    cfg.n_ues = 20;
+    cfg.horizon = 5.0;
+    cfg.warmup = 1.0;
+    cfg.seed = 9;
+    let legacy = Sls::new(cfg.clone()).run();
+    let scenario = ScenarioBuilder::from_sim_config(&cfg).build().run();
+    assert_eq!(legacy.report.n_jobs, scenario.report.n_jobs);
+    assert_eq!(legacy.report.n_satisfied, scenario.report.n_satisfied);
+    assert_eq!(legacy.events, scenario.events);
+    assert!((legacy.report.e2e.mean() - scenario.report.e2e.mean()).abs() < 1e-12);
+}
+
+#[test]
+fn workload_tables_round_trip_through_toml() {
+    let classes = vec![
+        WorkloadClass::chat(),
+        WorkloadClass::summarization().with_input(TokenDist::Uniform { lo: 128, hi: 384 }),
+        WorkloadClass::translation().with_rate(2.0),
+    ];
+    let text = workloads_to_toml(&classes);
+    let doc = Document::parse(&text).expect("emitted TOML must parse");
+    let back = workloads_from_toml(&doc).unwrap();
+    assert_eq!(classes, back);
+
+    // unknown keys inside a [[workload]] table are rejected
+    let doc = Document::parse(
+        "[[workload]]\nname = \"chat\"\nrate_per_ue = 0.5\nturbo = true",
+    )
+    .unwrap();
+    let err = workloads_from_toml(&doc).unwrap_err();
+    assert!(err.to_string().contains("turbo"), "{err}");
+}
+
+#[test]
+fn scenario_toml_end_to_end() {
+    let doc = Document::parse(
+        "[scenario]\nn_ues = 16\nhorizon = 4.0\nwarmup = 1.0\nseed = 2\n\
+         [scheme]\npreset = \"icc\"\n\
+         [service]\nmodel = \"token_sampled\"\n\
+         [routing]\npolicy = \"affinity\"\n\
+         [[node]]\ngpu = \"gh200\"\nscale = 2\n\
+         [[node]]\ngpu = \"gh200\"\nscale = 2\n\
+         [[workload]]\nname = \"translation\"\n\
+         [[workload]]\nname = \"chat\"\nrate_per_ue = 0.3\ninput = \"geometric:48\"\noutput = \"geometric:96\"\nb_total = 0.5\n",
+    )
+    .unwrap();
+    let scenario = ScenarioBuilder::new().apply_toml(&doc).unwrap().build();
+    assert_eq!(scenario.classes().len(), 2);
+    assert_eq!(scenario.nodes().len(), 2);
+    let res = scenario.run();
+    assert_eq!(res.report.per_class.len(), 2);
+    assert!(res.report.n_jobs > 0);
+    let total: u64 = res.report.per_class.iter().map(|c| c.n_jobs).sum();
+    assert_eq!(total, res.report.n_jobs);
+}
+
+#[test]
+fn report_satisfaction_consistent_with_per_class_rates() {
+    let res = mixed_builder(21).build().run();
+    let SimReport { n_jobs, n_satisfied, .. } = res.report.clone();
+    let weighted: f64 = res
+        .report
+        .per_class
+        .iter()
+        .filter(|c| c.n_jobs > 0)
+        .map(|c| c.satisfaction_rate() * c.n_jobs as f64)
+        .sum();
+    assert!((weighted - n_satisfied as f64).abs() < 1e-9);
+    assert!(((n_satisfied as f64 / n_jobs as f64) - res.report.satisfaction_rate()).abs() < 1e-12);
+}

@@ -25,7 +25,7 @@ fn fig6_scheme_ordering_reproduced() {
     let rates: Vec<f64> = (2..=11).map(|i| 10.0 * i as f64).collect();
     let caps: Vec<f64> = SchemeConfig::fig6_schemes()
         .into_iter()
-        .map(|s| capacity_from_curve(&sweep_arrival_rates(&base(), s, &rates, 2), 0.95))
+        .map(|s| capacity_from_curve(&sweep_arrival_rates(&base(), &s, &rates, 2), 0.95))
         .collect();
     let (icc, dis, mec) = (caps[0], caps[1], caps[2]);
     assert!(icc > dis && dis >= mec, "ordering violated: {caps:?}");
@@ -41,7 +41,7 @@ fn fig7_compute_savings_reproduced() {
     b.n_ues = 60;
     let mins: Vec<Option<f64>> = SchemeConfig::fig6_schemes()
         .into_iter()
-        .map(|s| min_capacity_from_curve(&sweep_gpu_capacity(&b, s, &caps, 2), 0.95))
+        .map(|s| min_capacity_from_curve(&sweep_gpu_capacity(&b, &s, &caps, 2), 0.95))
         .collect();
     let icc = mins[0].expect("ICC must reach 95%");
     assert!((6.0..=10.0).contains(&icc), "ICC min capacity {icc} (paper: 8)");
@@ -59,8 +59,8 @@ fn priority_scheme_gain_vanishes_with_abundant_compute() {
     let mut b = base();
     b.n_ues = 60;
     let caps = [24.0];
-    let icc = sweep_gpu_capacity(&b, SchemeConfig::icc(), &caps, 2)[0].satisfaction;
-    let dis = sweep_gpu_capacity(&b, SchemeConfig::disjoint_ran(), &caps, 2)[0].satisfaction;
+    let icc = sweep_gpu_capacity(&b, &SchemeConfig::icc(), &caps, 2)[0].satisfaction;
+    let dis = sweep_gpu_capacity(&b, &SchemeConfig::disjoint_ran(), &caps, 2)[0].satisfaction;
     assert!(icc > 0.97 && dis > 0.93, "icc {icc}, dis {dis}");
     assert!((icc - dis).abs() < 0.06, "gap should be small at 24×A100: {icc} vs {dis}");
 }
@@ -68,7 +68,7 @@ fn priority_scheme_gain_vanishes_with_abundant_compute() {
 #[test]
 fn satisfaction_decreases_with_load_in_sls() {
     let rates = [20.0, 60.0, 100.0];
-    let pts = sweep_arrival_rates(&base(), SchemeConfig::mec(), &rates, 2);
+    let pts = sweep_arrival_rates(&base(), &SchemeConfig::mec(), &rates, 2);
     assert!(pts[0].satisfaction >= pts[1].satisfaction);
     assert!(pts[1].satisfaction >= pts[2].satisfaction);
 }
@@ -78,7 +78,7 @@ fn comm_latency_grows_with_load() {
     // Fig 6 bar plot: average communication latency climbs with the
     // prompt arrival rate (more PRB contention + queueing).
     let rates = [20.0, 110.0];
-    let pts = sweep_arrival_rates(&base(), SchemeConfig::mec(), &rates, 2);
+    let pts = sweep_arrival_rates(&base(), &SchemeConfig::mec(), &rates, 2);
     assert!(
         pts[1].avg_comm_ms > pts[0].avg_comm_ms,
         "comm {:.2} -> {:.2} ms",
@@ -108,7 +108,7 @@ fn analytic_and_sls_capacities_same_regime() {
     let rates: Vec<f64> = (2..=11).map(|i| 10.0 * i as f64).collect();
     let sls: Vec<f64> = SchemeConfig::fig6_schemes()
         .into_iter()
-        .map(|s| capacity_from_curve(&sweep_arrival_rates(&base(), s, &rates, 2), 0.95))
+        .map(|s| capacity_from_curve(&sweep_arrival_rates(&base(), &s, &rates, 2), 0.95))
         .collect();
     for (t, s) in theory.iter().zip(&sls) {
         let ratio = s / t;
@@ -147,11 +147,28 @@ fn gpu_scaling_monotone_in_sls() {
     let mut b = base();
     b.n_ues = 60;
     let caps = [5.0, 9.0, 14.0];
-    let pts = sweep_gpu_capacity(&b, SchemeConfig::icc(), &caps, 2);
+    let pts = sweep_gpu_capacity(&b, &SchemeConfig::icc(), &caps, 2);
     assert!(pts[0].satisfaction <= pts[1].satisfaction + 0.02);
     assert!(pts[1].satisfaction <= pts[2].satisfaction + 0.02);
     // tokens/s also improves with capacity
     assert!(pts[2].avg_tokens_per_sec > pts[0].avg_tokens_per_sec);
+}
+
+#[test]
+fn sls_event_counter_is_nonzero() {
+    // Regression: SlsResult.events used to be hardcoded to 0; it must
+    // now carry the EventQueue's popped count.
+    let mut cfg = base();
+    cfg.n_ues = 20;
+    cfg.horizon = 4.0;
+    let res = icc6g::sim::Sls::new(cfg.with_scheme(SchemeConfig::icc())).run();
+    assert!(res.events > 0, "event counter must be non-zero");
+    assert!(
+        res.events > res.report.n_jobs,
+        "each job takes several events: {} vs {}",
+        res.events,
+        res.report.n_jobs
+    );
 }
 
 #[test]

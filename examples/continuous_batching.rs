@@ -1,0 +1,93 @@
+//! Continuous batching on a saturated edge node — capacity vs
+//! `max_batch`.
+//!
+//! One A100 serves Llama-2-7B sequentially in ≈ 110 ms/job, i.e. ≈ 9
+//! jobs/s — far below the 40 jobs/s this cell offers. Iteration-level
+//! continuous batching amortizes the weight stream across the decode
+//! batch: while decode stays memory-bound (batch < the saturation
+//! batch, ≈ 153 here), every extra slot is almost free throughput.
+//! This example sweeps the batch cap and prints sustained throughput,
+//! satisfaction, and the TTFT/TPOT tails against the sequential
+//! baseline.
+//!
+//! Run: `cargo run --release --example continuous_batching`
+
+use icc6g::config::{Deployment, Management, SchemeConfig};
+use icc6g::llm::{CostModel, GpuSpec, JobSpec};
+use icc6g::scenario::{ExecutionModel, ScenarioBuilder, ScenarioResult, WorkloadClass};
+use icc6g::util::bench::{cell, Table};
+
+const HORIZON: f64 = 10.0;
+const WARMUP: f64 = 1.0;
+
+fn run(exec: ExecutionModel) -> ScenarioResult {
+    ScenarioBuilder::new()
+        .scheme(
+            SchemeConfig::builder()
+                .name("joint RAN")
+                .deployment(Deployment::Ran)
+                .management(Management::Joint)
+                .build(),
+        )
+        .n_ues(40) // 40 jobs/s offered — saturates the sequential node
+        .horizon(HORIZON)
+        .warmup(WARMUP)
+        .seed(7)
+        .workload(WorkloadClass::translation().with_budget(0.5))
+        .node_exec(GpuSpec::a100(), 1, exec)
+        .build()
+        .run()
+}
+
+fn main() {
+    let gpu = GpuSpec::a100();
+    let job = JobSpec::table1();
+    let m = CostModel::new(gpu);
+    println!(
+        "node: {} — sequential service {:.1} ms/job, saturation batch {}",
+        gpu.display_name(),
+        m.total_latency(&job) * 1e3,
+        m.saturation_batch(&job),
+    );
+
+    let mut t = Table::new(
+        "capacity vs max_batch (one A100, 40 jobs/s offered, 0.5 s budget)",
+        &["max_batch", "served/s", "satisfaction", "ttft_p95_ms", "tpot_p95_ms"],
+    );
+    let window = HORIZON - WARMUP;
+
+    let seq = run(ExecutionModel::Sequential);
+    let c = &seq.report.per_class[0];
+    t.row(&[
+        "sequential".into(),
+        cell(c.comp.count() as f64 / window, 1),
+        cell(c.satisfaction_rate(), 4),
+        cell(c.ttft_percentile(95.0) * 1e3, 1),
+        cell(c.tpot_percentile(95.0) * 1e3, 3),
+    ]);
+    let seq_served = c.comp.count();
+
+    for max_batch in [1u32, 2, 4, 8, 16, 32, 64, 128, 256] {
+        let res = run(ExecutionModel::ContinuousBatching { max_batch, kv_budget: 0.0 });
+        let c = &res.report.per_class[0];
+        t.row(&[
+            max_batch.to_string(),
+            cell(c.comp.count() as f64 / window, 1),
+            cell(c.satisfaction_rate(), 4),
+            cell(c.ttft_percentile(95.0) * 1e3, 1),
+            cell(c.tpot_percentile(95.0) * 1e3, 3),
+        ]);
+        if max_batch >= 64 {
+            assert!(
+                c.comp.count() > seq_served,
+                "a wide batch must out-serve the sequential node"
+            );
+        }
+    }
+    t.print();
+    let _ = t.write_csv("continuous_batching.csv");
+    println!(
+        "\nReading: throughput climbs ≈ linearly with max_batch until the KV budget or\n\
+         the saturation batch binds; TPOT p95 grows once decode turns compute-bound."
+    );
+}

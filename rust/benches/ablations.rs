@@ -6,15 +6,19 @@
 //!   one?),
 //! * SR-period sensitivity (the MAC grant-cycle modeling knob),
 //! * scheduler policy (PF vs RR),
-//! * priority-scheme decomposition (packet prio vs deadline queue).
+//! * priority-scheme decomposition (packet prio vs deadline queue),
+//! * execution model (sequential vs continuous batching at several
+//!   batch caps on a saturated node).
 //!
 //! Run: `cargo bench --bench ablations`
 
 use icc6g::config::{Deployment, Management, SchemeConfig, SimConfig};
 use icc6g::coordinator::{capacity_from_curve, sweep_arrival_rates};
+use icc6g::llm::GpuSpec;
 use icc6g::mac::SchedulingPolicy;
 use icc6g::queueing::analytic::{disjoint_satisfaction, SystemParams};
 use icc6g::queueing::{service_capacity, Scheme};
+use icc6g::scenario::{ExecutionModel, ScenarioBuilder, WorkloadClass};
 use icc6g::sim::Sls;
 use icc6g::util::bench::{cell, Table};
 
@@ -164,6 +168,54 @@ fn ablate_priority_components() {
     t.write_csv("ablation_components.csv").expect("csv");
 }
 
+fn ablate_execution_model() {
+    // One saturated A100 (sequential service ≈ 110 ms/job, so 40
+    // offered jobs/s is far beyond sequential capacity): sweep the
+    // continuous-batching cap and watch throughput and TTFT/TPOT
+    // tails. Past the saturation batch (~153 for Llama-7B on A100)
+    // decode turns compute-bound and extra slots stop paying.
+    let mut t = Table::new(
+        "Ablation F — execution model on a saturated A100 (40 jobs/s offered, 0.5s budget)",
+        &["execution", "completed", "satisfaction", "ttft_p95_ms", "tpot_p95_ms"],
+    );
+    let configs = [
+        ("sequential", ExecutionModel::Sequential),
+        ("batch 4", ExecutionModel::ContinuousBatching { max_batch: 4, kv_budget: 0.0 }),
+        ("batch 16", ExecutionModel::ContinuousBatching { max_batch: 16, kv_budget: 0.0 }),
+        ("batch 64", ExecutionModel::ContinuousBatching { max_batch: 64, kv_budget: 0.0 }),
+        ("batch 256", ExecutionModel::ContinuousBatching { max_batch: 256, kv_budget: 0.0 }),
+    ];
+    for (label, exec) in configs {
+        let res = ScenarioBuilder::new()
+            .scheme(
+                SchemeConfig::builder()
+                    .name("joint RAN")
+                    .deployment(Deployment::Ran)
+                    .management(Management::Joint)
+                    .build(),
+            )
+            .n_ues(40)
+            .horizon(10.0)
+            .warmup(1.0)
+            .seed(11)
+            .workload(WorkloadClass::translation().with_budget(0.5))
+            .node_exec(GpuSpec::a100(), 1, exec)
+            .build()
+            .run();
+        let c = &res.report.per_class[0];
+        t.row(&[
+            label.to_string(),
+            c.comp.count().to_string(),
+            cell(c.satisfaction_rate(), 4),
+            cell(c.ttft_percentile(95.0) * 1e3, 1),
+            cell(c.tpot_percentile(95.0) * 1e3, 3),
+        ]);
+    }
+    t.print();
+    t.write_csv("ablation_execution_model.csv").expect("csv");
+    println!("(completed = jobs served in the measured window; sequential queues unboundedly)");
+}
+
 fn main() {
     let t0 = std::time::Instant::now();
     ablate_wireline();
@@ -171,5 +223,6 @@ fn main() {
     ablate_sr_period();
     ablate_scheduler_policy();
     ablate_priority_components();
+    ablate_execution_model();
     println!("\nablation suite wall: {:.1}s", t0.elapsed().as_secs_f64());
 }

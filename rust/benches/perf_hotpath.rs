@@ -1,15 +1,22 @@
 //! Hot-path microbenchmarks — the §Perf instrumentation.
 //!
 //! L3 targets (DESIGN.md §7): the SLS event loop must sustain ≥1 M
-//! events/s; queue operations must be allocation-light; the analytic
-//! layer must be effectively free. The PJRT serving path reports
-//! tokens/s when artifacts exist.
+//! events/s; queue operations must be allocation-light (drain-style
+//! node event APIs, no per-event boxing); the analytic layer must be
+//! effectively free. The PJRT serving path reports tokens/s when
+//! artifacts exist.
+//!
+//! Results also land machine-readable in `BENCH_hotpath.json` so the
+//! perf trajectory accumulates across commits.
 //!
 //! Run: `cargo bench --bench perf_hotpath`
 
-use icc6g::compute::{ComputeJob, ComputeNode, Discipline};
+use icc6g::compute::{
+    BatchEngine, BatchEvent, ComputeJob, ComputeNode, Discipline, ExecutionModel,
+};
 use icc6g::config::{SchemeConfig, SimConfig};
 use icc6g::dess::EventQueue;
+use icc6g::llm::GpuSpec;
 use icc6g::mac::{MacConfig, Sdu, SduKind, UeMac, UlScheduler};
 use icc6g::phy::channel::LargeScale;
 use icc6g::phy::Carrier;
@@ -18,10 +25,11 @@ use icc6g::queueing::tandem_mc::simulate_tandem;
 use icc6g::queueing::Scheme;
 use icc6g::rng::Rng;
 use icc6g::runtime::{tokenizer, Engine};
+use icc6g::scenario::ScenarioBuilder;
 use icc6g::sim::Sls;
-use icc6g::util::bench::bench_fn;
+use icc6g::util::bench::{bench_fn, write_bench_json, BenchResult};
 
-fn bench_event_queue() {
+fn bench_event_queue(out: &mut Vec<BenchResult>) {
     // Schedule + pop 10k events per iteration.
     let r = bench_fn("dess: 10k schedule+pop", 3, 50, 0.3, || {
         let mut q = EventQueue::new();
@@ -37,16 +45,21 @@ fn bench_event_queue() {
     println!("{}", r.report());
     let events_per_sec = 20_000.0 / (r.mean_ns * 1e-9);
     println!("  → {:.1} M queue ops/s", events_per_sec / 1e6);
+    out.push(r);
 }
 
-fn bench_compute_node() {
-    let r = bench_fn("compute: 1k enqueue+complete (EDF+drop)", 3, 100, 0.3, || {
+fn bench_compute_node(out: &mut Vec<BenchResult>) {
+    // Dispatch through the drain-style API with one reused event
+    // buffer — the allocation-free pattern the scenario loop uses.
+    let mut events = Vec::with_capacity(16);
+    let r = bench_fn("compute: 1k enqueue+dispatch+complete (EDF+drop)", 3, 100, 0.3, || {
         let mut node =
             ComputeNode::new(Discipline::DeadlinePriority { drop_hopeless: true }, 2);
         let mut t = 0.0;
         for i in 0..1000u64 {
             t += 0.001;
-            let evs = node.enqueue(
+            events.clear();
+            node.enqueue(
                 ComputeJob {
                     job_id: i,
                     t_gen: t,
@@ -55,19 +68,74 @@ fn bench_compute_node() {
                     service_time: 0.011,
                 },
                 t,
+                &mut events,
             );
-            std::hint::black_box(&evs);
+            std::hint::black_box(&events);
             if node.busy_servers() > 0 && i % 3 == 0 {
-                let evs = node.complete(t + 0.011);
-                std::hint::black_box(&evs);
+                events.clear();
+                node.complete(t + 0.011, &mut events);
+                std::hint::black_box(&events);
             }
         }
         node.queue_len()
     });
     println!("{}", r.report());
+    out.push(r);
 }
 
-fn bench_mac_slot() {
+fn bench_batch_engine(out: &mut Vec<BenchResult>) {
+    // Iteration-level engine under a saturating arrival pattern:
+    // enqueue + step until drained, reused event buffer.
+    let gpu = GpuSpec::a100();
+    let mut events: Vec<BatchEvent> = Vec::with_capacity(64);
+    let r = bench_fn("compute: batch engine 256 jobs, max_batch 32", 3, 50, 0.3, || {
+        let mut e = BatchEngine::new(Discipline::Fifo, gpu, 32, 64e9);
+        let mut pending: Option<f64> = None;
+        let mut finished = 0u64;
+        for i in 0..256u64 {
+            events.clear();
+            e.enqueue(
+                icc6g::compute::BatchJob {
+                    job_id: i,
+                    t_gen: 0.0,
+                    t_comm: 0.0,
+                    deadline: 10.0,
+                    n_input: 15,
+                    n_output: 15,
+                    prefill_time: 0.00687,
+                    decode_time: 15.0 * 0.00687,
+                    c_llm: 14e9,
+                    m_llm: 14e9,
+                    kv_bytes_per_token: 524_288.0,
+                },
+                0.0,
+                &mut events,
+            );
+            for ev in &events {
+                if let BatchEvent::StepAt { at } = ev {
+                    pending = Some(*at);
+                }
+            }
+        }
+        while let Some(at) = pending {
+            pending = None;
+            events.clear();
+            e.step(at, &mut events);
+            for ev in &events {
+                match ev {
+                    BatchEvent::StepAt { at } => pending = Some(*at),
+                    BatchEvent::Finished { .. } => finished += 1,
+                    _ => {}
+                }
+            }
+        }
+        finished
+    });
+    println!("{}", r.report());
+    out.push(r);
+}
+
+fn bench_mac_slot(out: &mut Vec<BenchResult>) {
     let carrier = Carrier::table1();
     let sched = UlScheduler::new(MacConfig::default(), carrier);
     let mut rng = Rng::new(1);
@@ -101,9 +169,10 @@ fn bench_mac_slot() {
         slots_per_sec,
         slots_per_sec * 0.25e-3
     );
+    out.push(r);
 }
 
-fn bench_tandem_mc() {
+fn bench_tandem_mc(out: &mut Vec<BenchResult>) {
     let p = SystemParams::paper();
     let r = bench_fn("queueing: 50k-job tandem MC", 1, 20, 0.5, || {
         simulate_tandem(&p, 60.0, 0.005, 50_000, 7).len()
@@ -111,18 +180,20 @@ fn bench_tandem_mc() {
     println!("{}", r.report());
     let jobs_per_sec = 50_000.0 / (r.mean_ns * 1e-9);
     println!("  → {:.1} M simulated jobs/s", jobs_per_sec / 1e6);
+    out.push(r);
 }
 
-fn bench_analytic() {
+fn bench_analytic(out: &mut Vec<BenchResult>) {
     let p = SystemParams::paper();
     let s = Scheme::mec_disjoint();
     let r = bench_fn("queueing: disjoint closed form", 1000, 100_000, 0.2, || {
         scheme_satisfaction(&p, &s, 55.0)
     });
     println!("{}", r.report());
+    out.push(r);
 }
 
-fn bench_full_sls() {
+fn bench_full_sls(out: &mut Vec<BenchResult>) {
     let mut cfg = SimConfig::table1().with_scheme(SchemeConfig::icc());
     cfg.n_ues = 60;
     cfg.horizon = 5.0;
@@ -133,9 +204,33 @@ fn bench_full_sls() {
     println!("{}", r.report());
     let sim_per_wall = 5.0 / (r.mean_ns * 1e-9);
     println!("  → {sim_per_wall:.0}× realtime (5 s simulated per {:.0} ms wall)", r.mean_ns / 1e6);
+    out.push(r);
 }
 
-fn bench_engine() {
+fn bench_batching_scenario(out: &mut Vec<BenchResult>) {
+    // Same radio substrate, continuous-batching node: measures the
+    // per-iteration event overhead of the batch execution model.
+    let r = bench_fn("scenario: 5s, 60 UEs, batching node", 1, 5, 1.0, || {
+        ScenarioBuilder::new()
+            .scheme(SchemeConfig::icc())
+            .n_ues(60)
+            .horizon(5.0)
+            .warmup(0.5)
+            .node_exec(
+                GpuSpec::gh200_nvl2().scaled(2.0),
+                1,
+                ExecutionModel::ContinuousBatching { max_batch: 32, kv_budget: 0.0 },
+            )
+            .build()
+            .run()
+            .report
+            .n_jobs
+    });
+    println!("{}", r.report());
+    out.push(r);
+}
+
+fn bench_engine(out: &mut Vec<BenchResult>) {
     let dir = Engine::default_artifacts_dir();
     if !dir.join("prefill.hlo.txt").exists() {
         println!("engine: skipped (run `make artifacts`)");
@@ -147,21 +242,30 @@ fn bench_engine() {
         engine.prefill(&prompt).unwrap().0.len()
     });
     println!("{}", r.report());
+    out.push(r);
     let r = bench_fn("engine: generate 15 tokens", 1, 10, 2.0, || {
         engine.generate(&prompt, 15).unwrap().0.len()
     });
     println!("{}", r.report());
     let toks_per_sec = 15.0 / (r.mean_ns * 1e-9);
     println!("  → {toks_per_sec:.0} tok/s end-to-end (prefill amortized)");
+    out.push(r);
 }
 
 fn main() {
     println!("=== §Perf hot-path microbenchmarks ===\n");
-    bench_event_queue();
-    bench_compute_node();
-    bench_mac_slot();
-    bench_tandem_mc();
-    bench_analytic();
-    bench_full_sls();
-    bench_engine();
+    let mut results = Vec::new();
+    bench_event_queue(&mut results);
+    bench_compute_node(&mut results);
+    bench_batch_engine(&mut results);
+    bench_mac_slot(&mut results);
+    bench_tandem_mc(&mut results);
+    bench_analytic(&mut results);
+    bench_full_sls(&mut results);
+    bench_batching_scenario(&mut results);
+    bench_engine(&mut results);
+    match write_bench_json("BENCH_hotpath.json", &results) {
+        Ok(()) => println!("\nwrote BENCH_hotpath.json ({} results)", results.len()),
+        Err(e) => eprintln!("\ncannot write BENCH_hotpath.json: {e}"),
+    }
 }

@@ -1,0 +1,549 @@
+//! Iteration-level continuous-batching execution engine.
+//!
+//! Real edge LLM serving does not occupy one server per job for the
+//! whole request: it admits prefills against a KV-cache memory budget
+//! and runs *batched decode steps*, amortizing the weight stream
+//! across the batch (mixed-workload edge studies, arXiv:2411.17712,
+//! show these batching dynamics dominate tail latency). The
+//! [`BatchEngine`] models exactly that at iteration granularity:
+//!
+//! * **Admission** happens only at iteration boundaries, in the
+//!   [`Discipline`] order (FIFO or ICC deadline priority with the
+//!   hopeless-drop rule), gated by the batch-slot cap `max_batch` and
+//!   the KV budget: a job reserves `(N_input + N_output) ·
+//!   kv_bytes_per_token` for its whole lifetime (vLLM-style
+//!   conservative reservation, which keeps admission deterministic).
+//! * **One iteration** = the prefills of newly admitted jobs plus one
+//!   batched decode step for every already-prefilled job:
+//!   `τ = Σ prefill_j + max(Σ C_LLM,j / G_comp, max M_LLM,j / G_membw)`
+//!   — the weight stream is charged once per step (the `max` over
+//!   models in the batch), compute scales with batch size. For a
+//!   homogeneous batch of size B this is exactly
+//!   [`crate::llm::CostModel::batched_token_latency`].
+//! * Every prefilled job emits one token per iteration; its first
+//!   emitted token marks TTFT, its last completes the job and frees
+//!   its KV reservation.
+//!
+//! With `max_batch = 1` the engine degenerates to the sequential
+//! single-server node: one prefill iteration followed by `N_output`
+//! decode iterations of `max(C/G_comp, M/G_membw)` each — the same
+//! service time, admission order, and drop decisions as
+//! [`super::ComputeNode`] (modulo f64 accumulation order).
+//!
+//! Like [`super::ComputeNode`], the engine is a passive state machine:
+//! the simulator calls [`BatchEngine::enqueue`] on arrivals and
+//! [`BatchEngine::step`] at each boundary the engine announced via
+//! [`BatchEvent::StepAt`], and events drain into a caller-provided
+//! buffer (allocation-free hot path).
+
+use crate::llm::GpuSpec;
+
+use super::{Discipline, ReadyQueue};
+
+/// How a compute node executes its jobs.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum ExecutionModel {
+    /// Whole-job server occupancy (the paper's Figs 4/6/7 model): each
+    /// job holds one of `n_servers` servers for its roofline service
+    /// time.
+    #[default]
+    Sequential,
+    /// Iteration-level continuous batching on a single engine.
+    /// `kv_budget` is the KV-cache byte budget gating admission;
+    /// `0.0` means "derive at build time" (`mem_bytes − max m_llm`).
+    ContinuousBatching { max_batch: u32, kv_budget: f64 },
+}
+
+impl ExecutionModel {
+    pub fn is_batching(&self) -> bool {
+        matches!(self, ExecutionModel::ContinuousBatching { .. })
+    }
+}
+
+/// A job as seen by the batch engine: the prefill/decode split demand
+/// plus the per-token roofline constants of the served model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchJob {
+    pub job_id: u64,
+    /// Generation time at the UE.
+    pub t_gen: f64,
+    /// Observed communication latency (UE→BS, incl. uplink queueing).
+    pub t_comm: f64,
+    /// Absolute deadline `t_gen + b_total`.
+    pub deadline: f64,
+    pub n_input: u32,
+    /// Output length (≥ 1) realized by the service model.
+    pub n_output: u32,
+    /// Prefill latency on this node (Eq 7).
+    pub prefill_time: f64,
+    /// *Sequential* decode latency `N_output · max(C/G_comp, M/G_membw)`
+    /// — the lower bound used by the hopeless-drop rule (a batched
+    /// step is never faster than a lone one).
+    pub decode_time: f64,
+    /// FLOPs per decode token (compute share of a batched step).
+    pub c_llm: f64,
+    /// Model bytes streamed per forward pass (amortized across the
+    /// batch).
+    pub m_llm: f64,
+    /// KV-cache bytes reserved per token of context.
+    pub kv_bytes_per_token: f64,
+}
+
+impl BatchJob {
+    /// ICC priority key (same as [`super::ComputeJob::priority_key`]).
+    pub fn priority_key(&self) -> f64 {
+        self.deadline - self.t_comm
+    }
+
+    /// KV bytes this job reserves while admitted.
+    pub fn kv_bytes(&self) -> f64 {
+        (self.n_input + self.n_output) as f64 * self.kv_bytes_per_token
+    }
+
+    /// Lower bound on remaining service (prefill + lone decode).
+    fn min_service_time(&self) -> f64 {
+        self.prefill_time + self.decode_time
+    }
+}
+
+/// What happened at an engine interaction. All events refer to the
+/// `now` of the triggering call except [`BatchEvent::StepAt`], which
+/// announces the *next* iteration boundary.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BatchEvent {
+    /// Admitted into the running batch; its prefill starts now (this
+    /// is the job's service-start time).
+    Admitted { job_id: u64 },
+    /// First output token emitted (the TTFT boundary).
+    FirstToken { job_id: u64 },
+    /// Last output token emitted; KV reservation freed.
+    Finished { job_id: u64 },
+    /// Dropped at admission: hopeless deadline, or a KV demand larger
+    /// than the whole budget (which could never be admitted).
+    Dropped { job_id: u64 },
+    /// The caller must invoke [`BatchEngine::step`] at absolute time
+    /// `at` (exactly one is outstanding while the engine runs).
+    StepAt { at: f64 },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Active {
+    job: BatchJob,
+    tokens_left: u32,
+    /// Prefill iteration completed → decodes one token per step.
+    prefilled: bool,
+}
+
+/// The continuous-batching execution engine of one compute node.
+#[derive(Debug)]
+pub struct BatchEngine {
+    discipline: Discipline,
+    gpu: GpuSpec,
+    max_batch: usize,
+    kv_budget: f64,
+    kv_used: f64,
+    queue: ReadyQueue<BatchJob>,
+    active: Vec<Active>,
+    /// A [`BatchEvent::StepAt`] is outstanding.
+    running: bool,
+    /// Running count of dropped jobs.
+    pub dropped: u64,
+}
+
+impl BatchEngine {
+    pub fn new(discipline: Discipline, gpu: GpuSpec, max_batch: u32, kv_budget: f64) -> Self {
+        assert!(max_batch >= 1, "max_batch must be >= 1");
+        assert!(kv_budget > 0.0, "kv_budget must be positive");
+        Self {
+            discipline,
+            gpu,
+            max_batch: max_batch as usize,
+            kv_budget,
+            kv_used: 0.0,
+            queue: ReadyQueue::new(discipline),
+            active: Vec::new(),
+            running: false,
+            dropped: 0,
+        }
+    }
+
+    /// Jobs waiting for admission.
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Jobs admitted (prefilling or decoding).
+    pub fn batch_len(&self) -> usize {
+        self.active.len()
+    }
+
+    /// KV bytes currently reserved.
+    pub fn kv_used(&self) -> f64 {
+        self.kv_used
+    }
+
+    /// A job arrives at the node at time `now`. Events are appended to
+    /// the caller's buffer (clear it between calls).
+    pub fn enqueue(&mut self, job: BatchJob, now: f64, events: &mut Vec<BatchEvent>) {
+        assert!(job.n_output >= 1, "jobs must decode at least one token");
+        self.queue.push(job, job.priority_key());
+        if !self.running {
+            self.advance(now, events);
+        }
+    }
+
+    /// The iteration boundary announced by the last
+    /// [`BatchEvent::StepAt`] has been reached: account the elapsed
+    /// iteration (prefills done, one token per decoding job), then
+    /// admit and schedule the next iteration.
+    pub fn step(&mut self, now: f64, events: &mut Vec<BatchEvent>) {
+        assert!(self.running, "step() without an outstanding StepAt");
+        self.running = false;
+        let mut i = 0;
+        let mut disturbed = false;
+        while i < self.active.len() {
+            let a = &mut self.active[i];
+            if !a.prefilled {
+                a.prefilled = true;
+                i += 1;
+                continue;
+            }
+            a.tokens_left -= 1;
+            if a.tokens_left + 1 == a.job.n_output {
+                events.push(BatchEvent::FirstToken { job_id: a.job.job_id });
+            }
+            if a.tokens_left == 0 {
+                self.kv_used -= a.job.kv_bytes();
+                events.push(BatchEvent::Finished { job_id: a.job.job_id });
+                self.active.swap_remove(i);
+                disturbed = true;
+            } else {
+                i += 1;
+            }
+        }
+        // swap_remove disturbs order; restore id order only on the
+        // (rare) completion steps — iteration cost is order-invariant,
+        // the sort just keeps event emission deterministic to read,
+        // and the common one-token step must stay O(batch).
+        if disturbed {
+            self.active.sort_by_key(|a| a.job.job_id);
+        }
+        self.advance(now, events);
+    }
+
+    /// Admit from the queue and schedule the next iteration boundary.
+    fn advance(&mut self, now: f64, events: &mut Vec<BatchEvent>) {
+        loop {
+            if self.active.len() >= self.max_batch {
+                break;
+            }
+            let Some(head) = self.queue.peek() else { break };
+            let kv_need = head.kv_bytes();
+            if kv_need > self.kv_budget {
+                // Could never be admitted — drop instead of wedging
+                // the queue head forever.
+                let job = self.queue.pop().unwrap();
+                self.dropped += 1;
+                events.push(BatchEvent::Dropped { job_id: job.job_id });
+                continue;
+            }
+            if self.kv_used + kv_need > self.kv_budget {
+                break;
+            }
+            let job = self.queue.pop().unwrap();
+            if self.discipline.drops_hopeless()
+                && now + job.min_service_time() > job.deadline
+            {
+                self.dropped += 1;
+                events.push(BatchEvent::Dropped { job_id: job.job_id });
+                continue;
+            }
+            self.kv_used += kv_need;
+            events.push(BatchEvent::Admitted { job_id: job.job_id });
+            self.active.push(Active { job, tokens_left: job.n_output, prefilled: false });
+        }
+        if self.active.is_empty() {
+            return; // idle; the next enqueue restarts the engine
+        }
+        // One iteration: newly admitted prefills + one batched decode
+        // step for everything already prefilled.
+        let mut prefill = 0.0;
+        let mut compute = 0.0;
+        let mut weights = 0.0f64;
+        let mut decoding = false;
+        for a in &self.active {
+            if a.prefilled {
+                decoding = true;
+                compute += a.job.c_llm;
+                weights = weights.max(a.job.m_llm);
+            } else {
+                prefill += a.job.prefill_time;
+            }
+        }
+        let decode_step = if decoding {
+            (compute / self.gpu.comp_flops).max(weights / self.gpu.mem_bw)
+        } else {
+            0.0
+        };
+        self.running = true;
+        events.push(BatchEvent::StepAt { at: now + prefill + decode_step });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::{ComputeJob, ComputeNode, NodeEvent};
+    use crate::llm::{CostModel, GpuSpec, JobSpec};
+
+    const KV_PER_TOKEN: f64 = 524_288.0; // ≈ Llama-7B FP16
+
+    fn job(id: u64, t_gen: f64, deadline: f64, n_output: u32, gpu: &GpuSpec) -> BatchJob {
+        let spec = JobSpec { n_output, ..JobSpec::table1() };
+        let m = CostModel::new(*gpu);
+        BatchJob {
+            job_id: id,
+            t_gen,
+            t_comm: 0.0,
+            deadline,
+            n_input: spec.n_input,
+            n_output,
+            prefill_time: m.prefill_latency(&spec),
+            decode_time: m.tokengen_latency(&spec),
+            c_llm: spec.c_llm,
+            m_llm: spec.m_llm,
+            kv_bytes_per_token: KV_PER_TOKEN,
+        }
+    }
+
+    /// Drive the engine over a list of (arrival_time, job) pairs until
+    /// idle; returns (first_token, finish) absolute times per job id.
+    fn run(
+        engine: &mut BatchEngine,
+        arrivals: &[(f64, BatchJob)],
+    ) -> std::collections::BTreeMap<u64, (f64, f64)> {
+        let mut out = std::collections::BTreeMap::new();
+        let mut first = std::collections::BTreeMap::new();
+        let mut events = Vec::new();
+        let mut pending_step: Option<f64> = None;
+        let mut arrivals = arrivals.to_vec();
+        arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut ai = 0;
+        loop {
+            // next event: arrival or step, whichever first
+            let next_arr = arrivals.get(ai).map(|a| a.0);
+            let (now, is_arrival) = match (next_arr, pending_step) {
+                (Some(a), Some(s)) if a <= s => (a, true),
+                (_, Some(s)) => (s, false),
+                (Some(a), None) => (a, true),
+                (None, None) => break,
+            };
+            events.clear();
+            if is_arrival {
+                let (_, j) = arrivals[ai];
+                ai += 1;
+                engine.enqueue(j, now, &mut events);
+            } else {
+                pending_step = None;
+                engine.step(now, &mut events);
+            }
+            for ev in &events {
+                match *ev {
+                    BatchEvent::StepAt { at } => pending_step = Some(at),
+                    BatchEvent::FirstToken { job_id } => {
+                        first.insert(job_id, now);
+                    }
+                    BatchEvent::Finished { job_id } => {
+                        out.insert(job_id, (first[&job_id], now));
+                    }
+                    _ => {}
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn single_job_matches_roofline_timeline() {
+        let gpu = GpuSpec::a100();
+        let m = CostModel::new(gpu);
+        let spec = JobSpec::table1();
+        let mut e = BatchEngine::new(Discipline::Fifo, gpu, 8, 1e9);
+        let times = run(&mut e, &[(0.0, job(0, 0.0, 1.0, 15, &gpu))]);
+        let (first, finish) = times[&0];
+        let tok = m.token_latency(&spec);
+        assert!((first - (m.prefill_latency(&spec) + tok)).abs() < 1e-12, "ttft {first}");
+        assert!((finish - m.total_latency(&spec)).abs() < 1e-9, "finish {finish}");
+    }
+
+    #[test]
+    fn memory_bound_batch_amortizes_weight_stream() {
+        // 8 identical jobs arriving together: decode steps stay
+        // memory-bound, so the makespan is far below 8× sequential.
+        let gpu = GpuSpec::a100();
+        let m = CostModel::new(gpu);
+        let seq = m.total_latency(&JobSpec::table1());
+        let mut e = BatchEngine::new(Discipline::Fifo, gpu, 8, 1e9);
+        let arrivals: Vec<(f64, BatchJob)> =
+            (0..8).map(|i| (0.0, job(i, 0.0, 10.0, 15, &gpu))).collect();
+        let times = run(&mut e, &arrivals);
+        assert_eq!(times.len(), 8);
+        let makespan = times.values().map(|&(_, f)| f).fold(0.0, f64::max);
+        assert!(
+            makespan < 3.0 * seq,
+            "batched makespan {makespan} vs sequential {seq} per job"
+        );
+        // throughput strictly better than serving the 8 one by one
+        assert!(makespan < 8.0 * seq * 0.5);
+    }
+
+    #[test]
+    fn kv_budget_gates_admission() {
+        let gpu = GpuSpec::a100();
+        // Budget fits exactly one 30-token job's KV.
+        let budget = 30.0 * KV_PER_TOKEN + 1.0;
+        let mut e = BatchEngine::new(Discipline::Fifo, gpu, 8, budget);
+        let mut events = Vec::new();
+        e.enqueue(job(0, 0.0, 10.0, 15, &gpu), 0.0, &mut events);
+        e.enqueue(job(1, 0.0, 10.0, 15, &gpu), 0.0, &mut events);
+        assert_eq!(e.batch_len(), 1, "KV budget admits only one job");
+        assert_eq!(e.queue_len(), 1);
+        let times = run(
+            &mut BatchEngine::new(Discipline::Fifo, gpu, 8, budget),
+            &[(0.0, job(0, 0.0, 10.0, 15, &gpu)), (0.0, job(1, 0.0, 10.0, 15, &gpu))],
+        );
+        // serialized: job 1 finishes ≈ 2× single service
+        let m = CostModel::new(gpu);
+        let seq = m.total_latency(&JobSpec::table1());
+        assert!((times[&1].1 - 2.0 * seq).abs() < 1e-6, "t1 = {}", times[&1].1);
+    }
+
+    #[test]
+    fn oversized_kv_demand_is_dropped_not_wedged() {
+        let gpu = GpuSpec::a100();
+        let mut e = BatchEngine::new(Discipline::Fifo, gpu, 8, 5.0 * KV_PER_TOKEN);
+        let mut events = Vec::new();
+        // 30-token context cannot ever fit a 5-token budget
+        e.enqueue(job(0, 0.0, 10.0, 15, &gpu), 0.0, &mut events);
+        assert!(events.contains(&BatchEvent::Dropped { job_id: 0 }));
+        assert_eq!(e.dropped, 1);
+        // and the engine still serves a job that fits
+        let ok = BatchJob { n_input: 2, n_output: 2, ..job(1, 0.0, 10.0, 2, &gpu) };
+        events.clear();
+        e.enqueue(ok, 0.0, &mut events);
+        assert_eq!(e.batch_len(), 1);
+    }
+
+    #[test]
+    fn hopeless_jobs_dropped_at_admission() {
+        let gpu = GpuSpec::a100();
+        let discipline = Discipline::DeadlinePriority { drop_hopeless: true };
+        let mut e = BatchEngine::new(discipline, gpu, 1, 1e9);
+        let mut events = Vec::new();
+        // occupies the single slot for ~110 ms
+        e.enqueue(job(0, 0.0, 1.0, 15, &gpu), 0.0, &mut events);
+        // deadline 50 ms: hopeless once the slot frees
+        e.enqueue(job(1, 0.0, 0.050, 15, &gpu), 0.001, &mut events);
+        let times = run_from(&mut e, events.clone());
+        assert!(times.contains_key(&0));
+        assert!(!times.contains_key(&1), "hopeless job must not complete");
+        assert_eq!(e.dropped, 1);
+    }
+
+    /// Continue driving an engine whose first events are already out.
+    fn run_from(
+        engine: &mut BatchEngine,
+        initial: Vec<BatchEvent>,
+    ) -> std::collections::BTreeMap<u64, (f64, f64)> {
+        let mut out = std::collections::BTreeMap::new();
+        let mut first = std::collections::BTreeMap::new();
+        let mut pending: Option<f64> = initial.iter().find_map(|e| match e {
+            BatchEvent::StepAt { at } => Some(*at),
+            _ => None,
+        });
+        let mut events = Vec::new();
+        while let Some(now) = pending {
+            pending = None;
+            events.clear();
+            engine.step(now, &mut events);
+            for ev in &events {
+                match *ev {
+                    BatchEvent::StepAt { at } => pending = Some(at),
+                    BatchEvent::FirstToken { job_id } => {
+                        first.insert(job_id, now);
+                    }
+                    BatchEvent::Finished { job_id } => {
+                        out.insert(job_id, (first[&job_id], now));
+                    }
+                    _ => {}
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn max_batch_one_matches_sequential_node() {
+        // Same arrivals through a 1-slot engine and a 1-server
+        // sequential node: identical completion times (within f64
+        // accumulation noise).
+        let gpu = GpuSpec::gh200_nvl2();
+        let arrivals: Vec<(f64, BatchJob)> = (0..4)
+            .map(|i| (0.002 * i as f64, job(i as u64, 0.002 * i as f64, 1.0, 5 + i, &gpu)))
+            .collect();
+        let mut e = BatchEngine::new(Discipline::Fifo, gpu, 1, 1e12);
+        let batch_times = run(&mut e, &arrivals);
+
+        let mut node = ComputeNode::new(Discipline::Fifo, 1);
+        let mut done: std::collections::BTreeMap<u64, f64> = Default::default();
+        let mut ev: Vec<NodeEvent> = Vec::new();
+        let mut pending: Vec<(f64, u64)> = Vec::new(); // (completes_at, id)
+        let record = |ev: &[NodeEvent], pending: &mut Vec<(f64, u64)>| {
+            for e in ev {
+                if let NodeEvent::Started { job, completes_at } = e {
+                    pending.push((*completes_at, job.job_id));
+                }
+            }
+        };
+        for (t, bj) in &arrivals {
+            // finish anything due before this arrival
+            pending.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            while let Some(&(ct, id)) = pending.first() {
+                if ct > *t {
+                    break;
+                }
+                pending.remove(0);
+                done.insert(id, ct);
+                ev.clear();
+                node.complete(ct, &mut ev);
+                record(&ev, &mut pending);
+            }
+            let cj = ComputeJob {
+                job_id: bj.job_id,
+                t_gen: bj.t_gen,
+                t_comm: bj.t_comm,
+                deadline: bj.deadline,
+                service_time: bj.prefill_time + bj.decode_time,
+            };
+            ev.clear();
+            node.enqueue(cj, *t, &mut ev);
+            record(&ev, &mut pending);
+        }
+        while !pending.is_empty() {
+            pending.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let (ct, id) = pending.remove(0);
+            done.insert(id, ct);
+            ev.clear();
+            node.complete(ct, &mut ev);
+            record(&ev, &mut pending);
+        }
+        assert_eq!(batch_times.len(), done.len());
+        for (id, &(_, finish)) in &batch_times {
+            let seq_finish = done[id];
+            assert!(
+                (finish - seq_finish).abs() < 1e-9,
+                "job {id}: batch {finish} vs sequential {seq_finish}"
+            );
+        }
+    }
+}

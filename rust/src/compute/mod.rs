@@ -1,7 +1,15 @@
-//! Computing-node queueing (paper §IV-B item 2).
+//! Computing-node queueing (paper §IV-B item 2) and the execution
+//! models that serve it.
 //!
-//! The node serves LLM jobs with deterministic service times from the
-//! roofline model. Two disciplines:
+//! Two execution models share this tier (see [`ExecutionModel`]):
+//!
+//! * [`ComputeNode`] — the legacy **sequential** model: each job
+//!   occupies one server for its whole roofline service time.
+//! * [`engine::BatchEngine`] — **iteration-level continuous batching**:
+//!   prefills are admitted against a KV-cache budget and decode steps
+//!   are batched, amortizing the weight stream (extension §IV).
+//!
+//! Both run the same two queue disciplines:
 //!
 //! * **FIFO** — the 5G-MEC baseline.
 //! * **Deadline priority** — ICC's priority-based job queueing: jobs
@@ -13,7 +21,13 @@
 //!
 //! The node is a passive state machine: the owning simulator drives it
 //! with `enqueue`/`complete` and schedules the returned completion
-//! events on its own calendar.
+//! events on its own calendar. The event-reporting API is drain-style
+//! (caller-provided `&mut Vec`), keeping the per-event hot path
+//! allocation-free (DESIGN.md §7).
+
+pub mod engine;
+
+pub use engine::{BatchEngine, BatchEvent, BatchJob, ExecutionModel};
 
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
@@ -49,32 +63,91 @@ pub enum Discipline {
     DeadlinePriority { drop_hopeless: bool },
 }
 
-/// Heap entry for the priority discipline (min-heap on key).
-#[derive(Debug)]
-struct PrioEntry {
-    key: f64,
-    seq: u64,
-    job: ComputeJob,
+impl Discipline {
+    /// Does this discipline drop jobs that cannot meet their deadline?
+    pub fn drops_hopeless(&self) -> bool {
+        matches!(self, Discipline::DeadlinePriority { drop_hopeless: true })
+    }
 }
 
-impl PartialEq for PrioEntry {
+/// Heap entry for the priority discipline (min-heap on key).
+#[derive(Debug)]
+struct PrioEntry<J> {
+    key: f64,
+    seq: u64,
+    job: J,
+}
+
+impl<J> PartialEq for PrioEntry<J> {
     fn eq(&self, other: &Self) -> bool {
         self.key == other.key && self.seq == other.seq
     }
 }
-impl Eq for PrioEntry {}
-impl PartialOrd for PrioEntry {
+impl<J> Eq for PrioEntry<J> {}
+impl<J> PartialOrd for PrioEntry<J> {
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
 }
-impl Ord for PrioEntry {
+impl<J> Ord for PrioEntry<J> {
     fn cmp(&self, other: &Self) -> Ordering {
         other
             .key
             .partial_cmp(&self.key)
             .unwrap_or(Ordering::Equal)
             .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Discipline-ordered waiting line shared by both execution models:
+/// FIFO ring or min-heap on a caller-supplied priority key, with a
+/// stable FIFO tiebreak among equal keys.
+#[derive(Debug)]
+pub(crate) struct ReadyQueue<J> {
+    discipline: Discipline,
+    fifo: VecDeque<J>,
+    prio: BinaryHeap<PrioEntry<J>>,
+    seq: u64,
+}
+
+impl<J> ReadyQueue<J> {
+    pub fn new(discipline: Discipline) -> Self {
+        Self {
+            discipline,
+            fifo: VecDeque::new(),
+            prio: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.fifo.len() + self.prio.len()
+    }
+
+    pub fn push(&mut self, job: J, key: f64) {
+        match self.discipline {
+            Discipline::Fifo => self.fifo.push_back(job),
+            Discipline::DeadlinePriority { .. } => {
+                let seq = self.seq;
+                self.seq += 1;
+                self.prio.push(PrioEntry { key, seq, job });
+            }
+        }
+    }
+
+    /// Next job to serve, without removing it.
+    pub fn peek(&self) -> Option<&J> {
+        match self.discipline {
+            Discipline::Fifo => self.fifo.front(),
+            Discipline::DeadlinePriority { .. } => self.prio.peek().map(|e| &e.job),
+        }
+    }
+
+    pub fn pop(&mut self) -> Option<J> {
+        match self.discipline {
+            Discipline::Fifo => self.fifo.pop_front(),
+            Discipline::DeadlinePriority { .. } => self.prio.pop().map(|e| e.job),
+        }
     }
 }
 
@@ -87,16 +160,14 @@ pub enum NodeEvent {
     Dropped { job: ComputeJob },
 }
 
-/// The computing node.
+/// The sequential computing node ([`ExecutionModel::Sequential`]).
 #[derive(Debug)]
 pub struct ComputeNode {
     discipline: Discipline,
     /// Parallel servers (1 for a tensor-parallel-aggregated pool).
     n_servers: u32,
     busy: u32,
-    fifo: VecDeque<ComputeJob>,
-    prio: BinaryHeap<PrioEntry>,
-    seq: u64,
+    queue: ReadyQueue<ComputeJob>,
     /// Running count of dropped jobs.
     pub dropped: u64,
 }
@@ -108,51 +179,26 @@ impl ComputeNode {
             discipline,
             n_servers,
             busy: 0,
-            fifo: VecDeque::new(),
-            prio: BinaryHeap::new(),
-            seq: 0,
+            queue: ReadyQueue::new(discipline),
             dropped: 0,
         }
     }
 
     pub fn queue_len(&self) -> usize {
-        self.fifo.len() + self.prio.len()
+        self.queue.len()
     }
 
     pub fn busy_servers(&self) -> u32 {
         self.busy
     }
 
-    fn push(&mut self, job: ComputeJob) {
-        match self.discipline {
-            Discipline::Fifo => self.fifo.push_back(job),
-            Discipline::DeadlinePriority { .. } => {
-                let seq = self.seq;
-                self.seq += 1;
-                self.prio.push(PrioEntry { key: job.priority_key(), seq, job });
-            }
-        }
-    }
-
-    fn pop(&mut self) -> Option<ComputeJob> {
-        match self.discipline {
-            Discipline::Fifo => self.fifo.pop_front(),
-            Discipline::DeadlinePriority { .. } => self.prio.pop().map(|e| e.job),
-        }
-    }
-
     /// Try to start jobs on free servers at time `now`, applying the
-    /// drop rule. Returns the resulting events (possibly several drops
-    /// followed by starts).
-    fn dispatch(&mut self, now: f64) -> Vec<NodeEvent> {
-        let mut events = Vec::new();
+    /// drop rule. Resulting events (possibly several drops followed by
+    /// starts) are appended to `events`.
+    fn dispatch(&mut self, now: f64, events: &mut Vec<NodeEvent>) {
         while self.busy < self.n_servers {
-            let Some(job) = self.pop() else { break };
-            let drop_rule = matches!(
-                self.discipline,
-                Discipline::DeadlinePriority { drop_hopeless: true }
-            );
-            if drop_rule && now + job.service_time > job.deadline {
+            let Some(job) = self.queue.pop() else { break };
+            if self.discipline.drops_hopeless() && now + job.service_time > job.deadline {
                 self.dropped += 1;
                 events.push(NodeEvent::Dropped { job });
                 continue;
@@ -160,20 +206,20 @@ impl ComputeNode {
             self.busy += 1;
             events.push(NodeEvent::Started { job, completes_at: now + job.service_time });
         }
-        events
     }
 
-    /// A job arrives at the node's queue at time `now`.
-    pub fn enqueue(&mut self, job: ComputeJob, now: f64) -> Vec<NodeEvent> {
-        self.push(job);
-        self.dispatch(now)
+    /// A job arrives at the node's queue at time `now`. Events are
+    /// appended to the caller's buffer (clear it between calls).
+    pub fn enqueue(&mut self, job: ComputeJob, now: f64, events: &mut Vec<NodeEvent>) {
+        self.queue.push(job, job.priority_key());
+        self.dispatch(now, events);
     }
 
     /// A server finished at time `now`; pull the next job(s) in.
-    pub fn complete(&mut self, now: f64) -> Vec<NodeEvent> {
+    pub fn complete(&mut self, now: f64, events: &mut Vec<NodeEvent>) {
         assert!(self.busy > 0, "complete() with no busy server");
         self.busy -= 1;
-        self.dispatch(now)
+        self.dispatch(now, events);
     }
 }
 
@@ -185,16 +231,29 @@ mod tests {
         ComputeJob { job_id: id, t_gen, t_comm, deadline, service_time: svc }
     }
 
+    /// Test shim preserving the old allocating call shape.
+    fn enq(n: &mut ComputeNode, j: ComputeJob, now: f64) -> Vec<NodeEvent> {
+        let mut ev = Vec::new();
+        n.enqueue(j, now, &mut ev);
+        ev
+    }
+
+    fn fin(n: &mut ComputeNode, now: f64) -> Vec<NodeEvent> {
+        let mut ev = Vec::new();
+        n.complete(now, &mut ev);
+        ev
+    }
+
     #[test]
     fn fifo_orders_by_arrival() {
         let mut n = ComputeNode::new(Discipline::Fifo, 1);
-        let ev = n.enqueue(job(1, 0.0, 0.01, 0.08, 0.02), 0.0);
+        let ev = enq(&mut n, job(1, 0.0, 0.01, 0.08, 0.02), 0.0);
         assert!(matches!(ev[0], NodeEvent::Started { job: j, .. } if j.job_id == 1));
-        n.enqueue(job(2, 0.0, 0.01, 0.08, 0.02), 0.001);
-        n.enqueue(job(3, 0.0, 0.01, 0.08, 0.02), 0.002);
-        let ev = n.complete(0.02);
+        enq(&mut n, job(2, 0.0, 0.01, 0.08, 0.02), 0.001);
+        enq(&mut n, job(3, 0.0, 0.01, 0.08, 0.02), 0.002);
+        let ev = fin(&mut n, 0.02);
         assert!(matches!(ev[0], NodeEvent::Started { job: j, .. } if j.job_id == 2));
-        let ev = n.complete(0.04);
+        let ev = fin(&mut n, 0.04);
         assert!(matches!(ev[0], NodeEvent::Started { job: j, .. } if j.job_id == 3));
     }
 
@@ -205,14 +264,14 @@ mod tests {
             1,
         );
         // occupy the server
-        n.enqueue(job(0, 0.0, 0.0, 1.0, 0.050), 0.0);
+        enq(&mut n, job(0, 0.0, 0.0, 1.0, 0.050), 0.0);
         // job 1: late deadline, tiny comm → key 0.20
-        n.enqueue(job(1, 0.12, 0.0, 0.20, 0.01), 0.01);
+        enq(&mut n, job(1, 0.12, 0.0, 0.20, 0.01), 0.01);
         // job 2: earlier effective deadline: key 0.15 - 0.04 = 0.11
-        n.enqueue(job(2, 0.07, 0.04, 0.15, 0.01), 0.02);
-        let ev = n.complete(0.05);
+        enq(&mut n, job(2, 0.07, 0.04, 0.15, 0.01), 0.02);
+        let ev = fin(&mut n, 0.05);
         assert!(matches!(ev[0], NodeEvent::Started { job: j, .. } if j.job_id == 2));
-        let ev = n.complete(0.06);
+        let ev = fin(&mut n, 0.06);
         assert!(matches!(ev[0], NodeEvent::Started { job: j, .. } if j.job_id == 1));
     }
 
@@ -224,10 +283,10 @@ mod tests {
             Discipline::DeadlinePriority { drop_hopeless: false },
             1,
         );
-        n.enqueue(job(0, 0.0, 0.0, 1.0, 0.05), 0.0);
-        n.enqueue(job(1, 0.0, 0.010, 0.08, 0.01), 0.01); // key 0.07
-        n.enqueue(job(2, 0.0, 0.030, 0.08, 0.01), 0.01); // key 0.05
-        let ev = n.complete(0.05);
+        enq(&mut n, job(0, 0.0, 0.0, 1.0, 0.05), 0.0);
+        enq(&mut n, job(1, 0.0, 0.010, 0.08, 0.01), 0.01); // key 0.07
+        enq(&mut n, job(2, 0.0, 0.030, 0.08, 0.01), 0.01); // key 0.05
+        let ev = fin(&mut n, 0.05);
         assert!(matches!(ev[0], NodeEvent::Started { job: j, .. } if j.job_id == 2));
     }
 
@@ -237,11 +296,11 @@ mod tests {
             Discipline::DeadlinePriority { drop_hopeless: true },
             1,
         );
-        n.enqueue(job(0, 0.0, 0.0, 1.0, 0.050), 0.0);
+        enq(&mut n, job(0, 0.0, 0.0, 1.0, 0.050), 0.0);
         // deadline 0.06, service 0.02, will dispatch at 0.05 → 0.07 > 0.06
-        n.enqueue(job(1, 0.0, 0.0, 0.060, 0.020), 0.01);
-        n.enqueue(job(2, 0.0, 0.0, 0.100, 0.020), 0.01);
-        let ev = n.complete(0.05);
+        enq(&mut n, job(1, 0.0, 0.0, 0.060, 0.020), 0.01);
+        enq(&mut n, job(2, 0.0, 0.0, 0.100, 0.020), 0.01);
+        let ev = fin(&mut n, 0.05);
         assert_eq!(ev.len(), 2);
         assert!(matches!(ev[0], NodeEvent::Dropped { job: j } if j.job_id == 1));
         assert!(matches!(ev[1], NodeEvent::Started { job: j, .. } if j.job_id == 2));
@@ -251,9 +310,9 @@ mod tests {
     #[test]
     fn fifo_never_drops() {
         let mut n = ComputeNode::new(Discipline::Fifo, 1);
-        n.enqueue(job(0, 0.0, 0.0, 0.01, 0.5), 0.0);
-        n.enqueue(job(1, 0.0, 0.0, 0.01, 0.5), 0.0);
-        let ev = n.complete(0.5); // way past both deadlines
+        enq(&mut n, job(0, 0.0, 0.0, 0.01, 0.5), 0.0);
+        enq(&mut n, job(1, 0.0, 0.0, 0.01, 0.5), 0.0);
+        let ev = fin(&mut n, 0.5); // way past both deadlines
         assert!(matches!(ev[0], NodeEvent::Started { .. }));
         assert_eq!(n.dropped, 0);
     }
@@ -261,12 +320,12 @@ mod tests {
     #[test]
     fn multi_server_parallelism() {
         let mut n = ComputeNode::new(Discipline::Fifo, 2);
-        let e1 = n.enqueue(job(1, 0.0, 0.0, 1.0, 0.1), 0.0);
-        let e2 = n.enqueue(job(2, 0.0, 0.0, 1.0, 0.1), 0.0);
+        let e1 = enq(&mut n, job(1, 0.0, 0.0, 1.0, 0.1), 0.0);
+        let e2 = enq(&mut n, job(2, 0.0, 0.0, 1.0, 0.1), 0.0);
         assert!(matches!(e1[0], NodeEvent::Started { .. }));
         assert!(matches!(e2[0], NodeEvent::Started { .. }));
         assert_eq!(n.busy_servers(), 2);
-        let e3 = n.enqueue(job(3, 0.0, 0.0, 1.0, 0.1), 0.01);
+        let e3 = enq(&mut n, job(3, 0.0, 0.0, 1.0, 0.1), 0.01);
         assert!(e3.is_empty(), "both servers busy → queued");
         assert_eq!(n.queue_len(), 1);
     }
@@ -275,14 +334,16 @@ mod tests {
     fn work_conservation() {
         // Server never idles while the queue is non-empty.
         let mut n = ComputeNode::new(Discipline::Fifo, 1);
-        n.enqueue(job(1, 0.0, 0.0, 1.0, 0.1), 0.0);
+        enq(&mut n, job(1, 0.0, 0.0, 1.0, 0.1), 0.0);
         for id in 2..10 {
-            n.enqueue(job(id, 0.0, 0.0, 1.0, 0.1), 0.0);
+            enq(&mut n, job(id, 0.0, 0.0, 1.0, 0.1), 0.0);
         }
         let mut t = 0.1;
         let mut completions = 1;
+        let mut ev = Vec::new();
         loop {
-            let ev = n.complete(t);
+            ev.clear();
+            n.complete(t, &mut ev);
             if ev.is_empty() {
                 break;
             }
@@ -300,11 +361,29 @@ mod tests {
             Discipline::DeadlinePriority { drop_hopeless: false },
             1,
         );
-        n.enqueue(job(0, 0.0, 0.0, 1.0, 0.05), 0.0);
+        enq(&mut n, job(0, 0.0, 0.0, 1.0, 0.05), 0.0);
         // identical keys → FIFO among equals (seq tiebreak)
-        n.enqueue(job(1, 0.0, 0.01, 0.08, 0.01), 0.01);
-        n.enqueue(job(2, 0.0, 0.01, 0.08, 0.01), 0.02);
-        let ev = n.complete(0.05);
+        enq(&mut n, job(1, 0.0, 0.01, 0.08, 0.01), 0.01);
+        enq(&mut n, job(2, 0.0, 0.01, 0.08, 0.01), 0.02);
+        let ev = fin(&mut n, 0.05);
         assert!(matches!(ev[0], NodeEvent::Started { job: j, .. } if j.job_id == 1));
+    }
+
+    #[test]
+    fn event_buffer_is_reusable_across_calls() {
+        // The drain-style API appends; callers clear between calls and
+        // the capacity is reused (no per-event allocation).
+        let mut n = ComputeNode::new(Discipline::Fifo, 1);
+        let mut ev = Vec::with_capacity(4);
+        n.enqueue(job(1, 0.0, 0.0, 1.0, 0.1), 0.0, &mut ev);
+        assert_eq!(ev.len(), 1);
+        let cap = ev.capacity();
+        ev.clear();
+        n.enqueue(job(2, 0.0, 0.0, 1.0, 0.1), 0.0, &mut ev);
+        assert!(ev.is_empty(), "server busy → no events");
+        ev.clear();
+        n.complete(0.1, &mut ev);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev.capacity(), cap, "buffer must be reused, not reallocated");
     }
 }

@@ -10,30 +10,78 @@
 /// Peak specs of one accelerator (or an aggregated pool).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct GpuSpec {
+    /// Base accelerator name (one physical device).
     pub name: &'static str,
+    /// Aggregation factor applied via [`GpuSpec::scaled`] (1 = one
+    /// device). Carried so reports and node views can label a pool
+    /// `"A100-SXM-80GB x16"` instead of masquerading as one card.
+    pub scale: f64,
     /// Dense FP16 tensor throughput, FLOP/s.
     pub comp_flops: f64,
     /// Peak HBM bandwidth, bytes/s.
     pub mem_bw: f64,
-    /// HBM capacity, bytes (sanity checks: model must fit).
+    /// HBM capacity, bytes (model + KV cache must fit).
     pub mem_bytes: f64,
 }
 
 impl GpuSpec {
     /// NVIDIA A100 SXM 80GB: 312 TFLOPS dense FP16, 2.039 TB/s HBM2e.
     pub fn a100() -> Self {
-        Self { name: "A100-SXM-80GB", comp_flops: 312e12, mem_bw: 2.039e12, mem_bytes: 80e9 }
+        Self {
+            name: "A100-SXM-80GB",
+            scale: 1.0,
+            comp_flops: 312e12,
+            mem_bw: 2.039e12,
+            mem_bytes: 80e9,
+        }
     }
 
     /// NVIDIA H100 SXM: 989 TFLOPS dense FP16, 3.35 TB/s HBM3.
     pub fn h100() -> Self {
-        Self { name: "H100-SXM", comp_flops: 989e12, mem_bw: 3.35e12, mem_bytes: 80e9 }
+        Self {
+            name: "H100-SXM",
+            scale: 1.0,
+            comp_flops: 989e12,
+            mem_bw: 3.35e12,
+            mem_bytes: 80e9,
+        }
+    }
+
+    /// NVIDIA H200 SXM: H100-class compute with 4.8 TB/s HBM3e and
+    /// 141 GB — the bandwidth-upgraded decode workhorse.
+    pub fn h200() -> Self {
+        Self {
+            name: "H200-SXM",
+            scale: 1.0,
+            comp_flops: 989e12,
+            mem_bw: 4.8e12,
+            mem_bytes: 141e9,
+        }
+    }
+
+    /// NVIDIA L40S: 362 TFLOPS dense FP16, 864 GB/s GDDR6, 48 GB —
+    /// the realistic *small-memory* edge target (a 7B FP16 model fits,
+    /// but a fat KV budget does not).
+    pub fn l40s() -> Self {
+        Self {
+            name: "L40S",
+            scale: 1.0,
+            comp_flops: 362e12,
+            mem_bw: 0.864e12,
+            mem_bytes: 48e9,
+        }
     }
 
     /// NVIDIA GH200-NVL2 (one superchip of the NVL2 pair): H200-class
     /// GPU — 989 TFLOPS dense FP16, 4.9 TB/s HBM3e, 144 GB.
     pub fn gh200_nvl2() -> Self {
-        Self { name: "GH200-NVL2", comp_flops: 989e12, mem_bw: 4.9e12, mem_bytes: 144e9 }
+        Self {
+            name: "GH200-NVL2",
+            scale: 1.0,
+            comp_flops: 989e12,
+            mem_bw: 4.9e12,
+            mem_bytes: 144e9,
+        }
     }
 
     /// Look up by case-insensitive name.
@@ -41,6 +89,8 @@ impl GpuSpec {
         match name.to_ascii_lowercase().as_str() {
             "a100" => Some(Self::a100()),
             "h100" => Some(Self::h100()),
+            "h200" => Some(Self::h200()),
+            "l40s" => Some(Self::l40s()),
             "gh200" | "gh200-nvl2" | "gh200_nvl2" => Some(Self::gh200_nvl2()),
             _ => None,
         }
@@ -48,13 +98,28 @@ impl GpuSpec {
 
     /// Aggregate `factor` of these accelerators (perfect tensor-parallel
     /// scaling of compute + bandwidth + capacity, as in Fig 7's x-axis).
+    /// Scales compose: `a100().scaled(2.0).scaled(8.0)` is a ×16 pool.
     pub fn scaled(&self, factor: f64) -> Self {
         assert!(factor > 0.0);
         Self {
             name: self.name,
+            scale: self.scale * factor,
             comp_flops: self.comp_flops * factor,
             mem_bw: self.mem_bw * factor,
             mem_bytes: self.mem_bytes * factor,
+        }
+    }
+
+    /// Human-readable pool label: the base name, with the aggregation
+    /// factor when ≠ 1 (`"A100-SXM-80GB x16"`). Use this — not `name`
+    /// — anywhere a spec is reported or logged.
+    pub fn display_name(&self) -> String {
+        if (self.scale - 1.0).abs() < 1e-9 {
+            self.name.to_string()
+        } else if (self.scale - self.scale.round()).abs() < 1e-9 {
+            format!("{} x{}", self.name, self.scale.round() as i64)
+        } else {
+            format!("{} x{:.2}", self.name, self.scale)
         }
     }
 
@@ -75,12 +140,19 @@ mod tests {
         assert_eq!(a.mem_bw, 2.039e12);
         let g = GpuSpec::gh200_nvl2();
         assert!(g.mem_bw > 2.0 * a.mem_bw);
+        let h = GpuSpec::h200();
+        assert!(h.mem_bw > GpuSpec::h100().mem_bw);
+        assert!(h.mem_bytes > GpuSpec::h100().mem_bytes);
+        let l = GpuSpec::l40s();
+        assert!(l.mem_bytes < a.mem_bytes, "L40S is the small-memory target");
     }
 
     #[test]
     fn by_name_lookup() {
         assert_eq!(GpuSpec::by_name("A100").unwrap().name, "A100-SXM-80GB");
         assert_eq!(GpuSpec::by_name("gh200-nvl2").unwrap().name, "GH200-NVL2");
+        assert_eq!(GpuSpec::by_name("h200").unwrap().name, "H200-SXM");
+        assert_eq!(GpuSpec::by_name("L40S").unwrap().name, "L40S");
         assert!(GpuSpec::by_name("tpu-v5p").is_none());
     }
 
@@ -98,9 +170,27 @@ mod tests {
     }
 
     #[test]
+    fn display_name_carries_scale() {
+        assert_eq!(GpuSpec::a100().display_name(), "A100-SXM-80GB");
+        assert_eq!(GpuSpec::a100().scaled(16.0).display_name(), "A100-SXM-80GB x16");
+        // scales compose multiplicatively
+        let pool = GpuSpec::gh200_nvl2().scaled(2.0).scaled(2.0);
+        assert_eq!(pool.display_name(), "GH200-NVL2 x4");
+        assert!((pool.scale - 4.0).abs() < 1e-12);
+        // fractional scales stay readable
+        assert_eq!(GpuSpec::a100().scaled(2.5).display_name(), "A100-SXM-80GB x2.50");
+    }
+
+    #[test]
     fn model_fits_in_memory_sanity() {
         // Llama-2-7B FP16 = 14 GB must fit in every catalog entry.
-        for g in [GpuSpec::a100(), GpuSpec::h100(), GpuSpec::gh200_nvl2()] {
+        for g in [
+            GpuSpec::a100(),
+            GpuSpec::h100(),
+            GpuSpec::h200(),
+            GpuSpec::l40s(),
+            GpuSpec::gh200_nvl2(),
+        ] {
             assert!(g.mem_bytes > 14e9, "{}", g.name);
         }
     }

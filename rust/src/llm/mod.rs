@@ -25,6 +25,25 @@ pub struct JobSpec {
     pub b_total: f64,
 }
 
+/// Heuristic KV-cache bytes per token of context for a dense
+/// Llama-shaped FP16 model of `m_llm` bytes.
+///
+/// KV per token is `2 (K+V) · n_layers · d_model · bytes_per_value`.
+/// Layers and width are recovered from the parameter count assuming
+/// the dense-transformer identity `params ≈ 12 · L · d²` and the
+/// Llama-family aspect ratio `d ≈ 128 · L` (7B: L = 32, d = 4096 →
+/// ≈ 0.52 MB/token, matching the published figure). Workloads can
+/// override the value per class when they serve GQA/MQA models with
+/// smaller caches.
+pub fn kv_bytes_per_token(m_llm: f64) -> f64 {
+    const BYTES_PER_VALUE: f64 = 2.0; // FP16
+    const ASPECT: f64 = 128.0; // d_model / n_layers
+    let params = (m_llm / BYTES_PER_VALUE).max(1.0);
+    let layers = (params / (12.0 * ASPECT * ASPECT)).cbrt();
+    let d_model = ASPECT * layers;
+    2.0 * layers * d_model * BYTES_PER_VALUE
+}
+
 impl JobSpec {
     /// Table I workload: Llama-2-7B FP16, 15 input / 15 output tokens,
     /// 80 ms end-to-end budget.
@@ -41,6 +60,12 @@ impl JobSpec {
 
     pub fn total_tokens(&self) -> u32 {
         self.n_input + self.n_output
+    }
+
+    /// Heuristic KV-cache bytes per context token (see
+    /// [`kv_bytes_per_token`]).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        kv_bytes_per_token(self.m_llm)
     }
 }
 
@@ -98,6 +123,12 @@ impl CostModel {
     pub fn saturation_batch(&self, job: &JobSpec) -> u32 {
         let b = (job.m_llm / self.gpu.mem_bw) * self.gpu.comp_flops / job.c_llm;
         b.ceil().max(1.0) as u32
+    }
+
+    /// The documented "model must fit" rule: can this GPU hold the
+    /// model weights at all (before any KV budget)?
+    pub fn fits(&self, job: &JobSpec) -> bool {
+        job.m_llm <= self.gpu.mem_bytes
     }
 }
 
@@ -179,6 +210,30 @@ mod tests {
         assert!((150..=160).contains(&sat), "sat = {sat}");
         let big = m.batched_token_latency(&j, sat * 2);
         assert!(big > single);
+    }
+
+    #[test]
+    fn kv_heuristic_matches_llama7b() {
+        // Llama-2-7B FP16: 2 · 32 layers · 4096 width · 2 bytes ≈ 0.52 MB
+        let kv = kv_bytes_per_token(14e9);
+        assert!(
+            (0.4e6..0.7e6).contains(&kv),
+            "kv/token = {kv} (expect ≈ 0.52 MB)"
+        );
+        // grows sublinearly with model size (2/3 power of params)
+        let kv70 = kv_bytes_per_token(140e9);
+        assert!(kv70 > kv && kv70 < 10.0 * kv, "kv70 = {kv70}");
+        assert!((JobSpec::table1().kv_bytes_per_token() - kv).abs() < 1.0);
+    }
+
+    #[test]
+    fn fits_checks_weight_footprint() {
+        let j = llama7b(); // 14 GB
+        assert!(CostModel::new(GpuSpec::l40s()).fits(&j));
+        let mut big = j;
+        big.m_llm = 60e9; // 30B FP16 > 48 GB L40S
+        assert!(!CostModel::new(GpuSpec::l40s()).fits(&big));
+        assert!(CostModel::new(GpuSpec::a100()).fits(&big));
     }
 
     #[test]

@@ -345,6 +345,7 @@ fn cmd_scenario(argv: &[String]) -> i32 {
         OptSpec { name: "service", help: "roofline | token_sampled", takes_value: true, default: Some("token_sampled") },
         OptSpec { name: "horizon", help: "simulated seconds", takes_value: true, default: Some("12") },
         OptSpec { name: "seed", help: "master RNG seed", takes_value: true, default: Some("1") },
+        OptSpec { name: "json", help: "write the full report (incl. per-class TTFT/TPOT percentiles) to this JSON file", takes_value: true, default: None },
         OptSpec { name: "help", help: "show help", takes_value: false, default: None },
     ];
     let args = match Args::parse(argv.iter().cloned(), &specs) {
@@ -437,7 +438,13 @@ fn cmd_scenario(argv: &[String]) -> i32 {
             }
         };
     }
-    let scenario = b.build();
+    let scenario = match b.try_build() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("invalid scenario: {e}");
+            return 2;
+        }
+    };
     let res = scenario.run();
     println!("scheme       : {}", scenario.scheme().name);
     println!("service      : {}", scenario.service_name());
@@ -446,27 +453,69 @@ fn cmd_scenario(argv: &[String]) -> i32 {
         scenario.routing().name(),
         scenario.nodes().len()
     );
+    for (i, n) in scenario.nodes().iter().enumerate() {
+        let exec = match n.execution {
+            icc6g::scenario::ExecutionModel::Sequential => {
+                format!("sequential, {} server(s)", n.n_servers)
+            }
+            icc6g::scenario::ExecutionModel::ContinuousBatching { max_batch, kv_budget } => {
+                format!(
+                    "continuous batching, max_batch {max_batch}, KV {:.1} GB",
+                    kv_budget / 1e9
+                )
+            }
+        };
+        println!("  node {i}     : {} ({exec})", n.gpu.display_name());
+    }
     println!("offered rate : {:.1} jobs/s", scenario.offered_rate());
     println!("jobs         : {} ({} dropped)", res.report.n_jobs, res.report.n_dropped);
     println!("satisfaction : {:.4}", res.report.satisfaction_rate());
     println!("events       : {}", res.events);
     let mut t = Table::new(
-        "per-class breakdown",
-        &["class", "jobs", "dropped", "satisfaction", "avg_comm_ms", "avg_comp_ms", "avg_e2e_ms"],
+        "per-class breakdown (latencies ms; TTFT/TPOT over completed jobs)",
+        &[
+            "class",
+            "jobs",
+            "dropped",
+            "satisfaction",
+            "avg_comm_ms",
+            "avg_e2e_ms",
+            "ttft_p50",
+            "ttft_p95",
+            "ttft_p99",
+            "tpot_p50",
+            "tpot_p95",
+            "tpot_p99",
+        ],
     );
     for c in &res.report.per_class {
+        let qs = [50.0, 95.0, 99.0];
+        let ttft = c.ttft_percentiles(&qs);
+        let tpot = c.tpot_percentiles(&qs);
         t.row(&[
             c.name.clone(),
             c.n_jobs.to_string(),
             c.n_dropped.to_string(),
             cell(c.satisfaction_rate(), 4),
             cell(c.comm.mean() * 1e3, 2),
-            cell(c.comp.mean() * 1e3, 2),
             cell(c.e2e.mean() * 1e3, 2),
+            cell(ttft[0] * 1e3, 2),
+            cell(ttft[1] * 1e3, 2),
+            cell(ttft[2] * 1e3, 2),
+            cell(tpot[0] * 1e3, 3),
+            cell(tpot[1] * 1e3, 3),
+            cell(tpot[2] * 1e3, 3),
         ]);
     }
     t.print();
     let _ = t.write_csv("scenario_classes.csv");
+    if let Some(path) = args.get("json") {
+        if let Err(e) = std::fs::write(path, res.report.to_json()) {
+            eprintln!("cannot write {path}: {e}");
+            return 1;
+        }
+        println!("report       : {path}");
+    }
     0
 }
 

@@ -1,8 +1,9 @@
 //! Simulation metrics: per-job outcome records and aggregated reports
 //! (satisfaction rate, latency breakdowns, tokens/s — the quantities
-//! plotted in Figs 6–7).
+//! plotted in Figs 6–7 — plus the serving-level TTFT/TPOT quantities
+//! an iteration-level execution model exposes).
 
-use crate::util::stats::Welford;
+use crate::util::stats::{percentile, percentile_sorted, Welford};
 
 /// Terminal state of one translation job.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -27,10 +28,20 @@ pub struct JobOutcome {
     pub t_comm: f64,
     /// Constant wireline latency BS→node.
     pub t_wireline: f64,
-    /// Queueing delay at the computing node.
+    /// Queueing delay at the computing node (arrival → service start).
     pub t_queue: f64,
-    /// LLM service time.
+    /// LLM service time (prefill + decode, as executed — batched
+    /// decode stretches this relative to the lone roofline).
     pub t_service: f64,
+    /// Time-to-first-token measured from generation at the UE
+    /// (comm + wireline + queue + prefill + first decode step).
+    /// 0 for non-completed jobs.
+    pub ttft: f64,
+    /// Time-per-output-token over the decode phase:
+    /// `(t_last − t_first) / (N_output − 1)`; 0 when `N_output = 1`
+    /// (TPOT is undefined for single-token jobs — reports exclude
+    /// these from the TPOT sample set) or the job did not complete.
+    pub tpot: f64,
     /// Total tokens (input + output) — for the tokens/s bar in Fig 7.
     pub tokens: u32,
     pub fate: JobFate,
@@ -99,6 +110,15 @@ pub struct ClassReport {
     pub comp: Welford,
     pub e2e: Welford,
     pub tokens_per_sec: Welford,
+    /// Time-to-first-token over completed jobs.
+    pub ttft: Welford,
+    /// Time-per-output-token over completed jobs with ≥ 2 output
+    /// tokens (TPOT is undefined for single-token jobs).
+    pub tpot: Welford,
+    /// Retained samples for exact percentiles (and exact merging of
+    /// replication percentiles — summaries alone cannot merge tails).
+    ttft_samples: Vec<f64>,
+    tpot_samples: Vec<f64>,
 }
 
 impl ClassReport {
@@ -112,6 +132,10 @@ impl ClassReport {
             comp: Welford::new(),
             e2e: Welford::new(),
             tokens_per_sec: Welford::new(),
+            ttft: Welford::new(),
+            tpot: Welford::new(),
+            ttft_samples: Vec::new(),
+            tpot_samples: Vec::new(),
         }
     }
 
@@ -133,6 +157,15 @@ impl ClassReport {
                 self.comp.push(j.t_comp());
                 self.e2e.push(j.e2e());
                 self.tokens_per_sec.push(j.tokens_per_sec());
+                self.ttft.push(j.ttft);
+                self.ttft_samples.push(j.ttft);
+                // TPOT is undefined for single-token jobs (marked 0);
+                // recording the zeros would deflate means/percentiles
+                // for variable-decode-length workloads.
+                if j.tpot > 0.0 {
+                    self.tpot.push(j.tpot);
+                    self.tpot_samples.push(j.tpot);
+                }
             }
         }
     }
@@ -145,6 +178,40 @@ impl ClassReport {
         }
     }
 
+    /// TTFT percentile (`q` in [0, 100]) over completed jobs.
+    pub fn ttft_percentile(&self, q: f64) -> f64 {
+        percentile(&self.ttft_samples, q)
+    }
+
+    /// TPOT percentile (`q` in [0, 100]) over completed multi-token
+    /// jobs.
+    pub fn tpot_percentile(&self, q: f64) -> f64 {
+        percentile(&self.tpot_samples, q)
+    }
+
+    /// Several TTFT percentiles with a single sort of the sample set
+    /// (use for report rendering; the single-`q` getters re-sort per
+    /// call).
+    pub fn ttft_percentiles(&self, qs: &[f64]) -> Vec<f64> {
+        percentiles_of(&self.ttft_samples, qs)
+    }
+
+    /// Several TPOT percentiles with a single sort of the sample set.
+    pub fn tpot_percentiles(&self, qs: &[f64]) -> Vec<f64> {
+        percentiles_of(&self.tpot_samples, qs)
+    }
+
+    /// Retained TTFT samples (one per completed job, arrival order;
+    /// replication merges concatenate).
+    pub fn ttft_samples(&self) -> &[f64] {
+        &self.ttft_samples
+    }
+
+    /// Retained TPOT samples (one per completed job, arrival order).
+    pub fn tpot_samples(&self) -> &[f64] {
+        &self.tpot_samples
+    }
+
     fn merge(&mut self, other: &ClassReport) {
         self.n_jobs += other.n_jobs;
         self.n_satisfied += other.n_satisfied;
@@ -153,6 +220,10 @@ impl ClassReport {
         self.comp.merge(&other.comp);
         self.e2e.merge(&other.e2e);
         self.tokens_per_sec.merge(&other.tokens_per_sec);
+        self.ttft.merge(&other.ttft);
+        self.tpot.merge(&other.tpot);
+        self.ttft_samples.extend_from_slice(&other.ttft_samples);
+        self.tpot_samples.extend_from_slice(&other.tpot_samples);
     }
 }
 
@@ -166,6 +237,10 @@ pub struct SimReport {
     pub comp: Welford,
     pub e2e: Welford,
     pub tokens_per_sec: Welford,
+    /// Time-to-first-token over all completed jobs.
+    pub ttft: Welford,
+    /// Time-per-output-token over all completed jobs.
+    pub tpot: Welford,
     /// Per-workload-class breakdown. Populated by
     /// [`SimReport::from_outcomes_per_class`]; empty for single-policy
     /// reports built with [`SimReport::from_outcomes`].
@@ -214,12 +289,15 @@ impl SimReport {
         self.comp.merge(&cr.comp);
         self.e2e.merge(&cr.e2e);
         self.tokens_per_sec.merge(&cr.tokens_per_sec);
+        self.ttft.merge(&cr.ttft);
+        self.tpot.merge(&cr.tpot);
     }
 
     /// Merge an independent replication into this report, keeping the
     /// "per-class slices sum to the totals" invariant: matching class
-    /// lists merge slice-wise; mismatched ones clear `per_class`
-    /// rather than leave a stale single-replication breakdown.
+    /// lists merge slice-wise (percentile sample sets concatenate);
+    /// mismatched ones clear `per_class` rather than leave a stale
+    /// single-replication breakdown.
     pub fn merge(&mut self, other: &SimReport) {
         self.n_jobs += other.n_jobs;
         self.n_satisfied += other.n_satisfied;
@@ -228,6 +306,8 @@ impl SimReport {
         self.comp.merge(&other.comp);
         self.e2e.merge(&other.e2e);
         self.tokens_per_sec.merge(&other.tokens_per_sec);
+        self.ttft.merge(&other.ttft);
+        self.tpot.merge(&other.tpot);
         let classes_match = self.per_class.len() == other.per_class.len()
             && self
                 .per_class
@@ -252,6 +332,8 @@ impl SimReport {
             comp: Welford::new(),
             e2e: Welford::new(),
             tokens_per_sec: Welford::new(),
+            ttft: Welford::new(),
+            tpot: Welford::new(),
             per_class: Vec::new(),
         }
     }
@@ -265,6 +347,98 @@ impl SimReport {
             self.n_satisfied as f64 / self.n_jobs as f64
         }
     }
+
+    /// Machine-readable report (hand-rolled JSON; the dependency
+    /// universe has no serde). Latencies are reported in milliseconds;
+    /// non-finite values (empty slices) serialize as `null`.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"n_jobs\": {},\n", self.n_jobs));
+        out.push_str(&format!("  \"n_satisfied\": {},\n", self.n_satisfied));
+        out.push_str(&format!("  \"n_dropped\": {},\n", self.n_dropped));
+        out.push_str(&format!(
+            "  \"satisfaction_rate\": {},\n",
+            jnum(self.satisfaction_rate())
+        ));
+        out.push_str(&format!("  \"avg_comm_ms\": {},\n", jnum(self.comm.mean() * 1e3)));
+        out.push_str(&format!("  \"avg_comp_ms\": {},\n", jnum(self.comp.mean() * 1e3)));
+        out.push_str(&format!("  \"avg_e2e_ms\": {},\n", jnum(self.e2e.mean() * 1e3)));
+        out.push_str(&format!(
+            "  \"avg_tokens_per_sec\": {},\n",
+            jnum(self.tokens_per_sec.mean())
+        ));
+        out.push_str(&format!("  \"avg_ttft_ms\": {},\n", jnum(self.ttft.mean() * 1e3)));
+        out.push_str(&format!("  \"avg_tpot_ms\": {},\n", jnum(self.tpot.mean() * 1e3)));
+        out.push_str("  \"per_class\": [");
+        for (i, c) in self.per_class.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("\n    {");
+            out.push_str(&format!("\"name\": \"{}\", ", jstr(&c.name)));
+            out.push_str(&format!("\"n_jobs\": {}, ", c.n_jobs));
+            out.push_str(&format!("\"n_satisfied\": {}, ", c.n_satisfied));
+            out.push_str(&format!("\"n_dropped\": {}, ", c.n_dropped));
+            out.push_str(&format!(
+                "\"satisfaction_rate\": {}, ",
+                jnum(c.satisfaction_rate())
+            ));
+            out.push_str(&format!("\"avg_comm_ms\": {}, ", jnum(c.comm.mean() * 1e3)));
+            out.push_str(&format!("\"avg_comp_ms\": {}, ", jnum(c.comp.mean() * 1e3)));
+            out.push_str(&format!("\"avg_e2e_ms\": {}, ", jnum(c.e2e.mean() * 1e3)));
+            let qs = [50.0, 95.0, 99.0];
+            let ttft = c.ttft_percentiles(&qs);
+            let tpot = c.tpot_percentiles(&qs);
+            out.push_str(&format!(
+                "\"ttft_ms\": {{\"mean\": {}, \"p50\": {}, \"p95\": {}, \"p99\": {}}}, ",
+                jnum(c.ttft.mean() * 1e3),
+                jnum(ttft[0] * 1e3),
+                jnum(ttft[1] * 1e3),
+                jnum(ttft[2] * 1e3),
+            ));
+            out.push_str(&format!(
+                "\"tpot_ms\": {{\"mean\": {}, \"p50\": {}, \"p95\": {}, \"p99\": {}}}",
+                jnum(c.tpot.mean() * 1e3),
+                jnum(tpot[0] * 1e3),
+                jnum(tpot[1] * 1e3),
+                jnum(tpot[2] * 1e3),
+            ));
+            out.push('}');
+        }
+        if !self.per_class.is_empty() {
+            out.push_str("\n  ");
+        }
+        out.push_str("]\n}\n");
+        out
+    }
+}
+
+/// Sort once, read many percentiles.
+fn percentiles_of(samples: &[f64], qs: &[f64]) -> Vec<f64> {
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    qs.iter().map(|&q| percentile_sorted(&v, q)).collect()
+}
+
+/// JSON number: non-finite → `null`.
+fn jnum(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Minimal JSON string escaping (class names come from configs).
+fn jstr(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => vec!['\\', '"'],
+            '\\' => vec!['\\', '\\'],
+            '\n' | '\r' | '\t' => vec![' '],
+            c => vec![c],
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -280,6 +454,8 @@ mod tests {
             t_wireline: 0.005,
             t_queue,
             t_service,
+            ttft: t_comm + 0.005 + t_queue + t_service / 2.0,
+            tpot: t_service / 30.0,
             tokens: 30,
             fate: JobFate::Completed,
         }
@@ -333,6 +509,9 @@ mod tests {
         assert_eq!(r.n_dropped, 1);
         assert_eq!(r.n_satisfied, 1);
         assert!((r.satisfaction_rate() - 0.5).abs() < 1e-12);
+        // dropped jobs contribute no TTFT/TPOT sample
+        assert_eq!(r.ttft.count(), 1);
+        assert_eq!(r.tpot.count(), 1);
     }
 
     #[test]
@@ -376,5 +555,57 @@ mod tests {
         assert_eq!(r.n_satisfied, sat);
         assert_eq!(r.n_dropped, drop_);
         assert_eq!(r.comm.count(), 3);
+        // TTFT totals are the merge of the slices
+        let slice_ttft: u64 = r.per_class.iter().map(|c| c.ttft.count()).sum();
+        assert_eq!(r.ttft.count(), slice_ttft);
+    }
+
+    #[test]
+    fn ttft_percentiles_merge_exactly_under_replication() {
+        let policy = LatencyManagement::Joint { b_total: 1.0 };
+        let mk = |ttfts: &[f64]| {
+            let outcomes: Vec<JobOutcome> = ttfts
+                .iter()
+                .map(|&t| JobOutcome { ttft: t, tpot: t / 10.0, ..done(0.01, 0.0, 0.05) })
+                .collect();
+            SimReport::from_outcomes_per_class(
+                &outcomes,
+                &[("c".to_string(), policy)],
+            )
+        };
+        let mut a = mk(&[0.010, 0.020, 0.030]);
+        let b = mk(&[0.040, 0.050]);
+        a.merge(&b);
+        let c = &a.per_class[0];
+        assert_eq!(c.ttft_samples().len(), 5);
+        // exact percentile over the concatenated sample set
+        let expect = crate::util::stats::percentile(&[0.01, 0.02, 0.03, 0.04, 0.05], 50.0);
+        assert!((c.ttft_percentile(50.0) - expect).abs() < 1e-15);
+        assert!((c.ttft_percentile(0.0) - 0.01).abs() < 1e-15);
+        assert!((c.ttft_percentile(100.0) - 0.05).abs() < 1e-15);
+        assert_eq!(a.ttft.count(), 5);
+        // tpot merged alongside
+        assert_eq!(c.tpot_samples().len(), 5);
+    }
+
+    #[test]
+    fn json_report_is_well_formed() {
+        let policy = LatencyManagement::Joint { b_total: 1.0 };
+        let outcomes = vec![done(0.01, 0.0, 0.05)];
+        let r = SimReport::from_outcomes_per_class(
+            &outcomes,
+            &[("chat \"v2\"".to_string(), policy)],
+        );
+        let js = r.to_json();
+        assert!(js.contains("\"n_jobs\": 1"));
+        assert!(js.contains("\"ttft_ms\""));
+        assert!(js.contains("\"p99\""));
+        assert!(js.contains("chat \\\"v2\\\""), "{js}");
+        // crude balance check
+        assert_eq!(js.matches('{').count(), js.matches('}').count());
+        assert_eq!(js.matches('[').count(), js.matches(']').count());
+        // empty reports serialize NaNs as null
+        let empty = SimReport::from_outcomes(&[], &policy);
+        assert!(empty.to_json().contains("\"satisfaction_rate\": null"));
     }
 }

@@ -7,6 +7,8 @@
 //!  background ────────────────────┘               wireline (RAN/MEC)
 //!                                                                ▼
 //!   per-class outcomes ◄── ServiceModel ◄── Routing ──► node 0..M
+//!                                                 (Sequential server
+//!                                                  or BatchEngine)
 //! ```
 //!
 //! Stream discipline: every entity draws from its own substream of the
@@ -14,9 +16,15 @@
 //! config cap), the event-handler logic mirrors the legacy `Sls::run`
 //! loop line for line, and `TokenDist::Fixed` consumes no randomness —
 //! so single-class runs are exactly as deterministic and statistically
-//! identical to the seed SLS.
+//! identical to the seed SLS. The execution models consume no
+//! randomness either: a `Sequential` run is bit-for-bit the legacy
+//! trajectory, and switching a node to `ContinuousBatching` only adds
+//! `BatchStep` iteration-boundary events on that node's timeline.
 
-use crate::compute::{ComputeJob, ComputeNode, Discipline, NodeEvent};
+use crate::compute::{
+    BatchEngine, BatchEvent, BatchJob, ComputeJob, ComputeNode, Discipline, ExecutionModel,
+    NodeEvent,
+};
 use crate::config::{Management, SchemeConfig};
 use crate::dess::EventQueue;
 use crate::mac::{Sdu, SduKind, UeMac};
@@ -26,7 +34,7 @@ use crate::phy::channel::LargeScale;
 use crate::rng::Rng;
 
 use super::routing::NodeView;
-use super::Scenario;
+use super::{NodeSpec, Scenario};
 
 /// Map a scheme to the node queue discipline.
 pub fn discipline_of(scheme: &SchemeConfig) -> Discipline {
@@ -69,8 +77,10 @@ enum Ev {
     BgArrival { ue: usize },
     /// Prompt fully received at gNB crossed the wireline.
     ComputeEnqueue { job: u64 },
-    /// Compute node `node` finished `job`.
+    /// Sequential node `node` finished `job`.
     ComputeDone { node: usize, job: u64 },
+    /// Iteration boundary of node `node`'s batch engine.
+    BatchStep { node: usize },
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -81,33 +91,100 @@ struct JobState {
     t_comm: Option<f64>,
     t_node_arrival: Option<f64>,
     t_service_start: Option<f64>,
+    /// First output token emitted (batching nodes; sequential nodes
+    /// derive it from the roofline split).
+    t_first_token: Option<f64>,
+    t_done: Option<f64>,
     /// Realized prompt length (sampled at generation).
     n_input: u32,
     /// Realized output length (set when the service model prices it).
     n_output: u32,
-    /// Realized service time (set at node arrival).
-    service_time: f64,
+    /// Realized prefill latency (set at node arrival).
+    prefill_time: f64,
+    /// Realized sequential decode latency (set at node arrival).
+    decode_time: f64,
     fate: JobFate,
     measured: bool,
 }
 
-/// Node-event plumbing: schedule completions for started jobs, mark
-/// drops.
+/// Per-node runtime: the legacy sequential server bank or the
+/// continuous-batching engine.
+enum NodeRt {
+    Seq(ComputeNode),
+    Batch(BatchEngine),
+}
+
+impl NodeRt {
+    fn view(&self, spec: &NodeSpec) -> NodeView {
+        match self {
+            NodeRt::Seq(n) => NodeView {
+                queue_len: n.queue_len(),
+                busy_servers: n.busy_servers(),
+                n_servers: spec.n_servers,
+                gpu: spec.gpu,
+            },
+            NodeRt::Batch(e) => NodeView {
+                queue_len: e.queue_len(),
+                busy_servers: e.batch_len() as u32,
+                n_servers: match spec.execution {
+                    ExecutionModel::ContinuousBatching { max_batch, .. } => max_batch,
+                    ExecutionModel::Sequential => spec.n_servers,
+                },
+                gpu: spec.gpu,
+            },
+        }
+    }
+}
+
+/// Sequential node-event plumbing: schedule completions for started
+/// jobs, mark drops.
 fn apply_node_events(
     node: usize,
-    events: Vec<NodeEvent>,
+    events: &[NodeEvent],
     jobs: &mut [JobState],
     q: &mut EventQueue<Ev>,
     now: f64,
 ) {
     for ev in events {
-        match ev {
+        match *ev {
             NodeEvent::Started { job, completes_at } => {
                 jobs[job.job_id as usize].t_service_start = Some(now);
                 q.schedule_at(completes_at, Ev::ComputeDone { node, job: job.job_id });
             }
             NodeEvent::Dropped { job } => {
                 jobs[job.job_id as usize].fate = JobFate::Dropped;
+            }
+        }
+    }
+}
+
+/// Batch-engine plumbing: record admissions / token boundaries /
+/// completions and schedule the next iteration step.
+fn apply_batch_events(
+    node: usize,
+    events: &[BatchEvent],
+    jobs: &mut [JobState],
+    q: &mut EventQueue<Ev>,
+    now: f64,
+) {
+    for ev in events {
+        match *ev {
+            BatchEvent::Admitted { job_id } => {
+                jobs[job_id as usize].t_service_start = Some(now);
+            }
+            BatchEvent::FirstToken { job_id } => {
+                jobs[job_id as usize].t_first_token = Some(now);
+            }
+            BatchEvent::Finished { job_id } => {
+                let js = &mut jobs[job_id as usize];
+                js.fate = JobFate::Completed;
+                js.t_done = Some(now);
+            }
+            BatchEvent::Dropped { job_id } => {
+                jobs[job_id as usize].fate = JobFate::Dropped;
+            }
+            BatchEvent::StepAt { at } => {
+                q.schedule_at(at, Ev::BatchStep { node });
             }
         }
     }
@@ -125,8 +202,18 @@ pub(super) fn run(sc: &Scenario) -> ScenarioResult {
 
     let scheduler = UlScheduler::new(cfg.mac, cfg.carrier);
     let discipline = discipline_of(&cfg.scheme);
-    let mut nodes: Vec<ComputeNode> =
-        sc.nodes.iter().map(|n| ComputeNode::new(discipline, n.n_servers)).collect();
+    let mut nodes: Vec<NodeRt> = sc
+        .nodes
+        .iter()
+        .map(|n| match n.execution {
+            ExecutionModel::Sequential => {
+                NodeRt::Seq(ComputeNode::new(discipline, n.n_servers))
+            }
+            ExecutionModel::ContinuousBatching { max_batch, kv_budget } => {
+                NodeRt::Batch(BatchEngine::new(discipline, n.gpu, max_batch, kv_budget))
+            }
+        })
+        .collect();
     let mut router = sc.make_router();
     let t_wireline = cfg.scheme.deployment.wireline_latency();
 
@@ -162,9 +249,11 @@ pub(super) fn run(sc: &Scenario) -> ScenarioResult {
 
     let mut jobs: Vec<JobState> = Vec::with_capacity(4096);
     let mut q: EventQueue<Ev> = EventQueue::new();
-    // Reused per-enqueue routing snapshot (keeps the hot path
-    // allocation-free).
+    // Reused per-enqueue routing snapshot + node-event buffers (keeps
+    // the hot path allocation-free).
     let mut views: Vec<NodeView> = Vec::with_capacity(sc.nodes.len());
+    let mut node_ev: Vec<NodeEvent> = Vec::with_capacity(16);
+    let mut batch_ev: Vec<BatchEvent> = Vec::with_capacity(64);
 
     // Prime arrival processes + the slot clock.
     for ue in 0..n_ues {
@@ -200,9 +289,12 @@ pub(super) fn run(sc: &Scenario) -> ScenarioResult {
                         t_comm: None,
                         t_node_arrival: None,
                         t_service_start: None,
+                        t_first_token: None,
+                        t_done: None,
                         n_input,
                         n_output: 0,
-                        service_time: 0.0,
+                        prefill_time: 0.0,
+                        decode_time: 0.0,
                         fate: JobFate::InFlight,
                         measured: now >= cfg.warmup,
                     });
@@ -269,11 +361,7 @@ pub(super) fn run(sc: &Scenario) -> ScenarioResult {
                 };
                 let spec = &sc.classes[class_id];
                 views.clear();
-                views.extend(nodes.iter().zip(sc.nodes.iter()).map(|(n, s)| NodeView {
-                    queue_len: n.queue_len(),
-                    busy_servers: n.busy_servers(),
-                    n_servers: s.n_servers,
-                }));
+                views.extend(nodes.iter().zip(sc.nodes.iter()).map(|(rt, s)| rt.view(s)));
                 let target = router.pick(class_id, &views);
                 // A routing bug must fail loudly: silently clamping
                 // would report single-node results as multi-node.
@@ -287,23 +375,64 @@ pub(super) fn run(sc: &Scenario) -> ScenarioResult {
                 {
                     let js = &mut jobs[job as usize];
                     js.n_output = demand.n_output;
-                    js.service_time = demand.service_time;
+                    js.prefill_time = demand.prefill_time;
+                    js.decode_time = demand.decode_time;
                     js.t_node_arrival = Some(now);
                 }
-                let cj = ComputeJob {
-                    job_id: job,
-                    t_gen,
-                    t_comm,
-                    deadline: t_gen + spec.b_total,
-                    service_time: demand.service_time,
-                };
-                let evs = nodes[target].enqueue(cj, now);
-                apply_node_events(target, evs, &mut jobs, &mut q, now);
+                let deadline = t_gen + spec.b_total;
+                match &mut nodes[target] {
+                    NodeRt::Seq(n) => {
+                        let cj = ComputeJob {
+                            job_id: job,
+                            t_gen,
+                            t_comm,
+                            deadline,
+                            service_time: demand.service_time(),
+                        };
+                        node_ev.clear();
+                        n.enqueue(cj, now, &mut node_ev);
+                        apply_node_events(target, &node_ev, &mut jobs, &mut q, now);
+                    }
+                    NodeRt::Batch(e) => {
+                        let bj = BatchJob {
+                            job_id: job,
+                            t_gen,
+                            t_comm,
+                            deadline,
+                            n_input,
+                            n_output: demand.n_output,
+                            prefill_time: demand.prefill_time,
+                            decode_time: demand.decode_time,
+                            c_llm: spec.c_llm,
+                            m_llm: spec.m_llm,
+                            kv_bytes_per_token: spec.kv_bytes_per_token,
+                        };
+                        batch_ev.clear();
+                        e.enqueue(bj, now, &mut batch_ev);
+                        apply_batch_events(target, &batch_ev, &mut jobs, &mut q, now);
+                    }
+                }
             }
             Ev::ComputeDone { node, job } => {
-                jobs[job as usize].fate = JobFate::Completed;
-                let evs = nodes[node].complete(now);
-                apply_node_events(node, evs, &mut jobs, &mut q, now);
+                {
+                    let js = &mut jobs[job as usize];
+                    js.fate = JobFate::Completed;
+                    js.t_done = Some(now);
+                }
+                let NodeRt::Seq(n) = &mut nodes[node] else {
+                    unreachable!("ComputeDone scheduled for a batching node")
+                };
+                node_ev.clear();
+                n.complete(now, &mut node_ev);
+                apply_node_events(node, &node_ev, &mut jobs, &mut q, now);
+            }
+            Ev::BatchStep { node } => {
+                let NodeRt::Batch(e) = &mut nodes[node] else {
+                    unreachable!("BatchStep scheduled for a sequential node")
+                };
+                batch_ev.clear();
+                e.step(now, &mut batch_ev);
+                apply_batch_events(node, &batch_ev, &mut jobs, &mut q, now);
             }
         }
     }
@@ -314,9 +443,39 @@ pub(super) fn run(sc: &Scenario) -> ScenarioResult {
         .enumerate()
         .filter(|(_, j)| j.measured)
         .map(|(id, j)| {
+            let roofline_service = j.prefill_time + j.decode_time;
             let (t_queue, t_service) = match (j.t_node_arrival, j.t_service_start) {
-                (Some(a), Some(s)) => (s - a, j.service_time),
+                (Some(a), Some(s)) => {
+                    let svc = match j.t_done {
+                        // batched decode stretches the executed service
+                        // time; sequential keeps the exact roofline sum
+                        Some(d) if j.t_first_token.is_some() => d - s,
+                        _ => roofline_service,
+                    };
+                    (s - a, svc)
+                }
                 _ => (0.0, 0.0),
+            };
+            let tok = j.decode_time / j.n_output.max(1) as f64;
+            let (ttft, tpot) = if j.fate == JobFate::Completed {
+                match (j.t_first_token, j.t_done) {
+                    (Some(f), Some(d)) => (
+                        f - j.t_gen,
+                        if j.n_output > 1 { (d - f) / (j.n_output - 1) as f64 } else { 0.0 },
+                    ),
+                    // sequential: first token lands one decode step
+                    // after the prefill; decode is evenly paced
+                    _ => (
+                        j.t_comm.unwrap_or(0.0)
+                            + t_wireline
+                            + t_queue
+                            + j.prefill_time
+                            + tok,
+                        if j.n_output > 1 { tok } else { 0.0 },
+                    ),
+                }
+            } else {
+                (0.0, 0.0)
             };
             JobOutcome {
                 job_id: id as u64,
@@ -326,6 +485,8 @@ pub(super) fn run(sc: &Scenario) -> ScenarioResult {
                 t_wireline,
                 t_queue,
                 t_service,
+                ttft,
+                tpot,
                 tokens: j.n_input + j.n_output,
                 fate: j.fate,
             }

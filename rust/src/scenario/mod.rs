@@ -52,16 +52,21 @@ pub use service::{
 };
 pub use workload::{workloads_from_toml, workloads_to_toml, TokenDist, WorkloadClass};
 
+pub use crate::compute::ExecutionModel;
+
 use crate::config::{typed_f64, typed_i64, typed_str, SchemeConfig, SimConfig};
 use crate::llm::GpuSpec;
 use crate::util::tomlmini::Document;
 
-/// One compute node of the tier: an aggregated accelerator pool and
-/// its number of parallel servers.
+/// One compute node of the tier: an aggregated accelerator pool, its
+/// number of parallel servers, and how it executes jobs
+/// ([`ExecutionModel::Sequential`] whole-job occupancy vs
+/// [`ExecutionModel::ContinuousBatching`] iteration-level batching).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct NodeSpec {
     pub gpu: GpuSpec,
     pub n_servers: u32,
+    pub execution: ExecutionModel,
 }
 
 /// Factory producing a fresh router per run (routers may keep per-run
@@ -190,7 +195,11 @@ impl ScenarioBuilder {
         Self {
             base: cfg.clone(),
             classes: vec![WorkloadClass::from_legacy(&cfg.job_traffic, &cfg.job)],
-            nodes: vec![NodeSpec { gpu: cfg.gpu, n_servers: cfg.n_gpus }],
+            nodes: vec![NodeSpec {
+                gpu: cfg.gpu,
+                n_servers: cfg.n_gpus,
+                execution: ExecutionModel::Sequential,
+            }],
             service: Box::new(RooflineService),
             routing: RoutingPolicy::LeastLoaded,
             router_factory: None,
@@ -232,10 +241,23 @@ impl ScenarioBuilder {
         self
     }
 
-    /// Add one compute node.
-    pub fn node(mut self, gpu: GpuSpec, n_servers: u32) -> Self {
+    /// Add one compute node (sequential whole-job execution).
+    pub fn node(self, gpu: GpuSpec, n_servers: u32) -> Self {
+        self.node_exec(gpu, n_servers, ExecutionModel::Sequential)
+    }
+
+    /// Add one compute node with an explicit execution model.
+    /// Continuous-batching nodes must have `n_servers = 1` (the engine
+    /// *is* the server); `kv_budget = 0.0` derives the budget at build
+    /// time as `mem_bytes − max class m_llm`.
+    pub fn node_exec(
+        mut self,
+        gpu: GpuSpec,
+        n_servers: u32,
+        execution: ExecutionModel,
+    ) -> Self {
         assert!(n_servers >= 1);
-        self.nodes.push(NodeSpec { gpu, n_servers });
+        self.nodes.push(NodeSpec { gpu, n_servers, execution });
         self
     }
 
@@ -345,35 +367,77 @@ impl ScenarioBuilder {
             self.nodes.clear();
             for i in 0..n_nodes {
                 let prefix = format!("node.{i}.");
-                // Unscaled default so a bare `scale = N` means exactly
-                // N of this accelerator, not N x an implicit pool.
-                let mut gpu = GpuSpec::gh200_nvl2();
+                let mut gpu_name: Option<&str> = None;
+                let mut scale: Option<f64> = None;
                 let mut servers = 1u32;
+                let mut batching = false;
+                let mut max_batch: Option<u32> = None;
+                let mut kv_budget_gb: Option<f64> = None;
                 for key in doc.keys().filter(|k| k.starts_with(prefix.as_str())) {
                     let field = &key[prefix.len()..];
                     let missing = || anyhow::anyhow!("bad value for '{key}'");
                     match field {
-                        // BTreeMap key order guarantees "gpu" is seen
-                        // before "scale".
-                        "gpu" => {
-                            let name = doc.str(key).ok_or_else(missing)?;
-                            gpu = GpuSpec::by_name(name)
-                                .ok_or_else(|| anyhow::anyhow!("unknown GPU '{name}'"))?;
-                        }
+                        "gpu" => gpu_name = Some(doc.str(key).ok_or_else(missing)?),
                         "scale" => {
                             let v = doc.f64(key).ok_or_else(missing)?;
                             if v <= 0.0 {
                                 anyhow::bail!("'{key}' must be positive, got {v}");
                             }
-                            gpu = gpu.scaled(v);
+                            scale = Some(v);
                         }
                         "servers" => {
                             servers = workload::u32_field(doc, key, 1, 1024)?
                         }
+                        "batching" => {
+                            batching = doc
+                                .get(key)
+                                .and_then(|v| v.as_bool())
+                                .ok_or_else(|| {
+                                    anyhow::anyhow!("'{key}' must be a bool")
+                                })?;
+                        }
+                        "max_batch" => {
+                            max_batch = Some(workload::u32_field(doc, key, 1, 4096)?)
+                        }
+                        "kv_budget_gb" => {
+                            let v = doc.f64(key).ok_or_else(missing)?;
+                            if v <= 0.0 {
+                                anyhow::bail!("'{key}' must be positive, got {v}");
+                            }
+                            kv_budget_gb = Some(v);
+                        }
                         other => anyhow::bail!("unknown node key '{other}'"),
                     }
                 }
-                self.nodes.push(NodeSpec { gpu, n_servers: servers });
+                // Unscaled default so a bare `scale = N` means exactly
+                // N of this accelerator, not N x an implicit pool.
+                let mut gpu = match gpu_name {
+                    Some(name) => GpuSpec::by_name(name)
+                        .ok_or_else(|| anyhow::anyhow!("unknown GPU '{name}'"))?,
+                    None => GpuSpec::gh200_nvl2(),
+                };
+                if let Some(s) = scale {
+                    gpu = gpu.scaled(s);
+                }
+                let execution = if batching {
+                    ExecutionModel::ContinuousBatching {
+                        max_batch: max_batch.ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "node {i}: batching = true requires 'max_batch'"
+                            )
+                        })?,
+                        // 0 = derive at build time (mem − weights)
+                        kv_budget: kv_budget_gb.map_or(0.0, |g| g * 1e9),
+                    }
+                } else {
+                    if max_batch.is_some() || kv_budget_gb.is_some() {
+                        anyhow::bail!(
+                            "node {i}: 'max_batch'/'kv_budget_gb' require batching = true"
+                        );
+                    }
+                    ExecutionModel::Sequential
+                };
+                self.nodes.push(NodeSpec { gpu, n_servers: servers, execution });
             }
         }
         Ok(self)
@@ -381,8 +445,20 @@ impl ScenarioBuilder {
 
     /// Finalize. An empty class list defaults to the Table I
     /// translation workload; an empty node list to the base config's
-    /// compute node.
-    pub fn build(mut self) -> Scenario {
+    /// compute node. Panics on an invalid assembly — use
+    /// [`ScenarioBuilder::try_build`] to handle errors (the CLI does).
+    pub fn build(self) -> Scenario {
+        match self.try_build() {
+            Ok(s) => s,
+            Err(e) => panic!("invalid scenario: {e}"),
+        }
+    }
+
+    /// Fallible [`ScenarioBuilder::build`]: enforces the documented
+    /// "model must fit" rule (weights ≤ HBM on every node; weights +
+    /// KV budget ≤ HBM on batching nodes), derives auto KV budgets,
+    /// and rejects batching nodes with parallel servers.
+    pub fn try_build(mut self) -> anyhow::Result<Scenario> {
         if self.classes.is_empty() {
             self.classes.push(WorkloadClass::from_legacy(
                 &self.base.job_traffic,
@@ -390,16 +466,70 @@ impl ScenarioBuilder {
             ));
         }
         if self.nodes.is_empty() {
-            self.nodes.push(NodeSpec { gpu: self.base.gpu, n_servers: self.base.n_gpus });
+            self.nodes.push(NodeSpec {
+                gpu: self.base.gpu,
+                n_servers: self.base.n_gpus,
+                execution: ExecutionModel::Sequential,
+            });
         }
-        Scenario {
+        let max_m_llm = self.classes.iter().map(|c| c.m_llm).fold(0.0_f64, f64::max);
+        for (i, node) in self.nodes.iter_mut().enumerate() {
+            let mem = node.gpu.mem_bytes;
+            for class in &self.classes {
+                if class.m_llm > mem {
+                    anyhow::bail!(
+                        "model of class '{}' ({:.1} GB) does not fit node {i} {} \
+                         ({:.1} GB HBM)",
+                        class.name,
+                        class.m_llm / 1e9,
+                        node.gpu.display_name(),
+                        mem / 1e9,
+                    );
+                }
+            }
+            if let ExecutionModel::ContinuousBatching { max_batch, kv_budget } =
+                &mut node.execution
+            {
+                if *max_batch < 1 {
+                    anyhow::bail!("node {i}: max_batch must be >= 1");
+                }
+                if node.n_servers != 1 {
+                    anyhow::bail!(
+                        "node {i}: continuous batching requires servers = 1 \
+                         (the engine is the server)"
+                    );
+                }
+                if *kv_budget == 0.0 {
+                    // auto: whatever HBM the largest served model leaves
+                    *kv_budget = mem - max_m_llm;
+                    if *kv_budget <= 0.0 {
+                        anyhow::bail!(
+                            "node {i} {}: no HBM left for KV cache after {:.1} GB \
+                             of weights",
+                            node.gpu.display_name(),
+                            max_m_llm / 1e9,
+                        );
+                    }
+                } else if max_m_llm + *kv_budget > mem {
+                    anyhow::bail!(
+                        "node {i} {}: weights ({:.1} GB) + KV budget ({:.1} GB) \
+                         exceed {:.1} GB HBM",
+                        node.gpu.display_name(),
+                        max_m_llm / 1e9,
+                        *kv_budget / 1e9,
+                        mem / 1e9,
+                    );
+                }
+            }
+        }
+        Ok(Scenario {
             base: self.base,
             classes: self.classes,
             nodes: self.nodes,
             service: self.service,
             routing: self.routing,
             router_factory: self.router_factory,
-        }
+        })
     }
 }
 
@@ -518,6 +648,106 @@ mod tests {
                 "accepted: {bad}"
             );
         }
+    }
+
+    #[test]
+    fn toml_batching_node_parses_execution_model() {
+        let doc = Document::parse(
+            "[[node]]\ngpu = \"a100\"\nscale = 8\nbatching = true\nmax_batch = 64\nkv_budget_gb = 20\n",
+        )
+        .unwrap();
+        let s = ScenarioBuilder::new().apply_toml(&doc).unwrap().build();
+        assert_eq!(
+            s.nodes()[0].execution,
+            ExecutionModel::ContinuousBatching { max_batch: 64, kv_budget: 20e9 }
+        );
+        assert!(s.nodes()[0].execution.is_batching());
+    }
+
+    #[test]
+    fn toml_batching_keys_strictly_validated() {
+        for bad in [
+            // max_batch without batching
+            "[[node]]\ngpu = \"a100\"\nmax_batch = 8",
+            // kv budget without batching
+            "[[node]]\ngpu = \"a100\"\nkv_budget_gb = 4.0",
+            // batching without max_batch
+            "[[node]]\ngpu = \"a100\"\nbatching = true",
+            // mistyped flag
+            "[[node]]\ngpu = \"a100\"\nbatching = \"yes\"\nmax_batch = 8",
+            // out-of-range batch
+            "[[node]]\ngpu = \"a100\"\nbatching = true\nmax_batch = 0",
+            // non-positive budget
+            "[[node]]\ngpu = \"a100\"\nbatching = true\nmax_batch = 8\nkv_budget_gb = -1",
+        ] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(
+                ScenarioBuilder::new().apply_toml(&doc).is_err(),
+                "accepted: {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn build_rejects_model_larger_than_node_memory() {
+        // 60 GB of weights cannot live on a 48 GB L40S.
+        let err = ScenarioBuilder::new()
+            .workload(WorkloadClass::new("big").with_model(60e9, 60e9))
+            .node(GpuSpec::l40s(), 1)
+            .try_build()
+            .unwrap_err();
+        assert!(err.to_string().contains("does not fit"), "{err}");
+        // the same model fits a 2× pool
+        assert!(ScenarioBuilder::new()
+            .workload(WorkloadClass::new("big").with_model(60e9, 60e9))
+            .node(GpuSpec::l40s().scaled(2.0), 1)
+            .try_build()
+            .is_ok());
+    }
+
+    #[test]
+    fn build_rejects_overcommitted_kv_budget() {
+        // 14 GB weights + 70 GB KV > 80 GB A100.
+        let err = ScenarioBuilder::new()
+            .node_exec(
+                GpuSpec::a100(),
+                1,
+                ExecutionModel::ContinuousBatching { max_batch: 8, kv_budget: 70e9 },
+            )
+            .try_build()
+            .unwrap_err();
+        assert!(err.to_string().contains("KV budget"), "{err}");
+    }
+
+    #[test]
+    fn build_derives_auto_kv_budget_from_free_memory() {
+        let s = ScenarioBuilder::new()
+            .node_exec(
+                GpuSpec::a100(),
+                1,
+                ExecutionModel::ContinuousBatching { max_batch: 8, kv_budget: 0.0 },
+            )
+            .build();
+        // Table I default class: 14 GB weights on an 80 GB A100
+        match s.nodes()[0].execution {
+            ExecutionModel::ContinuousBatching { kv_budget, .. } => {
+                assert!((kv_budget - 66e9).abs() < 1e6, "kv = {kv_budget}");
+            }
+            _ => panic!("execution model lost in build"),
+        }
+    }
+
+    #[test]
+    fn build_rejects_batching_with_parallel_servers() {
+        let err = ScenarioBuilder::new()
+            .node_exec(
+                GpuSpec::a100(),
+                2,
+                ExecutionModel::ContinuousBatching { max_batch: 8, kv_budget: 0.0 },
+            )
+            .try_build()
+            .unwrap_err();
+        assert!(err.to_string().contains("servers = 1"), "{err}");
     }
 
     #[test]

@@ -6,12 +6,19 @@
 //! ([`NodeView`]), mirroring what an edge orchestrator can actually
 //! observe per decision.
 
-/// Snapshot of one node's load at routing time.
+use crate::llm::GpuSpec;
+
+/// Snapshot of one node's load at routing time. For a
+/// continuous-batching node, `busy_servers` is the current batch size
+/// and `n_servers` its `max_batch` slot cap.
 #[derive(Debug, Clone, Copy)]
 pub struct NodeView {
     pub queue_len: usize,
     pub busy_servers: u32,
     pub n_servers: u32,
+    /// The node's accelerator pool (capacity-aware custom routers;
+    /// `gpu.display_name()` is the label to log).
+    pub gpu: GpuSpec,
 }
 
 impl NodeView {
@@ -132,7 +139,12 @@ mod tests {
     fn views(loads: &[(usize, u32)]) -> Vec<NodeView> {
         loads
             .iter()
-            .map(|&(q, b)| NodeView { queue_len: q, busy_servers: b, n_servers: 2 })
+            .map(|&(q, b)| NodeView {
+                queue_len: q,
+                busy_servers: b,
+                n_servers: 2,
+                gpu: GpuSpec::a100(),
+            })
             .collect()
     }
 

@@ -14,19 +14,40 @@
 //!   token counts. This is the service-time variability that mixed
 //!   LLM serving studies (arXiv:2411.17712) show dominates tail
 //!   latency.
+//!
+//! Demands are returned *split* into prefill and decode phases: the
+//! sequential execution model charges their sum as one service time,
+//! while the continuous-batching engine admits the prefill and batches
+//! the decode steps (and both derive TTFT/TPOT from the split).
 
 use crate::llm::{CostModel, GpuSpec};
 use crate::rng::Rng;
 
 use super::workload::WorkloadClass;
 
-/// A realized job's compute demand.
+/// A realized job's compute demand, split at the prefill/decode
+/// boundary.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ServiceDemand {
-    /// Output length charged to the job.
+    /// Output length charged to the job (≥ 1).
     pub n_output: u32,
-    /// Service time in seconds on the chosen node.
-    pub service_time: f64,
+    /// Prefill latency on the chosen node (Eq 7).
+    pub prefill_time: f64,
+    /// Sequential decode latency `N_output · max(C/G_comp, M/G_membw)`
+    /// (Eq 8).
+    pub decode_time: f64,
+}
+
+impl ServiceDemand {
+    /// Whole-job service time (what the sequential model charges).
+    pub fn service_time(&self) -> f64 {
+        self.prefill_time + self.decode_time
+    }
+
+    /// Per-token decode latency when served alone.
+    pub fn token_time(&self) -> f64 {
+        self.decode_time / self.n_output.max(1) as f64
+    }
 }
 
 /// Maps (class, realized prompt, node capacity) → service demand.
@@ -42,6 +63,28 @@ pub trait ServiceModel: std::fmt::Debug {
         gpu: &GpuSpec,
         rng: &mut Rng,
     ) -> ServiceDemand;
+}
+
+/// Shared pricing tail: assert the documented "model must fit" rule
+/// (scenario build validation should make this unreachable; custom
+/// assemblies that bypass the builder still fail loudly here) and
+/// price the realized token counts on the node.
+fn price(class: &WorkloadClass, n_input: u32, n_output: u32, gpu: &GpuSpec) -> ServiceDemand {
+    let spec = class.job_spec(n_input, n_output);
+    let m = CostModel::new(*gpu);
+    assert!(
+        m.fits(&spec),
+        "model of class '{}' ({:.1} GB) does not fit {} ({:.1} GB)",
+        class.name,
+        spec.m_llm / 1e9,
+        gpu.display_name(),
+        gpu.mem_bytes / 1e9,
+    );
+    ServiceDemand {
+        n_output,
+        prefill_time: m.prefill_latency(&spec),
+        decode_time: m.tokengen_latency(&spec),
+    }
 }
 
 /// Deterministic two-phase roofline (paper Eqs 7–8) at the class's
@@ -62,9 +105,7 @@ impl ServiceModel for RooflineService {
         _rng: &mut Rng,
     ) -> ServiceDemand {
         let n_output = class.output_tokens.mean().round().max(1.0) as u32;
-        let spec = class.job_spec(n_input, n_output);
-        let m = CostModel::new(*gpu);
-        ServiceDemand { n_output, service_time: m.total_latency(&spec) }
+        price(class, n_input, n_output, gpu)
     }
 }
 
@@ -85,9 +126,7 @@ impl ServiceModel for TokenSampledService {
         rng: &mut Rng,
     ) -> ServiceDemand {
         let n_output = class.output_tokens.sample(rng).max(1);
-        let spec = class.job_spec(n_input, n_output);
-        let m = CostModel::new(*gpu);
-        ServiceDemand { n_output, service_time: m.total_latency(&spec) }
+        price(class, n_input, n_output, gpu)
     }
 }
 
@@ -136,8 +175,12 @@ mod tests {
         let d = RooflineService.realize(&class, 15, &gpu, &mut rng);
         // no randomness consumed
         assert_eq!(rng.clone().u64(), before);
-        let expect = CostModel::new(gpu).total_latency(&JobSpec::table1());
-        assert!((d.service_time - expect).abs() < 1e-15);
+        let m = CostModel::new(gpu);
+        let expect = m.total_latency(&JobSpec::table1());
+        assert!((d.service_time() - expect).abs() < 1e-15);
+        assert!((d.prefill_time - m.prefill_latency(&JobSpec::table1())).abs() < 1e-18);
+        assert!((d.decode_time - m.tokengen_latency(&JobSpec::table1())).abs() < 1e-18);
+        assert!((d.token_time() - m.token_latency(&JobSpec::table1())).abs() < 1e-18);
         assert_eq!(d.n_output, 15);
     }
 
@@ -156,9 +199,21 @@ mod tests {
         sorted.sort_by(|a, b| a.n_output.cmp(&b.n_output));
         for w in sorted.windows(2) {
             if w[0].n_output < w[1].n_output {
-                assert!(w[0].service_time < w[1].service_time);
+                assert!(w[0].service_time() < w[1].service_time());
+                // prefill unchanged — only decode grows
+                assert!((w[0].prefill_time - w[1].prefill_time).abs() < 1e-18);
             }
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "does not fit")]
+    fn pricing_rejects_model_larger_than_memory() {
+        // 30B FP16 (60 GB) on a 48 GB L40S must fail loudly.
+        let class = table1_class().with_model(60e9, 60e9);
+        let gpu = GpuSpec::l40s();
+        let mut rng = Rng::new(1);
+        RooflineService.realize(&class, 15, &gpu, &mut rng);
     }
 
     #[test]

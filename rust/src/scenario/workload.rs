@@ -7,7 +7,7 @@
 //! air interface, the served model's roofline constants, and the
 //! per-class latency budget. A scenario composes N of these.
 
-use crate::llm::JobSpec;
+use crate::llm::{kv_bytes_per_token, JobSpec};
 use crate::rng::Rng;
 use crate::traffic::JobTrafficConfig;
 use crate::util::tomlmini::Document;
@@ -106,6 +106,10 @@ pub struct WorkloadClass {
     pub c_llm: f64,
     /// Model bytes streamed from memory per forward pass.
     pub m_llm: f64,
+    /// KV-cache bytes per token of context — gates admission under
+    /// continuous batching. Defaults to the dense-FP16 heuristic
+    /// [`crate::llm::kv_bytes_per_token`]; override for GQA/MQA models.
+    pub kv_bytes_per_token: f64,
     /// End-to-end latency budget (seconds).
     pub b_total: f64,
 }
@@ -125,6 +129,7 @@ impl WorkloadClass {
             overhead_bytes: t.overhead_bytes,
             c_llm: j.c_llm,
             m_llm: j.m_llm,
+            kv_bytes_per_token: kv_bytes_per_token(j.m_llm),
             b_total: j.b_total,
         }
     }
@@ -170,6 +175,7 @@ impl WorkloadClass {
             overhead_bytes: traffic.overhead_bytes,
             c_llm: job.c_llm,
             m_llm: job.m_llm,
+            kv_bytes_per_token: kv_bytes_per_token(job.m_llm),
             b_total: job.b_total,
         }
     }
@@ -197,9 +203,20 @@ impl WorkloadClass {
     }
 
     /// Serve this class with a different model (FLOPs/token, bytes).
+    /// Re-derives the default KV footprint for the new size — call
+    /// [`WorkloadClass::with_kv_bytes_per_token`] *after* this to
+    /// override it.
     pub fn with_model(mut self, c_llm: f64, m_llm: f64) -> Self {
         self.c_llm = c_llm;
         self.m_llm = m_llm;
+        self.kv_bytes_per_token = kv_bytes_per_token(m_llm);
+        self
+    }
+
+    /// Override the KV-cache bytes reserved per context token.
+    pub fn with_kv_bytes_per_token(mut self, bytes: f64) -> Self {
+        assert!(bytes > 0.0);
+        self.kv_bytes_per_token = bytes;
         self
     }
 
@@ -240,6 +257,7 @@ pub fn workloads_to_toml(classes: &[WorkloadClass]) -> String {
         out.push_str(&format!("overhead_bytes = {}\n", c.overhead_bytes));
         out.push_str(&format!("c_llm = {}\n", c.c_llm));
         out.push_str(&format!("m_llm = {}\n", c.m_llm));
+        out.push_str(&format!("kv_bytes_per_token = {}\n", c.kv_bytes_per_token));
         out.push_str(&format!("b_total = {}\n\n", c.b_total));
     }
     out
@@ -265,6 +283,7 @@ pub fn workloads_from_toml(doc: &Document) -> anyhow::Result<Vec<WorkloadClass>>
     for i in 0..n {
         let prefix = format!("workload.{i}.");
         let mut w = WorkloadClass::new(format!("class{i}"));
+        let mut kv_explicit = false;
         for key in doc.keys().filter(|k| k.starts_with(prefix.as_str())) {
             let field = &key[prefix.len()..];
             let missing = || anyhow::anyhow!("bad value for '{key}'");
@@ -289,11 +308,24 @@ pub fn workloads_from_toml(doc: &Document) -> anyhow::Result<Vec<WorkloadClass>>
                 }
                 "c_llm" => w.c_llm = doc.f64(key).ok_or_else(missing)?,
                 "m_llm" => w.m_llm = doc.f64(key).ok_or_else(missing)?,
+                "kv_bytes_per_token" => {
+                    w.kv_bytes_per_token = doc.f64(key).ok_or_else(missing)?;
+                    kv_explicit = true;
+                }
                 "b_total" => w.b_total = doc.f64(key).ok_or_else(missing)?,
                 other => anyhow::bail!("unknown workload key '{other}'"),
             }
         }
-        if w.rate_per_ue <= 0.0 || w.b_total <= 0.0 || w.c_llm <= 0.0 || w.m_llm <= 0.0 {
+        if !kv_explicit {
+            // keep the default in sync with an overridden model size
+            w.kv_bytes_per_token = kv_bytes_per_token(w.m_llm);
+        }
+        if w.rate_per_ue <= 0.0
+            || w.b_total <= 0.0
+            || w.c_llm <= 0.0
+            || w.m_llm <= 0.0
+            || w.kv_bytes_per_token <= 0.0
+        {
             anyhow::bail!(
                 "workload '{}' needs positive rate, budget, and model constants",
                 w.name

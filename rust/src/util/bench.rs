@@ -38,6 +38,32 @@ impl BenchResult {
     }
 }
 
+/// Serialize bench results as a JSON array (hand-rolled; no serde in
+/// the dependency universe) so perf trajectories can accumulate
+/// machine-readable points across commits.
+pub fn results_to_json(results: &[BenchResult]) -> String {
+    let mut out = String::from("[\n");
+    for (i, r) in results.iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        let name: String = r.name.chars().filter(|&c| c != '"' && c != '\\').collect();
+        let _ = write!(
+            out,
+            "  {{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {:.1}, \"std_ns\": {:.1}, \
+             \"min_ns\": {:.1}, \"p50_ns\": {:.1}, \"p95_ns\": {:.1}}}",
+            name, r.iters, r.mean_ns, r.std_ns, r.min_ns, r.p50_ns, r.p95_ns
+        );
+    }
+    out.push_str("\n]\n");
+    out
+}
+
+/// Write bench results to a JSON file (e.g. `BENCH_hotpath.json`).
+pub fn write_bench_json(path: &str, results: &[BenchResult]) -> std::io::Result<()> {
+    std::fs::write(path, results_to_json(results))
+}
+
 /// Human-readable nanoseconds.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -193,6 +219,25 @@ mod tests {
         std::env::set_current_dir(old).unwrap();
         assert!(csv.starts_with("lambda,p_sat\n"));
         assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn bench_json_is_well_formed() {
+        let r = BenchResult {
+            name: "q\"uote".into(),
+            iters: 10,
+            mean_ns: 1.25,
+            std_ns: 0.5,
+            min_ns: 1.0,
+            p50_ns: 1.2,
+            p95_ns: 1.9,
+        };
+        let js = results_to_json(&[r.clone(), r]);
+        assert!(js.starts_with("[\n"));
+        assert!(js.contains("\"mean_ns\": 1.2"));
+        assert!(!js.contains('\\'), "quotes must be stripped, not escaped");
+        assert_eq!(js.matches('{').count(), 2);
+        assert_eq!(js.matches('}').count(), 2);
     }
 
     #[test]

@@ -94,3 +94,32 @@ fn scenario_rejects_bad_routing() {
     let out = bin().args(["scenario", "--routing", "zzz"]).output().unwrap();
     assert_eq!(out.status.code(), Some(2));
 }
+
+#[test]
+fn scenario_reports_ttft_tpot_and_writes_json() {
+    let dir = std::env::temp_dir().join(format!("icc6g_json_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("report.json");
+    let out = bin()
+        .args([
+            "scenario",
+            "--ues",
+            "8",
+            "--horizon",
+            "2",
+            "--json",
+            path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for field in ["ttft_p50", "ttft_p95", "ttft_p99", "tpot_p95"] {
+        assert!(text.contains(field), "missing '{field}' in:\n{text}");
+    }
+    let js = std::fs::read_to_string(&path).unwrap();
+    for field in ["\"per_class\"", "\"ttft_ms\"", "\"tpot_ms\"", "\"p99\"", "\"n_jobs\""] {
+        assert!(js.contains(field), "missing {field} in JSON:\n{js}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -150,6 +150,82 @@ fn scenario_toml_end_to_end() {
 }
 
 #[test]
+fn ttft_tpot_slices_consistent_with_e2e() {
+    let res = mixed_builder(13).build().run();
+    for o in res.outcomes.iter() {
+        match o.fate {
+            icc6g::metrics::JobFate::Completed => {
+                assert!(o.ttft > 0.0, "job {}: ttft must be positive", o.job_id);
+                assert!(
+                    o.ttft <= o.e2e() + 1e-12,
+                    "job {}: ttft {} beyond e2e {}",
+                    o.job_id,
+                    o.ttft,
+                    o.e2e()
+                );
+                assert!(o.tpot >= 0.0);
+            }
+            _ => {
+                assert_eq!(o.ttft, 0.0);
+                assert_eq!(o.tpot, 0.0);
+            }
+        }
+    }
+    for c in &res.report.per_class {
+        // one TTFT/TPOT sample per completed job, nothing more
+        assert_eq!(c.ttft.count(), c.comp.count(), "class '{}'", c.name);
+        assert_eq!(c.ttft_samples().len() as u64, c.ttft.count());
+        assert_eq!(c.tpot_samples().len() as u64, c.tpot.count());
+        if c.comp.count() > 0 {
+            assert!(c.ttft.mean() <= c.e2e.mean() + 1e-12, "class '{}'", c.name);
+            // percentiles are monotone in q
+            let (p50, p95, p99) = (
+                c.ttft_percentile(50.0),
+                c.ttft_percentile(95.0),
+                c.ttft_percentile(99.0),
+            );
+            assert!(p50 <= p95 && p95 <= p99, "class '{}': {p50} {p95} {p99}", c.name);
+            assert!(p99 <= c.e2e.max() + 1e-12);
+        }
+    }
+    // overall TTFT totals are the merge of the slices
+    let slice_count: u64 = res.report.per_class.iter().map(|c| c.ttft.count()).sum();
+    assert_eq!(res.report.ttft.count(), slice_count);
+}
+
+#[test]
+fn ttft_slices_survive_replication_merge() {
+    let mut a = mixed_builder(31).build().run().report;
+    let b = mixed_builder(32).build().run().report;
+    // expected: concatenation of the two replications' samples
+    let expect: Vec<Vec<f64>> = a
+        .per_class
+        .iter()
+        .zip(&b.per_class)
+        .map(|(ca, cb)| {
+            let mut v = ca.ttft_samples().to_vec();
+            v.extend_from_slice(cb.ttft_samples());
+            v
+        })
+        .collect();
+    a.merge(&b);
+    assert_eq!(a.per_class.len(), expect.len());
+    for (c, want) in a.per_class.iter().zip(&expect) {
+        assert_eq!(c.ttft_samples().len(), want.len(), "class '{}'", c.name);
+        assert_eq!(c.ttft.count() as usize, want.len());
+        for q in [50.0, 95.0, 99.0] {
+            let merged = c.ttft_percentile(q);
+            let exact = icc6g::util::stats::percentile(want, q);
+            assert!(
+                (merged - exact).abs() < 1e-15,
+                "class '{}' p{q}: {merged} vs {exact}",
+                c.name
+            );
+        }
+    }
+}
+
+#[test]
 fn report_satisfaction_consistent_with_per_class_rates() {
     let res = mixed_builder(21).build().run();
     let SimReport { n_jobs, n_satisfied, .. } = res.report.clone();

@@ -17,8 +17,7 @@ use icc6g::compute::{
 use icc6g::config::{SchemeConfig, SimConfig};
 use icc6g::dess::EventQueue;
 use icc6g::llm::GpuSpec;
-use icc6g::mac::{MacConfig, Sdu, SduKind, UeMac, UlScheduler};
-use icc6g::phy::channel::LargeScale;
+use icc6g::mac::{drop_ues, MacConfig, Sdu, SduKind, SlotWorkspace, UeBank, UlScheduler};
 use icc6g::phy::Carrier;
 use icc6g::queueing::analytic::{scheme_satisfaction, SystemParams};
 use icc6g::queueing::tandem_mc::simulate_tandem;
@@ -140,17 +139,14 @@ fn bench_mac_slot(out: &mut Vec<BenchResult>) {
     let sched = UlScheduler::new(MacConfig::default(), carrier);
     let mut rng = Rng::new(1);
     let mut drop_rng = Rng::new(2);
-    let mut ues: Vec<UeMac> = (0..60)
-        .map(|i| {
-            UeMac::new(LargeScale::drop(&mut drop_rng, 35.0, 300.0)).with_sr_phase(i)
-        })
-        .collect();
+    let mut bank = UeBank::new(drop_ues(&mut drop_rng, 60, 35.0, 300.0));
+    let mut ws = SlotWorkspace::new();
     let mut slot = 0u64;
     let r = bench_fn("mac: one 60-UE slot (backlogged)", 10, 2_000, 0.3, || {
-        for (i, ue) in ues.iter_mut().enumerate() {
-            if ue.buffered_bytes() < 2000 {
-                ue.note_arrival(slot, 4, 2);
-                ue.push_bg_sdu(Sdu {
+        for i in 0..bank.len() {
+            if bank.ue(i).buffered_bytes() < 2000 {
+                bank.note_arrival(i, slot, 4, 2);
+                bank.push_bg_sdu(i, Sdu {
                     kind: SduKind::Background,
                     total_bytes: 500,
                     bytes_left: 500,
@@ -158,9 +154,9 @@ fn bench_mac_slot(out: &mut Vec<BenchResult>) {
                 });
             }
         }
-        let out = sched.schedule_slot(slot, &mut ues, &mut rng);
+        sched.schedule_slot(slot, &mut bank, &mut rng, &mut ws);
         slot += 1;
-        out.len()
+        ws.grants.len()
     });
     println!("{}", r.report());
     let slots_per_sec = 1.0 / (r.mean_ns * 1e-9);

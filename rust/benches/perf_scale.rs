@@ -1,0 +1,130 @@
+//! Population-scaling benchmark — the active-set scheduler's headline.
+//!
+//! Sweeps the cell population at **fixed offered load** (20 jobs/s
+//! across the cell, near-zero background), so per-slot *activity* is
+//! constant while the population grows. Pre-active-set, every slot
+//! cost O(population) (candidate scan + PF decay + backlog scan); now
+//! it costs O(active). Each population also runs with
+//! `MacConfig::dense_scan` — the retained reference path, equivalent
+//! to the pre-PR scheduler — so the speedup is measured in-run rather
+//! than against a stale baseline. The sweep-runner rows measure the
+//! parallel replication harness on the same workload.
+//!
+//! Results land machine-readable in `BENCH_scale.json`:
+//! events/sec vs n_ues for both paths + the active/dense speedup.
+//!
+//! Run: `cargo bench --bench perf_scale`
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use icc6g::config::{SchemeConfig, SimConfig};
+use icc6g::coordinator::sweep_arrival_rates_threaded;
+use icc6g::sim::Sls;
+
+struct ScaleRow {
+    n_ues: u32,
+    mode: &'static str,
+    events: u64,
+    wall_s: f64,
+    events_per_sec: f64,
+    jobs: u64,
+}
+
+/// Fixed-offered-load config: 20 jobs/s across the cell regardless of
+/// population, background throttled to ~1 packet/UE/hour so activity
+/// is driven by jobs alone (the "1% job-active fraction" regime).
+fn scale_cfg(n_ues: u32, dense: bool) -> SimConfig {
+    let mut cfg = SimConfig::table1().with_scheme(SchemeConfig::icc());
+    cfg.n_ues = n_ues;
+    cfg.job_traffic.rate_per_ue = 20.0 / n_ues as f64;
+    cfg.background.rate_bps = 1.0; // 500 B packets ≈ 1 per 67 min
+    cfg.horizon = 2.0;
+    cfg.warmup = 0.2;
+    cfg.mac.dense_scan = dense;
+    cfg
+}
+
+fn run_scale(n_ues: u32, dense: bool) -> ScaleRow {
+    let cfg = scale_cfg(n_ues, dense);
+    // one warmup run, then the timed run
+    let _ = Sls::new(cfg.clone()).run();
+    let t0 = Instant::now();
+    let res = Sls::new(cfg).run();
+    let wall = t0.elapsed().as_secs_f64();
+    ScaleRow {
+        n_ues,
+        mode: if dense { "dense" } else { "active_set" },
+        events: res.events,
+        wall_s: wall,
+        events_per_sec: res.events as f64 / wall.max(1e-12),
+        jobs: res.report.n_jobs,
+    }
+}
+
+fn main() {
+    println!("=== §Perf population-scaling benchmark (fixed 20 jobs/s offered) ===\n");
+    let mut rows: Vec<ScaleRow> = Vec::new();
+    let mut speedups: Vec<(u32, f64)> = Vec::new();
+    for n_ues in [100u32, 1_000, 10_000] {
+        let active = run_scale(n_ues, false);
+        let dense = run_scale(n_ues, true);
+        let speedup = active.events_per_sec / dense.events_per_sec.max(1e-12);
+        println!(
+            "{:>6} UEs  active-set {:>12.0} ev/s ({} jobs)   dense {:>12.0} ev/s   speedup {:>6.1}x",
+            n_ues, active.events_per_sec, active.jobs, dense.events_per_sec, speedup
+        );
+        assert_eq!(
+            active.jobs, dense.jobs,
+            "active-set and dense runs diverged at {n_ues} UEs"
+        );
+        speedups.push((n_ues, speedup));
+        rows.push(active);
+        rows.push(dense);
+    }
+
+    // Parallel sweep harness on the same fixed-load workload.
+    let base = scale_cfg(1_000, false);
+    let scheme = SchemeConfig::icc();
+    let rates = [10.0, 20.0, 40.0, 60.0];
+    let mut sweep_json = String::new();
+    for (label, threads) in [("serial", 1usize), ("parallel", 0usize)] {
+        let t0 = Instant::now();
+        let pts = sweep_arrival_rates_threaded(&base, &scheme, &rates, 3, threads);
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "sweep {label:>8}: {} points x 3 seeds in {wall:.2} s",
+            pts.len()
+        );
+        let _ = write!(
+            sweep_json,
+            ",\n  {{\"name\": \"sweep_{label}\", \"points\": {}, \"seeds\": 3, \"wall_s\": {wall:.4}}}",
+            pts.len()
+        );
+    }
+
+    let mut js = String::from("[");
+    for (i, r) in rows.iter().enumerate() {
+        if i > 0 {
+            js.push(',');
+        }
+        let _ = write!(
+            js,
+            "\n  {{\"name\": \"sls_scale\", \"n_ues\": {}, \"mode\": \"{}\", \"events\": {}, \
+             \"jobs\": {}, \"wall_s\": {:.4}, \"events_per_sec\": {:.1}}}",
+            r.n_ues, r.mode, r.events, r.jobs, r.wall_s, r.events_per_sec
+        );
+    }
+    for (n_ues, s) in &speedups {
+        let _ = write!(
+            js,
+            ",\n  {{\"name\": \"speedup_vs_dense\", \"n_ues\": {n_ues}, \"speedup\": {s:.2}}}"
+        );
+    }
+    js.push_str(&sweep_json);
+    js.push_str("\n]\n");
+    match std::fs::write("BENCH_scale.json", &js) {
+        Ok(()) => println!("\nwrote BENCH_scale.json ({} scale rows)", rows.len()),
+        Err(e) => eprintln!("\ncannot write BENCH_scale.json: {e}"),
+    }
+}

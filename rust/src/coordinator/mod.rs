@@ -11,6 +11,7 @@ use crate::config::{SchemeConfig, SimConfig};
 use crate::llm::GpuSpec;
 use crate::metrics::SimReport;
 use crate::sim::run_scheme;
+use crate::sweep::{replication_seeds, sweep_grid};
 
 /// A point of a satisfaction-vs-load curve.
 #[derive(Debug, Clone, Copy)]
@@ -38,61 +39,69 @@ impl CurvePoint {
 /// Sweep satisfaction over prompt arrival rates by scaling the number
 /// of UEs (paper Fig 6: "each UE generates 1 prompt/s and we scale the
 /// number of UEs"). `seeds` > 1 averages independent replications.
+/// Serial; see [`sweep_arrival_rates_threaded`] for the parallel
+/// variant (bit-identical reports).
 pub fn sweep_arrival_rates(
     base: &SimConfig,
     scheme: &SchemeConfig,
     rates: &[f64],
     seeds: u32,
 ) -> Vec<CurvePoint> {
-    rates
-        .iter()
-        .map(|&rate| {
-            let mut cfg = base.clone();
-            cfg.n_ues = (rate / cfg.job_traffic.rate_per_ue).round().max(1.0) as u32;
-            let mut agg: Option<SimReport> = None;
-            for s in 0..seeds {
-                let r = run_scheme(&cfg, scheme.clone(), base.seed + 1000 * s as u64);
-                agg = Some(match agg {
-                    None => r,
-                    Some(mut a) => {
-                        a.merge(&r);
-                        a
-                    }
-                });
-            }
-            CurvePoint::from_report(rate, &agg.unwrap())
-        })
-        .collect()
+    sweep_arrival_rates_threaded(base, scheme, rates, seeds, 1)
+}
+
+/// [`sweep_arrival_rates`] over `threads` worker threads (0 = all
+/// cores). Every (rate, seed) replication is independent; per-point
+/// reports merge in seed order, so the thread count never changes the
+/// numbers — only the wall clock.
+pub fn sweep_arrival_rates_threaded(
+    base: &SimConfig,
+    scheme: &SchemeConfig,
+    rates: &[f64],
+    seeds: u32,
+    threads: usize,
+) -> Vec<CurvePoint> {
+    let seed_list = replication_seeds(base.seed, seeds);
+    sweep_grid(rates, &seed_list, threads, |rate, seed| {
+        let mut cfg = base.clone();
+        cfg.n_ues = (rate / cfg.job_traffic.rate_per_ue).round().max(1.0) as u32;
+        run_scheme(&cfg, scheme.clone(), seed)
+    })
+    .into_iter()
+    .map(|p| CurvePoint::from_report(p.x, &p.report))
+    .collect()
 }
 
 /// Sweep satisfaction over compute capacity (×A100), fixed 60 UEs
-/// (paper Fig 7).
+/// (paper Fig 7). Serial; see [`sweep_gpu_capacity_threaded`].
 pub fn sweep_gpu_capacity(
     base: &SimConfig,
     scheme: &SchemeConfig,
     capacities: &[f64],
     seeds: u32,
 ) -> Vec<CurvePoint> {
-    capacities
-        .iter()
-        .map(|&cap| {
-            let mut cfg = base.clone();
-            cfg.gpu = GpuSpec::a100().scaled(cap);
-            cfg.n_gpus = 1; // aggregated tensor-parallel pool
-            let mut agg: Option<SimReport> = None;
-            for s in 0..seeds {
-                let r = run_scheme(&cfg, scheme.clone(), base.seed + 1000 * s as u64);
-                agg = Some(match agg {
-                    None => r,
-                    Some(mut a) => {
-                        a.merge(&r);
-                        a
-                    }
-                });
-            }
-            CurvePoint::from_report(cap, &agg.unwrap())
-        })
-        .collect()
+    sweep_gpu_capacity_threaded(base, scheme, capacities, seeds, 1)
+}
+
+/// [`sweep_gpu_capacity`] over `threads` worker threads (0 = all
+/// cores); bit-identical to the serial sweep.
+pub fn sweep_gpu_capacity_threaded(
+    base: &SimConfig,
+    scheme: &SchemeConfig,
+    capacities: &[f64],
+    seeds: u32,
+    threads: usize,
+) -> Vec<CurvePoint> {
+    let seed_list = replication_seeds(base.seed, seeds);
+    sweep_grid(capacities, &seed_list, threads, |cap, seed| {
+        let mut cfg = base.clone();
+        cfg.gpu = GpuSpec::a100().scaled(cap);
+        cfg.n_gpus = 1; // aggregated tensor-parallel pool
+        run_scheme(&cfg, scheme.clone(), seed)
+    })
+    .into_iter()
+    .map(|p| CurvePoint::from_report(p.x, &p.report))
+    .collect()
 }
 
 /// Service capacity from a swept curve: the largest x whose

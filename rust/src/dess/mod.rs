@@ -62,6 +62,19 @@ impl<E> EventQueue<E> {
         Self { heap: BinaryHeap::new(), now: 0.0, seq: 0, processed: 0 }
     }
 
+    /// Pre-size the calendar. Event loops that prime one event per
+    /// entity (the SLS schedules `n_ues × n_classes` arrivals before
+    /// the first pop) should reserve up front so priming never regrows
+    /// the heap.
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { heap: BinaryHeap::with_capacity(cap), now: 0.0, seq: 0, processed: 0 }
+    }
+
+    /// Current heap capacity (diagnostics/tests).
+    pub fn capacity(&self) -> usize {
+        self.heap.capacity()
+    }
+
     /// Current simulation time (seconds).
     #[inline]
     pub fn now(&self) -> f64 {
@@ -192,6 +205,17 @@ mod tests {
         });
         assert_eq!(count, 10);
         assert_eq!(q.now(), 100.0);
+    }
+
+    #[test]
+    fn with_capacity_presizes_heap() {
+        let mut q: EventQueue<u32> = EventQueue::with_capacity(1000);
+        assert!(q.capacity() >= 1000);
+        for i in 0..1000 {
+            q.schedule_at(i as f64, i);
+        }
+        assert!(q.capacity() >= 1000);
+        assert_eq!(q.len(), 1000);
     }
 
     #[test]

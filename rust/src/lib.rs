@@ -17,8 +17,9 @@
 //!   the paper's contribution), [`scenario`] (the composable Scenario
 //!   API: N workload classes, pluggable service models, multi-node
 //!   routing), [`sim`] (the legacy single-scenario SLS, now a thin
-//!   wrapper over [`scenario`], Figs 6–7), [`runtime`] + [`server`]
-//!   (real PJRT-backed LLM serving path).
+//!   wrapper over [`scenario`], Figs 6–7), [`sweep`] (parallel
+//!   replication sweeps with exact merge reduction), [`runtime`] +
+//!   [`server`] (real PJRT-backed LLM serving path).
 //!
 //! Python/JAX/Pallas exist only on the build path (`make artifacts`);
 //! the serving hot path is pure Rust + PJRT.
@@ -37,6 +38,7 @@ pub mod runtime;
 pub mod scenario;
 pub mod server;
 pub mod sim;
+pub mod sweep;
 pub mod traffic;
 pub mod util;
 

@@ -1,0 +1,326 @@
+//! The cell's UE population behind a backlog index.
+//!
+//! [`UeBank`] owns the per-UE MAC state and maintains an **active set**
+//! — the indices of UEs with buffered bytes — so the slot scheduler
+//! iterates candidates in O(active) instead of O(population). The
+//! index is a swap-remove vector with a per-UE position table (O(1)
+//! insert/remove) plus a running total-backlog counter, giving the
+//! engine its "anything left to drain?" check in O(1).
+//!
+//! Invariants (see DESIGN.md §8):
+//! * `backlogged` contains exactly the UEs with `buffered_bytes() > 0`
+//!   (HARQ-blocked and SR-waiting UEs stay in; they are filtered per
+//!   slot by `grant_ready`, which is cheap).
+//! * `pos[i]` is the position of UE `i` in `backlogged`, or `NONE`.
+//! * `total_backlog` is the byte sum over all UE buffers.
+//!
+//! All buffer mutations must go through bank methods (`push_job_sdu`,
+//! `push_bg_sdu`, `drain_served`) so the index can never go stale;
+//! [`UeBank::ue_mut`] hands out the UE for scheduler state (HARQ, PF,
+//! SR) that does not move bytes.
+
+use crate::rng::Rng;
+
+use super::rlc::{Sdu, SduDelivered};
+use super::scheduler::UeMac;
+
+const NONE: u32 = u32::MAX;
+
+/// The UE population of one cell plus its backlog index.
+#[derive(Debug)]
+pub struct UeBank {
+    ues: Vec<UeMac>,
+    /// Indices of backlogged UEs, unordered (swap-remove).
+    backlogged: Vec<u32>,
+    /// `pos[i]` = index of UE `i` in `backlogged`, or `NONE`.
+    pos: Vec<u32>,
+    /// Total buffered bytes across the cell.
+    total_backlog: u64,
+}
+
+impl UeBank {
+    /// Build the bank (and its index) from an existing population —
+    /// UEs may already hold buffered SDUs.
+    pub fn new(ues: Vec<UeMac>) -> Self {
+        let mut bank = Self {
+            pos: vec![NONE; ues.len()],
+            backlogged: Vec::new(),
+            total_backlog: 0,
+            ues,
+        };
+        for i in 0..bank.ues.len() {
+            let bytes = bank.ues[i].buffered_bytes();
+            if bytes > 0 {
+                bank.pos[i] = bank.backlogged.len() as u32;
+                bank.backlogged.push(i as u32);
+                bank.total_backlog += bytes;
+            }
+        }
+        bank
+    }
+
+    pub fn len(&self) -> usize {
+        self.ues.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ues.is_empty()
+    }
+
+    pub fn ue(&self, i: usize) -> &UeMac {
+        &self.ues[i]
+    }
+
+    /// Mutable UE access for scheduler state (HARQ counters, PF
+    /// averages, SR timing). Must NOT be used to push or drain SDUs —
+    /// that would bypass the backlog index.
+    pub fn ue_mut(&mut self, i: usize) -> &mut UeMac {
+        &mut self.ues[i]
+    }
+
+    /// Number of UEs with buffered bytes.
+    pub fn n_backlogged(&self) -> usize {
+        self.backlogged.len()
+    }
+
+    /// Any bytes anywhere in the cell? O(1).
+    pub fn has_backlog(&self) -> bool {
+        !self.backlogged.is_empty()
+    }
+
+    /// Total buffered bytes across the cell. O(1).
+    pub fn total_backlog_bytes(&self) -> u64 {
+        self.total_backlog
+    }
+
+    /// Record a data arrival (SR bookkeeping; see
+    /// [`UeMac::note_arrival`]).
+    pub fn note_arrival(&mut self, i: usize, arrival_slot: u64, period: u64, proc_slots: u64) {
+        self.ues[i].note_arrival(arrival_slot, period, proc_slots);
+    }
+
+    /// Push a job SDU and index the UE as backlogged.
+    pub fn push_job_sdu(&mut self, i: usize, sdu: Sdu) {
+        let bytes = sdu.bytes_left as u64;
+        self.ues[i].push_job_sdu(sdu);
+        self.note_pushed(i, bytes);
+    }
+
+    /// Push a background SDU and index the UE as backlogged.
+    pub fn push_bg_sdu(&mut self, i: usize, sdu: Sdu) {
+        let bytes = sdu.bytes_left as u64;
+        self.ues[i].push_bg_sdu(sdu);
+        self.note_pushed(i, bytes);
+    }
+
+    /// Drain one granted transport block from UE `i`, appending
+    /// completed SDUs to `out` and unindexing the UE if its buffers
+    /// emptied. Returns the bytes drained.
+    pub fn drain_served(
+        &mut self,
+        i: usize,
+        budget: u32,
+        job_first: bool,
+        out: &mut Vec<SduDelivered>,
+    ) -> u64 {
+        let before = self.ues[i].buffered_bytes();
+        self.ues[i].drain_into(budget, job_first, out);
+        let after = self.ues[i].buffered_bytes();
+        let drained = before - after;
+        self.total_backlog -= drained;
+        if after == 0 && self.pos[i] != NONE {
+            self.remove(i);
+        }
+        drained
+    }
+
+    /// Collect this slot's grant candidates (backlogged + grant-ready)
+    /// into `out`, in ascending UE order. `dense` rebuilds the list by
+    /// scanning the whole population — the reference path the
+    /// active-set index must match exactly.
+    pub(crate) fn candidates_into(&self, slot: u64, dense: bool, out: &mut Vec<u32>) {
+        out.clear();
+        if dense {
+            for (i, ue) in self.ues.iter().enumerate() {
+                if ue.buffered_bytes() > 0 && ue.grant_ready(slot) {
+                    out.push(i as u32);
+                }
+            }
+        } else {
+            for &i in &self.backlogged {
+                debug_assert!(self.ues[i as usize].buffered_bytes() > 0);
+                if self.ues[i as usize].grant_ready(slot) {
+                    out.push(i);
+                }
+            }
+            // The index is unordered (swap-remove); candidates must be
+            // in ascending UE order so each consumes the same fading
+            // draw as under a dense scan.
+            out.sort_unstable();
+        }
+    }
+
+    fn note_pushed(&mut self, i: usize, bytes: u64) {
+        // A zero-byte SDU adds no backlog; indexing the UE anyway
+        // would desync the index from `buffered_bytes() > 0`.
+        if bytes == 0 {
+            return;
+        }
+        self.total_backlog += bytes;
+        if self.pos[i] == NONE {
+            self.pos[i] = self.backlogged.len() as u32;
+            self.backlogged.push(i as u32);
+        }
+    }
+
+    fn remove(&mut self, i: usize) {
+        let p = self.pos[i];
+        debug_assert!(p != NONE, "UE {i} not indexed");
+        let last = self.backlogged.pop().unwrap();
+        if last != i as u32 {
+            self.backlogged[p as usize] = last;
+            self.pos[last as usize] = p;
+        }
+        self.pos[i] = NONE;
+    }
+
+    /// Full index-consistency audit (test/debug use; O(population)).
+    pub fn check_invariants(&self) {
+        let mut total = 0u64;
+        for (i, ue) in self.ues.iter().enumerate() {
+            let bytes = ue.buffered_bytes();
+            total += bytes;
+            let indexed = self.pos[i] != NONE;
+            assert_eq!(
+                indexed,
+                bytes > 0,
+                "UE {i}: indexed={indexed} but buffered_bytes={bytes}"
+            );
+            if indexed {
+                assert_eq!(self.backlogged[self.pos[i] as usize], i as u32);
+            }
+        }
+        assert_eq!(total, self.total_backlog, "total-backlog counter drifted");
+        assert_eq!(
+            self.backlogged.len(),
+            self.pos.iter().filter(|&&p| p != NONE).count()
+        );
+    }
+}
+
+/// Drop a fresh population of `n` UEs with staggered SR phases (the
+/// engine's construction pattern).
+pub fn drop_ues(rng: &mut Rng, n: usize, r_min: f64, r_max: f64) -> Vec<UeMac> {
+    use crate::phy::channel::LargeScale;
+    (0..n)
+        .map(|i| UeMac::new(LargeScale::drop(rng, r_min, r_max)).with_sr_phase(i as u64))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mac::rlc::SduKind;
+
+    fn sdu(kind: SduKind, bytes: u32) -> Sdu {
+        Sdu { kind, total_bytes: bytes, bytes_left: bytes, t_arrival: 0.0 }
+    }
+
+    fn bank(n: usize) -> UeBank {
+        let mut rng = Rng::new(9);
+        UeBank::new(drop_ues(&mut rng, n, 35.0, 300.0))
+    }
+
+    #[test]
+    fn push_and_drain_maintain_index() {
+        let mut b = bank(4);
+        assert!(!b.has_backlog());
+        b.push_bg_sdu(2, sdu(SduKind::Background, 100));
+        b.push_job_sdu(0, sdu(SduKind::Job { job_id: 1 }, 50));
+        b.check_invariants();
+        assert_eq!(b.n_backlogged(), 2);
+        assert_eq!(b.total_backlog_bytes(), 150);
+
+        let mut out = Vec::new();
+        let drained = b.drain_served(2, 100, false, &mut out);
+        assert_eq!(drained, 100);
+        assert_eq!(out.len(), 1);
+        b.check_invariants();
+        assert_eq!(b.n_backlogged(), 1);
+        assert_eq!(b.total_backlog_bytes(), 50);
+
+        // partial drain keeps the UE indexed
+        let drained = b.drain_served(0, 20, true, &mut out);
+        assert_eq!(drained, 20);
+        b.check_invariants();
+        assert!(b.has_backlog());
+        b.drain_served(0, 30, true, &mut out);
+        b.check_invariants();
+        assert!(!b.has_backlog());
+        assert_eq!(b.total_backlog_bytes(), 0);
+    }
+
+    #[test]
+    fn new_indexes_preloaded_ues() {
+        let mut rng = Rng::new(3);
+        let mut ues = drop_ues(&mut rng, 3, 35.0, 300.0);
+        ues[1].push_bg_sdu(sdu(SduKind::Background, 77));
+        let b = UeBank::new(ues);
+        b.check_invariants();
+        assert_eq!(b.n_backlogged(), 1);
+        assert_eq!(b.total_backlog_bytes(), 77);
+    }
+
+    #[test]
+    fn candidates_sorted_and_match_dense() {
+        let mut b = bank(8);
+        // push in a scrambled order so the swap-remove index is unordered
+        for i in [5usize, 1, 7, 3] {
+            b.push_bg_sdu(i, sdu(SduKind::Background, 10 + i as u32));
+        }
+        let mut active = Vec::new();
+        let mut dense = Vec::new();
+        b.candidates_into(0, false, &mut active);
+        b.candidates_into(0, true, &mut dense);
+        assert_eq!(active, dense);
+        assert_eq!(active, vec![1, 3, 5, 7]);
+        // drain one empty → both paths drop it
+        let mut out = Vec::new();
+        b.drain_served(3, 1000, false, &mut out);
+        b.candidates_into(0, false, &mut active);
+        b.candidates_into(0, true, &mut dense);
+        assert_eq!(active, dense);
+        assert_eq!(active, vec![1, 5, 7]);
+    }
+
+    #[test]
+    fn drain_of_empty_ue_is_a_safe_noop() {
+        // drain_served on an unindexed UE (zero backlog) must not
+        // touch the index or underflow the counter.
+        let mut b = bank(2);
+        let mut out = Vec::new();
+        assert_eq!(b.drain_served(1, 100, false, &mut out), 0);
+        assert!(out.is_empty());
+        b.check_invariants();
+        // and zero-byte budget on an indexed UE keeps it indexed
+        b.push_bg_sdu(0, sdu(SduKind::Background, 40));
+        assert_eq!(b.drain_served(0, 0, false, &mut out), 0);
+        assert!(b.has_backlog());
+        b.check_invariants();
+    }
+
+    #[test]
+    fn swap_remove_keeps_positions_consistent() {
+        let mut b = bank(6);
+        for i in 0..6 {
+            b.push_bg_sdu(i, sdu(SduKind::Background, 10));
+        }
+        let mut out = Vec::new();
+        // remove from the middle, the front, and the back
+        for i in [2usize, 0, 5, 3, 1, 4] {
+            b.drain_served(i, 1000, false, &mut out);
+            b.check_invariants();
+        }
+        assert!(!b.has_backlog());
+    }
+}

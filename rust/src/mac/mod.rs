@@ -1,11 +1,16 @@
 //! L2 protocol substrate of the SLS: RLC buffering/segmentation, HARQ,
-//! and the slot-level uplink scheduler with ICC's job-aware packet
+//! the UE population behind its backlog index ([`UeBank`]), and the
+//! slot-level uplink scheduler with ICC's job-aware packet
 //! prioritization.
 
+pub mod bank;
 pub mod harq;
 pub mod rlc;
 pub mod scheduler;
 
+pub use bank::{drop_ues, UeBank};
 pub use harq::HarqConfig;
 pub use rlc::{RlcBuffer, Sdu, SduDelivered, SduKind};
-pub use scheduler::{GrantResult, MacConfig, SchedulingPolicy, UeMac, UlScheduler};
+pub use scheduler::{
+    GrantResult, MacConfig, SchedulingPolicy, SlotWorkspace, UeMac, UlScheduler,
+};

@@ -78,24 +78,34 @@ impl RlcBuffer {
     /// Drain up to `budget` bytes (one transport block), returning the
     /// SDUs that *completed* within this TB. Partially-sent SDUs stay
     /// at the head with reduced `bytes_left` (RLC segmentation).
-    pub fn drain(&mut self, mut budget: u32) -> Vec<SduDelivered> {
+    pub fn drain(&mut self, budget: u32) -> Vec<SduDelivered> {
         let mut done = Vec::new();
+        self.drain_into(budget, &mut done);
+        done
+    }
+
+    /// Allocation-free [`RlcBuffer::drain`]: completed SDUs are appended
+    /// to `out` (a per-slot buffer reused across calls). Returns the
+    /// number of bytes drained from the buffer.
+    pub fn drain_into(&mut self, mut budget: u32, out: &mut Vec<SduDelivered>) -> u32 {
+        let mut drained = 0u32;
         while budget > 0 {
             let Some(front) = self.queue.front_mut() else { break };
             let take = front.bytes_left.min(budget);
             front.bytes_left -= take;
             budget -= take;
+            drained += take;
             self.bytes -= take as u64;
             if front.bytes_left == 0 {
                 let sdu = self.queue.pop_front().unwrap();
-                done.push(SduDelivered {
+                out.push(SduDelivered {
                     kind: sdu.kind,
                     total_bytes: sdu.total_bytes,
                     t_arrival: sdu.t_arrival,
                 });
             }
         }
-        done
+        drained
     }
 }
 

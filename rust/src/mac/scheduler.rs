@@ -12,6 +12,7 @@ use crate::phy::link::{mean_sinr_db, sinr_to_cqi, tbs_bytes, PowerControl, Recei
 use crate::phy::numerology::Carrier;
 use crate::rng::Rng;
 
+use super::bank::UeBank;
 use super::harq::HarqConfig;
 use super::rlc::{RlcBuffer, Sdu, SduDelivered, SduKind};
 
@@ -43,6 +44,12 @@ pub struct MacConfig {
     pub sr_slots_per_ue: f64,
     /// gNB processing delay between SR reception and the first grant.
     pub grant_proc_slots: u64,
+    /// Debug/reference mode: scan the full UE population for
+    /// candidates every slot (the pre-active-set behaviour) instead of
+    /// consulting the [`UeBank`] backlog index. The two paths must
+    /// produce identical schedules — the `active_set_matches_dense`
+    /// property test asserts it.
+    pub dense_scan: bool,
 }
 
 impl MacConfig {
@@ -73,6 +80,7 @@ impl Default for MacConfig {
             sr_period_slots: 4,
             sr_slots_per_ue: 0.25,
             grant_proc_slots: 2,
+            dense_scan: false,
         }
     }
 }
@@ -81,10 +89,18 @@ impl Default for MacConfig {
 #[derive(Debug)]
 pub struct UeMac {
     pub link: LargeScale,
-    pub job_buf: RlcBuffer,
-    pub bg_buf: RlcBuffer,
-    /// PF throughput EWMA (bytes/slot).
+    /// Crate-private: byte-moving access goes through [`UeBank`] so
+    /// the backlog index stays in sync.
+    pub(crate) job_buf: RlcBuffer,
+    pub(crate) bg_buf: RlcBuffer,
+    /// PF throughput EWMA (bytes/slot). Lazily decayed: the stored
+    /// value reflects updates through slot `pf_next_slot - 1`; missed
+    /// zero-traffic slots are applied in closed form on touch (see
+    /// [`UeMac::pf_avg`]), so idle UEs cost nothing per slot.
     avg_thpt: f64,
+    /// First slot whose PF update (decay or goodput sample) has not
+    /// yet been folded into `avg_thpt`.
+    pf_next_slot: u64,
     /// HARQ attempt counter of the pending TB (0 = fresh data).
     harq_attempt: u8,
     /// Slot index before which this UE cannot be scheduled (HARQ RTT).
@@ -104,6 +120,7 @@ impl UeMac {
             job_buf: RlcBuffer::new(),
             bg_buf: RlcBuffer::new(),
             avg_thpt: 1.0,
+            pf_next_slot: 0,
             harq_attempt: 0,
             blocked_until: 0,
             grant_ready_slot: 0,
@@ -150,12 +167,16 @@ impl UeMac {
         self.grant_ready_slot <= slot && self.blocked_until <= slot
     }
 
-    pub fn push_job_sdu(&mut self, sdu: Sdu) {
+    /// Crate-private: byte-moving pushes must go through
+    /// [`UeBank::push_job_sdu`] so the backlog index stays in sync
+    /// (only [`UeBank::new`] may see pre-loaded buffers).
+    pub(crate) fn push_job_sdu(&mut self, sdu: Sdu) {
         debug_assert!(matches!(sdu.kind, SduKind::Job { .. }));
         self.job_buf.push(sdu);
     }
 
-    pub fn push_bg_sdu(&mut self, sdu: Sdu) {
+    /// Crate-private: see [`UeMac::push_job_sdu`].
+    pub(crate) fn push_bg_sdu(&mut self, sdu: Sdu) {
         debug_assert!(sdu.kind == SduKind::Background);
         self.bg_buf.push(sdu);
     }
@@ -168,11 +189,39 @@ impl UeMac {
         !self.job_buf.is_empty()
     }
 
-    /// Drain `budget` bytes. With `job_first`, job SDUs preempt
-    /// background; otherwise strict arrival-time FIFO across both
-    /// logical channels (the 5G-baseline single-queue behaviour).
-    fn drain(&mut self, mut budget: u32, job_first: bool) -> Vec<SduDelivered> {
-        let mut out = Vec::new();
+    /// PF average through slot `slot - 1`: applies the closed-form
+    /// catch-up `avg · decay^Δ` for the Δ zero-traffic slots since the
+    /// last update (`decay = 1 − 1/pf_window`). Equivalent to the
+    /// eager per-slot EWMA decay `avg += (0 − avg)/W` the dense
+    /// scheduler used to run over the whole population, but paid only
+    /// by UEs that are actually touched.
+    pub(crate) fn pf_avg(&mut self, slot: u64, decay: f64) -> f64 {
+        let missed = slot.saturating_sub(self.pf_next_slot);
+        if missed > 0 {
+            // powi saturates the exponent; past ~2^31 missed slots the
+            // factor has long underflowed to 0 anyway.
+            self.avg_thpt *= decay.powi(missed.min(i32::MAX as u64) as i32);
+            self.pf_next_slot = slot;
+        }
+        self.avg_thpt
+    }
+
+    /// Fold the slot-`slot` goodput sample into the PF EWMA (the
+    /// served-UE update; a HARQ-failed grant samples goodput 0).
+    pub(crate) fn pf_note_served(&mut self, slot: u64, goodput: f64, window: f64) {
+        self.avg_thpt += (goodput - self.avg_thpt) / window;
+        self.pf_next_slot = slot + 1;
+    }
+
+    /// Drain `budget` bytes into `out`. With `job_first`, job SDUs
+    /// preempt background; otherwise strict arrival-time FIFO across
+    /// both logical channels (the 5G-baseline single-queue behaviour).
+    pub(crate) fn drain_into(
+        &mut self,
+        mut budget: u32,
+        job_first: bool,
+        out: &mut Vec<SduDelivered>,
+    ) {
         while budget > 0 {
             let use_job = if job_first {
                 if !self.job_buf.is_empty() {
@@ -191,27 +240,60 @@ impl UeMac {
                 }
             };
             let buf = if use_job { &mut self.job_buf } else { &mut self.bg_buf };
-            let before = buf.bytes();
-            out.extend(buf.drain(budget));
-            let used = (before - buf.bytes()) as u32;
+            let used = buf.drain_into(budget, out);
             if used == 0 {
                 break;
             }
             budget -= used;
         }
-        out
     }
 }
 
-/// Outcome of one scheduled UE in one slot.
-#[derive(Debug)]
+/// Outcome of one scheduled UE in one slot. Delivered SDUs live in the
+/// slot's shared [`SlotWorkspace::delivered`] buffer; `delivered` is
+/// the grant's `[start, end)` range into it (empty if HARQ failed) —
+/// read it via [`SlotWorkspace::delivered_of`].
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct GrantResult {
     pub ue: usize,
     pub n_prb: u32,
     pub tb_bytes: u32,
     pub harq_ok: bool,
-    /// SDUs that completed in this slot (empty if HARQ failed).
+    pub delivered: (u32, u32),
+}
+
+/// Per-slot scheduling buffers, reused across slots so the hot path
+/// allocates nothing after warm-up: candidate indices, the sort keys,
+/// the grant list, and the flat delivered-SDU buffer all keep their
+/// capacity between [`UlScheduler::schedule_slot`] calls.
+#[derive(Debug, Default)]
+pub struct SlotWorkspace {
+    /// Grants issued this slot, in allocation order.
+    pub grants: Vec<GrantResult>,
+    /// SDUs delivered this slot, in grant order (drain order within a
+    /// grant). Upper layers that don't need per-grant attribution can
+    /// iterate this flat list directly.
     pub delivered: Vec<SduDelivered>,
+    cand: Vec<u32>,
+    keyed: Vec<(bool, f64, u8, u32)>,
+}
+
+impl SlotWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The delivered SDUs of one grant.
+    pub fn delivered_of(&self, g: &GrantResult) -> &[SduDelivered] {
+        &self.delivered[g.delivered.0 as usize..g.delivered.1 as usize]
+    }
+
+    fn clear(&mut self) {
+        self.grants.clear();
+        self.delivered.clear();
+        self.cand.clear();
+        self.keyed.clear();
+    }
 }
 
 /// The gNB uplink scheduler.
@@ -235,24 +317,34 @@ impl UlScheduler {
         sinr_to_cqi(mean + fade_db)
     }
 
-    /// Schedule one slot. Mutates UE buffers/HARQ state; returns the
-    /// per-UE grant outcomes (delivered SDUs drive the upper layers).
+    /// Schedule one slot. Mutates UE buffers/HARQ state through the
+    /// bank; grant outcomes and delivered SDUs land in `ws` (buffers
+    /// reused across slots — the hot path allocates nothing once the
+    /// workspace is warm).
+    ///
+    /// Cost is O(k log k) in the number of *candidates* k (backlogged,
+    /// grant-ready UEs), not the cell population: candidates come from
+    /// the bank's backlog index and PF averages decay lazily in closed
+    /// form on touch. With `cfg.dense_scan` the candidate list is
+    /// instead rebuilt by a full population scan (the reference path —
+    /// both must produce identical schedules).
     pub fn schedule_slot(
         &self,
         slot: u64,
-        ues: &mut [UeMac],
+        bank: &mut UeBank,
         rng: &mut Rng,
-    ) -> Vec<GrantResult> {
-        // 1. Candidates: backlogged + not HARQ-blocked + SR cycle done.
-        let mut cand: Vec<usize> = (0..ues.len())
-            .filter(|&i| ues[i].buffered_bytes() > 0 && ues[i].grant_ready(slot))
-            .collect();
-        if cand.is_empty() {
-            for ue in ues.iter_mut() {
-                ue.avg_thpt += (0.0 - ue.avg_thpt) / self.cfg.pf_window;
-            }
-            return Vec::new();
+        ws: &mut SlotWorkspace,
+    ) {
+        ws.clear();
+        // 1. Candidates: backlogged + not HARQ-blocked + SR cycle done,
+        //    in ascending UE order (the order fixes which fast-fading
+        //    draw each candidate consumes, so index and dense scans
+        //    must agree on it).
+        bank.candidates_into(slot, self.cfg.dense_scan, &mut ws.cand);
+        if ws.cand.is_empty() {
+            return;
         }
+        let decay = 1.0 - 1.0 / self.cfg.pf_window;
 
         // 2. Order: job-bearing UEs strictly first if prioritization is
         //    on; PF (rate / avg) or RR (least-recently-served) inside
@@ -260,24 +352,24 @@ impl UlScheduler {
         //    (one fast-fading realization per UE per slot) and reused
         //    for the grant — both faster and statistically consistent
         //    (the grant uses the SINR the metric ranked).
-        let mut keyed: Vec<(bool, f64, u8, usize)> = cand
-            .drain(..)
-            .map(|i| {
-                let has_job = self.cfg.job_priority && ues[i].has_job_bytes();
-                let cqi = self.slot_cqi(&ues[i], 8, rng);
-                let metric = match self.cfg.policy {
-                    SchedulingPolicy::ProportionalFair => {
-                        let inst = tbs_bytes(&self.carrier, cqi, 1) as f64;
-                        inst / ues[i].avg_thpt.max(1e-9)
-                    }
-                    // older service time → larger metric
-                    SchedulingPolicy::RoundRobin => -(ues[i].last_served_slot as f64),
-                };
-                (has_job, metric, cqi, i)
-            })
-            .collect();
+        for &iu in &ws.cand {
+            let i = iu as usize;
+            let has_job = self.cfg.job_priority && bank.ue(i).has_job_bytes();
+            let cqi = self.slot_cqi(bank.ue(i), 8, rng);
+            let metric = match self.cfg.policy {
+                SchedulingPolicy::ProportionalFair => {
+                    let inst = tbs_bytes(&self.carrier, cqi, 1) as f64;
+                    inst / bank.ue_mut(i).pf_avg(slot, decay).max(1e-9)
+                }
+                // older service time → larger metric
+                SchedulingPolicy::RoundRobin => {
+                    -(bank.ue(i).last_served_slot as f64)
+                }
+            };
+            ws.keyed.push((has_job, metric, cqi, iu));
+        }
         // job class first, then metric descending, index as tiebreak
-        keyed.sort_by(|a, b| {
+        ws.keyed.sort_by(|a, b| {
             b.0.cmp(&a.0)
                 .then(b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal))
                 .then(a.3.cmp(&b.3))
@@ -285,9 +377,8 @@ impl UlScheduler {
 
         // 3. Greedy PRB allocation down the ordered list.
         let mut remaining = self.carrier.n_prb;
-        let mut results = Vec::new();
-        let mut served = vec![false; ues.len()];
-        for (_, _, cqi, i) in keyed {
+        for &(_, _, cqi, iu) in &ws.keyed {
+            let i = iu as usize;
             if remaining == 0 {
                 break;
             }
@@ -295,7 +386,7 @@ impl UlScheduler {
                 continue; // outage this slot
             }
             let per_prb = tbs_bytes(&self.carrier, cqi, 1).max(1);
-            let want = ues[i].buffered_bytes().min(u32::MAX as u64) as u32;
+            let want = bank.ue(i).buffered_bytes().min(u32::MAX as u64) as u32;
             let mut n_prb = want.div_ceil(per_prb);
             if self.cfg.max_prb_per_ue > 0 {
                 n_prb = n_prb.min(self.cfg.max_prb_per_ue);
@@ -305,38 +396,45 @@ impl UlScheduler {
             let tb = tbs_bytes(&self.carrier, cqi, n_prb);
 
             // 4. HARQ outcome.
-            let attempt = ues[i].harq_attempt;
+            let attempt = bank.ue(i).harq_attempt;
             let ok = self.cfg.harq.transmit_ok(rng, attempt);
-            let delivered = if ok {
-                ues[i].harq_attempt = 0;
-                ues[i].drain(tb, self.cfg.job_priority)
+            let d_start = ws.delivered.len() as u32;
+            if ok {
+                bank.ue_mut(i).harq_attempt = 0;
+                bank.drain_served(i, tb, self.cfg.job_priority, &mut ws.delivered);
             } else {
-                ues[i].harq_attempt = attempt.saturating_add(1);
-                ues[i].blocked_until = slot + self.cfg.harq.rtt_slots as u64;
-                Vec::new()
-            };
-            let goodput: u32 = if ok { tb.min(want) } else { 0 };
-            served[i] = true;
-            ues[i].last_served_slot = slot;
-            // PF EWMA update for the served UE
-            let ue = &mut ues[i];
-            ue.avg_thpt += (goodput as f64 - ue.avg_thpt) / self.cfg.pf_window;
-            results.push(GrantResult { ue: i, n_prb, tb_bytes: tb, harq_ok: ok, delivered });
-        }
-        // PF EWMA decay for everyone not served this slot.
-        for (i, ue) in ues.iter_mut().enumerate() {
-            if !served[i] {
-                ue.avg_thpt += (0.0 - ue.avg_thpt) / self.cfg.pf_window;
+                let ue = bank.ue_mut(i);
+                ue.harq_attempt = attempt.saturating_add(1);
+                ue.blocked_until = slot + self.cfg.harq.rtt_slots as u64;
             }
+            let d_end = ws.delivered.len() as u32;
+            let goodput: u32 = if ok { tb.min(want) } else { 0 };
+            // PF EWMA update for the served UE (goodput 0 on HARQ
+            // failure — the same zero-sample the decay would apply).
+            let ue = bank.ue_mut(i);
+            ue.last_served_slot = slot;
+            ue.pf_avg(slot, decay);
+            ue.pf_note_served(slot, goodput as f64, self.cfg.pf_window);
+            ws.grants.push(GrantResult {
+                ue: i,
+                n_prb,
+                tb_bytes: tb,
+                harq_ok: ok,
+                delivered: (d_start, d_end),
+            });
         }
-        results
+        // Unserved candidates (and every idle UE) decay lazily: their
+        // pending zero-traffic slots are folded in on the next touch.
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mac::bank::drop_ues;
     use crate::phy::channel::Position;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
 
     fn ls(d: f64) -> LargeScale {
         LargeScale { pos: Position { x: d, y: 0.0 }, los: true, shadow_db: 0.0 }
@@ -359,46 +457,55 @@ mod tests {
         UlScheduler::new(cfg, Carrier::table1())
     }
 
+    fn bank_of(ues: Vec<UeMac>) -> UeBank {
+        UeBank::new(ues)
+    }
+
     #[test]
     fn empty_ues_no_grants() {
         let s = sched(false);
-        let mut ues = vec![UeMac::new(ls(100.0))];
+        let mut bank = bank_of(vec![UeMac::new(ls(100.0))]);
         let mut rng = Rng::new(1);
-        assert!(s.schedule_slot(0, &mut ues, &mut rng).is_empty());
+        let mut ws = SlotWorkspace::new();
+        s.schedule_slot(0, &mut bank, &mut rng, &mut ws);
+        assert!(ws.grants.is_empty());
     }
 
     #[test]
     fn single_ue_small_sdu_delivered_in_one_slot() {
         let s = sched(false);
-        let mut ues = vec![UeMac::new(ls(80.0))];
-        ues[0].push_job_sdu(job_sdu(1, 600, 0.0));
+        let mut bank = bank_of(vec![UeMac::new(ls(80.0))]);
+        bank.push_job_sdu(0, job_sdu(1, 600, 0.0));
         let mut rng = Rng::new(2);
-        let res = s.schedule_slot(0, &mut ues, &mut rng);
-        assert_eq!(res.len(), 1);
-        assert!(res[0].harq_ok);
-        assert_eq!(res[0].delivered.len(), 1);
-        assert_eq!(ues[0].buffered_bytes(), 0);
+        let mut ws = SlotWorkspace::new();
+        s.schedule_slot(0, &mut bank, &mut rng, &mut ws);
+        assert_eq!(ws.grants.len(), 1);
+        assert!(ws.grants[0].harq_ok);
+        assert_eq!(ws.delivered_of(&ws.grants[0]).len(), 1);
+        assert_eq!(bank.ue(0).buffered_bytes(), 0);
+        assert!(!bank.has_backlog());
+        bank.check_invariants();
     }
 
     #[test]
     fn job_priority_preempts_background_within_ue() {
         // Large bg SDU arrived first; with priority on, the job SDU
         // must still complete first.
-        let mut ues = vec![UeMac::new(ls(250.0))];
-        ues[0].push_bg_sdu(bg_sdu(200_000, 0.0));
-        ues[0].push_job_sdu(job_sdu(9, 600, 1.0));
+        let mut bank = bank_of(vec![UeMac::new(ls(250.0))]);
+        bank.push_bg_sdu(0, bg_sdu(200_000, 0.0));
+        bank.push_job_sdu(0, job_sdu(9, 600, 1.0));
         let s = sched(true);
         let mut rng = Rng::new(3);
+        let mut ws = SlotWorkspace::new();
         let mut job_done_slot = None;
         let mut bg_done_slot = None;
         for slot in 0..2000 {
-            for r in s.schedule_slot(slot, &mut ues, &mut rng) {
-                for d in &r.delivered {
-                    match d.kind {
-                        SduKind::Job { .. } => job_done_slot.get_or_insert(slot),
-                        SduKind::Background => bg_done_slot.get_or_insert(slot),
-                    };
-                }
+            s.schedule_slot(slot, &mut bank, &mut rng, &mut ws);
+            for d in &ws.delivered {
+                match d.kind {
+                    SduKind::Job { .. } => job_done_slot.get_or_insert(slot),
+                    SduKind::Background => bg_done_slot.get_or_insert(slot),
+                };
             }
             if job_done_slot.is_some() && bg_done_slot.is_some() {
                 break;
@@ -411,18 +518,18 @@ mod tests {
     #[test]
     fn fifo_baseline_respects_arrival_order() {
         // Without prioritization the earlier bg SDU completes first.
-        let mut ues = vec![UeMac::new(ls(250.0))];
-        ues[0].push_bg_sdu(bg_sdu(60_000, 0.0));
-        ues[0].push_job_sdu(job_sdu(9, 600, 1.0));
+        let mut bank = bank_of(vec![UeMac::new(ls(250.0))]);
+        bank.push_bg_sdu(0, bg_sdu(60_000, 0.0));
+        bank.push_job_sdu(0, job_sdu(9, 600, 1.0));
         let s = sched(false);
         let mut rng = Rng::new(4);
+        let mut ws = SlotWorkspace::new();
         let mut first_done = None;
-        'outer: for slot in 0..2000 {
-            for r in s.schedule_slot(slot, &mut ues, &mut rng) {
-                if let Some(d) = r.delivered.first() {
-                    first_done = Some(d.kind);
-                    break 'outer;
-                }
+        for slot in 0..2000 {
+            s.schedule_slot(slot, &mut bank, &mut rng, &mut ws);
+            if let Some(d) = ws.delivered.first() {
+                first_done = Some(d.kind);
+                break;
             }
         }
         assert_eq!(first_done.unwrap(), SduKind::Background);
@@ -431,18 +538,17 @@ mod tests {
     #[test]
     fn prb_budget_respected() {
         let s = sched(false);
-        let mut ues: Vec<UeMac> = (0..40)
-            .map(|i| {
-                let mut ue = UeMac::new(ls(50.0 + 6.0 * i as f64));
-                ue.push_bg_sdu(bg_sdu(1_000_000, 0.0));
-                ue
-            })
-            .collect();
+        let mut bank = bank_of((0..40).map(|i| UeMac::new(ls(50.0 + 6.0 * i as f64))).collect());
+        for i in 0..40 {
+            bank.push_bg_sdu(i, bg_sdu(1_000_000, 0.0));
+        }
         let mut rng = Rng::new(5);
-        let res = s.schedule_slot(0, &mut ues, &mut rng);
-        let total: u32 = res.iter().map(|r| r.n_prb).sum();
+        let mut ws = SlotWorkspace::new();
+        s.schedule_slot(0, &mut bank, &mut rng, &mut ws);
+        let total: u32 = ws.grants.iter().map(|r| r.n_prb).sum();
         assert!(total <= Carrier::table1().n_prb, "total = {total}");
-        assert!(!res.is_empty());
+        assert!(!ws.grants.is_empty());
+        bank.check_invariants();
     }
 
     #[test]
@@ -452,16 +558,20 @@ mod tests {
             ..Default::default()
         };
         let s = UlScheduler::new(cfg, Carrier::table1());
-        let mut ues = vec![UeMac::new(ls(80.0))];
-        ues[0].push_job_sdu(job_sdu(1, 500, 0.0));
+        let mut bank = bank_of(vec![UeMac::new(ls(80.0))]);
+        bank.push_job_sdu(0, job_sdu(1, 500, 0.0));
         let mut rng = Rng::new(6);
-        let res = s.schedule_slot(0, &mut ues, &mut rng);
-        assert!(!res[0].harq_ok);
-        assert_eq!(ues[0].buffered_bytes(), 500);
+        let mut ws = SlotWorkspace::new();
+        s.schedule_slot(0, &mut bank, &mut rng, &mut ws);
+        assert!(!ws.grants[0].harq_ok);
+        assert!(ws.delivered_of(&ws.grants[0]).is_empty());
+        assert_eq!(bank.ue(0).buffered_bytes(), 500);
+        assert!(bank.has_backlog(), "failed TB must stay indexed");
         // blocked for RTT slots
-        assert!(s.schedule_slot(1, &mut ues, &mut rng).is_empty());
-        assert!(s.schedule_slot(3, &mut ues, &mut rng).is_empty());
-        assert!(!s.schedule_slot(4, &mut ues, &mut rng).is_empty());
+        for (slot, expect_grant) in [(1, false), (3, false), (4, true)] {
+            s.schedule_slot(slot, &mut bank, &mut rng, &mut ws);
+            assert_eq!(!ws.grants.is_empty(), expect_grant, "slot {slot}");
+        }
     }
 
     #[test]
@@ -469,16 +579,18 @@ mod tests {
         // Two backlogged UEs at different distances must both be served
         // over a window (PF fairness), not starved.
         let s = sched(false);
-        let mut ues = vec![UeMac::new(ls(60.0)), UeMac::new(ls(280.0))];
+        let mut bank = bank_of(vec![UeMac::new(ls(60.0)), UeMac::new(ls(280.0))]);
         let mut served = [0u32; 2];
         let mut rng = Rng::new(7);
+        let mut ws = SlotWorkspace::new();
         for slot in 0..400 {
-            for ue in ues.iter_mut() {
-                if ue.buffered_bytes() < 10_000 {
-                    ue.push_bg_sdu(bg_sdu(50_000, slot as f64 * 0.00025));
+            for i in 0..2 {
+                if bank.ue(i).buffered_bytes() < 10_000 {
+                    bank.push_bg_sdu(i, bg_sdu(50_000, slot as f64 * 0.00025));
                 }
             }
-            for r in s.schedule_slot(slot, &mut ues, &mut rng) {
+            s.schedule_slot(slot, &mut bank, &mut rng, &mut ws);
+            for r in &ws.grants {
                 served[r.ue] += r.n_prb;
             }
         }
@@ -496,11 +608,112 @@ mod tests {
             ..Default::default()
         };
         let s = UlScheduler::new(cfg, Carrier::table1());
-        let mut ues = vec![UeMac::new(ls(50.0)), UeMac::new(ls(200.0))];
-        ues[0].push_bg_sdu(bg_sdu(500_000, 0.0));
-        ues[1].push_job_sdu(job_sdu(1, 600, 0.0));
+        let mut bank = bank_of(vec![UeMac::new(ls(50.0)), UeMac::new(ls(200.0))]);
+        bank.push_bg_sdu(0, bg_sdu(500_000, 0.0));
+        bank.push_job_sdu(1, job_sdu(1, 600, 0.0));
         let mut rng = Rng::new(8);
-        let res = s.schedule_slot(0, &mut ues, &mut rng);
-        assert_eq!(res[0].ue, 1, "job UE must be granted first");
+        let mut ws = SlotWorkspace::new();
+        s.schedule_slot(0, &mut bank, &mut rng, &mut ws);
+        assert_eq!(ws.grants[0].ue, 1, "job UE must be granted first");
+    }
+
+    #[test]
+    fn lazy_pf_decay_matches_closed_form() {
+        let mut ue = UeMac::new(ls(100.0));
+        let decay = 1.0 - 1.0 / 100.0;
+        // served at slot 0 with goodput 500
+        ue.pf_avg(0, decay);
+        ue.pf_note_served(0, 500.0, 100.0);
+        let after_serve = 1.0 + (500.0 - 1.0) / 100.0;
+        // touched again at slot 11 → 10 idle slots (1..=10) decayed
+        let avg = ue.pf_avg(11, decay);
+        assert!((avg - after_serve * decay.powi(10)).abs() < 1e-12, "avg = {avg}");
+        // idempotent within the slot
+        assert_eq!(avg.to_bits(), ue.pf_avg(11, decay).to_bits());
+    }
+
+    /// One scripted cell driven slot-by-slot: arrivals, HARQ losses,
+    /// SR waits, drains. The active-set index path and the dense
+    /// full-population scan must produce identical grant streams and
+    /// identical final UE state.
+    #[test]
+    fn active_set_matches_dense() {
+        check(25, |g| {
+            let n_ues = g.usize_range(1, 10);
+            let seed = g.u64_below(10_000);
+            let bler = g.f64_range(0.0, 0.5);
+            let job_priority = g.bool(0.5);
+            let n_slots: u64 = 300;
+
+            let mk_cfg = |dense_scan: bool| MacConfig {
+                job_priority,
+                harq: HarqConfig { bler, ..Default::default() },
+                dense_scan,
+                ..Default::default()
+            };
+            let mut drop_rng = Rng::new(seed);
+            let ues = drop_ues(&mut drop_rng, n_ues, 35.0, 300.0);
+            let mut drop_rng2 = Rng::new(seed);
+            let ues2 = drop_ues(&mut drop_rng2, n_ues, 35.0, 300.0);
+
+            let active = UlScheduler::new(mk_cfg(false), Carrier::table1());
+            let dense = UlScheduler::new(mk_cfg(true), Carrier::table1());
+            let mut bank_a = UeBank::new(ues);
+            let mut bank_d = UeBank::new(ues2);
+            let mut rng_a = Rng::new(seed ^ 0xA);
+            let mut rng_d = Rng::new(seed ^ 0xA);
+            let mut arrivals = Rng::new(seed ^ 0xB);
+            let (mut ws_a, mut ws_d) = (SlotWorkspace::new(), SlotWorkspace::new());
+            let period = active.cfg.effective_sr_period(n_ues as u32);
+            let proc = active.cfg.grant_proc_slots;
+
+            for slot in 0..n_slots {
+                // identical scripted arrivals into both banks
+                for ue in 0..n_ues {
+                    if arrivals.bernoulli(0.05) {
+                        let bytes = 50 + arrivals.below(5_000) as u32;
+                        let job = arrivals.bernoulli(0.4);
+                        let t = slot as f64 * 0.00025;
+                        for (bank, expedite) in
+                            [(&mut bank_a, job_priority), (&mut bank_d, job_priority)]
+                        {
+                            bank.note_arrival(ue, slot, period, proc);
+                            if job {
+                                if expedite {
+                                    bank.ue_mut(ue).note_job_arrival_expedited(slot, proc);
+                                }
+                                bank.push_job_sdu(ue, job_sdu(slot, bytes, t));
+                            } else {
+                                bank.push_bg_sdu(ue, bg_sdu(bytes, t));
+                            }
+                        }
+                    }
+                }
+                active.schedule_slot(slot, &mut bank_a, &mut rng_a, &mut ws_a);
+                dense.schedule_slot(slot, &mut bank_d, &mut rng_d, &mut ws_d);
+                prop_assert!(
+                    ws_a.grants == ws_d.grants,
+                    "slot {slot}: grants diverged\n  active: {:?}\n  dense:  {:?}",
+                    ws_a.grants,
+                    ws_d.grants
+                );
+                prop_assert!(
+                    ws_a.delivered.len() == ws_d.delivered.len(),
+                    "slot {slot}: delivered count diverged"
+                );
+                bank_a.check_invariants();
+            }
+            for i in 0..n_ues {
+                prop_assert!(
+                    bank_a.ue(i).buffered_bytes() == bank_d.ue(i).buffered_bytes(),
+                    "UE {i} final backlog diverged"
+                );
+            }
+            prop_assert!(
+                bank_a.total_backlog_bytes() == bank_d.total_backlog_bytes(),
+                "total backlog diverged"
+            );
+            Ok(())
+        });
     }
 }

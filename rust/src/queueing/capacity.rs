@@ -59,6 +59,36 @@ pub fn service_capacity(
     CapacityResult { lambda_star: lo, p_at_star: p_lo, evals }
 }
 
+/// [`service_capacity`] with replication-averaged probes: each
+/// bisection probe evaluates `p(λ, seed)` for every seed (in parallel
+/// over `threads` worker threads; 0 = all cores) and bisects on the
+/// seed-mean.
+///
+/// Simulation-backed satisfaction curves are noisy per replication;
+/// probing the *same* seed set at every λ keeps the averaged curve
+/// monotone in expectation and the bisection deterministic — the probe
+/// sequence (and hence `evals`) is identical for any thread count,
+/// because the mean is reduced in fixed seed order.
+pub fn service_capacity_replicated(
+    p: impl Fn(f64, u64) -> f64 + Sync,
+    seeds: &[u64],
+    threads: usize,
+    alpha: f64,
+    lambda_max: f64,
+    tol: f64,
+) -> CapacityResult {
+    assert!(!seeds.is_empty(), "need at least one replication seed");
+    service_capacity(
+        |l| {
+            let vals = crate::sweep::run_parallel(seeds, threads, |&s| p(l, s));
+            vals.iter().sum::<f64>() / vals.len() as f64
+        },
+        alpha,
+        lambda_max,
+        tol,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -89,6 +119,60 @@ mod tests {
     fn eval_count_is_logarithmic() {
         let r = service_capacity(|l| 1.0 - l / 100.0, 0.95, 100.0, 1e-9);
         assert!(r.evals < 64, "evals = {}", r.evals);
+    }
+
+    /// Deterministic per-seed "noise": a fixed offset per seed, so the
+    /// seed-mean of `1 − λ/100 + noise` is `1 − λ/100 + bias` — still
+    /// monotone, crossing α at a shifted but computable λ*.
+    fn noisy_p(l: f64, seed: u64) -> f64 {
+        let noise = ((seed.wrapping_mul(0x9E3779B97F4A7C15) >> 40) as f64
+            / (1u64 << 24) as f64
+            - 0.5)
+            * 0.04; // ±2% replication noise
+        (1.0 - l / 100.0 + noise).clamp(0.0, 1.0)
+    }
+
+    fn seed_bias(seeds: &[u64]) -> f64 {
+        // probe at λ=50 where no seed's value clamps
+        seeds.iter().map(|&s| noisy_p(50.0, s) - 0.5).sum::<f64>() / seeds.len() as f64
+    }
+
+    #[test]
+    fn replicated_probes_average_out_noise() {
+        let seeds: Vec<u64> = (0..16).collect();
+        let bias = seed_bias(&seeds);
+        let r = service_capacity_replicated(noisy_p, &seeds, 1, 0.95, 100.0, 1e-9);
+        // mean curve: 1 - λ/100 + bias ≥ 0.95 ⇔ λ ≤ 100·(0.05 + bias)
+        let expect = 100.0 * (0.05 + bias);
+        assert!(
+            (r.lambda_star - expect).abs() < 1e-6,
+            "λ* = {}, expect {expect}",
+            r.lambda_star
+        );
+        // a single noisy replication would land up to ±2 λ away
+        let lone = service_capacity(|l| noisy_p(l, 3), 0.95, 100.0, 1e-9);
+        assert!((lone.lambda_star - 5.0).abs() < 2.5);
+    }
+
+    #[test]
+    fn replicated_capacity_identical_for_any_thread_count() {
+        let seeds: Vec<u64> = (0..8).collect();
+        let serial = service_capacity_replicated(noisy_p, &seeds, 1, 0.95, 100.0, 1e-7);
+        for threads in [2, 4, 0] {
+            let par =
+                service_capacity_replicated(noisy_p, &seeds, threads, 0.95, 100.0, 1e-7);
+            assert_eq!(serial.lambda_star.to_bits(), par.lambda_star.to_bits());
+            assert_eq!(serial.p_at_star.to_bits(), par.p_at_star.to_bits());
+            assert_eq!(serial.evals, par.evals);
+        }
+    }
+
+    #[test]
+    fn replicated_single_seed_matches_plain_bisection() {
+        let r1 = service_capacity(|l| noisy_p(l, 7), 0.95, 100.0, 1e-9);
+        let r2 = service_capacity_replicated(noisy_p, &[7], 1, 0.95, 100.0, 1e-9);
+        assert_eq!(r1.lambda_star.to_bits(), r2.lambda_star.to_bits());
+        assert_eq!(r1.evals, r2.evals);
     }
 
     #[test]

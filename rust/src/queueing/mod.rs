@@ -18,7 +18,7 @@ pub mod capacity;
 pub mod tandem_mc;
 
 pub use analytic::{SystemParams, joint_satisfaction, disjoint_satisfaction};
-pub use capacity::{service_capacity, CapacityResult};
+pub use capacity::{service_capacity, service_capacity_replicated, CapacityResult};
 
 /// Latency-management policy (paper §III-A).
 #[derive(Debug, Clone, Copy, PartialEq)]

@@ -27,10 +27,9 @@ use crate::compute::{
 };
 use crate::config::{Management, SchemeConfig};
 use crate::dess::EventQueue;
-use crate::mac::{Sdu, SduKind, UeMac};
+use crate::mac::{drop_ues, Sdu, SduKind, SlotWorkspace, UeBank};
 use crate::mac::UlScheduler;
 use crate::metrics::{JobFate, JobOutcome, LatencyManagement, SimReport};
-use crate::phy::channel::LargeScale;
 use crate::rng::Rng;
 
 use super::routing::NodeView;
@@ -239,21 +238,25 @@ pub(super) fn run(sc: &Scenario) -> ScenarioResult {
     let mut ue_bg_rng: Vec<Rng> =
         (0..n_ues).map(|ue| Rng::substream(master, 0x2000 + ue as u64)).collect();
 
-    // Drop UEs in the cell (staggered SR phases).
-    let mut ues: Vec<UeMac> = (0..n_ues)
-        .map(|i| {
-            UeMac::new(LargeScale::drop(&mut rng_drop, cfg.cell_r_min, cfg.cell_r_max))
-                .with_sr_phase(i as u64)
-        })
-        .collect();
+    // Drop UEs in the cell (staggered SR phases) behind the backlog
+    // index — the slot scheduler iterates active UEs, not the
+    // population.
+    let mut bank = UeBank::new(drop_ues(&mut rng_drop, n_ues, cfg.cell_r_min, cfg.cell_r_max));
 
     let mut jobs: Vec<JobState> = Vec::with_capacity(4096);
-    let mut q: EventQueue<Ev> = EventQueue::new();
-    // Reused per-enqueue routing snapshot + node-event buffers (keeps
-    // the hot path allocation-free).
+    // Pre-size the calendar: priming schedules one arrival per
+    // (UE, class) plus one background event per UE and the slot clock.
+    let mut q: EventQueue<Ev> = EventQueue::with_capacity(n_ues * (n_classes + 1) + 8);
+    // Reused per-slot grant workspace and per-enqueue routing snapshot
+    // + node-event buffers (keeps the hot path allocation-free).
+    let mut ws = SlotWorkspace::new();
     let mut views: Vec<NodeView> = Vec::with_capacity(sc.nodes.len());
     let mut node_ev: Vec<NodeEvent> = Vec::with_capacity(16);
     let mut batch_ev: Vec<BatchEvent> = Vec::with_capacity(64);
+
+    // Background packet rate (constant across the run; the per-event
+    // handler reuses this instead of recomputing the interval).
+    let bg_rate = 1.0 / cfg.background.mean_interval();
 
     // Prime arrival processes + the slot clock.
     for ue in 0..n_ues {
@@ -261,7 +264,6 @@ pub(super) fn run(sc: &Scenario) -> ScenarioResult {
             let gap = job_rng[c][ue].exp(class.rate_per_ue);
             q.schedule_at(gap, Ev::JobArrival { ue, class: c });
         }
-        let bg_rate = 1.0 / cfg.background.mean_interval();
         q.schedule_at(ue_bg_rng[ue].exp(bg_rate), Ev::BgArrival { ue });
     }
     q.schedule_at(slot_dur, Ev::Slot);
@@ -299,14 +301,14 @@ pub(super) fn run(sc: &Scenario) -> ScenarioResult {
                         measured: now >= cfg.warmup,
                     });
                     let arrival_slot = (now / slot_dur) as u64;
-                    ues[ue].note_arrival(arrival_slot, sr_period, sr_proc);
+                    bank.note_arrival(ue, arrival_slot, sr_period, sr_proc);
                     if cfg.mac.job_priority {
                         // ICC job-aware prioritization: dedicated SR
                         // resource bypasses the shared cycle.
-                        ues[ue].note_job_arrival_expedited(arrival_slot, sr_proc);
+                        bank.ue_mut(ue).note_job_arrival_expedited(arrival_slot, sr_proc);
                     }
                     let bytes = spec.request_bytes(n_input);
-                    ues[ue].push_job_sdu(Sdu {
+                    bank.push_job_sdu(ue, Sdu {
                         kind: SduKind::Job { job_id },
                         total_bytes: bytes,
                         bytes_left: bytes,
@@ -319,37 +321,36 @@ pub(super) fn run(sc: &Scenario) -> ScenarioResult {
             Ev::BgArrival { ue } => {
                 if now < cfg.horizon {
                     let arrival_slot = (now / slot_dur) as u64;
-                    ues[ue].note_arrival(arrival_slot, sr_period, sr_proc);
-                    ues[ue].push_bg_sdu(Sdu {
+                    bank.note_arrival(ue, arrival_slot, sr_period, sr_proc);
+                    bank.push_bg_sdu(ue, Sdu {
                         kind: SduKind::Background,
                         total_bytes: bg_bytes,
                         bytes_left: bg_bytes,
                         t_arrival: now,
                     });
-                    let bg_rate = 1.0 / cfg.background.mean_interval();
                     q.schedule_in(ue_bg_rng[ue].exp(bg_rate), Ev::BgArrival { ue });
                 }
             }
             Ev::Slot => {
-                let results = scheduler.schedule_slot(slot_idx, &mut ues, &mut rng_mac);
+                scheduler.schedule_slot(slot_idx, &mut bank, &mut rng_mac, &mut ws);
                 slot_idx += 1;
-                // TBs land at the end of the slot.
+                // TBs land at the end of the slot. The flat delivered
+                // buffer is already in grant order, so iterating it
+                // preserves the per-grant enqueue order.
                 let t_rx = now + slot_dur;
-                for r in results {
-                    for d in r.delivered {
-                        if let SduKind::Job { job_id } = d.kind {
-                            let js = &mut jobs[job_id as usize];
-                            js.t_comm = Some(t_rx - js.t_gen);
-                            q.schedule_at(
-                                t_rx + t_wireline,
-                                Ev::ComputeEnqueue { job: job_id },
-                            );
-                        }
+                for d in &ws.delivered {
+                    if let SduKind::Job { job_id } = d.kind {
+                        let js = &mut jobs[job_id as usize];
+                        js.t_comm = Some(t_rx - js.t_gen);
+                        q.schedule_at(
+                            t_rx + t_wireline,
+                            Ev::ComputeEnqueue { job: job_id },
+                        );
                     }
                 }
-                // Keep the slot clock running while anything is active.
-                let active =
-                    now < cfg.horizon || ues.iter().any(|u| u.buffered_bytes() > 0);
+                // Keep the slot clock running while anything is active
+                // (O(1): the bank tracks total backlog).
+                let active = now < cfg.horizon || bank.has_backlog();
                 if active {
                     q.schedule_in(slot_dur, Ev::Slot);
                 }

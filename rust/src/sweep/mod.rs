@@ -1,0 +1,176 @@
+//! Parallel sweep runner: fan independent simulation replications out
+//! over scoped worker threads, reduce with exact [`SimReport::merge`].
+//!
+//! A capacity curve is a (seed × load) grid of *independent* scenario
+//! runs — embarrassingly parallel. The runner keeps three guarantees:
+//!
+//! 1. **Determinism** — every replication is a self-contained
+//!    single-threaded simulation seeded from the grid, so the work a
+//!    thread does never depends on which thread does it.
+//! 2. **Exact reduction** — per-point reports are merged in grid order
+//!    (seed-ascending), not completion order, so the merged Welford
+//!    accumulators are *bit-identical* to a serial sweep.
+//! 3. **No dependencies** — plain `std::thread::scope` + an atomic
+//!    work cursor; no rayon in the offline dependency universe.
+//!
+//! `threads = 0` means "use all available parallelism"; `threads = 1`
+//! degenerates to an inline serial loop (no threads spawned), which is
+//! what the `parallel ≡ serial` equality tests compare against.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::metrics::SimReport;
+
+/// Resolve a thread-count request: 0 → available parallelism.
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// Run `f` over `items` on up to `threads` scoped worker threads,
+/// returning results **in input order**. Work is claimed from an
+/// atomic cursor, so long items don't serialize behind short ones.
+/// With `threads <= 1` (after [`resolve_threads`]) the items run
+/// inline on the caller's thread.
+pub fn run_parallel<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    let workers = resolve_threads(threads).min(n.max(1));
+    if workers <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<R>>> = Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                slots.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("worker left a result slot empty"))
+        .collect()
+}
+
+/// One merged grid point of a sweep: the x value (offered rate,
+/// capacity, …) and the seed-merged report.
+#[derive(Debug, Clone)]
+pub struct GridPoint {
+    pub x: f64,
+    pub report: SimReport,
+    /// Replications merged into `report`.
+    pub n_reps: u32,
+}
+
+/// Sweep an `xs × seeds` grid: run every (x, seed) replication through
+/// `run` (in parallel across the whole grid, not just within a point)
+/// and merge each point's replications **in seed order** so the result
+/// is bit-identical to a serial sweep.
+///
+/// `run` must be a pure function of its `(x, seed)` arguments.
+pub fn sweep_grid(
+    xs: &[f64],
+    seeds: &[u64],
+    threads: usize,
+    run: impl Fn(f64, u64) -> SimReport + Sync,
+) -> Vec<GridPoint> {
+    assert!(!seeds.is_empty(), "sweep needs at least one seed");
+    let jobs: Vec<(f64, u64)> = xs
+        .iter()
+        .flat_map(|&x| seeds.iter().map(move |&s| (x, s)))
+        .collect();
+    let reports = run_parallel(&jobs, threads, |&(x, s)| run(x, s));
+    let mut points = Vec::with_capacity(xs.len());
+    let mut it = reports.into_iter();
+    for &x in xs {
+        let mut agg: Option<SimReport> = None;
+        for _ in seeds {
+            let r = it.next().expect("grid/report length mismatch");
+            agg = Some(match agg {
+                None => r,
+                Some(mut a) => {
+                    a.merge(&r);
+                    a
+                }
+            });
+        }
+        points.push(GridPoint { x, report: agg.unwrap(), n_reps: seeds.len() as u32 });
+    }
+    points
+}
+
+/// The replication seed list the coordinator sweeps use:
+/// `base, base+1000, base+2000, …` (kept stable so pre-existing
+/// results reproduce).
+pub fn replication_seeds(base: u64, n: u32) -> Vec<u64> {
+    (0..n).map(|s| base + 1000 * s as u64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_parallel_preserves_input_order() {
+        let items: Vec<u64> = (0..100).collect();
+        for threads in [1, 2, 8] {
+            let out = run_parallel(&items, threads, |&x| x * 3);
+            assert_eq!(out, items.iter().map(|x| x * 3).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn run_parallel_handles_empty_and_single() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(run_parallel(&empty, 4, |&x| x).is_empty());
+        assert_eq!(run_parallel(&[7u32], 4, |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn run_parallel_actually_distributes_work() {
+        // With more threads than one, at least two distinct threads
+        // should claim items (flaky-free: 64 items, each sleeping a
+        // hair, 4 workers).
+        let count = AtomicU64::new(0);
+        let items: Vec<u32> = (0..64).collect();
+        let out = run_parallel(&items, 4, |&x| {
+            count.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(std::time::Duration::from_micros(100));
+            x
+        });
+        assert_eq!(out.len(), 64);
+        assert_eq!(count.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn resolve_threads_zero_means_all() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+    }
+
+    #[test]
+    fn replication_seed_layout_is_stable() {
+        assert_eq!(replication_seeds(1, 3), vec![1, 1001, 2001]);
+    }
+
+    // sweep_grid's serial ≡ parallel bit-identity over real scenario
+    // runs lives in tests/integration_sweep.rs (needs whole-sim runs).
+}

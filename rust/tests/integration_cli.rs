@@ -123,3 +123,36 @@ fn scenario_reports_ttft_tpot_and_writes_json() {
     }
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+#[test]
+fn sweep_runs_small_grid_and_reports_capacity() {
+    // Run in a temp dir: sweep writes CSVs into its CWD.
+    let dir = std::env::temp_dir().join(format!("icc6g_sweep_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = bin()
+        .current_dir(&dir)
+        .args([
+            "sweep", "--scheme", "icc", "--rates", "10:30:2", "--seeds", "2",
+            "--threads", "2", "--horizon", "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for field in ["service capacity", "satisfaction", "thread", "replications"] {
+        assert!(text.contains(field), "missing '{field}' in:\n{text}");
+    }
+    assert!(dir.join("bench_out").join("sweep_curves.csv").exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sweep_rejects_bad_grid_and_scheme() {
+    let out = bin().args(["sweep", "--rates", "nonsense"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    let out = bin().args(["sweep", "--scheme", "zzz"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    let out = bin().args(["sweep", "--help"]).output().unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("Options"));
+}

@@ -1,0 +1,95 @@
+//! Parallel-sweep integration tests: the thread count must never
+//! change a single bit of the merged reports, and the new CLI
+//! subcommand must drive the grid end-to-end.
+
+use icc6g::config::{SchemeConfig, SimConfig};
+use icc6g::coordinator::{sweep_arrival_rates, sweep_arrival_rates_threaded};
+use icc6g::sim::run_scheme;
+use icc6g::sweep::{replication_seeds, run_parallel, sweep_grid};
+
+fn small_base() -> SimConfig {
+    let mut cfg = SimConfig::table1();
+    cfg.horizon = 3.0;
+    cfg.warmup = 0.5;
+    cfg
+}
+
+#[test]
+fn parallel_sweep_reports_bit_identical_to_serial() {
+    let base = small_base();
+    let scheme = SchemeConfig::icc();
+    let rates = [10.0, 30.0, 50.0];
+    let seeds = replication_seeds(base.seed, 3);
+
+    let run = |rate: f64, seed: u64| {
+        let mut cfg = base.clone();
+        cfg.n_ues = (rate / cfg.job_traffic.rate_per_ue).round().max(1.0) as u32;
+        run_scheme(&cfg, scheme.clone(), seed)
+    };
+    let serial = sweep_grid(&rates, &seeds, 1, run);
+    let parallel = sweep_grid(&rates, &seeds, 4, run);
+    assert_eq!(serial.len(), parallel.len());
+    for (s, p) in serial.iter().zip(&parallel) {
+        assert_eq!(s.x.to_bits(), p.x.to_bits());
+        assert_eq!(s.n_reps, p.n_reps);
+        // exact counts AND bit-exact merged accumulators
+        assert_eq!(s.report.n_jobs, p.report.n_jobs);
+        assert_eq!(s.report.n_satisfied, p.report.n_satisfied);
+        assert_eq!(s.report.n_dropped, p.report.n_dropped);
+        assert_eq!(s.report.e2e.mean().to_bits(), p.report.e2e.mean().to_bits());
+        assert_eq!(s.report.comm.mean().to_bits(), p.report.comm.mean().to_bits());
+        assert_eq!(s.report.ttft.mean().to_bits(), p.report.ttft.mean().to_bits());
+        // per-class slices survive the merge identically
+        assert_eq!(s.report.per_class.len(), p.report.per_class.len());
+        for (a, b) in s.report.per_class.iter().zip(&p.report.per_class) {
+            assert_eq!(a.n_jobs, b.n_jobs);
+            assert_eq!(a.ttft_samples(), b.ttft_samples());
+        }
+    }
+}
+
+#[test]
+fn coordinator_threaded_sweep_matches_serial_curve() {
+    let base = small_base();
+    let scheme = SchemeConfig::mec();
+    let rates = [20.0, 60.0];
+    let serial = sweep_arrival_rates(&base, &scheme, &rates, 2);
+    let threaded = sweep_arrival_rates_threaded(&base, &scheme, &rates, 2, 0);
+    assert_eq!(serial.len(), threaded.len());
+    for (s, p) in serial.iter().zip(&threaded) {
+        assert_eq!(s.satisfaction.to_bits(), p.satisfaction.to_bits());
+        assert_eq!(s.avg_comm_ms.to_bits(), p.avg_comm_ms.to_bits());
+        assert_eq!(s.avg_comp_ms.to_bits(), p.avg_comp_ms.to_bits());
+        assert_eq!(s.avg_tokens_per_sec.to_bits(), p.avg_tokens_per_sec.to_bits());
+    }
+}
+
+#[test]
+fn run_parallel_scales_to_many_more_items_than_threads() {
+    let items: Vec<u64> = (0..500).collect();
+    let out = run_parallel(&items, 3, |&x| x * x);
+    assert_eq!(out.len(), 500);
+    for (i, v) in out.iter().enumerate() {
+        assert_eq!(*v, (i * i) as u64);
+    }
+}
+
+#[test]
+fn replication_is_deterministic_under_repeated_parallel_runs() {
+    // Same grid twice in parallel → identical results (no hidden
+    // shared state across workers).
+    let base = small_base();
+    let scheme = SchemeConfig::icc();
+    let rates = [40.0];
+    let seeds = replication_seeds(7, 4);
+    let run = |rate: f64, seed: u64| {
+        let mut cfg = base.clone();
+        cfg.n_ues = (rate / cfg.job_traffic.rate_per_ue).round().max(1.0) as u32;
+        run_scheme(&cfg, scheme.clone(), seed)
+    };
+    let a = sweep_grid(&rates, &seeds, 0, run);
+    let b = sweep_grid(&rates, &seeds, 0, run);
+    assert_eq!(a[0].report.n_jobs, b[0].report.n_jobs);
+    assert_eq!(a[0].report.n_satisfied, b[0].report.n_satisfied);
+    assert_eq!(a[0].report.e2e.mean().to_bits(), b[0].report.e2e.mean().to_bits());
+}

@@ -1,0 +1,65 @@
+//! Multi-cell ICC topology demo: four gNBs sharing one compute tier.
+//!
+//! The paper's ICC framework places compute *inside* RAN nodes, so the
+//! interesting system-level question is how placement behaves once
+//! several cells contend for the tier. This example runs the same
+//! 4-cell radio workload under two placements:
+//!
+//! * `cell_affinity` — the ICC shape: each prompt is served at its
+//!   originating gNB's node, spilling to neighbors only when the home
+//!   queue backs up;
+//! * `least_loaded` — a pooled MEC-style tier that ignores origin.
+//!
+//! Cells are stepped on all cores (`threads(0)`); the thread count
+//! never changes the numbers, only the wall clock.
+//!
+//! Run: `cargo run --release --example multi_cell`
+
+use icc6g::config::SchemeConfig;
+use icc6g::llm::GpuSpec;
+use icc6g::scenario::{CellSpec, RoutingPolicy, ScenarioBuilder, WorkloadClass};
+
+const N_CELLS: usize = 4;
+const UES_PER_CELL: u32 = 15;
+
+fn run(label: &str, routing: RoutingPolicy) {
+    let mut b = ScenarioBuilder::new()
+        .scheme(SchemeConfig::icc())
+        .horizon(8.0)
+        .warmup(1.0)
+        .seed(1)
+        .threads(0)
+        .routing(routing)
+        .workload(WorkloadClass::translation());
+    for _ in 0..N_CELLS {
+        b = b.cell(CellSpec::new(UES_PER_CELL)).node(GpuSpec::gh200_nvl2(), 1);
+    }
+    let scenario = b.build();
+    let res = scenario.run();
+    println!(
+        "\n{label}: {} cells x {} UEs, {:.0} jobs/s offered, satisfaction {:.4}",
+        N_CELLS,
+        UES_PER_CELL,
+        scenario.offered_rate(),
+        res.report.satisfaction_rate()
+    );
+    for c in &res.report.per_cell {
+        println!(
+            "  {:>6}: {:>4} jobs  sat {:.4}  comm {:>6.2} ms  e2e {:>6.2} ms",
+            c.name,
+            c.n_jobs,
+            c.satisfaction_rate(),
+            c.comm.mean() * 1e3,
+            c.e2e.mean() * 1e3,
+        );
+    }
+}
+
+fn main() {
+    println!("=== Multi-cell placement: ICC cell affinity vs pooled tier ===");
+    run(
+        "cell_affinity (serve at the originating gNB, spill at queue > 8)",
+        RoutingPolicy::CellAffinity { spill_queue: 8 },
+    );
+    run("least_loaded (pooled MEC-style tier)", RoutingPolicy::LeastLoaded);
+}

@@ -31,11 +31,20 @@ struct ScaleRow {
     jobs: u64,
 }
 
+/// The scheme under test, resolved through the same shared preset
+/// helper the sweep CLI uses (`SchemeConfig::select`), so the bench
+/// and the CLI cannot drift apart in how presets are constructed.
+fn bench_scheme() -> SchemeConfig {
+    SchemeConfig::select("icc")
+        .expect("'icc' must be a known preset")
+        .remove(0)
+}
+
 /// Fixed-offered-load config: 20 jobs/s across the cell regardless of
 /// population, background throttled to ~1 packet/UE/hour so activity
 /// is driven by jobs alone (the "1% job-active fraction" regime).
 fn scale_cfg(n_ues: u32, dense: bool) -> SimConfig {
-    let mut cfg = SimConfig::table1().with_scheme(SchemeConfig::icc());
+    let mut cfg = SimConfig::table1().with_scheme(bench_scheme());
     cfg.n_ues = n_ues;
     cfg.job_traffic.rate_per_ue = 20.0 / n_ues as f64;
     cfg.background.rate_bps = 1.0; // 500 B packets ≈ 1 per 67 min
@@ -85,7 +94,7 @@ fn main() {
 
     // Parallel sweep harness on the same fixed-load workload.
     let base = scale_cfg(1_000, false);
-    let scheme = SchemeConfig::icc();
+    let scheme = bench_scheme();
     let rates = [10.0, 20.0, 40.0, 60.0];
     let mut sweep_json = String::new();
     for (label, threads) in [("serial", 1usize), ("parallel", 0usize)] {

@@ -109,6 +109,19 @@ impl SchemeConfig {
             _ => None,
         }
     }
+
+    /// Shared CLI/bench scheme selection: `"all"` expands to the Fig 6
+    /// scheme set, anything else resolves through
+    /// [`SchemeConfig::preset`]. The sweep CLI and the perf benches
+    /// both route through this, so the preset universe cannot drift
+    /// between them.
+    pub fn select(name: &str) -> Option<Vec<Self>> {
+        if name.eq_ignore_ascii_case("all") {
+            Some(Self::fig6_schemes().to_vec())
+        } else {
+            Self::preset(name).map(|s| vec![s])
+        }
+    }
 }
 
 /// Builder for [`SchemeConfig`] — the extension point for schemes the
@@ -492,6 +505,17 @@ mod tests {
         // presets route through the same builder
         assert_eq!(SchemeConfig::preset("icc"), Some(SchemeConfig::icc()));
         assert_eq!(SchemeConfig::preset("zzz"), None);
+    }
+
+    #[test]
+    fn scheme_selection_covers_presets_and_all() {
+        assert_eq!(
+            SchemeConfig::select("all").unwrap(),
+            SchemeConfig::fig6_schemes().to_vec()
+        );
+        assert_eq!(SchemeConfig::select("ALL").unwrap().len(), 3);
+        assert_eq!(SchemeConfig::select("mec").unwrap(), vec![SchemeConfig::mec()]);
+        assert_eq!(SchemeConfig::select("nope"), None);
     }
 
     #[test]

@@ -2,26 +2,30 @@
 //!
 //! Subcommands:
 //!   fig4       Fig 4: analytic curves + capacities (opt. MC validation)
-//!   fig6       Fig 6: SLS satisfaction vs prompt arrival rate
-//!   fig7       Fig 7: SLS satisfaction vs compute capacity (×A100)
+//!   fig6       Fig 6: SLS satisfaction vs prompt arrival rate (--threads)
+//!   fig7       Fig 7: SLS satisfaction vs compute capacity (×A100, --threads)
 //!   simulate   One SLS run with explicit parameters / TOML config
-//!   scenario   One multi-class / multi-node Scenario-API run
+//!   scenario   One multi-class / multi-cell / multi-node Scenario-API run
 //!   sweep      Parallel capacity sweep (seed × rate grid, N threads)
+//!   bench-diff Benchmark-regression gate vs benchmarks/baseline.json
 //!   serve      Real LLM serving over the PJRT runtime (TCP)
 //!   generate   One-shot generation through the AOT artifacts
 
 use icc6g::config::{SchemeConfig, SimConfig};
 use icc6g::coordinator::{
-    capacity_from_curve, min_capacity_from_curve, sweep_arrival_rates,
-    sweep_arrival_rates_threaded, sweep_gpu_capacity,
+    capacity_from_curve, min_capacity_from_curve, sweep_arrival_rates_threaded,
+    sweep_gpu_capacity_threaded,
 };
 use icc6g::queueing::analytic::{scheme_satisfaction, SystemParams};
 use icc6g::queueing::tandem_mc::empirical_satisfaction;
 use icc6g::queueing::{service_capacity, Scheme};
-use icc6g::scenario::{RoutingPolicy, ScenarioBuilder, ServiceModelKind, WorkloadClass};
+use icc6g::scenario::{
+    CellSpec, RoutingPolicy, ScenarioBuilder, ServiceModelKind, WorkloadClass,
+};
 use icc6g::sim::run_scheme;
 use icc6g::util::args::{usage, Args, OptSpec};
 use icc6g::util::bench::{cell, Table};
+use icc6g::util::perfgate;
 
 fn main() {
     icc6g::util::logger::init();
@@ -35,6 +39,7 @@ fn main() {
         "simulate" => cmd_simulate(&rest),
         "scenario" => cmd_scenario(&rest),
         "sweep" => cmd_sweep(&rest),
+        "bench-diff" => cmd_bench_diff(&rest),
         "serve" => cmd_serve(&rest),
         "generate" => cmd_generate(&rest),
         "help" | "--help" | "-h" => {
@@ -59,8 +64,11 @@ fn print_help() {
            fig6       SLS Fig 6: satisfaction vs prompt arrival rate\n\
            fig7       SLS Fig 7: satisfaction vs compute capacity (xA100)\n\
            simulate   one SLS run (--scheme icc|disjoint_ran|mec ...)\n\
-           scenario   one Scenario-API run (multi-class, multi-node)\n\
+           scenario   one Scenario-API run (multi-class, multi-cell, multi-node;\n\
+                      --cells N shards the population over N gNBs, --threads\n\
+                      steps them in parallel, [[cell]] tables in --config)\n\
            sweep      parallel capacity sweep over a rate grid (--threads)\n\
+           bench-diff benchmark-regression gate: BENCH_*.json vs baseline\n\
            serve      real LLM serving over PJRT (--port, --artifacts)\n\
            generate   one-shot generation via the AOT artifacts\n\
            help       this message\n\n\
@@ -175,7 +183,13 @@ fn parse_sim_base(args: &Args) -> SimConfig {
 }
 
 fn cmd_fig6(argv: &[String]) -> i32 {
-    let specs = common_sim_specs();
+    let mut specs = common_sim_specs();
+    specs.push(OptSpec {
+        name: "threads",
+        help: "worker threads for the sweep (0 = all cores)",
+        takes_value: true,
+        default: Some("1"),
+    });
     let args = match Args::parse(argv.iter().cloned(), &specs) {
         Ok(a) => a,
         Err(e) => {
@@ -190,8 +204,9 @@ fn cmd_fig6(argv: &[String]) -> i32 {
     let base = parse_sim_base(&args);
     let seeds = args.get_u64("seeds").unwrap().unwrap() as u32;
     let alpha = args.get_f64("alpha").unwrap().unwrap();
+    let threads = args.get_u64("threads").unwrap().unwrap() as usize;
     let rates: Vec<f64> = (1..=12).map(|i| 10.0 * i as f64).collect();
-    let schemes = SchemeConfig::fig6_schemes();
+    let schemes = SchemeConfig::select("all").unwrap();
 
     let mut t = Table::new(
         "Fig 6 — SLS job satisfaction + avg latencies vs prompt arrival rate",
@@ -199,7 +214,7 @@ fn cmd_fig6(argv: &[String]) -> i32 {
     );
     let mut caps = Vec::new();
     for scheme in &schemes {
-        let pts = sweep_arrival_rates(&base, scheme, &rates, seeds);
+        let pts = sweep_arrival_rates_threaded(&base, scheme, &rates, seeds, threads);
         for p in &pts {
             t.row(&[
                 cell(p.x, 0),
@@ -228,7 +243,13 @@ fn cmd_fig6(argv: &[String]) -> i32 {
 }
 
 fn cmd_fig7(argv: &[String]) -> i32 {
-    let specs = common_sim_specs();
+    let mut specs = common_sim_specs();
+    specs.push(OptSpec {
+        name: "threads",
+        help: "worker threads for the sweep (0 = all cores)",
+        takes_value: true,
+        default: Some("1"),
+    });
     let args = match Args::parse(argv.iter().cloned(), &specs) {
         Ok(a) => a,
         Err(e) => {
@@ -244,8 +265,9 @@ fn cmd_fig7(argv: &[String]) -> i32 {
     base.n_ues = 60; // paper: 60 UEs × 1 prompt/s
     let seeds = args.get_u64("seeds").unwrap().unwrap() as u32;
     let alpha = args.get_f64("alpha").unwrap().unwrap();
+    let threads = args.get_u64("threads").unwrap().unwrap() as usize;
     let capacities: Vec<f64> = (4..=16).map(|i| i as f64).collect();
-    let schemes = SchemeConfig::fig6_schemes();
+    let schemes = SchemeConfig::select("all").unwrap();
 
     let mut t = Table::new(
         "Fig 7 — SLS satisfaction + tokens/s vs compute capacity (×A100), 60 UEs",
@@ -253,7 +275,7 @@ fn cmd_fig7(argv: &[String]) -> i32 {
     );
     let mut mins = Vec::new();
     for scheme in &schemes {
-        let pts = sweep_gpu_capacity(&base, scheme, &capacities, seeds);
+        let pts = sweep_gpu_capacity_threaded(&base, scheme, &capacities, seeds, threads);
         for p in &pts {
             t.row(&[
                 cell(p.x, 0),
@@ -341,11 +363,13 @@ fn cmd_simulate(argv: &[String]) -> i32 {
 
 fn cmd_scenario(argv: &[String]) -> i32 {
     let specs = [
-        OptSpec { name: "config", help: "scenario TOML file ([[workload]]/[[node]] tables)", takes_value: true, default: None },
+        OptSpec { name: "config", help: "scenario TOML file ([[workload]]/[[node]]/[[cell]] tables)", takes_value: true, default: None },
         OptSpec { name: "scheme", help: "icc | disjoint_ran | mec", takes_value: true, default: Some("icc") },
-        OptSpec { name: "ues", help: "number of UEs", takes_value: true, default: Some("20") },
+        OptSpec { name: "ues", help: "number of UEs (total, split across --cells)", takes_value: true, default: Some("20") },
+        OptSpec { name: "cells", help: "gNB cells sharing the compute tier (UEs split evenly)", takes_value: true, default: Some("1") },
+        OptSpec { name: "threads", help: "worker threads stepping cells (0 = all cores; never changes results)", takes_value: true, default: Some("1") },
         OptSpec { name: "nodes", help: "compute nodes (demo mix)", takes_value: true, default: Some("2") },
-        OptSpec { name: "routing", help: "least_loaded | rr | affinity", takes_value: true, default: Some("least_loaded") },
+        OptSpec { name: "routing", help: "least_loaded | rr | affinity | cell_affinity", takes_value: true, default: Some("least_loaded") },
         OptSpec { name: "service", help: "roofline | token_sampled", takes_value: true, default: Some("token_sampled") },
         OptSpec { name: "horizon", help: "simulated seconds", takes_value: true, default: Some("12") },
         OptSpec { name: "seed", help: "master RNG seed", takes_value: true, default: Some("1") },
@@ -385,16 +409,23 @@ fn cmd_scenario(argv: &[String]) -> i32 {
         eprintln!("unknown service model '{}'", args.get("service").unwrap());
         return 2;
     };
-    let (ues, seed, n_nodes, horizon) = match (
+    let (ues, seed, n_nodes, horizon, n_cells, threads) = match (
         args.get_u64("ues"),
         args.get_u64("seed"),
         args.get_u64("nodes"),
         args.get_f64("horizon"),
+        args.get_u64("cells"),
+        args.get_u64("threads"),
     ) {
-        (Ok(u), Ok(s), Ok(n), Ok(h)) => {
-            (u.unwrap(), s.unwrap(), n.unwrap(), h.unwrap())
+        (Ok(u), Ok(s), Ok(n), Ok(h), Ok(c), Ok(t)) => {
+            (u.unwrap(), s.unwrap(), n.unwrap(), h.unwrap(), c.unwrap(), t.unwrap())
         }
-        (Err(e), ..) | (_, Err(e), ..) | (_, _, Err(e), _) | (_, _, _, Err(e)) => {
+        (Err(e), ..)
+        | (_, Err(e), ..)
+        | (_, _, Err(e), ..)
+        | (_, _, _, Err(e), ..)
+        | (_, _, _, _, Err(e), _)
+        | (_, _, _, _, _, Err(e)) => {
             eprintln!("{e}");
             return 2;
         }
@@ -411,8 +442,17 @@ fn cmd_scenario(argv: &[String]) -> i32 {
         eprintln!("--nodes must be in 1..=1024");
         return 2;
     }
-    // Built-in demo mix: 3 classes over N identical nodes. A config
-    // file's [[workload]]/[[node]] tables replace these defaults.
+    if !(1..=4096).contains(&n_cells) || n_cells > ues {
+        eprintln!("--cells must be in 1..=4096 and <= --ues");
+        return 2;
+    }
+    if threads > 1024 {
+        eprintln!("--threads must be in 0..=1024");
+        return 2;
+    }
+    // Built-in demo mix: 3 classes over N identical nodes, population
+    // split evenly over the cells. A config file's
+    // [[workload]]/[[node]]/[[cell]] tables replace these defaults.
     let mut b = ScenarioBuilder::new()
         .scheme(scheme)
         .n_ues(ues as u32)
@@ -420,9 +460,16 @@ fn cmd_scenario(argv: &[String]) -> i32 {
         .seed(seed)
         .routing(routing)
         .service_kind(service)
+        .threads(threads as usize)
         .workload(WorkloadClass::translation())
         .workload(WorkloadClass::chat())
         .workload(WorkloadClass::summarization());
+    if n_cells > 1 {
+        let (per, rem) = (ues / n_cells, ues % n_cells);
+        for i in 0..n_cells {
+            b = b.cell(CellSpec::new((per + u64::from(i < rem)) as u32));
+        }
+    }
     for _ in 0..n_nodes {
         b = b.node(icc6g::llm::GpuSpec::gh200_nvl2().scaled(2.0), 1);
     }
@@ -452,6 +499,12 @@ fn cmd_scenario(argv: &[String]) -> i32 {
     let res = scenario.run();
     println!("scheme       : {}", scenario.scheme().name);
     println!("service      : {}", scenario.service_name());
+    println!(
+        "cells        : {} ({} UEs total, {} thread(s))",
+        scenario.cells().len(),
+        scenario.total_ues(),
+        icc6g::sweep::resolve_threads(scenario.threads()).min(scenario.cells().len().max(1)),
+    );
     println!(
         "routing      : {} over {} node(s)",
         scenario.routing().name(),
@@ -513,6 +566,25 @@ fn cmd_scenario(argv: &[String]) -> i32 {
     }
     t.print();
     let _ = t.write_csv("scenario_classes.csv");
+    if res.report.per_cell.len() > 1 {
+        let mut ct = Table::new(
+            "per-cell breakdown (originating gNB; jobs judged by their class budgets)",
+            &["cell", "ues", "jobs", "dropped", "satisfaction", "avg_comm_ms", "avg_e2e_ms"],
+        );
+        for (c, spec) in res.report.per_cell.iter().zip(scenario.cells()) {
+            ct.row(&[
+                c.name.clone(),
+                spec.n_ues.to_string(),
+                c.n_jobs.to_string(),
+                c.n_dropped.to_string(),
+                cell(c.satisfaction_rate(), 4),
+                cell(c.comm.mean() * 1e3, 2),
+                cell(c.e2e.mean() * 1e3, 2),
+            ]);
+        }
+        ct.print();
+        let _ = ct.write_csv("scenario_cells.csv");
+    }
     if let Some(path) = args.get("json") {
         if let Err(e) = std::fs::write(path, res.report.to_json()) {
             eprintln!("cannot write {path}: {e}");
@@ -585,15 +657,15 @@ fn cmd_sweep(argv: &[String]) -> i32 {
     let seeds = args.get_u64("seeds").unwrap().unwrap().clamp(1, 10_000) as u32;
     let threads = args.get_u64("threads").unwrap().unwrap() as usize;
     let alpha = args.get_f64("alpha").unwrap().unwrap();
-    let schemes: Vec<SchemeConfig> = match args.get("scheme").unwrap() {
-        "all" => SchemeConfig::fig6_schemes().to_vec(),
-        name => match SchemeConfig::preset(name) {
-            Some(s) => vec![s],
-            None => {
-                eprintln!("unknown scheme '{name}' (icc | disjoint_ran | mec | all)");
-                return 2;
-            }
-        },
+    let schemes: Vec<SchemeConfig> = match SchemeConfig::select(args.get("scheme").unwrap()) {
+        Some(s) => s,
+        None => {
+            eprintln!(
+                "unknown scheme '{}' (icc | disjoint_ran | mec | all)",
+                args.get("scheme").unwrap()
+            );
+            return 2;
+        }
     };
 
     let n_workers = icc6g::sweep::resolve_threads(threads);
@@ -640,6 +712,129 @@ fn cmd_sweep(argv: &[String]) -> i32 {
         n_runs as f64 / wall.max(1e-9),
     );
     0
+}
+
+fn cmd_bench_diff(argv: &[String]) -> i32 {
+    let specs = [
+        OptSpec { name: "baseline", help: "committed baseline JSON", takes_value: true, default: Some("benchmarks/baseline.json") },
+        OptSpec { name: "hotpath", help: "BENCH_hotpath.json from `cargo bench --bench perf_hotpath`", takes_value: true, default: Some("BENCH_hotpath.json") },
+        OptSpec { name: "scale", help: "BENCH_scale.json from `cargo bench --bench perf_scale`", takes_value: true, default: Some("BENCH_scale.json") },
+        OptSpec { name: "tolerance", help: "override the baseline's relative tolerance", takes_value: true, default: None },
+        OptSpec { name: "update", help: "rewrite the baseline from the current BENCH files", takes_value: false, default: None },
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = match Args::parse(argv.iter().cloned(), &specs) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if args.flag("help") {
+        print!(
+            "{}",
+            usage(
+                "icc6g bench-diff",
+                "Benchmark-regression gate: compare BENCH_*.json against the\n\
+                 committed baseline (markdown delta table on stdout; exit 1 on\n\
+                 any regression beyond tolerance). --update refreshes the\n\
+                 baseline from the current measurements instead.",
+                &specs
+            )
+        );
+        return 0;
+    }
+
+    // Collect measurements from whichever bench outputs exist.
+    let mut measured: Vec<(String, f64)> = Vec::new();
+    for (flag, parse) in [
+        ("hotpath", perfgate::hotpath_metrics as fn(&str) -> anyhow::Result<Vec<(String, f64)>>),
+        ("scale", perfgate::scale_metrics as fn(&str) -> anyhow::Result<Vec<(String, f64)>>),
+    ] {
+        let path = args.get(flag).unwrap();
+        match std::fs::read_to_string(path) {
+            Ok(text) => match parse(&text) {
+                Ok(mut m) => measured.append(&mut m),
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            },
+            Err(e) => eprintln!("note: skipping {path}: {e}"),
+        }
+    }
+    if measured.is_empty() {
+        eprintln!("no measurements found — run the perf benches first");
+        return 2;
+    }
+
+    let baseline_path = args.get("baseline").unwrap();
+    if args.flag("update") {
+        // Same range rule as the gate path — writing an out-of-range
+        // tolerance would produce a baseline parse_baseline rejects.
+        let tol = match args.get_f64("tolerance") {
+            Ok(Some(t)) if (0.0..1.0).contains(&t) => t,
+            Ok(Some(t)) => {
+                eprintln!("--tolerance must be in [0, 1), got {t}");
+                return 2;
+            }
+            Ok(None) => 0.25,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        if let Some(dir) = std::path::Path::new(baseline_path).parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        let text = perfgate::baseline_json(&measured, tol);
+        if let Err(e) = std::fs::write(baseline_path, text) {
+            eprintln!("cannot write {baseline_path}: {e}");
+            return 1;
+        }
+        println!("refreshed {baseline_path} from {} measurement(s)", measured.len());
+        return 0;
+    }
+
+    let mut baseline = match std::fs::read_to_string(baseline_path) {
+        Ok(text) => match perfgate::parse_baseline(&text) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        },
+        Err(e) => {
+            eprintln!("cannot read {baseline_path}: {e} (run with --update to create it)");
+            return 2;
+        }
+    };
+    match args.get_f64("tolerance") {
+        Ok(Some(t)) if (0.0..1.0).contains(&t) => baseline.tolerance = t,
+        Ok(Some(t)) => {
+            eprintln!("--tolerance must be in [0, 1), got {t}");
+            return 2;
+        }
+        Ok(None) => {}
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    }
+
+    let deltas = perfgate::diff(&baseline, &measured);
+    let extras: Vec<(String, f64)> = measured
+        .iter()
+        .filter(|(k, _)| !baseline.entries.iter().any(|e| e.key == *k))
+        .cloned()
+        .collect();
+    print!("{}", perfgate::render_markdown(&deltas, &extras, baseline.tolerance));
+    if deltas.iter().any(|d| d.regressed) {
+        eprintln!("bench-diff: regression beyond tolerance — failing the gate");
+        1
+    } else {
+        0
+    }
 }
 
 fn cmd_serve(argv: &[String]) -> i32 {

@@ -22,6 +22,8 @@ pub struct JobOutcome {
     pub job_id: u64,
     /// Workload class the job belongs to (0 for single-class runs).
     pub class_id: u32,
+    /// Originating cell (gNB) of the job (0 for single-cell runs).
+    pub cell_id: u32,
     /// Generation time at the UE.
     pub t_gen: f64,
     /// UE→BS communication latency (uplink queueing + transmission).
@@ -245,6 +247,12 @@ pub struct SimReport {
     /// [`SimReport::from_outcomes_per_class`]; empty for single-policy
     /// reports built with [`SimReport::from_outcomes`].
     pub per_class: Vec<ClassReport>,
+    /// Per-cell (gNB) breakdown, named `cell0`, `cell1`, … Populated by
+    /// [`SimReport::from_outcomes_per_class`] for multi-cell runs
+    /// (`n_cells > 1`); empty otherwise, so single-cell reports carry
+    /// no duplicate sample sets. Each job is judged by its own class
+    /// policy, exactly as in `per_class`.
+    pub per_cell: Vec<ClassReport>,
 }
 
 impl SimReport {
@@ -258,25 +266,41 @@ impl SimReport {
         r
     }
 
-    /// Build the report for a multi-class run: each outcome is judged
-    /// by its own class policy, and the overall totals are the exact
-    /// sums/merges of the per-class slices.
+    /// Build the report for a multi-class (and, with `n_cells > 1`,
+    /// multi-cell) run: each outcome is judged by its own class policy,
+    /// and the overall totals are the exact sums/merges of the
+    /// per-class slices. The per-cell slices re-bucket the same
+    /// observations by originating gNB.
     pub fn from_outcomes_per_class(
         outcomes: &[JobOutcome],
         classes: &[(String, LatencyManagement)],
+        n_cells: usize,
     ) -> Self {
         let mut per: Vec<ClassReport> =
             classes.iter().map(|(name, _)| ClassReport::new(name.clone())).collect();
+        // Single-cell runs skip the per-cell slices entirely (they
+        // would just duplicate the totals and their sample sets).
+        let mut per_cell: Vec<ClassReport> = if n_cells > 1 {
+            (0..n_cells).map(|i| ClassReport::new(format!("cell{i}"))).collect()
+        } else {
+            Vec::new()
+        };
         for j in outcomes {
             let cls = j.class_id as usize;
             assert!(cls < per.len(), "outcome class {cls} out of range");
             per[cls].observe(j, &classes[cls].1);
+            if !per_cell.is_empty() {
+                let cell = j.cell_id as usize;
+                assert!(cell < per_cell.len(), "outcome cell {cell} out of range");
+                per_cell[cell].observe(j, &classes[cls].1);
+            }
         }
         let mut r = Self::empty();
         for cr in &per {
             r.absorb(cr);
         }
         r.per_class = per;
+        r.per_cell = per_cell;
         r
     }
 
@@ -321,6 +345,22 @@ impl SimReport {
         } else {
             self.per_class.clear();
         }
+        // Per-cell slices merge under the same rule: matching cell
+        // lists merge slice-wise, mismatched topologies clear the
+        // breakdown rather than leave a stale one.
+        let cells_match = self.per_cell.len() == other.per_cell.len()
+            && self
+                .per_cell
+                .iter()
+                .zip(&other.per_cell)
+                .all(|(a, b)| a.name == b.name);
+        if cells_match {
+            for (a, b) in self.per_cell.iter_mut().zip(&other.per_cell) {
+                a.merge(b);
+            }
+        } else {
+            self.per_cell.clear();
+        }
     }
 
     fn empty() -> Self {
@@ -335,6 +375,7 @@ impl SimReport {
             ttft: Welford::new(),
             tpot: Welford::new(),
             per_class: Vec::new(),
+            per_cell: Vec::new(),
         }
     }
 
@@ -408,6 +449,27 @@ impl SimReport {
         if !self.per_class.is_empty() {
             out.push_str("\n  ");
         }
+        out.push_str("],\n  \"per_cell\": [");
+        for (i, c) in self.per_cell.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("\n    {");
+            out.push_str(&format!("\"name\": \"{}\", ", jstr(&c.name)));
+            out.push_str(&format!("\"n_jobs\": {}, ", c.n_jobs));
+            out.push_str(&format!("\"n_satisfied\": {}, ", c.n_satisfied));
+            out.push_str(&format!("\"n_dropped\": {}, ", c.n_dropped));
+            out.push_str(&format!(
+                "\"satisfaction_rate\": {}, ",
+                jnum(c.satisfaction_rate())
+            ));
+            out.push_str(&format!("\"avg_comm_ms\": {}, ", jnum(c.comm.mean() * 1e3)));
+            out.push_str(&format!("\"avg_e2e_ms\": {}", jnum(c.e2e.mean() * 1e3)));
+            out.push('}');
+        }
+        if !self.per_cell.is_empty() {
+            out.push_str("\n  ");
+        }
         out.push_str("]\n}\n");
         out
     }
@@ -449,6 +511,7 @@ mod tests {
         JobOutcome {
             job_id: 0,
             class_id: 0,
+            cell_id: 0,
             t_gen: 0.0,
             t_comm,
             t_wireline: 0.005,
@@ -539,8 +602,9 @@ mod tests {
             ("tight".to_string(), LatencyManagement::Joint { b_total: 0.070 }),
             ("loose".to_string(), LatencyManagement::Joint { b_total: 0.100 }),
         ];
-        let r = SimReport::from_outcomes_per_class(&[tight, loose, dropped], &classes);
+        let r = SimReport::from_outcomes_per_class(&[tight, loose, dropped], &classes, 1);
         assert_eq!(r.per_class.len(), 2);
+        assert!(r.per_cell.is_empty(), "single-cell runs skip per-cell slices");
         assert_eq!(r.per_class[0].name, "tight");
         assert_eq!(r.per_class[0].n_satisfied, 0);
         assert_eq!(r.per_class[1].n_satisfied, 1);
@@ -571,6 +635,7 @@ mod tests {
             SimReport::from_outcomes_per_class(
                 &outcomes,
                 &[("c".to_string(), policy)],
+                1,
             )
         };
         let mut a = mk(&[0.010, 0.020, 0.030]);
@@ -595,6 +660,7 @@ mod tests {
         let r = SimReport::from_outcomes_per_class(
             &outcomes,
             &[("chat \"v2\"".to_string(), policy)],
+            1,
         );
         let js = r.to_json();
         assert!(js.contains("\"n_jobs\": 1"));
@@ -607,5 +673,43 @@ mod tests {
         // empty reports serialize NaNs as null
         let empty = SimReport::from_outcomes(&[], &policy);
         assert!(empty.to_json().contains("\"satisfaction_rate\": null"));
+    }
+
+    #[test]
+    fn per_cell_slices_sum_to_overall_and_merge_exactly() {
+        let policy = LatencyManagement::Joint { b_total: 1.0 };
+        let classes = vec![("c".to_string(), policy)];
+        let mk = |cells: &[u32]| {
+            let outcomes: Vec<JobOutcome> = cells
+                .iter()
+                .map(|&cell| JobOutcome { cell_id: cell, ..done(0.01, 0.0, 0.05) })
+                .collect();
+            SimReport::from_outcomes_per_class(&outcomes, &classes, 3)
+        };
+        let mut a = mk(&[0, 2, 2]);
+        assert_eq!(a.per_cell.len(), 3);
+        assert_eq!(a.per_cell[0].name, "cell0");
+        assert_eq!(a.per_cell[0].n_jobs, 1);
+        assert_eq!(a.per_cell[1].n_jobs, 0);
+        assert_eq!(a.per_cell[2].n_jobs, 2);
+        let sum: u64 = a.per_cell.iter().map(|c| c.n_jobs).sum();
+        assert_eq!(sum, a.n_jobs);
+        // replications with the same topology merge slice-wise
+        let b = mk(&[1, 2]);
+        a.merge(&b);
+        assert_eq!(a.per_cell[1].n_jobs, 1);
+        assert_eq!(a.per_cell[2].n_jobs, 3);
+        let sum: u64 = a.per_cell.iter().map(|c| c.n_jobs).sum();
+        assert_eq!(sum, a.n_jobs);
+        // the JSON report carries the slices
+        assert!(a.to_json().contains("\"per_cell\""));
+        // a mismatched topology clears the breakdown instead of lying
+        let other = SimReport::from_outcomes_per_class(
+            &[done(0.01, 0.0, 0.05)],
+            &classes,
+            2,
+        );
+        a.merge(&other);
+        assert!(a.per_cell.is_empty());
     }
 }

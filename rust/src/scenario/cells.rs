@@ -1,0 +1,408 @@
+//! Multi-cell sharding: the per-cell radio runtime and the worker pool
+//! that steps cells in parallel inside one scenario.
+//!
+//! A [`CellSpec`] describes one gNB: its UE population and its own
+//! MAC/PHY configuration (numerology, SR dimensioning, scheduling
+//! policy). At run time each cell becomes a [`CellRt`] owning its own
+//! [`UeBank`], [`SlotWorkspace`], [`UlScheduler`] and RNG streams — no
+//! radio state is shared between cells, which is what makes the slot
+//! pipeline shardable across worker threads.
+//!
+//! Determinism (DESIGN.md §9): every cell draws from substreams of its
+//! own *cell seed* ([`cell_seed`]), so cell `k` of an N-cell scenario
+//! realizes exactly the trajectory of an independent single-cell
+//! scenario seeded with `cell_seed(master, k)` — the property the
+//! N-cell ≡ N-single-cell test pins. Cell 0 keeps the master seed
+//! itself, so single-cell scenarios reproduce the legacy SLS streams
+//! bit for bit.
+//!
+//! Threading: [`StepPool`] is the `std::thread::scope` + atomic-cursor
+//! pattern from [`crate::sweep`], specialized to slot batches. Workers
+//! park on a barrier between batches; each batch they claim cell
+//! indices from the cursor and step the cells due at the batch time.
+//! Because a step touches only the cell's own state, and the engine
+//! merges delivered SDUs in cell-index order afterwards, the threaded
+//! schedule is bit-identical to stepping the cells serially in index
+//! order.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Barrier, Mutex};
+
+use crate::config::SimConfig;
+use crate::mac::{drop_ues, MacConfig, SlotWorkspace, UeBank, UlScheduler};
+use crate::phy::numerology::{Carrier, Numerology};
+use crate::rng::Rng;
+
+/// One gNB of a multi-cell scenario: its UE population and its own
+/// MAC/PHY configuration. The scheme still owns `mac.job_priority`
+/// (synced at build time, exactly like `SimConfig::with_scheme`).
+#[derive(Debug, Clone, Copy)]
+pub struct CellSpec {
+    /// UEs dropped in this cell.
+    pub n_ues: u32,
+    /// Per-cell MAC configuration (SR dimensioning scales with this
+    /// cell's population, not the scenario total).
+    pub mac: MacConfig,
+    /// Per-cell carrier / numerology (cells may run different SCS; each
+    /// keeps its own slot clock).
+    pub carrier: Carrier,
+}
+
+impl CellSpec {
+    /// A cell with the Table I MAC/PHY defaults.
+    pub fn new(n_ues: u32) -> Self {
+        assert!(n_ues >= 1, "a cell needs at least one UE");
+        Self { n_ues, mac: MacConfig::default(), carrier: Carrier::table1() }
+    }
+
+    pub fn with_mac(mut self, mac: MacConfig) -> Self {
+        self.mac = mac;
+        self
+    }
+
+    pub fn with_carrier(mut self, carrier: Carrier) -> Self {
+        self.carrier = carrier;
+        self
+    }
+
+    /// Override the cell's NR numerology μ (re-derives the PRB count
+    /// for the carrier bandwidth).
+    pub fn with_numerology(mut self, mu: u8) -> Self {
+        let num = Numerology::new(mu);
+        self.carrier = Carrier {
+            numerology: num,
+            n_prb: Carrier::derive_n_prb(self.carrier.bandwidth_hz, num),
+            ..self.carrier
+        };
+        self
+    }
+}
+
+/// The master seed of cell `k`'s RNG substreams. Cell 0 keeps the
+/// scenario master seed, so single-cell runs reproduce the legacy
+/// streams exactly; cell `k` of an N-cell scenario matches an
+/// independent single-cell scenario seeded with `cell_seed(master, k)`.
+pub fn cell_seed(master: u64, cell: usize) -> u64 {
+    if cell == 0 {
+        master
+    } else {
+        // Weyl-style spacing; Rng::substream mixes the result again, so
+        // nearby cells decorrelate.
+        master ^ (cell as u64).wrapping_mul(0xA076_1D64_78BD_642F)
+    }
+}
+
+/// Runtime state of one cell: everything the slot pipeline mutates.
+/// All fields are cell-private — a slot step never reads another cell —
+/// which is the invariant that makes parallel stepping bit-identical to
+/// a serial cell loop.
+pub(crate) struct CellRt {
+    pub(crate) scheduler: UlScheduler,
+    pub(crate) bank: UeBank,
+    pub(crate) ws: SlotWorkspace,
+    /// Per-slot fading/HARQ draws of this cell.
+    rng_mac: Rng,
+    /// Per-job service realizations of this cell's jobs (consumed in
+    /// this cell's delivery order, so it matches a single-cell run).
+    pub(crate) rng_svc: Rng,
+    /// `[class][local_ue]` arrival + token-length streams.
+    pub(crate) job_rng: Vec<Vec<Rng>>,
+    /// `[local_ue]` background-traffic streams.
+    pub(crate) bg_rng: Vec<Rng>,
+    pub(crate) slot_dur: f64,
+    /// Absolute time of the next slot boundary (accumulated exactly as
+    /// the legacy queue-driven slot chain accumulated it).
+    pub(crate) next_slot: f64,
+    /// `to_bits()` of the last boundary stepped (sentinel `u64::MAX`
+    /// before the first step) — the engine's "stepped in this batch?"
+    /// test during the merge pass.
+    pub(crate) last_slot: u64,
+    slot_idx: u64,
+    /// False once the cell is past the horizon with empty buffers; the
+    /// slot clock then stops for good (arrivals only occur before the
+    /// horizon, so it can never need restarting).
+    pub(crate) ticking: bool,
+    pub(crate) sr_period: u64,
+    pub(crate) sr_proc: u64,
+    pub(crate) job_priority: bool,
+    pub(crate) n_ues: usize,
+    horizon: f64,
+}
+
+impl CellRt {
+    pub(crate) fn new(
+        idx: usize,
+        spec: &CellSpec,
+        cfg: &SimConfig,
+        n_classes: usize,
+    ) -> Self {
+        let seed = cell_seed(cfg.seed, idx);
+        let n_ues = spec.n_ues as usize;
+        // Identical substream ids as the legacy single-cell engine,
+        // rooted at the cell seed: per-(class, UE) job streams from
+        // 0x1000_0000 spaced 0x100_0000 per class, background at
+        // 0x2000 + ue, and the drop/MAC/service streams at their
+        // historical ids.
+        let mut rng_drop = Rng::substream(seed, 0xD0);
+        let bank =
+            UeBank::new(drop_ues(&mut rng_drop, n_ues, cfg.cell_r_min, cfg.cell_r_max));
+        let job_rng: Vec<Vec<Rng>> = (0..n_classes)
+            .map(|c| {
+                (0..n_ues)
+                    .map(|ue| {
+                        Rng::substream(
+                            seed,
+                            0x1000_0000 + 0x100_0000 * c as u64 + ue as u64,
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        let bg_rng: Vec<Rng> =
+            (0..n_ues).map(|ue| Rng::substream(seed, 0x2000 + ue as u64)).collect();
+        let slot_dur = spec.carrier.slot_duration();
+        Self {
+            scheduler: UlScheduler::new(spec.mac, spec.carrier),
+            bank,
+            ws: SlotWorkspace::new(),
+            rng_mac: Rng::substream(seed, 0xAC),
+            rng_svc: Rng::substream(seed, 0x5E),
+            job_rng,
+            bg_rng,
+            slot_dur,
+            // first boundary, exactly where the legacy engine primed
+            // its Slot event
+            next_slot: slot_dur,
+            last_slot: u64::MAX,
+            slot_idx: 0,
+            ticking: true,
+            sr_period: spec.mac.effective_sr_period(spec.n_ues),
+            sr_proc: spec.mac.grant_proc_slots,
+            job_priority: spec.mac.job_priority,
+            n_ues,
+            horizon: cfg.horizon,
+        }
+    }
+
+    /// Is this cell's next slot boundary the batch time `t_bits`?
+    #[inline]
+    pub(crate) fn due(&self, t_bits: u64) -> bool {
+        self.ticking && self.next_slot.to_bits() == t_bits
+    }
+
+    /// Step the slot due at `self.next_slot`. Touches only this cell's
+    /// state; the caller merges `ws.delivered` afterwards (grants and
+    /// delivered SDUs stay valid until the next step).
+    pub(crate) fn step_slot(&mut self) {
+        let now = self.next_slot;
+        self.scheduler.schedule_slot(
+            self.slot_idx,
+            &mut self.bank,
+            &mut self.rng_mac,
+            &mut self.ws,
+        );
+        self.slot_idx += 1;
+        self.last_slot = now.to_bits();
+        // Same liveness rule as the legacy slot chain: keep ticking
+        // while within the horizon or anything is still buffered.
+        self.ticking = now < self.horizon || self.bank.has_backlog();
+        self.next_slot = now + self.slot_dur;
+    }
+}
+
+/// Unwinding past a barrier rendezvous would strand the other
+/// participants forever (`std::sync::Barrier` has no poisoning), so a
+/// panic on any pool participant — a worker inside `step_slot`, or the
+/// engine thread mid-batch — must abort the process instead of
+/// deadlocking the scope join. Instantiate one per participant; its
+/// `Drop` turns an unwind into a loud crash and is a no-op otherwise.
+pub(crate) struct AbortOnPanic;
+
+impl Drop for AbortOnPanic {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            eprintln!(
+                "cell-step pool participant panicked — aborting to avoid a \
+                 barrier deadlock (see the panic message above)"
+            );
+            std::process::abort();
+        }
+    }
+}
+
+/// Persistent slot-batch worker pool: `participants - 1` scoped worker
+/// threads plus the coordinating engine thread rendezvous on one
+/// barrier per batch phase. Workers claim cell indices from an atomic
+/// cursor and step the cells due at the batch time; between batches
+/// they park on the barrier, so the engine thread has exclusive cell
+/// access for arrivals and merging.
+pub(crate) struct StepPool<'a> {
+    cells: &'a [Mutex<CellRt>],
+    cursor: AtomicUsize,
+    /// `f64::to_bits` of the batch's slot time.
+    t_batch: AtomicU64,
+    barrier: Barrier,
+    stop: AtomicBool,
+}
+
+impl<'a> StepPool<'a> {
+    /// `participants` counts the engine thread; spawn
+    /// `participants - 1` workers running [`StepPool::worker`].
+    pub(crate) fn new(cells: &'a [Mutex<CellRt>], participants: usize) -> Self {
+        assert!(participants >= 2, "a pool needs at least one worker");
+        Self {
+            cells,
+            cursor: AtomicUsize::new(0),
+            t_batch: AtomicU64::new(0),
+            barrier: Barrier::new(participants),
+            stop: AtomicBool::new(false),
+        }
+    }
+
+    /// Worker loop: park, step due cells, park again.
+    pub(crate) fn worker(&self) {
+        let _guard = AbortOnPanic;
+        loop {
+            self.barrier.wait();
+            if self.stop.load(Ordering::Acquire) {
+                break;
+            }
+            self.drain();
+            self.barrier.wait();
+        }
+    }
+
+    fn drain(&self) {
+        let t = self.t_batch.load(Ordering::Acquire);
+        loop {
+            let i = self.cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= self.cells.len() {
+                break;
+            }
+            let mut cell = self.cells[i].lock().unwrap();
+            if cell.due(t) {
+                cell.step_slot();
+            }
+        }
+    }
+
+    /// Coordinator side: step every cell due at `t`, using the parked
+    /// workers plus the calling thread. Returns once all cells are
+    /// stepped (the caller may then merge without synchronization).
+    pub(crate) fn step_batch(&self, t: f64) {
+        self.t_batch.store(t.to_bits(), Ordering::Release);
+        self.cursor.store(0, Ordering::Release);
+        self.barrier.wait();
+        self.drain();
+        self.barrier.wait();
+    }
+
+    /// Release the workers to exit (call once, after the event loop).
+    pub(crate) fn shutdown(&self) {
+        self.stop.store(true, Ordering::Release);
+        self.barrier.wait();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mac::{Sdu, SduKind};
+
+    #[test]
+    fn cell_seed_is_identity_for_cell_zero_and_distinct_elsewhere() {
+        assert_eq!(cell_seed(42, 0), 42);
+        let seeds: Vec<u64> = (0..8).map(|k| cell_seed(42, k)).collect();
+        for i in 0..seeds.len() {
+            for j in (i + 1)..seeds.len() {
+                assert_ne!(seeds[i], seeds[j], "cells {i} and {j} collide");
+            }
+        }
+        // different masters stay distinct per cell
+        assert_ne!(cell_seed(1, 3), cell_seed(2, 3));
+    }
+
+    #[test]
+    fn spec_numerology_override_rederives_prbs() {
+        let spec = CellSpec::new(10).with_numerology(1);
+        assert_eq!(spec.carrier.numerology.mu, 1);
+        // 100 MHz @ 30 kHz SCS → 273 PRBs (TS 38.101-1)
+        assert_eq!(spec.carrier.n_prb, 273);
+        assert_eq!(spec.carrier.slot_duration(), 0.5e-3);
+    }
+
+    fn rt(idx: usize, seed: u64) -> CellRt {
+        let mut cfg = SimConfig::table1();
+        cfg.seed = seed;
+        cfg.horizon = 1.0;
+        CellRt::new(idx, &CellSpec::new(4), &cfg, 1)
+    }
+
+    #[test]
+    fn cell_runtime_steps_its_own_slot_clock() {
+        let mut c = rt(0, 7);
+        let first = c.next_slot;
+        assert_eq!(first, c.slot_dur);
+        assert!(c.due(first.to_bits()));
+        c.step_slot();
+        assert_eq!(c.last_slot, first.to_bits());
+        assert_eq!(c.next_slot, first + c.slot_dur);
+        assert!(c.ticking, "within the horizon the clock keeps running");
+    }
+
+    #[test]
+    fn clock_stops_after_horizon_with_empty_buffers_only() {
+        let mut c = rt(0, 7);
+        // fast-forward past the horizon
+        while c.next_slot < 1.5 {
+            c.step_slot();
+        }
+        assert!(!c.ticking, "idle cell past the horizon must stop");
+        // a backlogged cell keeps draining past the horizon
+        let mut c = rt(0, 7);
+        c.bank.push_bg_sdu(0, Sdu {
+            kind: SduKind::Background,
+            total_bytes: 1 << 20,
+            bytes_left: 1 << 20,
+            t_arrival: 0.0,
+        });
+        while c.next_slot < 1.01 {
+            c.step_slot();
+        }
+        assert!(
+            c.ticking || c.bank.total_backlog_bytes() == 0,
+            "backlogged cell must keep ticking until drained"
+        );
+    }
+
+    #[test]
+    fn pool_steps_exactly_the_due_cells() {
+        let cells: Vec<Mutex<CellRt>> =
+            (0..6).map(|k| Mutex::new(rt(k, 11))).collect();
+        // Stagger cell 3 two boundaries ahead so it is not due at the
+        // first boundary AND its last_slot differs from the batch time
+        // (one step would leave last_slot == t0, the batch time).
+        let t0 = {
+            let mut c3 = cells[3].lock().unwrap();
+            c3.step_slot();
+            c3.step_slot();
+            cells[0].lock().unwrap().next_slot
+        };
+        let pool = StepPool::new(&cells, 3);
+        std::thread::scope(|scope| {
+            for _ in 0..2 {
+                scope.spawn(|| pool.worker());
+            }
+            pool.step_batch(t0);
+            pool.shutdown();
+        });
+        for (k, cm) in cells.iter().enumerate() {
+            let c = cm.lock().unwrap();
+            if k == 3 {
+                assert_ne!(c.last_slot, t0.to_bits(), "cell 3 was not due");
+            } else {
+                assert_eq!(c.last_slot, t0.to_bits(), "cell {k} missed the batch");
+            }
+        }
+    }
+}

@@ -1,25 +1,34 @@
 //! The scenario event loop: the Fig 5 pipeline generalized to N
-//! workload classes and M compute nodes.
+//! workload classes, K cells and M compute nodes.
 //!
 //! ```text
-//! UE job gen (per class) ──► RLC buffers ──► slot scheduler ──► gNB
-//!      │                          ▲                              │
-//!  background ────────────────────┘               wireline (RAN/MEC)
-//!                                                                ▼
-//!   per-class outcomes ◄── ServiceModel ◄── Routing ──► node 0..M
-//!                                                 (Sequential server
-//!                                                  or BatchEngine)
+//!  cell 0: UE job gen ─► RLC ─► slot scheduler ─► gNB 0 ─┐
+//!  cell 1: UE job gen ─► RLC ─► slot scheduler ─► gNB 1 ─┤ wireline
+//!    ⋮         (each cell: own UeBank/workspace/RNGs)    ⋮    │
+//!                                                             ▼
+//!     per-class/per-cell outcomes ◄── ServiceModel ◄── Routing ──► node 0..M
+//!                                                  (Sequential server
+//!                                                   or BatchEngine)
 //! ```
 //!
-//! Stream discipline: every entity draws from its own substream of the
-//! master seed from a disjoint id range (no aliasing up to the 1 M UE
-//! config cap), the event-handler logic mirrors the legacy `Sls::run`
-//! loop line for line, and `TokenDist::Fixed` consumes no randomness —
-//! so single-class runs are exactly as deterministic and statistically
-//! identical to the seed SLS. The execution models consume no
-//! randomness either: a `Sequential` run is bit-for-bit the legacy
-//! trajectory, and switching a node to `ContinuousBatching` only adds
-//! `BatchStep` iteration-boundary events on that node's timeline.
+//! Stream discipline: every entity draws from its own substream of its
+//! *cell's* seed ([`super::cell_seed`]; cell 0 keeps the master seed)
+//! from a disjoint id range, the event-handler logic mirrors the legacy
+//! `Sls::run` loop line for line, and `TokenDist::Fixed` consumes no
+//! randomness — so single-cell, single-class runs are exactly as
+//! deterministic and statistically identical to the seed SLS. The
+//! execution models consume no randomness either.
+//!
+//! Determinism rule for multi-cell merging (DESIGN.md §9): the per-cell
+//! slot clocks live *outside* the event calendar. At every instant the
+//! engine first drains calendar events (in insertion order, as before),
+//! then steps all cells whose slot boundary falls at that instant —
+//! serially or on the [`StepPool`] workers — and merges their delivered
+//! SDUs into the calendar in ascending cell-index order. Because a slot
+//! step touches only its own cell's state, the threaded schedule is
+//! bit-identical to the serial one.
+
+use std::sync::Mutex;
 
 use crate::compute::{
     BatchEngine, BatchEvent, BatchJob, ComputeJob, ComputeNode, Discipline, ExecutionModel,
@@ -27,11 +36,11 @@ use crate::compute::{
 };
 use crate::config::{Management, SchemeConfig};
 use crate::dess::EventQueue;
-use crate::mac::{drop_ues, Sdu, SduKind, SlotWorkspace, UeBank};
-use crate::mac::UlScheduler;
+use crate::mac::{Sdu, SduKind};
 use crate::metrics::{JobFate, JobOutcome, LatencyManagement, SimReport};
-use crate::rng::Rng;
+use crate::sweep::resolve_threads;
 
+use super::cells::{CellRt, StepPool};
 use super::routing::NodeView;
 use super::{NodeSpec, Scenario};
 
@@ -58,9 +67,10 @@ pub fn management_of(scheme: &SchemeConfig, b_total: f64) -> LatencyManagement {
 #[derive(Debug)]
 pub struct ScenarioResult {
     pub outcomes: Vec<JobOutcome>,
-    /// Aggregate report with `per_class` populated.
+    /// Aggregate report with `per_class` (and, for multi-cell
+    /// scenarios, `per_cell`) populated.
     pub report: SimReport,
-    /// Simulated events processed.
+    /// Simulated events processed (calendar pops + cell-slot steps).
     pub events: u64,
     /// Simulated seconds per wall-clock second.
     pub speedup: f64,
@@ -68,13 +78,11 @@ pub struct ScenarioResult {
 
 #[derive(Debug, Clone, Copy)]
 enum Ev {
-    /// MAC slot boundary.
-    Slot,
-    /// Job of `class` generated at UE `ue`.
-    JobArrival { ue: usize, class: usize },
-    /// Background packet at UE `ue`.
-    BgArrival { ue: usize },
-    /// Prompt fully received at gNB crossed the wireline.
+    /// Job of `class` generated at UE `ue` of `cell`.
+    JobArrival { cell: u32, ue: u32, class: u32 },
+    /// Background packet at UE `ue` of `cell`.
+    BgArrival { cell: u32, ue: u32 },
+    /// Prompt fully received at the gNB crossed the wireline.
     ComputeEnqueue { job: u64 },
     /// Sequential node `node` finished `job`.
     ComputeDone { node: usize, job: u64 },
@@ -85,6 +93,8 @@ enum Ev {
 #[derive(Debug, Clone, Copy)]
 struct JobState {
     class: usize,
+    /// Originating cell (gNB) of the job.
+    cell: u32,
     t_gen: f64,
     /// Set when the last prompt byte reaches the gNB.
     t_comm: Option<f64>,
@@ -189,17 +199,65 @@ fn apply_batch_events(
     }
 }
 
+/// Earliest pending slot boundary across the still-ticking cells
+/// (`f64::INFINITY` when every slot clock has stopped).
+fn next_slot_time(cells: &[Mutex<CellRt>]) -> f64 {
+    let mut t = f64::INFINITY;
+    for cm in cells {
+        let c = cm.lock().unwrap();
+        if c.ticking && c.next_slot < t {
+            t = c.next_slot;
+        }
+    }
+    t
+}
+
 pub(super) fn run(sc: &Scenario) -> ScenarioResult {
     let wall0 = std::time::Instant::now();
-    let cfg = &sc.base;
-    let master = cfg.seed;
-    let slot_dur = cfg.carrier.slot_duration();
-    let n_ues = cfg.n_ues as usize;
     let n_classes = sc.classes.len();
     assert!(n_classes > 0, "scenario needs at least one workload class");
     assert!(!sc.nodes.is_empty(), "scenario needs at least one compute node");
+    assert!(!sc.cells.is_empty(), "scenario needs at least one cell (build() defaults one)");
 
-    let scheduler = UlScheduler::new(cfg.mac, cfg.carrier);
+    let cells: Vec<Mutex<CellRt>> = sc
+        .cells
+        .iter()
+        .enumerate()
+        .map(|(k, spec)| Mutex::new(CellRt::new(k, spec, &sc.base, n_classes)))
+        .collect();
+
+    // `cell_threads = 1` (the default) steps cells inline; `0` uses all
+    // cores. More participants than cells would only park on barriers.
+    let participants = resolve_threads(sc.cell_threads).min(cells.len());
+    if participants <= 1 {
+        event_loop(sc, &cells, None, wall0)
+    } else {
+        let pool = StepPool::new(&cells, participants);
+        std::thread::scope(|scope| {
+            // An unwind out of the event loop (or out of a worker)
+            // would leave the other pool participants parked on a
+            // barrier with no panic path, deadlocking the scope join —
+            // the guard aborts instead so a bug surfaces as a crash.
+            let _guard = super::cells::AbortOnPanic;
+            for _ in 1..participants {
+                scope.spawn(|| pool.worker());
+            }
+            let result = event_loop(sc, &cells, Some(&pool), wall0);
+            pool.shutdown();
+            result
+        })
+    }
+}
+
+fn event_loop(
+    sc: &Scenario,
+    cells: &[Mutex<CellRt>],
+    pool: Option<&StepPool<'_>>,
+    wall0: std::time::Instant,
+) -> ScenarioResult {
+    let cfg = &sc.base;
+    let n_classes = sc.classes.len();
+
     let discipline = discipline_of(&cfg.scheme);
     let mut nodes: Vec<NodeRt> = sc
         .nodes
@@ -216,77 +274,105 @@ pub(super) fn run(sc: &Scenario) -> ScenarioResult {
     let mut router = sc.make_router();
     let t_wireline = cfg.scheme.deployment.wireline_latency();
 
-    // Independent randomness per concern, with disjoint stream-id
-    // ranges: per-(class, UE) job streams start at 0x1000_0000 and are
-    // spaced 0x100_0000 per class (well above the 1 M UE config cap);
-    // background streams live at 0x2000 + ue, far below them.
-    let mut rng_drop = Rng::substream(master, 0xD0);
-    let mut rng_mac = Rng::substream(master, 0xAC);
-    let mut rng_svc = Rng::substream(master, 0x5E);
-    let mut job_rng: Vec<Vec<Rng>> = (0..n_classes)
-        .map(|c| {
-            (0..n_ues)
-                .map(|ue| {
-                    Rng::substream(
-                        master,
-                        0x1000_0000 + 0x100_0000 * c as u64 + ue as u64,
-                    )
-                })
-                .collect()
-        })
-        .collect();
-    let mut ue_bg_rng: Vec<Rng> =
-        (0..n_ues).map(|ue| Rng::substream(master, 0x2000 + ue as u64)).collect();
-
-    // Drop UEs in the cell (staggered SR phases) behind the backlog
-    // index — the slot scheduler iterates active UEs, not the
-    // population.
-    let mut bank = UeBank::new(drop_ues(&mut rng_drop, n_ues, cfg.cell_r_min, cfg.cell_r_max));
-
+    let total_ues: usize = sc.cells.iter().map(|c| c.n_ues as usize).sum();
     let mut jobs: Vec<JobState> = Vec::with_capacity(4096);
     // Pre-size the calendar: priming schedules one arrival per
-    // (UE, class) plus one background event per UE and the slot clock.
-    let mut q: EventQueue<Ev> = EventQueue::with_capacity(n_ues * (n_classes + 1) + 8);
-    // Reused per-slot grant workspace and per-enqueue routing snapshot
-    // + node-event buffers (keeps the hot path allocation-free).
-    let mut ws = SlotWorkspace::new();
+    // (cell, UE, class) plus one background event per UE. Slot clocks
+    // live outside the calendar.
+    let mut q: EventQueue<Ev> = EventQueue::with_capacity(total_ues * (n_classes + 1) + 8);
+    // Reused per-enqueue routing snapshot + node-event buffers (keeps
+    // the hot path allocation-free).
     let mut views: Vec<NodeView> = Vec::with_capacity(sc.nodes.len());
     let mut node_ev: Vec<NodeEvent> = Vec::with_capacity(16);
     let mut batch_ev: Vec<BatchEvent> = Vec::with_capacity(64);
 
-    // Background packet rate (constant across the run; the per-event
-    // handler reuses this instead of recomputing the interval).
+    // Background packet rate (constant across the run).
     let bg_rate = 1.0 / cfg.background.mean_interval();
-
-    // Prime arrival processes + the slot clock.
-    for ue in 0..n_ues {
-        for (c, class) in sc.classes.iter().enumerate() {
-            let gap = job_rng[c][ue].exp(class.rate_per_ue);
-            q.schedule_at(gap, Ev::JobArrival { ue, class: c });
-        }
-        q.schedule_at(ue_bg_rng[ue].exp(bg_rate), Ev::BgArrival { ue });
-    }
-    q.schedule_at(slot_dur, Ev::Slot);
-
-    let sr_period = cfg.mac.effective_sr_period(cfg.n_ues);
-    let sr_proc = cfg.mac.grant_proc_slots;
     let bg_bytes = cfg.background.packet_bytes;
-    let drain_horizon = cfg.horizon + 2.0;
-    let mut slot_idx: u64 = 0;
 
-    while let Some(t) = q.peek_time() {
-        if t > drain_horizon {
+    // Prime arrival processes (per cell, same per-UE order as the
+    // legacy engine).
+    for (k, cm) in cells.iter().enumerate() {
+        let mut c = cm.lock().unwrap();
+        for ue in 0..c.n_ues {
+            for (ci, class) in sc.classes.iter().enumerate() {
+                let gap = c.job_rng[ci][ue].exp(class.rate_per_ue);
+                q.schedule_at(
+                    gap,
+                    Ev::JobArrival { cell: k as u32, ue: ue as u32, class: ci as u32 },
+                );
+            }
+            let gap = c.bg_rng[ue].exp(bg_rate);
+            q.schedule_at(gap, Ev::BgArrival { cell: k as u32, ue: ue as u32 });
+        }
+    }
+
+    let drain_horizon = cfg.horizon + 2.0;
+    let mut slot_events: u64 = 0;
+    let mut t_slot = next_slot_time(cells);
+
+    loop {
+        let t_q = q.peek_time().unwrap_or(f64::INFINITY);
+        // Calendar events drain before slot boundaries at the same
+        // instant (matching the legacy tie order, where the enqueue
+        // crossing the wireline landed before the chained Slot event).
+        let t_next = t_q.min(t_slot);
+        if !t_next.is_finite() || t_next > drain_horizon {
             break;
+        }
+        if t_q > t_slot {
+            // --- slot batch: step every cell due at t_slot ---
+            let t_bits = t_slot.to_bits();
+            match pool {
+                Some(p) => p.step_batch(t_slot),
+                None => {
+                    for cm in cells {
+                        let mut c = cm.lock().unwrap();
+                        if c.due(t_bits) {
+                            c.step_slot();
+                        }
+                    }
+                }
+            }
+            // Merge delivered SDUs into the calendar in ascending
+            // cell-index order — the determinism rule that makes the
+            // threaded schedule bit-identical to a serial cell loop.
+            for cm in cells {
+                let mut c = cm.lock().unwrap();
+                if c.last_slot != t_bits {
+                    continue;
+                }
+                slot_events += 1;
+                // TBs land at the end of the slot. The flat delivered
+                // buffer is already in grant order.
+                let t_rx = t_slot + c.slot_dur;
+                for d in &c.ws.delivered {
+                    if let SduKind::Job { job_id } = d.kind {
+                        let js = &mut jobs[job_id as usize];
+                        js.t_comm = Some(t_rx - js.t_gen);
+                        q.schedule_at(t_rx + t_wireline, Ev::ComputeEnqueue { job: job_id });
+                    }
+                }
+                // Invalidate so an un-stepped later batch at the same
+                // bit pattern (impossible for monotone clocks, but
+                // cheap to rule out) cannot re-merge.
+                c.last_slot = u64::MAX;
+            }
+            t_slot = next_slot_time(cells);
+            continue;
         }
         let (now, ev) = q.pop().unwrap();
         match ev {
-            Ev::JobArrival { ue, class } => {
+            Ev::JobArrival { cell, ue, class } => {
                 if now < cfg.horizon {
-                    let spec = &sc.classes[class];
-                    let n_input = spec.input_tokens.sample(&mut job_rng[class][ue]);
+                    let spec = &sc.classes[class as usize];
+                    let mut c = cells[cell as usize].lock().unwrap();
+                    let ue = ue as usize;
+                    let n_input = spec.input_tokens.sample(&mut c.job_rng[class as usize][ue]);
                     let job_id = jobs.len() as u64;
                     jobs.push(JobState {
-                        class,
+                        class: class as usize,
+                        cell,
                         t_gen: now,
                         t_comm: None,
                         t_node_arrival: None,
@@ -300,70 +386,57 @@ pub(super) fn run(sc: &Scenario) -> ScenarioResult {
                         fate: JobFate::InFlight,
                         measured: now >= cfg.warmup,
                     });
-                    let arrival_slot = (now / slot_dur) as u64;
-                    bank.note_arrival(ue, arrival_slot, sr_period, sr_proc);
-                    if cfg.mac.job_priority {
+                    let arrival_slot = (now / c.slot_dur) as u64;
+                    let (sr_period, sr_proc) = (c.sr_period, c.sr_proc);
+                    c.bank.note_arrival(ue, arrival_slot, sr_period, sr_proc);
+                    if c.job_priority {
                         // ICC job-aware prioritization: dedicated SR
                         // resource bypasses the shared cycle.
-                        bank.ue_mut(ue).note_job_arrival_expedited(arrival_slot, sr_proc);
+                        c.bank.ue_mut(ue).note_job_arrival_expedited(arrival_slot, sr_proc);
                     }
                     let bytes = spec.request_bytes(n_input);
-                    bank.push_job_sdu(ue, Sdu {
+                    c.bank.push_job_sdu(ue, Sdu {
                         kind: SduKind::Job { job_id },
                         total_bytes: bytes,
                         bytes_left: bytes,
                         t_arrival: now,
                     });
-                    let gap = job_rng[class][ue].exp(spec.rate_per_ue);
-                    q.schedule_in(gap, Ev::JobArrival { ue, class });
+                    let gap = c.job_rng[class as usize][ue].exp(spec.rate_per_ue);
+                    q.schedule_in(gap, Ev::JobArrival { cell, ue: ue as u32, class });
                 }
             }
-            Ev::BgArrival { ue } => {
+            Ev::BgArrival { cell, ue } => {
                 if now < cfg.horizon {
-                    let arrival_slot = (now / slot_dur) as u64;
-                    bank.note_arrival(ue, arrival_slot, sr_period, sr_proc);
-                    bank.push_bg_sdu(ue, Sdu {
+                    let mut c = cells[cell as usize].lock().unwrap();
+                    let ue = ue as usize;
+                    let arrival_slot = (now / c.slot_dur) as u64;
+                    let (sr_period, sr_proc) = (c.sr_period, c.sr_proc);
+                    c.bank.note_arrival(ue, arrival_slot, sr_period, sr_proc);
+                    c.bank.push_bg_sdu(ue, Sdu {
                         kind: SduKind::Background,
                         total_bytes: bg_bytes,
                         bytes_left: bg_bytes,
                         t_arrival: now,
                     });
-                    q.schedule_in(ue_bg_rng[ue].exp(bg_rate), Ev::BgArrival { ue });
-                }
-            }
-            Ev::Slot => {
-                scheduler.schedule_slot(slot_idx, &mut bank, &mut rng_mac, &mut ws);
-                slot_idx += 1;
-                // TBs land at the end of the slot. The flat delivered
-                // buffer is already in grant order, so iterating it
-                // preserves the per-grant enqueue order.
-                let t_rx = now + slot_dur;
-                for d in &ws.delivered {
-                    if let SduKind::Job { job_id } = d.kind {
-                        let js = &mut jobs[job_id as usize];
-                        js.t_comm = Some(t_rx - js.t_gen);
-                        q.schedule_at(
-                            t_rx + t_wireline,
-                            Ev::ComputeEnqueue { job: job_id },
-                        );
-                    }
-                }
-                // Keep the slot clock running while anything is active
-                // (O(1): the bank tracks total backlog).
-                let active = now < cfg.horizon || bank.has_backlog();
-                if active {
-                    q.schedule_in(slot_dur, Ev::Slot);
+                    let gap = c.bg_rng[ue].exp(bg_rate);
+                    q.schedule_in(gap, Ev::BgArrival { cell, ue: ue as u32 });
                 }
             }
             Ev::ComputeEnqueue { job } => {
-                let (class_id, n_input, t_gen, t_comm) = {
+                let (cell_id, class_id, n_input, t_gen, t_comm) = {
                     let js = &jobs[job as usize];
-                    (js.class, js.n_input, js.t_gen, js.t_comm.expect("enqueue before comm done"))
+                    (
+                        js.cell as usize,
+                        js.class,
+                        js.n_input,
+                        js.t_gen,
+                        js.t_comm.expect("enqueue before comm done"),
+                    )
                 };
                 let spec = &sc.classes[class_id];
                 views.clear();
                 views.extend(nodes.iter().zip(sc.nodes.iter()).map(|(rt, s)| rt.view(s)));
-                let target = router.pick(class_id, &views);
+                let target = router.pick(class_id, cell_id, &views);
                 // A routing bug must fail loudly: silently clamping
                 // would report single-node results as multi-node.
                 assert!(
@@ -371,8 +444,14 @@ pub(super) fn run(sc: &Scenario) -> ScenarioResult {
                     "Routing::pick returned {target} for {} nodes",
                     nodes.len()
                 );
-                let demand =
-                    sc.service.realize(spec, n_input, &sc.nodes[target].gpu, &mut rng_svc);
+                // Service realizations draw from the originating cell's
+                // stream, in that cell's delivery order — so each cell
+                // of an N-cell run matches an independent single-cell
+                // run (DESIGN.md §9).
+                let demand = {
+                    let mut c = cells[cell_id].lock().unwrap();
+                    sc.service.realize(spec, n_input, &sc.nodes[target].gpu, &mut c.rng_svc)
+                };
                 {
                     let js = &mut jobs[job as usize];
                     js.n_output = demand.n_output;
@@ -481,6 +560,7 @@ pub(super) fn run(sc: &Scenario) -> ScenarioResult {
             JobOutcome {
                 job_id: id as u64,
                 class_id: j.class as u32,
+                cell_id: j.cell,
                 t_gen: j.t_gen,
                 t_comm: j.t_comm.unwrap_or(0.0),
                 t_wireline,
@@ -499,12 +579,13 @@ pub(super) fn run(sc: &Scenario) -> ScenarioResult {
         .iter()
         .map(|c| (c.name.clone(), management_of(&cfg.scheme, c.b_total)))
         .collect();
-    let report = SimReport::from_outcomes_per_class(&outcomes, &class_policies);
+    let report =
+        SimReport::from_outcomes_per_class(&outcomes, &class_policies, sc.cells.len());
     let wall = wall0.elapsed().as_secs_f64();
     ScenarioResult {
         outcomes,
         report,
-        events: q.processed(),
+        events: q.processed() + slot_events,
         speedup: if wall > 0.0 { cfg.horizon / wall } else { f64::INFINITY },
     }
 }

@@ -6,10 +6,15 @@
 //!
 //! * N [`WorkloadClass`]es (own arrival rate, token distributions,
 //!   model constants, and latency budget each),
+//! * K gNB cells ([`CellSpec`]: per-cell UE population, MAC config and
+//!   PHY numerology), each owning its own `UeBank`/slot pipeline and
+//!   steppable on worker threads ([`ScenarioBuilder::threads`]) with
+//!   bit-identical results,
 //! * a pluggable [`ServiceModel`] (deterministic roofline or per-job
 //!   token-sampled prefill/decode),
 //! * M compute nodes behind a [`Routing`] policy (least-loaded,
-//!   round-robin, class-affinity),
+//!   round-robin, class-affinity, or cell-affinity — the ICC "serve at
+//!   the originating gNB, spill to neighbors" placement),
 //!
 //! on top of the same 5G uplink SLS substrate (PHY/MAC/traffic). The
 //! legacy API is preserved as a thin wrapper: `Sls::new(cfg)` builds a
@@ -40,13 +45,17 @@
 //! }
 //! ```
 
+pub mod cells;
 mod engine;
 pub mod routing;
 pub mod service;
 pub mod workload;
 
+pub use cells::{cell_seed, CellSpec};
 pub use engine::{discipline_of, management_of, ScenarioResult};
-pub use routing::{ClassAffinity, LeastLoaded, NodeView, RoundRobin, Routing, RoutingPolicy};
+pub use routing::{
+    CellAffinity, ClassAffinity, LeastLoaded, NodeView, RoundRobin, Routing, RoutingPolicy,
+};
 pub use service::{
     RooflineService, ServiceDemand, ServiceModel, ServiceModelKind, TokenSampledService,
 };
@@ -81,10 +90,16 @@ type RouterFactory = Box<dyn Fn() -> Box<dyn Routing>>;
 pub struct Scenario {
     pub(crate) base: SimConfig,
     pub(crate) classes: Vec<WorkloadClass>,
+    /// The gNBs of the scenario (never empty after `build`; a legacy
+    /// single-cell scenario has exactly one, mirrored from `base`).
+    pub(crate) cells: Vec<CellSpec>,
     pub(crate) nodes: Vec<NodeSpec>,
     pub(crate) service: Box<dyn ServiceModel>,
     pub(crate) routing: RoutingPolicy,
     pub(crate) router_factory: Option<RouterFactory>,
+    /// Worker threads stepping cells inside `run` (1 = serial, 0 = all
+    /// cores). Never changes the results, only the wall clock.
+    pub(crate) cell_threads: usize,
 }
 
 impl std::fmt::Debug for Scenario {
@@ -92,10 +107,12 @@ impl std::fmt::Debug for Scenario {
         f.debug_struct("Scenario")
             .field("base", &self.base)
             .field("classes", &self.classes)
+            .field("cells", &self.cells)
             .field("nodes", &self.nodes)
             .field("service", &self.service)
             .field("routing", &self.routing)
             .field("custom_router", &self.router_factory.is_some())
+            .field("cell_threads", &self.cell_threads)
             .finish()
     }
 }
@@ -112,6 +129,21 @@ impl Scenario {
 
     pub fn classes(&self) -> &[WorkloadClass] {
         &self.classes
+    }
+
+    /// The gNBs of the scenario (at least one).
+    pub fn cells(&self) -> &[CellSpec] {
+        &self.cells
+    }
+
+    /// Total UE population across all cells.
+    pub fn total_ues(&self) -> u32 {
+        self.cells.iter().map(|c| c.n_ues).sum()
+    }
+
+    /// Worker threads stepping cells inside `run` (1 = serial).
+    pub fn threads(&self) -> usize {
+        self.cell_threads
     }
 
     pub fn nodes(&self) -> &[NodeSpec] {
@@ -140,9 +172,9 @@ impl Scenario {
         self.service.name()
     }
 
-    /// Total offered job rate across the cell (jobs/s, all classes).
+    /// Total offered job rate across all cells (jobs/s, all classes).
     pub fn offered_rate(&self) -> f64 {
-        self.base.n_ues as f64 * self.classes.iter().map(|c| c.rate_per_ue).sum::<f64>()
+        self.total_ues() as f64 * self.classes.iter().map(|c| c.rate_per_ue).sum::<f64>()
     }
 }
 
@@ -152,10 +184,12 @@ impl Scenario {
 pub struct ScenarioBuilder {
     base: SimConfig,
     classes: Vec<WorkloadClass>,
+    cells: Vec<CellSpec>,
     nodes: Vec<NodeSpec>,
     service: Box<dyn ServiceModel>,
     routing: RoutingPolicy,
     router_factory: Option<RouterFactory>,
+    cell_threads: usize,
 }
 
 impl std::fmt::Debug for ScenarioBuilder {
@@ -163,10 +197,12 @@ impl std::fmt::Debug for ScenarioBuilder {
         f.debug_struct("ScenarioBuilder")
             .field("base", &self.base)
             .field("classes", &self.classes)
+            .field("cells", &self.cells)
             .field("nodes", &self.nodes)
             .field("service", &self.service)
             .field("routing", &self.routing)
             .field("custom_router", &self.router_factory.is_some())
+            .field("cell_threads", &self.cell_threads)
             .finish()
     }
 }
@@ -182,19 +218,23 @@ impl ScenarioBuilder {
         Self {
             base: SimConfig::table1(),
             classes: Vec::new(),
+            cells: Vec::new(),
             nodes: Vec::new(),
             service: Box::new(RooflineService),
             routing: RoutingPolicy::LeastLoaded,
             router_factory: None,
+            cell_threads: 1,
         }
     }
 
-    /// Mirror a legacy [`SimConfig`] as a single-class, single-node
-    /// scenario (the [`crate::sim::Sls`] compatibility path).
+    /// Mirror a legacy [`SimConfig`] as a single-class, single-cell,
+    /// single-node scenario (the [`crate::sim::Sls`] compatibility
+    /// path).
     pub fn from_sim_config(cfg: &SimConfig) -> Self {
         Self {
             base: cfg.clone(),
             classes: vec![WorkloadClass::from_legacy(&cfg.job_traffic, &cfg.job)],
+            cells: Vec::new(),
             nodes: vec![NodeSpec {
                 gpu: cfg.gpu,
                 n_servers: cfg.n_gpus,
@@ -203,6 +243,7 @@ impl ScenarioBuilder {
             service: Box::new(RooflineService),
             routing: RoutingPolicy::LeastLoaded,
             router_factory: None,
+            cell_threads: 1,
         }
     }
 
@@ -238,6 +279,31 @@ impl ScenarioBuilder {
     /// Add one workload class.
     pub fn workload(mut self, class: WorkloadClass) -> Self {
         self.classes.push(class);
+        self
+    }
+
+    /// Add one gNB cell. An empty cell list builds the legacy
+    /// single-cell scenario from the base config (`n_ues`, MAC,
+    /// carrier); the first explicit cell replaces that default.
+    pub fn cell(mut self, spec: CellSpec) -> Self {
+        self.cells.push(spec);
+        self
+    }
+
+    /// Add `count` identical cells.
+    pub fn cells(mut self, count: usize, spec: CellSpec) -> Self {
+        assert!(count >= 1);
+        for _ in 0..count {
+            self.cells.push(spec);
+        }
+        self
+    }
+
+    /// Worker threads stepping cells inside `run` (default 1 = serial;
+    /// 0 = all cores). Thread count never changes the results — the
+    /// engine merges per-cell events in cell-index order either way.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.cell_threads = threads;
         self
     }
 
@@ -291,12 +357,14 @@ impl ScenarioBuilder {
 
     /// Override builder state from a TOML document: `[scenario]` /
     /// `[scheme]` / `[service]` / `[routing]` tables plus
-    /// `[[workload]]` and `[[node]]` arrays. Unknown keys error.
+    /// `[[workload]]`, `[[node]]` and `[[cell]]` arrays. Unknown keys
+    /// error.
     pub fn apply_toml(mut self, doc: &Document) -> anyhow::Result<Self> {
         for key in doc.keys() {
-            let structural = [("workload.", "workload"), ("node.", "node")]
-                .into_iter()
-                .find_map(|(p, name)| key.strip_prefix(p).map(|rest| (rest, name)));
+            let structural =
+                [("workload.", "workload"), ("node.", "node"), ("cell.", "cell")]
+                    .into_iter()
+                    .find_map(|(p, name)| key.strip_prefix(p).map(|rest| (rest, name)));
             if let Some((rest, name)) = structural {
                 // Parsed structurally below — but only `[[...]]` tables
                 // flatten to "<name>.<idx>.<field>" AND register an
@@ -316,7 +384,8 @@ impl ScenarioBuilder {
                 // Values are pulled through the shared typed helpers
                 // after this name-validation loop.
                 "scenario.n_ues" | "scenario.horizon" | "scenario.warmup"
-                | "scenario.seed" | "service.model" | "routing.policy" => {}
+                | "scenario.seed" | "scenario.threads" | "service.model"
+                | "routing.policy" | "routing.spill_queue" => {}
                 // apply_scheme_toml owns the [scheme] key set and
                 // rejects unknown or mistyped ones.
                 k if k.starts_with("scheme.") => {}
@@ -347,6 +416,12 @@ impl ScenarioBuilder {
             }
             self.base.seed = v as u64;
         }
+        if let Some(v) = typed_i64(doc, "scenario.threads")? {
+            if !(0..=1024).contains(&v) {
+                anyhow::bail!("'scenario.threads' must be in 0..=1024, got {v}");
+            }
+            self.cell_threads = v as usize;
+        }
         if let Some(s) = typed_str(doc, "service.model")? {
             let kind = ServiceModelKind::parse(s)
                 .ok_or_else(|| anyhow::anyhow!("unknown service model '{s}'"))?;
@@ -357,7 +432,21 @@ impl ScenarioBuilder {
                 .ok_or_else(|| anyhow::anyhow!("unknown routing policy '{s}'"))?;
             self.router_factory = None;
         }
+        if let Some(v) = typed_i64(doc, "routing.spill_queue")? {
+            if !(0..=1_000_000_000).contains(&v) {
+                anyhow::bail!("'routing.spill_queue' must be in 0..=1e9, got {v}");
+            }
+            match &mut self.routing {
+                RoutingPolicy::CellAffinity { spill_queue } => *spill_queue = v as u32,
+                other => anyhow::bail!(
+                    "'routing.spill_queue' requires policy = \"cell_affinity\" \
+                     (got '{}')",
+                    other.name()
+                ),
+            }
+        }
         self.base.apply_scheme_toml(doc)?;
+        self.apply_cells_toml(doc)?;
         let workloads = workloads_from_toml(doc)?;
         if !workloads.is_empty() {
             self.classes = workloads;
@@ -443,8 +532,71 @@ impl ScenarioBuilder {
         Ok(self)
     }
 
+    /// Parse the `[[cell]]` tables: per-cell UE population (`ues`,
+    /// required), replication (`count`), numerology (`mu`), scheduling
+    /// policy (`policy = "pf" | "rr"`) and SR dimensioning
+    /// (`sr_period_slots`, `sr_slots_per_ue`). Unknown or mistyped
+    /// keys error; explicit cells replace the builder's cell list.
+    fn apply_cells_toml(&mut self, doc: &Document) -> anyhow::Result<()> {
+        let n_cells = doc.array_len("cell");
+        if n_cells == 0 {
+            return Ok(());
+        }
+        self.cells.clear();
+        for i in 0..n_cells {
+            let prefix = format!("cell.{i}.");
+            let mut ues: Option<u32> = None;
+            let mut count = 1usize;
+            let mut mac = self.base.mac;
+            let carrier = self.base.carrier;
+            let mut mu: Option<u8> = None;
+            for key in doc.keys().filter(|k| k.starts_with(prefix.as_str())) {
+                let field = &key[prefix.len()..];
+                let missing = || anyhow::anyhow!("bad value for '{key}'");
+                match field {
+                    "ues" => ues = Some(workload::u32_field(doc, key, 1, 1_000_000)?),
+                    "count" => {
+                        count = workload::u32_field(doc, key, 1, 4096)? as usize
+                    }
+                    "mu" => mu = Some(workload::u32_field(doc, key, 0, 4)? as u8),
+                    "policy" => {
+                        mac.policy = match doc.str(key).ok_or_else(missing)? {
+                            "pf" => crate::mac::SchedulingPolicy::ProportionalFair,
+                            "rr" => crate::mac::SchedulingPolicy::RoundRobin,
+                            other => anyhow::bail!("unknown cell policy '{other}'"),
+                        }
+                    }
+                    "sr_period_slots" => {
+                        mac.sr_period_slots =
+                            workload::u32_field(doc, key, 0, 1_000_000)? as u64
+                    }
+                    "sr_slots_per_ue" => {
+                        let v = doc.f64(key).ok_or_else(missing)?;
+                        if !(0.0..=1e6).contains(&v) {
+                            anyhow::bail!("'{key}' must be in 0..=1e6, got {v}");
+                        }
+                        mac.sr_slots_per_ue = v;
+                    }
+                    other => anyhow::bail!("unknown cell key '{other}'"),
+                }
+            }
+            let n_ues =
+                ues.ok_or_else(|| anyhow::anyhow!("cell {i}: 'ues' is required"))?;
+            let mut spec = CellSpec { n_ues, mac, carrier };
+            if let Some(mu) = mu {
+                // same carrier re-derivation as the builder path
+                spec = spec.with_numerology(mu);
+            }
+            for _ in 0..count {
+                self.cells.push(spec);
+            }
+        }
+        Ok(())
+    }
+
     /// Finalize. An empty class list defaults to the Table I
-    /// translation workload; an empty node list to the base config's
+    /// translation workload; an empty cell list to one cell mirroring
+    /// the base config; an empty node list to the base config's
     /// compute node. Panics on an invalid assembly — use
     /// [`ScenarioBuilder::try_build`] to handle errors (the CLI does).
     pub fn build(self) -> Scenario {
@@ -465,6 +617,28 @@ impl ScenarioBuilder {
                 &self.base.job,
             ));
         }
+        if self.cells.is_empty() {
+            // Legacy single-cell scenario mirrored from the base.
+            self.cells.push(CellSpec {
+                n_ues: self.base.n_ues,
+                mac: self.base.mac,
+                carrier: self.base.carrier,
+            });
+        }
+        let total_ues: u64 = self.cells.iter().map(|c| c.n_ues as u64).sum();
+        if !(1..=1_000_000).contains(&total_ues) {
+            anyhow::bail!(
+                "total UE population across cells must be in 1..=1000000, got {total_ues}"
+            );
+        }
+        // The scheme owns job-aware prioritization — same sync rule as
+        // `SimConfig::with_scheme`, applied to every cell.
+        for cell in &mut self.cells {
+            cell.mac.job_priority = self.base.scheme.priority_scheme;
+        }
+        // Keep the base population coherent with the sharded total for
+        // anything still reading `base.n_ues`.
+        self.base.n_ues = total_ues as u32;
         if self.nodes.is_empty() {
             self.nodes.push(NodeSpec {
                 gpu: self.base.gpu,
@@ -525,10 +699,12 @@ impl ScenarioBuilder {
         Ok(Scenario {
             base: self.base,
             classes: self.classes,
+            cells: self.cells,
             nodes: self.nodes,
             service: self.service,
             routing: self.routing,
             router_factory: self.router_factory,
+            cell_threads: self.cell_threads,
         })
     }
 }
@@ -617,7 +793,7 @@ mod tests {
             fn name(&self) -> &'static str {
                 "pin_to_last"
             }
-            fn pick(&mut self, _class_id: usize, nodes: &[NodeView]) -> usize {
+            fn pick(&mut self, _class_id: usize, _cell_id: usize, nodes: &[NodeView]) -> usize {
                 nodes.len().saturating_sub(1)
             }
         }
@@ -748,6 +924,112 @@ mod tests {
             .try_build()
             .unwrap_err();
         assert!(err.to_string().contains("servers = 1"), "{err}");
+    }
+
+    #[test]
+    fn builder_cells_default_mirrors_base_and_sums_populations() {
+        // no explicit cells → one legacy cell from the base config
+        let s = small(ScenarioBuilder::new().scheme(SchemeConfig::icc())).build();
+        assert_eq!(s.cells().len(), 1);
+        assert_eq!(s.cells()[0].n_ues, 20);
+        assert!(s.cells()[0].mac.job_priority, "scheme must own job_priority");
+        // explicit cells replace the base population
+        let s = ScenarioBuilder::new()
+            .scheme(SchemeConfig::icc())
+            .horizon(5.0)
+            .cells(3, CellSpec::new(10))
+            .cell(CellSpec::new(5))
+            .build();
+        assert_eq!(s.cells().len(), 4);
+        assert_eq!(s.total_ues(), 35);
+        assert!((s.offered_rate() - 35.0).abs() < 1e-12);
+        for c in s.cells() {
+            assert!(c.mac.job_priority);
+        }
+    }
+
+    #[test]
+    fn toml_cell_tables_parse_with_count_and_numerology() {
+        let doc = Document::parse(
+            "[scenario]\nthreads = 2\n\
+             [routing]\npolicy = \"cell_affinity\"\nspill_queue = 3\n\
+             [[cell]]\nues = 12\ncount = 2\nmu = 1\n\
+             [[cell]]\nues = 6\npolicy = \"rr\"\nsr_period_slots = 8\n",
+        )
+        .unwrap();
+        let s = ScenarioBuilder::new().apply_toml(&doc).unwrap().build();
+        assert_eq!(s.cells().len(), 3);
+        assert_eq!(s.total_ues(), 30);
+        assert_eq!(s.threads(), 2);
+        assert_eq!(s.cells()[0].carrier.numerology.mu, 1);
+        assert_eq!(s.cells()[0].carrier.n_prb, 273);
+        assert_eq!(s.cells()[1].n_ues, 12);
+        assert_eq!(
+            s.cells()[2].mac.policy,
+            crate::mac::SchedulingPolicy::RoundRobin
+        );
+        assert_eq!(s.cells()[2].mac.sr_period_slots, 8);
+        assert_eq!(s.routing(), RoutingPolicy::CellAffinity { spill_queue: 3 });
+    }
+
+    #[test]
+    fn toml_cell_tables_strictly_validated() {
+        for bad in [
+            // ues is required
+            "[[cell]]\ncount = 2",
+            // out-of-range population
+            "[[cell]]\nues = 0",
+            // bad numerology
+            "[[cell]]\nues = 4\nmu = 7",
+            // zero replication
+            "[[cell]]\nues = 4\ncount = 0",
+            // unknown key
+            "[[cell]]\nues = 4\nfrobnicate = 1",
+            // mistyped policy
+            "[[cell]]\nues = 4\npolicy = \"edf\"",
+            // single-bracket table must error loudly
+            "[cell]\nues = 4",
+            // spill_queue without cell_affinity
+            "[routing]\npolicy = \"rr\"\nspill_queue = 2",
+            // threads out of range
+            "[scenario]\nthreads = -1",
+        ] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(
+                ScenarioBuilder::new().apply_toml(&doc).is_err(),
+                "accepted: {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn build_rejects_oversized_total_population() {
+        let err = ScenarioBuilder::new()
+            .cells(2, CellSpec::new(600_000))
+            .try_build()
+            .unwrap_err();
+        assert!(err.to_string().contains("1..=1000000"), "{err}");
+    }
+
+    #[test]
+    fn multi_cell_run_reports_per_cell_slices() {
+        let s = ScenarioBuilder::new()
+            .scheme(SchemeConfig::icc())
+            .horizon(4.0)
+            .warmup(0.5)
+            .cells(2, CellSpec::new(8))
+            .routing(RoutingPolicy::CellAffinity { spill_queue: u32::MAX })
+            .node(GpuSpec::gh200_nvl2().scaled(2.0), 1)
+            .node(GpuSpec::gh200_nvl2().scaled(2.0), 1)
+            .build();
+        let r = s.run();
+        assert_eq!(r.report.per_cell.len(), 2);
+        assert_eq!(r.report.per_cell[0].name, "cell0");
+        let sum: u64 = r.report.per_cell.iter().map(|c| c.n_jobs).sum();
+        assert_eq!(sum, r.report.n_jobs);
+        for c in &r.report.per_cell {
+            assert!(c.n_jobs > 0, "cell '{}' generated no jobs", c.name);
+        }
     }
 
     #[test]

@@ -29,12 +29,14 @@ impl NodeView {
 }
 
 /// A routing decision maker. Policies may keep state (e.g. the
-/// round-robin cursor); the engine calls `pick` once per job.
+/// round-robin cursor); the engine calls `pick` once per job with the
+/// job's workload class and originating cell (gNB).
 pub trait Routing: std::fmt::Debug {
     fn name(&self) -> &'static str;
 
-    /// Choose a node index in `0..nodes.len()` for a job of `class_id`.
-    fn pick(&mut self, class_id: usize, nodes: &[NodeView]) -> usize;
+    /// Choose a node index in `0..nodes.len()` for a job of `class_id`
+    /// generated in cell `cell_id`.
+    fn pick(&mut self, class_id: usize, cell_id: usize, nodes: &[NodeView]) -> usize;
 }
 
 /// Send each job to the node with the fewest jobs in system (ties go
@@ -47,7 +49,7 @@ impl Routing for LeastLoaded {
         "least_loaded"
     }
 
-    fn pick(&mut self, _class_id: usize, nodes: &[NodeView]) -> usize {
+    fn pick(&mut self, _class_id: usize, _cell_id: usize, nodes: &[NodeView]) -> usize {
         nodes
             .iter()
             .enumerate()
@@ -68,7 +70,7 @@ impl Routing for RoundRobin {
         "round_robin"
     }
 
-    fn pick(&mut self, _class_id: usize, nodes: &[NodeView]) -> usize {
+    fn pick(&mut self, _class_id: usize, _cell_id: usize, nodes: &[NodeView]) -> usize {
         if nodes.is_empty() {
             return 0;
         }
@@ -88,7 +90,7 @@ impl Routing for ClassAffinity {
         "class_affinity"
     }
 
-    fn pick(&mut self, class_id: usize, nodes: &[NodeView]) -> usize {
+    fn pick(&mut self, class_id: usize, _cell_id: usize, nodes: &[NodeView]) -> usize {
         if nodes.is_empty() {
             return 0;
         }
@@ -96,13 +98,65 @@ impl Routing for ClassAffinity {
     }
 }
 
-/// Config-level routing selector (`[routing] policy = "..."`).
+/// ICC placement: serve each job at its originating gNB's node
+/// (`cell % n_nodes`), spilling to the least-loaded neighbor only when
+/// the home node's queue exceeds `spill_queue` pending jobs
+/// (`u32::MAX` = never spill — strict cell isolation). This is the
+/// topology knob that makes ICC-vs-MEC comparisons expressible: ICC
+/// pins compute at the RAN node that received the prompt, while a MEC
+/// pool behaves like [`LeastLoaded`] over the shared site.
+#[derive(Debug, Clone, Copy)]
+pub struct CellAffinity {
+    /// Home-node queue length above which jobs spill to neighbors.
+    pub spill_queue: u32,
+}
+
+impl Default for CellAffinity {
+    fn default() -> Self {
+        Self { spill_queue: DEFAULT_SPILL_QUEUE }
+    }
+}
+
+/// Default spill threshold: a handful of queued jobs before a prompt
+/// is worth the extra backhaul hop.
+pub const DEFAULT_SPILL_QUEUE: u32 = 8;
+
+impl Routing for CellAffinity {
+    fn name(&self) -> &'static str {
+        "cell_affinity"
+    }
+
+    fn pick(&mut self, _class_id: usize, cell_id: usize, nodes: &[NodeView]) -> usize {
+        if nodes.is_empty() {
+            return 0;
+        }
+        let home = cell_id % nodes.len();
+        if nodes[home].queue_len <= self.spill_queue as usize {
+            return home;
+        }
+        // Spill: least-loaded neighbor (ties to the lowest index);
+        // degenerate single-node tiers fall back to the home node.
+        nodes
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != home)
+            .min_by_key(|(_, n)| n.load())
+            .map(|(i, _)| i)
+            .unwrap_or(home)
+    }
+}
+
+/// Config-level routing selector (`[routing] policy = "..."`, with
+/// `spill_queue` refining `cell_affinity`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum RoutingPolicy {
     #[default]
     LeastLoaded,
     RoundRobin,
     ClassAffinity,
+    CellAffinity {
+        spill_queue: u32,
+    },
 }
 
 impl RoutingPolicy {
@@ -111,6 +165,9 @@ impl RoutingPolicy {
             "least_loaded" | "least-loaded" | "lld" => Some(Self::LeastLoaded),
             "round_robin" | "round-robin" | "rr" => Some(Self::RoundRobin),
             "class_affinity" | "class-affinity" | "affinity" => Some(Self::ClassAffinity),
+            "cell_affinity" | "cell-affinity" | "icc" => {
+                Some(Self::CellAffinity { spill_queue: DEFAULT_SPILL_QUEUE })
+            }
             _ => None,
         }
     }
@@ -120,6 +177,7 @@ impl RoutingPolicy {
             Self::LeastLoaded => "least_loaded",
             Self::RoundRobin => "round_robin",
             Self::ClassAffinity => "class_affinity",
+            Self::CellAffinity { .. } => "cell_affinity",
         }
     }
 
@@ -128,6 +186,7 @@ impl RoutingPolicy {
             Self::LeastLoaded => Box::new(LeastLoaded),
             Self::RoundRobin => Box::<RoundRobin>::default(),
             Self::ClassAffinity => Box::new(ClassAffinity),
+            Self::CellAffinity { spill_queue } => Box::new(CellAffinity { spill_queue }),
         }
     }
 }
@@ -151,16 +210,16 @@ mod tests {
     #[test]
     fn least_loaded_picks_min_with_stable_ties() {
         let mut r = LeastLoaded;
-        assert_eq!(r.pick(0, &views(&[(3, 2), (0, 1), (2, 0)])), 1);
+        assert_eq!(r.pick(0, 0, &views(&[(3, 2), (0, 1), (2, 0)])), 1);
         // tie between 0 and 2 → lowest index
-        assert_eq!(r.pick(0, &views(&[(1, 0), (5, 1), (1, 0)])), 0);
+        assert_eq!(r.pick(0, 0, &views(&[(1, 0), (5, 1), (1, 0)])), 0);
     }
 
     #[test]
     fn round_robin_cycles() {
         let mut r = RoundRobin::default();
         let v = views(&[(0, 0), (0, 0), (0, 0)]);
-        let picks: Vec<usize> = (0..6).map(|_| r.pick(0, &v)).collect();
+        let picks: Vec<usize> = (0..6).map(|_| r.pick(0, 0, &v)).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
     }
 
@@ -168,9 +227,28 @@ mod tests {
     fn class_affinity_pins_classes() {
         let mut r = ClassAffinity;
         let v = views(&[(9, 2), (0, 0)]);
-        assert_eq!(r.pick(0, &v), 0, "affinity ignores load");
-        assert_eq!(r.pick(1, &v), 1);
-        assert_eq!(r.pick(2, &v), 0);
+        assert_eq!(r.pick(0, 1, &v), 0, "affinity ignores load and cell");
+        assert_eq!(r.pick(1, 0, &v), 1);
+        assert_eq!(r.pick(2, 0, &v), 0);
+    }
+
+    #[test]
+    fn cell_affinity_serves_at_home_gnb_until_spill() {
+        let mut r = CellAffinity { spill_queue: 2 };
+        // home queue within threshold → stay home, whatever the load
+        let v = views(&[(2, 2), (0, 0), (0, 0)]);
+        assert_eq!(r.pick(0, 0, &v), 0);
+        assert_eq!(r.pick(5, 1, &v), 1, "cell 1 maps to node 1");
+        assert_eq!(r.pick(0, 4, &v), 1, "cells wrap modulo the tier size");
+        // home queue above threshold → spill to least-loaded neighbor
+        let v = views(&[(3, 2), (1, 1), (0, 1)]);
+        assert_eq!(r.pick(0, 0, &v), 2);
+        // never-spill configuration pins regardless of backlog
+        let mut strict = CellAffinity { spill_queue: u32::MAX };
+        assert_eq!(strict.pick(0, 0, &v), 0);
+        // single-node tier cannot spill anywhere
+        let v1 = views(&[(100, 2)]);
+        assert_eq!(r.pick(0, 0, &v1), 0);
     }
 
     #[test]
@@ -178,11 +256,16 @@ mod tests {
         assert_eq!(RoutingPolicy::parse("rr"), Some(RoutingPolicy::RoundRobin));
         assert_eq!(RoutingPolicy::parse("least_loaded"), Some(RoutingPolicy::LeastLoaded));
         assert_eq!(RoutingPolicy::parse("affinity"), Some(RoutingPolicy::ClassAffinity));
+        assert_eq!(
+            RoutingPolicy::parse("cell_affinity"),
+            Some(RoutingPolicy::CellAffinity { spill_queue: DEFAULT_SPILL_QUEUE })
+        );
         assert_eq!(RoutingPolicy::parse("??"), None);
         for p in [
             RoutingPolicy::LeastLoaded,
             RoutingPolicy::RoundRobin,
             RoutingPolicy::ClassAffinity,
+            RoutingPolicy::CellAffinity { spill_queue: 4 },
         ] {
             assert_eq!(p.build().name(), p.name());
         }

@@ -7,7 +7,9 @@
 
 pub mod args;
 pub mod bench;
+pub mod jsonmini;
 pub mod logger;
+pub mod perfgate;
 pub mod proptest;
 pub mod stats;
 pub mod tomlmini;

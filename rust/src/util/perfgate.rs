@@ -1,0 +1,414 @@
+//! Benchmark-regression gate: compare the machine-readable bench
+//! outputs (`BENCH_hotpath.json`, `BENCH_scale.json`) against a
+//! committed `benchmarks/baseline.json` and fail on regressions beyond
+//! a tolerance. Drives the `icc6g bench-diff` subcommand and CI's
+//! `perf-gate` job.
+//!
+//! Baseline format:
+//!
+//! ```json
+//! {
+//!   "tolerance": 0.25,
+//!   "entries": [
+//!     {"key": "scale/sls_scale/1000/active_set/events_per_sec",
+//!      "value": 500000.0, "higher_is_better": true}
+//!   ]
+//! }
+//! ```
+//!
+//! Keys are flattened measurement paths ([`hotpath_metrics`] /
+//! [`scale_metrics`]). A measurement regresses when it is worse than
+//! `value` by more than `tolerance` in its bad direction (a 2×
+//! slowdown at the default 25% tolerance always fails); a baseline key
+//! with no measurement also fails, so the gate cannot rot silently.
+
+use crate::util::jsonmini::Value;
+
+#[derive(Debug, Clone)]
+pub struct BaselineEntry {
+    pub key: String,
+    pub value: f64,
+    pub higher_is_better: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct Baseline {
+    /// Allowed relative slack before a delta counts as a regression.
+    pub tolerance: f64,
+    pub entries: Vec<BaselineEntry>,
+}
+
+/// Parse `benchmarks/baseline.json`. Unknown top-level keys (e.g. a
+/// `comment`) are ignored; malformed entries error.
+pub fn parse_baseline(text: &str) -> anyhow::Result<Baseline> {
+    let v = Value::parse(text).map_err(|e| anyhow::anyhow!("baseline: {e}"))?;
+    let tolerance = match v.get("tolerance") {
+        None => 0.25,
+        Some(t) => {
+            let t = t
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("baseline: 'tolerance' must be a number"))?;
+            if !(0.0..1.0).contains(&t) {
+                anyhow::bail!("baseline: 'tolerance' must be in [0, 1), got {t}");
+            }
+            t
+        }
+    };
+    let rows = v
+        .get("entries")
+        .and_then(|e| e.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("baseline: missing 'entries' array"))?;
+    let mut entries = Vec::with_capacity(rows.len());
+    for (i, row) in rows.iter().enumerate() {
+        let key = row
+            .get("key")
+            .and_then(|k| k.as_str())
+            .ok_or_else(|| anyhow::anyhow!("baseline entry {i}: missing 'key'"))?;
+        let value = row
+            .get("value")
+            .and_then(|x| x.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("baseline entry {i}: missing 'value'"))?;
+        if !(value.is_finite() && value > 0.0) {
+            anyhow::bail!("baseline entry {i} ('{key}'): value must be positive");
+        }
+        let higher_is_better = match row.get("higher_is_better") {
+            None => default_higher_is_better(key),
+            Some(b) => b.as_bool().ok_or_else(|| {
+                anyhow::anyhow!("baseline entry {i}: 'higher_is_better' must be a bool")
+            })?,
+        };
+        entries.push(BaselineEntry { key: key.to_string(), value, higher_is_better });
+    }
+    Ok(Baseline { tolerance, entries })
+}
+
+/// Direction heuristic for keys without an explicit flag: latencies and
+/// wall clocks shrink, everything else (rates, speedups) grows.
+pub fn default_higher_is_better(key: &str) -> bool {
+    !(key.ends_with("/mean_ns") || key.ends_with("/wall_s"))
+}
+
+/// Flatten `BENCH_hotpath.json` (the `util::bench` result array) into
+/// `hotpath/<name>/mean_ns` measurements.
+pub fn hotpath_metrics(text: &str) -> anyhow::Result<Vec<(String, f64)>> {
+    let v = Value::parse(text).map_err(|e| anyhow::anyhow!("BENCH_hotpath: {e}"))?;
+    let rows = v
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("BENCH_hotpath: expected a JSON array"))?;
+    let mut out = Vec::with_capacity(rows.len());
+    for row in rows {
+        let (Some(name), Some(mean)) = (
+            row.get("name").and_then(|n| n.as_str()),
+            row.get("mean_ns").and_then(|m| m.as_f64()),
+        ) else {
+            continue;
+        };
+        out.push((format!("hotpath/{name}/mean_ns"), mean));
+    }
+    Ok(out)
+}
+
+/// Flatten `BENCH_scale.json` (the population-scaling bench) into
+/// `scale/...` measurements: per-population events/s for both scan
+/// modes, the active-vs-dense speedup (machine-independent), and the
+/// sweep-harness wall clocks.
+pub fn scale_metrics(text: &str) -> anyhow::Result<Vec<(String, f64)>> {
+    let v = Value::parse(text).map_err(|e| anyhow::anyhow!("BENCH_scale: {e}"))?;
+    let rows = v
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("BENCH_scale: expected a JSON array"))?;
+    let mut out = Vec::with_capacity(rows.len());
+    for row in rows {
+        let Some(name) = row.get("name").and_then(|n| n.as_str()) else {
+            continue;
+        };
+        match name {
+            "sls_scale" => {
+                if let (Some(n_ues), Some(mode), Some(eps)) = (
+                    row.get("n_ues").and_then(|x| x.as_f64()),
+                    row.get("mode").and_then(|x| x.as_str()),
+                    row.get("events_per_sec").and_then(|x| x.as_f64()),
+                ) {
+                    out.push((
+                        format!("scale/sls_scale/{}/{mode}/events_per_sec", n_ues as u64),
+                        eps,
+                    ));
+                }
+            }
+            "speedup_vs_dense" => {
+                if let (Some(n_ues), Some(s)) = (
+                    row.get("n_ues").and_then(|x| x.as_f64()),
+                    row.get("speedup").and_then(|x| x.as_f64()),
+                ) {
+                    out.push((format!("scale/speedup_vs_dense/{}", n_ues as u64), s));
+                }
+            }
+            sweep if sweep.starts_with("sweep_") => {
+                if let Some(w) = row.get("wall_s").and_then(|x| x.as_f64()) {
+                    out.push((format!("scale/{sweep}/wall_s"), w));
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(out)
+}
+
+/// One gate comparison.
+#[derive(Debug, Clone)]
+pub struct Delta {
+    pub key: String,
+    pub baseline: f64,
+    /// `None` when the bench output no longer produces this key.
+    pub current: Option<f64>,
+    /// current / baseline (1.0 when missing).
+    pub ratio: f64,
+    pub regressed: bool,
+}
+
+/// Compare measurements against the baseline. Every baseline entry is
+/// checked; measurements without a baseline entry are informational
+/// only (they appear in the table via [`render_markdown`]'s extras).
+pub fn diff(baseline: &Baseline, measured: &[(String, f64)]) -> Vec<Delta> {
+    baseline
+        .entries
+        .iter()
+        .map(|e| {
+            let current = measured
+                .iter()
+                .find(|(k, _)| *k == e.key)
+                .map(|(_, v)| *v);
+            match current {
+                None => Delta {
+                    key: e.key.clone(),
+                    baseline: e.value,
+                    current: None,
+                    ratio: 1.0,
+                    regressed: true,
+                },
+                Some(v) => {
+                    let ratio = v / e.value;
+                    let regressed = if e.higher_is_better {
+                        v < e.value * (1.0 - baseline.tolerance)
+                    } else {
+                        v > e.value * (1.0 + baseline.tolerance)
+                    };
+                    Delta {
+                        key: e.key.clone(),
+                        baseline: e.value,
+                        current: Some(v),
+                        ratio,
+                        regressed,
+                    }
+                }
+            }
+        })
+        .collect()
+}
+
+fn fmt_val(v: f64) -> String {
+    if v >= 10_000.0 {
+        format!("{v:.0}")
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+/// Render the delta table as GitHub-flavored markdown (the CI job tees
+/// it into `$GITHUB_STEP_SUMMARY`). `extras` lists measured keys with
+/// no baseline entry, shown for trajectory context.
+pub fn render_markdown(
+    deltas: &[Delta],
+    extras: &[(String, f64)],
+    tolerance: f64,
+) -> String {
+    let mut out = String::new();
+    out.push_str("### Benchmark-regression gate\n\n");
+    out.push_str(&format!(
+        "Tolerance: ±{:.0}% vs `benchmarks/baseline.json`\n\n",
+        tolerance * 100.0
+    ));
+    out.push_str("| metric | baseline | current | ratio | status |\n");
+    out.push_str("|---|---:|---:|---:|---|\n");
+    for d in deltas {
+        let (cur, ratio) = match d.current {
+            Some(v) => (fmt_val(v), format!("{:.2}x", d.ratio)),
+            None => ("missing".to_string(), "—".to_string()),
+        };
+        let status = if d.regressed { "**REGRESSED**" } else { "ok" };
+        out.push_str(&format!(
+            "| `{}` | {} | {} | {} | {} |\n",
+            d.key,
+            fmt_val(d.baseline),
+            cur,
+            ratio,
+            status
+        ));
+    }
+    for (k, v) in extras {
+        out.push_str(&format!("| `{k}` | — | {} | — | untracked |\n", fmt_val(v)));
+    }
+    let n_bad = deltas.iter().filter(|d| d.regressed).count();
+    if n_bad > 0 {
+        out.push_str(&format!("\n{n_bad} metric(s) regressed beyond tolerance.\n"));
+    } else {
+        out.push_str("\nAll tracked metrics within tolerance.\n");
+    }
+    out
+}
+
+/// JSON string escaping for measurement keys — bench names are
+/// free-form, and an unescaped quote would brick the written baseline.
+fn jkey(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' | '\r' | '\t' => out.push(' '),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Serialize a refreshed baseline from the current measurements (the
+/// `bench-diff --update` path). Directions come from
+/// [`default_higher_is_better`].
+pub fn baseline_json(measured: &[(String, f64)], tolerance: f64) -> String {
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"tolerance\": {tolerance},\n"));
+    out.push_str("  \"entries\": [");
+    for (i, (k, v)) in measured.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"key\": \"{}\", \"value\": {v}, \"higher_is_better\": {}}}",
+            jkey(k),
+            default_higher_is_better(k)
+        ));
+    }
+    if !measured.is_empty() {
+        out.push_str("\n  ");
+    }
+    out.push_str("]\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BASE: &str = r#"{
+      "tolerance": 0.25,
+      "comment": "ignored free-form field",
+      "entries": [
+        {"key": "scale/sls_scale/1000/active_set/events_per_sec", "value": 1000000.0, "higher_is_better": true},
+        {"key": "hotpath/sls: 5s simulated/mean_ns", "value": 200000.0, "higher_is_better": false}
+      ]
+    }"#;
+
+    #[test]
+    fn baseline_parses_with_comment_and_defaults() {
+        let b = parse_baseline(BASE).unwrap();
+        assert_eq!(b.tolerance, 0.25);
+        assert_eq!(b.entries.len(), 2);
+        assert!(b.entries[0].higher_is_better);
+        assert!(!b.entries[1].higher_is_better);
+        // direction defaults derive from the key suffix
+        let b2 = parse_baseline(
+            "{\"entries\": [{\"key\": \"a/wall_s\", \"value\": 1.0}, {\"key\": \"b/events_per_sec\", \"value\": 2.0}]}",
+        )
+        .unwrap();
+        assert!(!b2.entries[0].higher_is_better);
+        assert!(b2.entries[1].higher_is_better);
+    }
+
+    #[test]
+    fn baseline_rejects_malformed_inputs() {
+        for bad in [
+            "not json",
+            "{\"entries\": 3}",
+            "{\"entries\": [{\"value\": 1.0}]}",
+            "{\"entries\": [{\"key\": \"k\"}]}",
+            "{\"entries\": [{\"key\": \"k\", \"value\": -1.0}]}",
+            "{\"tolerance\": 2.0, \"entries\": []}",
+        ] {
+            assert!(parse_baseline(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn injected_2x_slowdown_fails_the_gate() {
+        let b = parse_baseline(BASE).unwrap();
+        // events/s halved AND latency doubled — both must trip
+        let measured = vec![
+            ("scale/sls_scale/1000/active_set/events_per_sec".to_string(), 500_000.0),
+            ("hotpath/sls: 5s simulated/mean_ns".to_string(), 400_000.0),
+        ];
+        let deltas = diff(&b, &measured);
+        assert!(deltas.iter().all(|d| d.regressed), "{deltas:?}");
+        let md = render_markdown(&deltas, &[], b.tolerance);
+        assert!(md.contains("REGRESSED"), "{md}");
+    }
+
+    #[test]
+    fn deltas_within_tolerance_pass() {
+        let b = parse_baseline(BASE).unwrap();
+        // 10% slower events/s, 20% slower latency: inside ±25%
+        let measured = vec![
+            ("scale/sls_scale/1000/active_set/events_per_sec".to_string(), 900_000.0),
+            ("hotpath/sls: 5s simulated/mean_ns".to_string(), 240_000.0),
+        ];
+        let deltas = diff(&b, &measured);
+        assert!(deltas.iter().all(|d| !d.regressed), "{deltas:?}");
+        // improvements never regress
+        let measured = vec![
+            ("scale/sls_scale/1000/active_set/events_per_sec".to_string(), 5_000_000.0),
+            ("hotpath/sls: 5s simulated/mean_ns".to_string(), 10_000.0),
+        ];
+        assert!(diff(&b, &measured).iter().all(|d| !d.regressed));
+    }
+
+    #[test]
+    fn missing_measurement_is_a_failure() {
+        let b = parse_baseline(BASE).unwrap();
+        let deltas = diff(&b, &[]);
+        assert!(deltas.iter().all(|d| d.regressed && d.current.is_none()));
+    }
+
+    #[test]
+    fn bench_jsons_flatten_to_gate_keys() {
+        let hot = "[\n  {\"name\": \"dess: 10k schedule+pop\", \"iters\": 5, \"mean_ns\": 100.0, \"std_ns\": 1.0, \"min_ns\": 1.0, \"p50_ns\": 1.0, \"p95_ns\": 1.0}\n]";
+        let m = hotpath_metrics(hot).unwrap();
+        assert_eq!(m, vec![("hotpath/dess: 10k schedule+pop/mean_ns".to_string(), 100.0)]);
+
+        let scale = "[\n  {\"name\": \"sls_scale\", \"n_ues\": 1000, \"mode\": \"active_set\", \"events\": 5, \"jobs\": 2, \"wall_s\": 0.1, \"events_per_sec\": 50.0},\n  {\"name\": \"speedup_vs_dense\", \"n_ues\": 1000, \"speedup\": 3.5},\n  {\"name\": \"sweep_parallel\", \"points\": 4, \"seeds\": 3, \"wall_s\": 1.25}\n]";
+        let m = scale_metrics(scale).unwrap();
+        assert_eq!(m.len(), 3);
+        assert_eq!(m[0].0, "scale/sls_scale/1000/active_set/events_per_sec");
+        assert_eq!(m[1], ("scale/speedup_vs_dense/1000".to_string(), 3.5));
+        assert_eq!(m[2], ("scale/sweep_parallel/wall_s".to_string(), 1.25));
+    }
+
+    #[test]
+    fn update_round_trips_through_the_parser() {
+        let measured = vec![
+            ("scale/sls_scale/100/active_set/events_per_sec".to_string(), 1.5e6),
+            ("hotpath/mac: one 60-UE slot/mean_ns".to_string(), 2.5e4),
+            // quoted/backslashed bench names must survive the writer
+            ("hotpath/sls \"fast\" \\ path/mean_ns".to_string(), 3.0e4),
+        ];
+        let text = baseline_json(&measured, 0.25);
+        let b = parse_baseline(&text).unwrap();
+        assert_eq!(b.entries.len(), 3);
+        assert_eq!(b.entries[0].value, 1.5e6);
+        assert!(b.entries[0].higher_is_better);
+        assert!(!b.entries[1].higher_is_better);
+        // the escaped key parses back to the original name
+        assert_eq!(b.entries[2].key, measured[2].0);
+        // a fresh measurement set against its own update always passes
+        assert!(diff(&b, &measured).iter().all(|d| !d.regressed));
+    }
+}

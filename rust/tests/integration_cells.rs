@@ -1,0 +1,256 @@
+//! Multi-cell integration tests: the sharding invariants.
+//!
+//! 1. **Decomposition** — an N-cell scenario with identical per-cell
+//!    configs, strict cell-affinity routing and one node per cell is
+//!    *job-for-job* identical to N independent single-cell scenarios
+//!    seeded with `cell_seed(master, k)` (property test).
+//! 2. **Bit-identity** — stepping cells on worker threads never changes
+//!    a single bit of the outcomes relative to the serial cell loop.
+//! 3. **Accounting** — per-cell report slices sum to the overall totals
+//!    and merge exactly across replications.
+
+use icc6g::config::SchemeConfig;
+use icc6g::metrics::JobFate;
+use icc6g::prop_assert;
+use icc6g::scenario::{
+    cell_seed, CellSpec, RoutingPolicy, ScenarioBuilder, ScenarioResult,
+    ServiceModelKind, WorkloadClass,
+};
+use icc6g::util::proptest::check;
+
+fn gpu() -> icc6g::llm::GpuSpec {
+    icc6g::llm::GpuSpec::gh200_nvl2().scaled(2.0)
+}
+
+/// An N-cell scenario over N dedicated nodes with strict (never-spill)
+/// cell affinity — the topology whose cells are fully independent.
+fn sharded(n_cells: usize, ues_per_cell: u32, seed: u64, threads: usize) -> ScenarioResult {
+    let mut b = ScenarioBuilder::new()
+        .scheme(SchemeConfig::icc())
+        .horizon(4.0)
+        .warmup(0.5)
+        .seed(seed)
+        .threads(threads)
+        .routing(RoutingPolicy::CellAffinity { spill_queue: u32::MAX })
+        .service_kind(ServiceModelKind::TokenSampled)
+        .workload(WorkloadClass::chat())
+        .workload(WorkloadClass::translation());
+    for _ in 0..n_cells {
+        b = b.cell(CellSpec::new(ues_per_cell)).node(gpu(), 1);
+    }
+    b.build().run()
+}
+
+fn single(ues: u32, seed: u64) -> ScenarioResult {
+    ScenarioBuilder::new()
+        .scheme(SchemeConfig::icc())
+        .horizon(4.0)
+        .warmup(0.5)
+        .seed(seed)
+        .routing(RoutingPolicy::CellAffinity { spill_queue: u32::MAX })
+        .service_kind(ServiceModelKind::TokenSampled)
+        .workload(WorkloadClass::chat())
+        .workload(WorkloadClass::translation())
+        .cell(CellSpec::new(ues))
+        .node(gpu(), 1)
+        .build()
+        .run()
+}
+
+#[test]
+fn n_cell_scenario_matches_independent_single_cell_runs_job_for_job() {
+    check(4, |g| {
+        let n_cells = g.usize_range(2, 3);
+        let ues = g.usize_range(4, 8) as u32;
+        let seed = g.u64_below(1000);
+        let multi = sharded(n_cells, ues, seed, 1);
+        for k in 0..n_cells {
+            let lone = single(ues, cell_seed(seed, k));
+            let mine: Vec<_> = multi
+                .outcomes
+                .iter()
+                .filter(|o| o.cell_id as usize == k)
+                .collect();
+            prop_assert!(
+                mine.len() == lone.outcomes.len(),
+                "cell {k}: {} jobs in the sharded run vs {} standalone",
+                mine.len(),
+                lone.outcomes.len()
+            );
+            // Per-cell outcome order is arrival order in both runs, so
+            // the sequences align index-for-index. Every latency
+            // component must match to the bit.
+            for (a, b) in mine.iter().zip(&lone.outcomes) {
+                prop_assert!(
+                    a.t_gen.to_bits() == b.t_gen.to_bits()
+                        && a.t_comm.to_bits() == b.t_comm.to_bits()
+                        && a.t_queue.to_bits() == b.t_queue.to_bits()
+                        && a.t_service.to_bits() == b.t_service.to_bits()
+                        && a.ttft.to_bits() == b.ttft.to_bits()
+                        && a.tpot.to_bits() == b.tpot.to_bits()
+                        && a.tokens == b.tokens
+                        && a.class_id == b.class_id
+                        && a.fate == b.fate,
+                    "cell {k}: job diverged\n  sharded:    {a:?}\n  standalone: {b:?}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn threaded_cell_stepping_is_bit_identical_to_serial() {
+    for threads in [2usize, 4, 0] {
+        let serial = sharded(4, 6, 9, 1);
+        let parallel = sharded(4, 6, 9, threads);
+        assert_eq!(serial.events, parallel.events, "threads = {threads}");
+        assert_eq!(
+            serial.outcomes.len(),
+            parallel.outcomes.len(),
+            "threads = {threads}"
+        );
+        for (a, b) in serial.outcomes.iter().zip(&parallel.outcomes) {
+            assert_eq!(a.job_id, b.job_id);
+            assert_eq!(a.cell_id, b.cell_id);
+            assert_eq!(a.class_id, b.class_id);
+            assert_eq!(a.t_gen.to_bits(), b.t_gen.to_bits());
+            assert_eq!(a.t_comm.to_bits(), b.t_comm.to_bits());
+            assert_eq!(a.t_queue.to_bits(), b.t_queue.to_bits());
+            assert_eq!(a.t_service.to_bits(), b.t_service.to_bits());
+            assert_eq!(a.ttft.to_bits(), b.ttft.to_bits());
+            assert_eq!(a.fate, b.fate);
+        }
+        assert_eq!(
+            serial.report.e2e.mean().to_bits(),
+            parallel.report.e2e.mean().to_bits()
+        );
+        assert_eq!(serial.report.n_satisfied, parallel.report.n_satisfied);
+    }
+}
+
+#[test]
+fn threaded_stepping_also_matches_with_shared_nodes_and_spill() {
+    // Same bit-identity claim under a contended tier: 3 cells over 2
+    // nodes, finite spill threshold, so routing decisions interleave
+    // cells on shared nodes.
+    let mk = |threads: usize| {
+        ScenarioBuilder::new()
+            .scheme(SchemeConfig::icc())
+            .horizon(3.0)
+            .warmup(0.5)
+            .seed(5)
+            .threads(threads)
+            .routing(RoutingPolicy::CellAffinity { spill_queue: 1 })
+            .cells(3, CellSpec::new(8))
+            .node(gpu(), 1)
+            .node(gpu(), 1)
+            .build()
+            .run()
+    };
+    let serial = mk(1);
+    let parallel = mk(3);
+    assert_eq!(serial.events, parallel.events);
+    assert_eq!(serial.report.n_jobs, parallel.report.n_jobs);
+    assert_eq!(
+        serial.report.e2e.mean().to_bits(),
+        parallel.report.e2e.mean().to_bits()
+    );
+    assert_eq!(
+        serial.report.comm.mean().to_bits(),
+        parallel.report.comm.mean().to_bits()
+    );
+}
+
+#[test]
+fn per_cell_slices_sum_and_merge_across_replications() {
+    let a = sharded(3, 6, 21, 1);
+    assert_eq!(a.report.per_cell.len(), 3);
+    let sum: u64 = a.report.per_cell.iter().map(|c| c.n_jobs).sum();
+    assert_eq!(sum, a.report.n_jobs);
+    for (k, c) in a.report.per_cell.iter().enumerate() {
+        assert_eq!(c.name, format!("cell{k}"));
+        assert!(c.n_jobs > 0, "cell {k} generated no jobs");
+    }
+    // replications with the same topology merge slice-wise
+    let mut merged = a.report.clone();
+    let b = sharded(3, 6, 22, 1);
+    merged.merge(&b.report);
+    assert_eq!(merged.per_cell.len(), 3);
+    for k in 0..3 {
+        assert_eq!(
+            merged.per_cell[k].n_jobs,
+            a.report.per_cell[k].n_jobs + b.report.per_cell[k].n_jobs
+        );
+    }
+    let sum: u64 = merged.per_cell.iter().map(|c| c.n_jobs).sum();
+    assert_eq!(sum, merged.n_jobs);
+    // a different topology clears the breakdown rather than lying
+    let mut mismatched = a.report.clone();
+    mismatched.merge(&sharded(2, 6, 23, 1).report);
+    assert!(mismatched.per_cell.is_empty());
+}
+
+#[test]
+fn single_cell_runs_have_no_per_cell_slices_and_default_cell_matches_base() {
+    let res = single(10, 3);
+    assert!(res.report.per_cell.is_empty());
+    // the legacy builder path (no explicit cell) is the same scenario
+    let legacy = ScenarioBuilder::new()
+        .scheme(SchemeConfig::icc())
+        .horizon(4.0)
+        .warmup(0.5)
+        .seed(3)
+        .n_ues(10)
+        .routing(RoutingPolicy::CellAffinity { spill_queue: u32::MAX })
+        .service_kind(ServiceModelKind::TokenSampled)
+        .workload(WorkloadClass::chat())
+        .workload(WorkloadClass::translation())
+        .node(gpu(), 1)
+        .build()
+        .run();
+    assert_eq!(res.report.n_jobs, legacy.report.n_jobs);
+    assert_eq!(
+        res.report.e2e.mean().to_bits(),
+        legacy.report.e2e.mean().to_bits()
+    );
+}
+
+#[test]
+fn mixed_numerology_cells_coexist_in_one_scenario() {
+    // One 60 kHz cell and one 30 kHz cell share the tier: slot clocks
+    // differ, jobs still complete in both cells, runs are
+    // deterministic.
+    let mk = |threads: usize| {
+        ScenarioBuilder::new()
+            .scheme(SchemeConfig::icc())
+            .horizon(3.0)
+            .warmup(0.5)
+            .seed(13)
+            .threads(threads)
+            .cell(CellSpec::new(8))
+            .cell(CellSpec::new(8).with_numerology(1))
+            .node(gpu(), 1)
+            .node(gpu(), 1)
+            .build()
+            .run()
+    };
+    let res = mk(1);
+    assert_eq!(res.report.per_cell.len(), 2);
+    for c in &res.report.per_cell {
+        assert!(c.n_jobs > 0, "cell '{}' generated no jobs", c.name);
+    }
+    let completed = res
+        .outcomes
+        .iter()
+        .filter(|o| o.fate == JobFate::Completed)
+        .count();
+    assert!(completed > 0);
+    // threaded run of mixed numerologies stays bit-identical too
+    let par = mk(2);
+    assert_eq!(res.events, par.events);
+    assert_eq!(
+        res.report.e2e.mean().to_bits(),
+        par.report.e2e.mean().to_bits()
+    );
+}

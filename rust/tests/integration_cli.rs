@@ -12,7 +12,7 @@ fn help_lists_commands() {
     let out = bin().arg("help").output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for cmd in ["fig4", "fig6", "fig7", "simulate", "serve", "generate"] {
+    for cmd in ["fig4", "fig6", "fig7", "simulate", "serve", "generate", "bench-diff"] {
         assert!(text.contains(cmd), "help missing '{cmd}'");
     }
 }
@@ -143,6 +143,122 @@ fn sweep_runs_small_grid_and_reports_capacity() {
         assert!(text.contains(field), "missing '{field}' in:\n{text}");
     }
     assert!(dir.join("bench_out").join("sweep_curves.csv").exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn scenario_multi_cell_prints_per_cell_breakdown_threaded() {
+    // ≥4 cells with cell-affinity routing on worker threads — the
+    // acceptance topology — must report per-cell columns.
+    let dir = std::env::temp_dir().join(format!("icc6g_cells_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = bin()
+        .current_dir(&dir)
+        .args([
+            "scenario", "--ues", "16", "--cells", "4", "--threads", "2", "--nodes",
+            "4", "--routing", "cell_affinity", "--horizon", "3",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    for field in ["cells        : 4", "cell_affinity", "per-cell breakdown", "cell0", "cell3"] {
+        assert!(text.contains(field), "missing '{field}' in:\n{text}");
+    }
+    assert!(dir.join("bench_out").join("scenario_cells.csv").exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn scenario_cell_toml_config_drives_a_sharded_run() {
+    let dir = std::env::temp_dir().join(format!("icc6g_celltoml_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("cells.toml");
+    std::fs::write(
+        &cfg,
+        "[scenario]\nhorizon = 3.0\nthreads = 2\n\
+         [routing]\npolicy = \"cell_affinity\"\nspill_queue = 4\n\
+         [[cell]]\nues = 4\ncount = 4\n\
+         [[node]]\ngpu = \"gh200\"\nscale = 2\n\
+         [[node]]\ngpu = \"gh200\"\nscale = 2\n\
+         [[node]]\ngpu = \"gh200\"\nscale = 2\n\
+         [[node]]\ngpu = \"gh200\"\nscale = 2\n",
+    )
+    .unwrap();
+    let out = bin()
+        .current_dir(&dir)
+        .args(["scenario", "--config", cfg.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    for field in ["cells        : 4", "16 UEs total", "cell_affinity", "cell0"] {
+        assert!(text.contains(field), "missing '{field}' in:\n{text}");
+    }
+    // unknown [[cell]] keys must be rejected loudly
+    std::fs::write(&cfg, "[[cell]]\nues = 4\nwarp = 9\n").unwrap();
+    let out = bin()
+        .current_dir(&dir)
+        .args(["scenario", "--config", cfg.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("warp"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn bench_diff_gates_on_regression_and_passes_in_tolerance() {
+    let dir = std::env::temp_dir().join(format!("icc6g_gate_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    // fake bench outputs in the shapes the real benches emit
+    std::fs::write(
+        dir.join("BENCH_scale.json"),
+        "[\n  {\"name\": \"sls_scale\", \"n_ues\": 1000, \"mode\": \"active_set\", \
+         \"events\": 100, \"jobs\": 10, \"wall_s\": 0.1, \"events_per_sec\": 1000000.0},\n  \
+         {\"name\": \"speedup_vs_dense\", \"n_ues\": 1000, \"speedup\": 4.0}\n]\n",
+    )
+    .unwrap();
+    std::fs::write(
+        dir.join("baseline.json"),
+        "{\"tolerance\": 0.25, \"entries\": [\n  \
+         {\"key\": \"scale/sls_scale/1000/active_set/events_per_sec\", \"value\": 900000.0, \"higher_is_better\": true}\n]}\n",
+    )
+    .unwrap();
+    // current (1.0M ev/s) vs baseline (0.9M): within tolerance → exit 0
+    let args = [
+        "bench-diff", "--baseline", "baseline.json", "--scale", "BENCH_scale.json",
+        "--hotpath", "missing.json",
+    ];
+    let out = bin().current_dir(&dir).args(args).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("| metric |"), "no delta table:\n{text}");
+    assert!(text.contains("ok"), "{text}");
+
+    // injected 2x slowdown → the gate must fail
+    std::fs::write(
+        dir.join("BENCH_scale.json"),
+        "[\n  {\"name\": \"sls_scale\", \"n_ues\": 1000, \"mode\": \"active_set\", \
+         \"events\": 100, \"jobs\": 10, \"wall_s\": 0.2, \"events_per_sec\": 450000.0}\n]\n",
+    )
+    .unwrap();
+    let out = bin().current_dir(&dir).args(args).output().unwrap();
+    assert_eq!(out.status.code(), Some(1), "2x slowdown must fail the gate");
+    assert!(String::from_utf8_lossy(&out.stdout).contains("REGRESSED"));
+
+    // --update refreshes the baseline and the refreshed gate passes
+    let out = bin()
+        .current_dir(&dir)
+        .args([
+            "bench-diff", "--baseline", "baseline.json", "--scale",
+            "BENCH_scale.json", "--hotpath", "missing.json", "--update",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let out = bin().current_dir(&dir).args(args).output().unwrap();
+    assert!(out.status.success(), "refreshed baseline must pass");
     let _ = std::fs::remove_dir_all(&dir);
 }
 

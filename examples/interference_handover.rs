@@ -1,0 +1,99 @@
+//! Coupled-radio cells: dynamic inter-cell interference, UE mobility
+//! and A3 handover.
+//!
+//! The legacy multi-cell engine keeps cells radio-independent — a
+//! fixed 2 dB margin stands in for every neighbor. This example places
+//! the same 7-cell workload on a hexagonal site grid and couples the
+//! radios: each cell's noise floor carries a dynamic
+//! interference-over-thermal term computed from its neighbors'
+//! previous-slot granted-PRB activity, UEs drive through the
+//! deployment at vehicular speed, and A3 handover (RSRP hysteresis +
+//! time-to-trigger) migrates them between gNBs with their buffers and
+//! HARQ state carried over.
+//!
+//! Three configurations of the identical traffic:
+//!
+//! * legacy    — radio-independent cells (fixed margin, static UEs);
+//! * coupled   — geometry-driven interference, static UEs;
+//! * mobile    — interference + 30 m/s UEs + A3 handover.
+//!
+//! Run: `cargo run --release --example interference_handover`
+
+use icc6g::config::SchemeConfig;
+use icc6g::llm::GpuSpec;
+use icc6g::scenario::{
+    CellSpec, HandoverSpec, MobilitySpec, RoutingPolicy, ScenarioBuilder, ScenarioResult,
+    TopologySpec, WorkloadClass,
+};
+
+const N_CELLS: usize = 7; // one hex ring
+const UES_PER_CELL: u32 = 10;
+const ISD_M: f64 = 400.0;
+
+fn base() -> ScenarioBuilder {
+    let mut b = ScenarioBuilder::new()
+        .scheme(SchemeConfig::icc())
+        .horizon(8.0)
+        .warmup(1.0)
+        .seed(1)
+        .threads(0)
+        .routing(RoutingPolicy::CellAffinity { spill_queue: 8 })
+        .workload(WorkloadClass::translation());
+    for _ in 0..N_CELLS {
+        b = b.cell(CellSpec::new(UES_PER_CELL)).node(GpuSpec::gh200_nvl2(), 1);
+    }
+    b
+}
+
+fn report(label: &str, res: &ScenarioResult) {
+    println!(
+        "\n{label}: {} jobs, satisfaction {:.4}, avg comm {:.2} ms",
+        res.report.n_jobs,
+        res.report.satisfaction_rate(),
+        res.report.comm.mean() * 1e3,
+    );
+    if res.report.radio.is_empty() {
+        println!("  (radio-independent cells: fixed 2 dB interference margin)");
+        return;
+    }
+    for (k, r) in res.report.radio.iter().enumerate() {
+        let slice = &res.report.per_cell[k];
+        println!(
+            "  cell{k}: {:>4} jobs  sat {:.4}  IoT avg {:>5.2} dB (max {:>5.2})  HO in/out {:>2}/{:>2}",
+            slice.n_jobs,
+            slice.satisfaction_rate(),
+            r.iot_db.mean(),
+            r.iot_db.max(),
+            r.handovers_in,
+            r.handovers_out,
+        );
+    }
+    let ho: u64 = res.report.radio.iter().map(|r| r.handovers_out).sum();
+    println!("  total handovers: {ho}");
+}
+
+fn main() {
+    println!(
+        "=== Coupled-radio cells: {N_CELLS} gNBs on a hex grid (ISD {ISD_M:.0} m) ==="
+    );
+
+    let legacy = base().build().run();
+    report("legacy (radio-independent)", &legacy);
+
+    let coupled = base().topology(TopologySpec::hex(ISD_M)).build().run();
+    report("coupled (dynamic interference, static UEs)", &coupled);
+
+    let mobile = base()
+        .topology(TopologySpec::hex(ISD_M))
+        .mobility(MobilitySpec::fixed(30.0))
+        .handover(HandoverSpec::default())
+        .build()
+        .run();
+    report("mobile (interference + 30 m/s UEs + A3 handover)", &mobile);
+
+    println!(
+        "\nGeometry-driven interference prices the uplink against real neighbor\n\
+         activity instead of a fixed margin, and handover keeps moving UEs on\n\
+         their best server — multi-cell capacity numbers stop being optimistic."
+    );
+}

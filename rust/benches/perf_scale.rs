@@ -20,6 +20,11 @@ use std::time::Instant;
 
 use icc6g::config::{SchemeConfig, SimConfig};
 use icc6g::coordinator::sweep_arrival_rates_threaded;
+use icc6g::llm::GpuSpec;
+use icc6g::scenario::{
+    CellSpec, HandoverSpec, MobilitySpec, RoutingPolicy, ScenarioBuilder, TopologySpec,
+    WorkloadClass,
+};
 use icc6g::sim::Sls;
 
 struct ScaleRow {
@@ -92,6 +97,50 @@ fn main() {
         rows.push(dense);
     }
 
+    // Coupled-radio row: the same fixed offered load sharded over 4
+    // hex cells with geometry-driven interference, 30 m/s UEs and A3
+    // handover — the batched slot-SINR pipeline's headline workload.
+    let coupled_json = {
+        let n_ues_total = 1_000u32;
+        let run = || {
+            let mut b = ScenarioBuilder::new()
+                .scheme(bench_scheme())
+                .horizon(2.0)
+                .warmup(0.2)
+                .seed(1)
+                .routing(RoutingPolicy::CellAffinity { spill_queue: 8 })
+                .workload(
+                    WorkloadClass::translation().with_rate(20.0 / n_ues_total as f64),
+                )
+                .topology(TopologySpec::hex(400.0))
+                .mobility(MobilitySpec::fixed(30.0))
+                .handover(HandoverSpec::default());
+            for _ in 0..4 {
+                b = b
+                    .cell(CellSpec::new(n_ues_total / 4))
+                    .node(GpuSpec::gh200_nvl2(), 1);
+            }
+            b.build().run()
+        };
+        let _ = run(); // warmup
+        let t0 = Instant::now();
+        let res = run();
+        let wall = t0.elapsed().as_secs_f64();
+        let eps = res.events as f64 / wall.max(1e-12);
+        println!(
+            "coupled-radio {:>6} UEs / 4 cells  {:>12.0} ev/s ({} jobs, {} handovers)",
+            n_ues_total,
+            eps,
+            res.report.n_jobs,
+            res.report.radio.iter().map(|r| r.handovers_out).sum::<u64>(),
+        );
+        format!(
+            ",\n  {{\"name\": \"coupled_radio\", \"n_ues\": {n_ues_total}, \"events\": {}, \
+             \"jobs\": {}, \"wall_s\": {wall:.4}, \"events_per_sec\": {eps:.1}}}",
+            res.events, res.report.n_jobs,
+        )
+    };
+
     // Parallel sweep harness on the same fixed-load workload.
     let base = scale_cfg(1_000, false);
     let scheme = bench_scheme();
@@ -130,6 +179,7 @@ fn main() {
             ",\n  {{\"name\": \"speedup_vs_dense\", \"n_ues\": {n_ues}, \"speedup\": {s:.2}}}"
         );
     }
+    js.push_str(&coupled_json);
     js.push_str(&sweep_json);
     js.push_str("\n]\n");
     match std::fs::write("BENCH_scale.json", &js) {

@@ -1,10 +1,23 @@
 //! Discrete-event simulation core.
 //!
 //! A deterministic event calendar: events are `(time, seq, payload)`
-//! triples in a binary min-heap; ties in time break by insertion
-//! sequence so runs are exactly reproducible. The SLS (`sim/`), the
-//! tandem-queue Monte Carlo (`queueing/tandem_mc.rs`) and the compute
-//! node all run on this engine.
+//! triples; ties in time break by insertion sequence so runs are
+//! exactly reproducible. The SLS (`sim/`), the tandem-queue Monte
+//! Carlo (`queueing/tandem_mc.rs`) and the compute node all run on
+//! this engine.
+//!
+//! Two interchangeable backends sit behind [`EventQueue`]:
+//!
+//! * **Binary heap** — O(log n) everywhere, the safe generic default
+//!   ([`EventQueue::new`]).
+//! * **Calendar queue** (Brown 1988) — a bucketed timing wheel that
+//!   pops near-sorted workloads in amortized O(1). Slot ticks and
+//!   Poisson arrivals are near-sorted, which makes this the scenario
+//!   engine's default; select it with [`EventQueue::with_kind`].
+//!
+//! Both backends pop the identical total order `(time, seq)`, so a
+//! trajectory never depends on the backend — the
+//! `calendar_pop_order_matches_heap` property test pins it.
 //!
 //! Time is `f64` seconds. The engine is intentionally generic over the
 //! event payload `E`; components pattern-match their own payloads.
@@ -12,7 +25,33 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-/// An entry in the event calendar.
+/// Event-list backend selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventListKind {
+    /// Binary min-heap (generic fallback).
+    Heap,
+    /// Calendar queue: amortized O(1) pop for near-sorted schedules.
+    Calendar,
+}
+
+impl EventListKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "heap" => Some(Self::Heap),
+            "calendar" => Some(Self::Calendar),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Heap => "heap",
+            Self::Calendar => "calendar",
+        }
+    }
+}
+
+/// An entry in the heap calendar.
 struct Entry<E> {
     time: f64,
     seq: u64,
@@ -43,9 +82,192 @@ impl<E> Ord for Entry<E> {
     }
 }
 
+/// A calendar-queue entry. The epoch (`floor(time / width)`) is
+/// computed once at insertion (and again on rebuilds) so bucket
+/// membership tests never re-divide floats — the "does this entry
+/// belong to the current virtual bucket?" check is an integer compare,
+/// immune to float-boundary disagreements.
+struct CalEntry<E> {
+    time: f64,
+    seq: u64,
+    epoch: u64,
+    event: E,
+}
+
+/// Cached location of the queue's minimum entry.
+#[derive(Clone, Copy)]
+struct NextRef {
+    time: f64,
+    seq: u64,
+    bucket: usize,
+    idx: usize,
+}
+
+/// Classic calendar queue: `nbuckets` (power of two) unsorted buckets
+/// of width `width` seconds; an entry at time `t` lives in bucket
+/// `epoch(t) & mask`. Near-sorted pops scan only the current bucket.
+/// The structure grows (and re-estimates its width from the queued
+/// span) when occupancy exceeds ~2 entries/bucket.
+struct Calendar<E> {
+    buckets: Vec<Vec<CalEntry<E>>>,
+    mask: usize,
+    width: f64,
+    len: usize,
+    /// Epoch of the most recent pop — no queued entry is older.
+    cur_epoch: u64,
+    next: Option<NextRef>,
+}
+
+impl<E> Calendar<E> {
+    fn new(cap: usize) -> Self {
+        let nbuckets = (cap / 2).max(16).next_power_of_two();
+        Self {
+            buckets: (0..nbuckets).map(|_| Vec::new()).collect(),
+            mask: nbuckets - 1,
+            // Bootstrapping width; re-estimated from the actual queued
+            // span at every grow.
+            width: 1e-3,
+            len: 0,
+            cur_epoch: 0,
+            next: None,
+        }
+    }
+
+    #[inline]
+    fn epoch_of(&self, time: f64) -> u64 {
+        // `as` saturates, so a pathological time/width ratio degrades
+        // to one far bucket instead of UB.
+        (time / self.width) as u64
+    }
+
+    fn push(&mut self, time: f64, seq: u64, event: E) {
+        if self.len >= 2 * self.buckets.len() {
+            self.grow();
+        }
+        let epoch = self.epoch_of(time);
+        if epoch < self.cur_epoch {
+            // Cannot happen for time >= now, but an integer compare is
+            // cheap insurance against ever scanning past a live entry.
+            self.cur_epoch = epoch;
+        }
+        let b = (epoch as usize) & self.mask;
+        self.buckets[b].push(CalEntry { time, seq, epoch, event });
+        self.len += 1;
+        match self.next {
+            // pushes append, so a cached (bucket, idx) stays valid
+            Some(n) if time >= n.time => {}
+            _ => {
+                self.next =
+                    Some(NextRef { time, seq, bucket: b, idx: self.buckets[b].len() - 1 })
+            }
+        }
+    }
+
+    fn pop(&mut self) -> Option<(f64, u64, E)> {
+        if self.len == 0 {
+            return None;
+        }
+        let n = match self.next {
+            Some(n) => n,
+            None => self.find_next().expect("len > 0 must yield a next event"),
+        };
+        let entry = self.buckets[n.bucket].swap_remove(n.idx);
+        debug_assert_eq!(entry.seq, n.seq);
+        self.len -= 1;
+        self.cur_epoch = entry.epoch;
+        self.next = if self.len > 0 { self.find_next() } else { None };
+        Some((entry.time, entry.seq, entry.event))
+    }
+
+    fn peek(&self) -> Option<f64> {
+        self.next.map(|n| n.time)
+    }
+
+    /// Locate the minimum `(time, seq)` entry: walk virtual buckets
+    /// from `cur_epoch` for one full year, then fall back to a direct
+    /// scan (rare — only after a large time jump; the subsequent pop
+    /// re-anchors `cur_epoch` so the scan does not repeat).
+    fn find_next(&self) -> Option<NextRef> {
+        if self.len == 0 {
+            return None;
+        }
+        for offset in 0..self.buckets.len() as u64 {
+            let epoch = self.cur_epoch + offset;
+            let b = (epoch as usize) & self.mask;
+            let mut best: Option<NextRef> = None;
+            for (idx, e) in self.buckets[b].iter().enumerate() {
+                if e.epoch != epoch {
+                    continue;
+                }
+                let better = match &best {
+                    None => true,
+                    Some(n) => e.time < n.time || (e.time == n.time && e.seq < n.seq),
+                };
+                if better {
+                    best = Some(NextRef { time: e.time, seq: e.seq, bucket: b, idx });
+                }
+            }
+            if best.is_some() {
+                return best;
+            }
+        }
+        // Direct search across every bucket.
+        let mut best: Option<NextRef> = None;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            for (idx, e) in bucket.iter().enumerate() {
+                let better = match &best {
+                    None => true,
+                    Some(n) => e.time < n.time || (e.time == n.time && e.seq < n.seq),
+                };
+                if better {
+                    best = Some(NextRef { time: e.time, seq: e.seq, bucket: b, idx });
+                }
+            }
+        }
+        best
+    }
+
+    /// Double the bucket count and re-estimate the bucket width from
+    /// the span of queued times (≈ one event per width keeps the
+    /// current-bucket scan O(1)).
+    fn grow(&mut self) {
+        let entries: Vec<CalEntry<E>> =
+            self.buckets.iter_mut().flat_map(std::mem::take).collect();
+        let nbuckets = (self.buckets.len() * 2).max(16);
+        self.buckets = (0..nbuckets).map(|_| Vec::new()).collect();
+        self.mask = nbuckets - 1;
+        if !entries.is_empty() {
+            let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+            for e in &entries {
+                lo = lo.min(e.time);
+                hi = hi.max(e.time);
+            }
+            if hi > lo {
+                self.width = ((hi - lo) / entries.len() as f64).max(1e-9);
+            }
+            self.cur_epoch = self.epoch_of(lo);
+            for mut e in entries {
+                e.epoch = self.epoch_of(e.time);
+                let b = (e.epoch as usize) & self.mask;
+                self.buckets[b].push(e);
+            }
+        }
+        self.next = self.find_next();
+    }
+
+    fn capacity(&self) -> usize {
+        self.buckets.iter().map(Vec::capacity).sum()
+    }
+}
+
+enum Backend<E> {
+    Heap(BinaryHeap<Entry<E>>),
+    Calendar(Calendar<E>),
+}
+
 /// The event calendar / simulation clock.
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Entry<E>>,
+    backend: Backend<E>,
     now: f64,
     seq: u64,
     processed: u64,
@@ -58,21 +280,37 @@ impl<E> Default for EventQueue<E> {
 }
 
 impl<E> EventQueue<E> {
+    /// Heap-backed queue (the generic default).
     pub fn new() -> Self {
-        Self { heap: BinaryHeap::new(), now: 0.0, seq: 0, processed: 0 }
+        Self::with_kind(EventListKind::Heap, 0)
     }
 
-    /// Pre-size the calendar. Event loops that prime one event per
-    /// entity (the SLS schedules `n_ues × n_classes` arrivals before
-    /// the first pop) should reserve up front so priming never regrows
-    /// the heap.
+    /// Pre-size a heap-backed calendar. Event loops that prime one
+    /// event per entity (the SLS schedules `n_ues × n_classes`
+    /// arrivals before the first pop) should reserve up front so
+    /// priming never regrows the structure.
     pub fn with_capacity(cap: usize) -> Self {
-        Self { heap: BinaryHeap::with_capacity(cap), now: 0.0, seq: 0, processed: 0 }
+        Self::with_kind(EventListKind::Heap, cap)
     }
 
-    /// Current heap capacity (diagnostics/tests).
+    /// Choose the backend explicitly (the scenario engine defaults to
+    /// the calendar queue; `[scenario] event_queue = "heap"` falls
+    /// back).
+    pub fn with_kind(kind: EventListKind, cap: usize) -> Self {
+        let backend = match kind {
+            EventListKind::Heap => Backend::Heap(BinaryHeap::with_capacity(cap)),
+            EventListKind::Calendar => Backend::Calendar(Calendar::new(cap)),
+        };
+        Self { backend, now: 0.0, seq: 0, processed: 0 }
+    }
+
+    /// Current backing capacity (diagnostics/tests): heap capacity, or
+    /// the summed bucket capacity of a calendar.
     pub fn capacity(&self) -> usize {
-        self.heap.capacity()
+        match &self.backend {
+            Backend::Heap(h) => h.capacity(),
+            Backend::Calendar(c) => c.capacity(),
+        }
     }
 
     /// Current simulation time (seconds).
@@ -87,11 +325,14 @@ impl<E> EventQueue<E> {
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        match &self.backend {
+            Backend::Heap(h) => h.len(),
+            Backend::Calendar(c) => c.len,
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 
     /// Schedule `event` at absolute time `at` (must be >= now).
@@ -100,7 +341,11 @@ impl<E> EventQueue<E> {
         debug_assert!(at.is_finite());
         let seq = self.seq;
         self.seq += 1;
-        self.heap.push(Entry { time: at.max(self.now), seq, event });
+        let at = at.max(self.now);
+        match &mut self.backend {
+            Backend::Heap(h) => h.push(Entry { time: at, seq, event }),
+            Backend::Calendar(c) => c.push(at, seq, event),
+        }
     }
 
     /// Schedule `event` after a relative delay.
@@ -111,16 +356,28 @@ impl<E> EventQueue<E> {
 
     /// Pop the next event, advancing the clock. Returns `(time, event)`.
     pub fn pop(&mut self) -> Option<(f64, E)> {
-        let entry = self.heap.pop()?;
-        debug_assert!(entry.time >= self.now - 1e-12);
-        self.now = entry.time;
+        let (time, event) = match &mut self.backend {
+            Backend::Heap(h) => {
+                let entry = h.pop()?;
+                (entry.time, entry.event)
+            }
+            Backend::Calendar(c) => {
+                let (time, _seq, event) = c.pop()?;
+                (time, event)
+            }
+        };
+        debug_assert!(time >= self.now - 1e-12);
+        self.now = time;
         self.processed += 1;
-        Some((entry.time, entry.event))
+        Some((time, event))
     }
 
     /// Peek at the next event time without popping.
     pub fn peek_time(&self) -> Option<f64> {
-        self.heap.peek().map(|e| e.time)
+        match &self.backend {
+            Backend::Heap(h) => h.peek().map(|e| e.time),
+            Backend::Calendar(c) => c.peek(),
+        }
     }
 
     /// Run until `horizon` (exclusive) or queue exhaustion, invoking
@@ -128,8 +385,8 @@ impl<E> EventQueue<E> {
     /// schedule further events.
     pub fn run_until(&mut self, horizon: f64, mut handler: impl FnMut(f64, E, &mut Self)) {
         loop {
-            match self.heap.peek() {
-                Some(&Entry { time, .. }) if time < horizon => {
+            match self.peek_time() {
+                Some(time) if time < horizon => {
                     let (t, ev) = self.pop().unwrap();
                     handler(t, ev, self);
                 }
@@ -146,27 +403,34 @@ impl<E> EventQueue<E> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prop_assert;
+    use crate::rng::Rng;
+    use crate::util::proptest::check;
 
     #[test]
     fn pops_in_time_order() {
-        let mut q = EventQueue::new();
-        q.schedule_at(3.0, "c");
-        q.schedule_at(1.0, "a");
-        q.schedule_at(2.0, "b");
-        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
-        assert_eq!(order, vec!["a", "b", "c"]);
-        assert_eq!(q.now(), 3.0);
-        assert_eq!(q.processed(), 3);
+        for kind in [EventListKind::Heap, EventListKind::Calendar] {
+            let mut q = EventQueue::with_kind(kind, 0);
+            q.schedule_at(3.0, "c");
+            q.schedule_at(1.0, "a");
+            q.schedule_at(2.0, "b");
+            let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+            assert_eq!(order, vec!["a", "b", "c"], "{kind:?}");
+            assert_eq!(q.now(), 3.0);
+            assert_eq!(q.processed(), 3);
+        }
     }
 
     #[test]
     fn ties_break_by_insertion_order() {
-        let mut q = EventQueue::new();
-        q.schedule_at(1.0, 1);
-        q.schedule_at(1.0, 2);
-        q.schedule_at(1.0, 3);
-        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
-        assert_eq!(order, vec![1, 2, 3]);
+        for kind in [EventListKind::Heap, EventListKind::Calendar] {
+            let mut q = EventQueue::with_kind(kind, 0);
+            q.schedule_at(1.0, 1);
+            q.schedule_at(1.0, 2);
+            q.schedule_at(1.0, 3);
+            let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+            assert_eq!(order, vec![1, 2, 3], "{kind:?}");
+        }
     }
 
     #[test]
@@ -181,30 +445,34 @@ mod tests {
 
     #[test]
     fn run_until_respects_horizon() {
-        let mut q = EventQueue::new();
-        for i in 0..10 {
-            q.schedule_at(i as f64, i);
+        for kind in [EventListKind::Heap, EventListKind::Calendar] {
+            let mut q = EventQueue::with_kind(kind, 0);
+            for i in 0..10 {
+                q.schedule_at(i as f64, i);
+            }
+            let mut seen = Vec::new();
+            q.run_until(5.0, |_, e, _| seen.push(e));
+            assert_eq!(seen, vec![0, 1, 2, 3, 4], "{kind:?}");
+            assert_eq!(q.now(), 5.0);
+            assert_eq!(q.len(), 5); // 5..9 still queued
         }
-        let mut seen = Vec::new();
-        q.run_until(5.0, |_, e, _| seen.push(e));
-        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
-        assert_eq!(q.now(), 5.0);
-        assert_eq!(q.len(), 5); // 5..9 still queued
     }
 
     #[test]
     fn handler_can_schedule_cascade() {
-        let mut q = EventQueue::new();
-        q.schedule_at(0.0, 0u32);
-        let mut count = 0;
-        q.run_until(100.0, |_, depth, q| {
-            count += 1;
-            if depth < 9 {
-                q.schedule_in(1.0, depth + 1);
-            }
-        });
-        assert_eq!(count, 10);
-        assert_eq!(q.now(), 100.0);
+        for kind in [EventListKind::Heap, EventListKind::Calendar] {
+            let mut q = EventQueue::with_kind(kind, 0);
+            q.schedule_at(0.0, 0u32);
+            let mut count = 0;
+            q.run_until(100.0, |_, depth, q| {
+                count += 1;
+                if depth < 9 {
+                    q.schedule_in(1.0, depth + 1);
+                }
+            });
+            assert_eq!(count, 10, "{kind:?}");
+            assert_eq!(q.now(), 100.0);
+        }
     }
 
     #[test]
@@ -220,9 +488,99 @@ mod tests {
 
     #[test]
     fn empty_queue_behaviour() {
-        let mut q: EventQueue<()> = EventQueue::new();
-        assert!(q.is_empty());
-        assert_eq!(q.pop(), None);
-        assert_eq!(q.peek_time(), None);
+        for kind in [EventListKind::Heap, EventListKind::Calendar] {
+            let mut q: EventQueue<()> = EventQueue::with_kind(kind, 0);
+            assert!(q.is_empty());
+            assert!(q.pop().is_none());
+            assert_eq!(q.peek_time(), None);
+        }
+    }
+
+    #[test]
+    fn calendar_survives_growth_and_time_jumps() {
+        let mut q: EventQueue<u64> = EventQueue::with_kind(EventListKind::Calendar, 4);
+        // load enough entries to force several grows, with a huge gap
+        // in the middle so the direct-search fallback runs
+        for i in 0..500u64 {
+            q.schedule_at(i as f64 * 0.00025, i);
+        }
+        q.schedule_at(1_000.0, 9_999);
+        for i in 0..500u64 {
+            let (_, e) = q.pop().unwrap();
+            assert_eq!(e, i);
+        }
+        let (t, e) = q.pop().unwrap();
+        assert_eq!((t, e), (1_000.0, 9_999));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn event_list_kind_parses() {
+        assert_eq!(EventListKind::parse("heap"), Some(EventListKind::Heap));
+        assert_eq!(EventListKind::parse("CALENDAR"), Some(EventListKind::Calendar));
+        assert_eq!(EventListKind::parse("wheel"), None);
+        assert_eq!(EventListKind::Calendar.name(), "calendar");
+    }
+
+    /// Pop-order equivalence: under a randomized near-sorted workload
+    /// (slot chains, Poisson gaps, same-instant bursts, interleaved
+    /// pops) the calendar queue and the binary heap must produce the
+    /// identical `(time, payload)` pop sequence — the property that
+    /// makes the backend choice observationally irrelevant to every
+    /// simulation.
+    #[test]
+    fn calendar_pop_order_matches_heap() {
+        check(25, |g| {
+            let seed = g.u64_below(100_000);
+            let mut rng = Rng::new(seed);
+            let mut heap: EventQueue<u32> = EventQueue::with_kind(EventListKind::Heap, 0);
+            let mut cal: EventQueue<u32> =
+                EventQueue::with_kind(EventListKind::Calendar, 0);
+            let mut next_id = 0u32;
+            for step in 0..600 {
+                for _ in 0..rng.below(4) {
+                    let dt = match rng.below(4) {
+                        0 => 0.00025 * (1 + rng.below(4)) as f64, // slot chain
+                        1 => rng.exp(2_000.0),                    // Poisson gap
+                        2 => 0.0,                                 // tie at now
+                        _ => rng.exp(10.0),                       // long jump
+                    };
+                    heap.schedule_in(dt, next_id);
+                    cal.schedule_in(dt, next_id);
+                    next_id += 1;
+                }
+                prop_assert!(
+                    heap.peek_time().map(f64::to_bits) == cal.peek_time().map(f64::to_bits),
+                    "step {step}: peek diverged ({:?} vs {:?})",
+                    heap.peek_time(),
+                    cal.peek_time()
+                );
+                if rng.bernoulli(0.7) {
+                    match (heap.pop(), cal.pop()) {
+                        (None, None) => {}
+                        (Some((ta, ea)), Some((tb, eb))) => prop_assert!(
+                            ta.to_bits() == tb.to_bits() && ea == eb,
+                            "step {step}: pop diverged ({ta}, {ea}) vs ({tb}, {eb})"
+                        ),
+                        (a, b) => {
+                            prop_assert!(false, "one backend drained early: {a:?} vs {b:?}")
+                        }
+                    }
+                }
+                prop_assert!(heap.len() == cal.len(), "length diverged at step {step}");
+            }
+            loop {
+                match (heap.pop(), cal.pop()) {
+                    (None, None) => break,
+                    (Some((ta, ea)), Some((tb, eb))) => prop_assert!(
+                        ta.to_bits() == tb.to_bits() && ea == eb,
+                        "drain diverged: ({ta}, {ea}) vs ({tb}, {eb})"
+                    ),
+                    (a, b) => prop_assert!(false, "drain length diverged: {a:?} vs {b:?}"),
+                }
+            }
+            prop_assert!(heap.processed() == cal.processed(), "processed counts diverged");
+            Ok(())
+        });
     }
 }

@@ -160,6 +160,45 @@ impl UeBank {
         }
     }
 
+    /// Remove UE `i` from the bank (A3 handover), returning its MAC
+    /// state with buffers, HARQ and PF state intact. The bank's last
+    /// UE swaps into slot `i` — the caller must re-map any external
+    /// reference to it (its identity is its [`UeMac::tag`]). O(1).
+    pub fn take_ue(&mut self, i: usize) -> UeMac {
+        let bytes = self.ues[i].buffered_bytes();
+        if self.pos[i] != NONE {
+            self.remove(i);
+            self.total_backlog -= bytes;
+        }
+        // Both arrays swap-remove at the same index, so the displaced
+        // (formerly-last) UE lands at `i` in each.
+        self.pos.swap_remove(i);
+        let ue = self.ues.swap_remove(i);
+        if i < self.ues.len() && self.pos[i] != NONE {
+            // repoint the displaced UE's backlog-index slot
+            self.backlogged[self.pos[i] as usize] = i as u32;
+        }
+        ue
+    }
+
+    /// Admit a migrating UE (A3 handover target side): appends it to
+    /// the population, indexes any carried backlog, and invalidates
+    /// its cached link budget (the serving carrier changed). Returns
+    /// the UE's new local index.
+    pub fn push_ue(&mut self, mut ue: UeMac) -> usize {
+        ue.invalidate_link_cache();
+        let i = self.ues.len();
+        let bytes = ue.buffered_bytes();
+        self.ues.push(ue);
+        self.pos.push(NONE);
+        if bytes > 0 {
+            self.pos[i] = self.backlogged.len() as u32;
+            self.backlogged.push(i as u32);
+            self.total_backlog += bytes;
+        }
+        i
+    }
+
     fn note_pushed(&mut self, i: usize, bytes: u64) {
         // A zero-byte SDU adds no backlog; indexing the UE anyway
         // would desync the index from `buffered_bytes() > 0`.
@@ -307,6 +346,108 @@ mod tests {
         assert_eq!(b.drain_served(0, 0, false, &mut out), 0);
         assert!(b.has_backlog());
         b.check_invariants();
+    }
+
+    #[test]
+    fn take_and_push_conserve_ues_and_backlog_across_banks() {
+        // Property: random pushes/drains/migrations between two banks
+        // conserve the UE population and every buffered byte, and both
+        // backlog indices stay consistent throughout — the handover
+        // state-carry invariant.
+        use crate::util::proptest::check;
+        check(20, |g| {
+            let seed = g.u64_below(10_000);
+            let n = g.usize_range(2, 8);
+            let mut rng = Rng::new(seed);
+            let mut a = UeBank::new(drop_ues(&mut rng, n, 35.0, 300.0));
+            let mut b = UeBank::new(drop_ues(&mut rng, n, 35.0, 300.0));
+            let mut script = Rng::new(seed ^ 0x5);
+            let mut out = Vec::new();
+            let total_ues = a.len() + b.len();
+            for _ in 0..200 {
+                match script.below(4) {
+                    0 => {
+                        let bank = if script.bernoulli(0.5) { &mut a } else { &mut b };
+                        if !bank.is_empty() {
+                            let i = script.below(bank.len() as u64) as usize;
+                            bank.push_bg_sdu(
+                                i,
+                                sdu(SduKind::Background, 1 + script.below(5_000) as u32),
+                            );
+                        }
+                    }
+                    1 => {
+                        let bank = if script.bernoulli(0.5) { &mut a } else { &mut b };
+                        if !bank.is_empty() {
+                            let i = script.below(bank.len() as u64) as usize;
+                            bank.drain_served(i, script.below(4_000) as u32, false, &mut out);
+                        }
+                    }
+                    _ => {
+                        // migrate a random UE in a random direction
+                        let a_to_b = script.bernoulli(0.5);
+                        let (src, dst) =
+                            if a_to_b { (&mut a, &mut b) } else { (&mut b, &mut a) };
+                        if !src.is_empty() {
+                            let i = script.below(src.len() as u64) as usize;
+                            let carried = src.ue(i).buffered_bytes();
+                            let ue = src.take_ue(i);
+                            crate::prop_assert!(
+                                ue.buffered_bytes() == carried,
+                                "migration changed the carried backlog"
+                            );
+                            dst.push_ue(ue);
+                        }
+                    }
+                }
+                // check_invariants re-derives both totals from the
+                // buffers, so any byte lost or duplicated by a
+                // migration is caught here; the migration arm above
+                // additionally pins byte-neutrality of the move itself.
+                a.check_invariants();
+                b.check_invariants();
+                crate::prop_assert!(
+                    a.len() + b.len() == total_ues,
+                    "UE count drifted: {} + {} != {total_ues}",
+                    a.len(),
+                    b.len()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn take_ue_repoints_the_displaced_ue() {
+        let mut b = bank(5);
+        for i in 0..5 {
+            b.push_bg_sdu(i, sdu(SduKind::Background, 10 * (i as u32 + 1)));
+        }
+        let total = b.total_backlog_bytes();
+        // removing UE 1 swaps UE 4 into slot 1
+        let taken = b.take_ue(1);
+        assert_eq!(taken.buffered_bytes(), 20);
+        assert_eq!(b.len(), 4);
+        assert_eq!(b.total_backlog_bytes(), total - 20);
+        assert_eq!(b.ue(1).buffered_bytes(), 50, "displaced UE must land at slot 1");
+        b.check_invariants();
+        // re-admit into another bank conserves bytes
+        let mut other = bank(2);
+        let i = other.push_ue(taken);
+        assert_eq!(i, 2);
+        assert_eq!(other.total_backlog_bytes(), 20);
+        other.check_invariants();
+        // taking the last UE is the trivial case
+        let last = b.len() - 1;
+        b.take_ue(last);
+        b.check_invariants();
+        // empty-buffer UEs migrate without touching the index
+        let idle = UeBank::new(drop_ues(&mut Rng::new(4), 1, 35.0, 300.0)).take_ue(0);
+        assert_eq!(idle.buffered_bytes(), 0);
+        let j = other.push_ue(idle);
+        assert_eq!(j, 3);
+        other.check_invariants();
+        assert_eq!(other.total_backlog_bytes(), 20);
     }
 
     #[test]

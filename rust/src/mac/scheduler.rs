@@ -8,7 +8,9 @@
 //! traffic, both across UEs and inside each UE's transport block.
 
 use crate::phy::channel::{fast_fading_gain, LargeScale};
-use crate::phy::link::{mean_sinr_db, sinr_to_cqi, tbs_bytes, PowerControl, Receiver};
+use crate::phy::link::{
+    noise_floor_prb_dbm, rx_power_prb_dbm, sinr_to_cqi, tbs_bytes, PowerControl, Receiver,
+};
 use crate::phy::numerology::Carrier;
 use crate::rng::Rng;
 
@@ -85,10 +87,21 @@ impl Default for MacConfig {
     }
 }
 
+/// PRB assumption of the per-candidate link-quality metric (the CQI
+/// the scheduler ranks with is priced at this grant size).
+const METRIC_PRBS: u32 = 8;
+
 /// Per-UE MAC state.
 #[derive(Debug)]
 pub struct UeMac {
+    /// Serving-cell large-scale channel. Anything that mutates this
+    /// (mobility, handover) must call
+    /// [`UeMac::invalidate_link_cache`] so the cached link budget is
+    /// recomputed.
     pub link: LargeScale,
+    /// Stable identity across handovers (the engine's global UE id;
+    /// 0 for banks built outside the scenario engine).
+    pub tag: u64,
     /// Crate-private: byte-moving access goes through [`UeBank`] so
     /// the backlog index stays in sync.
     pub(crate) job_buf: RlcBuffer,
@@ -111,12 +124,19 @@ pub struct UeMac {
     sr_phase: u64,
     /// Round-robin recency marker.
     last_served_slot: u64,
+    /// Cached `rx_power_prb_dbm(coupling_loss, pc, METRIC_PRBS)` — the
+    /// UE-dependent half of the per-candidate SINR. The log10/powf
+    /// work behind it is paid once per position change instead of once
+    /// per candidate per slot.
+    rx8_cache: f64,
+    rx8_valid: bool,
 }
 
 impl UeMac {
     pub fn new(link: LargeScale) -> Self {
         Self {
             link,
+            tag: 0,
             job_buf: RlcBuffer::new(),
             bg_buf: RlcBuffer::new(),
             avg_thpt: 1.0,
@@ -126,7 +146,33 @@ impl UeMac {
             grant_ready_slot: 0,
             sr_phase: 0,
             last_served_slot: 0,
+            rx8_cache: 0.0,
+            rx8_valid: false,
         }
+    }
+
+    /// Cached per-PRB received power (dBm) at the metric grant size —
+    /// recomputed from the serving link on the first touch after a
+    /// move/handover, identical bits to the scalar recomputation.
+    #[inline]
+    pub(crate) fn rx_power8_dbm(&mut self, pc: &PowerControl, freq_hz: f64) -> f64 {
+        if !self.rx8_valid {
+            self.rx8_cache =
+                rx_power_prb_dbm(self.link.coupling_loss_db(freq_hz), pc, METRIC_PRBS);
+            self.rx8_valid = true;
+        }
+        self.rx8_cache
+    }
+
+    /// Drop the cached link budget (call after mutating `link`).
+    pub fn invalidate_link_cache(&mut self) {
+        self.rx8_valid = false;
+    }
+
+    /// A3 handover interruption: the UE cannot be granted in its new
+    /// cell until `slot + interruption_slots` (RACH + path switch).
+    pub fn handover_interrupt(&mut self, slot: u64, interruption_slots: u64) {
+        self.grant_ready_slot = self.grant_ready_slot.max(slot + interruption_slots);
     }
 
     /// Set the UE's deterministic SR phase (sim uses UE index % period).
@@ -276,6 +322,15 @@ pub struct SlotWorkspace {
     pub delivered: Vec<SduDelivered>,
     cand: Vec<u32>,
     keyed: Vec<(bool, f64, u8, u32)>,
+    /// Per-candidate fast-fading draws (dB) of the batched slot-SINR
+    /// pass, filled in one array sweep in ascending-UE order so each
+    /// candidate consumes exactly the draw the scalar path would give
+    /// it.
+    fade_db: Vec<f64>,
+    /// Per-CQI single-PRB transport-block bytes, hoisted out of the
+    /// per-candidate PF metric (filled lazily from the scheduler's
+    /// carrier — a workspace is paired with one scheduler/cell).
+    tbs1: Vec<f64>,
 }
 
 impl SlotWorkspace {
@@ -293,6 +348,8 @@ impl SlotWorkspace {
         self.delivered.clear();
         self.cand.clear();
         self.keyed.clear();
+        self.fade_db.clear();
+        // tbs1 is carrier-derived, not per-slot: it survives clears.
     }
 }
 
@@ -310,30 +367,48 @@ impl UlScheduler {
         Self { cfg, carrier, pc: PowerControl::default(), rx: Receiver::default() }
     }
 
-    /// Effective CQI of a UE this slot (mean SINR + fast fading).
-    fn slot_cqi(&self, ue: &UeMac, n_prb: u32, rng: &mut Rng) -> u8 {
-        let mean = mean_sinr_db(&ue.link, &self.carrier, &self.pc, &self.rx, n_prb);
-        let fade_db = 10.0 * fast_fading_gain(rng, ue.link.los).log10();
-        sinr_to_cqi(mean + fade_db)
-    }
-
-    /// Schedule one slot. Mutates UE buffers/HARQ state through the
-    /// bank; grant outcomes and delivered SDUs land in `ws` (buffers
-    /// reused across slots — the hot path allocates nothing once the
-    /// workspace is warm).
-    ///
-    /// Cost is O(k log k) in the number of *candidates* k (backlogged,
-    /// grant-ready UEs), not the cell population: candidates come from
-    /// the bank's backlog index and PF averages decay lazily in closed
-    /// form on touch. With `cfg.dense_scan` the candidate list is
-    /// instead rebuilt by a full population scan (the reference path —
-    /// both must produce identical schedules).
+    /// Schedule one slot under the receiver's fixed interference
+    /// margin (the legacy single-cell model). Coupled-radio callers
+    /// use [`UlScheduler::schedule_slot_iot`] with the dynamic
+    /// interference-over-thermal term instead; this wrapper is
+    /// bit-identical to the pre-coupling scheduler.
     pub fn schedule_slot(
         &self,
         slot: u64,
         bank: &mut UeBank,
         rng: &mut Rng,
         ws: &mut SlotWorkspace,
+    ) {
+        self.schedule_slot_iot(slot, bank, rng, ws, self.rx.interference_margin_db);
+    }
+
+    /// Schedule one slot with an explicit interference-over-thermal
+    /// term (dB) on the noise floor. Mutates UE buffers/HARQ state
+    /// through the bank; grant outcomes and delivered SDUs land in
+    /// `ws` (buffers reused across slots — the hot path allocates
+    /// nothing once the workspace is warm).
+    ///
+    /// Cost is O(k log k) in the number of *candidates* k (backlogged,
+    /// grant-ready UEs), not the cell population: candidates come from
+    /// the bank's backlog index, PF averages decay lazily in closed
+    /// form on touch, and link quality comes from the **batched
+    /// slot-SINR pass** — fast-fading draws fill a workspace array in
+    /// one ascending-UE sweep, the noise floor is hoisted to one
+    /// computation per slot, each UE's received-power term is cached
+    /// until it moves, and the PF metric reads a per-CQI TBS table.
+    /// With `cfg.dense_scan` the candidate list is instead rebuilt by
+    /// a full population scan and every candidate's link budget is
+    /// recomputed from scratch (the scalar reference path — both must
+    /// produce identical schedules, pinned by the
+    /// `active_set_matches_dense` and `batched_sinr_matches_scalar_*`
+    /// property tests).
+    pub fn schedule_slot_iot(
+        &self,
+        slot: u64,
+        bank: &mut UeBank,
+        rng: &mut Rng,
+        ws: &mut SlotWorkspace,
+        iot_db: f64,
     ) {
         ws.clear();
         // 1. Candidates: backlogged + not HARQ-blocked + SR cycle done,
@@ -345,6 +420,10 @@ impl UlScheduler {
             return;
         }
         let decay = 1.0 - 1.0 / self.cfg.pf_window;
+        // Slot-constant noise-plus-interference floor, hoisted out of
+        // the candidate loop (same float expression as the historical
+        // per-candidate computation, so hoisting cannot drift a bit).
+        let noise = noise_floor_prb_dbm(&self.carrier, &self.rx, iot_db);
 
         // 2. Order: job-bearing UEs strictly first if prioritization is
         //    on; PF (rate / avg) or RR (least-recently-served) inside
@@ -352,21 +431,62 @@ impl UlScheduler {
         //    (one fast-fading realization per UE per slot) and reused
         //    for the grant — both faster and statistically consistent
         //    (the grant uses the SINR the metric ranked).
-        for &iu in &ws.cand {
-            let i = iu as usize;
-            let has_job = self.cfg.job_priority && bank.ue(i).has_job_bytes();
-            let cqi = self.slot_cqi(bank.ue(i), 8, rng);
-            let metric = match self.cfg.policy {
-                SchedulingPolicy::ProportionalFair => {
-                    let inst = tbs_bytes(&self.carrier, cqi, 1) as f64;
-                    inst / bank.ue_mut(i).pf_avg(slot, decay).max(1e-9)
+        if self.cfg.dense_scan {
+            // Scalar reference path: recompute every candidate's link
+            // budget from scratch (pre-batching behaviour).
+            for &iu in &ws.cand {
+                let i = iu as usize;
+                let has_job = self.cfg.job_priority && bank.ue(i).has_job_bytes();
+                let ue = bank.ue(i);
+                let mean = rx_power_prb_dbm(
+                    ue.link.coupling_loss_db(self.carrier.freq_hz),
+                    &self.pc,
+                    METRIC_PRBS,
+                ) - noise;
+                let fade_db = 10.0 * fast_fading_gain(rng, ue.link.los).log10();
+                let cqi = sinr_to_cqi(mean + fade_db);
+                let metric = match self.cfg.policy {
+                    SchedulingPolicy::ProportionalFair => {
+                        let inst = tbs_bytes(&self.carrier, cqi, 1) as f64;
+                        inst / bank.ue_mut(i).pf_avg(slot, decay).max(1e-9)
+                    }
+                    // older service time → larger metric
+                    SchedulingPolicy::RoundRobin => {
+                        -(bank.ue(i).last_served_slot as f64)
+                    }
+                };
+                ws.keyed.push((has_job, metric, cqi, iu));
+            }
+        } else {
+            // Batched slot-SINR pass. Fadings first, in one array
+            // sweep over the ascending candidate list — the RNG stream
+            // position of each draw is exactly the scalar path's.
+            for &iu in &ws.cand {
+                ws.fade_db
+                    .push(10.0 * fast_fading_gain(rng, bank.ue(iu as usize).link.los).log10());
+            }
+            if ws.tbs1.is_empty() {
+                for cqi in 0..=15u8 {
+                    ws.tbs1.push(tbs_bytes(&self.carrier, cqi, 1) as f64);
                 }
-                // older service time → larger metric
-                SchedulingPolicy::RoundRobin => {
-                    -(bank.ue(i).last_served_slot as f64)
-                }
-            };
-            ws.keyed.push((has_job, metric, cqi, iu));
+            }
+            for (ci, &iu) in ws.cand.iter().enumerate() {
+                let i = iu as usize;
+                let has_job = self.cfg.job_priority && bank.ue(i).has_job_bytes();
+                let mean =
+                    bank.ue_mut(i).rx_power8_dbm(&self.pc, self.carrier.freq_hz) - noise;
+                let cqi = sinr_to_cqi(mean + ws.fade_db[ci]);
+                let metric = match self.cfg.policy {
+                    SchedulingPolicy::ProportionalFair => {
+                        ws.tbs1[cqi as usize]
+                            / bank.ue_mut(i).pf_avg(slot, decay).max(1e-9)
+                    }
+                    SchedulingPolicy::RoundRobin => {
+                        -(bank.ue(i).last_served_slot as f64)
+                    }
+                };
+                ws.keyed.push((has_job, metric, cqi, iu));
+            }
         }
         // job class first, then metric descending, index as tiebreak
         ws.keyed.sort_by(|a, b| {
@@ -715,5 +835,101 @@ mod tests {
             );
             Ok(())
         });
+    }
+
+    /// The batched slot-SINR pass and the scalar reference path must
+    /// also agree when the interference-over-thermal term varies slot
+    /// by slot (the coupled-radio regime): identical grant streams and
+    /// final state under a scripted, slot-dependent IoT.
+    #[test]
+    fn batched_sinr_matches_scalar_under_dynamic_iot() {
+        check(10, |g| {
+            let n_ues = g.usize_range(2, 8);
+            let seed = g.u64_below(10_000);
+            let n_slots: u64 = 200;
+            let mk_cfg = |dense_scan: bool| MacConfig {
+                harq: HarqConfig { bler: 0.1, ..Default::default() },
+                dense_scan,
+                ..Default::default()
+            };
+            let mut drop_rng = Rng::new(seed);
+            let ues = drop_ues(&mut drop_rng, n_ues, 35.0, 300.0);
+            let mut drop_rng2 = Rng::new(seed);
+            let ues2 = drop_ues(&mut drop_rng2, n_ues, 35.0, 300.0);
+            let batched = UlScheduler::new(mk_cfg(false), Carrier::table1());
+            let scalar = UlScheduler::new(mk_cfg(true), Carrier::table1());
+            let mut bank_b = UeBank::new(ues);
+            let mut bank_s = UeBank::new(ues2);
+            let mut rng_b = Rng::new(seed ^ 0xA);
+            let mut rng_s = Rng::new(seed ^ 0xA);
+            let mut arrivals = Rng::new(seed ^ 0xB);
+            let (mut ws_b, mut ws_s) = (SlotWorkspace::new(), SlotWorkspace::new());
+            let period = batched.cfg.effective_sr_period(n_ues as u32);
+            let proc = batched.cfg.grant_proc_slots;
+            for slot in 0..n_slots {
+                for ue in 0..n_ues {
+                    if arrivals.bernoulli(0.1) {
+                        let bytes = 100 + arrivals.below(8_000) as u32;
+                        let t = slot as f64 * 0.00025;
+                        for bank in [&mut bank_b, &mut bank_s] {
+                            bank.note_arrival(ue, slot, period, proc);
+                            bank.push_bg_sdu(ue, bg_sdu(bytes, t));
+                        }
+                    }
+                }
+                // scripted per-slot IoT, identical for both paths
+                let iot = (slot % 13) as f64 * 0.7;
+                batched.schedule_slot_iot(slot, &mut bank_b, &mut rng_b, &mut ws_b, iot);
+                scalar.schedule_slot_iot(slot, &mut bank_s, &mut rng_s, &mut ws_s, iot);
+                prop_assert!(
+                    ws_b.grants == ws_s.grants,
+                    "slot {slot} (iot {iot}): grants diverged\n  batched: {:?}\n  scalar:  {:?}",
+                    ws_b.grants,
+                    ws_s.grants
+                );
+            }
+            prop_assert!(
+                bank_b.total_backlog_bytes() == bank_s.total_backlog_bytes(),
+                "final backlog diverged"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rx_power_cache_invalidation_tracks_link_changes() {
+        let pc = PowerControl::default();
+        let mut ue = UeMac::new(ls(120.0));
+        let a = ue.rx_power8_dbm(&pc, 3.7e9);
+        // cached: same value, bit for bit
+        assert_eq!(a.to_bits(), ue.rx_power8_dbm(&pc, 3.7e9).to_bits());
+        // mutate the link WITH invalidation → fresh value
+        ue.link = ls(260.0);
+        ue.invalidate_link_cache();
+        let b = ue.rx_power8_dbm(&pc, 3.7e9);
+        assert!(b < a, "farther UE must see less received power: {b} vs {a}");
+        // matches the scalar recomputation exactly
+        let scalar = rx_power_prb_dbm(ue.link.coupling_loss_db(3.7e9), &pc, 8);
+        assert_eq!(b.to_bits(), scalar.to_bits());
+    }
+
+    #[test]
+    fn handover_interrupt_defers_grants() {
+        let cfg = MacConfig {
+            harq: HarqConfig { bler: 0.0, ..Default::default() },
+            sr_period_slots: 0,
+            sr_slots_per_ue: 0.0,
+            ..Default::default()
+        };
+        let s = UlScheduler::new(cfg, Carrier::table1());
+        let mut bank = bank_of(vec![UeMac::new(ls(80.0))]);
+        bank.push_bg_sdu(0, bg_sdu(500, 0.0));
+        bank.ue_mut(0).handover_interrupt(10, 4);
+        let mut rng = Rng::new(1);
+        let mut ws = SlotWorkspace::new();
+        for (slot, expect) in [(10, false), (13, false), (14, true)] {
+            s.schedule_slot(slot, &mut bank, &mut rng, &mut ws);
+            assert_eq!(!ws.grants.is_empty(), expect, "slot {slot}");
+        }
     }
 }

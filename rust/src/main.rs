@@ -66,7 +66,10 @@ fn print_help() {
            simulate   one SLS run (--scheme icc|disjoint_ran|mec ...)\n\
            scenario   one Scenario-API run (multi-class, multi-cell, multi-node;\n\
                       --cells N shards the population over N gNBs, --threads\n\
-                      steps them in parallel, [[cell]] tables in --config)\n\
+                      steps them in parallel; --isd/--layout place the sites and\n\
+                      couple the radios (dynamic inter-cell interference),\n\
+                      --speed moves the UEs, --handover enables A3 migration;\n\
+                      [[cell]]/[topology]/[mobility]/[handover] in --config)\n\
            sweep      parallel capacity sweep over a rate grid (--threads)\n\
            bench-diff benchmark-regression gate: BENCH_*.json vs baseline\n\
            serve      real LLM serving over PJRT (--port, --artifacts)\n\
@@ -371,6 +374,10 @@ fn cmd_scenario(argv: &[String]) -> i32 {
         OptSpec { name: "nodes", help: "compute nodes (demo mix)", takes_value: true, default: Some("2") },
         OptSpec { name: "routing", help: "least_loaded | rr | affinity | cell_affinity", takes_value: true, default: Some("least_loaded") },
         OptSpec { name: "service", help: "roofline | token_sampled", takes_value: true, default: Some("token_sampled") },
+        OptSpec { name: "isd", help: "inter-site distance in meters; > 0 couples the cell radios (geometry-driven interference replaces the fixed margin)", takes_value: true, default: Some("0") },
+        OptSpec { name: "layout", help: "site layout with --isd: hex | linear", takes_value: true, default: Some("hex") },
+        OptSpec { name: "speed", help: "UE speed in m/s with --isd (fixed-velocity motion; 0 = static)", takes_value: true, default: Some("0") },
+        OptSpec { name: "handover", help: "enable A3 handover between coupled cells (3 dB / 160 ms defaults; tune via [handover] in --config)", takes_value: false, default: None },
         OptSpec { name: "horizon", help: "simulated seconds", takes_value: true, default: Some("12") },
         OptSpec { name: "seed", help: "master RNG seed", takes_value: true, default: Some("1") },
         OptSpec { name: "json", help: "write the full report (incl. per-class TTFT/TPOT percentiles) to this JSON file", takes_value: true, default: None },
@@ -450,6 +457,28 @@ fn cmd_scenario(argv: &[String]) -> i32 {
         eprintln!("--threads must be in 0..=1024");
         return 2;
     }
+    let (isd, speed) = match (args.get_f64("isd"), args.get_f64("speed")) {
+        (Ok(i), Ok(s)) => (i.unwrap(), s.unwrap()),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if isd < 0.0 || speed < 0.0 {
+        eprintln!("--isd and --speed must be >= 0");
+        return 2;
+    }
+    let layout = match icc6g::scenario::SiteLayout::parse(args.get("layout").unwrap()) {
+        Some(l) => l,
+        None => {
+            eprintln!("unknown layout '{}' (hex | linear)", args.get("layout").unwrap());
+            return 2;
+        }
+    };
+    if isd == 0.0 && (speed > 0.0 || args.flag("handover")) {
+        eprintln!("--speed/--handover require --isd > 0 (a site topology)");
+        return 2;
+    }
     // Built-in demo mix: 3 classes over N identical nodes, population
     // split evenly over the cells. A config file's
     // [[workload]]/[[node]]/[[cell]] tables replace these defaults.
@@ -468,6 +497,15 @@ fn cmd_scenario(argv: &[String]) -> i32 {
         let (per, rem) = (ues / n_cells, ues % n_cells);
         for i in 0..n_cells {
             b = b.cell(CellSpec::new((per + u64::from(i < rem)) as u32));
+        }
+    }
+    if isd > 0.0 {
+        b = b.topology(icc6g::scenario::TopologySpec { layout, isd_m: isd });
+        if speed > 0.0 {
+            b = b.mobility(icc6g::scenario::MobilitySpec::fixed(speed));
+        }
+        if args.flag("handover") {
+            b = b.handover(icc6g::scenario::HandoverSpec::default());
         }
     }
     for _ in 0..n_nodes {
@@ -505,6 +543,25 @@ fn cmd_scenario(argv: &[String]) -> i32 {
         scenario.total_ues(),
         icc6g::sweep::resolve_threads(scenario.threads()).min(scenario.cells().len().max(1)),
     );
+    if let Some(t) = scenario.topology() {
+        let motion = match scenario.mobility() {
+            Some(m) => match m.model {
+                icc6g::scenario::MobilityModel::FixedVelocity { speed } => {
+                    format!(", UEs at {speed:.1} m/s")
+                }
+                icc6g::scenario::MobilityModel::RandomWaypoint { v_min, v_max } => {
+                    format!(", waypoint UEs {v_min:.1}-{v_max:.1} m/s")
+                }
+            },
+            None => ", static UEs".to_string(),
+        };
+        println!(
+            "topology     : {} grid, ISD {:.0} m (coupled radios){motion}{}",
+            t.layout.name(),
+            t.isd_m,
+            if scenario.handover().is_some() { ", A3 handover" } else { "" },
+        );
+    }
     println!(
         "routing      : {} over {} node(s)",
         scenario.routing().name(),
@@ -584,6 +641,23 @@ fn cmd_scenario(argv: &[String]) -> i32 {
         }
         ct.print();
         let _ = ct.write_csv("scenario_cells.csv");
+    }
+    if !res.report.radio.is_empty() {
+        let mut rt = Table::new(
+            "per-cell radio (coupled cells: A3 handovers + applied interference-over-thermal)",
+            &["cell", "ho_in", "ho_out", "avg_iot_db", "max_iot_db"],
+        );
+        for (k, r) in res.report.radio.iter().enumerate() {
+            rt.row(&[
+                format!("cell{k}"),
+                r.handovers_in.to_string(),
+                r.handovers_out.to_string(),
+                cell(r.iot_db.mean(), 2),
+                cell(r.iot_db.max(), 2),
+            ]);
+        }
+        rt.print();
+        let _ = rt.write_csv("scenario_radio.csv");
     }
     if let Some(path) = args.get("json") {
         if let Err(e) = std::fs::write(path, res.report.to_json()) {

@@ -229,6 +229,34 @@ impl ClassReport {
     }
 }
 
+/// Per-cell radio-layer statistics of a coupled-radio run: A3
+/// handover counts and the interference-over-thermal term the cell's
+/// scheduler actually applied, sampled once per stepped slot. Empty
+/// for legacy (fixed-margin, static) runs.
+#[derive(Debug, Clone)]
+pub struct CellRadioReport {
+    /// UEs migrated into this cell.
+    pub handovers_in: u64,
+    /// UEs migrated out of this cell.
+    pub handovers_out: u64,
+    /// IoT (dB) applied per scheduled slot (mean/min/max via Welford).
+    pub iot_db: Welford,
+}
+
+impl Default for CellRadioReport {
+    fn default() -> Self {
+        Self { handovers_in: 0, handovers_out: 0, iot_db: Welford::new() }
+    }
+}
+
+impl CellRadioReport {
+    fn merge(&mut self, other: &CellRadioReport) {
+        self.handovers_in += other.handovers_in;
+        self.handovers_out += other.handovers_out;
+        self.iot_db.merge(&other.iot_db);
+    }
+}
+
 /// Aggregated simulation report.
 #[derive(Debug, Clone)]
 pub struct SimReport {
@@ -253,6 +281,12 @@ pub struct SimReport {
     /// no duplicate sample sets. Each job is judged by its own class
     /// policy, exactly as in `per_class`.
     pub per_cell: Vec<ClassReport>,
+    /// Per-cell radio-layer stats (handover counts, applied IoT) of a
+    /// coupled-radio run, indexed by cell. Empty for legacy
+    /// fixed-margin runs; merges element-wise across replications with
+    /// the same topology, clears on mismatch (same rule as
+    /// `per_cell`).
+    pub radio: Vec<CellRadioReport>,
 }
 
 impl SimReport {
@@ -361,6 +395,15 @@ impl SimReport {
         } else {
             self.per_cell.clear();
         }
+        // Radio slices: element-wise on matching topologies, cleared
+        // on mismatch.
+        if self.radio.len() == other.radio.len() {
+            for (a, b) in self.radio.iter_mut().zip(&other.radio) {
+                a.merge(b);
+            }
+        } else {
+            self.radio.clear();
+        }
     }
 
     fn empty() -> Self {
@@ -376,6 +419,7 @@ impl SimReport {
             tpot: Welford::new(),
             per_class: Vec::new(),
             per_cell: Vec::new(),
+            radio: Vec::new(),
         }
     }
 
@@ -468,6 +512,22 @@ impl SimReport {
             out.push('}');
         }
         if !self.per_cell.is_empty() {
+            out.push_str("\n  ");
+        }
+        out.push_str("],\n  \"per_cell_radio\": [");
+        for (i, r) in self.radio.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("\n    {");
+            out.push_str(&format!("\"cell\": {i}, "));
+            out.push_str(&format!("\"handovers_in\": {}, ", r.handovers_in));
+            out.push_str(&format!("\"handovers_out\": {}, ", r.handovers_out));
+            out.push_str(&format!("\"avg_iot_db\": {}, ", jnum(r.iot_db.mean())));
+            out.push_str(&format!("\"max_iot_db\": {}", jnum(r.iot_db.max())));
+            out.push('}');
+        }
+        if !self.radio.is_empty() {
             out.push_str("\n  ");
         }
         out.push_str("]\n}\n");
@@ -673,6 +733,125 @@ mod tests {
         // empty reports serialize NaNs as null
         let empty = SimReport::from_outcomes(&[], &policy);
         assert!(empty.to_json().contains("\"satisfaction_rate\": null"));
+    }
+
+    /// Satellite: the full report JSON — per-class slices with
+    /// TTFT/TPOT percentile objects, per-cell slices, the new
+    /// per-cell radio array, and escaped class names — must round-trip
+    /// through the crate's own `util::jsonmini` parser with the exact
+    /// values the report getters expose.
+    #[test]
+    fn json_report_round_trips_through_jsonmini() {
+        use crate::util::jsonmini::Value;
+        let policy = LatencyManagement::Joint { b_total: 1.0 };
+        let classes = vec![
+            ("chat \"v2\" \\ beta".to_string(), policy),
+            ("plain".to_string(), policy),
+        ];
+        let mut outcomes = Vec::new();
+        for (i, cell) in [0u32, 1, 2, 0, 1].iter().enumerate() {
+            let mut j = done(0.01 + i as f64 * 0.001, 0.002, 0.05);
+            j.cell_id = *cell;
+            j.class_id = (i % 2) as u32;
+            outcomes.push(j);
+        }
+        let mut r = SimReport::from_outcomes_per_class(&outcomes, &classes, 3);
+        let mut radio = Vec::new();
+        for k in 0..3u64 {
+            let mut cr = CellRadioReport {
+                handovers_in: k,
+                handovers_out: 2 * k,
+                ..Default::default()
+            };
+            cr.iot_db.push(1.5 * k as f64);
+            cr.iot_db.push(2.5 * k as f64);
+            radio.push(cr);
+        }
+        r.radio = radio;
+
+        let js = r.to_json();
+        let v = Value::parse(&js).unwrap_or_else(|e| panic!("report JSON unparsable: {e}\n{js}"));
+        assert_eq!(v.get("n_jobs").and_then(Value::as_f64), Some(r.n_jobs as f64));
+        assert_eq!(
+            v.get("satisfaction_rate").and_then(Value::as_f64),
+            Some(r.satisfaction_rate())
+        );
+        // per-class: escaped names round-trip, percentile objects match
+        let pc = v.get("per_class").and_then(|x| x.as_arr()).unwrap();
+        assert_eq!(pc.len(), 2);
+        assert_eq!(
+            pc[0].get("name").and_then(Value::as_str),
+            Some("chat \"v2\" \\ beta")
+        );
+        for (slot, cr) in pc.iter().zip(&r.per_class) {
+            assert_eq!(slot.get("n_jobs").and_then(Value::as_f64), Some(cr.n_jobs as f64));
+            let ttft = slot.get("ttft_ms").unwrap();
+            let expect = cr.ttft_percentile(95.0) * 1e3;
+            let got = ttft.get("p95").and_then(Value::as_f64).unwrap();
+            assert!((got - expect).abs() < 1e-9, "{got} vs {expect}");
+        }
+        // per-cell slices
+        let cells = v.get("per_cell").and_then(|x| x.as_arr()).unwrap();
+        assert_eq!(cells.len(), 3);
+        for (k, (slot, cr)) in cells.iter().zip(&r.per_cell).enumerate() {
+            assert_eq!(slot.get("name").and_then(Value::as_str), Some(format!("cell{k}").as_str()));
+            assert_eq!(slot.get("n_jobs").and_then(Value::as_f64), Some(cr.n_jobs as f64));
+            assert_eq!(
+                slot.get("avg_comm_ms").and_then(Value::as_f64),
+                Some(cr.comm.mean() * 1e3)
+            );
+        }
+        // per-cell radio: handover counts + IoT summary
+        let radio = v.get("per_cell_radio").and_then(|x| x.as_arr()).unwrap();
+        assert_eq!(radio.len(), 3);
+        for (k, (slot, cr)) in radio.iter().zip(&r.radio).enumerate() {
+            assert_eq!(slot.get("cell").and_then(Value::as_f64), Some(k as f64));
+            assert_eq!(
+                slot.get("handovers_in").and_then(Value::as_f64),
+                Some(cr.handovers_in as f64)
+            );
+            assert_eq!(
+                slot.get("handovers_out").and_then(Value::as_f64),
+                Some(cr.handovers_out as f64)
+            );
+            let got = slot.get("avg_iot_db").and_then(Value::as_f64).unwrap();
+            assert!((got - cr.iot_db.mean()).abs() < 1e-9);
+            let max = slot.get("max_iot_db").and_then(Value::as_f64).unwrap();
+            assert!((max - cr.iot_db.max()).abs() < 1e-9);
+        }
+        // an empty report still parses; NaN fields become null
+        let empty = SimReport::from_outcomes(&[], &policy);
+        let ev = Value::parse(&empty.to_json()).unwrap();
+        assert_eq!(ev.get("satisfaction_rate"), Some(&Value::Null));
+        assert_eq!(ev.get("per_cell_radio").and_then(|x| x.as_arr()).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn radio_slices_merge_elementwise_and_clear_on_mismatch() {
+        let policy = LatencyManagement::Joint { b_total: 1.0 };
+        let mk = |ho: u64, iot: f64| {
+            let mut r = SimReport::from_outcomes(&[done(0.01, 0.0, 0.05)], &policy);
+            let mut cr = CellRadioReport {
+                handovers_in: ho,
+                handovers_out: ho + 1,
+                ..Default::default()
+            };
+            cr.iot_db.push(iot);
+            r.radio = vec![cr];
+            r
+        };
+        let mut a = mk(2, 1.0);
+        a.merge(&mk(3, 3.0));
+        assert_eq!(a.radio.len(), 1);
+        assert_eq!(a.radio[0].handovers_in, 5);
+        assert_eq!(a.radio[0].handovers_out, 7);
+        assert_eq!(a.radio[0].iot_db.count(), 2);
+        assert!((a.radio[0].iot_db.mean() - 2.0).abs() < 1e-12);
+        // mismatched topology clears the radio breakdown
+        let mut b = mk(1, 1.0);
+        b.radio.push(CellRadioReport::default());
+        a.merge(&b);
+        assert!(a.radio.is_empty());
     }
 
     #[test]

@@ -1,0 +1,384 @@
+//! Multi-site geometry for coupled-radio scenarios: site layouts,
+//! per-(UE, cell) link state, and the cached coupling-loss table that
+//! the dynamic inter-cell interference and A3 handover layers read.
+//!
+//! The legacy radio model keeps every cell at the origin and absorbs
+//! neighbor-cell interference into a fixed margin. With a
+//! [`TopologySpec`] the scenario instead places its gNBs on a
+//! hexagonal or linear site grid (configurable inter-site distance),
+//! gives every UE a *global* 2D position, and maintains a per-(UE,
+//! site) coupling-loss cache (`pathloss + per-link shadowing`, LOS
+//! state drawn once per link at drop time) that is refreshed only when
+//! the UE moves — so the per-slot hot path never recomputes a
+//! pathloss.
+//!
+//! All large-scale draws come from dedicated substreams (`0xD1` for
+//! the neighbor-link LOS/shadowing of a cell, `0x4000_0000_0000 + ue`
+//! for per-UE mobility), disjoint from every legacy stream id, so a
+//! topology-disabled run consumes exactly the legacy draw sequence.
+
+use crate::phy::channel::{
+    los_probability, pathloss_los_db, pathloss_nlos_db, LargeScale, Position,
+    SHADOW_STD_LOS_DB, SHADOW_STD_NLOS_DB,
+};
+use crate::rng::Rng;
+
+use super::mobility::MobilitySpec;
+
+/// Site grid shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SiteLayout {
+    /// Hexagonal spiral: cell 0 at the origin, ring `r` holds `6r`
+    /// sites at hex distance `r` (the classic 7/19-site deployments).
+    Hex,
+    /// Sites on a line along +x, `isd` apart.
+    Linear,
+}
+
+impl SiteLayout {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "hex" | "hexagonal" => Some(Self::Hex),
+            "linear" | "line" => Some(Self::Linear),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Hex => "hex",
+            Self::Linear => "linear",
+        }
+    }
+}
+
+/// Site layout of a coupled-radio scenario: grid shape + inter-site
+/// distance. Presence of a topology is what switches the radio stack
+/// from the fixed interference margin to geometry-driven coupling.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TopologySpec {
+    pub layout: SiteLayout,
+    /// Inter-site distance in meters.
+    pub isd_m: f64,
+}
+
+impl TopologySpec {
+    pub fn hex(isd_m: f64) -> Self {
+        assert!(isd_m > 0.0, "inter-site distance must be positive");
+        Self { layout: SiteLayout::Hex, isd_m }
+    }
+
+    pub fn linear(isd_m: f64) -> Self {
+        assert!(isd_m > 0.0, "inter-site distance must be positive");
+        Self { layout: SiteLayout::Linear, isd_m }
+    }
+
+    /// Global position of site `k`.
+    pub fn site_position(&self, k: usize) -> Position {
+        match self.layout {
+            SiteLayout::Linear => Position { x: k as f64 * self.isd_m, y: 0.0 },
+            SiteLayout::Hex => {
+                let (q, r) = hex_axial(k);
+                // pointy-top axial → pixel with unit hex distance = isd
+                Position {
+                    x: self.isd_m * (q as f64 + r as f64 / 2.0),
+                    y: self.isd_m * (3f64.sqrt() / 2.0) * r as f64,
+                }
+            }
+        }
+    }
+}
+
+/// Axial coordinates of the `k`-th cell of a hexagonal spiral
+/// (ring 0 = center, ring r traversed side by side).
+fn hex_axial(k: usize) -> (i64, i64) {
+    if k == 0 {
+        return (0, 0);
+    }
+    const DIRS: [(i64, i64); 6] = [(1, 0), (1, -1), (0, -1), (-1, 0), (-1, 1), (0, 1)];
+    let mut ring = 1usize;
+    let mut first = 1usize; // index of the first cell of this ring
+    while k >= first + 6 * ring {
+        first += 6 * ring;
+        ring += 1;
+    }
+    let idx = k - first;
+    let (side, step) = (idx / ring, idx % ring);
+    // ring start is dir[4] scaled by the ring radius
+    let (mut q, mut r) = (-(ring as i64), ring as i64);
+    for d in DIRS.iter().take(side) {
+        q += d.0 * ring as i64;
+        r += d.1 * ring as i64;
+    }
+    q += DIRS[side].0 * step as i64;
+    r += DIRS[side].1 * step as i64;
+    (q, r)
+}
+
+/// Large-scale state of one UE↔site link: LOS and shadowing are drawn
+/// once per link (drop time); the coupling loss is a cache refreshed
+/// whenever the UE moves.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkState {
+    pub los: bool,
+    pub shadow_db: f64,
+    /// Cached total coupling loss (pathloss + shadowing), dB.
+    pub cl_db: f64,
+}
+
+/// Total coupling loss of a UE at global position `ue` toward `site`
+/// (same UMa pathloss family as [`LargeScale::coupling_loss_db`]).
+pub fn link_loss_db(ue: Position, site: Position, freq_hz: f64, los: bool, shadow_db: f64) -> f64 {
+    let rel = Position { x: ue.x - site.x, y: ue.y - site.y };
+    let d3d = rel.dist_3d();
+    let pl = if los { pathloss_los_db(d3d, freq_hz) } else { pathloss_nlos_db(d3d, freq_hz) };
+    pl + shadow_db
+}
+
+/// Per-UE geometry state: global position, the per-site link cache,
+/// the UE's own mobility stream (it migrates with the UE across
+/// handovers, so trajectories are independent of serving-cell
+/// history), and the A3 time-to-trigger bookkeeping.
+#[derive(Debug, Clone)]
+pub struct UeGeo {
+    /// Global 2D position.
+    pub pos: Position,
+    /// Per-site link state, indexed by cell.
+    pub links: Vec<LinkState>,
+    /// Current speed (m/s; random-waypoint redraws it per leg).
+    pub speed: f64,
+    /// Unit heading (fixed-velocity model).
+    pub heading: (f64, f64),
+    /// Current leg target (random-waypoint model).
+    pub waypoint: Position,
+    /// Mobility randomness of this UE.
+    pub rng: Rng,
+    /// Current A3 candidate cell (`u32::MAX` = none).
+    pub a3_target: u32,
+    /// Consecutive radio ticks the A3 condition has held.
+    pub a3_ticks: u32,
+}
+
+impl UeGeo {
+    /// Recompute the cached coupling losses after a position change.
+    pub fn refresh_losses(&mut self, sites: &[Position], freq_hz: f64) {
+        for (j, l) in self.links.iter_mut().enumerate() {
+            l.cl_db = link_loss_db(self.pos, sites[j], freq_hz, l.los, l.shadow_db);
+        }
+    }
+}
+
+/// Geometry state of one cell: the shared site table, which neighbor
+/// cells couple (same carrier — they interfere and are handover
+/// candidates), the deployment disc for mobility, and the per-UE
+/// records (parallel to the cell's `UeBank`, kept in lockstep across
+/// handovers).
+#[derive(Debug, Clone)]
+pub struct CellGeo {
+    /// This cell's index in the site table.
+    pub cell: usize,
+    /// Global site positions of every cell.
+    pub sites: Vec<Position>,
+    /// `coupled[j]`: cell `j` shares this cell's carrier (frequency +
+    /// numerology) — it contributes interference and is a valid
+    /// handover target. `coupled[cell]` is false.
+    pub coupled: Vec<bool>,
+    /// Mobility area: UEs roam inside this disc.
+    pub area_center: Position,
+    pub area_radius: f64,
+    /// Per-UE geometry, index-parallel to the cell's bank.
+    pub ues: Vec<UeGeo>,
+}
+
+impl CellGeo {
+    /// Build the geometry of cell `cell` from its dropped population.
+    /// `serving[i]` is UE `i`'s legacy serving-link state (position
+    /// relative to the cell site, LOS, shadowing) — reused verbatim so
+    /// the serving link is exactly the one the scheduler prices.
+    /// Neighbor-link LOS/shadowing draw from substream `0xD1` of the
+    /// cell seed; per-UE mobility streams from `0x4000_0000_0000 + i`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        cell: usize,
+        sites: Vec<Position>,
+        coupled: Vec<bool>,
+        freq_hz: f64,
+        cell_seed: u64,
+        serving: &[LargeScale],
+        cell_r_max: f64,
+        mobility: Option<&MobilitySpec>,
+    ) -> Self {
+        let n_sites = sites.len();
+        let site = sites[cell];
+        let (mut cx, mut cy) = (0.0, 0.0);
+        for s in &sites {
+            cx += s.x;
+            cy += s.y;
+        }
+        let area_center =
+            Position { x: cx / n_sites as f64, y: cy / n_sites as f64 };
+        let area_radius = sites
+            .iter()
+            .map(|s| {
+                let (dx, dy) = (s.x - area_center.x, s.y - area_center.y);
+                (dx * dx + dy * dy).sqrt()
+            })
+            .fold(0.0f64, f64::max)
+            + cell_r_max;
+        let mut rng_geo = Rng::substream(cell_seed, 0xD1);
+        let ues = serving
+            .iter()
+            .enumerate()
+            .map(|(i, ls)| {
+                let pos = Position { x: site.x + ls.pos.x, y: site.y + ls.pos.y };
+                let links: Vec<LinkState> = (0..n_sites)
+                    .map(|j| {
+                        if j == cell {
+                            LinkState { los: ls.los, shadow_db: ls.shadow_db, cl_db: 0.0 }
+                        } else {
+                            let rel = Position {
+                                x: pos.x - sites[j].x,
+                                y: pos.y - sites[j].y,
+                            };
+                            let los = rng_geo.bernoulli(los_probability(rel.dist_2d()));
+                            let sigma =
+                                if los { SHADOW_STD_LOS_DB } else { SHADOW_STD_NLOS_DB };
+                            LinkState {
+                                los,
+                                shadow_db: rng_geo.normal(0.0, sigma),
+                                cl_db: 0.0,
+                            }
+                        }
+                    })
+                    .collect();
+                let mut ue = UeGeo {
+                    pos,
+                    links,
+                    speed: 0.0,
+                    heading: (1.0, 0.0),
+                    waypoint: pos,
+                    rng: Rng::substream(cell_seed, 0x4000_0000_0000 + i as u64),
+                    a3_target: u32::MAX,
+                    a3_ticks: 0,
+                };
+                if let Some(mob) = mobility {
+                    mob.model.init(&mut ue, area_center, area_radius);
+                }
+                ue.refresh_losses(&sites, freq_hz);
+                ue
+            })
+            .collect();
+        Self { cell, sites, coupled, area_center, area_radius, ues }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_layout_spaces_sites_by_isd() {
+        let t = TopologySpec::linear(500.0);
+        for k in 0..5 {
+            let p = t.site_position(k);
+            assert_eq!(p.x, 500.0 * k as f64);
+            assert_eq!(p.y, 0.0);
+        }
+    }
+
+    #[test]
+    fn hex_layout_first_ring_is_isd_away_and_distinct() {
+        let t = TopologySpec::hex(500.0);
+        let center = t.site_position(0);
+        assert_eq!((center.x, center.y), (0.0, 0.0));
+        let mut seen: Vec<(i64, i64)> = Vec::new();
+        for k in 1..=6 {
+            let p = t.site_position(k);
+            let d = (p.x * p.x + p.y * p.y).sqrt();
+            assert!((d - 500.0).abs() < 1e-9, "site {k} at distance {d}");
+            let key = ((p.x * 1e6) as i64, (p.y * 1e6) as i64);
+            assert!(!seen.contains(&key), "duplicate site {k}");
+            seen.push(key);
+        }
+        // second ring sits strictly farther out
+        for k in 7..=18 {
+            let p = t.site_position(k);
+            let d = (p.x * p.x + p.y * p.y).sqrt();
+            assert!(d > 500.0 + 1e-9, "site {k} at distance {d}");
+            assert!(d < 2.0 * 500.0 + 1e-9, "site {k} at distance {d}");
+        }
+    }
+
+    #[test]
+    fn hex_spiral_positions_are_unique_over_many_rings() {
+        let t = TopologySpec::hex(200.0);
+        let mut seen: Vec<(i64, i64)> = Vec::new();
+        for k in 0..61 {
+            let p = t.site_position(k);
+            let key = ((p.x * 1e6).round() as i64, (p.y * 1e6).round() as i64);
+            assert!(!seen.contains(&key), "site {k} collides");
+            seen.push(key);
+        }
+    }
+
+    #[test]
+    fn link_loss_matches_large_scale_for_the_serving_site() {
+        let mut rng = Rng::new(7);
+        let ls = LargeScale::drop(&mut rng, 35.0, 300.0);
+        let site = Position { x: 1000.0, y: -400.0 };
+        let global = Position { x: site.x + ls.pos.x, y: site.y + ls.pos.y };
+        let via_geo = link_loss_db(global, site, 3.7e9, ls.los, ls.shadow_db);
+        let via_ls = ls.coupling_loss_db(3.7e9);
+        assert!((via_geo - via_ls).abs() < 1e-9, "{via_geo} vs {via_ls}");
+    }
+
+    #[test]
+    fn cell_geo_builds_consistent_link_cache() {
+        let topo = TopologySpec::hex(500.0);
+        let sites: Vec<Position> = (0..3).map(|k| topo.site_position(k)).collect();
+        let mut rng = Rng::new(3);
+        let serving: Vec<LargeScale> =
+            (0..4).map(|_| LargeScale::drop(&mut rng, 35.0, 300.0)).collect();
+        let geo = CellGeo::new(
+            1,
+            sites.clone(),
+            vec![true, false, true],
+            3.7e9,
+            42,
+            &serving,
+            300.0,
+            None,
+        );
+        assert_eq!(geo.ues.len(), 4);
+        for (i, ue) in geo.ues.iter().enumerate() {
+            assert_eq!(ue.links.len(), 3);
+            // serving link reproduces the legacy coupling loss
+            let expect = serving[i].coupling_loss_db(3.7e9);
+            assert!(
+                (ue.links[1].cl_db - expect).abs() < 1e-9,
+                "UE {i}: {} vs {expect}",
+                ue.links[1].cl_db
+            );
+            // every cached loss is finite and positive at these ranges
+            for l in &ue.links {
+                assert!(l.cl_db.is_finite() && l.cl_db > 0.0);
+            }
+        }
+        // deterministic per seed
+        let geo2 = CellGeo::new(
+            1,
+            sites,
+            vec![true, false, true],
+            3.7e9,
+            42,
+            &serving,
+            300.0,
+            None,
+        );
+        for (a, b) in geo.ues.iter().zip(&geo2.ues) {
+            for (la, lb) in a.links.iter().zip(&b.links) {
+                assert_eq!(la.cl_db.to_bits(), lb.cl_db.to_bits());
+            }
+        }
+    }
+}

@@ -46,8 +46,63 @@ impl Default for Receiver {
 
 const THERMAL_NOISE_DBM_PER_HZ: f64 = -174.0;
 
+/// Per-PRB *transmit* power (dBm) of a UE with coupling loss `cl_db`
+/// under open-loop power control for an `n_prb_granted`-PRB grant:
+/// `min(Pmax, P0 + 10log10(M) + α·PL) − 10log10(M)`. The single
+/// source of the PC formula — the serving-cell link budget and the
+/// inter-cell interference publication both price it through here.
+#[inline]
+pub fn tx_power_prb_dbm(cl_db: f64, pc: &PowerControl, n_prb_granted: u32) -> f64 {
+    let m = 10.0 * (n_prb_granted.max(1) as f64).log10();
+    // Open-loop PC: P = min(Pmax, P0 + 10log10(M) + α·PL)
+    let p_tx = pc.p_max_dbm.min(pc.p0_dbm + m + pc.alpha * cl_db);
+    p_tx - m
+}
+
+/// Per-PRB *received* power (dBm) at the serving gNB for a UE with
+/// coupling loss `cl_db`, under open-loop power control for an
+/// `n_prb_granted`-PRB grant. This is the UE-dependent half of the
+/// link budget — the batched slot-SINR pass caches it per UE and
+/// refreshes it only when the UE moves.
+#[inline]
+pub fn rx_power_prb_dbm(cl_db: f64, pc: &PowerControl, n_prb_granted: u32) -> f64 {
+    tx_power_prb_dbm(cl_db, pc, n_prb_granted) - cl_db
+}
+
+/// Per-PRB noise-plus-interference floor (dBm) at the gNB receiver.
+/// `iot_db` is the interference-over-thermal term: the legacy
+/// single-cell model passes the fixed `interference_margin_db`;
+/// coupled-radio scenarios pass the dynamic per-slot IoT computed from
+/// neighbor cells' previous-slot granted-PRB activity. The summation
+/// order matches the historical monolithic formula exactly, so the
+/// fixed-margin path is bit-identical to the pre-refactor code.
+#[inline]
+pub fn noise_floor_prb_dbm(carrier: &Carrier, rx: &Receiver, iot_db: f64) -> f64 {
+    let prb_bw = carrier.numerology.scs_hz() * 12.0;
+    THERMAL_NOISE_DBM_PER_HZ + 10.0 * prb_bw.log10() + rx.noise_figure_db + iot_db
+}
+
+/// Thermal-noise-plus-noise-figure floor per PRB in **linear mW** (the
+/// reference the dynamic interference-over-thermal term is measured
+/// against — excludes any interference).
+pub fn thermal_floor_prb_mw(carrier: &Carrier, rx: &Receiver) -> f64 {
+    let prb_bw = carrier.numerology.scs_hz() * 12.0;
+    10f64.powf(
+        (THERMAL_NOISE_DBM_PER_HZ + 10.0 * prb_bw.log10() + rx.noise_figure_db) / 10.0,
+    )
+}
+
+/// Interference-over-thermal (dB) for an aggregate received
+/// interference of `i_mw` (linear mW per PRB) over a thermal floor of
+/// `noise_mw`. 0 dB when nobody interferes.
+#[inline]
+pub fn iot_db_from_linear(i_mw: f64, noise_mw: f64) -> f64 {
+    10.0 * (1.0 + i_mw / noise_mw).log10()
+}
+
 /// Per-PRB uplink SINR (dB) for a UE with the given large-scale state,
-/// before fast fading.
+/// before fast fading (fixed-margin form; the scheduler composes the
+/// same two halves with a dynamic IoT instead).
 pub fn mean_sinr_db(
     ls: &LargeScale,
     carrier: &Carrier,
@@ -55,19 +110,8 @@ pub fn mean_sinr_db(
     rx: &Receiver,
     n_prb_granted: u32,
 ) -> f64 {
-    let cl = ls.coupling_loss_db(carrier.freq_hz);
-    // Open-loop PC: P = min(Pmax, P0 + 10log10(M) + α·PL)
-    let p_tx = pc
-        .p_max_dbm
-        .min(pc.p0_dbm + 10.0 * (n_prb_granted.max(1) as f64).log10() + pc.alpha * cl);
-    // Per-PRB received power
-    let p_rx_prb = p_tx - 10.0 * (n_prb_granted.max(1) as f64).log10() - cl;
-    let prb_bw = carrier.numerology.scs_hz() * 12.0;
-    let noise = THERMAL_NOISE_DBM_PER_HZ
-        + 10.0 * prb_bw.log10()
-        + rx.noise_figure_db
-        + rx.interference_margin_db;
-    p_rx_prb - noise
+    rx_power_prb_dbm(ls.coupling_loss_db(carrier.freq_hz), pc, n_prb_granted)
+        - noise_floor_prb_dbm(carrier, rx, rx.interference_margin_db)
 }
 
 /// CQI table entry: (SINR threshold dB, spectral efficiency b/s/Hz).
@@ -190,6 +234,61 @@ mod tests {
         let c = Carrier::table1();
         let tbs = tbs_bytes(&c, 15, 135);
         assert!((15_000..=20_000).contains(&tbs), "tbs = {tbs}");
+    }
+
+    #[test]
+    fn decomposed_link_budget_is_bit_identical_to_the_monolithic_form() {
+        // The historical single-expression SINR formula, replicated
+        // verbatim: the rx-power/noise-floor decomposition (and hence
+        // the batched scheduler's cached composition) must match it to
+        // the bit, or the legacy fixed-margin configuration would
+        // drift from pre-refactor runs.
+        let c = Carrier::table1();
+        let pc = PowerControl::default();
+        let rx = Receiver::default();
+        let mut rng = Rng::new(11);
+        for _ in 0..500 {
+            let ls = LargeScale::drop(&mut rng, 35.0, 300.0);
+            for n_prb in [1u32, 8, 50, 135] {
+                let cl = ls.coupling_loss_db(c.freq_hz);
+                let p_tx = pc.p_max_dbm.min(
+                    pc.p0_dbm
+                        + 10.0 * (n_prb.max(1) as f64).log10()
+                        + pc.alpha * cl,
+                );
+                let p_rx = p_tx - 10.0 * (n_prb.max(1) as f64).log10() - cl;
+                let prb_bw = c.numerology.scs_hz() * 12.0;
+                let noise = -174.0
+                    + 10.0 * prb_bw.log10()
+                    + rx.noise_figure_db
+                    + rx.interference_margin_db;
+                let legacy = p_rx - noise;
+                assert_eq!(
+                    legacy.to_bits(),
+                    mean_sinr_db(&ls, &c, &pc, &rx, n_prb).to_bits()
+                );
+                let composed = rx_power_prb_dbm(cl, &pc, n_prb)
+                    - noise_floor_prb_dbm(&c, &rx, rx.interference_margin_db);
+                assert_eq!(legacy.to_bits(), composed.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn iot_term_is_zero_without_interference_and_monotone() {
+        let c = Carrier::table1();
+        let rx = Receiver::default();
+        let n = thermal_floor_prb_mw(&c, &rx);
+        assert!(n > 0.0 && n.is_finite());
+        assert_eq!(iot_db_from_linear(0.0, n), 0.0);
+        // I = N → 3 dB rise; 3N → 6 dB
+        assert!((iot_db_from_linear(n, n) - 3.0103).abs() < 1e-3);
+        let mut prev = 0.0;
+        for k in 1..=10 {
+            let v = iot_db_from_linear(n * k as f64, n);
+            assert!(v > prev);
+            prev = v;
+        }
     }
 
     #[test]

@@ -1,0 +1,227 @@
+//! UE mobility models on a coarse tick.
+//!
+//! Positions advance only on the scenario's radio tick (default
+//! 100 ms — hundreds of slots apart), so mobility costs nothing on the
+//! per-slot hot path: a move refreshes the UE's cached coupling losses
+//! (`phy::geometry`) and invalidates its cached link budget, and the
+//! slot pipeline keeps reading caches in between.
+//!
+//! Two classic models:
+//!
+//! * **Random waypoint** — pick a uniform point in the deployment
+//!   disc, walk to it at a per-leg speed drawn from `[v_min, v_max]`,
+//!   repeat.
+//! * **Fixed velocity** — constant speed along a random heading,
+//!   re-aimed toward the deployment interior when the UE reaches the
+//!   boundary.
+//!
+//! All draws come from the UE's own mobility stream
+//! ([`crate::phy::geometry::UeGeo::rng`]), which migrates with the UE
+//! across handovers — trajectories never depend on serving-cell
+//! history or on the order cells are visited in.
+
+use crate::phy::channel::Position;
+
+use super::geometry::UeGeo;
+
+/// Motion model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MobilityModel {
+    /// Walk to uniform waypoints in the deployment disc; each leg
+    /// draws its speed from `[v_min, v_max]` m/s.
+    RandomWaypoint { v_min: f64, v_max: f64 },
+    /// Constant speed along a random heading; re-aimed inward at the
+    /// deployment boundary.
+    FixedVelocity { speed: f64 },
+}
+
+/// Mobility configuration: the model plus the coarse tick period.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MobilitySpec {
+    pub model: MobilityModel,
+    /// Seconds between position updates (and A3 handover evaluations).
+    pub tick_s: f64,
+}
+
+impl MobilitySpec {
+    pub const DEFAULT_TICK_S: f64 = 0.1;
+
+    pub fn waypoint(v_min: f64, v_max: f64) -> Self {
+        assert!(v_min >= 0.0 && v_max >= v_min, "need 0 <= v_min <= v_max");
+        Self { model: MobilityModel::RandomWaypoint { v_min, v_max }, tick_s: Self::DEFAULT_TICK_S }
+    }
+
+    pub fn fixed(speed: f64) -> Self {
+        assert!(speed >= 0.0, "speed must be >= 0");
+        Self { model: MobilityModel::FixedVelocity { speed }, tick_s: Self::DEFAULT_TICK_S }
+    }
+
+    pub fn with_tick(mut self, tick_s: f64) -> Self {
+        assert!(tick_s > 0.0, "mobility tick must be positive");
+        self.tick_s = tick_s;
+        self
+    }
+}
+
+impl MobilityModel {
+    /// Draw the UE's initial mobility state (leg target / heading).
+    pub fn init(&self, ue: &mut UeGeo, center: Position, radius: f64) {
+        match *self {
+            MobilityModel::RandomWaypoint { v_min, v_max } => {
+                ue.waypoint = uniform_in_disc(ue, center, radius);
+                ue.speed = ue.rng.range(v_min, v_max.max(v_min + 1e-12));
+            }
+            MobilityModel::FixedVelocity { speed } => {
+                let theta = ue.rng.range(0.0, 2.0 * std::f64::consts::PI);
+                ue.heading = (theta.cos(), theta.sin());
+                ue.speed = speed;
+            }
+        }
+    }
+
+    /// Advance the UE by `dt` seconds inside the deployment disc.
+    /// Returns true if the position changed (the caller then refreshes
+    /// the coupling-loss cache).
+    pub fn advance(&self, ue: &mut UeGeo, center: Position, radius: f64, dt: f64) -> bool {
+        match *self {
+            MobilityModel::RandomWaypoint { v_min, v_max } => {
+                let mut step = ue.speed * dt;
+                if step <= 0.0 {
+                    return false;
+                }
+                // walk leg by leg; a fast UE may finish several legs
+                // inside one coarse tick
+                loop {
+                    let (dx, dy) = (ue.waypoint.x - ue.pos.x, ue.waypoint.y - ue.pos.y);
+                    let d = (dx * dx + dy * dy).sqrt();
+                    if d <= step {
+                        ue.pos = ue.waypoint;
+                        step -= d;
+                        ue.waypoint = uniform_in_disc(ue, center, radius);
+                        ue.speed = ue.rng.range(v_min, v_max.max(v_min + 1e-12));
+                        if step <= 0.0 {
+                            break;
+                        }
+                    } else {
+                        ue.pos.x += dx / d * step;
+                        ue.pos.y += dy / d * step;
+                        break;
+                    }
+                }
+                true
+            }
+            MobilityModel::FixedVelocity { speed } => {
+                if speed <= 0.0 {
+                    return false;
+                }
+                ue.pos.x += ue.heading.0 * speed * dt;
+                ue.pos.y += ue.heading.1 * speed * dt;
+                let (dx, dy) = (ue.pos.x - center.x, ue.pos.y - center.y);
+                let d = (dx * dx + dy * dy).sqrt();
+                if d > radius {
+                    // clamp to the boundary and re-aim into the disc
+                    ue.pos.x = center.x + dx / d * radius;
+                    ue.pos.y = center.y + dy / d * radius;
+                    let inward = (dy).atan2(dx) + std::f64::consts::PI;
+                    let theta = inward
+                        + ue.rng.range(
+                            -std::f64::consts::FRAC_PI_2 * 0.9,
+                            std::f64::consts::FRAC_PI_2 * 0.9,
+                        );
+                    ue.heading = (theta.cos(), theta.sin());
+                }
+                true
+            }
+        }
+    }
+}
+
+/// Uniform point in the disc (area-uniform).
+fn uniform_in_disc(ue: &mut UeGeo, center: Position, radius: f64) -> Position {
+    let r = radius * ue.rng.f64().sqrt();
+    let theta = ue.rng.range(0.0, 2.0 * std::f64::consts::PI);
+    Position { x: center.x + r * theta.cos(), y: center.y + r * theta.sin() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::phy::geometry::LinkState;
+    use crate::rng::Rng;
+
+    fn ue_at(x: f64, y: f64, seed: u64) -> UeGeo {
+        UeGeo {
+            pos: Position { x, y },
+            links: vec![LinkState { los: true, shadow_db: 0.0, cl_db: 0.0 }],
+            speed: 0.0,
+            heading: (1.0, 0.0),
+            waypoint: Position { x, y },
+            rng: Rng::new(seed),
+            a3_target: u32::MAX,
+            a3_ticks: 0,
+        }
+    }
+
+    const CENTER: Position = Position { x: 0.0, y: 0.0 };
+
+    #[test]
+    fn waypoint_walk_stays_in_disc_and_moves() {
+        let model = MobilityModel::RandomWaypoint { v_min: 1.0, v_max: 10.0 };
+        let mut ue = ue_at(10.0, 0.0, 1);
+        model.init(&mut ue, CENTER, 500.0);
+        let start = ue.pos;
+        let mut moved = false;
+        for _ in 0..200 {
+            model.advance(&mut ue, CENTER, 500.0, 1.0);
+            let d = ue.pos.dist_2d();
+            assert!(d <= 500.0 + 1e-6, "escaped the disc: {d}");
+            moved |= (ue.pos.x - start.x).abs() > 1.0 || (ue.pos.y - start.y).abs() > 1.0;
+        }
+        assert!(moved, "waypoint UE never moved");
+    }
+
+    #[test]
+    fn fixed_velocity_reflects_at_boundary() {
+        let model = MobilityModel::FixedVelocity { speed: 30.0 };
+        let mut ue = ue_at(90.0, 0.0, 2);
+        model.init(&mut ue, CENTER, 100.0);
+        for _ in 0..500 {
+            model.advance(&mut ue, CENTER, 100.0, 1.0);
+            assert!(ue.pos.dist_2d() <= 100.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn zero_speed_is_static() {
+        let model = MobilityModel::FixedVelocity { speed: 0.0 };
+        let mut ue = ue_at(5.0, 7.0, 3);
+        model.init(&mut ue, CENTER, 100.0);
+        assert!(!model.advance(&mut ue, CENTER, 100.0, 10.0));
+        assert_eq!(ue.pos.x, 5.0);
+        assert_eq!(ue.pos.y, 7.0);
+    }
+
+    #[test]
+    fn trajectories_are_deterministic_per_seed() {
+        let model = MobilityModel::RandomWaypoint { v_min: 2.0, v_max: 5.0 };
+        let run = |seed| {
+            let mut ue = ue_at(0.0, 0.0, seed);
+            model.init(&mut ue, CENTER, 300.0);
+            for _ in 0..50 {
+                model.advance(&mut ue, CENTER, 300.0, 0.5);
+            }
+            (ue.pos.x.to_bits(), ue.pos.y.to_bits())
+        };
+        assert_eq!(run(9), run(9));
+        assert_ne!(run(9), run(10));
+    }
+
+    #[test]
+    fn spec_constructors_validate() {
+        let w = MobilitySpec::waypoint(1.0, 3.0).with_tick(0.05);
+        assert_eq!(w.tick_s, 0.05);
+        let f = MobilitySpec::fixed(3.0);
+        assert_eq!(f.model, MobilityModel::FixedVelocity { speed: 3.0 });
+        assert_eq!(f.tick_s, MobilitySpec::DEFAULT_TICK_S);
+    }
+}

@@ -5,11 +5,19 @@
 //! * [`numerology`] — SCS/slot/PRB grid (Table I: 60 kHz, 100 MHz).
 //! * [`channel`] — TR 38.901 UMa pathloss, LOS, shadowing, fast fading.
 //! * [`link`] — UL power control, SINR, CQI/MCS mapping, TBS.
+//! * [`geometry`] — multi-site layouts + per-(UE, cell) coupling-loss
+//!   cache for coupled-radio scenarios.
+//! * [`mobility`] — random-waypoint / fixed-velocity UE motion on a
+//!   coarse tick.
 
 pub mod channel;
+pub mod geometry;
 pub mod link;
+pub mod mobility;
 pub mod numerology;
 
 pub use channel::{LargeScale, Position};
+pub use geometry::{CellGeo, LinkState, SiteLayout, TopologySpec, UeGeo};
 pub use link::{PowerControl, Receiver};
+pub use mobility::{MobilityModel, MobilitySpec};
 pub use numerology::{Carrier, Numerology};

@@ -29,9 +29,14 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Barrier, Mutex};
 
 use crate::config::SimConfig;
-use crate::mac::{drop_ues, MacConfig, SlotWorkspace, UeBank, UlScheduler};
+use crate::mac::{drop_ues, MacConfig, SlotWorkspace, UeBank, UeMac, UlScheduler};
+use crate::phy::channel::{LargeScale, Position};
+use crate::phy::geometry::{CellGeo, UeGeo};
+use crate::phy::link::{thermal_floor_prb_mw, tx_power_prb_dbm};
+use crate::phy::mobility::MobilitySpec;
 use crate::phy::numerology::{Carrier, Numerology};
 use crate::rng::Rng;
+use crate::util::stats::Welford;
 
 /// One gNB of a multi-cell scenario: its UE population and its own
 /// MAC/PHY configuration. The scheme still owns `mac.job_priority`
@@ -75,6 +80,31 @@ impl CellSpec {
             ..self.carrier
         };
         self
+    }
+}
+
+/// A3-style handover configuration: a UE migrates to a coupled
+/// neighbor cell once the neighbor's coupling loss beats the serving
+/// cell's by `hysteresis_db` for `ttt_s` seconds (evaluated on the
+/// radio tick). The migration carries the UE's full MAC state —
+/// buffers, HARQ counters, PF average — between the two `UeBank`s at a
+/// cell-step boundary, and the UE pays `interruption_slots` before its
+/// first grant in the new cell (RACH + path switch).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HandoverSpec {
+    /// A3 hysteresis (dB) the neighbor must clear.
+    pub hysteresis_db: f64,
+    /// Time-to-trigger (seconds; rounded up to whole radio ticks).
+    pub ttt_s: f64,
+    /// Grant blackout in the target cell after the migration (slots).
+    pub interruption_slots: u64,
+}
+
+impl Default for HandoverSpec {
+    fn default() -> Self {
+        // 3 dB / 160 ms — the common A3 operating point; 4 slots at
+        // 60 kHz = 1 ms of interruption.
+        Self { hysteresis_db: 3.0, ttt_s: 0.16, interruption_slots: 4 }
     }
 }
 
@@ -125,8 +155,30 @@ pub(crate) struct CellRt {
     pub(crate) sr_period: u64,
     pub(crate) sr_proc: u64,
     pub(crate) job_priority: bool,
+    /// Drop-time population (RNG streams and SR dimensioning are sized
+    /// to it; the bank's live population may drift under handover).
     pub(crate) n_ues: usize,
     horizon: f64,
+    /// Geometry/coupling state (`None` = the legacy radio-independent
+    /// configuration: fixed interference margin, static UEs).
+    pub(crate) geo: Option<CellGeo>,
+    /// Interference-over-thermal applied to this cell's next slot (dB).
+    /// Without geometry this stays at the receiver's fixed margin, so
+    /// the legacy path is bit-identical; with geometry the engine's
+    /// snapshot barrier refreshes it from neighbor activity.
+    pub(crate) iot_db: f64,
+    /// Outgoing interference published by this cell's last slot:
+    /// linear mW per PRB received at each site, from this cell's
+    /// granted UEs. Written only during this cell's own (parallel)
+    /// step; the engine gathers it serially at the merge barrier.
+    pub(crate) itf_out: Vec<f64>,
+    /// Thermal+noise-figure floor per PRB (mW) — the IoT reference.
+    pub(crate) noise_floor_mw: f64,
+    /// Per-slot IoT samples (geometry mode only).
+    pub(crate) iot_stats: Welford,
+    /// Handover counters (UEs migrated into / out of this cell).
+    pub(crate) ho_in: u64,
+    pub(crate) ho_out: u64,
 }
 
 impl CellRt {
@@ -161,8 +213,11 @@ impl CellRt {
         let bg_rng: Vec<Rng> =
             (0..n_ues).map(|ue| Rng::substream(seed, 0x2000 + ue as u64)).collect();
         let slot_dur = spec.carrier.slot_duration();
+        let scheduler = UlScheduler::new(spec.mac, spec.carrier);
+        let iot_db = scheduler.rx.interference_margin_db;
+        let noise_floor_mw = thermal_floor_prb_mw(&scheduler.carrier, &scheduler.rx);
         Self {
-            scheduler: UlScheduler::new(spec.mac, spec.carrier),
+            scheduler,
             bank,
             ws: SlotWorkspace::new(),
             rng_mac: Rng::substream(seed, 0xAC),
@@ -181,7 +236,141 @@ impl CellRt {
             job_priority: spec.mac.job_priority,
             n_ues,
             horizon: cfg.horizon,
+            geo: None,
+            iot_db,
+            itf_out: Vec::new(),
+            noise_floor_mw,
+            iot_stats: Welford::new(),
+            ho_in: 0,
+            ho_out: 0,
         }
+    }
+
+    /// Switch this cell from the fixed-margin, radio-independent model
+    /// to geometry-driven coupling: global UE positions around site
+    /// `cell`, cached coupling losses toward every site, and a dynamic
+    /// interference-over-thermal term (0 dB until neighbors transmit)
+    /// in place of the fixed margin.
+    pub(crate) fn init_geometry(
+        &mut self,
+        cell: usize,
+        sites: &[Position],
+        coupled: Vec<bool>,
+        seed: u64,
+        cell_r_max: f64,
+        mobility: Option<&MobilitySpec>,
+    ) {
+        let serving: Vec<LargeScale> =
+            (0..self.bank.len()).map(|i| self.bank.ue(i).link).collect();
+        let geo = CellGeo::new(
+            cell,
+            sites.to_vec(),
+            coupled,
+            self.scheduler.carrier.freq_hz,
+            seed,
+            &serving,
+            cell_r_max,
+            mobility,
+        );
+        self.itf_out = vec![0.0; sites.len()];
+        self.iot_db = 0.0;
+        self.geo = Some(geo);
+    }
+
+    /// Advance every UE of this cell by one mobility tick and refresh
+    /// the moved UEs' coupling-loss caches + serving-link state.
+    /// Engine-serial (runs between slot batches).
+    pub(crate) fn advance_mobility(&mut self, spec: &MobilitySpec, dt: f64) {
+        let Some(geo) = self.geo.as_mut() else { return };
+        let freq = self.scheduler.carrier.freq_hz;
+        let CellGeo { cell, sites, area_center, area_radius, ues, .. } = geo;
+        let site = sites[*cell];
+        for (i, gu) in ues.iter_mut().enumerate() {
+            if spec.model.advance(gu, *area_center, *area_radius, dt) {
+                gu.refresh_losses(sites, freq);
+                let ue = self.bank.ue_mut(i);
+                ue.link.pos = Position { x: gu.pos.x - site.x, y: gu.pos.y - site.y };
+                ue.invalidate_link_cache();
+            }
+        }
+    }
+
+    /// A3 evaluation over this cell's UEs: push `(tag, from, to)`
+    /// migration orders for every UE whose best coupled neighbor has
+    /// beaten the serving cell by the hysteresis for `ttt_ticks`
+    /// consecutive radio ticks. Engine-serial.
+    pub(crate) fn evaluate_handover(
+        &mut self,
+        hysteresis_db: f64,
+        ttt_ticks: u32,
+        out: &mut Vec<(u64, usize, usize)>,
+    ) {
+        let Some(geo) = self.geo.as_mut() else { return };
+        let serving = geo.cell;
+        for (i, gu) in geo.ues.iter_mut().enumerate() {
+            let cl_s = gu.links[serving].cl_db;
+            let (mut best, mut best_cl) = (usize::MAX, f64::INFINITY);
+            for (j, &on) in geo.coupled.iter().enumerate() {
+                if on && gu.links[j].cl_db < best_cl {
+                    best_cl = gu.links[j].cl_db;
+                    best = j;
+                }
+            }
+            if best != usize::MAX && cl_s - best_cl > hysteresis_db {
+                if gu.a3_target == best as u32 {
+                    gu.a3_ticks = gu.a3_ticks.saturating_add(1);
+                } else {
+                    gu.a3_target = best as u32;
+                    gu.a3_ticks = 1;
+                }
+                if gu.a3_ticks >= ttt_ticks {
+                    out.push((self.bank.ue(i).tag, serving, best));
+                    gu.a3_target = u32::MAX;
+                    gu.a3_ticks = 0;
+                }
+            } else {
+                gu.a3_target = u32::MAX;
+                gu.a3_ticks = 0;
+            }
+        }
+    }
+
+    /// Remove local UE `i` (bank and geometry in lockstep — both
+    /// swap-remove the same index). Returns the MAC state with its
+    /// carried backlog, the geometry record, and the tag of the UE
+    /// displaced into slot `i` (the caller re-maps its location).
+    pub(crate) fn take_ue(&mut self, i: usize) -> (UeMac, UeGeo, Option<u64>) {
+        let geo = self.geo.as_mut().expect("handover requires geometry");
+        let gu = geo.ues.swap_remove(i);
+        let ue = self.bank.take_ue(i);
+        let displaced =
+            if i < self.bank.len() { Some(self.bank.ue(i).tag) } else { None };
+        (ue, gu, displaced)
+    }
+
+    /// Admit a migrating UE: re-express its serving link relative to
+    /// this cell's site (LOS/shadowing from the cached per-link
+    /// state), apply the handover interruption, and append it to the
+    /// bank + geometry. Returns the new local index.
+    pub(crate) fn admit_ue(
+        &mut self,
+        mut ue: UeMac,
+        mut gu: UeGeo,
+        interruption_slots: u64,
+    ) -> usize {
+        let geo = self.geo.as_mut().expect("handover requires geometry");
+        let site = geo.sites[geo.cell];
+        let link = &gu.links[geo.cell];
+        ue.link = LargeScale {
+            pos: Position { x: gu.pos.x - site.x, y: gu.pos.y - site.y },
+            los: link.los,
+            shadow_db: link.shadow_db,
+        };
+        ue.handover_interrupt(self.slot_idx, interruption_slots);
+        gu.a3_target = u32::MAX;
+        gu.a3_ticks = 0;
+        geo.ues.push(gu);
+        self.bank.push_ue(ue)
     }
 
     /// Is this cell's next slot boundary the batch time `t_bits`?
@@ -192,15 +381,43 @@ impl CellRt {
 
     /// Step the slot due at `self.next_slot`. Touches only this cell's
     /// state; the caller merges `ws.delivered` afterwards (grants and
-    /// delivered SDUs stay valid until the next step).
+    /// delivered SDUs stay valid until the next step). In geometry
+    /// mode the step also publishes this slot's outgoing interference
+    /// into `itf_out` — still cell-private, gathered serially by the
+    /// engine at the merge barrier, consumed by neighbors one slot
+    /// later (the one-slot-lagged snapshot that keeps parallel cell
+    /// steps bit-identical to serial).
     pub(crate) fn step_slot(&mut self) {
         let now = self.next_slot;
-        self.scheduler.schedule_slot(
+        self.scheduler.schedule_slot_iot(
             self.slot_idx,
             &mut self.bank,
             &mut self.rng_mac,
             &mut self.ws,
+            self.iot_db,
         );
+        if let Some(geo) = &self.geo {
+            self.iot_stats.push(self.iot_db);
+            for v in &mut self.itf_out {
+                *v = 0.0;
+            }
+            let pc = &self.scheduler.pc;
+            let n_prb_tot = self.scheduler.carrier.n_prb as f64;
+            for g in &self.ws.grants {
+                let ug = &geo.ues[g.ue];
+                // open-loop tx power of the actual grant, per PRB
+                let p_prb_dbm = tx_power_prb_dbm(ug.links[geo.cell].cl_db, pc, g.n_prb);
+                // reuse-1: a neighbor PRB collides with probability
+                // n_prb / n_prb_total → scale the per-PRB interference
+                let frac = g.n_prb as f64 / n_prb_tot;
+                for (j, &on) in geo.coupled.iter().enumerate() {
+                    if on {
+                        self.itf_out[j] +=
+                            10f64.powf((p_prb_dbm - ug.links[j].cl_db) / 10.0) * frac;
+                    }
+                }
+            }
+        }
         self.slot_idx += 1;
         self.last_slot = now.to_bits();
         // Same liveness rule as the legacy slot chain: keep ticking
@@ -373,6 +590,76 @@ mod tests {
             c.ticking || c.bank.total_backlog_bytes() == 0,
             "backlogged cell must keep ticking until drained"
         );
+    }
+
+    #[test]
+    fn geometry_cell_publishes_interference_and_migrates_ues() {
+        let mut cfg = SimConfig::table1();
+        cfg.seed = 3;
+        cfg.horizon = 1.0;
+        let spec = CellSpec::new(4);
+        let mut a = CellRt::new(0, &spec, &cfg, 1);
+        let mut b = CellRt::new(1, &spec, &cfg, 1);
+        let sites =
+            vec![Position { x: 0.0, y: 0.0 }, Position { x: 500.0, y: 0.0 }];
+        a.init_geometry(0, &sites, vec![false, true], cell_seed(3, 0), cfg.cell_r_max, None);
+        b.init_geometry(1, &sites, vec![true, false], cell_seed(3, 1), cfg.cell_r_max, None);
+        assert_eq!(a.iot_db, 0.0, "geometry mode starts interference-free");
+        for i in 0..4 {
+            a.bank.ue_mut(i).tag = i as u64;
+            b.bank.ue_mut(i).tag = 4 + i as u64;
+        }
+        // keep cell a backlogged so every slot grants someone
+        a.bank.push_bg_sdu(0, Sdu {
+            kind: SduKind::Background,
+            total_bytes: 1 << 20,
+            bytes_left: 1 << 20,
+            t_arrival: 0.0,
+        });
+        let mut published = false;
+        for _ in 0..20 {
+            a.step_slot();
+            if a.itf_out[1] > 0.0 {
+                published = true;
+                break;
+            }
+        }
+        assert!(published, "granted slots must publish neighbor interference");
+        assert_eq!(a.itf_out[0], 0.0, "a cell never interferes with itself");
+        assert!(a.iot_stats.count() > 0, "IoT samples recorded per stepped slot");
+
+        // migrate the backlogged UE 0 from a to b: bytes conserved,
+        // bank and geometry stay in lockstep, link re-anchors to site 1
+        let carried = a.bank.ue(0).buffered_bytes();
+        assert!(carried > 0);
+        let total = a.bank.total_backlog_bytes() + b.bank.total_backlog_bytes();
+        let (ue, gu, displaced) = a.take_ue(0);
+        assert!(displaced.is_some(), "a still has UEs, so one was displaced");
+        assert_eq!(a.bank.len(), a.geo.as_ref().unwrap().ues.len());
+        let ni = b.admit_ue(ue, gu, 4);
+        assert_eq!(ni, 4);
+        assert_eq!(b.bank.len(), b.geo.as_ref().unwrap().ues.len());
+        assert_eq!(
+            a.bank.total_backlog_bytes() + b.bank.total_backlog_bytes(),
+            total,
+            "handover must conserve buffered bytes"
+        );
+        assert_eq!(b.bank.ue(4).buffered_bytes(), carried);
+        a.bank.check_invariants();
+        b.bank.check_invariants();
+        // the migrated UE's serving link is now relative to site 1
+        let gu = &b.geo.as_ref().unwrap().ues[4];
+        let rel = b.bank.ue(4).link.pos;
+        assert!((rel.x - (gu.pos.x - 500.0)).abs() < 1e-9);
+        assert!((rel.y - gu.pos.y).abs() < 1e-9);
+    }
+
+    #[test]
+    fn handover_spec_defaults_are_sane() {
+        let h = HandoverSpec::default();
+        assert!(h.hysteresis_db > 0.0);
+        assert!(h.ttt_s > 0.0);
+        assert!(h.interruption_slots > 0);
     }
 
     #[test]

@@ -37,10 +37,13 @@ use crate::compute::{
 use crate::config::{Management, SchemeConfig};
 use crate::dess::EventQueue;
 use crate::mac::{Sdu, SduKind};
-use crate::metrics::{JobFate, JobOutcome, LatencyManagement, SimReport};
+use crate::metrics::{CellRadioReport, JobFate, JobOutcome, LatencyManagement, SimReport};
+use crate::phy::channel::Position;
+use crate::phy::link::iot_db_from_linear;
+use crate::phy::mobility::MobilitySpec;
 use crate::sweep::resolve_threads;
 
-use super::cells::{CellRt, StepPool};
+use super::cells::{cell_seed, CellRt, StepPool};
 use super::routing::NodeView;
 use super::{NodeSpec, Scenario};
 
@@ -88,6 +91,8 @@ enum Ev {
     ComputeDone { node: usize, job: u64 },
     /// Iteration boundary of node `node`'s batch engine.
     BatchStep { node: usize },
+    /// Coarse radio tick: UE mobility + A3 handover evaluation.
+    RadioTick,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -226,6 +231,35 @@ pub(super) fn run(sc: &Scenario) -> ScenarioResult {
         .map(|(k, spec)| Mutex::new(CellRt::new(k, spec, &sc.base, n_classes)))
         .collect();
 
+    // Coupled-radio geometry: place the sites, build each cell's
+    // per-(UE, site) coupling-loss cache, and mark which neighbor
+    // pairs couple (same carrier frequency + numerology — they
+    // interfere and are handover candidates).
+    if let Some(topo) = &sc.topology {
+        let sites: Vec<Position> =
+            (0..sc.cells.len()).map(|k| topo.site_position(k)).collect();
+        for (k, cm) in cells.iter().enumerate() {
+            let coupled: Vec<bool> = sc
+                .cells
+                .iter()
+                .enumerate()
+                .map(|(j, other)| {
+                    j != k
+                        && other.carrier.freq_hz == sc.cells[k].carrier.freq_hz
+                        && other.carrier.numerology == sc.cells[k].carrier.numerology
+                })
+                .collect();
+            cm.lock().unwrap().init_geometry(
+                k,
+                &sites,
+                coupled,
+                cell_seed(sc.base.seed, k),
+                sc.base.cell_r_max,
+                sc.mobility.as_ref(),
+            );
+        }
+    }
+
     // `cell_threads = 1` (the default) steps cells inline; `0` uses all
     // cores. More participants than cells would only park on barriers.
     let participants = resolve_threads(sc.cell_threads).min(cells.len());
@@ -277,9 +311,74 @@ fn event_loop(
     let total_ues: usize = sc.cells.iter().map(|c| c.n_ues as usize).sum();
     let mut jobs: Vec<JobState> = Vec::with_capacity(4096);
     // Pre-size the calendar: priming schedules one arrival per
-    // (cell, UE, class) plus one background event per UE. Slot clocks
-    // live outside the calendar.
-    let mut q: EventQueue<Ev> = EventQueue::with_capacity(total_ues * (n_classes + 1) + 8);
+    // (cell, UE, class) plus one background event per UE, and at
+    // steady state each sequential node holds up to `n_servers`
+    // in-flight ComputeDone events while each batching node keeps one
+    // pending BatchStep — account for those too, plus slack for
+    // wireline-crossing enqueues, so large multi-node runs never
+    // re-allocate right after priming. Slot clocks live outside the
+    // calendar.
+    let inflight: usize = sc
+        .nodes
+        .iter()
+        .map(|n| match n.execution {
+            ExecutionModel::Sequential => n.n_servers as usize,
+            ExecutionModel::ContinuousBatching { .. } => 1,
+        })
+        .sum();
+    let mut q: EventQueue<Ev> = EventQueue::with_kind(
+        sc.event_queue,
+        total_ues * (n_classes + 1) + inflight + 64,
+    );
+
+    // Handover bookkeeping: stable global UE ids (tags) and the
+    // current (cell, local index) of every UE. Arrival events address
+    // UEs by their *origin* identity — the RNG streams never move —
+    // and are routed here to the UE's current serving cell.
+    let radio_coupling = sc.topology.is_some() && cells.len() > 1;
+    let handover_on = sc.handover.is_some() && radio_coupling;
+    let prefix: Vec<usize> = {
+        let mut acc = 0usize;
+        let mut v = Vec::with_capacity(sc.cells.len());
+        for c in &sc.cells {
+            v.push(acc);
+            acc += c.n_ues as usize;
+        }
+        v
+    };
+    let mut locs: Option<Vec<(u32, u32)>> = if handover_on {
+        let mut v = Vec::with_capacity(total_ues);
+        for (k, cm) in cells.iter().enumerate() {
+            let mut c = cm.lock().unwrap();
+            for i in 0..c.n_ues {
+                c.bank.ue_mut(i).tag = v.len() as u64;
+                v.push((k as u32, i as u32));
+            }
+        }
+        Some(v)
+    } else {
+        None
+    };
+    // One-slot-lagged interference snapshot: `itf[k][j]` is cell k's
+    // latest published per-PRB interference (mW) at site j. Updated
+    // serially at the merge barrier, consumed serially before the next
+    // batch — worker threads never touch it.
+    let mut itf: Vec<Vec<f64>> = if radio_coupling {
+        (0..cells.len()).map(|_| vec![0.0; cells.len()]).collect()
+    } else {
+        Vec::new()
+    };
+    let tick_s = sc
+        .mobility
+        .as_ref()
+        .map(|m| m.tick_s)
+        .unwrap_or(MobilitySpec::DEFAULT_TICK_S);
+    let ttt_ticks: u32 = sc
+        .handover
+        .as_ref()
+        .map(|h| ((h.ttt_s / tick_s).ceil() as u32).max(1))
+        .unwrap_or(1);
+    let mut pending_ho: Vec<(u64, usize, usize)> = Vec::new();
     // Reused per-enqueue routing snapshot + node-event buffers (keeps
     // the hot path allocation-free).
     let mut views: Vec<NodeView> = Vec::with_capacity(sc.nodes.len());
@@ -307,6 +406,11 @@ fn event_loop(
         }
     }
 
+    // Prime the radio tick (mobility + handover) when geometry is on.
+    if sc.topology.is_some() && (sc.mobility.is_some() || sc.handover.is_some()) {
+        q.schedule_at(tick_s, Ev::RadioTick);
+    }
+
     let drain_horizon = cfg.horizon + 2.0;
     let mut slot_events: u64 = 0;
     let mut t_slot = next_slot_time(cells);
@@ -323,6 +427,25 @@ fn event_loop(
         if t_q > t_slot {
             // --- slot batch: step every cell due at t_slot ---
             let t_bits = t_slot.to_bits();
+            // Interference-snapshot barrier: before the (possibly
+            // parallel) step, every due cell reads the one-slot-lagged
+            // neighbor activity into its IoT term. Serial on the
+            // engine thread, so the thread count can never reorder it.
+            if radio_coupling {
+                for (j, cm) in cells.iter().enumerate() {
+                    let mut c = cm.lock().unwrap();
+                    if !c.due(t_bits) {
+                        continue;
+                    }
+                    let mut i_mw = 0.0;
+                    for (k, row) in itf.iter().enumerate() {
+                        if k != j {
+                            i_mw += row[j];
+                        }
+                    }
+                    c.iot_db = iot_db_from_linear(i_mw, c.noise_floor_mw);
+                }
+            }
             match pool {
                 Some(p) => p.step_batch(t_slot),
                 None => {
@@ -337,12 +460,29 @@ fn event_loop(
             // Merge delivered SDUs into the calendar in ascending
             // cell-index order — the determinism rule that makes the
             // threaded schedule bit-identical to a serial cell loop.
-            for cm in cells {
+            for (k, cm) in cells.iter().enumerate() {
                 let mut c = cm.lock().unwrap();
                 if c.last_slot != t_bits {
                     continue;
                 }
                 slot_events += 1;
+                // Gather the stepped cell's outgoing interference for
+                // the next batch's snapshot (still on the engine
+                // thread — the publication order is cell-index order
+                // regardless of which worker stepped the cell). A cell
+                // whose clock just stopped (drained past the horizon)
+                // transmits nothing more: zero its row instead of
+                // letting neighbors price its final slot's activity
+                // for the rest of the drain window.
+                if radio_coupling {
+                    if c.ticking {
+                        itf[k].copy_from_slice(&c.itf_out);
+                    } else {
+                        for v in &mut itf[k] {
+                            *v = 0.0;
+                        }
+                    }
+                }
                 // TBs land at the end of the slot. The flat delivered
                 // buffer is already in grant order.
                 let t_rx = t_slot + c.slot_dur;
@@ -366,9 +506,16 @@ fn event_loop(
             Ev::JobArrival { cell, ue, class } => {
                 if now < cfg.horizon {
                     let spec = &sc.classes[class as usize];
-                    let mut c = cells[cell as usize].lock().unwrap();
-                    let ue = ue as usize;
-                    let n_input = spec.input_tokens.sample(&mut c.job_rng[class as usize][ue]);
+                    let ue_ix = ue as usize;
+                    // Draws come from the ORIGIN cell's per-(class,
+                    // UE) stream — handover moves the radio
+                    // attachment, never the traffic streams, so
+                    // trajectories stay decomposable per cell seed.
+                    let (n_input, gap) = {
+                        let mut c = cells[cell as usize].lock().unwrap();
+                        let r = &mut c.job_rng[class as usize][ue_ix];
+                        (spec.input_tokens.sample(r), r.exp(spec.rate_per_ue))
+                    };
                     let job_id = jobs.len() as u64;
                     jobs.push(JobState {
                         class: class as usize,
@@ -386,40 +533,113 @@ fn event_loop(
                         fate: JobFate::InFlight,
                         measured: now >= cfg.warmup,
                     });
-                    let arrival_slot = (now / c.slot_dur) as u64;
-                    let (sr_period, sr_proc) = (c.sr_period, c.sr_proc);
-                    c.bank.note_arrival(ue, arrival_slot, sr_period, sr_proc);
-                    if c.job_priority {
-                        // ICC job-aware prioritization: dedicated SR
-                        // resource bypasses the shared cycle.
-                        c.bank.ue_mut(ue).note_job_arrival_expedited(arrival_slot, sr_proc);
+                    // The prompt bytes land in the UE's *current*
+                    // serving cell's bank (identity under the legacy
+                    // static configuration).
+                    let (scell, sue) = match &locs {
+                        Some(l) => {
+                            let (c0, u0) = l[prefix[cell as usize] + ue_ix];
+                            (c0 as usize, u0 as usize)
+                        }
+                        None => (cell as usize, ue_ix),
+                    };
+                    {
+                        let mut c = cells[scell].lock().unwrap();
+                        let arrival_slot = (now / c.slot_dur) as u64;
+                        let (sr_period, sr_proc) = (c.sr_period, c.sr_proc);
+                        c.bank.note_arrival(sue, arrival_slot, sr_period, sr_proc);
+                        if c.job_priority {
+                            // ICC job-aware prioritization: dedicated SR
+                            // resource bypasses the shared cycle.
+                            c.bank.ue_mut(sue).note_job_arrival_expedited(arrival_slot, sr_proc);
+                        }
+                        let bytes = spec.request_bytes(n_input);
+                        c.bank.push_job_sdu(sue, Sdu {
+                            kind: SduKind::Job { job_id },
+                            total_bytes: bytes,
+                            bytes_left: bytes,
+                            t_arrival: now,
+                        });
                     }
-                    let bytes = spec.request_bytes(n_input);
-                    c.bank.push_job_sdu(ue, Sdu {
-                        kind: SduKind::Job { job_id },
-                        total_bytes: bytes,
-                        bytes_left: bytes,
-                        t_arrival: now,
-                    });
-                    let gap = c.job_rng[class as usize][ue].exp(spec.rate_per_ue);
-                    q.schedule_in(gap, Ev::JobArrival { cell, ue: ue as u32, class });
+                    q.schedule_in(gap, Ev::JobArrival { cell, ue, class });
                 }
             }
             Ev::BgArrival { cell, ue } => {
                 if now < cfg.horizon {
-                    let mut c = cells[cell as usize].lock().unwrap();
-                    let ue = ue as usize;
-                    let arrival_slot = (now / c.slot_dur) as u64;
-                    let (sr_period, sr_proc) = (c.sr_period, c.sr_proc);
-                    c.bank.note_arrival(ue, arrival_slot, sr_period, sr_proc);
-                    c.bank.push_bg_sdu(ue, Sdu {
-                        kind: SduKind::Background,
-                        total_bytes: bg_bytes,
-                        bytes_left: bg_bytes,
-                        t_arrival: now,
-                    });
-                    let gap = c.bg_rng[ue].exp(bg_rate);
-                    q.schedule_in(gap, Ev::BgArrival { cell, ue: ue as u32 });
+                    let ue_ix = ue as usize;
+                    let gap = {
+                        let mut c = cells[cell as usize].lock().unwrap();
+                        c.bg_rng[ue_ix].exp(bg_rate)
+                    };
+                    let (scell, sue) = match &locs {
+                        Some(l) => {
+                            let (c0, u0) = l[prefix[cell as usize] + ue_ix];
+                            (c0 as usize, u0 as usize)
+                        }
+                        None => (cell as usize, ue_ix),
+                    };
+                    {
+                        let mut c = cells[scell].lock().unwrap();
+                        let arrival_slot = (now / c.slot_dur) as u64;
+                        let (sr_period, sr_proc) = (c.sr_period, c.sr_proc);
+                        c.bank.note_arrival(sue, arrival_slot, sr_period, sr_proc);
+                        c.bank.push_bg_sdu(sue, Sdu {
+                            kind: SduKind::Background,
+                            total_bytes: bg_bytes,
+                            bytes_left: bg_bytes,
+                            t_arrival: now,
+                        });
+                    }
+                    q.schedule_in(gap, Ev::BgArrival { cell, ue });
+                }
+            }
+            Ev::RadioTick if now >= cfg.horizon => {
+                // Radio dynamics end at the horizon: a post-horizon
+                // migration could land a UE in a cell whose slot clock
+                // already stopped (empty bank past the horizon),
+                // stranding its backlog for the whole drain window.
+                // Arrivals stop at the horizon too, so frozen
+                // positions/attachments during the drain are exact.
+            }
+            Ev::RadioTick => {
+                // Mobility first (positions + refreshed loss caches),
+                // then A3 evaluation over the fresh RSRP ordering,
+                // then the migrations — all serial on the engine
+                // thread between slot batches, in cell-index order, so
+                // the threaded schedule stays bit-identical to serial.
+                if let Some(mob) = &sc.mobility {
+                    for cm in cells {
+                        cm.lock().unwrap().advance_mobility(mob, tick_s);
+                    }
+                }
+                if let (Some(ho), Some(l)) = (&sc.handover, locs.as_mut()) {
+                    pending_ho.clear();
+                    for cm in cells {
+                        cm.lock().unwrap().evaluate_handover(
+                            ho.hysteresis_db,
+                            ttt_ticks,
+                            &mut pending_ho,
+                        );
+                    }
+                    for &(tag, from, to) in &pending_ho {
+                        let (ck, ci) = l[tag as usize];
+                        debug_assert_eq!(ck as usize, from, "stale migration order");
+                        let (ue, gu, displaced) = {
+                            let mut c = cells[from].lock().unwrap();
+                            c.ho_out += 1;
+                            c.take_ue(ci as usize)
+                        };
+                        if let Some(d) = displaced {
+                            l[d as usize] = (from as u32, ci);
+                        }
+                        let mut t = cells[to].lock().unwrap();
+                        t.ho_in += 1;
+                        let ni = t.admit_ue(ue, gu, ho.interruption_slots);
+                        l[tag as usize] = (to as u32, ni as u32);
+                    }
+                }
+                if now < cfg.horizon {
+                    q.schedule_in(tick_s, Ev::RadioTick);
                 }
             }
             Ev::ComputeEnqueue { job } => {
@@ -579,8 +799,21 @@ fn event_loop(
         .iter()
         .map(|c| (c.name.clone(), management_of(&cfg.scheme, c.b_total)))
         .collect();
-    let report =
+    let mut report =
         SimReport::from_outcomes_per_class(&outcomes, &class_policies, sc.cells.len());
+    if sc.topology.is_some() {
+        report.radio = cells
+            .iter()
+            .map(|cm| {
+                let c = cm.lock().unwrap();
+                CellRadioReport {
+                    handovers_in: c.ho_in,
+                    handovers_out: c.ho_out,
+                    iot_db: c.iot_stats.clone(),
+                }
+            })
+            .collect();
+    }
     let wall = wall0.elapsed().as_secs_f64();
     ScenarioResult {
         outcomes,

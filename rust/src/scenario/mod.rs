@@ -51,7 +51,7 @@ pub mod routing;
 pub mod service;
 pub mod workload;
 
-pub use cells::{cell_seed, CellSpec};
+pub use cells::{cell_seed, CellSpec, HandoverSpec};
 pub use engine::{discipline_of, management_of, ScenarioResult};
 pub use routing::{
     CellAffinity, ClassAffinity, LeastLoaded, NodeView, RoundRobin, Routing, RoutingPolicy,
@@ -62,6 +62,9 @@ pub use service::{
 pub use workload::{workloads_from_toml, workloads_to_toml, TokenDist, WorkloadClass};
 
 pub use crate::compute::ExecutionModel;
+pub use crate::dess::EventListKind;
+pub use crate::phy::geometry::{SiteLayout, TopologySpec};
+pub use crate::phy::mobility::{MobilityModel, MobilitySpec};
 
 use crate::config::{typed_f64, typed_i64, typed_str, SchemeConfig, SimConfig};
 use crate::llm::GpuSpec;
@@ -100,6 +103,15 @@ pub struct Scenario {
     /// Worker threads stepping cells inside `run` (1 = serial, 0 = all
     /// cores). Never changes the results, only the wall clock.
     pub(crate) cell_threads: usize,
+    /// Site layout; `Some` switches the radio stack from the fixed
+    /// interference margin + static UEs to geometry-driven coupling.
+    pub(crate) topology: Option<TopologySpec>,
+    /// UE motion model (requires a topology).
+    pub(crate) mobility: Option<MobilitySpec>,
+    /// A3 handover (requires a topology).
+    pub(crate) handover: Option<HandoverSpec>,
+    /// Event-list backend of the engine's calendar.
+    pub(crate) event_queue: EventListKind,
 }
 
 impl std::fmt::Debug for Scenario {
@@ -113,6 +125,10 @@ impl std::fmt::Debug for Scenario {
             .field("routing", &self.routing)
             .field("custom_router", &self.router_factory.is_some())
             .field("cell_threads", &self.cell_threads)
+            .field("topology", &self.topology)
+            .field("mobility", &self.mobility)
+            .field("handover", &self.handover)
+            .field("event_queue", &self.event_queue)
             .finish()
     }
 }
@@ -144,6 +160,25 @@ impl Scenario {
     /// Worker threads stepping cells inside `run` (1 = serial).
     pub fn threads(&self) -> usize {
         self.cell_threads
+    }
+
+    /// The site layout of a coupled-radio scenario (None = legacy
+    /// radio-independent cells).
+    pub fn topology(&self) -> Option<&TopologySpec> {
+        self.topology.as_ref()
+    }
+
+    pub fn mobility(&self) -> Option<&MobilitySpec> {
+        self.mobility.as_ref()
+    }
+
+    pub fn handover(&self) -> Option<&HandoverSpec> {
+        self.handover.as_ref()
+    }
+
+    /// The engine's event-list backend.
+    pub fn event_queue(&self) -> EventListKind {
+        self.event_queue
     }
 
     pub fn nodes(&self) -> &[NodeSpec] {
@@ -190,6 +225,10 @@ pub struct ScenarioBuilder {
     routing: RoutingPolicy,
     router_factory: Option<RouterFactory>,
     cell_threads: usize,
+    topology: Option<TopologySpec>,
+    mobility: Option<MobilitySpec>,
+    handover: Option<HandoverSpec>,
+    event_queue: EventListKind,
 }
 
 impl std::fmt::Debug for ScenarioBuilder {
@@ -203,6 +242,10 @@ impl std::fmt::Debug for ScenarioBuilder {
             .field("routing", &self.routing)
             .field("custom_router", &self.router_factory.is_some())
             .field("cell_threads", &self.cell_threads)
+            .field("topology", &self.topology)
+            .field("mobility", &self.mobility)
+            .field("handover", &self.handover)
+            .field("event_queue", &self.event_queue)
             .finish()
     }
 }
@@ -224,6 +267,13 @@ impl ScenarioBuilder {
             routing: RoutingPolicy::LeastLoaded,
             router_factory: None,
             cell_threads: 1,
+            topology: None,
+            mobility: None,
+            handover: None,
+            // near-sorted slot/arrival schedules are the calendar
+            // queue's home turf; pop order (and hence every result) is
+            // backend-independent
+            event_queue: EventListKind::Calendar,
         }
     }
 
@@ -244,6 +294,10 @@ impl ScenarioBuilder {
             routing: RoutingPolicy::LeastLoaded,
             router_factory: None,
             cell_threads: 1,
+            topology: None,
+            mobility: None,
+            handover: None,
+            event_queue: EventListKind::Calendar,
         }
     }
 
@@ -304,6 +358,37 @@ impl ScenarioBuilder {
     /// engine merges per-cell events in cell-index order either way.
     pub fn threads(mut self, threads: usize) -> Self {
         self.cell_threads = threads;
+        self
+    }
+
+    /// Place the cells on a site grid and couple their radios:
+    /// neighbor-cell interference becomes a dynamic
+    /// interference-over-thermal term computed from previous-slot
+    /// granted-PRB activity (replacing the fixed margin), and UEs get
+    /// global positions. Without a topology the scenario keeps the
+    /// legacy radio-independent cells bit for bit.
+    pub fn topology(mut self, topo: TopologySpec) -> Self {
+        self.topology = Some(topo);
+        self
+    }
+
+    /// UE motion on a coarse tick (requires [`ScenarioBuilder::topology`]).
+    pub fn mobility(mut self, mob: MobilitySpec) -> Self {
+        self.mobility = Some(mob);
+        self
+    }
+
+    /// A3 handover between coupled cells (requires
+    /// [`ScenarioBuilder::topology`]).
+    pub fn handover(mut self, ho: HandoverSpec) -> Self {
+        self.handover = Some(ho);
+        self
+    }
+
+    /// Event-list backend of the engine's calendar (default: calendar
+    /// queue; the heap fallback is observationally identical).
+    pub fn event_queue(mut self, kind: EventListKind) -> Self {
+        self.event_queue = kind;
         self
     }
 
@@ -384,8 +469,12 @@ impl ScenarioBuilder {
                 // Values are pulled through the shared typed helpers
                 // after this name-validation loop.
                 "scenario.n_ues" | "scenario.horizon" | "scenario.warmup"
-                | "scenario.seed" | "scenario.threads" | "service.model"
-                | "routing.policy" | "routing.spill_queue" => {}
+                | "scenario.seed" | "scenario.threads" | "scenario.event_queue"
+                | "service.model" | "routing.policy" | "routing.spill_queue"
+                | "topology.layout" | "topology.isd" | "mobility.model"
+                | "mobility.speed" | "mobility.v_min" | "mobility.v_max"
+                | "mobility.tick_s" | "handover.hysteresis_db" | "handover.ttt_s"
+                | "handover.interruption_slots" => {}
                 // apply_scheme_toml owns the [scheme] key set and
                 // rejects unknown or mistyped ones.
                 k if k.starts_with("scheme.") => {}
@@ -421,6 +510,109 @@ impl ScenarioBuilder {
                 anyhow::bail!("'scenario.threads' must be in 0..=1024, got {v}");
             }
             self.cell_threads = v as usize;
+        }
+        if let Some(s) = typed_str(doc, "scenario.event_queue")? {
+            self.event_queue = EventListKind::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown event_queue '{s}' (calendar | heap)"))?;
+        }
+        // [topology]: layout + inter-site distance. Presence of either
+        // key enables geometry-driven coupling.
+        let topo_layout = typed_str(doc, "topology.layout")?;
+        let topo_isd = typed_f64(doc, "topology.isd")?;
+        if topo_layout.is_some() || topo_isd.is_some() {
+            let layout = match topo_layout {
+                Some(s) => SiteLayout::parse(s).ok_or_else(|| {
+                    anyhow::anyhow!("unknown topology layout '{s}' (hex | linear)")
+                })?,
+                None => SiteLayout::Hex,
+            };
+            let isd = topo_isd
+                .ok_or_else(|| anyhow::anyhow!("'topology.isd' is required with [topology]"))?;
+            if !(1.0..=1e6).contains(&isd) {
+                anyhow::bail!("'topology.isd' must be in 1..=1e6 meters, got {isd}");
+            }
+            self.topology = Some(TopologySpec { layout, isd_m: isd });
+        }
+        // [mobility]: model + speeds + tick.
+        let mob_model = typed_str(doc, "mobility.model")?;
+        if mob_model.is_some()
+            || doc.get("mobility.speed").is_some()
+            || doc.get("mobility.v_min").is_some()
+            || doc.get("mobility.v_max").is_some()
+            || doc.get("mobility.tick_s").is_some()
+        {
+            let speed = typed_f64(doc, "mobility.speed")?;
+            let v_min = typed_f64(doc, "mobility.v_min")?;
+            let v_max = typed_f64(doc, "mobility.v_max")?;
+            for (k, v) in [("speed", speed), ("v_min", v_min), ("v_max", v_max)] {
+                if let Some(v) = v {
+                    if !(0.0..=1e3).contains(&v) {
+                        anyhow::bail!("'mobility.{k}' must be in 0..=1000 m/s, got {v}");
+                    }
+                }
+            }
+            let model = match mob_model.unwrap_or("fixed") {
+                "fixed" | "fixed_velocity" => {
+                    if v_min.is_some() || v_max.is_some() {
+                        anyhow::bail!("'mobility.v_min'/'v_max' require model = \"waypoint\"");
+                    }
+                    MobilityModel::FixedVelocity {
+                        speed: speed.ok_or_else(|| {
+                            anyhow::anyhow!("'mobility.speed' is required for the fixed model")
+                        })?,
+                    }
+                }
+                "waypoint" | "random_waypoint" => {
+                    if speed.is_some() {
+                        anyhow::bail!("'mobility.speed' is for the fixed model; use v_min/v_max");
+                    }
+                    let lo = v_min.ok_or_else(|| {
+                        anyhow::anyhow!("'mobility.v_min' is required for the waypoint model")
+                    })?;
+                    let hi = v_max.ok_or_else(|| {
+                        anyhow::anyhow!("'mobility.v_max' is required for the waypoint model")
+                    })?;
+                    if hi < lo {
+                        anyhow::bail!("'mobility.v_max' must be >= v_min");
+                    }
+                    MobilityModel::RandomWaypoint { v_min: lo, v_max: hi }
+                }
+                other => anyhow::bail!("unknown mobility model '{other}' (fixed | waypoint)"),
+            };
+            let mut spec = MobilitySpec { model, tick_s: MobilitySpec::DEFAULT_TICK_S };
+            if let Some(t) = typed_f64(doc, "mobility.tick_s")? {
+                if !(1e-4..=10.0).contains(&t) {
+                    anyhow::bail!("'mobility.tick_s' must be in 0.0001..=10 s, got {t}");
+                }
+                spec.tick_s = t;
+            }
+            self.mobility = Some(spec);
+        }
+        // [handover]: A3 parameters; any key enables it.
+        if doc.get("handover.hysteresis_db").is_some()
+            || doc.get("handover.ttt_s").is_some()
+            || doc.get("handover.interruption_slots").is_some()
+        {
+            let mut ho = HandoverSpec::default();
+            if let Some(v) = typed_f64(doc, "handover.hysteresis_db")? {
+                if !(0.0..=30.0).contains(&v) {
+                    anyhow::bail!("'handover.hysteresis_db' must be in 0..=30 dB, got {v}");
+                }
+                ho.hysteresis_db = v;
+            }
+            if let Some(v) = typed_f64(doc, "handover.ttt_s")? {
+                if !(0.0..=10.0).contains(&v) {
+                    anyhow::bail!("'handover.ttt_s' must be in 0..=10 s, got {v}");
+                }
+                ho.ttt_s = v;
+            }
+            if let Some(v) = typed_i64(doc, "handover.interruption_slots")? {
+                if !(0..=100_000).contains(&v) {
+                    anyhow::bail!("'handover.interruption_slots' must be in 0..=100000, got {v}");
+                }
+                ho.interruption_slots = v as u64;
+            }
+            self.handover = Some(ho);
         }
         if let Some(s) = typed_str(doc, "service.model")? {
             let kind = ServiceModelKind::parse(s)
@@ -631,6 +823,16 @@ impl ScenarioBuilder {
                 "total UE population across cells must be in 1..=1000000, got {total_ues}"
             );
         }
+        // Coupled-radio surfaces require the site geometry that
+        // defines them.
+        if self.topology.is_none() {
+            if self.mobility.is_some() {
+                anyhow::bail!("[mobility] requires a [topology] (site layout)");
+            }
+            if self.handover.is_some() {
+                anyhow::bail!("[handover] requires a [topology] (site layout)");
+            }
+        }
         // The scheme owns job-aware prioritization — same sync rule as
         // `SimConfig::with_scheme`, applied to every cell.
         for cell in &mut self.cells {
@@ -705,6 +907,10 @@ impl ScenarioBuilder {
             routing: self.routing,
             router_factory: self.router_factory,
             cell_threads: self.cell_threads,
+            topology: self.topology,
+            mobility: self.mobility,
+            handover: self.handover,
+            event_queue: self.event_queue,
         })
     }
 }
@@ -1030,6 +1236,134 @@ mod tests {
         for c in &r.report.per_cell {
             assert!(c.n_jobs > 0, "cell '{}' generated no jobs", c.name);
         }
+    }
+
+    #[test]
+    fn toml_topology_mobility_handover_tables_parse() {
+        let doc = Document::parse(
+            "[scenario]\nevent_queue = \"heap\"\n\
+             [topology]\nlayout = \"linear\"\nisd = 400.0\n\
+             [mobility]\nmodel = \"waypoint\"\nv_min = 1.0\nv_max = 5.0\ntick_s = 0.2\n\
+             [handover]\nhysteresis_db = 2.5\nttt_s = 0.4\ninterruption_slots = 8\n\
+             [[cell]]\nues = 6\ncount = 2\n",
+        )
+        .unwrap();
+        let s = ScenarioBuilder::new().apply_toml(&doc).unwrap().build();
+        assert_eq!(s.event_queue(), EventListKind::Heap);
+        let topo = s.topology().unwrap();
+        assert_eq!(topo.layout, SiteLayout::Linear);
+        assert_eq!(topo.isd_m, 400.0);
+        let mob = s.mobility().unwrap();
+        assert_eq!(mob.model, MobilityModel::RandomWaypoint { v_min: 1.0, v_max: 5.0 });
+        assert_eq!(mob.tick_s, 0.2);
+        let ho = s.handover().unwrap();
+        assert_eq!(ho.hysteresis_db, 2.5);
+        assert_eq!(ho.ttt_s, 0.4);
+        assert_eq!(ho.interruption_slots, 8);
+        // fixed-velocity spelling
+        let doc = Document::parse(
+            "[topology]\nisd = 500\n[mobility]\nmodel = \"fixed\"\nspeed = 3.0\n",
+        )
+        .unwrap();
+        let s = ScenarioBuilder::new().apply_toml(&doc).unwrap().build();
+        assert_eq!(s.topology().unwrap().layout, SiteLayout::Hex);
+        assert_eq!(
+            s.mobility().unwrap().model,
+            MobilityModel::FixedVelocity { speed: 3.0 }
+        );
+    }
+
+    #[test]
+    fn toml_coupled_radio_tables_strictly_validated() {
+        for bad in [
+            // topology needs an ISD
+            "[topology]\nlayout = \"hex\"",
+            // unknown layout / model / queue
+            "[topology]\nlayout = \"ring\"\nisd = 500",
+            "[topology]\nisd = 500\n[mobility]\nmodel = \"brownian\"\nspeed = 1",
+            "[scenario]\nevent_queue = \"wheel\"",
+            // fixed model rejects waypoint keys and vice versa
+            "[topology]\nisd = 500\n[mobility]\nmodel = \"fixed\"\nspeed = 1\nv_min = 1",
+            "[topology]\nisd = 500\n[mobility]\nmodel = \"waypoint\"\nspeed = 1",
+            "[topology]\nisd = 500\n[mobility]\nmodel = \"waypoint\"\nv_min = 5\nv_max = 1",
+            // out-of-range values
+            "[topology]\nisd = 0",
+            "[topology]\nisd = 500\n[mobility]\nmodel = \"fixed\"\nspeed = -1",
+            "[topology]\nisd = 500\n[handover]\nhysteresis_db = 99",
+            "[topology]\nisd = 500\n[handover]\nttt_s = -1",
+            // unknown keys inside the new tables
+            "[topology]\nisd = 500\nfrobnicate = 1",
+            "[topology]\nisd = 500\n[handover]\nhys = 3",
+        ] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(
+                ScenarioBuilder::new().apply_toml(&doc).is_err(),
+                "accepted: {bad}"
+            );
+        }
+        // mobility/handover without topology fail at build time
+        for doc in [
+            "[mobility]\nmodel = \"fixed\"\nspeed = 3",
+            "[handover]\nhysteresis_db = 3",
+        ] {
+            let doc = Document::parse(doc).unwrap();
+            let err = ScenarioBuilder::new()
+                .apply_toml(&doc)
+                .unwrap()
+                .try_build()
+                .unwrap_err();
+            assert!(err.to_string().contains("topology"), "{err}");
+        }
+    }
+
+    #[test]
+    fn coupled_radio_run_reports_radio_slices_and_heap_matches_calendar() {
+        let mk = |kind: EventListKind| {
+            ScenarioBuilder::new()
+                .scheme(SchemeConfig::icc())
+                .horizon(2.0)
+                .warmup(0.2)
+                .seed(11)
+                .cells(3, CellSpec::new(6))
+                .topology(TopologySpec::hex(500.0))
+                .mobility(MobilitySpec::fixed(20.0))
+                .handover(HandoverSpec { hysteresis_db: 1.0, ttt_s: 0.1, interruption_slots: 4 })
+                .event_queue(kind)
+                .node(GpuSpec::gh200_nvl2().scaled(2.0), 1)
+                .build()
+                .run()
+        };
+        let cal = mk(EventListKind::Calendar);
+        assert_eq!(cal.report.radio.len(), 3, "coupled run must report radio slices");
+        for r in &cal.report.radio {
+            assert!(r.iot_db.count() > 0, "IoT sampled per stepped slot");
+            assert!(r.iot_db.mean() >= 0.0);
+        }
+        assert!(cal.report.n_jobs > 0);
+        // the JSON report carries the radio array
+        assert!(cal.report.to_json().contains("per_cell_radio"));
+        // heap backend reproduces the identical trajectory
+        let heap = mk(EventListKind::Heap);
+        assert_eq!(cal.events, heap.events);
+        assert_eq!(cal.report.n_jobs, heap.report.n_jobs);
+        assert_eq!(
+            cal.report.e2e.mean().to_bits(),
+            heap.report.e2e.mean().to_bits()
+        );
+        for (a, b) in cal.report.radio.iter().zip(&heap.report.radio) {
+            assert_eq!(a.handovers_in, b.handovers_in);
+            assert_eq!(a.handovers_out, b.handovers_out);
+            assert_eq!(a.iot_db.mean().to_bits(), b.iot_db.mean().to_bits());
+        }
+    }
+
+    #[test]
+    fn legacy_default_ignores_radio_surfaces_entirely() {
+        // no topology → no radio slices, margin-based noise, static UEs
+        let s = small(ScenarioBuilder::new().scheme(SchemeConfig::icc())).build();
+        assert!(s.topology().is_none());
+        let r = s.run();
+        assert!(r.report.radio.is_empty());
     }
 
     #[test]

@@ -170,6 +170,37 @@ fn scenario_multi_cell_prints_per_cell_breakdown_threaded() {
 }
 
 #[test]
+fn scenario_coupled_radio_flags_print_topology_and_radio_table() {
+    let dir = std::env::temp_dir().join(format!("icc6g_radio_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = bin()
+        .current_dir(&dir)
+        .args([
+            "scenario", "--ues", "18", "--cells", "3", "--nodes", "3", "--routing",
+            "cell_affinity", "--horizon", "2", "--isd", "400", "--speed", "20",
+            "--handover",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    for field in [
+        "topology     : hex grid, ISD 400 m",
+        "A3 handover",
+        "per-cell radio",
+        "avg_iot_db",
+    ] {
+        assert!(text.contains(field), "missing '{field}' in:\n{text}");
+    }
+    assert!(dir.join("bench_out").join("scenario_radio.csv").exists());
+    // the coupled surfaces require a topology
+    let out = bin().args(["scenario", "--handover"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--isd"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn scenario_cell_toml_config_drives_a_sharded_run() {
     let dir = std::env::temp_dir().join(format!("icc6g_celltoml_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();

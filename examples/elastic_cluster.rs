@@ -1,0 +1,121 @@
+//! Elastic compute tier under a diurnal load cycle with node churn.
+//!
+//! The ICC tier is rented by the hour, so the system-level figure of
+//! merit is not raw satisfaction but *capacity per dollar*: satisfied
+//! prompts per unit of GPU rental spend. This example sweeps a
+//! four-phase diurnal cycle (night / morning / peak / evening, modeled
+//! as separate runs at different UE populations) over a 4-node tier
+//! whose nodes fail and recover (MTBF 20 s, MTTR 2 s at this
+//! compressed timescale), and compares two control planes:
+//!
+//! * `fixed` — all four nodes powered for the whole window, the
+//!   static-provisioning baseline;
+//! * `queue_depth` — the autoscaler powers nodes with the queue-depth
+//!   hysteresis policy, draining idle capacity off-peak.
+//!
+//! Failed nodes evict their jobs back through routing (one retry, then
+//! the work is lost), so the table also shows the churn bill:
+//! failures, re-dispatches and lost jobs. Runs are deterministic per
+//! seed and invariant to the thread count.
+//!
+//! Run: `cargo run --release --example elastic_cluster`
+
+use icc6g::config::SchemeConfig;
+use icc6g::llm::GpuSpec;
+use icc6g::scenario::{
+    AutoscalerKind, CellSpec, ClusterSpec, NodeChurnSpec, ScenarioBuilder, WorkloadClass,
+};
+
+const N_NODES: usize = 4;
+const HORIZON: f64 = 10.0;
+const PHASES: [(&str, u32); 4] =
+    [("night", 4), ("morning", 12), ("peak", 24), ("evening", 10)];
+
+struct PhaseRow {
+    satisfaction: f64,
+    dollars: f64,
+    cap_per_dollar: f64,
+    failures: u64,
+    redispatched: u64,
+    lost: u64,
+}
+
+fn run(ues_per_cell: u32, policy: AutoscalerKind) -> PhaseRow {
+    let churn = NodeChurnSpec { mtbf: 20.0, mttr: 2.0, spinup: 0.5 };
+    let mut b = ScenarioBuilder::new()
+        .scheme(SchemeConfig::icc())
+        .horizon(HORIZON)
+        .warmup(0.0)
+        .seed(7)
+        .threads(0)
+        .workload(WorkloadClass::chat())
+        .workload(WorkloadClass::translation())
+        .cells(2, CellSpec::new(ues_per_cell));
+    for _ in 0..N_NODES {
+        b = b.node(GpuSpec::gh200_nvl2().scaled(2.0), 1).node_churn(churn);
+    }
+    let res = b
+        .cluster(ClusterSpec { policy, min_nodes: 1, retry_budget: 1, ..Default::default() })
+        .build()
+        .run();
+    let cl = &res.report.cluster;
+    PhaseRow {
+        satisfaction: res.report.satisfaction_rate(),
+        dollars: cl.total_dollars(),
+        cap_per_dollar: cl.capacity_per_dollar(res.report.n_satisfied),
+        failures: cl.nodes.iter().map(|n| n.failures).sum(),
+        redispatched: cl.nodes.iter().map(|n| n.redispatched).sum(),
+        lost: cl.nodes.iter().map(|n| n.lost).sum(),
+    }
+}
+
+fn main() {
+    println!("=== Elastic ICC tier: diurnal load, node churn, capacity per dollar ===");
+    println!(
+        "{N_NODES} x {} nodes, {HORIZON} s per phase, MTBF 20 s / MTTR 2 s / spin-up 0.5 s\n",
+        GpuSpec::gh200_nvl2().scaled(2.0).display_name()
+    );
+    println!(
+        "{:<9} {:<12} {:>4} {:>7} {:>8} {:>9} {:>6} {:>7} {:>5}",
+        "phase", "policy", "ues", "sat", "usd", "sat/usd", "fails", "redisp", "lost"
+    );
+    let mut totals = [(0.0f64, 0.0f64), (0.0f64, 0.0f64)]; // (satisfied-ish dollars, spend) per policy
+    for (phase, ues_per_cell) in PHASES {
+        for (pi, policy) in [
+            AutoscalerKind::Fixed,
+            AutoscalerKind::QueueDepth { high: 8, low: 1 },
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let r = run(ues_per_cell, policy);
+            println!(
+                "{:<9} {:<12} {:>4} {:>7.4} {:>8.4} {:>9.1} {:>6} {:>7} {:>5}",
+                phase,
+                policy.name(),
+                2 * ues_per_cell,
+                r.satisfaction,
+                r.dollars,
+                r.cap_per_dollar,
+                r.failures,
+                r.redispatched,
+                r.lost,
+            );
+            totals[pi].0 += r.cap_per_dollar * r.dollars; // satisfied jobs
+            totals[pi].1 += r.dollars;
+        }
+    }
+    println!();
+    for (pi, name) in ["fixed", "queue_depth"].into_iter().enumerate() {
+        println!(
+            "{name:<12}: {:.0} satisfied jobs for ${:.4} over the cycle = {:.1} per dollar",
+            totals[pi].0,
+            totals[pi].1,
+            totals[pi].0 / totals[pi].1,
+        );
+    }
+    println!("\nThe autoscaler gives up a little peak satisfaction but buys it back");
+    println!("several times over in off-peak rental spend; node churn costs both");
+    println!("tiers the same re-dispatch work because eviction recovery rides the");
+    println!("same routing path either way.");
+}

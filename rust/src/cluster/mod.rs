@@ -1,0 +1,896 @@
+//! Elastic compute control plane (DESIGN.md §11).
+//!
+//! The scenario engine's compute tier is a fixed set of always-healthy
+//! nodes; this module layers a *managed cluster* on top of it:
+//!
+//! * a per-node **lifecycle state machine**
+//!   (`Provisioning → Up → Draining → Down`) driven by deterministic
+//!   MTBF/MTTR failure and repair events on the engine's event
+//!   calendar, with a per-node spin-up delay;
+//! * an [`AutoscalerPolicy`] evaluated on a coarse **control tick**
+//!   (queue-depth and TTFT-SLO-violation triggers ship as built-ins;
+//!   the fixed policy never acts, making an enabled-but-idle cluster
+//!   behave exactly like the static tier);
+//! * **re-dispatch** bookkeeping for jobs evicted from a failed node
+//!   (the engine re-routes them through its `Routing` policy; this
+//!   module tracks retry budgets and lost work);
+//! * **cost/energy accounting**: powered wall-seconds per node turn
+//!   into GPU-seconds, joules and dollars from the [`GpuSpec`]
+//!   TDP/price catalog fields, aggregated per node and per class.
+//!
+//! Everything here is a passive state machine like `ComputeNode`: the
+//! engine owns the calendar and drives [`ClusterRt`] with explicit
+//! transitions, so the module stays trivially unit-testable and the
+//! disabled path (no `ClusterRt` at all) is bit-identical to the
+//! static tier by construction.
+//!
+//! Determinism: failure and repair delays for node `i` are drawn from
+//! the dedicated RNG substream `NODE_CHURN_STREAM + i` of the master
+//! seed — disjoint from every radio/traffic/service substream — and
+//! all control-plane logic runs serially on the engine thread, so runs
+//! are reproducible per seed and invariant to the worker-thread count.
+
+use crate::llm::GpuSpec;
+use crate::metrics::{ClassClusterReport, ClusterReport, NodeClusterReport};
+use crate::rng::Rng;
+
+/// Base RNG substream id for per-node failure/repair draws: node `i`
+/// draws from `substream(master_seed, NODE_CHURN_STREAM + i)`. The
+/// high base keeps the range disjoint from the per-cell radio streams
+/// (≤ `0x4000_0000_0000 + ue`) and every per-(cell, ue) traffic
+/// stream.
+pub const NODE_CHURN_STREAM: u64 = 0x8000_0000_0000;
+
+/// Lifecycle state of one compute node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    /// Powered on, paying cost, not yet serving (spin-up window).
+    Provisioning,
+    /// Healthy and eligible for routing.
+    Up,
+    /// Excluded from routing; finishes owned work, then powers off.
+    Draining,
+    /// Powered off: no cost, no work. Reached by failure or scale-down.
+    Down,
+}
+
+impl NodeState {
+    /// Powered states accrue cost (you pay while booting and draining).
+    pub fn powered(self) -> bool {
+        self != NodeState::Down
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            NodeState::Provisioning => "provisioning",
+            NodeState::Up => "up",
+            NodeState::Draining => "draining",
+            NodeState::Down => "down",
+        }
+    }
+}
+
+/// Per-node churn parameters (TOML `[[node]] mtbf/mttr/spinup`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeChurnSpec {
+    /// Mean time between failures, seconds (`∞` = never fails).
+    pub mtbf: f64,
+    /// Mean time to repair, seconds (exponential draw).
+    pub mttr: f64,
+    /// Deterministic boot delay from power-on to serving, seconds.
+    pub spinup: f64,
+}
+
+impl Default for NodeChurnSpec {
+    fn default() -> Self {
+        Self { mtbf: f64::INFINITY, mttr: 60.0, spinup: 30.0 }
+    }
+}
+
+/// Cluster-wide control-plane parameters (TOML `[cluster]`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClusterSpec {
+    pub policy: AutoscalerKind,
+    /// Control-tick period, seconds.
+    pub tick_s: f64,
+    /// Autoscaler never powers fewer nodes than this.
+    pub min_nodes: usize,
+    /// Autoscaler never powers more nodes than this (clamped to the
+    /// tier size at build time).
+    pub max_nodes: usize,
+    /// Times a job may be re-dispatched after node loss before it is
+    /// declared lost.
+    pub retry_budget: u32,
+    /// TTFT target, seconds — jobs slower than this count as SLO
+    /// violations in the control-tick observation window.
+    pub ttft_slo: f64,
+}
+
+impl Default for ClusterSpec {
+    fn default() -> Self {
+        Self {
+            policy: AutoscalerKind::Fixed,
+            tick_s: 0.5,
+            min_nodes: 1,
+            max_nodes: usize::MAX,
+            retry_budget: 1,
+            ttft_slo: 0.5,
+        }
+    }
+}
+
+/// What the autoscaler sees at each control tick — cheap aggregate
+/// load summaries, mirroring [`crate::scenario::NodeView`]'s "what an
+/// orchestrator can actually observe" discipline.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterObs {
+    pub now: f64,
+    /// Nodes currently powered and not draining (`Up` + `Provisioning`)
+    /// — the capacity the tier is committed to.
+    pub powered: usize,
+    /// Nodes currently serving (`Up`).
+    pub up: usize,
+    /// Jobs queued across `Up` nodes.
+    pub queued: usize,
+    /// Busy servers / occupied batch slots across `Up` nodes.
+    pub busy: u32,
+    /// TTFT observations since the previous tick…
+    pub jobs_ttft: u64,
+    /// …of which exceeded [`ClusterSpec::ttft_slo`].
+    pub ttft_violations: u64,
+}
+
+/// A scaling decision maker, evaluated once per control tick. Returns
+/// the *desired* powered-node count; the runtime clamps it to
+/// `[min_nodes, max_nodes]` and translates the delta into power-on /
+/// drain transitions. Policies must be deterministic functions of the
+/// observation (no RNG, no wall clock).
+pub trait AutoscalerPolicy: std::fmt::Debug {
+    fn name(&self) -> &'static str;
+    fn desired(&mut self, obs: &ClusterObs) -> usize;
+}
+
+/// Never scales: desired = currently powered. With no churn this is
+/// the static tier (pinned bit-identical by the integration property
+/// test).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FixedPolicy;
+
+impl AutoscalerPolicy for FixedPolicy {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn desired(&mut self, obs: &ClusterObs) -> usize {
+        obs.powered
+    }
+}
+
+/// Queue-depth trigger with hysteresis: add a node when the jobs in
+/// system per `Up` node exceed `high`, release one when they fall
+/// below `low` (`low < high` enforced at build time).
+#[derive(Debug, Clone, Copy)]
+pub struct QueueDepthPolicy {
+    pub high: u32,
+    pub low: u32,
+}
+
+impl AutoscalerPolicy for QueueDepthPolicy {
+    fn name(&self) -> &'static str {
+        "queue_depth"
+    }
+
+    fn desired(&mut self, obs: &ClusterObs) -> usize {
+        let up = obs.up.max(1);
+        let load = obs.queued + obs.busy as usize;
+        if load > self.high as usize * up {
+            obs.powered + 1
+        } else if load < self.low as usize * up {
+            obs.powered.saturating_sub(1)
+        } else {
+            obs.powered
+        }
+    }
+}
+
+/// TTFT-SLO trigger: add a node when the fraction of jobs violating
+/// the TTFT target since the last tick exceeds `max_violation_frac`,
+/// release one after a violation-free window.
+#[derive(Debug, Clone, Copy)]
+pub struct TtftSloPolicy {
+    pub max_violation_frac: f64,
+}
+
+impl AutoscalerPolicy for TtftSloPolicy {
+    fn name(&self) -> &'static str {
+        "ttft_slo"
+    }
+
+    fn desired(&mut self, obs: &ClusterObs) -> usize {
+        if obs.jobs_ttft == 0 {
+            return obs.powered;
+        }
+        let frac = obs.ttft_violations as f64 / obs.jobs_ttft as f64;
+        if frac > self.max_violation_frac {
+            obs.powered + 1
+        } else if obs.ttft_violations == 0 {
+            obs.powered.saturating_sub(1)
+        } else {
+            obs.powered
+        }
+    }
+}
+
+/// Config-level autoscaler selector (`[cluster] policy = "..."`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AutoscalerKind {
+    /// No scaling — the static tier plus (optionally) churn.
+    Fixed,
+    QueueDepth { high: u32, low: u32 },
+    TtftSlo { max_violation_frac: f64 },
+}
+
+/// Default queue-depth thresholds: scale up beyond 8 jobs in system
+/// per node, release below 1.
+pub const DEFAULT_QUEUE_HIGH: u32 = 8;
+pub const DEFAULT_QUEUE_LOW: u32 = 1;
+/// Default tolerated TTFT-violation fraction per tick window.
+pub const DEFAULT_VIOLATION_FRAC: f64 = 0.05;
+
+impl AutoscalerKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "fixed" | "none" | "static" => Some(Self::Fixed),
+            "queue_depth" | "queue-depth" | "queue" => {
+                Some(Self::QueueDepth { high: DEFAULT_QUEUE_HIGH, low: DEFAULT_QUEUE_LOW })
+            }
+            "ttft_slo" | "ttft-slo" | "ttft" | "slo" => {
+                Some(Self::TtftSlo { max_violation_frac: DEFAULT_VIOLATION_FRAC })
+            }
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Fixed => "fixed",
+            Self::QueueDepth { .. } => "queue_depth",
+            Self::TtftSlo { .. } => "ttft_slo",
+        }
+    }
+
+    pub fn build(self) -> Box<dyn AutoscalerPolicy> {
+        match self {
+            Self::Fixed => Box::new(FixedPolicy),
+            Self::QueueDepth { high, low } => Box::new(QueueDepthPolicy { high, low }),
+            Self::TtftSlo { max_violation_frac } => {
+                Box::new(TtftSloPolicy { max_violation_frac })
+            }
+        }
+    }
+}
+
+/// Raw per-node accounting counters (costs are priced at report time
+/// from the node's [`GpuSpec`]).
+#[derive(Debug, Clone, Copy, Default)]
+struct NodeAcct {
+    up_seconds: f64,
+    served: u64,
+    redispatched: u64,
+    lost: u64,
+    failures: u64,
+}
+
+/// Per-class attributed work (roofline seconds priced on the serving
+/// node — see DESIGN.md §11 for the formulas).
+#[derive(Debug, Clone, Copy, Default)]
+struct ClassAcct {
+    gpu_seconds: f64,
+    joules: f64,
+    dollars: f64,
+    redispatched: u64,
+    lost: u64,
+}
+
+/// Runtime control-plane state for one scenario run. Owned and driven
+/// serially by the scenario engine; every method is a deterministic
+/// transition.
+#[derive(Debug)]
+pub struct ClusterRt {
+    spec: ClusterSpec,
+    policy: Box<dyn AutoscalerPolicy>,
+    churn: Vec<NodeChurnSpec>,
+    gpus: Vec<GpuSpec>,
+    states: Vec<NodeState>,
+    /// Bumped whenever node `i` loses its in-flight calendar events
+    /// (failure, drain-complete); events carrying an older epoch are
+    /// stale and must be ignored.
+    epochs: Vec<u32>,
+    /// A failed node awaiting its repair event cannot be powered on by
+    /// the autoscaler.
+    repairing: Vec<bool>,
+    rngs: Vec<Rng>,
+    /// When each powered node last transitioned into a powered state.
+    powered_since: Vec<f64>,
+    acct: Vec<NodeAcct>,
+    class_acct: Vec<ClassAcct>,
+    jobs_ttft: u64,
+    ttft_violations: u64,
+}
+
+impl ClusterRt {
+    /// All nodes start `Up` at t = 0 (the static tier's assumption).
+    pub fn new(
+        spec: ClusterSpec,
+        churn: Vec<NodeChurnSpec>,
+        gpus: Vec<GpuSpec>,
+        n_classes: usize,
+        master_seed: u64,
+    ) -> Self {
+        let n = gpus.len();
+        assert_eq!(churn.len(), n, "one churn spec per node");
+        assert!(spec.tick_s > 0.0);
+        Self {
+            spec,
+            policy: spec.policy.build(),
+            churn,
+            gpus,
+            states: vec![NodeState::Up; n],
+            epochs: vec![0; n],
+            repairing: vec![false; n],
+            rngs: (0..n)
+                .map(|i| Rng::substream(master_seed, NODE_CHURN_STREAM + i as u64))
+                .collect(),
+            powered_since: vec![0.0; n],
+            acct: vec![NodeAcct::default(); n],
+            class_acct: vec![ClassAcct::default(); n_classes],
+            jobs_ttft: 0,
+            ttft_violations: 0,
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.states.len()
+    }
+
+    pub fn spec(&self) -> &ClusterSpec {
+        &self.spec
+    }
+
+    pub fn state(&self, node: usize) -> NodeState {
+        self.states[node]
+    }
+
+    pub fn epoch(&self, node: usize) -> u32 {
+        self.epochs[node]
+    }
+
+    /// Is an event stamped with `epoch` for this node still live?
+    pub fn event_live(&self, node: usize, epoch: u32) -> bool {
+        self.epochs[node] == epoch
+    }
+
+    /// Routing eligibility: only `Up` nodes receive new work.
+    pub fn eligible(&self, node: usize) -> bool {
+        self.states[node] == NodeState::Up
+    }
+
+    /// Draw the next time-to-failure for a node that just came `Up`
+    /// (`None` when its MTBF is infinite — the node never fails).
+    pub fn time_to_failure(&mut self, node: usize) -> Option<f64> {
+        let mtbf = self.churn[node].mtbf;
+        if !mtbf.is_finite() {
+            return None;
+        }
+        assert!(mtbf > 0.0);
+        Some(self.rngs[node].exp(1.0 / mtbf))
+    }
+
+    fn accrue(&mut self, node: usize, now: f64) {
+        if self.states[node].powered() {
+            self.acct[node].up_seconds += now - self.powered_since[node];
+        }
+    }
+
+    /// Node `node` fails at `now`: power off, invalidate its in-flight
+    /// events, and return the repair delay to schedule. The engine is
+    /// responsible for evicting and re-dispatching the node's jobs.
+    pub fn on_fail(&mut self, node: usize, now: f64) -> f64 {
+        debug_assert!(self.states[node].powered(), "only powered nodes fail");
+        self.accrue(node, now);
+        self.states[node] = NodeState::Down;
+        self.epochs[node] += 1;
+        self.repairing[node] = true;
+        self.acct[node].failures += 1;
+        let mttr = self.churn[node].mttr;
+        assert!(mttr.is_finite() && mttr > 0.0, "node {node} has no finite mttr");
+        self.rngs[node].exp(1.0 / mttr)
+    }
+
+    /// Repair completes at `now`: the node powers back on and begins
+    /// its spin-up. Returns the spin-up delay to schedule.
+    pub fn on_repair(&mut self, node: usize, now: f64) -> f64 {
+        debug_assert_eq!(self.states[node], NodeState::Down);
+        self.repairing[node] = false;
+        self.states[node] = NodeState::Provisioning;
+        self.powered_since[node] = now;
+        self.churn[node].spinup
+    }
+
+    /// Spin-up completes: the node starts serving. Returns the next
+    /// time-to-failure to schedule (stamped with the current epoch).
+    pub fn on_up(&mut self, node: usize, _now: f64) -> Option<f64> {
+        debug_assert_eq!(self.states[node], NodeState::Provisioning);
+        self.states[node] = NodeState::Up;
+        self.time_to_failure(node)
+    }
+
+    /// TTFT observation for the current tick window.
+    pub fn observe_ttft(&mut self, ttft: f64) {
+        self.jobs_ttft += 1;
+        if ttft > self.spec.ttft_slo {
+            self.ttft_violations += 1;
+        }
+    }
+
+    /// A job completed on `node`; `work_seconds` is its roofline
+    /// prefill + decode time on that node (per-class cost attribution).
+    pub fn observe_completion(&mut self, node: usize, class: usize, work_seconds: f64) {
+        self.acct[node].served += 1;
+        let g = &self.gpus[node];
+        let c = &mut self.class_acct[class];
+        c.gpu_seconds += work_seconds * g.scale;
+        c.joules += work_seconds * g.tdp_watts;
+        c.dollars += work_seconds / 3600.0 * g.price_per_hour;
+    }
+
+    /// A job evicted from `node` re-enters routing.
+    pub fn observe_redispatch(&mut self, node: usize, class: usize) {
+        self.acct[node].redispatched += 1;
+        self.class_acct[class].redispatched += 1;
+    }
+
+    /// A job evicted from `node` exhausted its retry budget.
+    pub fn observe_lost(&mut self, node: usize, class: usize) {
+        self.acct[node].lost += 1;
+        self.class_acct[class].lost += 1;
+    }
+
+    /// One control tick: complete drains, evaluate the autoscaler, and
+    /// apply scale decisions. `loads[i] = (queue_len, busy)` for every
+    /// node (stale values for non-`Up` nodes are ignored, except that
+    /// a `Draining` node with zero load powers off). Nodes to power on
+    /// are appended to `power_on`; the engine schedules their `NodeUp`
+    /// events `spinup(node)` seconds out.
+    pub fn control_tick(
+        &mut self,
+        now: f64,
+        loads: &[(usize, u32)],
+        power_on: &mut Vec<usize>,
+    ) {
+        let n = self.n_nodes();
+        assert_eq!(loads.len(), n);
+        // 1. drained nodes that went idle power off
+        for i in 0..n {
+            if self.states[i] == NodeState::Draining && loads[i] == (0, 0) {
+                self.accrue(i, now);
+                self.states[i] = NodeState::Down;
+                self.epochs[i] += 1; // invalidate the pending failure event
+            }
+        }
+        // 2. observe and decide
+        let up = self.states.iter().filter(|s| **s == NodeState::Up).count();
+        let powered = self
+            .states
+            .iter()
+            .filter(|s| matches!(s, NodeState::Up | NodeState::Provisioning))
+            .count();
+        let (mut queued, mut busy) = (0usize, 0u32);
+        for i in 0..n {
+            if self.states[i] == NodeState::Up {
+                queued += loads[i].0;
+                busy += loads[i].1;
+            }
+        }
+        let obs = ClusterObs {
+            now,
+            powered,
+            up,
+            queued,
+            busy,
+            jobs_ttft: self.jobs_ttft,
+            ttft_violations: self.ttft_violations,
+        };
+        let desired = self
+            .policy
+            .desired(&obs)
+            .clamp(self.spec.min_nodes, self.spec.max_nodes.min(n));
+        self.jobs_ttft = 0;
+        self.ttft_violations = 0;
+        // 3. apply the delta
+        if desired > powered {
+            let mut need = desired - powered;
+            // un-draining is free capacity (no spin-up) — use it first
+            for i in 0..n {
+                if need == 0 {
+                    break;
+                }
+                if self.states[i] == NodeState::Draining {
+                    self.states[i] = NodeState::Up;
+                    need -= 1;
+                }
+            }
+            for i in 0..n {
+                if need == 0 {
+                    break;
+                }
+                if self.states[i] == NodeState::Down && !self.repairing[i] {
+                    self.states[i] = NodeState::Provisioning;
+                    self.powered_since[i] = now;
+                    power_on.push(i);
+                    need -= 1;
+                }
+            }
+        } else if desired < powered {
+            // release the highest indices first: the default routing
+            // affinities (class % n, cell % n) keep low indices warm
+            let mut excess = powered - desired;
+            for i in (0..n).rev() {
+                if excess == 0 {
+                    break;
+                }
+                if self.states[i] == NodeState::Up {
+                    self.states[i] = NodeState::Draining;
+                    excess -= 1;
+                }
+            }
+        }
+    }
+
+    /// Close the books at the end of the run.
+    pub fn finalize(&mut self, t_end: f64) {
+        for i in 0..self.n_nodes() {
+            self.accrue(i, t_end);
+            // freeze: everything is accounted through t_end
+            self.powered_since[i] = t_end;
+        }
+    }
+
+    /// Price the raw counters into the report section (call after
+    /// [`ClusterRt::finalize`]).
+    pub fn report(&self, class_names: &[String]) -> ClusterReport {
+        assert_eq!(class_names.len(), self.class_acct.len());
+        let nodes = (0..self.n_nodes())
+            .map(|i| {
+                let g = &self.gpus[i];
+                let a = &self.acct[i];
+                NodeClusterReport {
+                    name: format!("node{i}"),
+                    gpu: g.display_name(),
+                    up_seconds: a.up_seconds,
+                    gpu_seconds: a.up_seconds * g.scale,
+                    joules: a.up_seconds * g.tdp_watts,
+                    dollars: a.up_seconds / 3600.0 * g.price_per_hour,
+                    served: a.served,
+                    redispatched: a.redispatched,
+                    lost: a.lost,
+                    failures: a.failures,
+                }
+            })
+            .collect();
+        let classes = class_names
+            .iter()
+            .zip(&self.class_acct)
+            .map(|(name, c)| ClassClusterReport {
+                name: name.clone(),
+                gpu_seconds: c.gpu_seconds,
+                joules: c.joules,
+                dollars: c.dollars,
+                redispatched: c.redispatched,
+                lost: c.lost,
+            })
+            .collect();
+        ClusterReport { nodes, classes }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gpus(n: usize) -> Vec<GpuSpec> {
+        vec![GpuSpec::a100(); n]
+    }
+
+    fn churn_all(mtbf: f64, mttr: f64, spinup: f64, n: usize) -> Vec<NodeChurnSpec> {
+        vec![NodeChurnSpec { mtbf, mttr, spinup }; n]
+    }
+
+    fn rt(n: usize, policy: AutoscalerKind) -> ClusterRt {
+        let spec = ClusterSpec { policy, ..ClusterSpec::default() };
+        ClusterRt::new(spec, vec![NodeChurnSpec::default(); n], gpus(n), 1, 42)
+    }
+
+    #[test]
+    fn kind_parses_and_builds() {
+        assert_eq!(AutoscalerKind::parse("fixed"), Some(AutoscalerKind::Fixed));
+        assert_eq!(AutoscalerKind::parse("none"), Some(AutoscalerKind::Fixed));
+        assert_eq!(
+            AutoscalerKind::parse("queue_depth"),
+            Some(AutoscalerKind::QueueDepth {
+                high: DEFAULT_QUEUE_HIGH,
+                low: DEFAULT_QUEUE_LOW
+            })
+        );
+        assert_eq!(
+            AutoscalerKind::parse("ttft"),
+            Some(AutoscalerKind::TtftSlo { max_violation_frac: DEFAULT_VIOLATION_FRAC })
+        );
+        assert_eq!(AutoscalerKind::parse("??"), None);
+        for k in [
+            AutoscalerKind::Fixed,
+            AutoscalerKind::QueueDepth { high: 4, low: 1 },
+            AutoscalerKind::TtftSlo { max_violation_frac: 0.1 },
+        ] {
+            assert_eq!(k.build().name(), k.name());
+        }
+    }
+
+    #[test]
+    fn nodes_start_up_and_fixed_policy_never_scales() {
+        let mut c = rt(3, AutoscalerKind::Fixed);
+        for i in 0..3 {
+            assert_eq!(c.state(i), NodeState::Up);
+            assert!(c.eligible(i));
+        }
+        let mut on = Vec::new();
+        for t in 1..20 {
+            c.control_tick(t as f64 * 0.5, &[(50, 1), (0, 0), (0, 0)], &mut on);
+        }
+        assert!(on.is_empty());
+        for i in 0..3 {
+            assert_eq!(c.state(i), NodeState::Up);
+        }
+    }
+
+    #[test]
+    fn infinite_mtbf_never_fails_and_draws_nothing() {
+        let mut c = rt(2, AutoscalerKind::Fixed);
+        let before = format!("{:?}", c.rngs[0]);
+        assert_eq!(c.time_to_failure(0), None);
+        assert_eq!(before, format!("{:?}", c.rngs[0]), "no RNG consumed");
+    }
+
+    #[test]
+    fn failure_repair_cycle_walks_the_state_machine() {
+        let spec = ClusterSpec::default();
+        let mut c = ClusterRt::new(spec, churn_all(100.0, 30.0, 5.0, 2), gpus(2), 1, 7);
+        let ttf = c.time_to_failure(0).unwrap();
+        assert!(ttf > 0.0 && ttf.is_finite());
+        let e0 = c.epoch(0);
+        let repair_in = c.on_fail(0, 10.0);
+        assert!(repair_in > 0.0 && repair_in.is_finite());
+        assert_eq!(c.state(0), NodeState::Down);
+        assert!(!c.eligible(0));
+        assert_eq!(c.epoch(0), e0 + 1, "failure invalidates in-flight events");
+        assert!(!c.event_live(0, e0));
+        assert!(c.event_live(0, e0 + 1));
+        // repair → provisioning with the configured spin-up
+        let spin = c.on_repair(0, 40.0);
+        assert_eq!(spin, 5.0);
+        assert_eq!(c.state(0), NodeState::Provisioning);
+        assert!(!c.eligible(0), "provisioning nodes are not routed to");
+        assert!(c.on_up(0, 45.0).is_some());
+        assert_eq!(c.state(0), NodeState::Up);
+        // node 1 was untouched throughout
+        assert_eq!(c.state(1), NodeState::Up);
+        assert_eq!(c.epoch(1), 0);
+    }
+
+    #[test]
+    fn failure_draws_are_deterministic_per_seed_and_node() {
+        let mk = |seed| {
+            let mut c = ClusterRt::new(
+                ClusterSpec::default(),
+                churn_all(100.0, 30.0, 5.0, 2),
+                gpus(2),
+                1,
+                seed,
+            );
+            (c.time_to_failure(0).unwrap(), c.time_to_failure(1).unwrap())
+        };
+        let (a0, a1) = mk(1);
+        let (b0, b1) = mk(1);
+        assert_eq!(a0.to_bits(), b0.to_bits());
+        assert_eq!(a1.to_bits(), b1.to_bits());
+        assert_ne!(a0.to_bits(), a1.to_bits(), "per-node streams are independent");
+        let (c0, _) = mk(2);
+        assert_ne!(a0.to_bits(), c0.to_bits(), "master seed matters");
+    }
+
+    #[test]
+    fn queue_depth_policy_scales_up_and_down_with_hysteresis() {
+        let mut p = QueueDepthPolicy { high: 4, low: 1 };
+        let obs = |queued, busy, up, powered| ClusterObs {
+            now: 0.0,
+            powered,
+            up,
+            queued,
+            busy,
+            jobs_ttft: 0,
+            ttft_violations: 0,
+        };
+        assert_eq!(p.desired(&obs(9, 0, 2, 2)), 3, "9 > 4·2 → grow");
+        assert_eq!(p.desired(&obs(8, 0, 2, 2)), 2, "8 = 4·2 → hold");
+        assert_eq!(p.desired(&obs(1, 0, 2, 2)), 1, "1 < 1·2 → shrink");
+        assert_eq!(p.desired(&obs(0, 2, 2, 2)), 2, "busy servers count as load");
+    }
+
+    #[test]
+    fn ttft_policy_reacts_to_violation_fraction() {
+        let mut p = TtftSloPolicy { max_violation_frac: 0.05 };
+        let obs = |jobs, viol, powered| ClusterObs {
+            now: 0.0,
+            powered,
+            up: powered,
+            queued: 0,
+            busy: 0,
+            jobs_ttft: jobs,
+            ttft_violations: viol,
+        };
+        assert_eq!(p.desired(&obs(0, 0, 2)), 2, "no observations → hold");
+        assert_eq!(p.desired(&obs(100, 10, 2)), 3, "10% violations → grow");
+        assert_eq!(p.desired(&obs(100, 0, 2)), 1, "clean window → shrink");
+        assert_eq!(p.desired(&obs(100, 3, 2)), 2, "3% ≤ 5% but non-zero → hold");
+    }
+
+    #[test]
+    fn control_tick_scales_up_through_provisioning_and_down_through_drain() {
+        let spec = ClusterSpec {
+            policy: AutoscalerKind::QueueDepth { high: 2, low: 1 },
+            min_nodes: 1,
+            ..ClusterSpec::default()
+        };
+        let mut c =
+            ClusterRt::new(spec, churn_all(f64::INFINITY, 60.0, 10.0, 3), gpus(3), 1, 3);
+        // shrink to min: everything idle → one release per tick
+        let mut on = Vec::new();
+        c.control_tick(0.5, &[(0, 0), (0, 0), (0, 0)], &mut on);
+        assert!(on.is_empty());
+        assert_eq!(c.state(2), NodeState::Draining, "highest index drains first");
+        assert_eq!(c.state(0), NodeState::Up);
+        // the idle draining node powers off on the next tick, and the
+        // policy releases the next one
+        c.control_tick(1.0, &[(0, 0), (0, 0), (0, 0)], &mut on);
+        assert_eq!(c.state(2), NodeState::Down);
+        assert_eq!(c.state(1), NodeState::Draining);
+        // a still-busy draining node keeps running
+        c.control_tick(1.5, &[(0, 0), (3, 1), (0, 0)], &mut on);
+        assert_eq!(c.state(1), NodeState::Draining);
+        assert!(on.is_empty());
+        // load spike: un-drain first (free), then power on a Down node
+        c.control_tick(2.0, &[(9, 1), (0, 0), (0, 0)], &mut on);
+        assert_eq!(c.state(1), NodeState::Up, "draining node reclaimed without spin-up");
+        on.clear();
+        c.control_tick(2.5, &[(9, 1), (9, 1), (0, 0)], &mut on);
+        assert_eq!(on, vec![2], "cold node powers on");
+        assert_eq!(c.state(2), NodeState::Provisioning);
+        assert!(c.on_up(2, 12.5).is_none(), "infinite mtbf → no failure event");
+        assert_eq!(c.state(2), NodeState::Up);
+    }
+
+    #[test]
+    fn autoscaler_never_powers_a_node_awaiting_repair() {
+        let spec = ClusterSpec {
+            policy: AutoscalerKind::QueueDepth { high: 1, low: 0 },
+            ..ClusterSpec::default()
+        };
+        let mut c = ClusterRt::new(spec, churn_all(50.0, 1e9, 1.0, 2), gpus(2), 1, 5);
+        c.on_fail(1, 1.0); // node 1 down, repair pending (mttr huge)
+        let mut on = Vec::new();
+        c.control_tick(1.5, &[(40, 1), (0, 0)], &mut on);
+        assert!(on.is_empty(), "broken node must not be powered on");
+        assert_eq!(c.state(1), NodeState::Down);
+        // once repaired (and up), it can fail over again normally
+        c.on_repair(1, 2.0);
+        assert_eq!(c.state(1), NodeState::Provisioning);
+    }
+
+    #[test]
+    fn min_and_max_nodes_clamp_desires() {
+        let spec = ClusterSpec {
+            policy: AutoscalerKind::QueueDepth { high: 1, low: 1 },
+            min_nodes: 2,
+            max_nodes: 2,
+            ..ClusterSpec::default()
+        };
+        let mut c =
+            ClusterRt::new(spec, churn_all(f64::INFINITY, 60.0, 1.0, 3), gpus(3), 1, 9);
+        let mut on = Vec::new();
+        // overload cannot push past max_nodes = 2: one node must drain
+        c.control_tick(0.5, &[(50, 1), (50, 1), (50, 1)], &mut on);
+        assert!(on.is_empty());
+        assert_eq!(c.state(2), NodeState::Draining);
+        // idle cannot shrink below min_nodes = 2
+        for t in 2..10 {
+            c.control_tick(t as f64 * 0.5, &[(0, 0), (0, 0), (0, 0)], &mut on);
+        }
+        assert!(on.is_empty());
+        let up: usize =
+            (0..3).filter(|&i| c.state(i) == NodeState::Up).count();
+        assert_eq!(up, 2);
+    }
+
+    #[test]
+    fn accounting_prices_up_time_on_the_node_spec() {
+        let spec = ClusterSpec::default();
+        let g = GpuSpec::a100().scaled(2.0);
+        let mut c = ClusterRt::new(
+            spec,
+            churn_all(100.0, 30.0, 5.0, 1),
+            vec![g],
+            2,
+            11,
+        );
+        // up from 0 to 10 s, down for repair, never returns
+        c.on_fail(0, 10.0);
+        c.observe_redispatch(0, 1);
+        c.observe_lost(0, 1);
+        c.finalize(20.0);
+        let rep = c.report(&["a".into(), "b".into()]);
+        assert_eq!(rep.nodes.len(), 1);
+        let n = &rep.nodes[0];
+        assert_eq!(n.name, "node0");
+        assert_eq!(n.gpu, "A100-SXM-80GB x2");
+        assert!((n.up_seconds - 10.0).abs() < 1e-12);
+        assert!((n.gpu_seconds - 20.0).abs() < 1e-12, "2× pool → 2 GPU-s per wall-s");
+        assert!((n.joules - 10.0 * 800.0).abs() < 1e-9, "TDP scales with the pool");
+        assert!((n.dollars - 10.0 / 3600.0 * 2.0 * 1.79).abs() < 1e-12);
+        assert_eq!(n.failures, 1);
+        assert_eq!(n.redispatched, 1);
+        assert_eq!(n.lost, 1);
+        assert_eq!(rep.classes.len(), 2);
+        assert_eq!(rep.classes[1].redispatched, 1);
+        assert_eq!(rep.classes[1].lost, 1);
+        assert_eq!(rep.classes[0].redispatched, 0);
+    }
+
+    #[test]
+    fn per_class_work_attribution_uses_the_serving_node_price() {
+        let mut c = ClusterRt::new(
+            ClusterSpec::default(),
+            vec![NodeChurnSpec::default(); 2],
+            vec![GpuSpec::a100(), GpuSpec::h100()],
+            2,
+            13,
+        );
+        c.observe_completion(0, 0, 2.0); // 2 s of A100 work for class 0
+        c.observe_completion(1, 1, 1.0); // 1 s of H100 work for class 1
+        c.finalize(5.0);
+        let rep = c.report(&["x".into(), "y".into()]);
+        assert!((rep.classes[0].joules - 2.0 * 400.0).abs() < 1e-9);
+        assert!((rep.classes[1].joules - 700.0).abs() < 1e-9);
+        assert!((rep.classes[0].dollars - 2.0 / 3600.0 * 1.79).abs() < 1e-15);
+        assert_eq!(rep.nodes[0].served, 1);
+        assert_eq!(rep.nodes[1].served, 1);
+        // both nodes stayed up the whole 5 s window
+        assert!((rep.nodes[0].up_seconds - 5.0).abs() < 1e-12);
+        assert!((rep.total_dollars()
+            - (5.0 / 3600.0 * 1.79 + 5.0 / 3600.0 * 2.99))
+            .abs()
+            < 1e-12);
+    }
+
+    #[test]
+    fn ttft_observations_reset_each_tick() {
+        let mut c = rt(1, AutoscalerKind::TtftSlo { max_violation_frac: 0.5 });
+        c.observe_ttft(10.0); // violation (slo = 0.5)
+        c.observe_ttft(0.1);
+        assert_eq!(c.jobs_ttft, 2);
+        assert_eq!(c.ttft_violations, 1);
+        let mut on = Vec::new();
+        c.control_tick(0.5, &[(0, 0)], &mut on);
+        assert_eq!(c.jobs_ttft, 0, "window resets");
+        assert_eq!(c.ttft_violations, 0);
+    }
+}

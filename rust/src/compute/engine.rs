@@ -182,6 +182,28 @@ impl BatchEngine {
         self.kv_used
     }
 
+    /// Nothing queued or admitted (a draining node at this point can
+    /// power off).
+    pub fn is_idle(&self) -> bool {
+        self.active.is_empty() && self.queue.len() == 0
+    }
+
+    /// Node-loss eviction: drain the admitted batch (in job-id order)
+    /// and then the waiting queue (in discipline order) into `out`,
+    /// releasing every KV reservation and cancelling the outstanding
+    /// iteration. The caller must also invalidate the pending
+    /// [`BatchEvent::StepAt`] it scheduled (the cluster layer does
+    /// this with per-node event epochs).
+    pub fn evict(&mut self, out: &mut Vec<BatchJob>) {
+        self.active.sort_by_key(|a| a.job.job_id);
+        for a in self.active.drain(..) {
+            out.push(a.job);
+        }
+        self.queue.drain_into(out);
+        self.kv_used = 0.0;
+        self.running = false;
+    }
+
     /// A job arrives at the node at time `now`. Events are appended to
     /// the caller's buffer (clear it between calls).
     pub fn enqueue(&mut self, job: BatchJob, now: f64, events: &mut Vec<BatchEvent>) {
@@ -480,6 +502,35 @@ mod tests {
             }
         }
         out
+    }
+
+    #[test]
+    fn eviction_returns_batch_then_queue_and_resets_reservations() {
+        let gpu = GpuSpec::a100();
+        // budget fits two jobs' KV; the third waits in the queue
+        let budget = 60.0 * KV_PER_TOKEN + 1.0;
+        let mut e = BatchEngine::new(Discipline::Fifo, gpu, 8, budget);
+        let mut events = Vec::new();
+        e.enqueue(job(0, 0.0, 10.0, 15, &gpu), 0.0, &mut events);
+        e.enqueue(job(1, 0.0, 10.0, 15, &gpu), 0.0, &mut events);
+        e.enqueue(job(2, 0.0, 10.0, 15, &gpu), 0.0, &mut events);
+        assert_eq!(e.batch_len(), 2);
+        assert_eq!(e.queue_len(), 1);
+        assert!(e.kv_used() > 0.0);
+        assert!(!e.is_idle());
+        let mut evicted = Vec::new();
+        e.evict(&mut evicted);
+        let ids: Vec<u64> = evicted.iter().map(|j| j.job_id).collect();
+        assert_eq!(ids, vec![0, 1, 2], "admitted jobs first (id order), then queued");
+        assert_eq!(e.batch_len(), 0);
+        assert_eq!(e.queue_len(), 0);
+        assert_eq!(e.kv_used(), 0.0);
+        assert!(e.is_idle());
+        // the engine restarts cleanly on the next enqueue
+        events.clear();
+        e.enqueue(job(3, 1.0, 10.0, 15, &gpu), 1.0, &mut events);
+        assert!(events.iter().any(|ev| matches!(ev, BatchEvent::Admitted { job_id: 3 })));
+        assert!(events.iter().any(|ev| matches!(ev, BatchEvent::StepAt { .. })));
     }
 
     #[test]

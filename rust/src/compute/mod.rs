@@ -149,6 +149,15 @@ impl<J> ReadyQueue<J> {
             Discipline::DeadlinePriority { .. } => self.prio.pop().map(|e| e.job),
         }
     }
+
+    /// Drain every waiting job into `out`, in discipline order (the
+    /// order they would have been served) — deterministic, so cluster
+    /// re-dispatch after a node failure is reproducible.
+    pub fn drain_into(&mut self, out: &mut Vec<J>) {
+        while let Some(j) = self.pop() {
+            out.push(j);
+        }
+    }
 }
 
 /// What happened when the node accepted / finished a job.
@@ -220,6 +229,23 @@ impl ComputeNode {
         assert!(self.busy > 0, "complete() with no busy server");
         self.busy -= 1;
         self.dispatch(now, events);
+    }
+
+    /// Nothing queued or in service (a draining node at this point can
+    /// power off).
+    pub fn is_idle(&self) -> bool {
+        self.busy == 0 && self.queue.len() == 0
+    }
+
+    /// Node-loss eviction: drain every *queued* job into `out` (in
+    /// discipline order) and release all servers. Jobs already in
+    /// service are not stored here — their identities live in the
+    /// caller's scheduled completion events, which the caller must
+    /// invalidate and re-dispatch itself (the cluster layer does this
+    /// with per-node event epochs).
+    pub fn evict(&mut self, out: &mut Vec<ComputeJob>) {
+        self.queue.drain_into(out);
+        self.busy = 0;
     }
 }
 
@@ -367,6 +393,28 @@ mod tests {
         enq(&mut n, job(2, 0.0, 0.01, 0.08, 0.01), 0.02);
         let ev = fin(&mut n, 0.05);
         assert!(matches!(ev[0], NodeEvent::Started { job: j, .. } if j.job_id == 1));
+    }
+
+    #[test]
+    fn eviction_drains_queue_in_service_order_and_frees_servers() {
+        let mut n = ComputeNode::new(
+            Discipline::DeadlinePriority { drop_hopeless: false },
+            1,
+        );
+        enq(&mut n, job(0, 0.0, 0.0, 1.0, 0.5), 0.0); // in service
+        enq(&mut n, job(1, 0.0, 0.0, 0.9, 0.01), 0.01); // key 0.9
+        enq(&mut n, job(2, 0.0, 0.0, 0.5, 0.01), 0.02); // key 0.5 → first
+        assert!(!n.is_idle());
+        let mut evicted = Vec::new();
+        n.evict(&mut evicted);
+        let ids: Vec<u64> = evicted.iter().map(|j| j.job_id).collect();
+        assert_eq!(ids, vec![2, 1], "queued jobs drain in priority order");
+        assert_eq!(n.queue_len(), 0);
+        assert_eq!(n.busy_servers(), 0);
+        assert!(n.is_idle());
+        // the rebuilt-from-scratch semantics: new work starts cleanly
+        let ev = enq(&mut n, job(3, 0.0, 0.0, 1.0, 0.1), 1.0);
+        assert!(matches!(ev[0], NodeEvent::Started { .. }));
     }
 
     #[test]

@@ -24,6 +24,7 @@
 //! Python/JAX/Pallas exist only on the build path (`make artifacts`);
 //! the serving hot path is pure Rust + PJRT.
 
+pub mod cluster;
 pub mod compute;
 pub mod config;
 pub mod coordinator;

@@ -22,10 +22,20 @@ pub struct GpuSpec {
     pub mem_bw: f64,
     /// HBM capacity, bytes (model + KV cache must fit).
     pub mem_bytes: f64,
+    /// Board TDP in watts (datasheet max power). Used by the cluster
+    /// energy accounting: joules = TDP × up-seconds. Scales with the
+    /// aggregation factor like every other capacity axis.
+    pub tdp_watts: f64,
+    /// On-demand rental price, USD per device-hour (representative
+    /// public cloud list prices, 2025). Used by the cluster cost
+    /// accounting; scaled pools cost `scale ×` this.
+    pub price_per_hour: f64,
 }
 
 impl GpuSpec {
     /// NVIDIA A100 SXM 80GB: 312 TFLOPS dense FP16, 2.039 TB/s HBM2e.
+    /// 400 W SXM board TDP (datasheet); ~$1.79/hr on-demand (Lambda
+    /// 2025 list price for A100-80GB).
     pub fn a100() -> Self {
         Self {
             name: "A100-SXM-80GB",
@@ -33,10 +43,13 @@ impl GpuSpec {
             comp_flops: 312e12,
             mem_bw: 2.039e12,
             mem_bytes: 80e9,
+            tdp_watts: 400.0,
+            price_per_hour: 1.79,
         }
     }
 
     /// NVIDIA H100 SXM: 989 TFLOPS dense FP16, 3.35 TB/s HBM3.
+    /// 700 W SXM board TDP; ~$2.99/hr on-demand (Lambda 2025 list).
     pub fn h100() -> Self {
         Self {
             name: "H100-SXM",
@@ -44,11 +57,14 @@ impl GpuSpec {
             comp_flops: 989e12,
             mem_bw: 3.35e12,
             mem_bytes: 80e9,
+            tdp_watts: 700.0,
+            price_per_hour: 2.99,
         }
     }
 
     /// NVIDIA H200 SXM: H100-class compute with 4.8 TB/s HBM3e and
-    /// 141 GB — the bandwidth-upgraded decode workhorse.
+    /// 141 GB — the bandwidth-upgraded decode workhorse. 700 W SXM
+    /// board TDP; ~$3.79/hr on-demand (2025 cloud list).
     pub fn h200() -> Self {
         Self {
             name: "H200-SXM",
@@ -56,12 +72,15 @@ impl GpuSpec {
             comp_flops: 989e12,
             mem_bw: 4.8e12,
             mem_bytes: 141e9,
+            tdp_watts: 700.0,
+            price_per_hour: 3.79,
         }
     }
 
     /// NVIDIA L40S: 362 TFLOPS dense FP16, 864 GB/s GDDR6, 48 GB —
     /// the realistic *small-memory* edge target (a 7B FP16 model fits,
-    /// but a fat KV budget does not).
+    /// but a fat KV budget does not). 350 W PCIe board TDP; ~$1.05/hr
+    /// on-demand (2025 cloud list).
     pub fn l40s() -> Self {
         Self {
             name: "L40S",
@@ -69,11 +88,15 @@ impl GpuSpec {
             comp_flops: 362e12,
             mem_bw: 0.864e12,
             mem_bytes: 48e9,
+            tdp_watts: 350.0,
+            price_per_hour: 1.05,
         }
     }
 
     /// NVIDIA GH200-NVL2 (one superchip of the NVL2 pair): H200-class
-    /// GPU — 989 TFLOPS dense FP16, 4.9 TB/s HBM3e, 144 GB.
+    /// GPU — 989 TFLOPS dense FP16, 4.9 TB/s HBM3e, 144 GB. 1000 W
+    /// module TDP (Grace CPU + Hopper GPU, datasheet max); ~$4.49/hr
+    /// on-demand (2025 cloud list for GH200 instances).
     pub fn gh200_nvl2() -> Self {
         Self {
             name: "GH200-NVL2",
@@ -81,6 +104,8 @@ impl GpuSpec {
             comp_flops: 989e12,
             mem_bw: 4.9e12,
             mem_bytes: 144e9,
+            tdp_watts: 1000.0,
+            price_per_hour: 4.49,
         }
     }
 
@@ -107,6 +132,8 @@ impl GpuSpec {
             comp_flops: self.comp_flops * factor,
             mem_bw: self.mem_bw * factor,
             mem_bytes: self.mem_bytes * factor,
+            tdp_watts: self.tdp_watts * factor,
+            price_per_hour: self.price_per_hour * factor,
         }
     }
 
@@ -148,6 +175,31 @@ mod tests {
     }
 
     #[test]
+    fn catalog_tdp_and_price_filled_in() {
+        for g in [
+            GpuSpec::a100(),
+            GpuSpec::h100(),
+            GpuSpec::h200(),
+            GpuSpec::l40s(),
+            GpuSpec::gh200_nvl2(),
+        ] {
+            assert!(g.tdp_watts > 0.0, "{} missing TDP", g.name);
+            assert!(g.price_per_hour > 0.0, "{} missing $/hr", g.name);
+            // sanity bands: no data-center accelerator is under 100 W
+            // or over 2 kW, nor rents under $0.1/hr or over $100/hr
+            assert!((100.0..=2000.0).contains(&g.tdp_watts), "{}", g.name);
+            assert!((0.1..=100.0).contains(&g.price_per_hour), "{}", g.name);
+        }
+        assert_eq!(GpuSpec::a100().tdp_watts, 400.0);
+        assert_eq!(GpuSpec::h100().tdp_watts, 700.0);
+        assert_eq!(GpuSpec::l40s().tdp_watts, 350.0);
+        // the GH200 superchip (CPU+GPU module) draws the most
+        let most = GpuSpec::gh200_nvl2();
+        assert!(most.tdp_watts >= GpuSpec::h200().tdp_watts);
+        assert!(most.price_per_hour > GpuSpec::h200().price_per_hour);
+    }
+
+    #[test]
     fn by_name_lookup() {
         assert_eq!(GpuSpec::by_name("A100").unwrap().name, "A100-SXM-80GB");
         assert_eq!(GpuSpec::by_name("gh200-nvl2").unwrap().name, "GH200-NVL2");
@@ -161,6 +213,9 @@ mod tests {
         let a = GpuSpec::a100().scaled(11.0);
         assert!((a.comp_flops - 11.0 * 312e12).abs() < 1.0);
         assert!((a.a100_equivalents() - 11.0).abs() < 1e-9);
+        // power draw and rental cost aggregate with the pool too
+        assert!((a.tdp_watts - 11.0 * 400.0).abs() < 1e-9);
+        assert!((a.price_per_hour - 11.0 * GpuSpec::a100().price_per_hour).abs() < 1e-9);
     }
 
     #[test]
@@ -179,6 +234,18 @@ mod tests {
         assert!((pool.scale - 4.0).abs() < 1e-12);
         // fractional scales stay readable
         assert_eq!(GpuSpec::a100().scaled(2.5).display_name(), "A100-SXM-80GB x2.50");
+        // every catalog entry labels its scaled pools consistently
+        for g in [
+            GpuSpec::a100(),
+            GpuSpec::h100(),
+            GpuSpec::h200(),
+            GpuSpec::l40s(),
+            GpuSpec::gh200_nvl2(),
+        ] {
+            assert_eq!(g.scaled(1.0).display_name(), g.name);
+            assert_eq!(g.scaled(8.0).display_name(), format!("{} x8", g.name));
+            assert_eq!(g.scaled(0.5).display_name(), format!("{} x0.50", g.name));
+        }
     }
 
     #[test]

@@ -378,6 +378,8 @@ fn cmd_scenario(argv: &[String]) -> i32 {
         OptSpec { name: "layout", help: "site layout with --isd: hex | linear", takes_value: true, default: Some("hex") },
         OptSpec { name: "speed", help: "UE speed in m/s with --isd (fixed-velocity motion; 0 = static)", takes_value: true, default: Some("0") },
         OptSpec { name: "handover", help: "enable A3 handover between coupled cells (3 dB / 160 ms defaults; tune via [handover] in --config)", takes_value: false, default: None },
+        OptSpec { name: "autoscale", help: "elastic control plane policy: fixed | queue_depth | ttft_slo (tune via [cluster] in --config)", takes_value: true, default: None },
+        OptSpec { name: "churn", help: "per-node failure process MTBF:MTTR[:SPINUP] in seconds, applied to every demo node (implies --autoscale fixed)", takes_value: true, default: None },
         OptSpec { name: "horizon", help: "simulated seconds", takes_value: true, default: Some("12") },
         OptSpec { name: "seed", help: "master RNG seed", takes_value: true, default: Some("1") },
         OptSpec { name: "json", help: "write the full report (incl. per-class TTFT/TPOT percentiles) to this JSON file", takes_value: true, default: None },
@@ -479,6 +481,26 @@ fn cmd_scenario(argv: &[String]) -> i32 {
         eprintln!("--speed/--handover require --isd > 0 (a site topology)");
         return 2;
     }
+    let autoscale = match args.get("autoscale") {
+        Some(s) => match icc6g::scenario::AutoscalerKind::parse(s) {
+            Some(k) => Some(k),
+            None => {
+                eprintln!("unknown autoscale policy '{s}' (fixed | queue_depth | ttft_slo)");
+                return 2;
+            }
+        },
+        None => None,
+    };
+    let churn = match args.get("churn") {
+        Some(spec) => match parse_churn(spec) {
+            Ok(c) => Some(c),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        },
+        None => None,
+    };
     // Built-in demo mix: 3 classes over N identical nodes, population
     // split evenly over the cells. A config file's
     // [[workload]]/[[node]]/[[cell]] tables replace these defaults.
@@ -510,6 +532,15 @@ fn cmd_scenario(argv: &[String]) -> i32 {
     }
     for _ in 0..n_nodes {
         b = b.node(icc6g::llm::GpuSpec::gh200_nvl2().scaled(2.0), 1);
+        if let Some(c) = churn {
+            b = b.node_churn(c);
+        }
+    }
+    if autoscale.is_some() || churn.is_some() {
+        b = b.cluster(icc6g::scenario::ClusterSpec {
+            policy: autoscale.unwrap_or(icc6g::scenario::AutoscalerKind::Fixed),
+            ..Default::default()
+        });
     }
     if let Some(path) = args.get("config") {
         let doc = match load_toml(path) {
@@ -659,6 +690,43 @@ fn cmd_scenario(argv: &[String]) -> i32 {
         rt.print();
         let _ = rt.write_csv("scenario_radio.csv");
     }
+    if !res.report.cluster.is_empty() {
+        let cl = &res.report.cluster;
+        let mut nt = Table::new(
+            "per-node cluster accounting (powered time priced from the GPU catalog)",
+            &["node", "gpu", "up_s", "gpu_s", "kJ", "usd", "served", "redisp", "lost", "fails"],
+        );
+        for n in &cl.nodes {
+            nt.row(&[
+                n.name.clone(),
+                n.gpu.clone(),
+                cell(n.up_seconds, 1),
+                cell(n.gpu_seconds, 1),
+                cell(n.joules / 1e3, 2),
+                cell(n.dollars, 4),
+                n.served.to_string(),
+                n.redispatched.to_string(),
+                n.lost.to_string(),
+                n.failures.to_string(),
+            ]);
+        }
+        nt.print();
+        let _ = nt.write_csv("scenario_cluster.csv");
+        let policy = scenario.cluster().map_or("fixed", |s| s.policy.name());
+        println!(
+            "cluster      : {policy} policy, {} re-dispatched, {} lost, {} node failure(s)",
+            cl.nodes.iter().map(|n| n.redispatched).sum::<u64>(),
+            res.report.n_lost,
+            cl.nodes.iter().map(|n| n.failures).sum::<u64>(),
+        );
+        println!(
+            "tier cost    : {:.1} GPU-s, {:.1} kJ, ${:.4} — {:.1} satisfied jobs per dollar",
+            cl.nodes.iter().map(|n| n.gpu_seconds).sum::<f64>(),
+            cl.total_joules() / 1e3,
+            cl.total_dollars(),
+            cl.capacity_per_dollar(res.report.n_satisfied),
+        );
+    }
     if let Some(path) = args.get("json") {
         if let Err(e) = std::fs::write(path, res.report.to_json()) {
             eprintln!("cannot write {path}: {e}");
@@ -685,6 +753,36 @@ fn parse_grid(spec: &str) -> Result<Vec<f64>, String> {
         return Ok(vec![lo]);
     }
     Ok((0..n).map(|i| lo + (hi - lo) * i as f64 / (n - 1) as f64).collect())
+}
+
+/// Parse a `--churn MTBF:MTTR[:SPINUP]` spec (seconds).
+fn parse_churn(spec: &str) -> Result<icc6g::scenario::NodeChurnSpec, String> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    let (mtbf, mttr, spin) = match parts.as_slice() {
+        [a, b] => (*a, *b, None),
+        [a, b, c] => (*a, *b, Some(*c)),
+        _ => return Err(format!("bad churn '{spec}': expected MTBF:MTTR[:SPINUP]")),
+    };
+    let num = |name: &str, s: &str| -> Result<f64, String> {
+        s.parse::<f64>().map_err(|_| format!("bad churn {name} '{s}'"))
+    };
+    let churn = icc6g::scenario::NodeChurnSpec {
+        mtbf: num("mtbf", mtbf)?,
+        mttr: num("mttr", mttr)?,
+        spinup: match spin {
+            Some(s) => num("spinup", s)?,
+            None => icc6g::scenario::NodeChurnSpec::default().spinup,
+        },
+    };
+    let ok = churn.mtbf > 0.0
+        && churn.mttr > 0.0
+        && churn.mttr.is_finite()
+        && churn.spinup >= 0.0
+        && churn.spinup.is_finite();
+    if !ok {
+        return Err(format!("bad churn '{spec}': need mtbf > 0, finite mttr > 0, finite spinup >= 0"));
+    }
+    Ok(churn)
 }
 
 fn cmd_sweep(argv: &[String]) -> i32 {

@@ -12,6 +12,9 @@ pub enum JobFate {
     Completed,
     /// Dropped at the computing node (hopeless deadline).
     Dropped,
+    /// Evicted from a failed node with its re-dispatch retry budget
+    /// exhausted (elastic-cluster runs only) — lost work.
+    Lost,
     /// Still in flight when the simulation horizon hit (ignored).
     InFlight,
 }
@@ -108,6 +111,8 @@ pub struct ClassReport {
     pub n_jobs: u64,
     pub n_satisfied: u64,
     pub n_dropped: u64,
+    /// Jobs lost to node failures (retry budget exhausted).
+    pub n_lost: u64,
     pub comm: Welford,
     pub comp: Welford,
     pub e2e: Welford,
@@ -130,6 +135,7 @@ impl ClassReport {
             n_jobs: 0,
             n_satisfied: 0,
             n_dropped: 0,
+            n_lost: 0,
             comm: Welford::new(),
             comp: Welford::new(),
             e2e: Welford::new(),
@@ -148,6 +154,12 @@ impl ClassReport {
                 self.n_jobs += 1;
                 self.n_dropped += 1;
                 // comm latency still observed for dropped jobs
+                self.comm.push(j.t_comm);
+            }
+            JobFate::Lost => {
+                self.n_jobs += 1;
+                self.n_lost += 1;
+                // the air interface did its part before the node died
                 self.comm.push(j.t_comm);
             }
             JobFate::Completed => {
@@ -218,6 +230,7 @@ impl ClassReport {
         self.n_jobs += other.n_jobs;
         self.n_satisfied += other.n_satisfied;
         self.n_dropped += other.n_dropped;
+        self.n_lost += other.n_lost;
         self.comm.merge(&other.comm);
         self.comp.merge(&other.comp);
         self.e2e.merge(&other.e2e);
@@ -257,12 +270,136 @@ impl CellRadioReport {
     }
 }
 
+/// Per-node accounting of an elastic-cluster run: powered time priced
+/// through the node's `GpuSpec` TDP/price fields, plus lifecycle and
+/// re-dispatch counters (DESIGN.md §11 has the formulas).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct NodeClusterReport {
+    /// `node0`, `node1`, … — index into the scenario's tier.
+    pub name: String,
+    /// The node's accelerator pool label (`GpuSpec::display_name`).
+    pub gpu: String,
+    /// Wall-seconds the node spent powered (provisioning + up +
+    /// draining).
+    pub up_seconds: f64,
+    /// `up_seconds × gpu.scale` — device-seconds consumed.
+    pub gpu_seconds: f64,
+    /// `up_seconds × tdp_watts` (TDP is pool-scaled).
+    pub joules: f64,
+    /// `up_seconds / 3600 × price_per_hour` (price is pool-scaled).
+    pub dollars: f64,
+    /// Jobs completed on this node.
+    pub served: u64,
+    /// Jobs evicted from this node and re-dispatched elsewhere.
+    pub redispatched: u64,
+    /// Jobs evicted from this node whose retry budget was exhausted.
+    pub lost: u64,
+    /// Failure events the node suffered.
+    pub failures: u64,
+}
+
+impl NodeClusterReport {
+    fn merge(&mut self, other: &NodeClusterReport) {
+        self.up_seconds += other.up_seconds;
+        self.gpu_seconds += other.gpu_seconds;
+        self.joules += other.joules;
+        self.dollars += other.dollars;
+        self.served += other.served;
+        self.redispatched += other.redispatched;
+        self.lost += other.lost;
+        self.failures += other.failures;
+    }
+}
+
+/// Per-class attributed compute cost: each completed job's roofline
+/// work seconds priced on the node that served it.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ClassClusterReport {
+    pub name: String,
+    pub gpu_seconds: f64,
+    pub joules: f64,
+    pub dollars: f64,
+    pub redispatched: u64,
+    pub lost: u64,
+}
+
+impl ClassClusterReport {
+    fn merge(&mut self, other: &ClassClusterReport) {
+        self.gpu_seconds += other.gpu_seconds;
+        self.joules += other.joules;
+        self.dollars += other.dollars;
+        self.redispatched += other.redispatched;
+        self.lost += other.lost;
+    }
+}
+
+/// Cluster section of a [`SimReport`]: empty unless the scenario ran
+/// with the elastic compute control plane enabled.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterReport {
+    pub nodes: Vec<NodeClusterReport>,
+    pub classes: Vec<ClassClusterReport>,
+}
+
+impl ClusterReport {
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty() && self.classes.is_empty()
+    }
+
+    /// Total rental cost of the tier over the run.
+    pub fn total_dollars(&self) -> f64 {
+        self.nodes.iter().map(|n| n.dollars).sum()
+    }
+
+    /// Total energy drawn by the tier over the run.
+    pub fn total_joules(&self) -> f64 {
+        self.nodes.iter().map(|n| n.joules).sum()
+    }
+
+    /// Satisfied jobs per dollar — the capacity-per-dollar figure the
+    /// elastic scenarios optimize for (`NaN` when nothing was spent).
+    pub fn capacity_per_dollar(&self, n_satisfied: u64) -> f64 {
+        let d = self.total_dollars();
+        if d > 0.0 {
+            n_satisfied as f64 / d
+        } else {
+            f64::NAN
+        }
+    }
+
+    /// Replication merge: element-wise when the tier shape matches
+    /// (same node count and class names), cleared on mismatch — the
+    /// same rule as the radio and per-cell slices.
+    fn merge(&mut self, other: &ClusterReport) {
+        let matches = self.nodes.len() == other.nodes.len()
+            && self.classes.len() == other.classes.len()
+            && self
+                .classes
+                .iter()
+                .zip(&other.classes)
+                .all(|(a, b)| a.name == b.name);
+        if matches {
+            for (a, b) in self.nodes.iter_mut().zip(&other.nodes) {
+                a.merge(b);
+            }
+            for (a, b) in self.classes.iter_mut().zip(&other.classes) {
+                a.merge(b);
+            }
+        } else {
+            self.nodes.clear();
+            self.classes.clear();
+        }
+    }
+}
+
 /// Aggregated simulation report.
 #[derive(Debug, Clone)]
 pub struct SimReport {
     pub n_jobs: u64,
     pub n_satisfied: u64,
     pub n_dropped: u64,
+    /// Jobs lost to node failures (elastic-cluster runs; otherwise 0).
+    pub n_lost: u64,
     pub comm: Welford,
     pub comp: Welford,
     pub e2e: Welford,
@@ -287,6 +424,11 @@ pub struct SimReport {
     /// the same topology, clears on mismatch (same rule as
     /// `per_cell`).
     pub radio: Vec<CellRadioReport>,
+    /// Elastic-cluster accounting (per-node cost/energy/lifecycle and
+    /// per-class attributed cost). Empty unless the scenario enabled
+    /// the cluster control plane; merges element-wise on matching tier
+    /// shapes, clears on mismatch.
+    pub cluster: ClusterReport,
 }
 
 impl SimReport {
@@ -343,6 +485,7 @@ impl SimReport {
         self.n_jobs += cr.n_jobs;
         self.n_satisfied += cr.n_satisfied;
         self.n_dropped += cr.n_dropped;
+        self.n_lost += cr.n_lost;
         self.comm.merge(&cr.comm);
         self.comp.merge(&cr.comp);
         self.e2e.merge(&cr.e2e);
@@ -360,6 +503,7 @@ impl SimReport {
         self.n_jobs += other.n_jobs;
         self.n_satisfied += other.n_satisfied;
         self.n_dropped += other.n_dropped;
+        self.n_lost += other.n_lost;
         self.comm.merge(&other.comm);
         self.comp.merge(&other.comp);
         self.e2e.merge(&other.e2e);
@@ -404,6 +548,7 @@ impl SimReport {
         } else {
             self.radio.clear();
         }
+        self.cluster.merge(&other.cluster);
     }
 
     fn empty() -> Self {
@@ -411,6 +556,7 @@ impl SimReport {
             n_jobs: 0,
             n_satisfied: 0,
             n_dropped: 0,
+            n_lost: 0,
             comm: Welford::new(),
             comp: Welford::new(),
             e2e: Welford::new(),
@@ -420,6 +566,7 @@ impl SimReport {
             per_class: Vec::new(),
             per_cell: Vec::new(),
             radio: Vec::new(),
+            cluster: ClusterReport::default(),
         }
     }
 
@@ -441,6 +588,7 @@ impl SimReport {
         out.push_str(&format!("  \"n_jobs\": {},\n", self.n_jobs));
         out.push_str(&format!("  \"n_satisfied\": {},\n", self.n_satisfied));
         out.push_str(&format!("  \"n_dropped\": {},\n", self.n_dropped));
+        out.push_str(&format!("  \"n_lost\": {},\n", self.n_lost));
         out.push_str(&format!(
             "  \"satisfaction_rate\": {},\n",
             jnum(self.satisfaction_rate())
@@ -530,7 +678,51 @@ impl SimReport {
         if !self.radio.is_empty() {
             out.push_str("\n  ");
         }
-        out.push_str("]\n}\n");
+        out.push_str("],\n  \"cluster\": {\n    \"total_dollars\": ");
+        out.push_str(&jnum(self.cluster.total_dollars()));
+        out.push_str(",\n    \"total_joules\": ");
+        out.push_str(&jnum(self.cluster.total_joules()));
+        out.push_str(",\n    \"capacity_per_dollar\": ");
+        out.push_str(&jnum(self.cluster.capacity_per_dollar(self.n_satisfied)));
+        out.push_str(",\n    \"nodes\": [");
+        for (i, n) in self.cluster.nodes.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("\n      {");
+            out.push_str(&format!("\"name\": \"{}\", ", jstr(&n.name)));
+            out.push_str(&format!("\"gpu\": \"{}\", ", jstr(&n.gpu)));
+            out.push_str(&format!("\"up_seconds\": {}, ", jnum(n.up_seconds)));
+            out.push_str(&format!("\"gpu_seconds\": {}, ", jnum(n.gpu_seconds)));
+            out.push_str(&format!("\"joules\": {}, ", jnum(n.joules)));
+            out.push_str(&format!("\"dollars\": {}, ", jnum(n.dollars)));
+            out.push_str(&format!("\"served\": {}, ", n.served));
+            out.push_str(&format!("\"redispatched\": {}, ", n.redispatched));
+            out.push_str(&format!("\"lost\": {}, ", n.lost));
+            out.push_str(&format!("\"failures\": {}", n.failures));
+            out.push('}');
+        }
+        if !self.cluster.nodes.is_empty() {
+            out.push_str("\n    ");
+        }
+        out.push_str("],\n    \"classes\": [");
+        for (i, c) in self.cluster.classes.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("\n      {");
+            out.push_str(&format!("\"name\": \"{}\", ", jstr(&c.name)));
+            out.push_str(&format!("\"gpu_seconds\": {}, ", jnum(c.gpu_seconds)));
+            out.push_str(&format!("\"joules\": {}, ", jnum(c.joules)));
+            out.push_str(&format!("\"dollars\": {}, ", jnum(c.dollars)));
+            out.push_str(&format!("\"redispatched\": {}, ", c.redispatched));
+            out.push_str(&format!("\"lost\": {}", c.lost));
+            out.push('}');
+        }
+        if !self.cluster.classes.is_empty() {
+            out.push_str("\n    ");
+        }
+        out.push_str("]\n  }\n}\n");
         out
     }
 }
@@ -768,6 +960,43 @@ mod tests {
             radio.push(cr);
         }
         r.radio = radio;
+        r.n_lost = 2;
+        r.cluster = ClusterReport {
+            nodes: vec![
+                NodeClusterReport {
+                    name: "node0".into(),
+                    gpu: "A100-SXM-80GB x2".into(),
+                    up_seconds: 10.0,
+                    gpu_seconds: 20.0,
+                    joules: 8000.0,
+                    dollars: 0.01,
+                    served: 5,
+                    redispatched: 2,
+                    lost: 1,
+                    failures: 1,
+                },
+                NodeClusterReport {
+                    name: "node1".into(),
+                    gpu: "L40S".into(),
+                    up_seconds: 4.0,
+                    gpu_seconds: 4.0,
+                    joules: 1400.0,
+                    dollars: 0.002,
+                    served: 3,
+                    redispatched: 0,
+                    lost: 0,
+                    failures: 0,
+                },
+            ],
+            classes: vec![ClassClusterReport {
+                name: "chat \"v2\" \\ beta".into(),
+                gpu_seconds: 1.5,
+                joules: 600.0,
+                dollars: 0.0008,
+                redispatched: 2,
+                lost: 1,
+            }],
+        };
 
         let js = r.to_json();
         let v = Value::parse(&js).unwrap_or_else(|e| panic!("report JSON unparsable: {e}\n{js}"));
@@ -819,11 +1048,112 @@ mod tests {
             let max = slot.get("max_iot_db").and_then(Value::as_f64).unwrap();
             assert!((max - cr.iot_db.max()).abs() < 1e-9);
         }
+        // cluster section: totals, per-node and per-class rows
+        assert_eq!(v.get("n_lost").and_then(Value::as_f64), Some(2.0));
+        let cl = v.get("cluster").unwrap();
+        let got = cl.get("total_dollars").and_then(Value::as_f64).unwrap();
+        assert!((got - r.cluster.total_dollars()).abs() < 1e-12);
+        let got = cl.get("total_joules").and_then(Value::as_f64).unwrap();
+        assert!((got - r.cluster.total_joules()).abs() < 1e-9);
+        let got = cl.get("capacity_per_dollar").and_then(Value::as_f64).unwrap();
+        assert!((got - r.cluster.capacity_per_dollar(r.n_satisfied)).abs() < 1e-9);
+        let nodes = cl.get("nodes").and_then(|x| x.as_arr()).unwrap();
+        assert_eq!(nodes.len(), 2);
+        for (slot, nr) in nodes.iter().zip(&r.cluster.nodes) {
+            assert_eq!(slot.get("name").and_then(Value::as_str), Some(nr.name.as_str()));
+            assert_eq!(slot.get("gpu").and_then(Value::as_str), Some(nr.gpu.as_str()));
+            for (key, want) in [
+                ("up_seconds", nr.up_seconds),
+                ("gpu_seconds", nr.gpu_seconds),
+                ("joules", nr.joules),
+                ("dollars", nr.dollars),
+                ("served", nr.served as f64),
+                ("redispatched", nr.redispatched as f64),
+                ("lost", nr.lost as f64),
+                ("failures", nr.failures as f64),
+            ] {
+                let got = slot.get(key).and_then(Value::as_f64).unwrap();
+                assert!((got - want).abs() < 1e-12, "{key}: {got} vs {want}");
+            }
+        }
+        let ccs = cl.get("classes").and_then(|x| x.as_arr()).unwrap();
+        assert_eq!(ccs.len(), 1);
+        assert_eq!(
+            ccs[0].get("name").and_then(Value::as_str),
+            Some("chat \"v2\" \\ beta")
+        );
+        let got = ccs[0].get("gpu_seconds").and_then(Value::as_f64).unwrap();
+        assert!((got - 1.5).abs() < 1e-12);
+        assert_eq!(ccs[0].get("lost").and_then(Value::as_f64), Some(1.0));
         // an empty report still parses; NaN fields become null
         let empty = SimReport::from_outcomes(&[], &policy);
         let ev = Value::parse(&empty.to_json()).unwrap();
         assert_eq!(ev.get("satisfaction_rate"), Some(&Value::Null));
         assert_eq!(ev.get("per_cell_radio").and_then(|x| x.as_arr()).unwrap().len(), 0);
+        let ecl = ev.get("cluster").unwrap();
+        assert_eq!(ecl.get("nodes").and_then(|x| x.as_arr()).unwrap().len(), 0);
+        assert_eq!(ecl.get("classes").and_then(|x| x.as_arr()).unwrap().len(), 0);
+        assert_eq!(ecl.get("capacity_per_dollar"), Some(&Value::Null));
+    }
+
+    #[test]
+    fn lost_jobs_count_against_satisfaction_like_drops() {
+        let mut lost = done(0.012, 0.0, 0.0);
+        lost.fate = JobFate::Lost;
+        lost.ttft = 0.0;
+        lost.tpot = 0.0;
+        let outcomes = vec![lost, done(0.01, 0.02, 0.03)];
+        let r = SimReport::from_outcomes(&outcomes, &LatencyManagement::Joint { b_total: 0.080 });
+        assert_eq!(r.n_jobs, 2);
+        assert_eq!(r.n_lost, 1);
+        assert_eq!(r.n_dropped, 0);
+        assert_eq!(r.n_satisfied, 1);
+        assert!((r.satisfaction_rate() - 0.5).abs() < 1e-12);
+        // lost jobs contribute their comm latency but no service stats
+        assert_eq!(r.comm.count(), 2);
+        assert_eq!(r.ttft.count(), 1);
+    }
+
+    #[test]
+    fn cluster_sections_merge_elementwise_and_clear_on_mismatch() {
+        let policy = LatencyManagement::Joint { b_total: 1.0 };
+        let mk = |dollars: f64, served: u64| {
+            let mut r = SimReport::from_outcomes(&[done(0.01, 0.0, 0.05)], &policy);
+            r.cluster = ClusterReport {
+                nodes: vec![NodeClusterReport {
+                    name: "node0".into(),
+                    gpu: "L40S".into(),
+                    up_seconds: 1.0,
+                    gpu_seconds: 1.0,
+                    joules: 350.0,
+                    dollars,
+                    served,
+                    ..Default::default()
+                }],
+                classes: vec![ClassClusterReport {
+                    name: "c".into(),
+                    gpu_seconds: 0.5,
+                    ..Default::default()
+                }],
+            };
+            r
+        };
+        let mut a = mk(0.01, 3);
+        a.merge(&mk(0.02, 4));
+        assert_eq!(a.cluster.nodes.len(), 1);
+        assert!((a.cluster.nodes[0].dollars - 0.03).abs() < 1e-12);
+        assert_eq!(a.cluster.nodes[0].served, 7);
+        assert!((a.cluster.classes[0].gpu_seconds - 1.0).abs() < 1e-12);
+        assert!((a.cluster.total_dollars() - 0.03).abs() < 1e-12);
+        // a different tier shape clears the section rather than lying
+        let mut b = mk(0.01, 1);
+        b.cluster.nodes.push(NodeClusterReport::default());
+        a.merge(&b);
+        assert!(a.cluster.is_empty());
+        // merging two disabled (empty) reports stays empty
+        let mut x = SimReport::from_outcomes(&[], &policy);
+        x.merge(&SimReport::from_outcomes(&[], &policy));
+        assert!(x.cluster.is_empty());
     }
 
     #[test]

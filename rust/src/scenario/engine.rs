@@ -30,6 +30,7 @@
 
 use std::sync::Mutex;
 
+use crate::cluster::ClusterRt;
 use crate::compute::{
     BatchEngine, BatchEvent, BatchJob, ComputeJob, ComputeNode, Discipline, ExecutionModel,
     NodeEvent,
@@ -45,6 +46,7 @@ use crate::sweep::resolve_threads;
 
 use super::cells::{cell_seed, CellRt, StepPool};
 use super::routing::NodeView;
+use super::service::ServiceDemand;
 use super::{NodeSpec, Scenario};
 
 /// Map a scheme to the node queue discipline.
@@ -87,12 +89,24 @@ enum Ev {
     BgArrival { cell: u32, ue: u32 },
     /// Prompt fully received at the gNB crossed the wireline.
     ComputeEnqueue { job: u64 },
-    /// Sequential node `node` finished `job`.
-    ComputeDone { node: usize, job: u64 },
-    /// Iteration boundary of node `node`'s batch engine.
-    BatchStep { node: usize },
+    /// Sequential node `node` finished `job`. `epoch` is the node's
+    /// cluster epoch at scheduling time (always 0 without a cluster);
+    /// the event is stale — the job was evicted — if the epoch lapsed.
+    ComputeDone { node: usize, job: u64, epoch: u32 },
+    /// Iteration boundary of node `node`'s batch engine (same epoch
+    /// staleness rule as `ComputeDone`).
+    BatchStep { node: usize, epoch: u32 },
     /// Coarse radio tick: UE mobility + A3 handover evaluation.
     RadioTick,
+    /// Cluster control tick: drain completion + autoscaler evaluation.
+    ControlTick,
+    /// Node `node` fails (stale if its epoch lapsed — it was drained
+    /// to `Down` before the failure fired).
+    NodeFail { node: usize, epoch: u32 },
+    /// Node `node`'s repair completes; it powers on and spins up.
+    NodeRepair { node: usize },
+    /// Node `node` finishes spin-up and starts serving.
+    NodeUp { node: usize, epoch: u32 },
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -117,6 +131,9 @@ struct JobState {
     prefill_time: f64,
     /// Realized sequential decode latency (set at node arrival).
     decode_time: f64,
+    /// Times this job was re-dispatched after losing its node (cluster
+    /// runs only; compared against the retry budget).
+    retries: u32,
     fate: JobFate,
     measured: bool,
 }
@@ -151,19 +168,29 @@ impl NodeRt {
 }
 
 /// Sequential node-event plumbing: schedule completions for started
-/// jobs, mark drops.
+/// jobs (stamped with the node's cluster epoch), mark drops. `inflight`
+/// is the node's in-service job list, maintained only on cluster runs
+/// so a failure can evict mid-service jobs.
 fn apply_node_events(
     node: usize,
+    epoch: u32,
     events: &[NodeEvent],
     jobs: &mut [JobState],
     q: &mut EventQueue<Ev>,
     now: f64,
+    mut inflight: Option<&mut Vec<u64>>,
 ) {
     for ev in events {
         match *ev {
             NodeEvent::Started { job, completes_at } => {
                 jobs[job.job_id as usize].t_service_start = Some(now);
-                q.schedule_at(completes_at, Ev::ComputeDone { node, job: job.job_id });
+                if let Some(list) = inflight.as_deref_mut() {
+                    list.push(job.job_id);
+                }
+                q.schedule_at(
+                    completes_at,
+                    Ev::ComputeDone { node, job: job.job_id, epoch },
+                );
             }
             NodeEvent::Dropped { job } => {
                 jobs[job.job_id as usize].fate = JobFate::Dropped;
@@ -173,9 +200,11 @@ fn apply_node_events(
 }
 
 /// Batch-engine plumbing: record admissions / token boundaries /
-/// completions and schedule the next iteration step.
+/// completions and schedule the next iteration step (stamped with the
+/// node's cluster epoch).
 fn apply_batch_events(
     node: usize,
+    epoch: u32,
     events: &[BatchEvent],
     jobs: &mut [JobState],
     q: &mut EventQueue<Ev>,
@@ -198,8 +227,27 @@ fn apply_batch_events(
                 jobs[job_id as usize].fate = JobFate::Dropped;
             }
             BatchEvent::StepAt { at } => {
-                q.schedule_at(at, Ev::BatchStep { node });
+                q.schedule_at(at, Ev::BatchStep { node, epoch });
             }
+        }
+    }
+}
+
+/// Cluster bookkeeping for a batch of engine events: TTFT observations
+/// and per-class work attribution for every finished job.
+fn observe_batch_completions(
+    node: usize,
+    events: &[BatchEvent],
+    jobs: &[JobState],
+    cluster: &mut ClusterRt,
+) {
+    for ev in events {
+        if let BatchEvent::Finished { job_id } = *ev {
+            let js = &jobs[job_id as usize];
+            if let Some(f) = js.t_first_token {
+                cluster.observe_ttft(f - js.t_gen);
+            }
+            cluster.observe_completion(node, js.class, js.prefill_time + js.decode_time);
         }
     }
 }
@@ -385,6 +433,30 @@ fn event_loop(
     let mut node_ev: Vec<NodeEvent> = Vec::with_capacity(16);
     let mut batch_ev: Vec<BatchEvent> = Vec::with_capacity(64);
 
+    // Elastic control plane (None = static tier: no cluster events, no
+    // cluster RNG draws, views built over every node — bit-identical
+    // to the pre-cluster engine by construction).
+    let mut cluster_rt: Option<ClusterRt> = sc.cluster.map(|spec| {
+        ClusterRt::new(
+            spec,
+            sc.node_churn.clone(),
+            sc.nodes.iter().map(|n| n.gpu).collect(),
+            n_classes,
+            cfg.seed,
+        )
+    });
+    // Cluster scratch: eligible-node index map (router sees only `Up`
+    // nodes; picks map back through this), per-node in-service job ids
+    // (sequential nodes only), per-tick load snapshot, power-on list,
+    // and eviction buffers.
+    let mut eligible_ix: Vec<usize> = Vec::with_capacity(sc.nodes.len());
+    let mut inflight_seq: Vec<Vec<u64>> = vec![Vec::new(); sc.nodes.len()];
+    let mut node_loads: Vec<(usize, u32)> = Vec::with_capacity(sc.nodes.len());
+    let mut power_on: Vec<usize> = Vec::with_capacity(sc.nodes.len());
+    let mut evicted_ids: Vec<u64> = Vec::new();
+    let mut seq_evicted: Vec<ComputeJob> = Vec::new();
+    let mut batch_evicted: Vec<BatchJob> = Vec::new();
+
     // Background packet rate (constant across the run).
     let bg_rate = 1.0 / cfg.background.mean_interval();
     let bg_bytes = cfg.background.packet_bytes;
@@ -409,6 +481,17 @@ fn event_loop(
     // Prime the radio tick (mobility + handover) when geometry is on.
     if sc.topology.is_some() && (sc.mobility.is_some() || sc.handover.is_some()) {
         q.schedule_at(tick_s, Ev::RadioTick);
+    }
+
+    // Prime the control plane: one failure event per churning node
+    // (infinite-MTBF nodes draw nothing) and the first control tick.
+    if let Some(cl) = cluster_rt.as_mut() {
+        for i in 0..cl.n_nodes() {
+            if let Some(ttf) = cl.time_to_failure(i) {
+                q.schedule_at(ttf, Ev::NodeFail { node: i, epoch: cl.epoch(i) });
+            }
+        }
+        q.schedule_at(cl.spec().tick_s, Ev::ControlTick);
     }
 
     let drain_horizon = cfg.horizon + 2.0;
@@ -530,6 +613,7 @@ fn event_loop(
                         n_output: 0,
                         prefill_time: 0.0,
                         decode_time: 0.0,
+                        retries: 0,
                         fate: JobFate::InFlight,
                         measured: now >= cfg.warmup,
                     });
@@ -643,7 +727,7 @@ fn event_loop(
                 }
             }
             Ev::ComputeEnqueue { job } => {
-                let (cell_id, class_id, n_input, t_gen, t_comm) = {
+                let (cell_id, class_id, n_input, t_gen, t_comm, retry) = {
                     let js = &jobs[job as usize];
                     (
                         js.cell as usize,
@@ -651,24 +735,73 @@ fn event_loop(
                         js.n_input,
                         js.t_gen,
                         js.t_comm.expect("enqueue before comm done"),
+                        js.retries > 0,
                     )
                 };
                 let spec = &sc.classes[class_id];
                 views.clear();
-                views.extend(nodes.iter().zip(sc.nodes.iter()).map(|(rt, s)| rt.view(s)));
-                let target = router.pick(class_id, cell_id, &views);
-                // A routing bug must fail loudly: silently clamping
-                // would report single-node results as multi-node.
-                assert!(
-                    target < nodes.len(),
-                    "Routing::pick returned {target} for {} nodes",
-                    nodes.len()
-                );
+                let target = match &cluster_rt {
+                    Some(cl) => {
+                        // Routing sees only `Up` nodes; the pick maps
+                        // back to a real tier index.
+                        eligible_ix.clear();
+                        for (i, (rt, s)) in
+                            nodes.iter().zip(sc.nodes.iter()).enumerate()
+                        {
+                            if cl.eligible(i) {
+                                eligible_ix.push(i);
+                                views.push(rt.view(s));
+                            }
+                        }
+                        if views.is_empty() {
+                            // The whole tier is dark: park the job and
+                            // retry on the control-tick cadence (this
+                            // is not a re-dispatch — no budget spent).
+                            q.schedule_in(
+                                cl.spec().tick_s,
+                                Ev::ComputeEnqueue { job },
+                            );
+                            continue;
+                        }
+                        let t = router.pick(class_id, cell_id, &views);
+                        assert!(
+                            t < views.len(),
+                            "Routing::pick returned {t} for {} nodes",
+                            views.len()
+                        );
+                        eligible_ix[t]
+                    }
+                    None => {
+                        views.extend(
+                            nodes.iter().zip(sc.nodes.iter()).map(|(rt, s)| rt.view(s)),
+                        );
+                        let t = router.pick(class_id, cell_id, &views);
+                        // A routing bug must fail loudly: silently
+                        // clamping would report single-node results as
+                        // multi-node.
+                        assert!(
+                            t < nodes.len(),
+                            "Routing::pick returned {t} for {} nodes",
+                            nodes.len()
+                        );
+                        t
+                    }
+                };
                 // Service realizations draw from the originating cell's
                 // stream, in that cell's delivery order — so each cell
                 // of an N-cell run matches an independent single-cell
-                // run (DESIGN.md §9).
-                let demand = {
+                // run (DESIGN.md §9). A re-dispatched job reuses its
+                // realized demand: rng_svc is consumed exactly once per
+                // job, in first-delivery order, so node churn can never
+                // shift any other job's draws (DESIGN.md §11).
+                let demand = if retry {
+                    let js = &jobs[job as usize];
+                    ServiceDemand {
+                        n_output: js.n_output,
+                        prefill_time: js.prefill_time,
+                        decode_time: js.decode_time,
+                    }
+                } else {
                     let mut c = cells[cell_id].lock().unwrap();
                     sc.service.realize(spec, n_input, &sc.nodes[target].gpu, &mut c.rng_svc)
                 };
@@ -680,6 +813,7 @@ fn event_loop(
                     js.t_node_arrival = Some(now);
                 }
                 let deadline = t_gen + spec.b_total;
+                let epoch = cluster_rt.as_ref().map_or(0, |c| c.epoch(target));
                 match &mut nodes[target] {
                     NodeRt::Seq(n) => {
                         let cj = ComputeJob {
@@ -691,7 +825,16 @@ fn event_loop(
                         };
                         node_ev.clear();
                         n.enqueue(cj, now, &mut node_ev);
-                        apply_node_events(target, &node_ev, &mut jobs, &mut q, now);
+                        let track = cluster_rt.is_some();
+                        apply_node_events(
+                            target,
+                            epoch,
+                            &node_ev,
+                            &mut jobs,
+                            &mut q,
+                            now,
+                            track.then(|| &mut inflight_seq[target]),
+                        );
                     }
                     NodeRt::Batch(e) => {
                         let bj = BatchJob {
@@ -709,30 +852,148 @@ fn event_loop(
                         };
                         batch_ev.clear();
                         e.enqueue(bj, now, &mut batch_ev);
-                        apply_batch_events(target, &batch_ev, &mut jobs, &mut q, now);
+                        apply_batch_events(target, epoch, &batch_ev, &mut jobs, &mut q, now);
+                        if let Some(cl) = cluster_rt.as_mut() {
+                            observe_batch_completions(target, &batch_ev, &jobs, cl);
+                        }
                     }
                 }
             }
-            Ev::ComputeDone { node, job } => {
+            Ev::ComputeDone { node, job, epoch } => {
+                if cluster_rt.as_ref().map_or(false, |c| !c.event_live(node, epoch)) {
+                    // the node failed mid-service; the job was already
+                    // evicted and re-dispatched (or lost)
+                    continue;
+                }
                 {
                     let js = &mut jobs[job as usize];
                     js.fate = JobFate::Completed;
                     js.t_done = Some(now);
+                }
+                if let Some(cl) = cluster_rt.as_mut() {
+                    let js = &jobs[job as usize];
+                    // sequential TTFT: service start + prefill + one
+                    // decode step (the outcome-assembly formula)
+                    let start = js.t_service_start.expect("done before start");
+                    let tok = js.decode_time / js.n_output.max(1) as f64;
+                    cl.observe_ttft(start - js.t_gen + js.prefill_time + tok);
+                    cl.observe_completion(node, js.class, js.prefill_time + js.decode_time);
+                    inflight_seq[node].retain(|&id| id != job);
                 }
                 let NodeRt::Seq(n) = &mut nodes[node] else {
                     unreachable!("ComputeDone scheduled for a batching node")
                 };
                 node_ev.clear();
                 n.complete(now, &mut node_ev);
-                apply_node_events(node, &node_ev, &mut jobs, &mut q, now);
+                let track = cluster_rt.is_some();
+                apply_node_events(
+                    node,
+                    epoch,
+                    &node_ev,
+                    &mut jobs,
+                    &mut q,
+                    now,
+                    track.then(|| &mut inflight_seq[node]),
+                );
             }
-            Ev::BatchStep { node } => {
+            Ev::BatchStep { node, epoch } => {
+                if cluster_rt.as_ref().map_or(false, |c| !c.event_live(node, epoch)) {
+                    // the engine was evicted after this step was armed
+                    continue;
+                }
                 let NodeRt::Batch(e) = &mut nodes[node] else {
                     unreachable!("BatchStep scheduled for a sequential node")
                 };
                 batch_ev.clear();
                 e.step(now, &mut batch_ev);
-                apply_batch_events(node, &batch_ev, &mut jobs, &mut q, now);
+                apply_batch_events(node, epoch, &batch_ev, &mut jobs, &mut q, now);
+                if let Some(cl) = cluster_rt.as_mut() {
+                    observe_batch_completions(node, &batch_ev, &jobs, cl);
+                }
+            }
+            Ev::ControlTick => {
+                let cl = cluster_rt
+                    .as_mut()
+                    .expect("ControlTick scheduled without a cluster");
+                node_loads.clear();
+                node_loads.extend(nodes.iter().map(|rt| match rt {
+                    NodeRt::Seq(n) => (n.queue_len(), n.busy_servers()),
+                    NodeRt::Batch(e) => (e.queue_len(), e.batch_len() as u32),
+                }));
+                power_on.clear();
+                cl.control_tick(now, &node_loads, &mut power_on);
+                for &i in &power_on {
+                    q.schedule_in(
+                        sc.node_churn[i].spinup,
+                        Ev::NodeUp { node: i, epoch: cl.epoch(i) },
+                    );
+                }
+                if now < cfg.horizon {
+                    q.schedule_in(cl.spec().tick_s, Ev::ControlTick);
+                }
+            }
+            Ev::NodeFail { node, epoch } => {
+                let cl = cluster_rt
+                    .as_mut()
+                    .expect("NodeFail scheduled without a cluster");
+                if !cl.event_live(node, epoch) {
+                    // the node was drained to Down before its failure
+                    // fired; the draw is already consumed, nothing dies
+                    continue;
+                }
+                let repair_in = cl.on_fail(node, now);
+                q.schedule_in(repair_in, Ev::NodeRepair { node });
+                // Evict everything the node owned, in deterministic
+                // order: in-service jobs first (start order for
+                // sequential, job-id order inside the batch), then the
+                // ready queue in discipline order.
+                evicted_ids.clear();
+                match &mut nodes[node] {
+                    NodeRt::Seq(n) => {
+                        evicted_ids.extend(inflight_seq[node].drain(..));
+                        seq_evicted.clear();
+                        n.evict(&mut seq_evicted);
+                        evicted_ids.extend(seq_evicted.iter().map(|j| j.job_id));
+                    }
+                    NodeRt::Batch(e) => {
+                        batch_evicted.clear();
+                        e.evict(&mut batch_evicted);
+                        evicted_ids.extend(batch_evicted.iter().map(|j| j.job_id));
+                    }
+                }
+                let budget = cl.spec().retry_budget;
+                for &job in &evicted_ids {
+                    let js = &mut jobs[job as usize];
+                    // service never happened; the re-dispatch (or the
+                    // loss report) starts from a clean slate
+                    js.t_service_start = None;
+                    js.t_first_token = None;
+                    if js.retries < budget {
+                        js.retries += 1;
+                        cl.observe_redispatch(node, js.class);
+                        q.schedule_at(now, Ev::ComputeEnqueue { job });
+                    } else {
+                        js.fate = JobFate::Lost;
+                        cl.observe_lost(node, js.class);
+                    }
+                }
+            }
+            Ev::NodeRepair { node } => {
+                let cl = cluster_rt
+                    .as_mut()
+                    .expect("NodeRepair scheduled without a cluster");
+                let spin = cl.on_repair(node, now);
+                q.schedule_in(spin, Ev::NodeUp { node, epoch: cl.epoch(node) });
+            }
+            Ev::NodeUp { node, epoch } => {
+                let cl = cluster_rt
+                    .as_mut()
+                    .expect("NodeUp scheduled without a cluster");
+                if cl.event_live(node, epoch) {
+                    if let Some(ttf) = cl.on_up(node, now) {
+                        q.schedule_in(ttf, Ev::NodeFail { node, epoch: cl.epoch(node) });
+                    }
+                }
             }
         }
     }
@@ -813,6 +1074,13 @@ fn event_loop(
                 }
             })
             .collect();
+    }
+    if let Some(cl) = cluster_rt.as_mut() {
+        // Costs cover the whole simulated window including the drain
+        // tail — a deterministic bound, unlike the last-event time.
+        cl.finalize(drain_horizon);
+        let names: Vec<String> = sc.classes.iter().map(|c| c.name.clone()).collect();
+        report.cluster = cl.report(&names);
     }
     let wall = wall0.elapsed().as_secs_f64();
     ScenarioResult {

@@ -61,6 +61,7 @@ pub use service::{
 };
 pub use workload::{workloads_from_toml, workloads_to_toml, TokenDist, WorkloadClass};
 
+pub use crate::cluster::{AutoscalerKind, ClusterSpec, NodeChurnSpec};
 pub use crate::compute::ExecutionModel;
 pub use crate::dess::EventListKind;
 pub use crate::phy::geometry::{SiteLayout, TopologySpec};
@@ -112,6 +113,12 @@ pub struct Scenario {
     pub(crate) handover: Option<HandoverSpec>,
     /// Event-list backend of the engine's calendar.
     pub(crate) event_queue: EventListKind,
+    /// Elastic control plane (`None` = static always-healthy tier; the
+    /// engine then schedules no cluster events and draws no cluster
+    /// RNG, keeping the disabled path bit-identical by construction).
+    pub(crate) cluster: Option<ClusterSpec>,
+    /// Per-node churn parameters, parallel to `nodes`.
+    pub(crate) node_churn: Vec<NodeChurnSpec>,
 }
 
 impl std::fmt::Debug for Scenario {
@@ -129,6 +136,8 @@ impl std::fmt::Debug for Scenario {
             .field("mobility", &self.mobility)
             .field("handover", &self.handover)
             .field("event_queue", &self.event_queue)
+            .field("cluster", &self.cluster)
+            .field("node_churn", &self.node_churn)
             .finish()
     }
 }
@@ -181,6 +190,16 @@ impl Scenario {
         self.event_queue
     }
 
+    /// The elastic control plane (`None` = static tier).
+    pub fn cluster(&self) -> Option<&ClusterSpec> {
+        self.cluster.as_ref()
+    }
+
+    /// Per-node churn parameters (parallel to [`Scenario::nodes`]).
+    pub fn node_churn(&self) -> &[NodeChurnSpec] {
+        &self.node_churn
+    }
+
     pub fn nodes(&self) -> &[NodeSpec] {
         &self.nodes
     }
@@ -229,6 +248,8 @@ pub struct ScenarioBuilder {
     mobility: Option<MobilitySpec>,
     handover: Option<HandoverSpec>,
     event_queue: EventListKind,
+    cluster: Option<ClusterSpec>,
+    node_churn: Vec<NodeChurnSpec>,
 }
 
 impl std::fmt::Debug for ScenarioBuilder {
@@ -246,6 +267,8 @@ impl std::fmt::Debug for ScenarioBuilder {
             .field("mobility", &self.mobility)
             .field("handover", &self.handover)
             .field("event_queue", &self.event_queue)
+            .field("cluster", &self.cluster)
+            .field("node_churn", &self.node_churn)
             .finish()
     }
 }
@@ -274,6 +297,8 @@ impl ScenarioBuilder {
             // queue's home turf; pop order (and hence every result) is
             // backend-independent
             event_queue: EventListKind::Calendar,
+            cluster: None,
+            node_churn: Vec::new(),
         }
     }
 
@@ -298,6 +323,8 @@ impl ScenarioBuilder {
             mobility: None,
             handover: None,
             event_queue: EventListKind::Calendar,
+            cluster: None,
+            node_churn: vec![NodeChurnSpec::default()],
         }
     }
 
@@ -409,6 +436,28 @@ impl ScenarioBuilder {
     ) -> Self {
         assert!(n_servers >= 1);
         self.nodes.push(NodeSpec { gpu, n_servers, execution });
+        self.node_churn.push(NodeChurnSpec::default());
+        self
+    }
+
+    /// Enable the elastic control plane (DESIGN.md §11): node lifecycle
+    /// events, an autoscaler on a coarse control tick, re-dispatch of
+    /// work lost to failures, and per-node cost/energy accounting.
+    pub fn cluster(mut self, spec: ClusterSpec) -> Self {
+        self.cluster = Some(spec);
+        self
+    }
+
+    /// Churn parameters for the most recently added node (call after
+    /// [`ScenarioBuilder::node`]; requires a [`ScenarioBuilder::cluster`]
+    /// at build time when the MTBF is finite).
+    pub fn node_churn(mut self, churn: NodeChurnSpec) -> Self {
+        let i = self
+            .nodes
+            .len()
+            .checked_sub(1)
+            .expect("node_churn() must follow a node()");
+        self.node_churn[i] = churn;
         self
     }
 
@@ -474,7 +523,11 @@ impl ScenarioBuilder {
                 | "topology.layout" | "topology.isd" | "mobility.model"
                 | "mobility.speed" | "mobility.v_min" | "mobility.v_max"
                 | "mobility.tick_s" | "handover.hysteresis_db" | "handover.ttt_s"
-                | "handover.interruption_slots" => {}
+                | "handover.interruption_slots" | "cluster.policy"
+                | "cluster.tick_s" | "cluster.min_nodes" | "cluster.max_nodes"
+                | "cluster.retry_budget" | "cluster.ttft_slo"
+                | "cluster.queue_high" | "cluster.queue_low"
+                | "cluster.slo_violation_frac" => {}
                 // apply_scheme_toml owns the [scheme] key set and
                 // rejects unknown or mistyped ones.
                 k if k.starts_with("scheme.") => {}
@@ -614,6 +667,105 @@ impl ScenarioBuilder {
             }
             self.handover = Some(ho);
         }
+        // [cluster]: elastic control plane; any key enables it.
+        const CLUSTER_KEYS: [&str; 9] = [
+            "cluster.policy",
+            "cluster.tick_s",
+            "cluster.min_nodes",
+            "cluster.max_nodes",
+            "cluster.retry_budget",
+            "cluster.ttft_slo",
+            "cluster.queue_high",
+            "cluster.queue_low",
+            "cluster.slo_violation_frac",
+        ];
+        if CLUSTER_KEYS.iter().any(|k| doc.get(k).is_some()) {
+            let mut spec = self.cluster.unwrap_or_default();
+            if let Some(s) = typed_str(doc, "cluster.policy")? {
+                spec.policy = AutoscalerKind::parse(s).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown cluster policy '{s}' (fixed | queue_depth | ttft_slo)"
+                    )
+                })?;
+            }
+            if let Some(v) = typed_f64(doc, "cluster.tick_s")? {
+                if !(1e-3..=60.0).contains(&v) {
+                    anyhow::bail!("'cluster.tick_s' must be in 0.001..=60 s, got {v}");
+                }
+                spec.tick_s = v;
+            }
+            if let Some(v) = typed_i64(doc, "cluster.min_nodes")? {
+                if !(0..=4096).contains(&v) {
+                    anyhow::bail!("'cluster.min_nodes' must be in 0..=4096, got {v}");
+                }
+                spec.min_nodes = v as usize;
+            }
+            if let Some(v) = typed_i64(doc, "cluster.max_nodes")? {
+                if !(1..=4096).contains(&v) {
+                    anyhow::bail!("'cluster.max_nodes' must be in 1..=4096, got {v}");
+                }
+                spec.max_nodes = v as usize;
+            }
+            if let Some(v) = typed_i64(doc, "cluster.retry_budget")? {
+                if !(0..=1000).contains(&v) {
+                    anyhow::bail!("'cluster.retry_budget' must be in 0..=1000, got {v}");
+                }
+                spec.retry_budget = v as u32;
+            }
+            if let Some(v) = typed_f64(doc, "cluster.ttft_slo")? {
+                if !(1e-4..=1e4).contains(&v) {
+                    anyhow::bail!("'cluster.ttft_slo' must be in 0.0001..=10000 s, got {v}");
+                }
+                spec.ttft_slo = v;
+            }
+            let q_high = typed_i64(doc, "cluster.queue_high")?;
+            let q_low = typed_i64(doc, "cluster.queue_low")?;
+            if q_high.is_some() || q_low.is_some() {
+                match &mut spec.policy {
+                    AutoscalerKind::QueueDepth { high, low } => {
+                        if let Some(v) = q_high {
+                            if !(1..=1_000_000).contains(&v) {
+                                anyhow::bail!(
+                                    "'cluster.queue_high' must be in 1..=1e6, got {v}"
+                                );
+                            }
+                            *high = v as u32;
+                        }
+                        if let Some(v) = q_low {
+                            if !(0..=1_000_000).contains(&v) {
+                                anyhow::bail!(
+                                    "'cluster.queue_low' must be in 0..=1e6, got {v}"
+                                );
+                            }
+                            *low = v as u32;
+                        }
+                    }
+                    other => anyhow::bail!(
+                        "'cluster.queue_high'/'queue_low' require policy = \
+                         \"queue_depth\" (got '{}')",
+                        other.name()
+                    ),
+                }
+            }
+            if let Some(v) = typed_f64(doc, "cluster.slo_violation_frac")? {
+                match &mut spec.policy {
+                    AutoscalerKind::TtftSlo { max_violation_frac } => {
+                        if !(0.0..=1.0).contains(&v) {
+                            anyhow::bail!(
+                                "'cluster.slo_violation_frac' must be in 0..=1, got {v}"
+                            );
+                        }
+                        *max_violation_frac = v;
+                    }
+                    other => anyhow::bail!(
+                        "'cluster.slo_violation_frac' requires policy = \"ttft_slo\" \
+                         (got '{}')",
+                        other.name()
+                    ),
+                }
+            }
+            self.cluster = Some(spec);
+        }
         if let Some(s) = typed_str(doc, "service.model")? {
             let kind = ServiceModelKind::parse(s)
                 .ok_or_else(|| anyhow::anyhow!("unknown service model '{s}'"))?;
@@ -646,6 +798,7 @@ impl ScenarioBuilder {
         let n_nodes = doc.array_len("node");
         if n_nodes > 0 {
             self.nodes.clear();
+            self.node_churn.clear();
             for i in 0..n_nodes {
                 let prefix = format!("node.{i}.");
                 let mut gpu_name: Option<&str> = None;
@@ -654,6 +807,7 @@ impl ScenarioBuilder {
                 let mut batching = false;
                 let mut max_batch: Option<u32> = None;
                 let mut kv_budget_gb: Option<f64> = None;
+                let mut churn = NodeChurnSpec::default();
                 for key in doc.keys().filter(|k| k.starts_with(prefix.as_str())) {
                     let field = &key[prefix.len()..];
                     let missing = || anyhow::anyhow!("bad value for '{key}'");
@@ -687,6 +841,27 @@ impl ScenarioBuilder {
                             }
                             kv_budget_gb = Some(v);
                         }
+                        "mtbf" => {
+                            let v = doc.f64(key).ok_or_else(missing)?;
+                            if v <= 0.0 {
+                                anyhow::bail!("'{key}' must be positive, got {v}");
+                            }
+                            churn.mtbf = v;
+                        }
+                        "mttr" => {
+                            let v = doc.f64(key).ok_or_else(missing)?;
+                            if v <= 0.0 || !v.is_finite() {
+                                anyhow::bail!("'{key}' must be positive and finite, got {v}");
+                            }
+                            churn.mttr = v;
+                        }
+                        "spinup" => {
+                            let v = doc.f64(key).ok_or_else(missing)?;
+                            if v < 0.0 || !v.is_finite() {
+                                anyhow::bail!("'{key}' must be >= 0 and finite, got {v}");
+                            }
+                            churn.spinup = v;
+                        }
                         other => anyhow::bail!("unknown node key '{other}'"),
                     }
                 }
@@ -719,6 +894,7 @@ impl ScenarioBuilder {
                     ExecutionModel::Sequential
                 };
                 self.nodes.push(NodeSpec { gpu, n_servers: servers, execution });
+                self.node_churn.push(churn);
             }
         }
         Ok(self)
@@ -848,6 +1024,63 @@ impl ScenarioBuilder {
                 execution: ExecutionModel::Sequential,
             });
         }
+        // Every node carries a churn spec (default: never fails); the
+        // builder paths keep the lists parallel, this covers defaults.
+        self.node_churn.resize(self.nodes.len(), NodeChurnSpec::default());
+        for (i, churn) in self.node_churn.iter().enumerate() {
+            if churn.mtbf.is_nan() || churn.mtbf <= 0.0 {
+                anyhow::bail!("node {i}: mtbf must be positive");
+            }
+            if !(churn.mttr > 0.0 && churn.mttr.is_finite()) {
+                anyhow::bail!("node {i}: mttr must be positive and finite");
+            }
+            if !(churn.spinup >= 0.0 && churn.spinup.is_finite()) {
+                anyhow::bail!("node {i}: spinup must be >= 0 and finite");
+            }
+            if churn.mtbf.is_finite() && self.cluster.is_none() {
+                anyhow::bail!(
+                    "node {i}: a finite mtbf requires a [cluster] control plane \
+                     (failures need its repair/re-dispatch machinery)"
+                );
+            }
+        }
+        if let Some(spec) = &mut self.cluster {
+            if !(spec.tick_s > 0.0 && spec.tick_s.is_finite()) {
+                anyhow::bail!("[cluster] tick_s must be positive and finite");
+            }
+            if spec.ttft_slo.is_nan() || spec.ttft_slo <= 0.0 {
+                anyhow::bail!("[cluster] ttft_slo must be positive");
+            }
+            // "at most the tier" is the natural meaning of an absent or
+            // oversized max_nodes
+            spec.max_nodes = spec.max_nodes.min(self.nodes.len());
+            if spec.min_nodes > spec.max_nodes {
+                anyhow::bail!(
+                    "[cluster] min_nodes ({}) exceeds max_nodes ({}, tier has {} nodes)",
+                    spec.min_nodes,
+                    spec.max_nodes,
+                    self.nodes.len(),
+                );
+            }
+            match spec.policy {
+                AutoscalerKind::QueueDepth { high, low } => {
+                    if low >= high {
+                        anyhow::bail!(
+                            "[cluster] queue_low ({low}) must be < queue_high ({high})"
+                        );
+                    }
+                }
+                AutoscalerKind::TtftSlo { max_violation_frac } => {
+                    if !(0.0..=1.0).contains(&max_violation_frac) {
+                        anyhow::bail!(
+                            "[cluster] slo_violation_frac must be in 0..=1, got \
+                             {max_violation_frac}"
+                        );
+                    }
+                }
+                AutoscalerKind::Fixed => {}
+            }
+        }
         let max_m_llm = self.classes.iter().map(|c| c.m_llm).fold(0.0_f64, f64::max);
         for (i, node) in self.nodes.iter_mut().enumerate() {
             let mem = node.gpu.mem_bytes;
@@ -911,6 +1144,8 @@ impl ScenarioBuilder {
             mobility: self.mobility,
             handover: self.handover,
             event_queue: self.event_queue,
+            cluster: self.cluster,
+            node_churn: self.node_churn,
         })
     }
 }
@@ -1364,6 +1599,97 @@ mod tests {
         assert!(s.topology().is_none());
         let r = s.run();
         assert!(r.report.radio.is_empty());
+    }
+
+    #[test]
+    fn toml_cluster_table_parses_with_node_churn() {
+        let doc = Document::parse(
+            "[cluster]\npolicy = \"queue_depth\"\ntick_s = 0.25\nmin_nodes = 1\n\
+             max_nodes = 2\nretry_budget = 3\nttft_slo = 0.8\nqueue_high = 6\nqueue_low = 2\n\
+             [[node]]\ngpu = \"a100\"\nmtbf = 40.0\nmttr = 10.0\nspinup = 2.0\n\
+             [[node]]\ngpu = \"a100\"\n",
+        )
+        .unwrap();
+        let s = ScenarioBuilder::new().apply_toml(&doc).unwrap().build();
+        let c = s.cluster().unwrap();
+        assert_eq!(c.policy, AutoscalerKind::QueueDepth { high: 6, low: 2 });
+        assert_eq!(c.tick_s, 0.25);
+        assert_eq!((c.min_nodes, c.max_nodes), (1, 2));
+        assert_eq!(c.retry_budget, 3);
+        assert_eq!(c.ttft_slo, 0.8);
+        assert_eq!(s.node_churn().len(), 2);
+        assert_eq!(
+            s.node_churn()[0],
+            NodeChurnSpec { mtbf: 40.0, mttr: 10.0, spinup: 2.0 }
+        );
+        // absent churn keys → the never-fails default
+        assert_eq!(s.node_churn()[1], NodeChurnSpec::default());
+        // ttft policy accepts its tuning knob
+        let doc = Document::parse(
+            "[cluster]\npolicy = \"ttft_slo\"\nslo_violation_frac = 0.2\n",
+        )
+        .unwrap();
+        let s = ScenarioBuilder::new().apply_toml(&doc).unwrap().build();
+        assert_eq!(
+            s.cluster().unwrap().policy,
+            AutoscalerKind::TtftSlo { max_violation_frac: 0.2 }
+        );
+        // max_nodes is clamped to the tier size at build time
+        assert_eq!(s.cluster().unwrap().max_nodes, s.nodes().len());
+    }
+
+    #[test]
+    fn toml_cluster_tables_strictly_validated() {
+        for bad in [
+            // unknown policy / key
+            "[cluster]\npolicy = \"magic\"",
+            "[cluster]\nfrobnicate = 1",
+            // knobs must match the selected policy
+            "[cluster]\npolicy = \"fixed\"\nqueue_high = 4",
+            "[cluster]\npolicy = \"queue_depth\"\nslo_violation_frac = 0.1",
+            // out-of-range values
+            "[cluster]\ntick_s = 0",
+            "[cluster]\ntick_s = 100.0",
+            "[cluster]\nretry_budget = -1",
+            "[cluster]\nttft_slo = 0",
+            "[cluster]\npolicy = \"ttft_slo\"\nslo_violation_frac = 1.5",
+            // node churn values
+            "[cluster]\ntick_s = 0.5\n[[node]]\ngpu = \"a100\"\nmtbf = 0",
+            "[cluster]\ntick_s = 0.5\n[[node]]\ngpu = \"a100\"\nmttr = -3",
+            "[cluster]\ntick_s = 0.5\n[[node]]\ngpu = \"a100\"\nspinup = -1",
+        ] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(
+                ScenarioBuilder::new().apply_toml(&doc).is_err(),
+                "accepted: {bad}"
+            );
+        }
+        // build-time coherence checks
+        for (bad, needle) in [
+            // churn without the control plane
+            (
+                "[[node]]\ngpu = \"a100\"\nmtbf = 50.0",
+                "[cluster]",
+            ),
+            // hysteresis bounds inverted
+            (
+                "[cluster]\npolicy = \"queue_depth\"\nqueue_high = 2\nqueue_low = 2",
+                "queue_low",
+            ),
+            // min above the tier size
+            (
+                "[cluster]\nmin_nodes = 3\n[[node]]\ngpu = \"a100\"",
+                "min_nodes",
+            ),
+        ] {
+            let doc = Document::parse(bad).unwrap();
+            let err = ScenarioBuilder::new()
+                .apply_toml(&doc)
+                .unwrap()
+                .try_build()
+                .unwrap_err();
+            assert!(err.to_string().contains(needle), "{bad}: {err}");
+        }
     }
 
     #[test]

@@ -1,0 +1,291 @@
+//! Elastic-cluster integration tests: the control-plane invariants.
+//!
+//! 1. **Bit-identity off-switch** — a cluster-enabled run under the
+//!    `Fixed` policy with default (never-failing) churn is
+//!    *bit-for-bit* identical to the same scenario with the control
+//!    plane disabled, across schemes, cell counts and thread counts
+//!    (property test). Only the cost ledger may differ — by existing.
+//! 2. **Determinism** — churn scenarios replay exactly per seed and
+//!    are invariant to the worker-thread count.
+//! 3. **Accounting** — node failures, re-dispatches, lost work and the
+//!    cost/energy ledger all reconcile against the per-job outcomes.
+//! 4. **Autoscaling** — a queue-depth policy under light load releases
+//!    the high-index node and spends less on it than on node 0.
+
+use icc6g::config::SchemeConfig;
+use icc6g::metrics::{ClusterReport, JobFate};
+use icc6g::prop_assert;
+use icc6g::scenario::{
+    AutoscalerKind, CellSpec, ClusterSpec, NodeChurnSpec, ScenarioBuilder, ScenarioResult,
+    ServiceModelKind, WorkloadClass,
+};
+use icc6g::util::jsonmini::Value;
+use icc6g::util::proptest::check;
+
+fn gpu() -> icc6g::llm::GpuSpec {
+    icc6g::llm::GpuSpec::gh200_nvl2().scaled(2.0)
+}
+
+fn scheme(i: usize) -> SchemeConfig {
+    match i {
+        0 => SchemeConfig::icc(),
+        1 => SchemeConfig::disjoint_ran(),
+        _ => SchemeConfig::mec(),
+    }
+}
+
+/// The base scenario of the off-switch property: 2 identical nodes,
+/// optionally wrapped in a `Fixed`-policy control plane whose nodes
+/// never fail — the configuration that must change nothing.
+fn base(si: usize, n_cells: usize, ues: u32, seed: u64, threads: usize, cluster: bool) -> ScenarioResult {
+    let mut b = ScenarioBuilder::new()
+        .scheme(scheme(si))
+        .horizon(4.0)
+        .warmup(0.5)
+        .seed(seed)
+        .threads(threads)
+        .service_kind(ServiceModelKind::TokenSampled)
+        .workload(WorkloadClass::chat())
+        .workload(WorkloadClass::translation());
+    if n_cells > 1 {
+        b = b.cells(n_cells, CellSpec::new(ues));
+    } else {
+        b = b.n_ues(ues);
+    }
+    b = b.node(gpu(), 1).node(gpu(), 1);
+    if cluster {
+        b = b.cluster(ClusterSpec::default());
+    }
+    b.build().run()
+}
+
+fn assert_outcomes_identical(a: &ScenarioResult, b: &ScenarioResult) {
+    assert_eq!(a.outcomes.len(), b.outcomes.len());
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.job_id, y.job_id);
+        assert_eq!(x.cell_id, y.cell_id);
+        assert_eq!(x.class_id, y.class_id);
+        assert_eq!(x.t_gen.to_bits(), y.t_gen.to_bits());
+        assert_eq!(x.t_comm.to_bits(), y.t_comm.to_bits());
+        assert_eq!(x.t_queue.to_bits(), y.t_queue.to_bits());
+        assert_eq!(x.t_service.to_bits(), y.t_service.to_bits());
+        assert_eq!(x.ttft.to_bits(), y.ttft.to_bits());
+        assert_eq!(x.tpot.to_bits(), y.tpot.to_bits());
+        assert_eq!(x.tokens, y.tokens);
+        assert_eq!(x.fate, y.fate);
+    }
+}
+
+fn assert_cluster_identical(a: &ClusterReport, b: &ClusterReport) {
+    assert_eq!(a.nodes.len(), b.nodes.len());
+    for (x, y) in a.nodes.iter().zip(&b.nodes) {
+        assert_eq!(x.name, y.name);
+        assert_eq!(x.gpu, y.gpu);
+        assert_eq!(x.up_seconds.to_bits(), y.up_seconds.to_bits());
+        assert_eq!(x.gpu_seconds.to_bits(), y.gpu_seconds.to_bits());
+        assert_eq!(x.joules.to_bits(), y.joules.to_bits());
+        assert_eq!(x.dollars.to_bits(), y.dollars.to_bits());
+        assert_eq!(x.served, y.served);
+        assert_eq!(x.redispatched, y.redispatched);
+        assert_eq!(x.lost, y.lost);
+        assert_eq!(x.failures, y.failures);
+    }
+    assert_eq!(a.classes.len(), b.classes.len());
+    for (x, y) in a.classes.iter().zip(&b.classes) {
+        assert_eq!(x.name, y.name);
+        assert_eq!(x.gpu_seconds.to_bits(), y.gpu_seconds.to_bits());
+        assert_eq!(x.joules.to_bits(), y.joules.to_bits());
+        assert_eq!(x.dollars.to_bits(), y.dollars.to_bits());
+        assert_eq!(x.redispatched, y.redispatched);
+        assert_eq!(x.lost, y.lost);
+    }
+}
+
+#[test]
+fn fixed_policy_cluster_is_bit_identical_to_disabled() {
+    // The off-switch property ISSUE 6 pins: enabling the control plane
+    // with a no-op policy and never-failing nodes must not perturb a
+    // single bit of any job outcome or report statistic. Event counts
+    // are NOT compared — control ticks legitimately add calendar pops.
+    check(6, |g| {
+        let si = g.usize_range(0, 2);
+        let n_cells = g.usize_range(1, 3);
+        let ues = g.usize_range(4, 8) as u32;
+        let seed = g.u64_below(1000);
+        let threads = g.usize_range(1, 2);
+        let off = base(si, n_cells, ues, seed, threads, false);
+        let on = base(si, n_cells, ues, seed, threads, true);
+        prop_assert!(
+            off.outcomes.len() == on.outcomes.len(),
+            "scheme {si}, {n_cells} cell(s), seed {seed}: {} jobs disabled vs {} enabled",
+            off.outcomes.len(),
+            on.outcomes.len()
+        );
+        for (x, y) in off.outcomes.iter().zip(&on.outcomes) {
+            prop_assert!(
+                x.job_id == y.job_id
+                    && x.t_gen.to_bits() == y.t_gen.to_bits()
+                    && x.t_comm.to_bits() == y.t_comm.to_bits()
+                    && x.t_queue.to_bits() == y.t_queue.to_bits()
+                    && x.t_service.to_bits() == y.t_service.to_bits()
+                    && x.ttft.to_bits() == y.ttft.to_bits()
+                    && x.tpot.to_bits() == y.tpot.to_bits()
+                    && x.tokens == y.tokens
+                    && x.fate == y.fate,
+                "scheme {si}, seed {seed}: job diverged\n  disabled: {x:?}\n  enabled:  {y:?}"
+            );
+        }
+        prop_assert!(
+            off.report.n_satisfied == on.report.n_satisfied
+                && off.report.n_dropped == on.report.n_dropped
+                && off.report.n_lost == 0
+                && on.report.n_lost == 0
+                && off.report.e2e.mean().to_bits() == on.report.e2e.mean().to_bits(),
+            "scheme {si}, seed {seed}: report statistics diverged"
+        );
+        // the only permitted difference: the enabled run carries a
+        // cost ledger, the disabled run carries none
+        prop_assert!(off.report.cluster.is_empty(), "disabled run grew a cluster section");
+        prop_assert!(
+            !on.report.cluster.is_empty() && on.report.cluster.total_dollars() > 0.0,
+            "enabled run priced nothing"
+        );
+        Ok(())
+    });
+}
+
+/// A hostile tier: both nodes fail on average every second and take
+/// ~0.3 s to repair, one retry per job. Warmup 0 so the cost ledger
+/// and the per-job outcomes cover the same population.
+fn churned(seed: u64, threads: usize) -> ScenarioResult {
+    let churn = NodeChurnSpec { mtbf: 1.0, mttr: 0.3, spinup: 0.1 };
+    ScenarioBuilder::new()
+        .scheme(SchemeConfig::icc())
+        .horizon(6.0)
+        .warmup(0.0)
+        .seed(seed)
+        .threads(threads)
+        .service_kind(ServiceModelKind::TokenSampled)
+        .workload(WorkloadClass::chat())
+        .workload(WorkloadClass::translation())
+        .cells(2, CellSpec::new(8))
+        .node(gpu(), 1)
+        .node_churn(churn)
+        .node(gpu(), 1)
+        .node_churn(churn)
+        .cluster(ClusterSpec { retry_budget: 1, ..Default::default() })
+        .build()
+        .run()
+}
+
+#[test]
+fn churn_runs_replay_exactly_per_seed() {
+    let a = churned(11, 1);
+    let b = churned(11, 1);
+    assert_eq!(a.events, b.events);
+    assert_outcomes_identical(&a, &b);
+    assert_cluster_identical(&a.report.cluster, &b.report.cluster);
+}
+
+#[test]
+fn churn_runs_are_invariant_to_thread_count() {
+    let serial = churned(11, 1);
+    for threads in [2usize, 4, 0] {
+        let par = churned(11, threads);
+        assert_eq!(serial.events, par.events, "threads = {threads}");
+        assert_outcomes_identical(&serial, &par);
+        assert_cluster_identical(&serial.report.cluster, &par.report.cluster);
+    }
+}
+
+#[test]
+fn churn_accounting_reconciles_with_job_fates() {
+    let res = churned(11, 1);
+    let cl = &res.report.cluster;
+    assert!(!cl.is_empty());
+    let failures: u64 = cl.nodes.iter().map(|n| n.failures).sum();
+    assert!(failures > 0, "MTBF 1 s over a 6 s horizon never failed");
+    for n in &cl.nodes {
+        assert!(n.up_seconds > 0.0, "{}: no powered time", n.name);
+        assert!(n.gpu_seconds > 0.0 && n.joules > 0.0 && n.dollars > 0.0);
+        // powered time is bounded by the accounting window (horizon +
+        // the 2 s drain tail)
+        assert!(n.up_seconds <= 6.0 + 2.0 + 1e-9, "{}: {}", n.name, n.up_seconds);
+    }
+    // the ledger and the per-job fates describe the same population
+    let completed = res.outcomes.iter().filter(|o| o.fate == JobFate::Completed).count() as u64;
+    let lost = res.outcomes.iter().filter(|o| o.fate == JobFate::Lost).count() as u64;
+    let served: u64 = cl.nodes.iter().map(|n| n.served).sum();
+    let node_lost: u64 = cl.nodes.iter().map(|n| n.lost).sum();
+    let class_lost: u64 = cl.classes.iter().map(|c| c.lost).sum();
+    assert_eq!(served, completed);
+    assert_eq!(node_lost, lost);
+    assert_eq!(class_lost, lost);
+    assert_eq!(res.report.n_lost, lost);
+    let node_redisp: u64 = cl.nodes.iter().map(|n| n.redispatched).sum();
+    let class_redisp: u64 = cl.classes.iter().map(|c| c.redispatched).sum();
+    assert_eq!(node_redisp, class_redisp);
+    assert!(
+        node_redisp + node_lost > 0,
+        "frequent failures under load evicted nothing"
+    );
+    assert!(cl.total_dollars() > 0.0 && cl.total_joules() > 0.0);
+    assert!(cl.capacity_per_dollar(res.report.n_satisfied).is_finite());
+}
+
+#[test]
+fn queue_depth_policy_releases_idle_capacity() {
+    // Light load (4 UEs over 2 nodes) with a queue-depth policy: the
+    // autoscaler must drain the high-index node and keep node 0 warm,
+    // so node 1 accrues strictly less powered time and cost.
+    let res = ScenarioBuilder::new()
+        .scheme(SchemeConfig::icc())
+        .horizon(6.0)
+        .warmup(0.0)
+        .seed(3)
+        .n_ues(4)
+        .workload(WorkloadClass::chat())
+        .node(gpu(), 1)
+        .node(gpu(), 1)
+        .cluster(ClusterSpec {
+            policy: AutoscalerKind::QueueDepth { high: 8, low: 1 },
+            min_nodes: 1,
+            ..Default::default()
+        })
+        .build()
+        .run();
+    let cl = &res.report.cluster;
+    assert_eq!(cl.nodes.len(), 2);
+    assert!(
+        cl.nodes[1].up_seconds < cl.nodes[0].up_seconds,
+        "idle node 1 was never released: {} vs {}",
+        cl.nodes[1].up_seconds,
+        cl.nodes[0].up_seconds
+    );
+    assert!(cl.nodes[1].dollars < cl.nodes[0].dollars);
+    // jobs still complete on the surviving capacity
+    assert!(res.outcomes.iter().any(|o| o.fate == JobFate::Completed));
+    assert_eq!(res.report.n_lost, 0, "scaling down must drain, not kill, jobs");
+}
+
+#[test]
+fn cluster_section_round_trips_through_json() {
+    let res = churned(11, 1);
+    let v = Value::parse(&res.report.to_json()).expect("report JSON must parse");
+    assert_eq!(v.get("n_lost").unwrap().as_f64().unwrap() as u64, res.report.n_lost);
+    let cl = v.get("cluster").expect("cluster section missing");
+    let want = &res.report.cluster;
+    let dollars = cl.get("total_dollars").unwrap().as_f64().unwrap();
+    assert!((dollars - want.total_dollars()).abs() < 1e-9);
+    let joules = cl.get("total_joules").unwrap().as_f64().unwrap();
+    assert!((joules - want.total_joules()).abs() < 1e-6 * want.total_joules().max(1.0));
+    let nodes = cl.get("nodes").unwrap().as_arr().unwrap();
+    assert_eq!(nodes.len(), want.nodes.len());
+    for (slot, nr) in nodes.iter().zip(&want.nodes) {
+        assert_eq!(slot.get("name").unwrap().as_str().unwrap(), nr.name);
+        assert_eq!(slot.get("served").unwrap().as_f64().unwrap() as u64, nr.served);
+        assert_eq!(slot.get("failures").unwrap().as_f64().unwrap() as u64, nr.failures);
+    }
+    let classes = cl.get("classes").unwrap().as_arr().unwrap();
+    assert_eq!(classes.len(), want.classes.len());
+}

@@ -22,8 +22,8 @@ use icc6g::config::{SchemeConfig, SimConfig};
 use icc6g::coordinator::sweep_arrival_rates_threaded;
 use icc6g::llm::GpuSpec;
 use icc6g::scenario::{
-    CellSpec, HandoverSpec, MobilitySpec, RoutingPolicy, ScenarioBuilder, TopologySpec,
-    WorkloadClass,
+    CellSpec, CellSync, HandoverSpec, MobilitySpec, RoutingPolicy, ScenarioBuilder,
+    TopologySpec, WorkloadClass,
 };
 use icc6g::sim::Sls;
 
@@ -141,6 +141,70 @@ fn main() {
         )
     };
 
+    // Conservative-PDES rows: the coupled-radio pipeline sharded over
+    // 16 and 64 hex cells with mobility + handover, stepped on all
+    // cores under the frontier scheduler vs the legacy per-slot
+    // barrier pool. Both protocols are bit-identical to serial, so
+    // their event counts must agree — asserted here, gated in CI via
+    // the `scale/pdes/...` baseline floors.
+    let pdes_json = {
+        let mut js = String::new();
+        for (n_cells, ues_per_cell, horizon) in [(16usize, 32u32, 2.0f64), (64, 8, 1.0)] {
+            let run = |sync: CellSync| {
+                let n_ues_total = n_cells as u32 * ues_per_cell;
+                let mut b = ScenarioBuilder::new()
+                    .scheme(bench_scheme())
+                    .horizon(horizon)
+                    .warmup(0.2)
+                    .seed(1)
+                    .threads(0)
+                    .cell_sync(sync)
+                    .routing(RoutingPolicy::CellAffinity { spill_queue: 8 })
+                    .workload(
+                        WorkloadClass::translation().with_rate(20.0 / n_ues_total as f64),
+                    )
+                    .topology(TopologySpec::hex(400.0))
+                    .mobility(MobilitySpec::fixed(30.0))
+                    .handover(HandoverSpec::default())
+                    .node(GpuSpec::gh200_nvl2().scaled(4.0), 2);
+                for _ in 0..n_cells {
+                    b = b.cell(CellSpec::new(ues_per_cell));
+                }
+                b.build().run()
+            };
+            let mut events = [0u64; 2];
+            for (i, (sync, label)) in
+                [(CellSync::Frontier, "frontier"), (CellSync::Barrier, "barrier")]
+                    .into_iter()
+                    .enumerate()
+            {
+                let _ = run(sync); // warmup
+                let t0 = Instant::now();
+                let res = run(sync);
+                let wall = t0.elapsed().as_secs_f64();
+                let eps = res.events as f64 / wall.max(1e-12);
+                events[i] = res.events;
+                println!(
+                    "pdes {label:>8}  {n_cells:>3} cells x {ues_per_cell:>3} UEs  \
+                     {eps:>12.0} ev/s ({} jobs)",
+                    res.report.n_jobs
+                );
+                let _ = write!(
+                    js,
+                    ",\n  {{\"name\": \"pdes\", \"cells\": {n_cells}, \"sync\": \"{label}\", \
+                     \"events\": {}, \"jobs\": {}, \"wall_s\": {wall:.4}, \
+                     \"events_per_sec\": {eps:.1}}}",
+                    res.events, res.report.n_jobs,
+                );
+            }
+            assert_eq!(
+                events[0], events[1],
+                "frontier and barrier diverged at {n_cells} cells"
+            );
+        }
+        js
+    };
+
     // Parallel sweep harness on the same fixed-load workload.
     let base = scale_cfg(1_000, false);
     let scheme = bench_scheme();
@@ -180,6 +244,7 @@ fn main() {
         );
     }
     js.push_str(&coupled_json);
+    js.push_str(&pdes_json);
     js.push_str(&sweep_json);
     js.push_str("\n]\n");
     match std::fs::write("BENCH_scale.json", &js) {

@@ -16,17 +16,50 @@
 //!
 //! All buffer mutations must go through bank methods (`push_job_sdu`,
 //! `push_bg_sdu`, `drain_served`) so the index can never go stale;
-//! [`UeBank::ue_mut`] hands out the UE for scheduler state (HARQ, PF,
-//! SR) that does not move bytes.
+//! [`UeBank::ue_mut`] hands out the UE for scheduler state (HARQ)
+//! that does not move bytes.
+//!
+//! The scheduler's per-slot **hot fields** — PF average and lazy-decay
+//! watermark, HARQ block slot, grant-ready slot, cached per-PRB rx
+//! power — live in struct-of-arrays lanes parallel to `ues` (DESIGN.md
+//! §12): the batched slot-SINR pass and the candidate filter read
+//! contiguous memory instead of striding across `UeMac` structs. Lane
+//! `i` always belongs to UE `i`; `take_ue`/`push_ue` carry the lanes
+//! with the UE as a [`UeHot`] record so handover state-carry is exact.
 
+use crate::phy::link::{rx_power_prb_dbm, PowerControl};
 use crate::rng::Rng;
 
 use super::rlc::{Sdu, SduDelivered};
-use super::scheduler::UeMac;
+use super::scheduler::{UeMac, METRIC_PRBS};
 
 const NONE: u32 = u32::MAX;
 
-/// The UE population of one cell plus its backlog index.
+/// The scheduler hot state of one UE, detached from its bank lanes for
+/// handover migration ([`UeBank::take_ue`] → [`UeBank::push_ue`]). The
+/// rx-power cache is not carried: the serving carrier changes, so the
+/// target bank re-derives it on first touch.
+#[derive(Debug, Clone, Copy)]
+pub struct UeHot {
+    /// PF throughput EWMA (bytes/slot), updated through
+    /// `pf_next_slot - 1`.
+    pub avg_thpt: f64,
+    /// First slot whose PF update has not been folded into `avg_thpt`.
+    pub pf_next_slot: u64,
+    /// Slot index before which the UE cannot be scheduled (HARQ RTT).
+    pub blocked_until: u64,
+    /// Slot of the first grant opportunity after the SR cycle.
+    pub grant_ready_slot: u64,
+}
+
+impl Default for UeHot {
+    fn default() -> Self {
+        Self { avg_thpt: 1.0, pf_next_slot: 0, blocked_until: 0, grant_ready_slot: 0 }
+    }
+}
+
+/// The UE population of one cell plus its backlog index and the
+/// scheduler's SoA hot-field lanes.
 #[derive(Debug)]
 pub struct UeBank {
     ues: Vec<UeMac>,
@@ -36,16 +69,41 @@ pub struct UeBank {
     pos: Vec<u32>,
     /// Total buffered bytes across the cell.
     total_backlog: u64,
+    /// PF throughput EWMA (bytes/slot), lazily decayed: lane `i`
+    /// reflects updates through slot `pf_next_slot[i] - 1`; missed
+    /// zero-traffic slots are applied in closed form on touch (see
+    /// [`UeBank::pf_avg`]), so idle UEs cost nothing per slot.
+    avg_thpt: Vec<f64>,
+    /// First slot whose PF update (decay or goodput sample) has not
+    /// yet been folded into `avg_thpt`.
+    pf_next_slot: Vec<u64>,
+    /// Slot index before which UE `i` cannot be scheduled (HARQ RTT).
+    blocked_until: Vec<u64>,
+    /// Slot of the first grant opportunity after the SR cycle.
+    grant_ready_slot: Vec<u64>,
+    /// Cached `rx_power_prb_dbm(coupling_loss, pc, METRIC_PRBS)` — the
+    /// UE-dependent half of the per-candidate SINR. The log10/powf
+    /// work behind it is paid once per position change instead of once
+    /// per candidate per slot.
+    rx8: Vec<f64>,
+    rx8_valid: Vec<bool>,
 }
 
 impl UeBank {
     /// Build the bank (and its index) from an existing population —
     /// UEs may already hold buffered SDUs.
     pub fn new(ues: Vec<UeMac>) -> Self {
+        let n = ues.len();
         let mut bank = Self {
-            pos: vec![NONE; ues.len()],
+            pos: vec![NONE; n],
             backlogged: Vec::new(),
             total_backlog: 0,
+            avg_thpt: vec![1.0; n],
+            pf_next_slot: vec![0; n],
+            blocked_until: vec![0; n],
+            grant_ready_slot: vec![0; n],
+            rx8: vec![0.0; n],
+            rx8_valid: vec![false; n],
             ues,
         };
         for i in 0..bank.ues.len() {
@@ -93,10 +151,104 @@ impl UeBank {
         self.total_backlog
     }
 
-    /// Record a data arrival (SR bookkeeping; see
-    /// [`UeMac::note_arrival`]).
+    /// Record that data arrived at `arrival_slot` (the slot whose
+    /// scheduling decision could first see it). If the UE had nothing
+    /// buffered, it must first fire an SR at its next opportunity
+    /// (`period` = `MacConfig::effective_sr_period` for this cell)
+    /// and wait `proc_slots` for the gNB to issue the grant.
     pub fn note_arrival(&mut self, i: usize, arrival_slot: u64, period: u64, proc_slots: u64) {
-        self.ues[i].note_arrival(arrival_slot, period, proc_slots);
+        if self.ues[i].buffered_bytes() == 0 && period > 0 {
+            let phase = self.ues[i].sr_phase;
+            let next_sr = if arrival_slot % period == phase % period {
+                arrival_slot
+            } else {
+                let offset = (phase % period + period - arrival_slot % period) % period;
+                arrival_slot + offset
+            };
+            self.grant_ready_slot[i] = self.grant_ready_slot[i].max(next_sr + proc_slots);
+        }
+    }
+
+    /// Job-aware expedited grant (ICC packet prioritization, paper
+    /// §IV-B item 1): because job characteristics are transparent to
+    /// the communication system, a translation job's arrival uses a
+    /// dedicated high-priority SR resource — only the gNB processing
+    /// delay applies, the shared SR period is bypassed. This can only
+    /// *advance* the grant, never delay it.
+    pub fn note_job_arrival_expedited(&mut self, i: usize, arrival_slot: u64, proc_slots: u64) {
+        self.grant_ready_slot[i] = self.grant_ready_slot[i].min(arrival_slot + proc_slots);
+    }
+
+    /// Can UE `i` receive a grant in `slot`?
+    pub fn grant_ready(&self, i: usize, slot: u64) -> bool {
+        self.grant_ready_slot[i] <= slot && self.blocked_until[i] <= slot
+    }
+
+    /// A3 handover interruption: the UE cannot be granted in its new
+    /// cell until `slot + interruption_slots` (RACH + path switch).
+    pub fn handover_interrupt(&mut self, i: usize, slot: u64, interruption_slots: u64) {
+        self.grant_ready_slot[i] = self.grant_ready_slot[i].max(slot + interruption_slots);
+    }
+
+    /// HARQ retransmission hold: no grant for UE `i` before `until`.
+    pub(crate) fn harq_block(&mut self, i: usize, until: u64) {
+        self.blocked_until[i] = until;
+    }
+
+    /// PF average through slot `slot - 1`: applies the closed-form
+    /// catch-up `avg · decay^Δ` for the Δ zero-traffic slots since the
+    /// last update (`decay = 1 − 1/pf_window`). Equivalent to the
+    /// eager per-slot EWMA decay `avg += (0 − avg)/W` the dense
+    /// scheduler used to run over the whole population, but paid only
+    /// by UEs that are actually touched.
+    pub(crate) fn pf_avg(&mut self, i: usize, slot: u64, decay: f64) -> f64 {
+        let missed = slot.saturating_sub(self.pf_next_slot[i]);
+        if missed > 0 {
+            // powi saturates the exponent; past ~2^31 missed slots the
+            // factor has long underflowed to 0 anyway.
+            self.avg_thpt[i] *= decay.powi(missed.min(i32::MAX as u64) as i32);
+            self.pf_next_slot[i] = slot;
+        }
+        self.avg_thpt[i]
+    }
+
+    /// Fold the slot-`slot` goodput sample into the PF EWMA (the
+    /// served-UE update; a HARQ-failed grant samples goodput 0).
+    pub(crate) fn pf_note_served(&mut self, i: usize, slot: u64, goodput: f64, window: f64) {
+        self.avg_thpt[i] += (goodput - self.avg_thpt[i]) / window;
+        self.pf_next_slot[i] = slot + 1;
+    }
+
+    /// Re-derive UE `i`'s rx-power lane from its serving link if stale
+    /// (no-op once warm — identical bits to the scalar recomputation).
+    #[inline]
+    pub(crate) fn refresh_rx8(&mut self, i: usize, pc: &PowerControl, freq_hz: f64) {
+        if !self.rx8_valid[i] {
+            self.rx8[i] =
+                rx_power_prb_dbm(self.ues[i].link.coupling_loss_db(freq_hz), pc, METRIC_PRBS);
+            self.rx8_valid[i] = true;
+        }
+    }
+
+    /// UE `i`'s cached per-PRB received power (dBm) at the metric
+    /// grant size. Must be fresh (see [`UeBank::refresh_rx8`]).
+    #[inline]
+    pub(crate) fn rx8_dbm(&self, i: usize) -> f64 {
+        debug_assert!(self.rx8_valid[i]);
+        self.rx8[i]
+    }
+
+    /// Refresh-and-read convenience for scalar callers.
+    #[inline]
+    pub(crate) fn rx_power8_dbm(&mut self, i: usize, pc: &PowerControl, freq_hz: f64) -> f64 {
+        self.refresh_rx8(i, pc, freq_hz);
+        self.rx8[i]
+    }
+
+    /// Drop UE `i`'s cached link budget (call after mutating its
+    /// [`UeMac::link`] — mobility, handover).
+    pub fn invalidate_link_cache(&mut self, i: usize) {
+        self.rx8_valid[i] = false;
     }
 
     /// Push a job SDU and index the UE as backlogged.
@@ -142,14 +294,14 @@ impl UeBank {
         out.clear();
         if dense {
             for (i, ue) in self.ues.iter().enumerate() {
-                if ue.buffered_bytes() > 0 && ue.grant_ready(slot) {
+                if ue.buffered_bytes() > 0 && self.grant_ready(i, slot) {
                     out.push(i as u32);
                 }
             }
         } else {
             for &i in &self.backlogged {
                 debug_assert!(self.ues[i as usize].buffered_bytes() > 0);
-                if self.ues[i as usize].grant_ready(slot) {
+                if self.grant_ready(i as usize, slot) {
                     out.push(i);
                 }
             }
@@ -161,36 +313,56 @@ impl UeBank {
     }
 
     /// Remove UE `i` from the bank (A3 handover), returning its MAC
-    /// state with buffers, HARQ and PF state intact. The bank's last
-    /// UE swaps into slot `i` — the caller must re-map any external
-    /// reference to it (its identity is its [`UeMac::tag`]). O(1).
-    pub fn take_ue(&mut self, i: usize) -> UeMac {
+    /// state with buffers and HARQ intact plus its hot lanes (PF
+    /// average, HARQ block, grant-ready slot) as a [`UeHot`]. The
+    /// bank's last UE swaps into slot `i` — the caller must re-map any
+    /// external reference to it (its identity is its [`UeMac::tag`]).
+    /// O(1).
+    pub fn take_ue(&mut self, i: usize) -> (UeMac, UeHot) {
         let bytes = self.ues[i].buffered_bytes();
         if self.pos[i] != NONE {
             self.remove(i);
             self.total_backlog -= bytes;
         }
-        // Both arrays swap-remove at the same index, so the displaced
+        let hot = UeHot {
+            avg_thpt: self.avg_thpt[i],
+            pf_next_slot: self.pf_next_slot[i],
+            blocked_until: self.blocked_until[i],
+            grant_ready_slot: self.grant_ready_slot[i],
+        };
+        // All arrays swap-remove at the same index, so the displaced
         // (formerly-last) UE lands at `i` in each.
         self.pos.swap_remove(i);
+        self.avg_thpt.swap_remove(i);
+        self.pf_next_slot.swap_remove(i);
+        self.blocked_until.swap_remove(i);
+        self.grant_ready_slot.swap_remove(i);
+        self.rx8.swap_remove(i);
+        self.rx8_valid.swap_remove(i);
         let ue = self.ues.swap_remove(i);
         if i < self.ues.len() && self.pos[i] != NONE {
             // repoint the displaced UE's backlog-index slot
             self.backlogged[self.pos[i] as usize] = i as u32;
         }
-        ue
+        (ue, hot)
     }
 
     /// Admit a migrating UE (A3 handover target side): appends it to
-    /// the population, indexes any carried backlog, and invalidates
-    /// its cached link budget (the serving carrier changed). Returns
-    /// the UE's new local index.
-    pub fn push_ue(&mut self, mut ue: UeMac) -> usize {
-        ue.invalidate_link_cache();
+    /// the population, loads its carried hot state into fresh lanes,
+    /// indexes any carried backlog, and leaves the rx-power cache
+    /// stale (the serving carrier changed — re-derived on first
+    /// touch). Returns the UE's new local index.
+    pub fn push_ue(&mut self, ue: UeMac, hot: UeHot) -> usize {
         let i = self.ues.len();
         let bytes = ue.buffered_bytes();
         self.ues.push(ue);
         self.pos.push(NONE);
+        self.avg_thpt.push(hot.avg_thpt);
+        self.pf_next_slot.push(hot.pf_next_slot);
+        self.blocked_until.push(hot.blocked_until);
+        self.grant_ready_slot.push(hot.grant_ready_slot);
+        self.rx8.push(0.0);
+        self.rx8_valid.push(false);
         if bytes > 0 {
             self.pos[i] = self.backlogged.len() as u32;
             self.backlogged.push(i as u32);
@@ -225,6 +397,17 @@ impl UeBank {
 
     /// Full index-consistency audit (test/debug use; O(population)).
     pub fn check_invariants(&self) {
+        let n = self.ues.len();
+        assert!(
+            self.pos.len() == n
+                && self.avg_thpt.len() == n
+                && self.pf_next_slot.len() == n
+                && self.blocked_until.len() == n
+                && self.grant_ready_slot.len() == n
+                && self.rx8.len() == n
+                && self.rx8_valid.len() == n,
+            "hot-field lanes out of step with the population"
+        );
         let mut total = 0u64;
         for (i, ue) in self.ues.iter().enumerate() {
             let bytes = ue.buffered_bytes();
@@ -391,12 +574,12 @@ mod tests {
                         if !src.is_empty() {
                             let i = script.below(src.len() as u64) as usize;
                             let carried = src.ue(i).buffered_bytes();
-                            let ue = src.take_ue(i);
+                            let (ue, hot) = src.take_ue(i);
                             crate::prop_assert!(
                                 ue.buffered_bytes() == carried,
                                 "migration changed the carried backlog"
                             );
-                            dst.push_ue(ue);
+                            dst.push_ue(ue, hot);
                         }
                     }
                 }
@@ -424,27 +607,32 @@ mod tests {
             b.push_bg_sdu(i, sdu(SduKind::Background, 10 * (i as u32 + 1)));
         }
         let total = b.total_backlog_bytes();
-        // removing UE 1 swaps UE 4 into slot 1
-        let taken = b.take_ue(1);
+        // removing UE 1 swaps UE 4 into slot 1; PF state rides along
+        b.pf_note_served(1, 3, 640.0, 100.0);
+        let (taken, hot) = b.take_ue(1);
         assert_eq!(taken.buffered_bytes(), 20);
+        assert_eq!(hot.pf_next_slot, 4, "hot lanes must be carried");
         assert_eq!(b.len(), 4);
         assert_eq!(b.total_backlog_bytes(), total - 20);
         assert_eq!(b.ue(1).buffered_bytes(), 50, "displaced UE must land at slot 1");
         b.check_invariants();
-        // re-admit into another bank conserves bytes
+        // re-admit into another bank conserves bytes and hot state
         let mut other = bank(2);
-        let i = other.push_ue(taken);
+        let i = other.push_ue(taken, hot);
         assert_eq!(i, 2);
         assert_eq!(other.total_backlog_bytes(), 20);
+        let decay = 1.0 - 1.0 / 100.0;
+        assert_eq!(other.pf_avg(2, 4, decay).to_bits(), hot.avg_thpt.to_bits());
         other.check_invariants();
         // taking the last UE is the trivial case
         let last = b.len() - 1;
         b.take_ue(last);
         b.check_invariants();
         // empty-buffer UEs migrate without touching the index
-        let idle = UeBank::new(drop_ues(&mut Rng::new(4), 1, 35.0, 300.0)).take_ue(0);
+        let (idle, idle_hot) =
+            UeBank::new(drop_ues(&mut Rng::new(4), 1, 35.0, 300.0)).take_ue(0);
         assert_eq!(idle.buffered_bytes(), 0);
-        let j = other.push_ue(idle);
+        let j = other.push_ue(idle, idle_hot);
         assert_eq!(j, 3);
         other.check_invariants();
         assert_eq!(other.total_backlog_bytes(), 20);

@@ -8,7 +8,7 @@ pub mod harq;
 pub mod rlc;
 pub mod scheduler;
 
-pub use bank::{drop_ues, UeBank};
+pub use bank::{drop_ues, UeBank, UeHot};
 pub use harq::HarqConfig;
 pub use rlc::{RlcBuffer, Sdu, SduDelivered, SduKind};
 pub use scheduler::{

@@ -9,7 +9,8 @@
 
 use crate::phy::channel::{fast_fading_gain, LargeScale};
 use crate::phy::link::{
-    noise_floor_prb_dbm, rx_power_prb_dbm, sinr_to_cqi, tbs_bytes, PowerControl, Receiver,
+    noise_floor_prb_dbm, rx_power_prb_dbm, sinr_to_cqi, sinr_to_cqi_batch, tbs_bytes,
+    PowerControl, Receiver,
 };
 use crate::phy::numerology::Carrier;
 use crate::rng::Rng;
@@ -89,14 +90,17 @@ impl Default for MacConfig {
 
 /// PRB assumption of the per-candidate link-quality metric (the CQI
 /// the scheduler ranks with is priced at this grant size).
-const METRIC_PRBS: u32 = 8;
+pub(crate) const METRIC_PRBS: u32 = 8;
 
-/// Per-UE MAC state.
+/// Per-UE MAC state. The per-slot hot fields (PF average, HARQ block,
+/// grant-ready slot, rx-power cache) live in [`UeBank`] SoA lanes, not
+/// here — this struct holds the cold remainder: buffers, identity,
+/// HARQ attempt counter, SR phase.
 #[derive(Debug)]
 pub struct UeMac {
     /// Serving-cell large-scale channel. Anything that mutates this
     /// (mobility, handover) must call
-    /// [`UeMac::invalidate_link_cache`] so the cached link budget is
+    /// [`UeBank::invalidate_link_cache`] so the cached link budget is
     /// recomputed.
     pub link: LargeScale,
     /// Stable identity across handovers (the engine's global UE id;
@@ -106,30 +110,12 @@ pub struct UeMac {
     /// the backlog index stays in sync.
     pub(crate) job_buf: RlcBuffer,
     pub(crate) bg_buf: RlcBuffer,
-    /// PF throughput EWMA (bytes/slot). Lazily decayed: the stored
-    /// value reflects updates through slot `pf_next_slot - 1`; missed
-    /// zero-traffic slots are applied in closed form on touch (see
-    /// [`UeMac::pf_avg`]), so idle UEs cost nothing per slot.
-    avg_thpt: f64,
-    /// First slot whose PF update (decay or goodput sample) has not
-    /// yet been folded into `avg_thpt`.
-    pf_next_slot: u64,
     /// HARQ attempt counter of the pending TB (0 = fresh data).
     harq_attempt: u8,
-    /// Slot index before which this UE cannot be scheduled (HARQ RTT).
-    blocked_until: u64,
-    /// Slot of the first grant opportunity after the SR cycle.
-    grant_ready_slot: u64,
     /// Deterministic SR phase of this UE (index % period).
-    sr_phase: u64,
+    pub(crate) sr_phase: u64,
     /// Round-robin recency marker.
     last_served_slot: u64,
-    /// Cached `rx_power_prb_dbm(coupling_loss, pc, METRIC_PRBS)` — the
-    /// UE-dependent half of the per-candidate SINR. The log10/powf
-    /// work behind it is paid once per position change instead of once
-    /// per candidate per slot.
-    rx8_cache: f64,
-    rx8_valid: bool,
 }
 
 impl UeMac {
@@ -139,78 +125,16 @@ impl UeMac {
             tag: 0,
             job_buf: RlcBuffer::new(),
             bg_buf: RlcBuffer::new(),
-            avg_thpt: 1.0,
-            pf_next_slot: 0,
             harq_attempt: 0,
-            blocked_until: 0,
-            grant_ready_slot: 0,
             sr_phase: 0,
             last_served_slot: 0,
-            rx8_cache: 0.0,
-            rx8_valid: false,
         }
-    }
-
-    /// Cached per-PRB received power (dBm) at the metric grant size —
-    /// recomputed from the serving link on the first touch after a
-    /// move/handover, identical bits to the scalar recomputation.
-    #[inline]
-    pub(crate) fn rx_power8_dbm(&mut self, pc: &PowerControl, freq_hz: f64) -> f64 {
-        if !self.rx8_valid {
-            self.rx8_cache =
-                rx_power_prb_dbm(self.link.coupling_loss_db(freq_hz), pc, METRIC_PRBS);
-            self.rx8_valid = true;
-        }
-        self.rx8_cache
-    }
-
-    /// Drop the cached link budget (call after mutating `link`).
-    pub fn invalidate_link_cache(&mut self) {
-        self.rx8_valid = false;
-    }
-
-    /// A3 handover interruption: the UE cannot be granted in its new
-    /// cell until `slot + interruption_slots` (RACH + path switch).
-    pub fn handover_interrupt(&mut self, slot: u64, interruption_slots: u64) {
-        self.grant_ready_slot = self.grant_ready_slot.max(slot + interruption_slots);
     }
 
     /// Set the UE's deterministic SR phase (sim uses UE index % period).
     pub fn with_sr_phase(mut self, phase: u64) -> Self {
         self.sr_phase = phase;
         self
-    }
-
-    /// Record that data arrived at `arrival_slot` (the slot whose
-    /// scheduling decision could first see it). If the UE had nothing
-    /// buffered, it must first fire an SR at its next opportunity
-    /// (`period` = [`MacConfig::effective_sr_period`] for this cell)
-    /// and wait `proc_slots` for the gNB to issue the grant.
-    pub fn note_arrival(&mut self, arrival_slot: u64, period: u64, proc_slots: u64) {
-        if self.buffered_bytes() == 0 && period > 0 {
-            let next_sr = if arrival_slot % period == self.sr_phase % period {
-                arrival_slot
-            } else {
-                let offset = (self.sr_phase % period + period - arrival_slot % period) % period;
-                arrival_slot + offset
-            };
-            self.grant_ready_slot = self.grant_ready_slot.max(next_sr + proc_slots);
-        }
-    }
-
-    /// Job-aware expedited grant (ICC packet prioritization, paper
-    /// §IV-B item 1): because job characteristics are transparent to
-    /// the communication system, a translation job's arrival uses a
-    /// dedicated high-priority SR resource — only the gNB processing
-    /// delay applies, the shared SR period is bypassed. This can only
-    /// *advance* the grant, never delay it.
-    pub fn note_job_arrival_expedited(&mut self, arrival_slot: u64, proc_slots: u64) {
-        self.grant_ready_slot = self.grant_ready_slot.min(arrival_slot + proc_slots);
-    }
-
-    /// Can this UE receive a grant in `slot`?
-    pub fn grant_ready(&self, slot: u64) -> bool {
-        self.grant_ready_slot <= slot && self.blocked_until <= slot
     }
 
     /// Crate-private: byte-moving pushes must go through
@@ -233,30 +157,6 @@ impl UeMac {
 
     pub fn has_job_bytes(&self) -> bool {
         !self.job_buf.is_empty()
-    }
-
-    /// PF average through slot `slot - 1`: applies the closed-form
-    /// catch-up `avg · decay^Δ` for the Δ zero-traffic slots since the
-    /// last update (`decay = 1 − 1/pf_window`). Equivalent to the
-    /// eager per-slot EWMA decay `avg += (0 − avg)/W` the dense
-    /// scheduler used to run over the whole population, but paid only
-    /// by UEs that are actually touched.
-    pub(crate) fn pf_avg(&mut self, slot: u64, decay: f64) -> f64 {
-        let missed = slot.saturating_sub(self.pf_next_slot);
-        if missed > 0 {
-            // powi saturates the exponent; past ~2^31 missed slots the
-            // factor has long underflowed to 0 anyway.
-            self.avg_thpt *= decay.powi(missed.min(i32::MAX as u64) as i32);
-            self.pf_next_slot = slot;
-        }
-        self.avg_thpt
-    }
-
-    /// Fold the slot-`slot` goodput sample into the PF EWMA (the
-    /// served-UE update; a HARQ-failed grant samples goodput 0).
-    pub(crate) fn pf_note_served(&mut self, slot: u64, goodput: f64, window: f64) {
-        self.avg_thpt += (goodput - self.avg_thpt) / window;
-        self.pf_next_slot = slot + 1;
     }
 
     /// Drain `budget` bytes into `out`. With `job_first`, job SDUs
@@ -327,6 +227,12 @@ pub struct SlotWorkspace {
     /// candidate consumes exactly the draw the scalar path would give
     /// it.
     fade_db: Vec<f64>,
+    /// Per-candidate SINR (dB) assembled from the bank's contiguous
+    /// rx-power lane, the slot noise floor and `fade_db` — the input
+    /// array of the chunked CQI kernel.
+    sinr_db: Vec<f64>,
+    /// Per-candidate CQI from `sinr_to_cqi_batch` over `sinr_db`.
+    cqi: Vec<u8>,
     /// Per-CQI single-PRB transport-block bytes, hoisted out of the
     /// per-candidate PF metric (filled lazily from the scheduler's
     /// carrier — a workspace is paired with one scheduler/cell).
@@ -349,6 +255,8 @@ impl SlotWorkspace {
         self.cand.clear();
         self.keyed.clear();
         self.fade_db.clear();
+        self.sinr_db.clear();
+        self.cqi.clear();
         // tbs1 is carrier-derived, not per-slot: it survives clears.
     }
 }
@@ -448,7 +356,7 @@ impl UlScheduler {
                 let metric = match self.cfg.policy {
                     SchedulingPolicy::ProportionalFair => {
                         let inst = tbs_bytes(&self.carrier, cqi, 1) as f64;
-                        inst / bank.ue_mut(i).pf_avg(slot, decay).max(1e-9)
+                        inst / bank.pf_avg(i, slot, decay).max(1e-9)
                     }
                     // older service time → larger metric
                     SchedulingPolicy::RoundRobin => {
@@ -470,16 +378,26 @@ impl UlScheduler {
                     ws.tbs1.push(tbs_bytes(&self.carrier, cqi, 1) as f64);
                 }
             }
+            // Re-derive any stale rx-power lanes (no-op in steady
+            // state), then assemble the candidates' SINR array from
+            // the contiguous lane and map it through the chunked
+            // branchless CQI kernel. The float expression per lane is
+            // `(rx8 − noise) + fade` — the same association the
+            // scalar path evaluates, so the split cannot drift a bit.
+            for &iu in &ws.cand {
+                bank.refresh_rx8(iu as usize, &self.pc, self.carrier.freq_hz);
+            }
+            for (ci, &iu) in ws.cand.iter().enumerate() {
+                ws.sinr_db.push(bank.rx8_dbm(iu as usize) - noise + ws.fade_db[ci]);
+            }
+            sinr_to_cqi_batch(&ws.sinr_db, &mut ws.cqi);
             for (ci, &iu) in ws.cand.iter().enumerate() {
                 let i = iu as usize;
                 let has_job = self.cfg.job_priority && bank.ue(i).has_job_bytes();
-                let mean =
-                    bank.ue_mut(i).rx_power8_dbm(&self.pc, self.carrier.freq_hz) - noise;
-                let cqi = sinr_to_cqi(mean + ws.fade_db[ci]);
+                let cqi = ws.cqi[ci];
                 let metric = match self.cfg.policy {
                     SchedulingPolicy::ProportionalFair => {
-                        ws.tbs1[cqi as usize]
-                            / bank.ue_mut(i).pf_avg(slot, decay).max(1e-9)
+                        ws.tbs1[cqi as usize] / bank.pf_avg(i, slot, decay).max(1e-9)
                     }
                     SchedulingPolicy::RoundRobin => {
                         -(bank.ue(i).last_served_slot as f64)
@@ -523,18 +441,16 @@ impl UlScheduler {
                 bank.ue_mut(i).harq_attempt = 0;
                 bank.drain_served(i, tb, self.cfg.job_priority, &mut ws.delivered);
             } else {
-                let ue = bank.ue_mut(i);
-                ue.harq_attempt = attempt.saturating_add(1);
-                ue.blocked_until = slot + self.cfg.harq.rtt_slots as u64;
+                bank.ue_mut(i).harq_attempt = attempt.saturating_add(1);
+                bank.harq_block(i, slot + self.cfg.harq.rtt_slots as u64);
             }
             let d_end = ws.delivered.len() as u32;
             let goodput: u32 = if ok { tb.min(want) } else { 0 };
             // PF EWMA update for the served UE (goodput 0 on HARQ
             // failure — the same zero-sample the decay would apply).
-            let ue = bank.ue_mut(i);
-            ue.last_served_slot = slot;
-            ue.pf_avg(slot, decay);
-            ue.pf_note_served(slot, goodput as f64, self.cfg.pf_window);
+            bank.ue_mut(i).last_served_slot = slot;
+            bank.pf_avg(i, slot, decay);
+            bank.pf_note_served(i, slot, goodput as f64, self.cfg.pf_window);
             ws.grants.push(GrantResult {
                 ue: i,
                 n_prb,
@@ -739,17 +655,17 @@ mod tests {
 
     #[test]
     fn lazy_pf_decay_matches_closed_form() {
-        let mut ue = UeMac::new(ls(100.0));
+        let mut bank = bank_of(vec![UeMac::new(ls(100.0))]);
         let decay = 1.0 - 1.0 / 100.0;
         // served at slot 0 with goodput 500
-        ue.pf_avg(0, decay);
-        ue.pf_note_served(0, 500.0, 100.0);
+        bank.pf_avg(0, 0, decay);
+        bank.pf_note_served(0, 0, 500.0, 100.0);
         let after_serve = 1.0 + (500.0 - 1.0) / 100.0;
         // touched again at slot 11 → 10 idle slots (1..=10) decayed
-        let avg = ue.pf_avg(11, decay);
+        let avg = bank.pf_avg(0, 11, decay);
         assert!((avg - after_serve * decay.powi(10)).abs() < 1e-12, "avg = {avg}");
         // idempotent within the slot
-        assert_eq!(avg.to_bits(), ue.pf_avg(11, decay).to_bits());
+        assert_eq!(avg.to_bits(), bank.pf_avg(0, 11, decay).to_bits());
     }
 
     /// One scripted cell driven slot-by-slot: arrivals, HARQ losses,
@@ -800,7 +716,7 @@ mod tests {
                             bank.note_arrival(ue, slot, period, proc);
                             if job {
                                 if expedite {
-                                    bank.ue_mut(ue).note_job_arrival_expedited(slot, proc);
+                                    bank.note_job_arrival_expedited(ue, slot, proc);
                                 }
                                 bank.push_job_sdu(ue, job_sdu(slot, bytes, t));
                             } else {
@@ -899,17 +815,17 @@ mod tests {
     #[test]
     fn rx_power_cache_invalidation_tracks_link_changes() {
         let pc = PowerControl::default();
-        let mut ue = UeMac::new(ls(120.0));
-        let a = ue.rx_power8_dbm(&pc, 3.7e9);
+        let mut bank = bank_of(vec![UeMac::new(ls(120.0))]);
+        let a = bank.rx_power8_dbm(0, &pc, 3.7e9);
         // cached: same value, bit for bit
-        assert_eq!(a.to_bits(), ue.rx_power8_dbm(&pc, 3.7e9).to_bits());
+        assert_eq!(a.to_bits(), bank.rx_power8_dbm(0, &pc, 3.7e9).to_bits());
         // mutate the link WITH invalidation → fresh value
-        ue.link = ls(260.0);
-        ue.invalidate_link_cache();
-        let b = ue.rx_power8_dbm(&pc, 3.7e9);
+        bank.ue_mut(0).link = ls(260.0);
+        bank.invalidate_link_cache(0);
+        let b = bank.rx_power8_dbm(0, &pc, 3.7e9);
         assert!(b < a, "farther UE must see less received power: {b} vs {a}");
         // matches the scalar recomputation exactly
-        let scalar = rx_power_prb_dbm(ue.link.coupling_loss_db(3.7e9), &pc, 8);
+        let scalar = rx_power_prb_dbm(bank.ue(0).link.coupling_loss_db(3.7e9), &pc, 8);
         assert_eq!(b.to_bits(), scalar.to_bits());
     }
 
@@ -924,7 +840,7 @@ mod tests {
         let s = UlScheduler::new(cfg, Carrier::table1());
         let mut bank = bank_of(vec![UeMac::new(ls(80.0))]);
         bank.push_bg_sdu(0, bg_sdu(500, 0.0));
-        bank.ue_mut(0).handover_interrupt(10, 4);
+        bank.handover_interrupt(0, 10, 4);
         let mut rng = Rng::new(1);
         let mut ws = SlotWorkspace::new();
         for (slot, expect) in [(10, false), (13, false), (14, true)] {

@@ -166,6 +166,35 @@ impl UeGeo {
             l.cl_db = link_loss_db(self.pos, sites[j], freq_hz, l.los, l.shadow_db);
         }
     }
+
+    /// Gudmundson spatially-correlated shadowing: after moving
+    /// `dist_m` meters, each link's shadow fading evolves as the
+    /// exponentially-decorrelated AR(1) process
+    ///
+    /// ```text
+    /// rho = exp(-dist / d_corr)
+    /// shadow' = rho * shadow + sqrt(1 - rho^2) * N(0, sigma)
+    /// ```
+    ///
+    /// with `sigma` the link's own LOS/NLOS shadowing std, so the
+    /// marginal distribution is preserved while long drives forget the
+    /// drop-time draw. One normal draw per link, ascending site order,
+    /// from the UE's own mobility stream — the caller skips the call
+    /// entirely when correlation is disabled, so the default
+    /// configuration consumes exactly the legacy draw sequence. The
+    /// caller refreshes the coupling-loss cache afterwards.
+    pub fn decorrelate_shadowing(&mut self, dist_m: f64, d_corr_m: f64) {
+        debug_assert!(d_corr_m > 0.0, "decorrelation distance must be positive");
+        if dist_m <= 0.0 {
+            return;
+        }
+        let rho = (-dist_m / d_corr_m).exp();
+        let scale = (1.0 - rho * rho).sqrt();
+        for l in &mut self.links {
+            let sigma = if l.los { SHADOW_STD_LOS_DB } else { SHADOW_STD_NLOS_DB };
+            l.shadow_db = rho * l.shadow_db + scale * self.rng.normal(0.0, sigma);
+        }
+    }
 }
 
 /// Geometry state of one cell: the shared site table, which neighbor
@@ -319,6 +348,48 @@ mod tests {
             assert!(!seen.contains(&key), "site {k} collides");
             seen.push(key);
         }
+    }
+
+    #[test]
+    fn gudmundson_decorrelation_limits_are_exact() {
+        use crate::rng::Rng;
+        let mk = || UeGeo {
+            pos: Position { x: 10.0, y: 0.0 },
+            links: vec![
+                LinkState { los: true, shadow_db: 3.0, cl_db: 0.0 },
+                LinkState { los: false, shadow_db: -2.0, cl_db: 0.0 },
+            ],
+            speed: 0.0,
+            heading: (1.0, 0.0),
+            waypoint: Position { x: 10.0, y: 0.0 },
+            rng: Rng::new(5),
+            a3_target: u32::MAX,
+            a3_ticks: 0,
+        };
+        // zero travel: identity, zero draws
+        let mut ue = mk();
+        ue.decorrelate_shadowing(0.0, 50.0);
+        assert_eq!(ue.links[0].shadow_db.to_bits(), 3f64.to_bits());
+        assert_eq!(ue.links[1].shadow_db.to_bits(), (-2f64).to_bits());
+        // a huge hop forgets the old draw entirely (rho ~ 0): the new
+        // value is a fresh N(0, sigma) sample, one per link
+        let mut far = mk();
+        far.decorrelate_shadowing(1e9, 50.0);
+        let mut rng = Rng::new(5);
+        let e0 = rng.normal(0.0, SHADOW_STD_LOS_DB);
+        let e1 = rng.normal(0.0, SHADOW_STD_NLOS_DB);
+        assert!((far.links[0].shadow_db - e0).abs() < 1e-9);
+        assert!((far.links[1].shadow_db - e1).abs() < 1e-9);
+        // short hops stay near the old value and are deterministic
+        let mut a = mk();
+        let mut b = mk();
+        for _ in 0..10 {
+            a.decorrelate_shadowing(1.0, 50.0);
+            b.decorrelate_shadowing(1.0, 50.0);
+        }
+        assert_eq!(a.links[0].shadow_db.to_bits(), b.links[0].shadow_db.to_bits());
+        assert!(a.links[0].shadow_db.is_finite());
+        assert_ne!(a.links[0].shadow_db.to_bits(), 3f64.to_bits());
     }
 
     #[test]

@@ -146,6 +146,41 @@ pub fn sinr_to_cqi(sinr_db: f64) -> u8 {
     cqi
 }
 
+/// Width of the batch CQI kernel's inner chunk.
+const CQI_LANES: usize = 8;
+
+/// Map a whole SINR array (dB) to CQI indices — the batched slot-SINR
+/// kernel. Because the table's thresholds are strictly increasing
+/// (pinned by `cqi_table_monotone`), the scalar scan's "last threshold
+/// passed" equals the *count* of thresholds ≤ the SINR, so each lane
+/// is a branchless sum of 15 compare results: no data-dependent
+/// branches, fixed trip counts, contiguous loads — the shape LLVM
+/// autovectorizes on any target without `std::simd` or intrinsics.
+/// Bit-identical to [`sinr_to_cqi`] per lane, including NaN (compares
+/// false against every threshold → CQI 0 on both paths) and ±∞.
+pub fn sinr_to_cqi_batch(sinr_db: &[f64], out: &mut Vec<u8>) {
+    out.clear();
+    out.resize(sinr_db.len(), 0);
+    let mut chunks = sinr_db.chunks_exact(CQI_LANES);
+    let mut outs = out.chunks_exact_mut(CQI_LANES);
+    for (s, o) in (&mut chunks).zip(&mut outs) {
+        for k in 0..CQI_LANES {
+            let mut cqi = 0u8;
+            for (thr, _) in CQI_TABLE {
+                cqi += (s[k] >= thr) as u8;
+            }
+            o[k] = cqi;
+        }
+    }
+    for (s, o) in chunks.remainder().iter().zip(outs.into_remainder()) {
+        let mut cqi = 0u8;
+        for (thr, _) in CQI_TABLE {
+            cqi += (*s >= thr) as u8;
+        }
+        *o = cqi;
+    }
+}
+
 /// Spectral efficiency (b/s/Hz) for a CQI index (0 → unusable).
 pub fn cqi_efficiency(cqi: u8) -> f64 {
     if cqi == 0 || cqi as usize > CQI_TABLE.len() {
@@ -196,6 +231,34 @@ mod tests {
         assert_eq!(sinr_to_cqi(0.0), 3);
         assert_eq!(sinr_to_cqi(23.0), 15);
         assert_eq!(sinr_to_cqi(100.0), 15);
+    }
+
+    #[test]
+    fn batch_cqi_kernel_matches_scalar_bit_for_bit() {
+        // Dense sweep across the table's range plus every exact
+        // threshold and the non-finite edge cases; lengths straddling
+        // the chunk width exercise both the vector body and the
+        // remainder loop.
+        let mut probes: Vec<f64> = Vec::new();
+        let mut x = -12.0;
+        while x <= 30.0 {
+            probes.push(x);
+            x += 0.01;
+        }
+        for (thr, _) in CQI_TABLE {
+            probes.push(thr);
+            probes.push(thr - f64::EPSILON * thr.abs());
+        }
+        probes.extend([f64::NAN, f64::INFINITY, f64::NEG_INFINITY, 0.0, -0.0]);
+        let mut out = Vec::new();
+        for len in [0, 1, 7, 8, 9, 16, 23, probes.len()] {
+            let slice = &probes[..len.min(probes.len())];
+            sinr_to_cqi_batch(slice, &mut out);
+            assert_eq!(out.len(), slice.len());
+            for (s, &cqi) in slice.iter().zip(&out) {
+                assert_eq!(cqi, sinr_to_cqi(*s), "sinr {s}");
+            }
+        }
     }
 
     #[test]

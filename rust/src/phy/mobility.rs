@@ -35,12 +35,20 @@ pub enum MobilityModel {
     FixedVelocity { speed: f64 },
 }
 
-/// Mobility configuration: the model plus the coarse tick period.
+/// Mobility configuration: the model plus the coarse tick period and
+/// the optional Gudmundson shadowing decorrelation.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MobilitySpec {
     pub model: MobilityModel,
     /// Seconds between position updates (and A3 handover evaluations).
     pub tick_s: f64,
+    /// Gudmundson shadowing decorrelation distance (meters). `None`
+    /// (the default) keeps the drop-time shadowing draw for the whole
+    /// run — bit-identical to the pre-correlation model, with zero
+    /// extra RNG draws. `Some(d)` decorrelates every moved UE's
+    /// per-link shadowing on each mobility tick
+    /// ([`crate::phy::geometry::UeGeo::decorrelate_shadowing`]).
+    pub shadow_corr_m: Option<f64>,
 }
 
 impl MobilitySpec {
@@ -48,17 +56,33 @@ impl MobilitySpec {
 
     pub fn waypoint(v_min: f64, v_max: f64) -> Self {
         assert!(v_min >= 0.0 && v_max >= v_min, "need 0 <= v_min <= v_max");
-        Self { model: MobilityModel::RandomWaypoint { v_min, v_max }, tick_s: Self::DEFAULT_TICK_S }
+        Self {
+            model: MobilityModel::RandomWaypoint { v_min, v_max },
+            tick_s: Self::DEFAULT_TICK_S,
+            shadow_corr_m: None,
+        }
     }
 
     pub fn fixed(speed: f64) -> Self {
         assert!(speed >= 0.0, "speed must be >= 0");
-        Self { model: MobilityModel::FixedVelocity { speed }, tick_s: Self::DEFAULT_TICK_S }
+        Self {
+            model: MobilityModel::FixedVelocity { speed },
+            tick_s: Self::DEFAULT_TICK_S,
+            shadow_corr_m: None,
+        }
     }
 
     pub fn with_tick(mut self, tick_s: f64) -> Self {
         assert!(tick_s > 0.0, "mobility tick must be positive");
         self.tick_s = tick_s;
+        self
+    }
+
+    /// Enable Gudmundson spatially-correlated shadowing with the given
+    /// decorrelation distance (meters).
+    pub fn with_shadow_corr(mut self, d_corr_m: f64) -> Self {
+        assert!(d_corr_m > 0.0, "decorrelation distance must be positive");
+        self.shadow_corr_m = Some(d_corr_m);
         self
     }
 }

@@ -16,23 +16,33 @@
 //! itself, so single-cell scenarios reproduce the legacy SLS streams
 //! bit for bit.
 //!
-//! Threading: [`StepPool`] is the `std::thread::scope` + atomic-cursor
-//! pattern from [`crate::sweep`], specialized to slot batches. Workers
-//! park on a barrier between batches; each batch they claim cell
-//! indices from the cursor and step the cells due at the batch time.
-//! Because a step touches only the cell's own state, and the engine
-//! merges delivered SDUs in cell-index order afterwards, the threaded
-//! schedule is bit-identical to stepping the cells serially in index
-//! order.
+//! Threading (DESIGN.md §12): two interchangeable schedulers, both
+//! bit-identical to a serial cell loop.
+//!
+//! * [`StepPool`] — the legacy slot-barrier pool: every slot, all due
+//!   cells rendezvous twice on a barrier. Wall-clock is gated by the
+//!   slowest cell per slot.
+//! * [`FrontierPool`] — conservative parallel DES (the default for
+//!   threaded runs): each cell advances asynchronously up to its
+//!   coupling horizon. The one-slot-lagged interference snapshot gives
+//!   every cell a lookahead of exactly one slot, so a cell may step
+//!   boundary `t` once every coupled neighbor has published through
+//!   `t - slot` (frontier ≥ `t`) and the calendar holds no event
+//!   below `t`. Workers pull the least-advanced runnable cell; the
+//!   engine merges the buffered step records in ascending
+//!   `(slot-time, cell-index)` order — the serial batch order — so
+//!   delivered SDUs enter the calendar in exactly the serial sequence.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Barrier, Mutex};
+use std::sync::{Barrier, Condvar, Mutex};
 
 use crate::config::SimConfig;
-use crate::mac::{drop_ues, MacConfig, SlotWorkspace, UeBank, UeMac, UlScheduler};
+use crate::mac::{
+    drop_ues, MacConfig, SduKind, SlotWorkspace, UeBank, UeHot, UeMac, UlScheduler,
+};
 use crate::phy::channel::{LargeScale, Position};
 use crate::phy::geometry::{CellGeo, UeGeo};
-use crate::phy::link::{thermal_floor_prb_mw, tx_power_prb_dbm};
+use crate::phy::link::{iot_db_from_linear, thermal_floor_prb_mw, tx_power_prb_dbm};
 use crate::phy::mobility::MobilitySpec;
 use crate::phy::numerology::{Carrier, Numerology};
 use crate::rng::Rng;
@@ -105,6 +115,36 @@ impl Default for HandoverSpec {
         // 3 dB / 160 ms — the common A3 operating point; 4 slots at
         // 60 kHz = 1 ms of interruption.
         Self { hysteresis_db: 3.0, ttt_s: 0.16, interruption_slots: 4 }
+    }
+}
+
+/// Which scheduler drives threaded cell stepping. Both are
+/// bit-identical to serial; they differ only in wall-clock scaling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CellSync {
+    /// Conservative frontier scheduling (the default): cells advance
+    /// asynchronously inside their coupling horizon, no per-slot
+    /// rendezvous.
+    #[default]
+    Frontier,
+    /// Legacy slot-barrier pool: all due cells rendezvous every slot.
+    Barrier,
+}
+
+impl CellSync {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "frontier" => Some(Self::Frontier),
+            "barrier" => Some(Self::Barrier),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Frontier => "frontier",
+            Self::Barrier => "barrier",
+        }
     }
 }
 
@@ -278,7 +318,11 @@ impl CellRt {
     }
 
     /// Advance every UE of this cell by one mobility tick and refresh
-    /// the moved UEs' coupling-loss caches + serving-link state.
+    /// the moved UEs' coupling-loss caches + serving-link state. With
+    /// `spec.shadow_corr_m` set, each moved UE's per-link shadowing
+    /// decorrelates Gudmundson-style over the tick's travel distance
+    /// before the loss refresh (disabled = zero extra draws, so the
+    /// default run is bit-identical to the uncorrelated model).
     /// Engine-serial (runs between slot batches).
     pub(crate) fn advance_mobility(&mut self, spec: &MobilitySpec, dt: f64) {
         let Some(geo) = self.geo.as_mut() else { return };
@@ -286,11 +330,21 @@ impl CellRt {
         let CellGeo { cell, sites, area_center, area_radius, ues, .. } = geo;
         let site = sites[*cell];
         for (i, gu) in ues.iter_mut().enumerate() {
+            let prev = gu.pos;
             if spec.model.advance(gu, *area_center, *area_radius, dt) {
+                if let Some(d_corr) = spec.shadow_corr_m {
+                    let (dx, dy) = (gu.pos.x - prev.x, gu.pos.y - prev.y);
+                    gu.decorrelate_shadowing((dx * dx + dy * dy).sqrt(), d_corr);
+                }
                 gu.refresh_losses(sites, freq);
                 let ue = self.bank.ue_mut(i);
                 ue.link.pos = Position { x: gu.pos.x - site.x, y: gu.pos.y - site.y };
-                ue.invalidate_link_cache();
+                if spec.shadow_corr_m.is_some() {
+                    // keep the serving link the scheduler prices in
+                    // lockstep with the decorrelated geometry cache
+                    ue.link.shadow_db = gu.links[*cell].shadow_db;
+                }
+                self.bank.invalidate_link_cache(i);
             }
         }
     }
@@ -337,15 +391,16 @@ impl CellRt {
 
     /// Remove local UE `i` (bank and geometry in lockstep — both
     /// swap-remove the same index). Returns the MAC state with its
-    /// carried backlog, the geometry record, and the tag of the UE
-    /// displaced into slot `i` (the caller re-maps its location).
-    pub(crate) fn take_ue(&mut self, i: usize) -> (UeMac, UeGeo, Option<u64>) {
+    /// carried backlog, its hot-lane values, the geometry record, and
+    /// the tag of the UE displaced into slot `i` (the caller re-maps
+    /// its location).
+    pub(crate) fn take_ue(&mut self, i: usize) -> (UeMac, UeHot, UeGeo, Option<u64>) {
         let geo = self.geo.as_mut().expect("handover requires geometry");
         let gu = geo.ues.swap_remove(i);
-        let ue = self.bank.take_ue(i);
+        let (ue, hot) = self.bank.take_ue(i);
         let displaced =
             if i < self.bank.len() { Some(self.bank.ue(i).tag) } else { None };
-        (ue, gu, displaced)
+        (ue, hot, gu, displaced)
     }
 
     /// Admit a migrating UE: re-express its serving link relative to
@@ -355,6 +410,7 @@ impl CellRt {
     pub(crate) fn admit_ue(
         &mut self,
         mut ue: UeMac,
+        hot: UeHot,
         mut gu: UeGeo,
         interruption_slots: u64,
     ) -> usize {
@@ -366,11 +422,12 @@ impl CellRt {
             los: link.los,
             shadow_db: link.shadow_db,
         };
-        ue.handover_interrupt(self.slot_idx, interruption_slots);
         gu.a3_target = u32::MAX;
         gu.a3_ticks = 0;
         geo.ues.push(gu);
-        self.bank.push_ue(ue)
+        let i = self.bank.push_ue(ue, hot);
+        self.bank.handover_interrupt(i, self.slot_idx, interruption_slots);
+        i
     }
 
     /// Is this cell's next slot boundary the batch time `t_bits`?
@@ -521,6 +578,296 @@ impl<'a> StepPool<'a> {
     }
 }
 
+/// How the engine drives cell slot steps (resolved from
+/// `cell_threads` + [`CellSync`] at run time).
+pub(crate) enum StepDriver<'p, 'a> {
+    /// Inline on the engine thread, in cell-index order.
+    Serial,
+    /// Legacy slot-barrier pool.
+    Barrier(&'p StepPool<'a>),
+    /// Conservative frontier scheduler.
+    Frontier(&'p FrontierPool<'a>),
+}
+
+/// One committed cell step, buffered until the engine merges it.
+/// Records merge in ascending `(t_bits, cell)` — exactly the order a
+/// serial engine would have produced the same slot batches in.
+pub(crate) struct StepRec {
+    /// `to_bits()` of the stepped slot boundary (positive finite, so
+    /// integer order == numeric order).
+    t_bits: u64,
+    cell: u32,
+    /// End of the stepped slot — when the delivered TBs land.
+    pub(crate) t_rx: f64,
+    /// Delivered job SDU ids, in grant order.
+    pub(crate) jobs: Vec<u64>,
+}
+
+/// A cell's published per-slot interference row, versioned by the slot
+/// boundary it was produced at.
+struct PubRow {
+    t_bits: u64,
+    row: Vec<f64>,
+}
+
+struct FrontierInner {
+    /// Next unstepped slot boundary per cell (`f64::INFINITY` once the
+    /// cell's clock stops). Advances only at step *commit*, so an
+    /// in-flight neighbor never looks further along than it is.
+    frontier: Vec<f64>,
+    claimed: Vec<bool>,
+    /// Exclusive upper bound on steppable boundaries: the calendar
+    /// head. A boundary at the head time must wait for the event (the
+    /// serial tie rule pops calendar events before slot batches).
+    bound: f64,
+    /// Committed, unmerged step records.
+    records: Vec<StepRec>,
+    /// Two-deep publication history per cell (coupling mode only).
+    /// Coupled neighbors stay within one slot of each other, so the
+    /// previous row is always still available when a neighbor needs
+    /// the lagged snapshot.
+    pubs: Vec<[PubRow; 2]>,
+    /// Claimed-but-uncommitted steps.
+    inflight: usize,
+    stop: bool,
+}
+
+/// Conservative parallel-DES scheduler (DESIGN.md §12). Safe-step
+/// rule: cell `c` may step boundary `t` iff
+///
+/// 1. `t < bound` — every calendar event below `t` has been handled
+///    (events at `t` exactly pop first, matching the serial tie rule);
+/// 2. `t <= limit` — the drain horizon, after which serial never
+///    steps a boundary;
+/// 3. every coupled neighbor's frontier is `>= t` — its interference
+///    publication for `t - slot` is final (lookahead = one slot of
+///    the lagged snapshot).
+///
+/// Workers claim the least `(boundary, cell-index)` eligible cell, so
+/// the least-advanced cell is always served first and the frontier
+/// advances as a wave. The engine merges committed records in
+/// `(t_bits, cell)` order at each quiescence point, reproducing the
+/// serial calendar-insertion sequence bit for bit.
+pub(crate) struct FrontierPool<'a> {
+    cells: &'a [Mutex<CellRt>],
+    /// Ascending coupled-neighbor indices per cell (empty without
+    /// radio coupling). Uncoupled cells publish structurally-zero
+    /// interference toward each other, so summing only coupled rows
+    /// (ascending, like the serial snapshot loop) is bit-identical.
+    coupled: Vec<Vec<u32>>,
+    /// Inclusive drain horizon for slot boundaries.
+    limit: f64,
+    coupling: bool,
+    inner: Mutex<FrontierInner>,
+    /// Signals workers: bound advanced / a commit may have unblocked a
+    /// neighbor / shutdown.
+    work: Condvar,
+    /// Signals the engine: a commit happened (quiescence re-check).
+    idle: Condvar,
+}
+
+impl<'a> FrontierPool<'a> {
+    pub(crate) fn new(cells: &'a [Mutex<CellRt>], limit: f64, coupling: bool) -> Self {
+        let n = cells.len();
+        let mut frontier = Vec::with_capacity(n);
+        let mut coupled = Vec::with_capacity(n);
+        let mut pubs = Vec::with_capacity(if coupling { n } else { 0 });
+        for cm in cells {
+            let c = cm.lock().unwrap();
+            frontier.push(if c.ticking { c.next_slot } else { f64::INFINITY });
+            coupled.push(match (&c.geo, coupling) {
+                (Some(g), true) => g
+                    .coupled
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(j, &on)| on.then_some(j as u32))
+                    .collect(),
+                _ => Vec::new(),
+            });
+            if coupling {
+                // Sentinel publications at t = 0.0 (below every
+                // boundary) with zero rows — the serial snapshot also
+                // starts all-zero.
+                pubs.push([
+                    PubRow { t_bits: 0, row: vec![0.0; n] },
+                    PubRow { t_bits: 0, row: vec![0.0; n] },
+                ]);
+            }
+        }
+        Self {
+            cells,
+            coupled,
+            limit,
+            coupling,
+            inner: Mutex::new(FrontierInner {
+                frontier,
+                claimed: vec![false; n],
+                bound: f64::NEG_INFINITY,
+                records: Vec::new(),
+                pubs,
+                inflight: 0,
+                stop: false,
+            }),
+            work: Condvar::new(),
+            idle: Condvar::new(),
+        }
+    }
+
+    /// Claim the least `(boundary, cell)` eligible cell and price its
+    /// incoming interference from the neighbors' publications. Returns
+    /// `(cell, boundary, i_mw)`.
+    fn try_claim(&self, inner: &mut FrontierInner) -> Option<(usize, f64, f64)> {
+        let mut best: Option<(u64, usize)> = None;
+        'cells: for k in 0..inner.frontier.len() {
+            if inner.claimed[k] {
+                continue;
+            }
+            let t = inner.frontier[k];
+            if !(t < inner.bound) || t > self.limit {
+                continue;
+            }
+            let tb = t.to_bits();
+            if let Some(b) = best {
+                if (tb, k) >= b {
+                    continue;
+                }
+            }
+            for &j in &self.coupled[k] {
+                if inner.frontier[j as usize] < t {
+                    continue 'cells;
+                }
+            }
+            best = Some((tb, k));
+        }
+        let (tb, k) = best?;
+        let t = f64::from_bits(tb);
+        let mut i_mw = 0.0;
+        if self.coupling {
+            for &j in &self.coupled[k] {
+                let p = &inner.pubs[j as usize];
+                // newest pub strictly before `t` (p[1] is newest; the
+                // one-slot skew bound guarantees p[0] qualifies when
+                // p[1] is at `t` itself)
+                let row = if p[1].t_bits < tb { &p[1].row } else { &p[0].row };
+                i_mw += row[k];
+            }
+        }
+        inner.claimed[k] = true;
+        inner.inflight += 1;
+        Some((k, t, i_mw))
+    }
+
+    /// Step the claimed cell (outside the frontier lock; only the
+    /// cell's own mutex is held).
+    fn exec_step(&self, k: usize, t: f64, i_mw: f64) -> (StepRec, f64, Option<Vec<f64>>) {
+        let mut c = self.cells[k].lock().unwrap();
+        debug_assert!(c.due(t.to_bits()), "frontier claimed a non-due cell");
+        if self.coupling {
+            c.iot_db = iot_db_from_linear(i_mw, c.noise_floor_mw);
+        }
+        c.step_slot();
+        // The merge happens record-side; reset the batch marker here
+        // so `due` stays well-defined for the next boundary.
+        c.last_slot = u64::MAX;
+        let jobs: Vec<u64> = c
+            .ws
+            .delivered
+            .iter()
+            .filter_map(|d| match d.kind {
+                SduKind::Job { job_id } => Some(job_id),
+                SduKind::Background => None,
+            })
+            .collect();
+        let rec = StepRec { t_bits: t.to_bits(), cell: k as u32, t_rx: t + c.slot_dur, jobs };
+        let frontier = if c.ticking { c.next_slot } else { f64::INFINITY };
+        let publ = self.coupling.then(|| {
+            if c.ticking {
+                c.itf_out.clone()
+            } else {
+                // a stopped cell transmits nothing more — same zeroing
+                // the serial merge applies to its snapshot row
+                vec![0.0; c.itf_out.len()]
+            }
+        });
+        (rec, frontier, publ)
+    }
+
+    fn commit(
+        &self,
+        inner: &mut FrontierInner,
+        k: usize,
+        (rec, frontier, publ): (StepRec, f64, Option<Vec<f64>>),
+    ) {
+        inner.frontier[k] = frontier;
+        if let Some(row) = publ {
+            let p = &mut inner.pubs[k];
+            p.swap(0, 1);
+            p[1] = PubRow { t_bits: rec.t_bits, row };
+        }
+        inner.records.push(rec);
+        inner.claimed[k] = false;
+        inner.inflight -= 1;
+        self.work.notify_all();
+        self.idle.notify_one();
+    }
+
+    /// Worker loop: claim → step → commit, parking when nothing is
+    /// eligible under the current bound.
+    pub(crate) fn worker(&self) {
+        let _guard = AbortOnPanic;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.stop {
+                return;
+            }
+            if let Some((k, t, i_mw)) = self.try_claim(&mut inner) {
+                drop(inner);
+                let out = self.exec_step(k, t, i_mw);
+                inner = self.inner.lock().unwrap();
+                self.commit(&mut inner, k, out);
+            } else {
+                inner = self.work.wait(inner).unwrap();
+            }
+        }
+    }
+
+    /// Engine side: publish the new bound (the calendar head), help
+    /// step until quiescence — no eligible boundary below the bound
+    /// and nothing in flight — then merge every buffered record in
+    /// `(t_bits, cell)` order. On return the engine has exclusive cell
+    /// access (workers are parked under the bound) and the calendar
+    /// matches the serial run's insertion sequence.
+    pub(crate) fn advance_to(&self, bound: f64, merge: &mut dyn FnMut(StepRec)) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.bound = bound;
+        self.work.notify_all();
+        loop {
+            if let Some((k, t, i_mw)) = self.try_claim(&mut inner) {
+                drop(inner);
+                let out = self.exec_step(k, t, i_mw);
+                inner = self.inner.lock().unwrap();
+                self.commit(&mut inner, k, out);
+            } else if inner.inflight == 0 {
+                break;
+            } else {
+                inner = self.idle.wait(inner).unwrap();
+            }
+        }
+        let mut records = std::mem::take(&mut inner.records);
+        drop(inner);
+        records.sort_unstable_by_key(|r| (r.t_bits, r.cell));
+        for rec in records {
+            merge(rec);
+        }
+    }
+
+    /// Release the workers to exit (call once, after the event loop).
+    pub(crate) fn shutdown(&self) {
+        self.inner.lock().unwrap().stop = true;
+        self.work.notify_all();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -633,10 +980,10 @@ mod tests {
         let carried = a.bank.ue(0).buffered_bytes();
         assert!(carried > 0);
         let total = a.bank.total_backlog_bytes() + b.bank.total_backlog_bytes();
-        let (ue, gu, displaced) = a.take_ue(0);
+        let (ue, hot, gu, displaced) = a.take_ue(0);
         assert!(displaced.is_some(), "a still has UEs, so one was displaced");
         assert_eq!(a.bank.len(), a.geo.as_ref().unwrap().ues.len());
-        let ni = b.admit_ue(ue, gu, 4);
+        let ni = b.admit_ue(ue, hot, gu, 4);
         assert_eq!(ni, 4);
         assert_eq!(b.bank.len(), b.geo.as_ref().unwrap().ues.len());
         assert_eq!(
@@ -691,5 +1038,44 @@ mod tests {
                 assert_eq!(c.last_slot, t0.to_bits(), "cell {k} missed the batch");
             }
         }
+    }
+
+    #[test]
+    fn frontier_pool_steps_to_the_bound_and_merges_in_order() {
+        let cells: Vec<Mutex<CellRt>> =
+            (0..3).map(|k| Mutex::new(rt(k, 11))).collect();
+        let slot = cells[0].lock().unwrap().slot_dur;
+        let pool = FrontierPool::new(&cells, 3.0, false);
+        let mut merged: Vec<(u64, u32)> = Vec::new();
+        std::thread::scope(|scope| {
+            for _ in 0..2 {
+                scope.spawn(|| pool.worker());
+            }
+            // three boundaries per cell lie strictly below the bound
+            pool.advance_to(3.5 * slot, &mut |rec| merged.push((rec.t_bits, rec.cell)));
+            pool.shutdown();
+        });
+        assert_eq!(merged.len(), 9, "3 cells x 3 boundaries below the bound");
+        let mut sorted = merged.clone();
+        sorted.sort_unstable();
+        assert_eq!(merged, sorted, "records merge in (time, cell) order");
+        // every cell advanced exactly to its 4th boundary (accumulated
+        // the same way step_slot accumulates it)
+        let expect = {
+            let mut t = slot;
+            for _ in 0..3 {
+                t += slot;
+            }
+            t.to_bits()
+        };
+        for cm in &cells {
+            let c = cm.lock().unwrap();
+            assert_eq!(c.next_slot.to_bits(), expect);
+            assert!(c.ticking);
+        }
+        // a later bound below the next boundary is a no-op
+        let mut extra = 0usize;
+        pool.advance_to(3.9 * slot, &mut |_| extra += 1);
+        assert_eq!(extra, 0, "no boundary below the new bound remains");
     }
 }

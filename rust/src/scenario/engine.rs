@@ -19,13 +19,15 @@
 //! deterministic and statistically identical to the seed SLS. The
 //! execution models consume no randomness either.
 //!
-//! Determinism rule for multi-cell merging (DESIGN.md §9): the per-cell
-//! slot clocks live *outside* the event calendar. At every instant the
-//! engine first drains calendar events (in insertion order, as before),
-//! then steps all cells whose slot boundary falls at that instant —
-//! serially or on the [`StepPool`] workers — and merges their delivered
-//! SDUs into the calendar in ascending cell-index order. Because a slot
-//! step touches only its own cell's state, the threaded schedule is
+//! Determinism rule for multi-cell merging (DESIGN.md §9, §12): the
+//! per-cell slot clocks live *outside* the event calendar. At every
+//! instant the engine first drains calendar events (in insertion
+//! order, as before), then steps the due cells — inline, on the
+//! [`StepPool`] barrier workers, or asynchronously via the
+//! [`FrontierPool`] conservative scheduler — and merges their
+//! delivered SDUs into the calendar in ascending (slot-time,
+//! cell-index) order. Because a slot step touches only its own cell's
+//! state and the merge order is fixed, every driver's schedule is
 //! bit-identical to the serial one.
 
 use std::sync::Mutex;
@@ -44,7 +46,7 @@ use crate::phy::link::iot_db_from_linear;
 use crate::phy::mobility::MobilitySpec;
 use crate::sweep::resolve_threads;
 
-use super::cells::{cell_seed, CellRt, StepPool};
+use super::cells::{cell_seed, CellRt, CellSync, FrontierPool, StepDriver, StepPool, StepRec};
 use super::routing::NodeView;
 use super::service::ServiceDemand;
 use super::{NodeSpec, Scenario};
@@ -265,6 +267,96 @@ fn next_slot_time(cells: &[Mutex<CellRt>]) -> f64 {
     t
 }
 
+/// One synchronous slot batch (serial / barrier drivers): refresh the
+/// due cells' IoT terms from the one-slot-lagged snapshot, step every
+/// due cell, then merge delivered SDUs into the calendar in ascending
+/// cell-index order — the determinism rule that makes the threaded
+/// schedule bit-identical to a serial cell loop.
+#[allow(clippy::too_many_arguments)]
+fn batch_step(
+    driver: &StepDriver<'_, '_>,
+    cells: &[Mutex<CellRt>],
+    t_slot: f64,
+    radio_coupling: bool,
+    itf: &mut [Vec<f64>],
+    jobs: &mut [JobState],
+    q: &mut EventQueue<Ev>,
+    t_wireline: f64,
+    slot_events: &mut u64,
+) {
+    let t_bits = t_slot.to_bits();
+    // Interference-snapshot barrier: before the (possibly parallel)
+    // step, every due cell reads the one-slot-lagged neighbor activity
+    // into its IoT term. Serial on the engine thread, so the thread
+    // count can never reorder it.
+    if radio_coupling {
+        for (j, cm) in cells.iter().enumerate() {
+            let mut c = cm.lock().unwrap();
+            if !c.due(t_bits) {
+                continue;
+            }
+            let mut i_mw = 0.0;
+            for (k, row) in itf.iter().enumerate() {
+                if k != j {
+                    i_mw += row[j];
+                }
+            }
+            c.iot_db = iot_db_from_linear(i_mw, c.noise_floor_mw);
+        }
+    }
+    match driver {
+        StepDriver::Barrier(p) => p.step_batch(t_slot),
+        StepDriver::Serial => {
+            for cm in cells {
+                let mut c = cm.lock().unwrap();
+                if c.due(t_bits) {
+                    c.step_slot();
+                }
+            }
+        }
+        StepDriver::Frontier(_) => unreachable!("frontier mode never batches"),
+    }
+    // Merge delivered SDUs into the calendar in ascending cell-index
+    // order.
+    for (k, cm) in cells.iter().enumerate() {
+        let mut c = cm.lock().unwrap();
+        if c.last_slot != t_bits {
+            continue;
+        }
+        *slot_events += 1;
+        // Gather the stepped cell's outgoing interference for the next
+        // batch's snapshot (still on the engine thread — the
+        // publication order is cell-index order regardless of which
+        // worker stepped the cell). A cell whose clock just stopped
+        // (drained past the horizon) transmits nothing more: zero its
+        // row instead of letting neighbors price its final slot's
+        // activity for the rest of the drain window.
+        if radio_coupling {
+            if c.ticking {
+                itf[k].copy_from_slice(&c.itf_out);
+            } else {
+                for v in &mut itf[k] {
+                    *v = 0.0;
+                }
+            }
+        }
+        // TBs land at the end of the slot. The flat delivered buffer
+        // is already in grant order.
+        let t_rx = t_slot + c.slot_dur;
+        for d in &c.ws.delivered {
+            if let SduKind::Job { job_id } = d.kind {
+                let js = &mut jobs[job_id as usize];
+                js.t_comm = Some(t_rx - js.t_gen);
+                q.schedule_at(t_rx + t_wireline, Ev::ComputeEnqueue { job: job_id });
+            }
+        }
+        // Invalidate so an un-stepped later batch at the same bit
+        // pattern (impossible for monotone clocks, but cheap to rule
+        // out) cannot re-merge.
+        c.last_slot = u64::MAX;
+    }
+}
+
 pub(super) fn run(sc: &Scenario) -> ScenarioResult {
     let wall0 = std::time::Instant::now();
     let n_classes = sc.classes.len();
@@ -309,32 +401,56 @@ pub(super) fn run(sc: &Scenario) -> ScenarioResult {
     }
 
     // `cell_threads = 1` (the default) steps cells inline; `0` uses all
-    // cores. More participants than cells would only park on barriers.
+    // cores. More participants than cells would only idle.
     let participants = resolve_threads(sc.cell_threads).min(cells.len());
     if participants <= 1 {
-        event_loop(sc, &cells, None, wall0)
+        event_loop(sc, &cells, StepDriver::Serial, wall0)
     } else {
-        let pool = StepPool::new(&cells, participants);
-        std::thread::scope(|scope| {
-            // An unwind out of the event loop (or out of a worker)
-            // would leave the other pool participants parked on a
-            // barrier with no panic path, deadlocking the scope join —
-            // the guard aborts instead so a bug surfaces as a crash.
-            let _guard = super::cells::AbortOnPanic;
-            for _ in 1..participants {
-                scope.spawn(|| pool.worker());
+        match sc.cell_sync {
+            CellSync::Barrier => {
+                let pool = StepPool::new(&cells, participants);
+                std::thread::scope(|scope| {
+                    // An unwind out of the event loop (or out of a
+                    // worker) would leave the other pool participants
+                    // parked on a barrier with no panic path,
+                    // deadlocking the scope join — the guard aborts
+                    // instead so a bug surfaces as a crash.
+                    let _guard = super::cells::AbortOnPanic;
+                    for _ in 1..participants {
+                        scope.spawn(|| pool.worker());
+                    }
+                    let result =
+                        event_loop(sc, &cells, StepDriver::Barrier(&pool), wall0);
+                    pool.shutdown();
+                    result
+                })
             }
-            let result = event_loop(sc, &cells, Some(&pool), wall0);
-            pool.shutdown();
-            result
-        })
+            CellSync::Frontier => {
+                let radio_coupling = sc.topology.is_some() && cells.len() > 1;
+                let pool =
+                    FrontierPool::new(&cells, sc.base.horizon + 2.0, radio_coupling);
+                std::thread::scope(|scope| {
+                    // A panicking participant poisons the frontier
+                    // mutex; the other side's unwrap then panics too —
+                    // abort so neither unwind strands the scope join.
+                    let _guard = super::cells::AbortOnPanic;
+                    for _ in 1..participants {
+                        scope.spawn(|| pool.worker());
+                    }
+                    let result =
+                        event_loop(sc, &cells, StepDriver::Frontier(&pool), wall0);
+                    pool.shutdown();
+                    result
+                })
+            }
+        }
     }
 }
 
 fn event_loop(
     sc: &Scenario,
     cells: &[Mutex<CellRt>],
-    pool: Option<&StepPool<'_>>,
+    driver: StepDriver<'_, '_>,
     wall0: std::time::Instant,
 ) -> ScenarioResult {
     let cfg = &sc.base;
@@ -462,12 +578,12 @@ fn event_loop(
     let bg_bytes = cfg.background.packet_bytes;
 
     // Prime arrival processes (per cell, same per-UE order as the
-    // legacy engine).
+    // legacy engine). Time-varying classes prime at their t = 0 rate.
     for (k, cm) in cells.iter().enumerate() {
         let mut c = cm.lock().unwrap();
         for ue in 0..c.n_ues {
             for (ci, class) in sc.classes.iter().enumerate() {
-                let gap = c.job_rng[ci][ue].exp(class.rate_per_ue);
+                let gap = c.job_rng[ci][ue].exp(class.rate_at(0.0));
                 q.schedule_at(
                     gap,
                     Ev::JobArrival { cell: k as u32, ue: ue as u32, class: ci as u32 },
@@ -500,89 +616,56 @@ fn event_loop(
 
     loop {
         let t_q = q.peek_time().unwrap_or(f64::INFINITY);
-        // Calendar events drain before slot boundaries at the same
-        // instant (matching the legacy tie order, where the enqueue
-        // crossing the wireline landed before the chained Slot event).
-        let t_next = t_q.min(t_slot);
-        if !t_next.is_finite() || t_next > drain_horizon {
-            break;
-        }
-        if t_q > t_slot {
-            // --- slot batch: step every cell due at t_slot ---
-            let t_bits = t_slot.to_bits();
-            // Interference-snapshot barrier: before the (possibly
-            // parallel) step, every due cell reads the one-slot-lagged
-            // neighbor activity into its IoT term. Serial on the
-            // engine thread, so the thread count can never reorder it.
-            if radio_coupling {
-                for (j, cm) in cells.iter().enumerate() {
-                    let mut c = cm.lock().unwrap();
-                    if !c.due(t_bits) {
-                        continue;
-                    }
-                    let mut i_mw = 0.0;
-                    for (k, row) in itf.iter().enumerate() {
-                        if k != j {
-                            i_mw += row[j];
-                        }
-                    }
-                    c.iot_db = iot_db_from_linear(i_mw, c.noise_floor_mw);
-                }
-            }
-            match pool {
-                Some(p) => p.step_batch(t_slot),
-                None => {
-                    for cm in cells {
-                        let mut c = cm.lock().unwrap();
-                        if c.due(t_bits) {
-                            c.step_slot();
-                        }
-                    }
-                }
-            }
-            // Merge delivered SDUs into the calendar in ascending
-            // cell-index order — the determinism rule that makes the
-            // threaded schedule bit-identical to a serial cell loop.
-            for (k, cm) in cells.iter().enumerate() {
-                let mut c = cm.lock().unwrap();
-                if c.last_slot != t_bits {
-                    continue;
-                }
+        if let StepDriver::Frontier(fp) = &driver {
+            // Conservative mode: let the frontier advance every cell
+            // strictly below the calendar head (events at the head pop
+            // first — the serial tie rule), then merge the committed
+            // step records in (slot-time, cell) order. The merge
+            // reproduces the serial calendar-insertion sequence, so
+            // downstream pops are bit-identical.
+            fp.advance_to(t_q, &mut |rec: StepRec| {
                 slot_events += 1;
-                // Gather the stepped cell's outgoing interference for
-                // the next batch's snapshot (still on the engine
-                // thread — the publication order is cell-index order
-                // regardless of which worker stepped the cell). A cell
-                // whose clock just stopped (drained past the horizon)
-                // transmits nothing more: zero its row instead of
-                // letting neighbors price its final slot's activity
-                // for the rest of the drain window.
-                if radio_coupling {
-                    if c.ticking {
-                        itf[k].copy_from_slice(&c.itf_out);
-                    } else {
-                        for v in &mut itf[k] {
-                            *v = 0.0;
-                        }
-                    }
+                for &job_id in &rec.jobs {
+                    let js = &mut jobs[job_id as usize];
+                    js.t_comm = Some(rec.t_rx - js.t_gen);
+                    q.schedule_at(rec.t_rx + t_wireline, Ev::ComputeEnqueue {
+                        job: job_id,
+                    });
                 }
-                // TBs land at the end of the slot. The flat delivered
-                // buffer is already in grant order.
-                let t_rx = t_slot + c.slot_dur;
-                for d in &c.ws.delivered {
-                    if let SduKind::Job { job_id } = d.kind {
-                        let js = &mut jobs[job_id as usize];
-                        js.t_comm = Some(t_rx - js.t_gen);
-                        q.schedule_at(t_rx + t_wireline, Ev::ComputeEnqueue { job: job_id });
-                    }
-                }
-                // Invalidate so an un-stepped later batch at the same
-                // bit pattern (impossible for monotone clocks, but
-                // cheap to rule out) cannot re-merge.
-                c.last_slot = u64::MAX;
+            });
+            // Re-peek: the merge may have filed deliveries into an
+            // otherwise-drained calendar (serial covers this via its
+            // t_slot alternative) — the stale peek would end the run
+            // with jobs still crossing the wireline.
+            let t_q = q.peek_time().unwrap_or(f64::INFINITY);
+            if !t_q.is_finite() || t_q > drain_horizon {
+                break;
             }
-            t_slot = next_slot_time(cells);
-            continue;
+            // fall through to the calendar pop below
+        } else {
+            // Calendar events drain before slot boundaries at the same
+            // instant (matching the legacy tie order, where the
+            // enqueue crossing the wireline landed before the chained
+            // Slot event).
+            let t_next = t_q.min(t_slot);
+            if !t_next.is_finite() || t_next > drain_horizon {
+                break;
+            }
+            if t_q > t_slot {
+                batch_step(
+                    &driver,
+                    cells,
+                    t_slot,
+                    radio_coupling,
+                    &mut itf,
+                    &mut jobs,
+                    &mut q,
+                    t_wireline,
+                    &mut slot_events,
+                );
+                t_slot = next_slot_time(cells);
+                continue;
+            }
         }
         let (now, ev) = q.pop().unwrap();
         match ev {
@@ -594,10 +677,16 @@ fn event_loop(
                     // UE) stream — handover moves the radio
                     // attachment, never the traffic streams, so
                     // trajectories stay decomposable per cell seed.
+                    // The next gap draws at the *current* phase rate
+                    // (piecewise-constant schedules hold their rate
+                    // for many mean inter-arrival times, so re-arming
+                    // at the rate in force is the standard
+                    // discretization; a schedule-free class reduces to
+                    // exactly the legacy draw).
                     let (n_input, gap) = {
                         let mut c = cells[cell as usize].lock().unwrap();
                         let r = &mut c.job_rng[class as usize][ue_ix];
-                        (spec.input_tokens.sample(r), r.exp(spec.rate_per_ue))
+                        (spec.input_tokens.sample(r), r.exp(spec.rate_at(now)))
                     };
                     let job_id = jobs.len() as u64;
                     jobs.push(JobState {
@@ -635,7 +724,7 @@ fn event_loop(
                         if c.job_priority {
                             // ICC job-aware prioritization: dedicated SR
                             // resource bypasses the shared cycle.
-                            c.bank.ue_mut(sue).note_job_arrival_expedited(arrival_slot, sr_proc);
+                            c.bank.note_job_arrival_expedited(sue, arrival_slot, sr_proc);
                         }
                         let bytes = spec.request_bytes(n_input);
                         c.bank.push_job_sdu(sue, Sdu {
@@ -708,7 +797,7 @@ fn event_loop(
                     for &(tag, from, to) in &pending_ho {
                         let (ck, ci) = l[tag as usize];
                         debug_assert_eq!(ck as usize, from, "stale migration order");
-                        let (ue, gu, displaced) = {
+                        let (ue, hot, gu, displaced) = {
                             let mut c = cells[from].lock().unwrap();
                             c.ho_out += 1;
                             c.take_ue(ci as usize)
@@ -718,7 +807,7 @@ fn event_loop(
                         }
                         let mut t = cells[to].lock().unwrap();
                         t.ho_in += 1;
-                        let ni = t.admit_ue(ue, gu, ho.interruption_slots);
+                        let ni = t.admit_ue(ue, hot, gu, ho.interruption_slots);
                         l[tag as usize] = (to as u32, ni as u32);
                     }
                 }

@@ -51,7 +51,7 @@ pub mod routing;
 pub mod service;
 pub mod workload;
 
-pub use cells::{cell_seed, CellSpec, HandoverSpec};
+pub use cells::{cell_seed, CellSpec, CellSync, HandoverSpec};
 pub use engine::{discipline_of, management_of, ScenarioResult};
 pub use routing::{
     CellAffinity, ClassAffinity, LeastLoaded, NodeView, RoundRobin, Routing, RoutingPolicy,
@@ -104,6 +104,10 @@ pub struct Scenario {
     /// Worker threads stepping cells inside `run` (1 = serial, 0 = all
     /// cores). Never changes the results, only the wall clock.
     pub(crate) cell_threads: usize,
+    /// Threaded synchronization protocol: conservative frontier PDES
+    /// (default) or the legacy per-slot barrier pool. Never changes the
+    /// results, only the wall clock.
+    pub(crate) cell_sync: CellSync,
     /// Site layout; `Some` switches the radio stack from the fixed
     /// interference margin + static UEs to geometry-driven coupling.
     pub(crate) topology: Option<TopologySpec>,
@@ -132,6 +136,7 @@ impl std::fmt::Debug for Scenario {
             .field("routing", &self.routing)
             .field("custom_router", &self.router_factory.is_some())
             .field("cell_threads", &self.cell_threads)
+            .field("cell_sync", &self.cell_sync)
             .field("topology", &self.topology)
             .field("mobility", &self.mobility)
             .field("handover", &self.handover)
@@ -169,6 +174,12 @@ impl Scenario {
     /// Worker threads stepping cells inside `run` (1 = serial).
     pub fn threads(&self) -> usize {
         self.cell_threads
+    }
+
+    /// Threaded cell-synchronization protocol (frontier PDES or the
+    /// legacy barrier pool; irrelevant when `threads() <= 1`).
+    pub fn cell_sync(&self) -> CellSync {
+        self.cell_sync
     }
 
     /// The site layout of a coupled-radio scenario (None = legacy
@@ -244,6 +255,7 @@ pub struct ScenarioBuilder {
     routing: RoutingPolicy,
     router_factory: Option<RouterFactory>,
     cell_threads: usize,
+    cell_sync: CellSync,
     topology: Option<TopologySpec>,
     mobility: Option<MobilitySpec>,
     handover: Option<HandoverSpec>,
@@ -263,6 +275,7 @@ impl std::fmt::Debug for ScenarioBuilder {
             .field("routing", &self.routing)
             .field("custom_router", &self.router_factory.is_some())
             .field("cell_threads", &self.cell_threads)
+            .field("cell_sync", &self.cell_sync)
             .field("topology", &self.topology)
             .field("mobility", &self.mobility)
             .field("handover", &self.handover)
@@ -290,6 +303,7 @@ impl ScenarioBuilder {
             routing: RoutingPolicy::LeastLoaded,
             router_factory: None,
             cell_threads: 1,
+            cell_sync: CellSync::Frontier,
             topology: None,
             mobility: None,
             handover: None,
@@ -319,6 +333,7 @@ impl ScenarioBuilder {
             routing: RoutingPolicy::LeastLoaded,
             router_factory: None,
             cell_threads: 1,
+            cell_sync: CellSync::Frontier,
             topology: None,
             mobility: None,
             handover: None,
@@ -385,6 +400,15 @@ impl ScenarioBuilder {
     /// engine merges per-cell events in cell-index order either way.
     pub fn threads(mut self, threads: usize) -> Self {
         self.cell_threads = threads;
+        self
+    }
+
+    /// Pick the threaded synchronization protocol (default:
+    /// [`CellSync::Frontier`], the conservative PDES; the per-slot
+    /// [`CellSync::Barrier`] pool is kept for A/B benchmarking).
+    /// Never changes the results, only the wall clock.
+    pub fn cell_sync(mut self, sync: CellSync) -> Self {
+        self.cell_sync = sync;
         self
     }
 
@@ -495,10 +519,17 @@ impl ScenarioBuilder {
     /// error.
     pub fn apply_toml(mut self, doc: &Document) -> anyhow::Result<Self> {
         for key in doc.keys() {
-            let structural =
-                [("workload.", "workload"), ("node.", "node"), ("cell.", "cell")]
-                    .into_iter()
-                    .find_map(|(p, name)| key.strip_prefix(p).map(|rest| (rest, name)));
+            let structural = [
+                // longest prefix first: "workload.rate_phase.0.class"
+                // must resolve against the rate_phase array, not as a
+                // malformed member of the workload array.
+                ("workload.rate_phase.", "workload.rate_phase"),
+                ("workload.", "workload"),
+                ("node.", "node"),
+                ("cell.", "cell"),
+            ]
+            .into_iter()
+            .find_map(|(p, name)| key.strip_prefix(p).map(|rest| (rest, name)));
             if let Some((rest, name)) = structural {
                 // Parsed structurally below — but only `[[...]]` tables
                 // flatten to "<name>.<idx>.<field>" AND register an
@@ -518,11 +549,13 @@ impl ScenarioBuilder {
                 // Values are pulled through the shared typed helpers
                 // after this name-validation loop.
                 "scenario.n_ues" | "scenario.horizon" | "scenario.warmup"
-                | "scenario.seed" | "scenario.threads" | "scenario.event_queue"
+                | "scenario.seed" | "scenario.threads" | "scenario.cell_sync"
+                | "scenario.event_queue"
                 | "service.model" | "routing.policy" | "routing.spill_queue"
                 | "topology.layout" | "topology.isd" | "mobility.model"
                 | "mobility.speed" | "mobility.v_min" | "mobility.v_max"
-                | "mobility.tick_s" | "handover.hysteresis_db" | "handover.ttt_s"
+                | "mobility.tick_s" | "mobility.shadow_corr_m"
+                | "handover.hysteresis_db" | "handover.ttt_s"
                 | "handover.interruption_slots" | "cluster.policy"
                 | "cluster.tick_s" | "cluster.min_nodes" | "cluster.max_nodes"
                 | "cluster.retry_budget" | "cluster.ttft_slo"
@@ -564,6 +597,10 @@ impl ScenarioBuilder {
             }
             self.cell_threads = v as usize;
         }
+        if let Some(s) = typed_str(doc, "scenario.cell_sync")? {
+            self.cell_sync = CellSync::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown cell_sync '{s}' (frontier | barrier)"))?;
+        }
         if let Some(s) = typed_str(doc, "scenario.event_queue")? {
             self.event_queue = EventListKind::parse(s)
                 .ok_or_else(|| anyhow::anyhow!("unknown event_queue '{s}' (calendar | heap)"))?;
@@ -593,6 +630,7 @@ impl ScenarioBuilder {
             || doc.get("mobility.v_min").is_some()
             || doc.get("mobility.v_max").is_some()
             || doc.get("mobility.tick_s").is_some()
+            || doc.get("mobility.shadow_corr_m").is_some()
         {
             let speed = typed_f64(doc, "mobility.speed")?;
             let v_min = typed_f64(doc, "mobility.v_min")?;
@@ -632,12 +670,24 @@ impl ScenarioBuilder {
                 }
                 other => anyhow::bail!("unknown mobility model '{other}' (fixed | waypoint)"),
             };
-            let mut spec = MobilitySpec { model, tick_s: MobilitySpec::DEFAULT_TICK_S };
+            let mut spec = MobilitySpec {
+                model,
+                tick_s: MobilitySpec::DEFAULT_TICK_S,
+                shadow_corr_m: None,
+            };
             if let Some(t) = typed_f64(doc, "mobility.tick_s")? {
                 if !(1e-4..=10.0).contains(&t) {
                     anyhow::bail!("'mobility.tick_s' must be in 0.0001..=10 s, got {t}");
                 }
                 spec.tick_s = t;
+            }
+            if let Some(d) = typed_f64(doc, "mobility.shadow_corr_m")? {
+                if !(0.1..=1e5).contains(&d) {
+                    anyhow::bail!(
+                        "'mobility.shadow_corr_m' must be in 0.1..=1e5 meters, got {d}"
+                    );
+                }
+                spec.shadow_corr_m = Some(d);
             }
             self.mobility = Some(spec);
         }
@@ -1140,6 +1190,7 @@ impl ScenarioBuilder {
             routing: self.routing,
             router_factory: self.router_factory,
             cell_threads: self.cell_threads,
+            cell_sync: self.cell_sync,
             topology: self.topology,
             mobility: self.mobility,
             handover: self.handover,
@@ -1495,9 +1546,12 @@ mod tests {
         assert_eq!(ho.hysteresis_db, 2.5);
         assert_eq!(ho.ttt_s, 0.4);
         assert_eq!(ho.interruption_slots, 8);
+        // correlated shadowing stays off unless asked for
+        assert_eq!(mob.shadow_corr_m, None);
         // fixed-velocity spelling
         let doc = Document::parse(
-            "[topology]\nisd = 500\n[mobility]\nmodel = \"fixed\"\nspeed = 3.0\n",
+            "[topology]\nisd = 500\n[mobility]\nmodel = \"fixed\"\nspeed = 3.0\n\
+             shadow_corr_m = 50.0\n",
         )
         .unwrap();
         let s = ScenarioBuilder::new().apply_toml(&doc).unwrap().build();
@@ -1506,6 +1560,36 @@ mod tests {
             s.mobility().unwrap().model,
             MobilityModel::FixedVelocity { speed: 3.0 }
         );
+        assert_eq!(s.mobility().unwrap().shadow_corr_m, Some(50.0));
+    }
+
+    #[test]
+    fn toml_cell_sync_parses_and_validates() {
+        assert_eq!(ScenarioBuilder::new().build().cell_sync(), CellSync::Frontier);
+        let doc = Document::parse("[scenario]\ncell_sync = \"barrier\"").unwrap();
+        let s = ScenarioBuilder::new().apply_toml(&doc).unwrap().build();
+        assert_eq!(s.cell_sync(), CellSync::Barrier);
+        let doc = Document::parse("[scenario]\ncell_sync = \"frontier\"").unwrap();
+        let s = ScenarioBuilder::new().apply_toml(&doc).unwrap().build();
+        assert_eq!(s.cell_sync(), CellSync::Frontier);
+        let doc = Document::parse("[scenario]\ncell_sync = \"optimistic\"").unwrap();
+        assert!(ScenarioBuilder::new().apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn toml_rate_phase_tables_reach_the_classes() {
+        let doc = Document::parse(
+            "[[workload]]\nname = \"chat\"\nrate_per_ue = 0.4\n\
+             [[workload.rate_phase]]\nclass = \"chat\"\nt_start = 2.0\nrate_per_ue = 1.0\n\
+             [[workload.rate_phase]]\nclass = \"chat\"\nt_start = 5.0\nrate_per_ue = 0.1\n",
+        )
+        .unwrap();
+        let s = ScenarioBuilder::new().apply_toml(&doc).unwrap().build();
+        let chat = &s.classes()[0];
+        assert_eq!(chat.rate_phases.len(), 2);
+        assert_eq!(chat.rate_at(0.0), 0.4);
+        assert_eq!(chat.rate_at(3.0), 1.0);
+        assert_eq!(chat.rate_at(9.0), 0.1);
     }
 
     #[test]
@@ -1524,6 +1608,8 @@ mod tests {
             // out-of-range values
             "[topology]\nisd = 0",
             "[topology]\nisd = 500\n[mobility]\nmodel = \"fixed\"\nspeed = -1",
+            "[topology]\nisd = 500\n[mobility]\nmodel = \"fixed\"\nspeed = 1\nshadow_corr_m = 0",
+            "[topology]\nisd = 500\n[mobility]\nmodel = \"fixed\"\nspeed = 1\nshadow_corr_m = -5",
             "[topology]\nisd = 500\n[handover]\nhysteresis_db = 99",
             "[topology]\nisd = 500\n[handover]\nttt_s = -1",
             // unknown keys inside the new tables

@@ -90,12 +90,31 @@ impl TokenDist {
     }
 }
 
+/// One piecewise-constant phase of a time-varying arrival schedule:
+/// from `t_start` on (until the next phase) the class generates at
+/// `rate_per_ue`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RatePhase {
+    /// Simulation time the phase takes effect (seconds).
+    pub t_start: f64,
+    /// Poisson arrival rate per UE during the phase (jobs/s).
+    pub rate_per_ue: f64,
+}
+
 /// One workload class of a scenario.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkloadClass {
     pub name: String,
-    /// Poisson arrival rate per UE (jobs/s).
+    /// Poisson arrival rate per UE (jobs/s) — the base rate before the
+    /// first entry of `rate_phases` (and the whole run's rate when the
+    /// schedule is empty).
     pub rate_per_ue: f64,
+    /// Piecewise-constant rate schedule, ascending by `t_start`
+    /// (empty = constant `rate_per_ue`, the legacy behavior). The
+    /// engine re-arms each arrival at the rate in force at the draw
+    /// time, so diurnal load curves run in one pass instead of one
+    /// run per phase.
+    pub rate_phases: Vec<RatePhase>,
     pub input_tokens: TokenDist,
     pub output_tokens: TokenDist,
     /// Payload bytes per prompt token on the air interface.
@@ -123,6 +142,7 @@ impl WorkloadClass {
         Self {
             name: name.into(),
             rate_per_ue: t.rate_per_ue,
+            rate_phases: Vec::new(),
             input_tokens: TokenDist::Fixed(t.input_tokens),
             output_tokens: TokenDist::Fixed(j.n_output),
             bytes_per_token: t.bytes_per_token,
@@ -169,6 +189,7 @@ impl WorkloadClass {
         Self {
             name: "translation".into(),
             rate_per_ue: traffic.rate_per_ue,
+            rate_phases: Vec::new(),
             input_tokens: TokenDist::Fixed(traffic.input_tokens),
             output_tokens: TokenDist::Fixed(job.n_output),
             bytes_per_token: traffic.bytes_per_token,
@@ -184,6 +205,38 @@ impl WorkloadClass {
         assert!(rate_per_ue > 0.0);
         self.rate_per_ue = rate_per_ue;
         self
+    }
+
+    /// Append a rate phase: from `t_start` on, arrivals draw at
+    /// `rate_per_ue` jobs/s/UE. Phases must be appended in strictly
+    /// ascending `t_start` order.
+    pub fn with_rate_phase(mut self, t_start: f64, rate_per_ue: f64) -> Self {
+        assert!(t_start >= 0.0, "phase start must be >= 0");
+        assert!(rate_per_ue > 0.0, "phase rate must be positive");
+        if let Some(last) = self.rate_phases.last() {
+            assert!(
+                t_start > last.t_start,
+                "rate phases must be strictly ascending in t_start"
+            );
+        }
+        self.rate_phases.push(RatePhase { t_start, rate_per_ue });
+        self
+    }
+
+    /// Arrival rate in force at simulation time `t`: the last phase
+    /// whose `t_start` is `<= t`, or the base rate before any phase.
+    /// With an empty schedule this is exactly `rate_per_ue`, so
+    /// schedule-free classes consume the legacy draw sequence.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let mut rate = self.rate_per_ue;
+        for p in &self.rate_phases {
+            if p.t_start <= t {
+                rate = p.rate_per_ue;
+            } else {
+                break;
+            }
+        }
+        rate
     }
 
     pub fn with_input(mut self, d: TokenDist) -> Self {
@@ -242,12 +295,15 @@ impl WorkloadClass {
 }
 
 /// Serialize classes as `[[workload]]` tables (the inverse of
-/// [`workloads_from_toml`]). The mini-TOML dialect cannot represent
-/// embedded double quotes in strings, so they are stripped from names.
+/// [`workloads_from_toml`]). Rate schedules follow as
+/// `[[workload.rate_phase]]` tables referencing their class by name.
+/// The mini-TOML dialect cannot represent embedded double quotes in
+/// strings, so they are stripped from names.
 pub fn workloads_to_toml(classes: &[WorkloadClass]) -> String {
+    let clean = |s: &str| -> String { s.chars().filter(|&ch| ch != '"').collect() };
     let mut out = String::new();
     for c in classes {
-        let name: String = c.name.chars().filter(|&ch| ch != '"').collect();
+        let name = clean(&c.name);
         out.push_str("[[workload]]\n");
         out.push_str(&format!("name = \"{name}\"\n"));
         out.push_str(&format!("rate_per_ue = {}\n", c.rate_per_ue));
@@ -259,6 +315,15 @@ pub fn workloads_to_toml(classes: &[WorkloadClass]) -> String {
         out.push_str(&format!("m_llm = {}\n", c.m_llm));
         out.push_str(&format!("kv_bytes_per_token = {}\n", c.kv_bytes_per_token));
         out.push_str(&format!("b_total = {}\n\n", c.b_total));
+    }
+    for c in classes {
+        let name = clean(&c.name);
+        for p in &c.rate_phases {
+            out.push_str("[[workload.rate_phase]]\n");
+            out.push_str(&format!("class = \"{name}\"\n"));
+            out.push_str(&format!("t_start = {}\n", p.t_start));
+            out.push_str(&format!("rate_per_ue = {}\n\n", p.rate_per_ue));
+        }
     }
     out
 }
@@ -333,6 +398,48 @@ pub fn workloads_from_toml(doc: &Document) -> anyhow::Result<Vec<WorkloadClass>>
         }
         out.push(w);
     }
+    let np = doc.array_len("workload.rate_phase");
+    for i in 0..np {
+        let prefix = format!("workload.rate_phase.{i}.");
+        let mut class: Option<String> = None;
+        let mut t_start: Option<f64> = None;
+        let mut rate: Option<f64> = None;
+        for key in doc.keys().filter(|k| k.starts_with(prefix.as_str())) {
+            let field = &key[prefix.len()..];
+            let missing = || anyhow::anyhow!("bad value for '{key}'");
+            match field {
+                "class" => class = Some(doc.str(key).ok_or_else(missing)?.to_string()),
+                "t_start" => t_start = Some(doc.f64(key).ok_or_else(missing)?),
+                "rate_per_ue" => rate = Some(doc.f64(key).ok_or_else(missing)?),
+                other => anyhow::bail!("unknown rate_phase key '{other}'"),
+            }
+        }
+        let class =
+            class.ok_or_else(|| anyhow::anyhow!("rate_phase {i} needs a 'class'"))?;
+        let t_start =
+            t_start.ok_or_else(|| anyhow::anyhow!("rate_phase {i} needs a 't_start'"))?;
+        let rate =
+            rate.ok_or_else(|| anyhow::anyhow!("rate_phase {i} needs a 'rate_per_ue'"))?;
+        if t_start < 0.0 || rate <= 0.0 {
+            anyhow::bail!(
+                "rate_phase {i} needs t_start >= 0 and a positive rate_per_ue"
+            );
+        }
+        let w = out
+            .iter_mut()
+            .find(|w| w.name == class)
+            .ok_or_else(|| {
+                anyhow::anyhow!("rate_phase references unknown workload class '{class}'")
+            })?;
+        if let Some(last) = w.rate_phases.last() {
+            if t_start <= last.t_start {
+                anyhow::bail!(
+                    "rate phases of class '{class}' must be strictly ascending in t_start"
+                );
+            }
+        }
+        w.rate_phases.push(RatePhase { t_start, rate_per_ue: rate });
+    }
     Ok(out)
 }
 
@@ -396,6 +503,58 @@ mod tests {
         let doc = Document::parse(&text).unwrap();
         let back = workloads_from_toml(&doc).unwrap();
         assert_eq!(classes, back);
+    }
+
+    #[test]
+    fn rate_phase_toml_round_trip() {
+        let classes = vec![
+            WorkloadClass::chat()
+                .with_rate_phase(2.0, 0.9)
+                .with_rate_phase(5.0, 0.2),
+            WorkloadClass::translation().with_rate_phase(1.5, 3.0),
+        ];
+        let text = workloads_to_toml(&classes);
+        let doc = Document::parse(&text).unwrap();
+        let back = workloads_from_toml(&doc).unwrap();
+        assert_eq!(classes, back);
+    }
+
+    #[test]
+    fn rate_at_is_piecewise_constant() {
+        let w = WorkloadClass::chat()
+            .with_rate(0.5)
+            .with_rate_phase(2.0, 1.5)
+            .with_rate_phase(6.0, 0.25);
+        assert_eq!(w.rate_at(0.0), 0.5);
+        assert_eq!(w.rate_at(1.999), 0.5);
+        assert_eq!(w.rate_at(2.0), 1.5);
+        assert_eq!(w.rate_at(5.9), 1.5);
+        assert_eq!(w.rate_at(6.0), 0.25);
+        assert_eq!(w.rate_at(1e9), 0.25);
+        // empty schedule == the constant base rate everywhere
+        let plain = WorkloadClass::chat().with_rate(0.5);
+        assert_eq!(plain.rate_at(0.0), 0.5);
+        assert_eq!(plain.rate_at(1e6), 0.5);
+    }
+
+    #[test]
+    fn rate_phase_toml_rejects_bad_schedules() {
+        let base = workloads_to_toml(&[WorkloadClass::chat()]);
+        let bad = |tail: &str| {
+            let doc = Document::parse(&format!("{base}{tail}")).unwrap();
+            workloads_from_toml(&doc).unwrap_err().to_string()
+        };
+        let err = bad("[[workload.rate_phase]]\nclass = \"nope\"\nt_start = 1.0\nrate_per_ue = 0.5\n");
+        assert!(err.contains("unknown workload class"), "{err}");
+        let err = bad("[[workload.rate_phase]]\nclass = \"chat\"\nt_start = 1.0\nrate_per_ue = -2.0\n");
+        assert!(err.contains("positive"), "{err}");
+        let err = bad(concat!(
+            "[[workload.rate_phase]]\nclass = \"chat\"\nt_start = 3.0\nrate_per_ue = 0.5\n",
+            "[[workload.rate_phase]]\nclass = \"chat\"\nt_start = 2.0\nrate_per_ue = 0.5\n",
+        ));
+        assert!(err.contains("ascending"), "{err}");
+        let err = bad("[[workload.rate_phase]]\nclass = \"chat\"\nt_start = 1.0\nwat = 2\n");
+        assert!(err.contains("unknown rate_phase key"), "{err}");
     }
 
     #[test]

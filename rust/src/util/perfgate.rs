@@ -154,6 +154,18 @@ pub fn scale_metrics(text: &str) -> anyhow::Result<Vec<(String, f64)>> {
                     ));
                 }
             }
+            "pdes" => {
+                if let (Some(cells), Some(sync), Some(eps)) = (
+                    row.get("cells").and_then(|x| x.as_f64()),
+                    row.get("sync").and_then(|x| x.as_str()),
+                    row.get("events_per_sec").and_then(|x| x.as_f64()),
+                ) {
+                    out.push((
+                        format!("scale/pdes/{}/{sync}/events_per_sec", cells as u64),
+                        eps,
+                    ));
+                }
+            }
             sweep if sweep.starts_with("sweep_") => {
                 if let Some(w) = row.get("wall_s").and_then(|x| x.as_f64()) {
                     out.push((format!("scale/{sweep}/wall_s"), w));
@@ -395,16 +407,17 @@ mod tests {
         let m = hotpath_metrics(hot).unwrap();
         assert_eq!(m, vec![("hotpath/dess: 10k schedule+pop/mean_ns".to_string(), 100.0)]);
 
-        let scale = "[\n  {\"name\": \"sls_scale\", \"n_ues\": 1000, \"mode\": \"active_set\", \"events\": 5, \"jobs\": 2, \"wall_s\": 0.1, \"events_per_sec\": 50.0},\n  {\"name\": \"speedup_vs_dense\", \"n_ues\": 1000, \"speedup\": 3.5},\n  {\"name\": \"coupled_radio\", \"n_ues\": 1000, \"events\": 9, \"jobs\": 4, \"wall_s\": 0.2, \"events_per_sec\": 45.0},\n  {\"name\": \"sweep_parallel\", \"points\": 4, \"seeds\": 3, \"wall_s\": 1.25}\n]";
+        let scale = "[\n  {\"name\": \"sls_scale\", \"n_ues\": 1000, \"mode\": \"active_set\", \"events\": 5, \"jobs\": 2, \"wall_s\": 0.1, \"events_per_sec\": 50.0},\n  {\"name\": \"speedup_vs_dense\", \"n_ues\": 1000, \"speedup\": 3.5},\n  {\"name\": \"coupled_radio\", \"n_ues\": 1000, \"events\": 9, \"jobs\": 4, \"wall_s\": 0.2, \"events_per_sec\": 45.0},\n  {\"name\": \"pdes\", \"cells\": 16, \"sync\": \"frontier\", \"events\": 7, \"jobs\": 3, \"wall_s\": 0.3, \"events_per_sec\": 33.0},\n  {\"name\": \"sweep_parallel\", \"points\": 4, \"seeds\": 3, \"wall_s\": 1.25}\n]";
         let m = scale_metrics(scale).unwrap();
-        assert_eq!(m.len(), 4);
+        assert_eq!(m.len(), 5);
         assert_eq!(m[0].0, "scale/sls_scale/1000/active_set/events_per_sec");
         assert_eq!(m[1], ("scale/speedup_vs_dense/1000".to_string(), 3.5));
         assert_eq!(
             m[2],
             ("scale/coupled_radio/1000/events_per_sec".to_string(), 45.0)
         );
-        assert_eq!(m[3], ("scale/sweep_parallel/wall_s".to_string(), 1.25));
+        assert_eq!(m[3], ("scale/pdes/16/frontier/events_per_sec".to_string(), 33.0));
+        assert_eq!(m[4], ("scale/sweep_parallel/wall_s".to_string(), 1.25));
     }
 
     #[test]

@@ -13,8 +13,9 @@ use icc6g::config::SchemeConfig;
 use icc6g::metrics::JobFate;
 use icc6g::prop_assert;
 use icc6g::scenario::{
-    cell_seed, CellSpec, HandoverSpec, MobilitySpec, RoutingPolicy, ScenarioBuilder,
-    ScenarioResult, ServiceModelKind, TopologySpec, WorkloadClass,
+    cell_seed, AutoscalerKind, CellSpec, CellSync, ClusterSpec, HandoverSpec,
+    MobilitySpec, NodeChurnSpec, RoutingPolicy, ScenarioBuilder, ScenarioResult,
+    ServiceModelKind, TopologySpec, WorkloadClass,
 };
 use icc6g::util::proptest::check;
 
@@ -221,6 +222,165 @@ fn threaded_stepping_bit_identical_with_coupling_and_handover() {
             );
         }
     }
+}
+
+/// Bit-level equality of two runs: event count, every per-job latency
+/// component, and the per-cell radio slices.
+fn assert_bit_identical(a: &ScenarioResult, b: &ScenarioResult, tag: &str) {
+    assert_eq!(a.events, b.events, "{tag}: event counts diverged");
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{tag}: job counts diverged");
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.job_id, y.job_id, "{tag}");
+        assert_eq!(x.cell_id, y.cell_id, "{tag}");
+        assert_eq!(x.class_id, y.class_id, "{tag}");
+        assert_eq!(x.t_gen.to_bits(), y.t_gen.to_bits(), "{tag}");
+        assert_eq!(x.t_comm.to_bits(), y.t_comm.to_bits(), "{tag}");
+        assert_eq!(x.t_queue.to_bits(), y.t_queue.to_bits(), "{tag}");
+        assert_eq!(x.t_service.to_bits(), y.t_service.to_bits(), "{tag}");
+        assert_eq!(x.ttft.to_bits(), y.ttft.to_bits(), "{tag}");
+        assert_eq!(x.fate, y.fate, "{tag}");
+    }
+    assert_eq!(
+        a.report.e2e.mean().to_bits(),
+        b.report.e2e.mean().to_bits(),
+        "{tag}"
+    );
+    assert_eq!(a.report.radio.len(), b.report.radio.len(), "{tag}");
+    for (x, y) in a.report.radio.iter().zip(&b.report.radio) {
+        assert_eq!(x.handovers_in, y.handovers_in, "{tag}");
+        assert_eq!(x.handovers_out, y.handovers_out, "{tag}");
+        assert_eq!(x.iot_db.mean().to_bits(), y.iot_db.mean().to_bits(), "{tag}");
+    }
+}
+
+/// The full-surface scenario the conservative-PDES determinism claim is
+/// pinned on: dynamic interference coupling, mobility, A3 handover, AND
+/// an elastic cluster with node churn re-dispatching work.
+fn churned(threads: usize, seed: u64, sync: CellSync) -> ScenarioResult {
+    ScenarioBuilder::new()
+        .scheme(SchemeConfig::icc())
+        .horizon(3.0)
+        .warmup(0.5)
+        .seed(seed)
+        .threads(threads)
+        .cell_sync(sync)
+        .routing(RoutingPolicy::CellAffinity { spill_queue: 1 })
+        .service_kind(ServiceModelKind::TokenSampled)
+        .workload(WorkloadClass::chat())
+        .cells(4, CellSpec::new(6))
+        .topology(TopologySpec::hex(300.0))
+        .mobility(MobilitySpec::fixed(30.0))
+        .handover(HandoverSpec { hysteresis_db: 1.0, ttt_s: 0.1, interruption_slots: 4 })
+        .cluster(ClusterSpec {
+            policy: AutoscalerKind::QueueDepth { high: 6, low: 1 },
+            min_nodes: 1,
+            retry_budget: 1,
+            ..Default::default()
+        })
+        .node(gpu(), 1)
+        .node_churn(NodeChurnSpec { mtbf: 1.0, mttr: 0.3, spinup: 0.1 })
+        .node(gpu(), 1)
+        .build()
+        .run()
+}
+
+#[test]
+fn frontier_pdes_bit_identical_to_serial_under_coupling_handover_and_churn() {
+    // The tentpole determinism property: the conservative frontier
+    // scheduler, with every dynamic surface enabled at once, matches
+    // the serial engine bit for bit at every thread count.
+    let serial = churned(1, 17, CellSync::Frontier);
+    assert!(serial.report.n_jobs > 0);
+    // CI's pdes-matrix job pins a single worker count per leg via
+    // ICC6G_PDES_THREADS; a plain `cargo test` sweeps all of them.
+    let counts: Vec<usize> = match std::env::var("ICC6G_PDES_THREADS") {
+        Ok(v) => vec![v
+            .parse()
+            .expect("ICC6G_PDES_THREADS must be a worker count")],
+        Err(_) => vec![2, 4, 8],
+    };
+    for threads in counts {
+        let par = churned(threads, 17, CellSync::Frontier);
+        assert_bit_identical(&serial, &par, &format!("frontier x{threads}"));
+    }
+    // ... and the legacy barrier pool lands on the same trajectory, so
+    // the two threaded protocols are interchangeable A/B candidates.
+    let barrier = churned(4, 17, CellSync::Barrier);
+    assert_bit_identical(&serial, &barrier, "barrier x4");
+}
+
+#[test]
+fn frontier_pdes_64_cell_smoke() {
+    // Coupled 64-cell hex grid: the frontier structure must stay
+    // correct (and bit-identical to serial) well past the thread count.
+    let mk = |threads: usize| {
+        ScenarioBuilder::new()
+            .scheme(SchemeConfig::icc())
+            .horizon(0.5)
+            .warmup(0.1)
+            .seed(3)
+            .threads(threads)
+            .service_kind(ServiceModelKind::TokenSampled)
+            .workload(WorkloadClass::chat())
+            .cells(64, CellSpec::new(2))
+            .topology(TopologySpec::hex(300.0))
+            .node(gpu().scaled(4.0), 2)
+            .build()
+            .run()
+    };
+    let serial = mk(1);
+    assert_eq!(serial.report.radio.len(), 64);
+    assert!(serial.report.n_jobs > 0);
+    let par = mk(0); // all cores
+    assert_bit_identical(&serial, &par, "64-cell frontier");
+}
+
+#[test]
+fn correlated_shadowing_is_deterministic_and_thread_invariant() {
+    let mk = |threads: usize, corr: Option<f64>| {
+        let mut mob = MobilitySpec::fixed(30.0);
+        if let Some(d) = corr {
+            mob = mob.with_shadow_corr(d);
+        }
+        ScenarioBuilder::new()
+            .scheme(SchemeConfig::icc())
+            .horizon(2.0)
+            .warmup(0.5)
+            .seed(9)
+            .threads(threads)
+            .service_kind(ServiceModelKind::TokenSampled)
+            .workload(WorkloadClass::chat())
+            .cells(4, CellSpec::new(6))
+            .topology(TopologySpec::hex(300.0))
+            .mobility(mob)
+            .handover(HandoverSpec {
+                hysteresis_db: 1.0,
+                ttt_s: 0.1,
+                interruption_slots: 4,
+            })
+            .node(gpu(), 1)
+            .node(gpu(), 1)
+            .build()
+            .run()
+    };
+    // Gudmundson decorrelation is deterministic per seed ...
+    let corr = mk(1, Some(50.0));
+    assert_bit_identical(&corr, &mk(1, Some(50.0)), "corr repeat");
+    // ... invariant to the thread count ...
+    assert_bit_identical(&corr, &mk(4, Some(50.0)), "corr x4");
+    // ... and actually perturbs the radio trajectory relative to the
+    // default drop-time shadowing (the off path draws nothing extra).
+    let base = mk(1, None);
+    let differs = base
+        .report
+        .radio
+        .iter()
+        .zip(&corr.report.radio)
+        .any(|(a, b)| a.iot_db.mean().to_bits() != b.iot_db.mean().to_bits());
+    assert!(
+        differs || base.events != corr.events,
+        "correlated shadowing changed nothing observable"
+    );
 }
 
 #[test]

@@ -1,0 +1,106 @@
+//! Warm-started capacity sweep: share one warm-up per seed.
+//!
+//! A capacity sweep re-simulates the same warm-up transient at every
+//! rate point — per seed, `grid_points × warm_s` simulated seconds
+//! that produce no measurements. Engine snapshots remove the
+//! redundancy: simulate the warm-up **once** per seed, checkpoint it
+//! (`ScenarioEngine::snapshot`), then fork the checkpoint across the
+//! rate axis and simulate only the measured remainder of each run.
+//!
+//! The demo grid steps its arrival rate at the warm-up boundary, so
+//! the warm-up prefix is rate-invariant and [`WarmStart::Exact`]
+//! applies: the warm sweep is **bit-identical** to the cold one —
+//! identical merged reports, identical capacity estimate — it just
+//! skips `(grid_points − 1) × warm_s` simulated seconds per seed.
+//! (Grids that vary the rate from t = 0 can still warm-start behind
+//! the explicit `WarmStart::Forced` approximation flag; see
+//! DESIGN.md §13 for the validity contract.)
+//!
+//! Run: `cargo run --release --example warm_sweep`
+
+use std::time::Instant;
+
+use icc6g::config::SchemeConfig;
+use icc6g::coordinator::{capacity_from_curve, CurvePoint};
+use icc6g::llm::GpuSpec;
+use icc6g::scenario::{CellSpec, Scenario, ScenarioBuilder, WorkloadClass};
+use icc6g::sweep::{replication_seeds, sweep_grid, sweep_grid_warm, GridPoint, WarmStart};
+
+/// Warm-up seconds shared across the grid (also the phase boundary).
+const WARM_S: f64 = 6.0;
+const HORIZON: f64 = 8.0;
+const UES: u32 = 120;
+
+/// One grid point: a fixed 120-UE population whose per-UE rate steps
+/// to `x / UES` at the warm-up boundary after a light shared prefix.
+fn make(x: f64, seed: u64) -> Scenario {
+    ScenarioBuilder::new()
+        .scheme(SchemeConfig::icc())
+        .horizon(HORIZON)
+        .warmup(1.0)
+        .seed(seed)
+        .workload(
+            WorkloadClass::translation()
+                .with_rate(10.0 / UES as f64)
+                .with_rate_phase(WARM_S, x / UES as f64),
+        )
+        .cells(2, CellSpec::new(UES / 2))
+        .node(GpuSpec::gh200_nvl2(), 1)
+        .node(GpuSpec::gh200_nvl2(), 1)
+        .build()
+}
+
+fn capacity(points: &[GridPoint], alpha: f64) -> f64 {
+    let curve: Vec<CurvePoint> =
+        points.iter().map(|p| CurvePoint::from_report(p.x, &p.report)).collect();
+    capacity_from_curve(&curve, alpha)
+}
+
+fn main() {
+    let xs: Vec<f64> = (1..=8).map(|i| i as f64 * 15.0).collect();
+    let seeds = replication_seeds(1, 3);
+    let alpha = 0.95;
+    println!("=== Warm-started capacity sweep: fork one checkpoint per seed ===\n");
+    println!(
+        "{} rate points x {} seeds, {WARM_S:.0} s shared warm-up of a {HORIZON:.0} s horizon\n",
+        xs.len(),
+        seeds.len(),
+    );
+
+    let t0 = Instant::now();
+    let cold = sweep_grid(&xs, &seeds, 0, |x, s| make(x, s).run().report);
+    let cold_wall = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let warm = sweep_grid_warm(&xs, &seeds, WARM_S, 0, WarmStart::Exact, make);
+    let warm_wall = t0.elapsed().as_secs_f64();
+
+    println!("{:>8}  {:>10}  {:>10}", "rate", "cold sat", "warm sat");
+    for (c, w) in cold.iter().zip(&warm) {
+        println!(
+            "{:>8.1}  {:>10.4}  {:>10.4}",
+            c.x,
+            c.report.satisfaction_rate(),
+            w.report.satisfaction_rate(),
+        );
+        assert_eq!(
+            c.report.to_json(),
+            w.report.to_json(),
+            "warm point diverged from cold at rate {}",
+            c.x
+        );
+    }
+
+    let (cap_cold, cap_warm) = (capacity(&cold, alpha), capacity(&warm, alpha));
+    println!("\ncapacity at alpha = {alpha}: cold {cap_cold:.1}, warm {cap_warm:.1} prompts/s");
+    assert_eq!(
+        cap_cold.to_bits(),
+        cap_warm.to_bits(),
+        "capacity estimates must be identical"
+    );
+    println!(
+        "wall: cold {cold_wall:.2} s, warm {warm_wall:.2} s ({:.1}x)",
+        cold_wall / warm_wall.max(1e-12),
+    );
+    println!("\nevery warm point is bit-identical to its cold twin (asserted above).");
+}

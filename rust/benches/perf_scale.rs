@@ -205,6 +205,59 @@ fn main() {
         js
     };
 
+    // Warm-start sweep: one shared warm-up segment per seed vs
+    // re-simulating it at every rate point. Warm-up-heavy grid (4 s
+    // warm-up of a 5 s horizon, 6 rate points), serial so the wall
+    // ratio is a clean per-run comparison. The rate steps at the
+    // warm-up boundary, so WarmStart::Exact applies and the bench
+    // doubles as an end-to-end bit-identity check.
+    let warm_json = {
+        use icc6g::sweep::{sweep_grid, sweep_grid_warm, WarmStart};
+        let (warm_s, xs) = (4.0f64, [0.05, 0.075, 0.1, 0.125, 0.15, 0.175]);
+        let seeds = [1u64, 1001];
+        let make = |x: f64, seed: u64| {
+            ScenarioBuilder::new()
+                .scheme(bench_scheme())
+                .horizon(5.0)
+                .warmup(0.5)
+                .seed(seed)
+                .workload(
+                    WorkloadClass::translation().with_rate(0.05).with_rate_phase(warm_s, x),
+                )
+                .cell(CellSpec::new(200))
+                .node(GpuSpec::gh200_nvl2(), 1)
+                .build()
+        };
+        let t0 = Instant::now();
+        let cold = sweep_grid(&xs, &seeds, 1, |x, s| make(x, s).run().report);
+        let cold_wall = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let warm = sweep_grid_warm(&xs, &seeds, warm_s, 1, WarmStart::Exact, make);
+        let warm_wall = t0.elapsed().as_secs_f64();
+        for (c, w) in cold.iter().zip(&warm) {
+            assert_eq!(
+                c.report.to_json(),
+                w.report.to_json(),
+                "warm sweep diverged from cold at x = {}",
+                c.x
+            );
+        }
+        let speedup = cold_wall / warm_wall.max(1e-12);
+        println!(
+            "sweep warm-start: {} points x {} seeds  cold {cold_wall:.2} s  \
+             warm {warm_wall:.2} s  speedup {speedup:.1}x",
+            xs.len(),
+            seeds.len(),
+        );
+        format!(
+            ",\n  {{\"name\": \"sweep_warm\", \"points\": {}, \"seeds\": {}, \
+             \"cold_wall_s\": {cold_wall:.4}, \"warm_wall_s\": {warm_wall:.4}, \
+             \"speedup\": {speedup:.2}}}",
+            xs.len(),
+            seeds.len(),
+        )
+    };
+
     // Parallel sweep harness on the same fixed-load workload.
     let base = scale_cfg(1_000, false);
     let scheme = bench_scheme();
@@ -245,6 +298,7 @@ fn main() {
     }
     js.push_str(&coupled_json);
     js.push_str(&pdes_json);
+    js.push_str(&warm_json);
     js.push_str(&sweep_json);
     js.push_str("\n]\n");
     match std::fs::write("BENCH_scale.json", &js) {

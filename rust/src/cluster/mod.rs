@@ -60,6 +60,27 @@ impl NodeState {
         self != NodeState::Down
     }
 
+    /// Stable wire discriminant (engine snapshots).
+    pub(crate) fn to_u8(self) -> u8 {
+        match self {
+            NodeState::Provisioning => 0,
+            NodeState::Up => 1,
+            NodeState::Draining => 2,
+            NodeState::Down => 3,
+        }
+    }
+
+    /// Inverse of [`NodeState::to_u8`].
+    pub(crate) fn from_u8(v: u8) -> Option<Self> {
+        Some(match v {
+            0 => NodeState::Provisioning,
+            1 => NodeState::Up,
+            2 => NodeState::Draining,
+            3 => NodeState::Down,
+            _ => return None,
+        })
+    }
+
     pub fn name(self) -> &'static str {
         match self {
             NodeState::Provisioning => "provisioning",
@@ -290,6 +311,27 @@ struct ClassAcct {
     dollars: f64,
     redispatched: u64,
     lost: u64,
+}
+
+/// Flat dump of [`ClusterRt`]'s mutable state for engine snapshots.
+/// The spec, policy object, churn table and GPU catalog are
+/// config-derived and rebuilt from the scenario; the built-in
+/// autoscaler policies are stateless, so the policy needs no capture.
+#[derive(Debug, Clone)]
+pub(crate) struct ClusterRtState {
+    /// [`NodeState::to_u8`] discriminants, one per node.
+    pub states: Vec<u8>,
+    pub epochs: Vec<u32>,
+    pub repairing: Vec<bool>,
+    /// Per-node churn RNG stream positions.
+    pub rngs: Vec<([u64; 4], Option<f64>)>,
+    pub powered_since: Vec<f64>,
+    /// `(up_seconds, served, redispatched, lost, failures)` per node.
+    pub acct: Vec<(f64, u64, u64, u64, u64)>,
+    /// `(gpu_seconds, joules, dollars, redispatched, lost)` per class.
+    pub class_acct: Vec<(f64, f64, f64, u64, u64)>,
+    pub jobs_ttft: u64,
+    pub ttft_violations: u64,
 }
 
 /// Runtime control-plane state for one scenario run. Owned and driven
@@ -545,6 +587,69 @@ impl ClusterRt {
                 }
             }
         }
+    }
+
+    /// Capture the mutable control-plane state for an engine snapshot.
+    pub(crate) fn snapshot_state(&self) -> ClusterRtState {
+        ClusterRtState {
+            states: self.states.iter().map(|s| s.to_u8()).collect(),
+            epochs: self.epochs.clone(),
+            repairing: self.repairing.clone(),
+            rngs: self.rngs.iter().map(|r| r.snapshot_state()).collect(),
+            powered_since: self.powered_since.clone(),
+            acct: self
+                .acct
+                .iter()
+                .map(|a| (a.up_seconds, a.served, a.redispatched, a.lost, a.failures))
+                .collect(),
+            class_acct: self
+                .class_acct
+                .iter()
+                .map(|c| (c.gpu_seconds, c.joules, c.dollars, c.redispatched, c.lost))
+                .collect(),
+            jobs_ttft: self.jobs_ttft,
+            ttft_violations: self.ttft_violations,
+        }
+    }
+
+    /// Overwrite the mutable state of a freshly-constructed runtime
+    /// with a checkpoint (inverse of [`ClusterRt::snapshot_state`]).
+    pub(crate) fn restore_state(&mut self, st: ClusterRtState) {
+        assert_eq!(st.states.len(), self.n_nodes(), "snapshot node count mismatch");
+        assert_eq!(st.class_acct.len(), self.class_acct.len(), "snapshot class count mismatch");
+        self.states = st
+            .states
+            .iter()
+            .map(|&v| NodeState::from_u8(v).expect("invalid NodeState discriminant"))
+            .collect();
+        self.epochs = st.epochs;
+        self.repairing = st.repairing;
+        self.rngs = st.rngs.into_iter().map(|(s, g)| Rng::from_state(s, g)).collect();
+        self.powered_since = st.powered_since;
+        self.acct = st
+            .acct
+            .into_iter()
+            .map(|(up_seconds, served, redispatched, lost, failures)| NodeAcct {
+                up_seconds,
+                served,
+                redispatched,
+                lost,
+                failures,
+            })
+            .collect();
+        self.class_acct = st
+            .class_acct
+            .into_iter()
+            .map(|(gpu_seconds, joules, dollars, redispatched, lost)| ClassAcct {
+                gpu_seconds,
+                joules,
+                dollars,
+                redispatched,
+                lost,
+            })
+            .collect();
+        self.jobs_ttft = st.jobs_ttft;
+        self.ttft_violations = st.ttft_violations;
     }
 
     /// Close the books at the end of the run.

@@ -204,6 +204,51 @@ impl BatchEngine {
         self.running = false;
     }
 
+    /// Engine-snapshot view of the dynamic state: `(kv_used, running,
+    /// dropped, active batch as (job, tokens_left, prefilled) triples
+    /// in stored order, waiting queue)`. The active-batch order is
+    /// preserved verbatim — it determines the prefill/decode sweep
+    /// order of the next iteration.
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn snapshot_state(
+        &self,
+    ) -> (f64, bool, u64, Vec<(BatchJob, u32, bool)>, (u64, Vec<(f64, u64, BatchJob)>)) {
+        (
+            self.kv_used,
+            self.running,
+            self.dropped,
+            self.active.iter().map(|a| (a.job, a.tokens_left, a.prefilled)).collect(),
+            self.queue.snapshot_entries(),
+        )
+    }
+
+    /// Rebuild an engine mid-run: config fields from the scenario
+    /// spec, dynamic fields from a checkpoint.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn restore(
+        discipline: Discipline,
+        gpu: GpuSpec,
+        max_batch: u32,
+        kv_budget: f64,
+        kv_used: f64,
+        running: bool,
+        dropped: u64,
+        active: Vec<(BatchJob, u32, bool)>,
+        queue_seq: u64,
+        queue_entries: Vec<(f64, u64, BatchJob)>,
+    ) -> Self {
+        let mut e = Self::new(discipline, gpu, max_batch, kv_budget);
+        e.kv_used = kv_used;
+        e.running = running;
+        e.dropped = dropped;
+        e.active = active
+            .into_iter()
+            .map(|(job, tokens_left, prefilled)| Active { job, tokens_left, prefilled })
+            .collect();
+        e.queue = ReadyQueue::restore(discipline, queue_seq, queue_entries);
+        e
+    }
+
     /// A job arrives at the node at time `now`. Events are appended to
     /// the caller's buffer (clear it between calls).
     pub fn enqueue(&mut self, job: BatchJob, now: f64, events: &mut Vec<BatchEvent>) {

@@ -160,6 +160,47 @@ impl<J> ReadyQueue<J> {
     }
 }
 
+impl<J: Copy> ReadyQueue<J> {
+    /// Engine-snapshot view: `(seq counter, entries)`, each entry a
+    /// `(priority key, insertion seq, job)` triple. FIFO queues list
+    /// jobs front-to-back with positional seqs; priority queues list
+    /// entries in ascending insertion order, so a rebuild reproduces
+    /// the exact future pop order (key order + stable FIFO tiebreak).
+    pub(crate) fn snapshot_entries(&self) -> (u64, Vec<(f64, u64, J)>) {
+        match self.discipline {
+            Discipline::Fifo => (
+                self.seq,
+                self.fifo.iter().enumerate().map(|(i, j)| (0.0, i as u64, *j)).collect(),
+            ),
+            Discipline::DeadlinePriority { .. } => {
+                let mut v: Vec<(f64, u64, J)> =
+                    self.prio.iter().map(|e| (e.key, e.seq, e.job)).collect();
+                v.sort_by_key(|&(_, seq, _)| seq);
+                (self.seq, v)
+            }
+        }
+    }
+
+    /// Rebuild from [`ReadyQueue::snapshot_entries`] output.
+    pub(crate) fn restore(
+        discipline: Discipline,
+        seq: u64,
+        entries: Vec<(f64, u64, J)>,
+    ) -> Self {
+        let mut rq = Self::new(discipline);
+        match discipline {
+            Discipline::Fifo => rq.fifo.extend(entries.into_iter().map(|(_, _, j)| j)),
+            Discipline::DeadlinePriority { .. } => {
+                for (key, s, job) in entries {
+                    rq.prio.push(PrioEntry { key, seq: s, job });
+                }
+            }
+        }
+        rq.seq = seq;
+        rq
+    }
+}
+
 /// What happened when the node accepted / finished a job.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum NodeEvent {
@@ -246,6 +287,29 @@ impl ComputeNode {
     pub fn evict(&mut self, out: &mut Vec<ComputeJob>) {
         self.queue.drain_into(out);
         self.busy = 0;
+    }
+
+    /// Engine-snapshot view: `(busy servers, dropped count, queue)`.
+    pub(crate) fn snapshot_state(&self) -> (u32, u64, (u64, Vec<(f64, u64, ComputeJob)>)) {
+        (self.busy, self.dropped, self.queue.snapshot_entries())
+    }
+
+    /// Rebuild a node from [`ComputeNode::snapshot_state`] output.
+    pub(crate) fn restore(
+        discipline: Discipline,
+        n_servers: u32,
+        busy: u32,
+        dropped: u64,
+        queue_seq: u64,
+        queue_entries: Vec<(f64, u64, ComputeJob)>,
+    ) -> Self {
+        Self {
+            discipline,
+            n_servers,
+            busy,
+            queue: ReadyQueue::restore(discipline, queue_seq, queue_entries),
+            dropped,
+        }
     }
 }
 

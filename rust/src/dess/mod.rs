@@ -380,6 +380,53 @@ impl<E> EventQueue<E> {
         }
     }
 
+    /// Engine-snapshot view: `(now, seq counter, processed count,
+    /// entries)` with entries sorted by the pop order `(time, seq)`.
+    /// Both backends yield the same canonical list, so snapshot bytes
+    /// do not depend on the backend in use.
+    pub fn snapshot_entries(&self) -> (f64, u64, u64, Vec<(f64, u64, E)>)
+    where
+        E: Clone,
+    {
+        let mut entries: Vec<(f64, u64, E)> = match &self.backend {
+            Backend::Heap(h) => h.iter().map(|e| (e.time, e.seq, e.event.clone())).collect(),
+            Backend::Calendar(c) => c
+                .buckets
+                .iter()
+                .flatten()
+                .map(|e| (e.time, e.seq, e.event.clone()))
+                .collect(),
+        };
+        entries.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0).unwrap_or(Ordering::Equal).then_with(|| a.1.cmp(&b.1))
+        });
+        (self.now, self.seq, self.processed, entries)
+    }
+
+    /// Rebuild a queue from [`EventQueue::snapshot_entries`] output.
+    /// Seq numbers are preserved verbatim (so restored ties break
+    /// exactly as they would have) and the seq counter resumes where
+    /// it left off.
+    pub fn restore(
+        kind: EventListKind,
+        now: f64,
+        seq: u64,
+        processed: u64,
+        entries: Vec<(f64, u64, E)>,
+    ) -> Self {
+        let mut q = Self::with_kind(kind, entries.len());
+        q.now = now;
+        q.seq = seq;
+        q.processed = processed;
+        for (time, entry_seq, event) in entries {
+            match &mut q.backend {
+                Backend::Heap(h) => h.push(Entry { time, seq: entry_seq, event }),
+                Backend::Calendar(c) => c.push(time, entry_seq, event),
+            }
+        }
+        q
+    }
+
     /// Run until `horizon` (exclusive) or queue exhaustion, invoking
     /// `handler(now, event, queue)` for each event. The handler may
     /// schedule further events.

@@ -39,6 +39,7 @@ pub mod runtime;
 pub mod scenario;
 pub mod server;
 pub mod sim;
+pub mod snapshot;
 pub mod sweep;
 pub mod traffic;
 pub mod util;

@@ -371,6 +371,27 @@ impl UeBank {
         i
     }
 
+    /// Engine-snapshot view of UE `i`'s hot lanes (same record that
+    /// handover migration carries).
+    pub(crate) fn hot(&self, i: usize) -> UeHot {
+        UeHot {
+            avg_thpt: self.avg_thpt[i],
+            pf_next_slot: self.pf_next_slot[i],
+            blocked_until: self.blocked_until[i],
+            grant_ready_slot: self.grant_ready_slot[i],
+        }
+    }
+
+    /// Restore UE `i`'s hot lanes from a checkpoint. The rx-power
+    /// cache is deliberately left stale: it is a pure function of the
+    /// restored link and is re-derived bit-identically on first touch.
+    pub(crate) fn set_hot(&mut self, i: usize, hot: UeHot) {
+        self.avg_thpt[i] = hot.avg_thpt;
+        self.pf_next_slot[i] = hot.pf_next_slot;
+        self.blocked_until[i] = hot.blocked_until;
+        self.grant_ready_slot[i] = hot.grant_ready_slot;
+    }
+
     fn note_pushed(&mut self, i: usize, bytes: u64) {
         // A zero-byte SDU adds no backlog; indexing the UE anyway
         // would desync the index from `buffered_bytes() > 0`.

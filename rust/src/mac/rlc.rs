@@ -84,6 +84,21 @@ impl RlcBuffer {
         done
     }
 
+    /// Snapshot view: the queued SDUs in FIFO order, head (possibly
+    /// partially drained) first. Used by engine checkpointing.
+    pub(crate) fn sdus(&self) -> impl Iterator<Item = &Sdu> {
+        self.queue.iter()
+    }
+
+    /// Rebuild a buffer from a snapshot's SDU list (FIFO order). Unlike
+    /// [`RlcBuffer::push`], this accepts partially-drained head SDUs
+    /// (`bytes_left < total_bytes`) — exactly what a mid-run checkpoint
+    /// contains.
+    pub(crate) fn from_sdus(sdus: Vec<Sdu>) -> Self {
+        let bytes = sdus.iter().map(|s| s.bytes_left as u64).sum();
+        Self { queue: sdus.into(), bytes }
+    }
+
     /// Allocation-free [`RlcBuffer::drain`]: completed SDUs are appended
     /// to `out` (a per-slot buffer reused across calls). Returns the
     /// number of bytes drained from the buffer.

@@ -137,6 +137,28 @@ impl UeMac {
         self
     }
 
+    /// Engine-snapshot view of the private HARQ/RR fields:
+    /// `(harq_attempt, last_served_slot)`.
+    pub(crate) fn snapshot_state(&self) -> (u8, u64) {
+        (self.harq_attempt, self.last_served_slot)
+    }
+
+    /// Rebuild a UE from checkpointed state (buffers may hold
+    /// partially-drained SDUs; the bank re-derives its backlog index
+    /// from the restored buffers in [`UeBank::new`]).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_snapshot(
+        link: LargeScale,
+        tag: u64,
+        job_buf: RlcBuffer,
+        bg_buf: RlcBuffer,
+        harq_attempt: u8,
+        sr_phase: u64,
+        last_served_slot: u64,
+    ) -> Self {
+        Self { link, tag, job_buf, bg_buf, harq_attempt, sr_phase, last_served_slot }
+    }
+
     /// Crate-private: byte-moving pushes must go through
     /// [`UeBank::push_job_sdu`] so the backlog index stays in sync
     /// (only [`UeBank::new`] may see pre-loaded buffers).

@@ -6,7 +6,11 @@
 //!   fig7       Fig 7: SLS satisfaction vs compute capacity (×A100, --threads)
 //!   simulate   One SLS run with explicit parameters / TOML config
 //!   scenario   One multi-class / multi-cell / multi-node Scenario-API run
-//!   sweep      Parallel capacity sweep (seed × rate grid, N threads)
+//!              (--snapshot-out/--snapshot-in checkpoint + resume)
+//!   sweep      Parallel capacity sweep (seed × rate grid, N threads;
+//!              --warm-start forks rate points from one warmed snapshot)
+//!   ab         Paired A/B comparison of two scenario configs under
+//!              common random numbers (per-seed deltas + 95% CI)
 //!   bench-diff Benchmark-regression gate vs benchmarks/baseline.json
 //!   serve      Real LLM serving over the PJRT runtime (TCP)
 //!   generate   One-shot generation through the AOT artifacts
@@ -14,13 +18,13 @@
 use icc6g::config::{SchemeConfig, SimConfig};
 use icc6g::coordinator::{
     capacity_from_curve, min_capacity_from_curve, sweep_arrival_rates_threaded,
-    sweep_gpu_capacity_threaded,
+    sweep_gpu_capacity_threaded, CurvePoint,
 };
 use icc6g::queueing::analytic::{scheme_satisfaction, SystemParams};
 use icc6g::queueing::tandem_mc::empirical_satisfaction;
 use icc6g::queueing::{service_capacity, Scheme};
 use icc6g::scenario::{
-    CellSpec, RoutingPolicy, ScenarioBuilder, ServiceModelKind, WorkloadClass,
+    CellSpec, RoutingPolicy, ScenarioBuilder, ScenarioEngine, ServiceModelKind, WorkloadClass,
 };
 use icc6g::sim::run_scheme;
 use icc6g::util::args::{usage, Args, OptSpec};
@@ -39,6 +43,7 @@ fn main() {
         "simulate" => cmd_simulate(&rest),
         "scenario" => cmd_scenario(&rest),
         "sweep" => cmd_sweep(&rest),
+        "ab" => cmd_ab(&rest),
         "bench-diff" => cmd_bench_diff(&rest),
         "serve" => cmd_serve(&rest),
         "generate" => cmd_generate(&rest),
@@ -69,8 +74,16 @@ fn print_help() {
                       steps them in parallel; --isd/--layout place the sites and\n\
                       couple the radios (dynamic inter-cell interference),\n\
                       --speed moves the UEs, --handover enables A3 migration;\n\
-                      [[cell]]/[topology]/[mobility]/[handover] in --config)\n\
-           sweep      parallel capacity sweep over a rate grid (--threads)\n\
+                      [[cell]]/[topology]/[mobility]/[handover] in --config;\n\
+                      --snapshot-out checkpoints mid-run state to a file and\n\
+                      --snapshot-in resumes one, bit-identical to an\n\
+                      uninterrupted run)\n\
+           sweep      parallel capacity sweep over a rate grid (--threads;\n\
+                      --warm-start S simulates each seed's warm-up once,\n\
+                      snapshots at S seconds, and forks every rate point\n\
+                      from the shared checkpoint)\n\
+           ab         paired A/B of two scenario TOMLs under common random\n\
+                      numbers: per-seed satisfaction deltas with a 95% CI\n\
            bench-diff benchmark-regression gate: BENCH_*.json vs baseline\n\
            serve      real LLM serving over PJRT (--port, --artifacts)\n\
            generate   one-shot generation via the AOT artifacts\n\
@@ -383,6 +396,9 @@ fn cmd_scenario(argv: &[String]) -> i32 {
         OptSpec { name: "horizon", help: "simulated seconds", takes_value: true, default: Some("12") },
         OptSpec { name: "seed", help: "master RNG seed", takes_value: true, default: Some("1") },
         OptSpec { name: "json", help: "write the full report (incl. per-class TTFT/TPOT percentiles) to this JSON file", takes_value: true, default: None },
+        OptSpec { name: "snapshot-out", help: "checkpoint the engine state to this file at --snapshot-time, then keep running to the horizon", takes_value: true, default: None },
+        OptSpec { name: "snapshot-time", help: "capture instant for --snapshot-out in simulated seconds (default: half the horizon)", takes_value: true, default: None },
+        OptSpec { name: "snapshot-in", help: "resume from a checkpoint file instead of t = 0 (the CLI scenario options must rebuild the snapshotted config, arrival rates excepted)", takes_value: true, default: None },
         OptSpec { name: "help", help: "show help", takes_value: false, default: None },
     ];
     let args = match Args::parse(argv.iter().cloned(), &specs) {
@@ -565,7 +581,49 @@ fn cmd_scenario(argv: &[String]) -> i32 {
             return 2;
         }
     };
-    let res = scenario.run();
+    let res = if let Some(inp) = args.get("snapshot-in") {
+        let blob = match std::fs::read(inp) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("cannot read snapshot '{inp}': {e}");
+                return 1;
+            }
+        };
+        let mut eng = match ScenarioEngine::from_snapshot(&scenario, &blob) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("cannot restore snapshot '{inp}': {e}");
+                return 2;
+            }
+        };
+        eprintln!("resumed from '{inp}' at t = {:.3} s", eng.now());
+        eng.run_to(f64::INFINITY);
+        eng.finish()
+    } else if let Some(outp) = args.get("snapshot-out") {
+        let t_snap = match args.get_f64("snapshot-time") {
+            Ok(t) => t.unwrap_or(horizon * 0.5),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        if !(0.0..=horizon).contains(&t_snap) {
+            eprintln!("--snapshot-time must be in 0..=horizon");
+            return 2;
+        }
+        let mut eng = ScenarioEngine::new(&scenario);
+        eng.run_to(t_snap);
+        let blob = eng.snapshot();
+        if let Err(e) = std::fs::write(outp, &blob) {
+            eprintln!("cannot write snapshot '{outp}': {e}");
+            return 1;
+        }
+        eprintln!("wrote {} byte snapshot at t = {t_snap:.3} s to '{outp}'", blob.len());
+        eng.run_to(f64::INFINITY);
+        eng.finish()
+    } else {
+        scenario.run()
+    };
     println!("scheme       : {}", scenario.scheme().name);
     println!("service      : {}", scenario.service_name());
     println!(
@@ -794,6 +852,7 @@ fn cmd_sweep(argv: &[String]) -> i32 {
         OptSpec { name: "seed", help: "master RNG seed", takes_value: true, default: Some("1") },
         OptSpec { name: "horizon", help: "simulated seconds per replication", takes_value: true, default: Some("20") },
         OptSpec { name: "alpha", help: "target satisfaction", takes_value: true, default: Some("0.95") },
+        OptSpec { name: "warm-start", help: "warm-up seconds to share per seed: simulate once, checkpoint, fork across the rate axis. Holds the UE population fixed and scales the per-UE rate (the cold sweep grows the population), so curves differ slightly from a cold sweep at the same grid", takes_value: true, default: None },
         OptSpec { name: "help", help: "show help", takes_value: false, default: None },
     ];
     let args = match Args::parse(argv.iter().cloned(), &specs) {
@@ -840,6 +899,20 @@ fn cmd_sweep(argv: &[String]) -> i32 {
         }
     };
 
+    let warm_s = match args.get_f64("warm-start") {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if let Some(w) = warm_s {
+        if !(0.0..base.horizon).contains(&w) {
+            eprintln!("--warm-start must be in 0..horizon");
+            return 2;
+        }
+    }
+
     let n_workers = icc6g::sweep::resolve_threads(threads);
     let n_runs = rates.len() * seeds as usize * schemes.len();
     println!(
@@ -847,6 +920,12 @@ fn cmd_sweep(argv: &[String]) -> i32 {
         rates.len(),
         schemes.len(),
     );
+    if let Some(w) = warm_s {
+        println!(
+            "warm-start: sharing one {w:.1} s warm-up per (scheme, seed) across {} rate point(s)",
+            rates.len(),
+        );
+    }
     let wall0 = std::time::Instant::now();
     let mut t = Table::new(
         "Sweep — SLS job satisfaction + avg latencies vs prompt arrival rate",
@@ -854,7 +933,34 @@ fn cmd_sweep(argv: &[String]) -> i32 {
     );
     let mut caps = Vec::new();
     for scheme in &schemes {
-        let pts = sweep_arrival_rates_threaded(&base, scheme, &rates, seeds, threads);
+        let pts = match warm_s {
+            Some(w) => {
+                // Warm-started points fix the UE population and scale
+                // the per-UE rate: snapshot forking requires every grid
+                // point to share the cell/UE structure, which the cold
+                // sweep's population scaling breaks. The warm-up
+                // transient runs at the first grid rate (documented
+                // approximation — WarmStart::Forced).
+                let seed_list = icc6g::sweep::replication_seeds(base.seed, seeds);
+                icc6g::sweep::sweep_grid_warm(
+                    &rates,
+                    &seed_list,
+                    w,
+                    threads,
+                    icc6g::sweep::WarmStart::Forced,
+                    |x, seed| {
+                        let mut cfg = base.clone().with_scheme(scheme.clone());
+                        cfg.seed = seed;
+                        cfg.job_traffic.rate_per_ue = x / cfg.n_ues as f64;
+                        ScenarioBuilder::from_sim_config(&cfg).build()
+                    },
+                )
+                .into_iter()
+                .map(|p| CurvePoint::from_report(p.x, &p.report))
+                .collect()
+            }
+            None => sweep_arrival_rates_threaded(&base, scheme, &rates, seeds, threads),
+        };
         for p in &pts {
             t.row(&[
                 cell(p.x, 1),
@@ -882,6 +988,121 @@ fn cmd_sweep(argv: &[String]) -> i32 {
     println!(
         "\n{n_runs} replications in {wall:.2} s wall ({:.2} runs/s on {n_workers} thread(s))",
         n_runs as f64 / wall.max(1e-9),
+    );
+    0
+}
+
+fn cmd_ab(argv: &[String]) -> i32 {
+    let specs = [
+        OptSpec { name: "seeds", help: "paired replications (one shared seed per pair)", takes_value: true, default: Some("5") },
+        OptSpec { name: "seed", help: "master RNG seed (replication s uses seed + 1000·s on both sides)", takes_value: true, default: Some("1") },
+        OptSpec { name: "threads", help: "worker threads (0 = all cores)", takes_value: true, default: Some("0") },
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = match Args::parse(argv.iter().cloned(), &specs) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if args.flag("help") || args.positional().len() != 2 {
+        print!(
+            "{}",
+            usage(
+                "icc6g ab <scenario_a.toml> <scenario_b.toml>",
+                "Paired A/B comparison of two scenario configs under common\n\
+                 random numbers: each replication runs both configs at the\n\
+                 same seed, so the per-seed satisfaction deltas cancel the\n\
+                 shared simulation noise and the 95% CI on the mean delta is\n\
+                 far tighter than an unpaired comparison's.",
+                &specs
+            )
+        );
+        return if args.flag("help") { 0 } else { 2 };
+    }
+    let (path_a, path_b) = (&args.positional()[0], &args.positional()[1]);
+    let (seeds, base_seed, threads) = match (
+        args.get_u64("seeds"),
+        args.get_u64("seed"),
+        args.get_u64("threads"),
+    ) {
+        (Ok(n), Ok(s), Ok(t)) => {
+            (n.unwrap().clamp(1, 10_000) as u32, s.unwrap(), t.unwrap() as usize)
+        }
+        (Err(e), ..) | (_, Err(e), _) | (_, _, Err(e)) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+
+    let docs: Vec<icc6g::util::tomlmini::Document> = match [path_a, path_b]
+        .iter()
+        .map(|p| load_toml(p))
+        .collect::<Result<Vec<_>, _>>()
+    {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    // Validate both configs once up front so the parallel replications
+    // below can't fail halfway through a run matrix.
+    for (doc, path) in docs.iter().zip([path_a, path_b]) {
+        if let Err(e) =
+            ScenarioBuilder::new().apply_toml(doc).and_then(|b| b.seed(base_seed).try_build())
+        {
+            eprintln!("invalid scenario '{path}': {e}");
+            return 2;
+        }
+    }
+    let metric = |doc: &icc6g::util::tomlmini::Document, seed: u64| -> f64 {
+        ScenarioBuilder::new()
+            .apply_toml(doc)
+            .expect("config validated above")
+            .seed(seed)
+            .try_build()
+            .expect("config validated above")
+            .run()
+            .report
+            .satisfaction_rate()
+    };
+
+    let seed_list = icc6g::sweep::replication_seeds(base_seed, seeds);
+    println!(
+        "ab: {seeds} paired replication(s), A = '{path_a}', B = '{path_b}', CRN on shared seeds"
+    );
+    let rep = icc6g::sweep::sweep_ab(
+        &seed_list,
+        threads,
+        |s| metric(&docs[0], s),
+        |s| metric(&docs[1], s),
+    );
+
+    let mut t = Table::new(
+        "A/B — per-seed satisfaction under common random numbers",
+        &["seed", "sat_a", "sat_b", "delta (b-a)"],
+    );
+    for i in 0..rep.seeds.len() {
+        t.row(&[
+            rep.seeds[i].to_string(),
+            cell(rep.a[i], 4),
+            cell(rep.b[i], 4),
+            cell(rep.deltas[i], 4),
+        ]);
+    }
+    t.print();
+    let _ = t.write_csv("ab_pairs.csv");
+    println!("\nmean satisfaction : A {:.4}, B {:.4}", rep.mean_a, rep.mean_b);
+    println!("paired delta      : {:+.4} ± {:.4} (95% CI)", rep.delta_mean, rep.delta_ci95);
+    println!(
+        "verdict           : {}",
+        if rep.significant() {
+            if rep.delta_mean > 0.0 { "B better (CI excludes 0)" } else { "A better (CI excludes 0)" }
+        } else {
+            "no significant difference at 95%"
+        }
     );
     0
 }

@@ -86,6 +86,18 @@ impl Xoshiro256pp {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
+    /// Raw generator state (engine snapshots). Restoring via
+    /// [`Xoshiro256pp::from_state`] resumes the stream at the exact
+    /// position, so a checkpointed run replays bit-identically.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator at a captured stream position.
+    pub fn from_state(s: [u64; 4]) -> Self {
+        Self { s }
+    }
+
     /// Uniform in [0, n) without modulo bias (Lemire's method).
     #[inline]
     pub fn next_below(&mut self, n: u64) -> u64 {
@@ -117,6 +129,20 @@ impl Rng {
     /// Independent substream for entity `stream_id` under `master_seed`.
     pub fn substream(master_seed: u64, stream_id: u64) -> Self {
         Self { inner: Xoshiro256pp::substream(master_seed, stream_id), gauss_spare: None }
+    }
+
+    /// Full stream position for engine snapshots: the xoshiro state
+    /// plus the cached Box–Muller spare (without it, a restored run
+    /// would consume one extra uniform at the next `gauss` call and
+    /// every draw after would diverge).
+    pub fn snapshot_state(&self) -> ([u64; 4], Option<f64>) {
+        (self.inner.state(), self.gauss_spare)
+    }
+
+    /// Rebuild a stream at a position captured by
+    /// [`Rng::snapshot_state`].
+    pub fn from_state(state: [u64; 4], gauss_spare: Option<f64>) -> Self {
+        Self { inner: Xoshiro256pp::from_state(state), gauss_spare }
     }
 
     #[inline]

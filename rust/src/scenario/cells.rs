@@ -38,10 +38,11 @@ use std::sync::{Barrier, Condvar, Mutex};
 
 use crate::config::SimConfig;
 use crate::mac::{
-    drop_ues, MacConfig, SduKind, SlotWorkspace, UeBank, UeHot, UeMac, UlScheduler,
+    drop_ues, MacConfig, RlcBuffer, Sdu, SduKind, SlotWorkspace, UeBank, UeHot, UeMac,
+    UlScheduler,
 };
 use crate::phy::channel::{LargeScale, Position};
-use crate::phy::geometry::{CellGeo, UeGeo};
+use crate::phy::geometry::{CellGeo, LinkState, UeGeo};
 use crate::phy::link::{iot_db_from_linear, thermal_floor_prb_mw, tx_power_prb_dbm};
 use crate::phy::mobility::MobilitySpec;
 use crate::phy::numerology::{Carrier, Numerology};
@@ -482,6 +483,211 @@ impl CellRt {
         self.ticking = now < self.horizon || self.bank.has_backlog();
         self.next_slot = now + self.slot_dur;
     }
+
+    /// Capture this cell's complete dynamic state (DESIGN.md §13).
+    /// Everything config-derived — scheduler tables, workspace, SR
+    /// dimensioning, site/coupling layout — is *not* captured: restore
+    /// rebuilds it through [`CellRt::new`] / [`CellRt::init_geometry`]
+    /// and then overwrites only the state below. `last_slot` is
+    /// normalized to its sentinel: snapshots are taken at quiescence
+    /// points where the merge pass has already consumed it, so the
+    /// canonical bytes are thread-count and driver independent.
+    pub(crate) fn snapshot_state(&self) -> CellRtState {
+        let ues = (0..self.bank.len())
+            .map(|i| {
+                let ue = self.bank.ue(i);
+                let (harq_attempt, last_served_slot) = ue.snapshot_state();
+                UeSnap {
+                    link: ue.link,
+                    tag: ue.tag,
+                    job_sdus: ue.job_buf.sdus().copied().collect(),
+                    bg_sdus: ue.bg_buf.sdus().copied().collect(),
+                    harq_attempt,
+                    sr_phase: ue.sr_phase,
+                    last_served_slot,
+                    hot: self.bank.hot(i),
+                }
+            })
+            .collect();
+        let geo_ues = self.geo.as_ref().map(|g| {
+            g.ues
+                .iter()
+                .map(|gu| UeGeoSnap {
+                    pos: (gu.pos.x, gu.pos.y),
+                    links: gu
+                        .links
+                        .iter()
+                        .map(|l| (l.los, l.shadow_db, l.cl_db))
+                        .collect(),
+                    speed: gu.speed,
+                    heading: gu.heading,
+                    waypoint: (gu.waypoint.x, gu.waypoint.y),
+                    rng: gu.rng.snapshot_state(),
+                    a3_target: gu.a3_target,
+                    a3_ticks: gu.a3_ticks,
+                })
+                .collect()
+        });
+        CellRtState {
+            ues,
+            rng_mac: self.rng_mac.snapshot_state(),
+            rng_svc: self.rng_svc.snapshot_state(),
+            job_rng: self
+                .job_rng
+                .iter()
+                .map(|cs| cs.iter().map(|r| r.snapshot_state()).collect())
+                .collect(),
+            bg_rng: self.bg_rng.iter().map(|r| r.snapshot_state()).collect(),
+            next_slot: self.next_slot,
+            slot_idx: self.slot_idx,
+            ticking: self.ticking,
+            iot_db: self.iot_db,
+            itf_out: self.itf_out.clone(),
+            iot_stats: self.iot_stats.raw(),
+            ho_in: self.ho_in,
+            ho_out: self.ho_out,
+            geo_ues,
+        }
+    }
+
+    /// Overwrite this cell's dynamic state from a snapshot. The cell
+    /// must have been freshly built by [`CellRt::new`] (plus
+    /// [`CellRt::init_geometry`] when `st.geo_ues` is present) from
+    /// the *same* configuration — the config fingerprint check in
+    /// `snapshot::Snapshot` guards this.
+    pub(crate) fn restore_state(&mut self, st: CellRtState) {
+        assert_eq!(
+            st.job_rng.len(),
+            self.job_rng.len(),
+            "snapshot class count mismatch"
+        );
+        let ues: Vec<UeMac> = st
+            .ues
+            .iter()
+            .map(|u| {
+                UeMac::from_snapshot(
+                    u.link,
+                    u.tag,
+                    RlcBuffer::from_sdus(u.job_sdus.clone()),
+                    RlcBuffer::from_sdus(u.bg_sdus.clone()),
+                    u.harq_attempt,
+                    u.sr_phase,
+                    u.last_served_slot,
+                )
+            })
+            .collect();
+        self.bank = UeBank::new(ues);
+        for (i, u) in st.ues.iter().enumerate() {
+            self.bank.set_hot(i, u.hot);
+        }
+        self.rng_mac = Rng::from_state(st.rng_mac.0, st.rng_mac.1);
+        self.rng_svc = Rng::from_state(st.rng_svc.0, st.rng_svc.1);
+        for (dst, src) in self.job_rng.iter_mut().zip(&st.job_rng) {
+            assert_eq!(dst.len(), src.len(), "snapshot UE-stream count mismatch");
+            for (d, s) in dst.iter_mut().zip(src) {
+                *d = Rng::from_state(s.0, s.1);
+            }
+        }
+        assert_eq!(self.bg_rng.len(), st.bg_rng.len());
+        for (d, s) in self.bg_rng.iter_mut().zip(&st.bg_rng) {
+            *d = Rng::from_state(s.0, s.1);
+        }
+        self.next_slot = st.next_slot;
+        self.last_slot = u64::MAX;
+        self.slot_idx = st.slot_idx;
+        self.ticking = st.ticking;
+        self.iot_db = st.iot_db;
+        self.itf_out = st.itf_out;
+        self.iot_stats = Welford::from_raw(
+            st.iot_stats.0,
+            st.iot_stats.1,
+            st.iot_stats.2,
+            st.iot_stats.3,
+            st.iot_stats.4,
+        );
+        self.ho_in = st.ho_in;
+        self.ho_out = st.ho_out;
+        match (self.geo.as_mut(), st.geo_ues) {
+            (Some(geo), Some(gus)) => {
+                geo.ues = gus
+                    .into_iter()
+                    .map(|gu| UeGeo {
+                        pos: Position { x: gu.pos.0, y: gu.pos.1 },
+                        links: gu
+                            .links
+                            .into_iter()
+                            .map(|(los, shadow_db, cl_db)| LinkState {
+                                los,
+                                shadow_db,
+                                cl_db,
+                            })
+                            .collect(),
+                        speed: gu.speed,
+                        heading: gu.heading,
+                        waypoint: Position { x: gu.waypoint.0, y: gu.waypoint.1 },
+                        rng: Rng::from_state(gu.rng.0, gu.rng.1),
+                        a3_target: gu.a3_target,
+                        a3_ticks: gu.a3_ticks,
+                    })
+                    .collect();
+                assert_eq!(
+                    geo.ues.len(),
+                    self.bank.len(),
+                    "geometry records must stay index-parallel to the bank"
+                );
+            }
+            (None, None) => {}
+            _ => panic!("snapshot geometry mode disagrees with the configuration"),
+        }
+    }
+}
+
+/// Dynamic MAC + hot-lane state of one UE, as captured by a snapshot.
+#[derive(Debug, Clone)]
+pub(crate) struct UeSnap {
+    pub(crate) link: LargeScale,
+    pub(crate) tag: u64,
+    pub(crate) job_sdus: Vec<Sdu>,
+    pub(crate) bg_sdus: Vec<Sdu>,
+    pub(crate) harq_attempt: u8,
+    pub(crate) sr_phase: u64,
+    pub(crate) last_served_slot: u64,
+    pub(crate) hot: UeHot,
+}
+
+/// Dynamic geometry/mobility state of one UE (`links` rows are
+/// `(los, shadow_db, cl_db)`).
+#[derive(Debug, Clone)]
+pub(crate) struct UeGeoSnap {
+    pub(crate) pos: (f64, f64),
+    pub(crate) links: Vec<(bool, f64, f64)>,
+    pub(crate) speed: f64,
+    pub(crate) heading: (f64, f64),
+    pub(crate) waypoint: (f64, f64),
+    pub(crate) rng: ([u64; 4], Option<f64>),
+    pub(crate) a3_target: u32,
+    pub(crate) a3_ticks: u32,
+}
+
+/// Complete dynamic state of one [`CellRt`]: the UE bank (with hot
+/// lanes), every RNG stream position, the slot clock, and the
+/// interference/handover bookkeeping.
+#[derive(Debug, Clone)]
+pub(crate) struct CellRtState {
+    pub(crate) ues: Vec<UeSnap>,
+    pub(crate) rng_mac: ([u64; 4], Option<f64>),
+    pub(crate) rng_svc: ([u64; 4], Option<f64>),
+    pub(crate) job_rng: Vec<Vec<([u64; 4], Option<f64>)>>,
+    pub(crate) bg_rng: Vec<([u64; 4], Option<f64>)>,
+    pub(crate) next_slot: f64,
+    pub(crate) slot_idx: u64,
+    pub(crate) ticking: bool,
+    pub(crate) iot_db: f64,
+    pub(crate) itf_out: Vec<f64>,
+    pub(crate) iot_stats: (u64, f64, f64, f64, f64),
+    pub(crate) ho_in: u64,
+    pub(crate) ho_out: u64,
+    pub(crate) geo_ues: Option<Vec<UeGeoSnap>>,
 }
 
 /// Unwinding past a barrier rendezvous would strand the other
@@ -686,12 +892,21 @@ impl<'a> FrontierPool<'a> {
             });
             if coupling {
                 // Sentinel publications at t = 0.0 (below every
-                // boundary) with zero rows — the serial snapshot also
-                // starts all-zero.
-                pubs.push([
-                    PubRow { t_bits: 0, row: vec![0.0; n] },
-                    PubRow { t_bits: 0, row: vec![0.0; n] },
-                ]);
+                // boundary), seeded with the cell's current outgoing
+                // row — all-zero on a fresh run (matching the serial
+                // snapshot's all-zero start), and the last published
+                // row when the pool is recreated mid-run by a
+                // `run_to` segment, so a resumed frontier run prices
+                // exactly the interference the serial merge would.
+                let row = if c.ticking && !c.itf_out.is_empty() {
+                    c.itf_out.clone()
+                } else {
+                    vec![0.0; n]
+                };
+                pubs.push([PubRow { t_bits: 0, row: vec![0.0; n] }, PubRow {
+                    t_bits: 0,
+                    row,
+                }]);
             }
         }
         Self {

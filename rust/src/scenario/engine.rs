@@ -29,26 +29,42 @@
 //! cell-index) order. Because a slot step touches only its own cell's
 //! state and the merge order is fixed, every driver's schedule is
 //! bit-identical to the serial one.
+//!
+//! Checkpointing (DESIGN.md §13): the loop state lives in
+//! [`ScenarioEngine`], which runs in bounded segments
+//! ([`ScenarioEngine::run_to`]) and can serialize its complete dynamic
+//! state between segments ([`ScenarioEngine::snapshot`] /
+//! [`ScenarioEngine::from_snapshot`]). `run_to` always stops at a
+//! *quiescence point* — every calendar event and slot boundary at or
+//! below the bound processed, deliveries merged — so the captured
+//! bytes are independent of the step driver and thread count, and a
+//! restored engine replays the exact trajectory of an uninterrupted
+//! run.
 
 use std::sync::Mutex;
 
-use crate::cluster::ClusterRt;
+use crate::cluster::{ClusterRt, ClusterRtState};
 use crate::compute::{
     BatchEngine, BatchEvent, BatchJob, ComputeJob, ComputeNode, Discipline, ExecutionModel,
     NodeEvent,
 };
 use crate::config::{Management, SchemeConfig};
 use crate::dess::EventQueue;
-use crate::mac::{Sdu, SduKind};
+use crate::mac::{Sdu, SduKind, UeHot};
 use crate::metrics::{CellRadioReport, JobFate, JobOutcome, LatencyManagement, SimReport};
-use crate::phy::channel::Position;
+use crate::phy::channel::{LargeScale, Position};
 use crate::phy::link::iot_db_from_linear;
 use crate::phy::mobility::MobilitySpec;
+use crate::rng::Rng;
+use crate::snapshot::{self as snap, Dec, Enc, SnapError};
 use crate::sweep::resolve_threads;
 
-use super::cells::{cell_seed, CellRt, CellSync, FrontierPool, StepDriver, StepPool, StepRec};
-use super::routing::NodeView;
-use super::service::ServiceDemand;
+use super::cells::{
+    cell_seed, CellRt, CellRtState, CellSync, FrontierPool, StepDriver, StepPool, StepRec,
+    UeGeoSnap, UeSnap,
+};
+use super::routing::{NodeView, Routing};
+use super::workload::WorkloadClass;
 use super::{NodeSpec, Scenario};
 
 /// Map a scheme to the node queue discipline.
@@ -267,6 +283,39 @@ fn next_slot_time(cells: &[Mutex<CellRt>]) -> f64 {
     t
 }
 
+/// The next representable f64 above a positive finite `x` (manual
+/// next-up; used to turn the frontier's exclusive bound into an
+/// inclusive cut at the segment boundary).
+fn above(x: f64) -> f64 {
+    debug_assert!(x.is_finite() && x > 0.0);
+    f64::from_bits(x.to_bits() + 1)
+}
+
+/// Absolute time of the next arrival of `class` on stream `r` at time
+/// `now`, honoring the piecewise-constant rate schedule. A positive
+/// in-force rate draws exactly the legacy exponential gap (`now +
+/// Exp(rate)`), so schedule-free classes consume the identical draw
+/// sequence. A zero in-force rate defers the stream to the start of
+/// the next positive-rate phase, drawing the first gap at that phase's
+/// rate from the phase boundary — the exact thinning of a rate that is
+/// identically zero over the gap. `None` means no positive rate ever
+/// applies again: the stream goes permanently silent and consumes no
+/// draw. (An arrival *already armed* before a zero phase started still
+/// lands inside it — the standard piecewise-constant discretization,
+/// at most one job per (UE, class) stream per rate drop.)
+fn next_arrival(class: &WorkloadClass, r: &mut Rng, now: f64) -> Option<f64> {
+    let rate = class.rate_at(now);
+    if rate > 0.0 {
+        return Some(now + r.exp(rate));
+    }
+    for p in &class.rate_phases {
+        if p.t_start > now && p.rate_per_ue > 0.0 {
+            return Some(p.t_start + r.exp(p.rate_per_ue));
+        }
+    }
+    None
+}
+
 /// One synchronous slot batch (serial / barrier drivers): refresh the
 /// due cells' IoT terms from the one-slot-lagged snapshot, step every
 /// due cell, then merge delivered SDUs into the calendar in ascending
@@ -357,261 +406,413 @@ fn batch_step(
     }
 }
 
-pub(super) fn run(sc: &Scenario) -> ScenarioResult {
-    let wall0 = std::time::Instant::now();
-    let n_classes = sc.classes.len();
-    assert!(n_classes > 0, "scenario needs at least one workload class");
-    assert!(!sc.nodes.is_empty(), "scenario needs at least one compute node");
-    assert!(!sc.cells.is_empty(), "scenario needs at least one cell (build() defaults one)");
+/// Every piece of engine state that evolves during a run — the
+/// complete checkpoint surface of [`ScenarioEngine::snapshot`], plus
+/// scratch buffers (always empty at quiescence) and config-derived
+/// scalars (rebuilt on restore, never serialized).
+struct EngineState {
+    nodes: Vec<NodeRt>,
+    router: Box<dyn Routing>,
+    jobs: Vec<JobState>,
+    q: EventQueue<Ev>,
+    /// Current (serving cell, local index) of every UE by stable tag
+    /// (handover runs only).
+    locs: Option<Vec<(u32, u32)>>,
+    /// Per-cell global-UE-index offsets (config-derived).
+    prefix: Vec<usize>,
+    /// One-slot-lagged interference snapshot: `itf[k][j]` is cell k's
+    /// latest published per-PRB interference (mW) at site j. Updated
+    /// serially at the merge barrier, consumed serially before the
+    /// next batch — worker threads never touch it. Rebuilt on restore
+    /// from the cells' published `itf_out` rows.
+    itf: Vec<Vec<f64>>,
+    pending_ho: Vec<(u64, usize, usize)>,
+    /// Elastic control plane (None = static tier).
+    cluster_rt: Option<ClusterRt>,
+    eligible_ix: Vec<usize>,
+    /// Per-node in-service job ids (sequential nodes, cluster runs).
+    inflight_seq: Vec<Vec<u64>>,
+    node_loads: Vec<(usize, u32)>,
+    power_on: Vec<usize>,
+    evicted_ids: Vec<u64>,
+    seq_evicted: Vec<ComputeJob>,
+    batch_evicted: Vec<BatchJob>,
+    views: Vec<NodeView>,
+    node_ev: Vec<NodeEvent>,
+    batch_ev: Vec<BatchEvent>,
+    /// Cell-slot steps merged so far (counted into `events`).
+    slot_events: u64,
+    radio_coupling: bool,
+    tick_s: f64,
+    ttt_ticks: u32,
+    t_wireline: f64,
+    bg_rate: f64,
+    bg_bytes: u32,
+    drain_horizon: f64,
+    /// Wall-clock seconds accumulated across `run_to` segments.
+    wall: f64,
+}
 
-    let cells: Vec<Mutex<CellRt>> = sc
-        .cells
-        .iter()
-        .enumerate()
-        .map(|(k, spec)| Mutex::new(CellRt::new(k, spec, &sc.base, n_classes)))
-        .collect();
+/// A scenario run broken into resumable segments.
+///
+/// ```ignore
+/// let mut eng = ScenarioEngine::new(&sc);
+/// eng.run_to(30.0);                  // simulate [0, 30]
+/// let blob = eng.snapshot();         // checkpoint at t = 30
+/// eng.run_to(f64::INFINITY);         // ... finish this run
+/// let a = eng.finish();
+///
+/// let mut fork = ScenarioEngine::from_snapshot(&sc, &blob)?;
+/// fork.run_to(f64::INFINITY);        // bit-identical continuation
+/// let b = fork.finish();             // a.report == b.report
+/// ```
+///
+/// `run_to(t)` stops at the quiescence point of the cut `min(t,
+/// horizon + 2)`: every calendar event and cell-slot boundary at or
+/// below the cut is processed and merged. Snapshots are therefore
+/// canonical — independent of the step driver, thread count and
+/// calendar backend — and restoring one replays the exact event
+/// schedule of an uninterrupted run (property-tested across threads
+/// {1, 2, 4, 8} with coupling, mobility, handover, churn and batching
+/// all enabled).
+pub struct ScenarioEngine<'a> {
+    sc: &'a Scenario,
+    cells: Vec<Mutex<CellRt>>,
+    st: EngineState,
+}
 
-    // Coupled-radio geometry: place the sites, build each cell's
-    // per-(UE, site) coupling-loss cache, and mark which neighbor
-    // pairs couple (same carrier frequency + numerology — they
-    // interfere and are handover candidates).
-    if let Some(topo) = &sc.topology {
-        let sites: Vec<Position> =
-            (0..sc.cells.len()).map(|k| topo.site_position(k)).collect();
-        for (k, cm) in cells.iter().enumerate() {
-            let coupled: Vec<bool> = sc
-                .cells
-                .iter()
-                .enumerate()
-                .map(|(j, other)| {
-                    j != k
-                        && other.carrier.freq_hz == sc.cells[k].carrier.freq_hz
-                        && other.carrier.numerology == sc.cells[k].carrier.numerology
-                })
-                .collect();
-            cm.lock().unwrap().init_geometry(
-                k,
-                &sites,
-                coupled,
-                cell_seed(sc.base.seed, k),
-                sc.base.cell_r_max,
-                sc.mobility.as_ref(),
-            );
+impl<'a> ScenarioEngine<'a> {
+    /// Build the engine at t = 0 with every arrival process primed
+    /// (exactly the prologue of the one-shot run path).
+    pub fn new(sc: &'a Scenario) -> Self {
+        let n_classes = sc.classes.len();
+        assert!(n_classes > 0, "scenario needs at least one workload class");
+        assert!(!sc.nodes.is_empty(), "scenario needs at least one compute node");
+        assert!(!sc.cells.is_empty(), "scenario needs at least one cell (build() defaults one)");
+
+        let cells: Vec<Mutex<CellRt>> = sc
+            .cells
+            .iter()
+            .enumerate()
+            .map(|(k, spec)| Mutex::new(CellRt::new(k, spec, &sc.base, n_classes)))
+            .collect();
+
+        // Coupled-radio geometry: place the sites, build each cell's
+        // per-(UE, site) coupling-loss cache, and mark which neighbor
+        // pairs couple (same carrier frequency + numerology — they
+        // interfere and are handover candidates).
+        if let Some(topo) = &sc.topology {
+            let sites: Vec<Position> =
+                (0..sc.cells.len()).map(|k| topo.site_position(k)).collect();
+            for (k, cm) in cells.iter().enumerate() {
+                let coupled: Vec<bool> = sc
+                    .cells
+                    .iter()
+                    .enumerate()
+                    .map(|(j, other)| {
+                        j != k
+                            && other.carrier.freq_hz == sc.cells[k].carrier.freq_hz
+                            && other.carrier.numerology == sc.cells[k].carrier.numerology
+                    })
+                    .collect();
+                cm.lock().unwrap().init_geometry(
+                    k,
+                    &sites,
+                    coupled,
+                    cell_seed(sc.base.seed, k),
+                    sc.base.cell_r_max,
+                    sc.mobility.as_ref(),
+                );
+            }
         }
+
+        let cfg = &sc.base;
+        let discipline = discipline_of(&cfg.scheme);
+        let nodes: Vec<NodeRt> = sc
+            .nodes
+            .iter()
+            .map(|n| match n.execution {
+                ExecutionModel::Sequential => {
+                    NodeRt::Seq(ComputeNode::new(discipline, n.n_servers))
+                }
+                ExecutionModel::ContinuousBatching { max_batch, kv_budget } => {
+                    NodeRt::Batch(BatchEngine::new(discipline, n.gpu, max_batch, kv_budget))
+                }
+            })
+            .collect();
+        let router = sc.make_router();
+        let t_wireline = cfg.scheme.deployment.wireline_latency();
+
+        let total_ues: usize = sc.cells.iter().map(|c| c.n_ues as usize).sum();
+        let jobs: Vec<JobState> = Vec::with_capacity(4096);
+        // Pre-size the calendar: priming schedules one arrival per
+        // (cell, UE, class) plus one background event per UE, and at
+        // steady state each sequential node holds up to `n_servers`
+        // in-flight ComputeDone events while each batching node keeps
+        // one pending BatchStep — account for those too, plus slack
+        // for wireline-crossing enqueues, so large multi-node runs
+        // never re-allocate right after priming. Slot clocks live
+        // outside the calendar.
+        let inflight: usize = sc
+            .nodes
+            .iter()
+            .map(|n| match n.execution {
+                ExecutionModel::Sequential => n.n_servers as usize,
+                ExecutionModel::ContinuousBatching { .. } => 1,
+            })
+            .sum();
+        let mut q: EventQueue<Ev> = EventQueue::with_kind(
+            sc.event_queue,
+            total_ues * (n_classes + 1) + inflight + 64,
+        );
+
+        // Handover bookkeeping: stable global UE ids (tags) and the
+        // current (cell, local index) of every UE. Arrival events
+        // address UEs by their *origin* identity — the RNG streams
+        // never move — and are routed here to the current serving cell.
+        let radio_coupling = sc.topology.is_some() && cells.len() > 1;
+        let handover_on = sc.handover.is_some() && radio_coupling;
+        let prefix: Vec<usize> = {
+            let mut acc = 0usize;
+            let mut v = Vec::with_capacity(sc.cells.len());
+            for c in &sc.cells {
+                v.push(acc);
+                acc += c.n_ues as usize;
+            }
+            v
+        };
+        let locs: Option<Vec<(u32, u32)>> = if handover_on {
+            let mut v = Vec::with_capacity(total_ues);
+            for (k, cm) in cells.iter().enumerate() {
+                let mut c = cm.lock().unwrap();
+                for i in 0..c.n_ues {
+                    c.bank.ue_mut(i).tag = v.len() as u64;
+                    v.push((k as u32, i as u32));
+                }
+            }
+            Some(v)
+        } else {
+            None
+        };
+        let itf: Vec<Vec<f64>> = if radio_coupling {
+            (0..cells.len()).map(|_| vec![0.0; cells.len()]).collect()
+        } else {
+            Vec::new()
+        };
+        let tick_s = sc
+            .mobility
+            .as_ref()
+            .map(|m| m.tick_s)
+            .unwrap_or(MobilitySpec::DEFAULT_TICK_S);
+        let ttt_ticks: u32 = sc
+            .handover
+            .as_ref()
+            .map(|h| ((h.ttt_s / tick_s).ceil() as u32).max(1))
+            .unwrap_or(1);
+
+        // Elastic control plane (None = static tier: no cluster
+        // events, no cluster RNG draws, views built over every node —
+        // bit-identical to the pre-cluster engine by construction).
+        let mut cluster_rt: Option<ClusterRt> = sc.cluster.map(|spec| {
+            ClusterRt::new(
+                spec,
+                sc.node_churn.clone(),
+                sc.nodes.iter().map(|n| n.gpu).collect(),
+                n_classes,
+                cfg.seed,
+            )
+        });
+
+        // Background packet rate (constant across the run).
+        let bg_rate = 1.0 / cfg.background.mean_interval();
+        let bg_bytes = cfg.background.packet_bytes;
+
+        // Prime arrival processes (per cell, same per-UE order as the
+        // legacy engine). Time-varying classes prime at their t = 0
+        // rate; a class whose t = 0 rate is zero defers to its first
+        // positive phase (and a permanently-zero class arms nothing).
+        for (k, cm) in cells.iter().enumerate() {
+            let mut c = cm.lock().unwrap();
+            for ue in 0..c.n_ues {
+                for (ci, class) in sc.classes.iter().enumerate() {
+                    if let Some(t) = next_arrival(class, &mut c.job_rng[ci][ue], 0.0) {
+                        q.schedule_at(
+                            t,
+                            Ev::JobArrival { cell: k as u32, ue: ue as u32, class: ci as u32 },
+                        );
+                    }
+                }
+                let gap = c.bg_rng[ue].exp(bg_rate);
+                q.schedule_at(gap, Ev::BgArrival { cell: k as u32, ue: ue as u32 });
+            }
+        }
+
+        // Prime the radio tick (mobility + handover) when geometry is on.
+        if sc.topology.is_some() && (sc.mobility.is_some() || sc.handover.is_some()) {
+            q.schedule_at(tick_s, Ev::RadioTick);
+        }
+
+        // Prime the control plane: one failure event per churning node
+        // (infinite-MTBF nodes draw nothing) and the first control tick.
+        if let Some(cl) = cluster_rt.as_mut() {
+            for i in 0..cl.n_nodes() {
+                if let Some(ttf) = cl.time_to_failure(i) {
+                    q.schedule_at(ttf, Ev::NodeFail { node: i, epoch: cl.epoch(i) });
+                }
+            }
+            q.schedule_at(cl.spec().tick_s, Ev::ControlTick);
+        }
+
+        let n_nodes = sc.nodes.len();
+        let st = EngineState {
+            nodes,
+            router,
+            jobs,
+            q,
+            locs,
+            prefix,
+            itf,
+            pending_ho: Vec::new(),
+            cluster_rt,
+            eligible_ix: Vec::with_capacity(n_nodes),
+            inflight_seq: vec![Vec::new(); n_nodes],
+            node_loads: Vec::with_capacity(n_nodes),
+            power_on: Vec::with_capacity(n_nodes),
+            evicted_ids: Vec::new(),
+            seq_evicted: Vec::new(),
+            batch_evicted: Vec::new(),
+            views: Vec::with_capacity(n_nodes),
+            node_ev: Vec::with_capacity(16),
+            batch_ev: Vec::with_capacity(64),
+            slot_events: 0,
+            radio_coupling,
+            tick_s,
+            ttt_ticks,
+            t_wireline,
+            bg_rate,
+            bg_bytes,
+            drain_horizon: cfg.horizon + 2.0,
+            wall: 0.0,
+        };
+        Self { sc, cells, st }
     }
 
-    // `cell_threads = 1` (the default) steps cells inline; `0` uses all
-    // cores. More participants than cells would only idle.
-    let participants = resolve_threads(sc.cell_threads).min(cells.len());
-    if participants <= 1 {
-        event_loop(sc, &cells, StepDriver::Serial, wall0)
-    } else {
-        match sc.cell_sync {
-            CellSync::Barrier => {
-                let pool = StepPool::new(&cells, participants);
-                std::thread::scope(|scope| {
-                    // An unwind out of the event loop (or out of a
-                    // worker) would leave the other pool participants
-                    // parked on a barrier with no panic path,
-                    // deadlocking the scope join — the guard aborts
-                    // instead so a bug surfaces as a crash.
-                    let _guard = super::cells::AbortOnPanic;
-                    for _ in 1..participants {
-                        scope.spawn(|| pool.worker());
-                    }
-                    let result =
-                        event_loop(sc, &cells, StepDriver::Barrier(&pool), wall0);
-                    pool.shutdown();
-                    result
-                })
-            }
-            CellSync::Frontier => {
-                let radio_coupling = sc.topology.is_some() && cells.len() > 1;
-                let pool =
-                    FrontierPool::new(&cells, sc.base.horizon + 2.0, radio_coupling);
-                std::thread::scope(|scope| {
-                    // A panicking participant poisons the frontier
-                    // mutex; the other side's unwrap then panics too —
-                    // abort so neither unwind strands the scope join.
-                    let _guard = super::cells::AbortOnPanic;
-                    for _ in 1..participants {
-                        scope.spawn(|| pool.worker());
-                    }
-                    let result =
-                        event_loop(sc, &cells, StepDriver::Frontier(&pool), wall0);
-                    pool.shutdown();
-                    result
-                })
+    /// Calendar time: the latest event instant processed so far. Slot
+    /// machinery in cells that outpaced the calendar may sit slightly
+    /// ahead; `run_to` re-synchronizes them at the next cut.
+    pub fn now(&self) -> f64 {
+        self.st.q.now()
+    }
+
+    /// Advance the simulation through the cut `min(bound, horizon + 2)`
+    /// (inclusive): process every calendar event and cell-slot boundary
+    /// at or below it, merging all deliveries. Idempotent at the same
+    /// bound; `run_to(f64::INFINITY)` drains the run completely. The
+    /// step pool (when `cell_threads > 1`) lives only for the duration
+    /// of the call.
+    pub fn run_to(&mut self, bound: f64) {
+        let wall0 = std::time::Instant::now();
+        let sc = self.sc;
+        let cells = &self.cells;
+        let st = &mut self.st;
+        // `cell_threads = 1` (the default) steps cells inline; `0`
+        // uses all cores. More participants than cells would only idle.
+        let participants = resolve_threads(sc.cell_threads).min(cells.len());
+        if participants <= 1 {
+            event_loop_to(sc, cells, st, StepDriver::Serial, bound);
+        } else {
+            match sc.cell_sync {
+                CellSync::Barrier => {
+                    let pool = StepPool::new(cells, participants);
+                    std::thread::scope(|scope| {
+                        // An unwind out of the event loop (or out of a
+                        // worker) would leave the other pool
+                        // participants parked on a barrier with no
+                        // panic path, deadlocking the scope join — the
+                        // guard aborts instead so a bug surfaces as a
+                        // crash.
+                        let _guard = super::cells::AbortOnPanic;
+                        for _ in 1..participants {
+                            scope.spawn(|| pool.worker());
+                        }
+                        event_loop_to(sc, cells, st, StepDriver::Barrier(&pool), bound);
+                        pool.shutdown();
+                    });
+                }
+                CellSync::Frontier => {
+                    let pool = FrontierPool::new(
+                        cells,
+                        sc.base.horizon + 2.0,
+                        st.radio_coupling,
+                    );
+                    std::thread::scope(|scope| {
+                        // A panicking participant poisons the frontier
+                        // mutex; the other side's unwrap then panics
+                        // too — abort so neither unwind strands the
+                        // scope join.
+                        let _guard = super::cells::AbortOnPanic;
+                        for _ in 1..participants {
+                            scope.spawn(|| pool.worker());
+                        }
+                        event_loop_to(sc, cells, st, StepDriver::Frontier(&pool), bound);
+                        pool.shutdown();
+                    });
+                }
             }
         }
+        self.st.wall += wall0.elapsed().as_secs_f64();
     }
 }
 
-fn event_loop(
+pub(super) fn run(sc: &Scenario) -> ScenarioResult {
+    let mut eng = ScenarioEngine::new(sc);
+    eng.run_to(f64::INFINITY);
+    eng.finish()
+}
+
+/// Run the event loop through the cut `min(bound, drain_horizon)`:
+/// the body of the legacy one-shot loop, with the stop criterion
+/// generalized from "calendar drained past the drain horizon" to "no
+/// event or slot boundary at or below the cut remains".
+fn event_loop_to(
     sc: &Scenario,
     cells: &[Mutex<CellRt>],
+    st: &mut EngineState,
     driver: StepDriver<'_, '_>,
-    wall0: std::time::Instant,
-) -> ScenarioResult {
+    bound: f64,
+) {
     let cfg = &sc.base;
-    let n_classes = sc.classes.len();
+    let b_eff = bound.min(st.drain_horizon);
+    let radio_coupling = st.radio_coupling;
+    let tick_s = st.tick_s;
+    let ttt_ticks = st.ttt_ticks;
+    let t_wireline = st.t_wireline;
+    let bg_rate = st.bg_rate;
+    let bg_bytes = st.bg_bytes;
+    let EngineState {
+        nodes,
+        router,
+        jobs,
+        q,
+        locs,
+        prefix,
+        itf,
+        pending_ho,
+        cluster_rt,
+        eligible_ix,
+        inflight_seq,
+        node_loads,
+        power_on,
+        evicted_ids,
+        seq_evicted,
+        batch_evicted,
+        views,
+        node_ev,
+        batch_ev,
+        slot_events,
+        ..
+    } = st;
 
-    let discipline = discipline_of(&cfg.scheme);
-    let mut nodes: Vec<NodeRt> = sc
-        .nodes
-        .iter()
-        .map(|n| match n.execution {
-            ExecutionModel::Sequential => {
-                NodeRt::Seq(ComputeNode::new(discipline, n.n_servers))
-            }
-            ExecutionModel::ContinuousBatching { max_batch, kv_budget } => {
-                NodeRt::Batch(BatchEngine::new(discipline, n.gpu, max_batch, kv_budget))
-            }
-        })
-        .collect();
-    let mut router = sc.make_router();
-    let t_wireline = cfg.scheme.deployment.wireline_latency();
-
-    let total_ues: usize = sc.cells.iter().map(|c| c.n_ues as usize).sum();
-    let mut jobs: Vec<JobState> = Vec::with_capacity(4096);
-    // Pre-size the calendar: priming schedules one arrival per
-    // (cell, UE, class) plus one background event per UE, and at
-    // steady state each sequential node holds up to `n_servers`
-    // in-flight ComputeDone events while each batching node keeps one
-    // pending BatchStep — account for those too, plus slack for
-    // wireline-crossing enqueues, so large multi-node runs never
-    // re-allocate right after priming. Slot clocks live outside the
-    // calendar.
-    let inflight: usize = sc
-        .nodes
-        .iter()
-        .map(|n| match n.execution {
-            ExecutionModel::Sequential => n.n_servers as usize,
-            ExecutionModel::ContinuousBatching { .. } => 1,
-        })
-        .sum();
-    let mut q: EventQueue<Ev> = EventQueue::with_kind(
-        sc.event_queue,
-        total_ues * (n_classes + 1) + inflight + 64,
-    );
-
-    // Handover bookkeeping: stable global UE ids (tags) and the
-    // current (cell, local index) of every UE. Arrival events address
-    // UEs by their *origin* identity — the RNG streams never move —
-    // and are routed here to the UE's current serving cell.
-    let radio_coupling = sc.topology.is_some() && cells.len() > 1;
-    let handover_on = sc.handover.is_some() && radio_coupling;
-    let prefix: Vec<usize> = {
-        let mut acc = 0usize;
-        let mut v = Vec::with_capacity(sc.cells.len());
-        for c in &sc.cells {
-            v.push(acc);
-            acc += c.n_ues as usize;
-        }
-        v
-    };
-    let mut locs: Option<Vec<(u32, u32)>> = if handover_on {
-        let mut v = Vec::with_capacity(total_ues);
-        for (k, cm) in cells.iter().enumerate() {
-            let mut c = cm.lock().unwrap();
-            for i in 0..c.n_ues {
-                c.bank.ue_mut(i).tag = v.len() as u64;
-                v.push((k as u32, i as u32));
-            }
-        }
-        Some(v)
-    } else {
-        None
-    };
-    // One-slot-lagged interference snapshot: `itf[k][j]` is cell k's
-    // latest published per-PRB interference (mW) at site j. Updated
-    // serially at the merge barrier, consumed serially before the next
-    // batch — worker threads never touch it.
-    let mut itf: Vec<Vec<f64>> = if radio_coupling {
-        (0..cells.len()).map(|_| vec![0.0; cells.len()]).collect()
-    } else {
-        Vec::new()
-    };
-    let tick_s = sc
-        .mobility
-        .as_ref()
-        .map(|m| m.tick_s)
-        .unwrap_or(MobilitySpec::DEFAULT_TICK_S);
-    let ttt_ticks: u32 = sc
-        .handover
-        .as_ref()
-        .map(|h| ((h.ttt_s / tick_s).ceil() as u32).max(1))
-        .unwrap_or(1);
-    let mut pending_ho: Vec<(u64, usize, usize)> = Vec::new();
-    // Reused per-enqueue routing snapshot + node-event buffers (keeps
-    // the hot path allocation-free).
-    let mut views: Vec<NodeView> = Vec::with_capacity(sc.nodes.len());
-    let mut node_ev: Vec<NodeEvent> = Vec::with_capacity(16);
-    let mut batch_ev: Vec<BatchEvent> = Vec::with_capacity(64);
-
-    // Elastic control plane (None = static tier: no cluster events, no
-    // cluster RNG draws, views built over every node — bit-identical
-    // to the pre-cluster engine by construction).
-    let mut cluster_rt: Option<ClusterRt> = sc.cluster.map(|spec| {
-        ClusterRt::new(
-            spec,
-            sc.node_churn.clone(),
-            sc.nodes.iter().map(|n| n.gpu).collect(),
-            n_classes,
-            cfg.seed,
-        )
-    });
-    // Cluster scratch: eligible-node index map (router sees only `Up`
-    // nodes; picks map back through this), per-node in-service job ids
-    // (sequential nodes only), per-tick load snapshot, power-on list,
-    // and eviction buffers.
-    let mut eligible_ix: Vec<usize> = Vec::with_capacity(sc.nodes.len());
-    let mut inflight_seq: Vec<Vec<u64>> = vec![Vec::new(); sc.nodes.len()];
-    let mut node_loads: Vec<(usize, u32)> = Vec::with_capacity(sc.nodes.len());
-    let mut power_on: Vec<usize> = Vec::with_capacity(sc.nodes.len());
-    let mut evicted_ids: Vec<u64> = Vec::new();
-    let mut seq_evicted: Vec<ComputeJob> = Vec::new();
-    let mut batch_evicted: Vec<BatchJob> = Vec::new();
-
-    // Background packet rate (constant across the run).
-    let bg_rate = 1.0 / cfg.background.mean_interval();
-    let bg_bytes = cfg.background.packet_bytes;
-
-    // Prime arrival processes (per cell, same per-UE order as the
-    // legacy engine). Time-varying classes prime at their t = 0 rate.
-    for (k, cm) in cells.iter().enumerate() {
-        let mut c = cm.lock().unwrap();
-        for ue in 0..c.n_ues {
-            for (ci, class) in sc.classes.iter().enumerate() {
-                let gap = c.job_rng[ci][ue].exp(class.rate_at(0.0));
-                q.schedule_at(
-                    gap,
-                    Ev::JobArrival { cell: k as u32, ue: ue as u32, class: ci as u32 },
-                );
-            }
-            let gap = c.bg_rng[ue].exp(bg_rate);
-            q.schedule_at(gap, Ev::BgArrival { cell: k as u32, ue: ue as u32 });
-        }
-    }
-
-    // Prime the radio tick (mobility + handover) when geometry is on.
-    if sc.topology.is_some() && (sc.mobility.is_some() || sc.handover.is_some()) {
-        q.schedule_at(tick_s, Ev::RadioTick);
-    }
-
-    // Prime the control plane: one failure event per churning node
-    // (infinite-MTBF nodes draw nothing) and the first control tick.
-    if let Some(cl) = cluster_rt.as_mut() {
-        for i in 0..cl.n_nodes() {
-            if let Some(ttf) = cl.time_to_failure(i) {
-                q.schedule_at(ttf, Ev::NodeFail { node: i, epoch: cl.epoch(i) });
-            }
-        }
-        q.schedule_at(cl.spec().tick_s, Ev::ControlTick);
-    }
-
-    let drain_horizon = cfg.horizon + 2.0;
-    let mut slot_events: u64 = 0;
     let mut t_slot = next_slot_time(cells);
 
     loop {
@@ -619,12 +820,15 @@ fn event_loop(
         if let StepDriver::Frontier(fp) = &driver {
             // Conservative mode: let the frontier advance every cell
             // strictly below the calendar head (events at the head pop
-            // first — the serial tie rule), then merge the committed
-            // step records in (slot-time, cell) order. The merge
-            // reproduces the serial calendar-insertion sequence, so
-            // downstream pops are bit-identical.
-            fp.advance_to(t_q, &mut |rec: StepRec| {
-                slot_events += 1;
+            // first — the serial tie rule) and never past the cut,
+            // then merge the committed step records in (slot-time,
+            // cell) order. The merge reproduces the serial
+            // calendar-insertion sequence, so downstream pops are
+            // bit-identical. `above(b_eff)` makes the exclusive
+            // frontier bound inclusive of slots exactly at the cut —
+            // the same slots the serial driver steps.
+            fp.advance_to(t_q.min(above(b_eff)), &mut |rec: StepRec| {
+                *slot_events += 1;
                 for &job_id in &rec.jobs {
                     let js = &mut jobs[job_id as usize];
                     js.t_comm = Some(rec.t_rx - js.t_gen);
@@ -635,10 +839,10 @@ fn event_loop(
             });
             // Re-peek: the merge may have filed deliveries into an
             // otherwise-drained calendar (serial covers this via its
-            // t_slot alternative) — the stale peek would end the run
-            // with jobs still crossing the wireline.
+            // t_slot alternative) — the stale peek would end the
+            // segment with jobs still crossing the wireline.
             let t_q = q.peek_time().unwrap_or(f64::INFINITY);
-            if !t_q.is_finite() || t_q > drain_horizon {
+            if !t_q.is_finite() || t_q > b_eff {
                 break;
             }
             // fall through to the calendar pop below
@@ -648,7 +852,7 @@ fn event_loop(
             // enqueue crossing the wireline landed before the chained
             // Slot event).
             let t_next = t_q.min(t_slot);
-            if !t_next.is_finite() || t_next > drain_horizon {
+            if !t_next.is_finite() || t_next > b_eff {
                 break;
             }
             if t_q > t_slot {
@@ -657,11 +861,11 @@ fn event_loop(
                     cells,
                     t_slot,
                     radio_coupling,
-                    &mut itf,
-                    &mut jobs,
-                    &mut q,
+                    itf,
+                    jobs,
+                    q,
                     t_wireline,
-                    &mut slot_events,
+                    slot_events,
                 );
                 t_slot = next_slot_time(cells);
                 continue;
@@ -678,15 +882,14 @@ fn event_loop(
                     // attachment, never the traffic streams, so
                     // trajectories stay decomposable per cell seed.
                     // The next gap draws at the *current* phase rate
-                    // (piecewise-constant schedules hold their rate
-                    // for many mean inter-arrival times, so re-arming
-                    // at the rate in force is the standard
-                    // discretization; a schedule-free class reduces to
-                    // exactly the legacy draw).
-                    let (n_input, gap) = {
+                    // through `next_arrival` (schedule-free classes
+                    // reduce to exactly the legacy draw; zero-rate
+                    // phases defer the stream to the next positive
+                    // phase).
+                    let (n_input, next) = {
                         let mut c = cells[cell as usize].lock().unwrap();
                         let r = &mut c.job_rng[class as usize][ue_ix];
-                        (spec.input_tokens.sample(r), r.exp(spec.rate_at(now)))
+                        (spec.input_tokens.sample(r), next_arrival(spec, r, now))
                     };
                     let job_id = jobs.len() as u64;
                     jobs.push(JobState {
@@ -709,7 +912,7 @@ fn event_loop(
                     // The prompt bytes land in the UE's *current*
                     // serving cell's bank (identity under the legacy
                     // static configuration).
-                    let (scell, sue) = match &locs {
+                    let (scell, sue) = match locs.as_deref() {
                         Some(l) => {
                             let (c0, u0) = l[prefix[cell as usize] + ue_ix];
                             (c0 as usize, u0 as usize)
@@ -734,7 +937,9 @@ fn event_loop(
                             t_arrival: now,
                         });
                     }
-                    q.schedule_in(gap, Ev::JobArrival { cell, ue, class });
+                    if let Some(t) = next {
+                        q.schedule_at(t, Ev::JobArrival { cell, ue, class });
+                    }
                 }
             }
             Ev::BgArrival { cell, ue } => {
@@ -744,7 +949,7 @@ fn event_loop(
                         let mut c = cells[cell as usize].lock().unwrap();
                         c.bg_rng[ue_ix].exp(bg_rate)
                     };
-                    let (scell, sue) = match &locs {
+                    let (scell, sue) = match locs.as_deref() {
                         Some(l) => {
                             let (c0, u0) = l[prefix[cell as usize] + ue_ix];
                             (c0 as usize, u0 as usize)
@@ -791,10 +996,10 @@ fn event_loop(
                         cm.lock().unwrap().evaluate_handover(
                             ho.hysteresis_db,
                             ttt_ticks,
-                            &mut pending_ho,
+                            pending_ho,
                         );
                     }
-                    for &(tag, from, to) in &pending_ho {
+                    for &(tag, from, to) in pending_ho.iter() {
                         let (ck, ci) = l[tag as usize];
                         debug_assert_eq!(ck as usize, from, "stale migration order");
                         let (ue, hot, gu, displaced) = {
@@ -829,7 +1034,7 @@ fn event_loop(
                 };
                 let spec = &sc.classes[class_id];
                 views.clear();
-                let target = match &cluster_rt {
+                let target = match cluster_rt.as_ref() {
                     Some(cl) => {
                         // Routing sees only `Up` nodes; the pick maps
                         // back to a real tier index.
@@ -852,7 +1057,7 @@ fn event_loop(
                             );
                             continue;
                         }
-                        let t = router.pick(class_id, cell_id, &views);
+                        let t = router.pick(class_id, cell_id, views);
                         assert!(
                             t < views.len(),
                             "Routing::pick returned {t} for {} nodes",
@@ -864,7 +1069,7 @@ fn event_loop(
                         views.extend(
                             nodes.iter().zip(sc.nodes.iter()).map(|(rt, s)| rt.view(s)),
                         );
-                        let t = router.pick(class_id, cell_id, &views);
+                        let t = router.pick(class_id, cell_id, views);
                         // A routing bug must fail loudly: silently
                         // clamping would report single-node results as
                         // multi-node.
@@ -880,16 +1085,18 @@ fn event_loop(
                 // stream, in that cell's delivery order — so each cell
                 // of an N-cell run matches an independent single-cell
                 // run (DESIGN.md §9). A re-dispatched job reuses its
-                // realized demand: rng_svc is consumed exactly once per
-                // job, in first-delivery order, so node churn can never
-                // shift any other job's draws (DESIGN.md §11).
+                // realized *token lengths* but re-prices them on the
+                // destination tier's roofline (deterministic, no RNG):
+                // rng_svc is consumed exactly once per job, in
+                // first-delivery order, so node churn can never shift
+                // any other job's draws, and a retry landing on a
+                // different GPU tier runs at that tier's actual speed
+                // instead of the dead node's (DESIGN.md §11). A
+                // same-tier retry reproduces the stored demand
+                // bit-for-bit.
                 let demand = if retry {
                     let js = &jobs[job as usize];
-                    ServiceDemand {
-                        n_output: js.n_output,
-                        prefill_time: js.prefill_time,
-                        decode_time: js.decode_time,
-                    }
+                    sc.service.reprice(spec, js.n_input, js.n_output, &sc.nodes[target].gpu)
                 } else {
                     let mut c = cells[cell_id].lock().unwrap();
                     sc.service.realize(spec, n_input, &sc.nodes[target].gpu, &mut c.rng_svc)
@@ -913,14 +1120,14 @@ fn event_loop(
                             service_time: demand.service_time(),
                         };
                         node_ev.clear();
-                        n.enqueue(cj, now, &mut node_ev);
+                        n.enqueue(cj, now, node_ev);
                         let track = cluster_rt.is_some();
                         apply_node_events(
                             target,
                             epoch,
-                            &node_ev,
-                            &mut jobs,
-                            &mut q,
+                            node_ev,
+                            jobs,
+                            q,
                             now,
                             track.then(|| &mut inflight_seq[target]),
                         );
@@ -940,10 +1147,10 @@ fn event_loop(
                             kv_bytes_per_token: spec.kv_bytes_per_token,
                         };
                         batch_ev.clear();
-                        e.enqueue(bj, now, &mut batch_ev);
-                        apply_batch_events(target, epoch, &batch_ev, &mut jobs, &mut q, now);
+                        e.enqueue(bj, now, batch_ev);
+                        apply_batch_events(target, epoch, batch_ev, jobs, q, now);
                         if let Some(cl) = cluster_rt.as_mut() {
-                            observe_batch_completions(target, &batch_ev, &jobs, cl);
+                            observe_batch_completions(target, batch_ev, jobs, cl);
                         }
                     }
                 }
@@ -973,14 +1180,14 @@ fn event_loop(
                     unreachable!("ComputeDone scheduled for a batching node")
                 };
                 node_ev.clear();
-                n.complete(now, &mut node_ev);
+                n.complete(now, node_ev);
                 let track = cluster_rt.is_some();
                 apply_node_events(
                     node,
                     epoch,
-                    &node_ev,
-                    &mut jobs,
-                    &mut q,
+                    node_ev,
+                    jobs,
+                    q,
                     now,
                     track.then(|| &mut inflight_seq[node]),
                 );
@@ -994,10 +1201,10 @@ fn event_loop(
                     unreachable!("BatchStep scheduled for a sequential node")
                 };
                 batch_ev.clear();
-                e.step(now, &mut batch_ev);
-                apply_batch_events(node, epoch, &batch_ev, &mut jobs, &mut q, now);
+                e.step(now, batch_ev);
+                apply_batch_events(node, epoch, batch_ev, jobs, q, now);
                 if let Some(cl) = cluster_rt.as_mut() {
-                    observe_batch_completions(node, &batch_ev, &jobs, cl);
+                    observe_batch_completions(node, batch_ev, jobs, cl);
                 }
             }
             Ev::ControlTick => {
@@ -1010,8 +1217,8 @@ fn event_loop(
                     NodeRt::Batch(e) => (e.queue_len(), e.batch_len() as u32),
                 }));
                 power_on.clear();
-                cl.control_tick(now, &node_loads, &mut power_on);
-                for &i in &power_on {
+                cl.control_tick(now, node_loads, power_on);
+                for &i in power_on.iter() {
                     q.schedule_in(
                         sc.node_churn[i].spinup,
                         Ev::NodeUp { node: i, epoch: cl.epoch(i) },
@@ -1041,17 +1248,17 @@ fn event_loop(
                     NodeRt::Seq(n) => {
                         evicted_ids.extend(inflight_seq[node].drain(..));
                         seq_evicted.clear();
-                        n.evict(&mut seq_evicted);
+                        n.evict(seq_evicted);
                         evicted_ids.extend(seq_evicted.iter().map(|j| j.job_id));
                     }
                     NodeRt::Batch(e) => {
                         batch_evicted.clear();
-                        e.evict(&mut batch_evicted);
+                        e.evict(batch_evicted);
                         evicted_ids.extend(batch_evicted.iter().map(|j| j.job_id));
                     }
                 }
                 let budget = cl.spec().retry_budget;
-                for &job in &evicted_ids {
+                for &job in evicted_ids.iter() {
                     let js = &mut jobs[job as usize];
                     // service never happened; the re-dispatch (or the
                     // loss report) starts from a clean slate
@@ -1086,96 +1293,907 @@ fn event_loop(
             }
         }
     }
+}
 
-    // Assemble outcomes for measured jobs.
-    let outcomes: Vec<JobOutcome> = jobs
-        .iter()
-        .enumerate()
-        .filter(|(_, j)| j.measured)
-        .map(|(id, j)| {
-            let roofline_service = j.prefill_time + j.decode_time;
-            let (t_queue, t_service) = match (j.t_node_arrival, j.t_service_start) {
-                (Some(a), Some(s)) => {
-                    let svc = match j.t_done {
-                        // batched decode stretches the executed service
-                        // time; sequential keeps the exact roofline sum
-                        Some(d) if j.t_first_token.is_some() => d - s,
-                        _ => roofline_service,
-                    };
-                    (s - a, svc)
-                }
-                _ => (0.0, 0.0),
-            };
-            let tok = j.decode_time / j.n_output.max(1) as f64;
-            let (ttft, tpot) = if j.fate == JobFate::Completed {
-                match (j.t_first_token, j.t_done) {
-                    (Some(f), Some(d)) => (
-                        f - j.t_gen,
-                        if j.n_output > 1 { (d - f) / (j.n_output - 1) as f64 } else { 0.0 },
-                    ),
-                    // sequential: first token lands one decode step
-                    // after the prefill; decode is evenly paced
-                    _ => (
-                        j.t_comm.unwrap_or(0.0)
-                            + t_wireline
-                            + t_queue
-                            + j.prefill_time
-                            + tok,
-                        if j.n_output > 1 { tok } else { 0.0 },
-                    ),
-                }
-            } else {
-                (0.0, 0.0)
-            };
-            JobOutcome {
-                job_id: id as u64,
-                class_id: j.class as u32,
-                cell_id: j.cell,
-                t_gen: j.t_gen,
-                t_comm: j.t_comm.unwrap_or(0.0),
-                t_wireline,
-                t_queue,
-                t_service,
-                ttft,
-                tpot,
-                tokens: j.n_input + j.n_output,
-                fate: j.fate,
-            }
-        })
-        .collect();
 
-    let class_policies: Vec<(String, LatencyManagement)> = sc
-        .classes
-        .iter()
-        .map(|c| (c.name.clone(), management_of(&cfg.scheme, c.b_total)))
-        .collect();
-    let mut report =
-        SimReport::from_outcomes_per_class(&outcomes, &class_policies, sc.cells.len());
-    if sc.topology.is_some() {
-        report.radio = cells
+impl<'a> ScenarioEngine<'a> {
+    /// Consume the engine and assemble the final [`ScenarioResult`].
+    ///
+    /// This is the legacy end-of-run outcome assembly, callable at any
+    /// quiescent point: jobs still in flight at the cut carry
+    /// [`JobFate::InFlight`] and are folded into the loss accounting by
+    /// the report layer exactly as drain-window stragglers always were.
+    pub fn finish(mut self) -> ScenarioResult {
+        let sc = self.sc;
+        let cfg = &sc.base;
+        let t_wireline = self.st.t_wireline;
+
+        // Assemble outcomes for measured jobs.
+        let outcomes: Vec<JobOutcome> = self
+            .st
+            .jobs
             .iter()
-            .map(|cm| {
-                let c = cm.lock().unwrap();
-                CellRadioReport {
-                    handovers_in: c.ho_in,
-                    handovers_out: c.ho_out,
-                    iot_db: c.iot_stats.clone(),
+            .enumerate()
+            .filter(|(_, j)| j.measured)
+            .map(|(id, j)| {
+                let roofline_service = j.prefill_time + j.decode_time;
+                let (t_queue, t_service) = match (j.t_node_arrival, j.t_service_start) {
+                    (Some(a), Some(s)) => {
+                        let svc = match j.t_done {
+                            // batched decode stretches the executed service
+                            // time; sequential keeps the exact roofline sum
+                            Some(d) if j.t_first_token.is_some() => d - s,
+                            _ => roofline_service,
+                        };
+                        (s - a, svc)
+                    }
+                    _ => (0.0, 0.0),
+                };
+                let tok = j.decode_time / j.n_output.max(1) as f64;
+                let (ttft, tpot) = if j.fate == JobFate::Completed {
+                    match (j.t_first_token, j.t_done) {
+                        (Some(f), Some(d)) => (
+                            f - j.t_gen,
+                            if j.n_output > 1 { (d - f) / (j.n_output - 1) as f64 } else { 0.0 },
+                        ),
+                        // sequential: first token lands one decode step
+                        // after the prefill; decode is evenly paced
+                        _ => (
+                            j.t_comm.unwrap_or(0.0)
+                                + t_wireline
+                                + t_queue
+                                + j.prefill_time
+                                + tok,
+                            if j.n_output > 1 { tok } else { 0.0 },
+                        ),
+                    }
+                } else {
+                    (0.0, 0.0)
+                };
+                JobOutcome {
+                    job_id: id as u64,
+                    class_id: j.class as u32,
+                    cell_id: j.cell,
+                    t_gen: j.t_gen,
+                    t_comm: j.t_comm.unwrap_or(0.0),
+                    t_wireline,
+                    t_queue,
+                    t_service,
+                    ttft,
+                    tpot,
+                    tokens: j.n_input + j.n_output,
+                    fate: j.fate,
                 }
             })
             .collect();
+
+        let class_policies: Vec<(String, LatencyManagement)> = sc
+            .classes
+            .iter()
+            .map(|c| (c.name.clone(), management_of(&cfg.scheme, c.b_total)))
+            .collect();
+        let mut report =
+            SimReport::from_outcomes_per_class(&outcomes, &class_policies, sc.cells.len());
+        if sc.topology.is_some() {
+            report.radio = self
+                .cells
+                .iter()
+                .map(|cm| {
+                    let c = cm.lock().unwrap();
+                    CellRadioReport {
+                        handovers_in: c.ho_in,
+                        handovers_out: c.ho_out,
+                        iot_db: c.iot_stats.clone(),
+                    }
+                })
+                .collect();
+        }
+        if let Some(cl) = self.st.cluster_rt.as_mut() {
+            // Costs cover the whole simulated window including the drain
+            // tail — a deterministic bound, unlike the last-event time.
+            cl.finalize(self.st.drain_horizon);
+            let names: Vec<String> = sc.classes.iter().map(|c| c.name.clone()).collect();
+            report.cluster = cl.report(&names);
+        }
+        ScenarioResult {
+            outcomes,
+            report,
+            events: self.st.q.processed() + self.st.slot_events,
+            speedup: if self.st.wall > 0.0 {
+                cfg.horizon / self.st.wall
+            } else {
+                f64::INFINITY
+            },
+        }
     }
-    if let Some(cl) = cluster_rt.as_mut() {
-        // Costs cover the whole simulated window including the drain
-        // tail — a deterministic bound, unlike the last-event time.
-        cl.finalize(drain_horizon);
-        let names: Vec<String> = sc.classes.iter().map(|c| c.name.clone()).collect();
-        report.cluster = cl.report(&names);
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot codecs
+//
+// Hand-rolled field-order codecs over [`snap::Enc`]/[`snap::Dec`]: every
+// field of the dynamic state, in declaration order, with explicit tags
+// for enums. No derive machinery, so the wire layout is exactly what is
+// written here and stays stable unless `snap::VERSION` is bumped.
+// ---------------------------------------------------------------------------
+
+fn fate_to_u8(f: JobFate) -> u8 {
+    match f {
+        JobFate::Completed => 0,
+        JobFate::Dropped => 1,
+        JobFate::Lost => 2,
+        JobFate::InFlight => 3,
     }
-    let wall = wall0.elapsed().as_secs_f64();
-    ScenarioResult {
-        outcomes,
-        report,
-        events: q.processed() + slot_events,
-        speedup: if wall > 0.0 { cfg.horizon / wall } else { f64::INFINITY },
+}
+
+fn fate_from_u8(v: u8) -> Result<JobFate, SnapError> {
+    Ok(match v {
+        0 => JobFate::Completed,
+        1 => JobFate::Dropped,
+        2 => JobFate::Lost,
+        3 => JobFate::InFlight,
+        _ => return Err(SnapError::Corrupt { what: "job fate" }),
+    })
+}
+
+fn enc_ev(e: &mut Enc, ev: &Ev) {
+    match *ev {
+        Ev::JobArrival { cell, ue, class } => {
+            e.u8(0);
+            e.u32(cell);
+            e.u32(ue);
+            e.u32(class);
+        }
+        Ev::BgArrival { cell, ue } => {
+            e.u8(1);
+            e.u32(cell);
+            e.u32(ue);
+        }
+        Ev::ComputeEnqueue { job } => {
+            e.u8(2);
+            e.u64(job);
+        }
+        Ev::ComputeDone { node, job, epoch } => {
+            e.u8(3);
+            e.usize(node);
+            e.u64(job);
+            e.u32(epoch);
+        }
+        Ev::BatchStep { node, epoch } => {
+            e.u8(4);
+            e.usize(node);
+            e.u32(epoch);
+        }
+        Ev::RadioTick => e.u8(5),
+        Ev::ControlTick => e.u8(6),
+        Ev::NodeFail { node, epoch } => {
+            e.u8(7);
+            e.usize(node);
+            e.u32(epoch);
+        }
+        Ev::NodeRepair { node } => {
+            e.u8(8);
+            e.usize(node);
+        }
+        Ev::NodeUp { node, epoch } => {
+            e.u8(9);
+            e.usize(node);
+            e.u32(epoch);
+        }
+    }
+}
+
+fn dec_ev(d: &mut Dec<'_>) -> Result<Ev, SnapError> {
+    Ok(match d.u8("event tag")? {
+        0 => Ev::JobArrival {
+            cell: d.u32("event cell")?,
+            ue: d.u32("event ue")?,
+            class: d.u32("event class")?,
+        },
+        1 => Ev::BgArrival { cell: d.u32("event cell")?, ue: d.u32("event ue")? },
+        2 => Ev::ComputeEnqueue { job: d.u64("event job")? },
+        3 => Ev::ComputeDone {
+            node: d.usize("event node")?,
+            job: d.u64("event job")?,
+            epoch: d.u32("event epoch")?,
+        },
+        4 => Ev::BatchStep {
+            node: d.usize("event node")?,
+            epoch: d.u32("event epoch")?,
+        },
+        5 => Ev::RadioTick,
+        6 => Ev::ControlTick,
+        7 => Ev::NodeFail {
+            node: d.usize("event node")?,
+            epoch: d.u32("event epoch")?,
+        },
+        8 => Ev::NodeRepair { node: d.usize("event node")? },
+        9 => Ev::NodeUp {
+            node: d.usize("event node")?,
+            epoch: d.u32("event epoch")?,
+        },
+        _ => return Err(SnapError::Corrupt { what: "event tag" }),
+    })
+}
+
+fn enc_job(e: &mut Enc, j: &JobState) {
+    e.usize(j.class);
+    e.u32(j.cell);
+    e.f64(j.t_gen);
+    e.opt_f64(j.t_comm);
+    e.opt_f64(j.t_node_arrival);
+    e.opt_f64(j.t_service_start);
+    e.opt_f64(j.t_first_token);
+    e.opt_f64(j.t_done);
+    e.u32(j.n_input);
+    e.u32(j.n_output);
+    e.f64(j.prefill_time);
+    e.f64(j.decode_time);
+    e.u32(j.retries);
+    e.u8(fate_to_u8(j.fate));
+    e.bool(j.measured);
+}
+
+fn dec_job(d: &mut Dec<'_>) -> Result<JobState, SnapError> {
+    Ok(JobState {
+        class: d.usize("job class")?,
+        cell: d.u32("job cell")?,
+        t_gen: d.f64("job t_gen")?,
+        t_comm: d.opt_f64("job t_comm")?,
+        t_node_arrival: d.opt_f64("job t_node_arrival")?,
+        t_service_start: d.opt_f64("job t_service_start")?,
+        t_first_token: d.opt_f64("job t_first_token")?,
+        t_done: d.opt_f64("job t_done")?,
+        n_input: d.u32("job n_input")?,
+        n_output: d.u32("job n_output")?,
+        prefill_time: d.f64("job prefill")?,
+        decode_time: d.f64("job decode")?,
+        retries: d.u32("job retries")?,
+        fate: fate_from_u8(d.u8("job fate")?)?,
+        measured: d.bool("job measured")?,
+    })
+}
+
+fn enc_sdus(e: &mut Enc, sdus: &[Sdu]) {
+    e.usize(sdus.len());
+    for s in sdus {
+        match s.kind {
+            SduKind::Job { job_id } => {
+                e.u8(0);
+                e.u64(job_id);
+            }
+            SduKind::Background => e.u8(1),
+        }
+        e.u32(s.total_bytes);
+        e.u32(s.bytes_left);
+        e.f64(s.t_arrival);
+    }
+}
+
+fn dec_sdus(d: &mut Dec<'_>) -> Result<Vec<Sdu>, SnapError> {
+    let n = d.len("sdu count")?;
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        let kind = match d.u8("sdu kind")? {
+            0 => SduKind::Job { job_id: d.u64("sdu job id")? },
+            1 => SduKind::Background,
+            _ => return Err(SnapError::Corrupt { what: "sdu kind" }),
+        };
+        v.push(Sdu {
+            kind,
+            total_bytes: d.u32("sdu total bytes")?,
+            bytes_left: d.u32("sdu bytes left")?,
+            t_arrival: d.f64("sdu t_arrival")?,
+        });
+    }
+    Ok(v)
+}
+
+fn enc_cell(e: &mut Enc, st: &CellRtState) {
+    e.usize(st.ues.len());
+    for u in &st.ues {
+        e.f64(u.link.pos.x);
+        e.f64(u.link.pos.y);
+        e.bool(u.link.los);
+        e.f64(u.link.shadow_db);
+        e.u64(u.tag);
+        enc_sdus(e, &u.job_sdus);
+        enc_sdus(e, &u.bg_sdus);
+        e.u8(u.harq_attempt);
+        e.u64(u.sr_phase);
+        e.u64(u.last_served_slot);
+        e.f64(u.hot.avg_thpt);
+        e.u64(u.hot.pf_next_slot);
+        e.u64(u.hot.blocked_until);
+        e.u64(u.hot.grant_ready_slot);
+    }
+    e.rng_state(&st.rng_mac);
+    e.rng_state(&st.rng_svc);
+    e.usize(st.job_rng.len());
+    for per_class in &st.job_rng {
+        e.usize(per_class.len());
+        for r in per_class {
+            e.rng_state(r);
+        }
+    }
+    e.usize(st.bg_rng.len());
+    for r in &st.bg_rng {
+        e.rng_state(r);
+    }
+    e.f64(st.next_slot);
+    e.u64(st.slot_idx);
+    e.bool(st.ticking);
+    e.f64(st.iot_db);
+    e.f64s(&st.itf_out);
+    let (n, mean, m2, min, max) = st.iot_stats;
+    e.u64(n);
+    e.f64(mean);
+    e.f64(m2);
+    e.f64(min);
+    e.f64(max);
+    e.u64(st.ho_in);
+    e.u64(st.ho_out);
+    match &st.geo_ues {
+        None => e.bool(false),
+        Some(geos) => {
+            e.bool(true);
+            e.usize(geos.len());
+            for g in geos {
+                e.f64(g.pos.0);
+                e.f64(g.pos.1);
+                e.usize(g.links.len());
+                for &(los, shadow, dist) in &g.links {
+                    e.bool(los);
+                    e.f64(shadow);
+                    e.f64(dist);
+                }
+                e.f64(g.speed);
+                e.f64(g.heading.0);
+                e.f64(g.heading.1);
+                e.f64(g.waypoint.0);
+                e.f64(g.waypoint.1);
+                e.rng_state(&g.rng);
+                e.u32(g.a3_target);
+                e.u32(g.a3_ticks);
+            }
+        }
+    }
+}
+
+fn dec_cell(d: &mut Dec<'_>) -> Result<CellRtState, SnapError> {
+    let n_ues = d.len("ue count")?;
+    let mut ues = Vec::with_capacity(n_ues);
+    for _ in 0..n_ues {
+        let link = LargeScale {
+            pos: Position { x: d.f64("ue pos x")?, y: d.f64("ue pos y")? },
+            los: d.bool("ue los")?,
+            shadow_db: d.f64("ue shadow")?,
+        };
+        ues.push(UeSnap {
+            link,
+            tag: d.u64("ue tag")?,
+            job_sdus: dec_sdus(d)?,
+            bg_sdus: dec_sdus(d)?,
+            harq_attempt: d.u8("ue harq attempt")?,
+            sr_phase: d.u64("ue sr phase")?,
+            last_served_slot: d.u64("ue last served")?,
+            hot: UeHot {
+                avg_thpt: d.f64("ue avg thpt")?,
+                pf_next_slot: d.u64("ue pf next")?,
+                blocked_until: d.u64("ue blocked until")?,
+                grant_ready_slot: d.u64("ue grant ready")?,
+            },
+        });
+    }
+    let rng_mac = d.rng_state("cell mac rng")?;
+    let rng_svc = d.rng_state("cell svc rng")?;
+    let n_classes = d.len("job rng class count")?;
+    let mut job_rng = Vec::with_capacity(n_classes);
+    for _ in 0..n_classes {
+        let n = d.len("job rng ue count")?;
+        let mut per_class = Vec::with_capacity(n);
+        for _ in 0..n {
+            per_class.push(d.rng_state("job rng")?);
+        }
+        job_rng.push(per_class);
+    }
+    let n_bg = d.len("bg rng count")?;
+    let mut bg_rng = Vec::with_capacity(n_bg);
+    for _ in 0..n_bg {
+        bg_rng.push(d.rng_state("bg rng")?);
+    }
+    let next_slot = d.f64("cell next slot")?;
+    let slot_idx = d.u64("cell slot idx")?;
+    let ticking = d.bool("cell ticking")?;
+    let iot_db = d.f64("cell iot db")?;
+    let itf_out = d.f64s("cell itf out")?;
+    let iot_stats = (
+        d.u64("iot stats n")?,
+        d.f64("iot stats mean")?,
+        d.f64("iot stats m2")?,
+        d.f64("iot stats min")?,
+        d.f64("iot stats max")?,
+    );
+    let ho_in = d.u64("cell ho in")?;
+    let ho_out = d.u64("cell ho out")?;
+    let geo_ues = if d.bool("geo flag")? {
+        let n = d.len("geo ue count")?;
+        let mut geos = Vec::with_capacity(n);
+        for _ in 0..n {
+            let pos = (d.f64("geo pos x")?, d.f64("geo pos y")?);
+            let n_links = d.len("geo link count")?;
+            let mut links = Vec::with_capacity(n_links);
+            for _ in 0..n_links {
+                links.push((
+                    d.bool("geo link los")?,
+                    d.f64("geo link shadow")?,
+                    d.f64("geo link dist")?,
+                ));
+            }
+            geos.push(UeGeoSnap {
+                pos,
+                links,
+                speed: d.f64("geo speed")?,
+                heading: (d.f64("geo heading x")?, d.f64("geo heading y")?),
+                waypoint: (d.f64("geo waypoint x")?, d.f64("geo waypoint y")?),
+                rng: d.rng_state("geo rng")?,
+                a3_target: d.u32("geo a3 target")?,
+                a3_ticks: d.u32("geo a3 ticks")?,
+            });
+        }
+        Some(geos)
+    } else {
+        None
+    };
+    Ok(CellRtState {
+        ues,
+        rng_mac,
+        rng_svc,
+        job_rng,
+        bg_rng,
+        next_slot,
+        slot_idx,
+        ticking,
+        iot_db,
+        itf_out,
+        iot_stats,
+        ho_in,
+        ho_out,
+        geo_ues,
+    })
+}
+
+fn enc_cjob(e: &mut Enc, j: &ComputeJob) {
+    e.u64(j.job_id);
+    e.f64(j.t_gen);
+    e.f64(j.t_comm);
+    e.f64(j.deadline);
+    e.f64(j.service_time);
+}
+
+fn dec_cjob(d: &mut Dec<'_>) -> Result<ComputeJob, SnapError> {
+    Ok(ComputeJob {
+        job_id: d.u64("cjob id")?,
+        t_gen: d.f64("cjob t_gen")?,
+        t_comm: d.f64("cjob t_comm")?,
+        deadline: d.f64("cjob deadline")?,
+        service_time: d.f64("cjob service")?,
+    })
+}
+
+fn enc_bjob(e: &mut Enc, j: &BatchJob) {
+    e.u64(j.job_id);
+    e.f64(j.t_gen);
+    e.f64(j.t_comm);
+    e.f64(j.deadline);
+    e.u32(j.n_input);
+    e.u32(j.n_output);
+    e.f64(j.prefill_time);
+    e.f64(j.decode_time);
+    e.f64(j.c_llm);
+    e.f64(j.m_llm);
+    e.f64(j.kv_bytes_per_token);
+}
+
+fn dec_bjob(d: &mut Dec<'_>) -> Result<BatchJob, SnapError> {
+    Ok(BatchJob {
+        job_id: d.u64("bjob id")?,
+        t_gen: d.f64("bjob t_gen")?,
+        t_comm: d.f64("bjob t_comm")?,
+        deadline: d.f64("bjob deadline")?,
+        n_input: d.u32("bjob n_input")?,
+        n_output: d.u32("bjob n_output")?,
+        prefill_time: d.f64("bjob prefill")?,
+        decode_time: d.f64("bjob decode")?,
+        c_llm: d.f64("bjob c_llm")?,
+        m_llm: d.f64("bjob m_llm")?,
+        kv_bytes_per_token: d.f64("bjob kv bytes")?,
+    })
+}
+
+fn enc_node(e: &mut Enc, rt: &NodeRt) {
+    match rt {
+        NodeRt::Seq(n) => {
+            e.u8(0);
+            let (busy, dropped, (queue_seq, entries)) = n.snapshot_state();
+            e.u32(busy);
+            e.u64(dropped);
+            e.u64(queue_seq);
+            e.usize(entries.len());
+            for (key, seq, j) in &entries {
+                e.f64(*key);
+                e.u64(*seq);
+                enc_cjob(e, j);
+            }
+        }
+        NodeRt::Batch(b) => {
+            e.u8(1);
+            let (kv_used, running, dropped, active, (queue_seq, entries)) =
+                b.snapshot_state();
+            e.f64(kv_used);
+            e.bool(running);
+            e.u64(dropped);
+            e.usize(active.len());
+            for (j, tokens_left, prefilled) in &active {
+                enc_bjob(e, j);
+                e.u32(*tokens_left);
+                e.bool(*prefilled);
+            }
+            e.u64(queue_seq);
+            e.usize(entries.len());
+            for (key, seq, j) in &entries {
+                e.f64(*key);
+                e.u64(*seq);
+                enc_bjob(e, j);
+            }
+        }
+    }
+}
+
+fn dec_node(
+    d: &mut Dec<'_>,
+    discipline: Discipline,
+    spec: &NodeSpec,
+) -> Result<NodeRt, SnapError> {
+    let tag = d.u8("node kind")?;
+    match (tag, spec.execution) {
+        (0, ExecutionModel::Sequential) => {
+            let busy = d.u32("node busy")?;
+            let dropped = d.u64("node dropped")?;
+            let queue_seq = d.u64("node queue seq")?;
+            let n = d.len("node queue len")?;
+            let mut entries = Vec::with_capacity(n);
+            for _ in 0..n {
+                entries.push((
+                    d.f64("node queue key")?,
+                    d.u64("node queue seq no")?,
+                    dec_cjob(d)?,
+                ));
+            }
+            Ok(NodeRt::Seq(ComputeNode::restore(
+                discipline,
+                spec.n_servers,
+                busy,
+                dropped,
+                queue_seq,
+                entries,
+            )))
+        }
+        (1, ExecutionModel::ContinuousBatching { max_batch, kv_budget }) => {
+            let kv_used = d.f64("batch kv used")?;
+            let running = d.bool("batch running")?;
+            let dropped = d.u64("batch dropped")?;
+            let n_active = d.len("batch active len")?;
+            let mut active = Vec::with_capacity(n_active);
+            for _ in 0..n_active {
+                active.push((
+                    dec_bjob(d)?,
+                    d.u32("batch tokens left")?,
+                    d.bool("batch prefilled")?,
+                ));
+            }
+            let queue_seq = d.u64("batch queue seq")?;
+            let n = d.len("batch queue len")?;
+            let mut entries = Vec::with_capacity(n);
+            for _ in 0..n {
+                entries.push((
+                    d.f64("batch queue key")?,
+                    d.u64("batch queue seq no")?,
+                    dec_bjob(d)?,
+                ));
+            }
+            Ok(NodeRt::Batch(BatchEngine::restore(
+                discipline,
+                spec.gpu,
+                max_batch,
+                kv_budget,
+                kv_used,
+                running,
+                dropped,
+                active,
+                queue_seq,
+                entries,
+            )))
+        }
+        _ => Err(SnapError::Corrupt { what: "node kind" }),
+    }
+}
+
+fn enc_cluster(e: &mut Enc, st: &ClusterRtState) {
+    e.usize(st.states.len());
+    for &s in &st.states {
+        e.u8(s);
+    }
+    e.usize(st.epochs.len());
+    for &v in &st.epochs {
+        e.u32(v);
+    }
+    e.usize(st.repairing.len());
+    for &v in &st.repairing {
+        e.bool(v);
+    }
+    e.usize(st.rngs.len());
+    for r in &st.rngs {
+        e.rng_state(r);
+    }
+    e.f64s(&st.powered_since);
+    e.usize(st.acct.len());
+    for &(up, served, redisp, lost, fails) in &st.acct {
+        e.f64(up);
+        e.u64(served);
+        e.u64(redisp);
+        e.u64(lost);
+        e.u64(fails);
+    }
+    e.usize(st.class_acct.len());
+    for &(gpu_s, joules, dollars, redisp, lost) in &st.class_acct {
+        e.f64(gpu_s);
+        e.f64(joules);
+        e.f64(dollars);
+        e.u64(redisp);
+        e.u64(lost);
+    }
+    e.u64(st.jobs_ttft);
+    e.u64(st.ttft_violations);
+}
+
+fn dec_cluster(d: &mut Dec<'_>) -> Result<ClusterRtState, SnapError> {
+    let n = d.len("cluster state count")?;
+    let mut states = Vec::with_capacity(n);
+    for _ in 0..n {
+        states.push(d.u8("cluster state")?);
+    }
+    let n = d.len("cluster epoch count")?;
+    let mut epochs = Vec::with_capacity(n);
+    for _ in 0..n {
+        epochs.push(d.u32("cluster epoch")?);
+    }
+    let n = d.len("cluster repairing count")?;
+    let mut repairing = Vec::with_capacity(n);
+    for _ in 0..n {
+        repairing.push(d.bool("cluster repairing")?);
+    }
+    let n = d.len("cluster rng count")?;
+    let mut rngs = Vec::with_capacity(n);
+    for _ in 0..n {
+        rngs.push(d.rng_state("cluster rng")?);
+    }
+    let powered_since = d.f64s("cluster powered since")?;
+    let n = d.len("cluster acct count")?;
+    let mut acct = Vec::with_capacity(n);
+    for _ in 0..n {
+        acct.push((
+            d.f64("acct up seconds")?,
+            d.u64("acct served")?,
+            d.u64("acct redispatched")?,
+            d.u64("acct lost")?,
+            d.u64("acct failures")?,
+        ));
+    }
+    let n = d.len("cluster class acct count")?;
+    let mut class_acct = Vec::with_capacity(n);
+    for _ in 0..n {
+        class_acct.push((
+            d.f64("class acct gpu seconds")?,
+            d.f64("class acct joules")?,
+            d.f64("class acct dollars")?,
+            d.u64("class acct redispatched")?,
+            d.u64("class acct lost")?,
+        ));
+    }
+    Ok(ClusterRtState {
+        states,
+        epochs,
+        repairing,
+        rngs,
+        powered_since,
+        acct,
+        class_acct,
+        jobs_ttft: d.u64("cluster jobs ttft")?,
+        ttft_violations: d.u64("cluster ttft violations")?,
+    })
+}
+
+impl<'a> ScenarioEngine<'a> {
+    /// Serialize the complete dynamic state at the current quiescent
+    /// point into a self-describing binary blob (see DESIGN.md §13).
+    ///
+    /// The blob is framed with the scenario's config fingerprint;
+    /// [`ScenarioEngine::from_snapshot`] refuses blobs whose
+    /// fingerprint disagrees with the restoring scenario. Bytes are
+    /// independent of thread count, sync mode, and calendar backend:
+    /// the event queue serializes in canonical `(time, seq)` order and
+    /// per-cell slot cursors are normalized on capture.
+    pub fn snapshot(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.usize(self.cells.len());
+        for cm in &self.cells {
+            let cst = cm.lock().unwrap().snapshot_state();
+            enc_cell(&mut e, &cst);
+        }
+        e.usize(self.st.nodes.len());
+        for rt in &self.st.nodes {
+            enc_node(&mut e, rt);
+        }
+        e.u64(self.st.router.cursor());
+        e.usize(self.st.jobs.len());
+        for j in &self.st.jobs {
+            enc_job(&mut e, j);
+        }
+        let (q_now, q_seq, q_processed, entries) = self.st.q.snapshot_entries();
+        e.f64(q_now);
+        e.u64(q_seq);
+        e.u64(q_processed);
+        e.usize(entries.len());
+        for (time, seq, ev) in &entries {
+            e.f64(*time);
+            e.u64(*seq);
+            enc_ev(&mut e, ev);
+        }
+        match &self.st.locs {
+            None => e.bool(false),
+            Some(l) => {
+                e.bool(true);
+                e.usize(l.len());
+                for &(c, i) in l {
+                    e.u32(c);
+                    e.u32(i);
+                }
+            }
+        }
+        match &self.st.cluster_rt {
+            None => e.bool(false),
+            Some(cl) => {
+                e.bool(true);
+                enc_cluster(&mut e, &cl.snapshot_state());
+            }
+        }
+        e.usize(self.st.inflight_seq.len());
+        for per_node in &self.st.inflight_seq {
+            e.usize(per_node.len());
+            for &id in per_node {
+                e.u64(id);
+            }
+        }
+        e.u64(self.st.slot_events);
+        snap::frame(self.sc.fingerprint(), &e.into_bytes())
+    }
+
+    /// Rebuild an engine mid-run from a [`ScenarioEngine::snapshot`]
+    /// blob, validating magic, version, and config fingerprint.
+    ///
+    /// `sc` must be snapshot-compatible with the scenario that produced
+    /// the blob: identical in everything except arrival rates (and the
+    /// thread/sync knobs, which never affect results). The fingerprint
+    /// enforces exactly that — rates are excluded from it so warm-start
+    /// sweeps can fork one warmed checkpoint across rate points.
+    pub fn from_snapshot(sc: &'a Scenario, blob: &[u8]) -> Result<Self, SnapError> {
+        let payload = snap::unframe(blob, sc.fingerprint())?;
+        // Build a pristine engine first: config-derived structure
+        // (geometry, routing tables, pool shapes) comes from `sc`; the
+        // priming draws below are overwritten wholesale by the restore.
+        let mut eng = Self::new(sc);
+        let mut d = Dec::new(payload);
+
+        let n_cells = d.len("cell count")?;
+        if n_cells != eng.cells.len() {
+            return Err(SnapError::Corrupt { what: "cell count" });
+        }
+        for cm in &eng.cells {
+            let cst = dec_cell(&mut d)?;
+            cm.lock().unwrap().restore_state(cst);
+        }
+
+        let n_nodes = d.len("node count")?;
+        if n_nodes != eng.st.nodes.len() {
+            return Err(SnapError::Corrupt { what: "node count" });
+        }
+        let discipline = discipline_of(&sc.base.scheme);
+        for (rt, spec) in eng.st.nodes.iter_mut().zip(sc.nodes.iter()) {
+            *rt = dec_node(&mut d, discipline, spec)?;
+        }
+
+        eng.st.router.set_cursor(d.u64("router cursor")?);
+
+        let n_jobs = d.len("job count")?;
+        let mut jobs = Vec::with_capacity(n_jobs);
+        for _ in 0..n_jobs {
+            jobs.push(dec_job(&mut d)?);
+        }
+        eng.st.jobs = jobs;
+
+        let q_now = d.f64("queue now")?;
+        let q_seq = d.u64("queue seq")?;
+        let q_processed = d.u64("queue processed")?;
+        let n_ev = d.len("queue entry count")?;
+        let mut entries = Vec::with_capacity(n_ev);
+        for _ in 0..n_ev {
+            entries.push((
+                d.f64("queue entry time")?,
+                d.u64("queue entry seq")?,
+                dec_ev(&mut d)?,
+            ));
+        }
+        eng.st.q = EventQueue::restore(sc.event_queue, q_now, q_seq, q_processed, entries);
+
+        let has_locs = d.bool("locs flag")?;
+        if has_locs != eng.st.locs.is_some() {
+            return Err(SnapError::Corrupt { what: "ue locator flag" });
+        }
+        if has_locs {
+            let n = d.len("locs count")?;
+            let locs = eng.st.locs.as_mut().unwrap();
+            if n != locs.len() {
+                return Err(SnapError::Corrupt { what: "ue locator count" });
+            }
+            for slot in locs.iter_mut() {
+                *slot = (d.u32("locs cell")?, d.u32("locs index")?);
+            }
+        }
+
+        let has_cluster = d.bool("cluster flag")?;
+        if has_cluster != eng.st.cluster_rt.is_some() {
+            return Err(SnapError::Corrupt { what: "cluster flag" });
+        }
+        if has_cluster {
+            let cst = dec_cluster(&mut d)?;
+            eng.st.cluster_rt.as_mut().unwrap().restore_state(cst);
+        }
+
+        let n_inflight = d.len("inflight node count")?;
+        if n_inflight != eng.st.inflight_seq.len() {
+            return Err(SnapError::Corrupt { what: "inflight node count" });
+        }
+        for per_node in eng.st.inflight_seq.iter_mut() {
+            per_node.clear();
+            let n = d.len("inflight job count")?;
+            for _ in 0..n {
+                per_node.push(d.u64("inflight job id")?);
+            }
+        }
+
+        eng.st.slot_events = d.u64("slot event counter")?;
+        if !d.is_empty() {
+            return Err(SnapError::Corrupt { what: "trailing bytes" });
+        }
+
+        // Rebuild the interference exchange rows from the restored cell
+        // state (same seeding rule the frontier pool uses): a ticking
+        // cell republishes its last committed out-row, everything else
+        // contributes silence.
+        let n = eng.cells.len();
+        for (k, cm) in eng.cells.iter().enumerate() {
+            let c = cm.lock().unwrap();
+            eng.st.itf[k] = if c.ticking && !c.itf_out.is_empty() {
+                c.itf_out.clone()
+            } else {
+                vec![0.0; n]
+            };
+        }
+
+        // Wall-clock restarts at the resume point; `finish` reports
+        // speedup for the resumed segment only.
+        eng.st.wall = 0.0;
+        Ok(eng)
     }
 }

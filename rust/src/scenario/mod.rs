@@ -52,7 +52,7 @@ pub mod service;
 pub mod workload;
 
 pub use cells::{cell_seed, CellSpec, CellSync, HandoverSpec};
-pub use engine::{discipline_of, management_of, ScenarioResult};
+pub use engine::{discipline_of, management_of, ScenarioEngine, ScenarioResult};
 pub use routing::{
     CellAffinity, ClassAffinity, LeastLoaded, NodeView, RoundRobin, Routing, RoutingPolicy,
 };
@@ -240,6 +240,55 @@ impl Scenario {
     /// Total offered job rate across all cells (jobs/s, all classes).
     pub fn offered_rate(&self) -> f64 {
         self.total_ues() as f64 * self.classes.iter().map(|c| c.rate_per_ue).sum::<f64>()
+    }
+
+    /// Structural config fingerprint stamped into snapshots.
+    ///
+    /// Two scenarios share a fingerprint iff a snapshot taken under one
+    /// restores exactly into the other. Deliberately **excluded**:
+    ///
+    /// * arrival rates (`rate_per_ue` / `[[workload.rate_phase]]`, and
+    ///   the legacy `job_traffic.rate_per_ue` mirror) — the warm-start
+    ///   sweep forks one warm snapshot across a rate grid; future
+    ///   arrivals are drawn from RNG streams whose positions the
+    ///   snapshot carries, so past state is rate-independent,
+    /// * `cell_threads` / `cell_sync` — thread count and sync protocol
+    ///   never change results, so a snapshot taken at 1 thread restores
+    ///   bit-identically at 8.
+    ///
+    /// Everything else that shapes the trajectory (populations, MAC/PHY
+    /// config, topology, nodes, service model, routing, cluster spec,
+    /// seed, horizon) is hashed via its canonical `Debug` form.
+    pub fn fingerprint(&self) -> u64 {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let mut base = self.base.clone();
+        base.job_traffic.rate_per_ue = 0.0;
+        let _ = write!(s, "base={base:?};");
+        for c in &self.classes {
+            let mut c = c.clone();
+            c.rate_per_ue = 0.0;
+            c.rate_phases.clear();
+            let _ = write!(s, "class={c:?};");
+        }
+        let _ = write!(
+            s,
+            "cells={:?};nodes={:?};routing={:?};custom_router={};service={:?};\
+             topology={:?};mobility={:?};handover={:?};event_queue={:?};\
+             cluster={:?};churn={:?};",
+            self.cells,
+            self.nodes,
+            self.routing,
+            self.router_factory.is_some(),
+            self.service,
+            self.topology,
+            self.mobility,
+            self.handover,
+            self.event_queue,
+            self.cluster,
+            self.node_churn,
+        );
+        crate::snapshot::fnv1a(s.as_bytes())
     }
 }
 

@@ -37,6 +37,17 @@ pub trait Routing: std::fmt::Debug {
     /// Choose a node index in `0..nodes.len()` for a job of `class_id`
     /// generated in cell `cell_id`.
     fn pick(&mut self, class_id: usize, cell_id: usize, nodes: &[NodeView]) -> usize;
+
+    /// Opaque per-run policy state, captured by engine snapshots (the
+    /// round-robin cursor). Stateless policies keep the defaults;
+    /// custom routers with richer state should override both or their
+    /// snapshots restore with reset routing state.
+    fn cursor(&self) -> u64 {
+        0
+    }
+
+    /// Restore state captured by [`Routing::cursor`].
+    fn set_cursor(&mut self, _cursor: u64) {}
 }
 
 /// Send each job to the node with the fewest jobs in system (ties go
@@ -77,6 +88,14 @@ impl Routing for RoundRobin {
         let i = self.next % nodes.len();
         self.next = (self.next + 1) % nodes.len();
         i
+    }
+
+    fn cursor(&self) -> u64 {
+        self.next as u64
+    }
+
+    fn set_cursor(&mut self, cursor: u64) {
+        self.next = cursor as usize;
     }
 }
 

@@ -63,13 +63,41 @@ pub trait ServiceModel: std::fmt::Debug {
         gpu: &GpuSpec,
         rng: &mut Rng,
     ) -> ServiceDemand;
+
+    /// Re-price an already-realized job on a (possibly different)
+    /// destination node: same token counts, destination roofline
+    /// (DESIGN.md §11). Called on cluster re-dispatch, where the
+    /// original realization's service RNG draw must not be repeated.
+    /// Must be deterministic; the default prices the stored counts on
+    /// the destination GPU, which reproduces the original demand bit
+    /// for bit when the destination tier matches the source.
+    fn reprice(
+        &self,
+        class: &WorkloadClass,
+        n_input: u32,
+        n_output: u32,
+        gpu: &GpuSpec,
+    ) -> ServiceDemand {
+        price(class, n_input, n_output, gpu)
+    }
 }
 
 /// Shared pricing tail: assert the documented "model must fit" rule
 /// (scenario build validation should make this unreachable; custom
 /// assemblies that bypass the builder still fail loudly here) and
 /// price the realized token counts on the node.
-fn price(class: &WorkloadClass, n_input: u32, n_output: u32, gpu: &GpuSpec) -> ServiceDemand {
+///
+/// `pub(crate)` so cluster re-dispatch can re-price an
+/// already-realized job on a *different* destination tier (same token
+/// counts, destination roofline — DESIGN.md §11). Pricing is
+/// deterministic in its arguments and consumes no randomness, so a
+/// same-tier retry reproduces the original demand bit for bit.
+pub(crate) fn price(
+    class: &WorkloadClass,
+    n_input: u32,
+    n_output: u32,
+    gpu: &GpuSpec,
+) -> ServiceDemand {
     let spec = class.job_spec(n_input, n_output);
     let m = CostModel::new(*gpu);
     assert!(

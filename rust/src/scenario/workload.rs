@@ -209,10 +209,14 @@ impl WorkloadClass {
 
     /// Append a rate phase: from `t_start` on, arrivals draw at
     /// `rate_per_ue` jobs/s/UE. Phases must be appended in strictly
-    /// ascending `t_start` order.
+    /// ascending `t_start` order. A zero rate silences the class for
+    /// the phase's duration: the engine re-arms each arrival stream at
+    /// the next phase with a positive rate (an arrival already drawn
+    /// before the phase boundary still lands — at most one per stream
+    /// per rate drop, the standard piecewise-Poisson discretization).
     pub fn with_rate_phase(mut self, t_start: f64, rate_per_ue: f64) -> Self {
         assert!(t_start >= 0.0, "phase start must be >= 0");
-        assert!(rate_per_ue > 0.0, "phase rate must be positive");
+        assert!(rate_per_ue >= 0.0, "phase rate must be >= 0 (0 silences the class)");
         if let Some(last) = self.rate_phases.last() {
             assert!(
                 t_start > last.t_start,
@@ -420,9 +424,10 @@ pub fn workloads_from_toml(doc: &Document) -> anyhow::Result<Vec<WorkloadClass>>
             t_start.ok_or_else(|| anyhow::anyhow!("rate_phase {i} needs a 't_start'"))?;
         let rate =
             rate.ok_or_else(|| anyhow::anyhow!("rate_phase {i} needs a 'rate_per_ue'"))?;
-        if t_start < 0.0 || rate <= 0.0 {
+        if t_start < 0.0 || rate < 0.0 {
             anyhow::bail!(
-                "rate_phase {i} needs t_start >= 0 and a positive rate_per_ue"
+                "rate_phase {i} needs t_start >= 0 and rate_per_ue >= 0 \
+                 (0 silences the class for the phase)"
             );
         }
         let w = out

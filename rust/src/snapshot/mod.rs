@@ -1,0 +1,370 @@
+//! Versioned binary snapshot format for exact engine checkpointing.
+//!
+//! A snapshot is a self-describing byte blob:
+//!
+//! ```text
+//! magic    8 bytes  b"ICC6GSNP"
+//! version  u32 LE   format version (bumped on any layout change)
+//! fprint   u64 LE   config fingerprint (structural hash of the scenario)
+//! payload  ...      engine state, written with [`Enc`]
+//! ```
+//!
+//! The payload layout is private to `scenario::engine`; this module owns
+//! the framing (magic/version/fingerprint checks with clear errors) and
+//! the primitive codec. Everything is fixed-width little-endian so a
+//! snapshot round-trips byte-identically across platforms, and a
+//! snapshot → restore → snapshot cycle is byte-stable.
+//!
+//! See DESIGN.md §13 for the captured-state inventory and the RNG
+//! stream-position discipline that makes restores bit-identical.
+
+use std::fmt;
+
+/// Magic bytes at the head of every snapshot file.
+pub const MAGIC: [u8; 8] = *b"ICC6GSNP";
+
+/// Current snapshot format version. Bump on any payload layout change.
+pub const VERSION: u32 = 1;
+
+/// Why a snapshot blob was rejected.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SnapError {
+    /// The blob does not start with the `ICC6GSNP` magic.
+    BadMagic,
+    /// The blob's format version differs from this build's [`VERSION`].
+    VersionMismatch { found: u32, expected: u32 },
+    /// The blob was written under a structurally different scenario
+    /// config (different cells/nodes/classes/topology/...).
+    FingerprintMismatch { found: u64, expected: u64 },
+    /// The blob ended before the decoder finished (`what` names the
+    /// field being read when the bytes ran out).
+    Truncated { what: &'static str },
+    /// A decoded value is outside its legal range.
+    Corrupt { what: &'static str },
+}
+
+impl fmt::Display for SnapError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SnapError::BadMagic => {
+                write!(f, "not an icc6g snapshot (missing ICC6GSNP magic)")
+            }
+            SnapError::VersionMismatch { found, expected } => write!(
+                f,
+                "snapshot format version {found} is not supported (this build reads version {expected})"
+            ),
+            SnapError::FingerprintMismatch { found, expected } => write!(
+                f,
+                "snapshot was taken under a different scenario config \
+                 (fingerprint {found:#018x}, this scenario is {expected:#018x}); \
+                 snapshots only restore into a structurally identical scenario"
+            ),
+            SnapError::Truncated { what } => {
+                write!(f, "snapshot is truncated (ran out of bytes reading {what})")
+            }
+            SnapError::Corrupt { what } => {
+                write!(f, "snapshot is corrupt (illegal value for {what})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SnapError {}
+
+/// FNV-1a over a byte string — the config-fingerprint hash.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Append-only little-endian encoder for snapshot payloads.
+#[derive(Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Self {
+        Self { buf: Vec::with_capacity(4096) }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.buf.push(u8::from(v));
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    /// f64 by bit pattern — NaNs and signed zeros round-trip exactly.
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub fn opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => {
+                self.bool(true);
+                self.f64(x);
+            }
+            None => self.bool(false),
+        }
+    }
+
+    pub fn rng_state(&mut self, st: &([u64; 4], Option<f64>)) {
+        for w in st.0 {
+            self.u64(w);
+        }
+        self.opt_f64(st.1);
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.usize(v.len());
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn f64s(&mut self, v: &[f64]) {
+        self.usize(v.len());
+        for &x in v {
+            self.f64(x);
+        }
+    }
+}
+
+/// Cursor-based decoder over a snapshot payload. Every read returns
+/// `Err(SnapError::Truncated)` instead of panicking when bytes run out.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// True when every byte has been consumed.
+    pub fn is_empty(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], SnapError> {
+        let end = self.pos.checked_add(n).ok_or(SnapError::Truncated { what })?;
+        if end > self.buf.len() {
+            return Err(SnapError::Truncated { what });
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self, what: &'static str) -> Result<u8, SnapError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub fn bool(&mut self, what: &'static str) -> Result<bool, SnapError> {
+        match self.u8(what)? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(SnapError::Corrupt { what }),
+        }
+    }
+
+    pub fn u32(&mut self, what: &'static str) -> Result<u32, SnapError> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self, what: &'static str) -> Result<u64, SnapError> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self, what: &'static str) -> Result<usize, SnapError> {
+        let v = self.u64(what)?;
+        usize::try_from(v).map_err(|_| SnapError::Corrupt { what })
+    }
+
+    /// A length prefix that will drive a `Vec` allocation: reject
+    /// lengths that cannot possibly fit in the remaining bytes (each
+    /// element is at least one byte), so a corrupt blob cannot trigger
+    /// a huge allocation.
+    pub fn len(&mut self, what: &'static str) -> Result<usize, SnapError> {
+        let n = self.usize(what)?;
+        if n > self.buf.len().saturating_sub(self.pos) {
+            return Err(SnapError::Truncated { what });
+        }
+        Ok(n)
+    }
+
+    pub fn f64(&mut self, what: &'static str) -> Result<f64, SnapError> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    pub fn opt_f64(&mut self, what: &'static str) -> Result<Option<f64>, SnapError> {
+        if self.bool(what)? { Ok(Some(self.f64(what)?)) } else { Ok(None) }
+    }
+
+    pub fn rng_state(
+        &mut self,
+        what: &'static str,
+    ) -> Result<([u64; 4], Option<f64>), SnapError> {
+        let mut s = [0u64; 4];
+        for w in &mut s {
+            *w = self.u64(what)?;
+        }
+        Ok((s, self.opt_f64(what)?))
+    }
+
+    pub fn bytes(&mut self, what: &'static str) -> Result<&'a [u8], SnapError> {
+        let n = self.len(what)?;
+        self.take(n, what)
+    }
+
+    pub fn f64s(&mut self, what: &'static str) -> Result<Vec<f64>, SnapError> {
+        let n = self.len(what)?;
+        let mut v = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            v.push(self.f64(what)?);
+        }
+        Ok(v)
+    }
+}
+
+/// Frame a payload: magic + version + fingerprint + payload bytes.
+pub fn frame(fingerprint: u64, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(MAGIC.len() + 12 + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&fingerprint.to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Check the frame and return the payload slice. `expected_fingerprint`
+/// is the restoring scenario's own fingerprint; a mismatch means the
+/// snapshot came from a structurally different config.
+pub fn unframe(blob: &[u8], expected_fingerprint: u64) -> Result<&[u8], SnapError> {
+    let mut d = Dec::new(blob);
+    let magic = d.take(MAGIC.len(), "magic")?;
+    if magic != MAGIC {
+        return Err(SnapError::BadMagic);
+    }
+    let version = d.u32("format version")?;
+    if version != VERSION {
+        return Err(SnapError::VersionMismatch { found: version, expected: VERSION });
+    }
+    let fprint = d.u64("config fingerprint")?;
+    if fprint != expected_fingerprint {
+        return Err(SnapError::FingerprintMismatch {
+            found: fprint,
+            expected: expected_fingerprint,
+        });
+    }
+    Ok(&blob[d.pos..])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_round_trip() {
+        let mut e = Enc::new();
+        e.u8(7);
+        e.bool(true);
+        e.u32(0xDEAD_BEEF);
+        e.u64(u64::MAX - 3);
+        e.f64(-0.0);
+        e.f64(f64::INFINITY);
+        e.opt_f64(None);
+        e.opt_f64(Some(1.5));
+        e.rng_state(&([1, 2, 3, 4], Some(0.25)));
+        e.bytes(b"hello");
+        e.f64s(&[1.0, 2.5]);
+        let buf = e.into_bytes();
+
+        let mut d = Dec::new(&buf);
+        assert_eq!(d.u8("a").unwrap(), 7);
+        assert!(d.bool("b").unwrap());
+        assert_eq!(d.u32("c").unwrap(), 0xDEAD_BEEF);
+        assert_eq!(d.u64("d").unwrap(), u64::MAX - 3);
+        let z = d.f64("e").unwrap();
+        assert_eq!(z.to_bits(), (-0.0f64).to_bits());
+        assert_eq!(d.f64("f").unwrap(), f64::INFINITY);
+        assert_eq!(d.opt_f64("g").unwrap(), None);
+        assert_eq!(d.opt_f64("h").unwrap(), Some(1.5));
+        assert_eq!(d.rng_state("i").unwrap(), ([1, 2, 3, 4], Some(0.25)));
+        assert_eq!(d.bytes("j").unwrap(), b"hello");
+        assert_eq!(d.f64s("k").unwrap(), vec![1.0, 2.5]);
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut e = Enc::new();
+        e.u64(42);
+        let buf = e.into_bytes();
+        let mut d = Dec::new(&buf[..5]);
+        assert_eq!(d.u64("field").unwrap_err(), SnapError::Truncated { what: "field" });
+    }
+
+    #[test]
+    fn oversized_len_prefix_rejected() {
+        let mut e = Enc::new();
+        e.usize(1 << 40); // claims a petabyte of elements
+        let buf = e.into_bytes();
+        let mut d = Dec::new(&buf);
+        assert!(matches!(d.len("list"), Err(SnapError::Truncated { .. })));
+    }
+
+    #[test]
+    fn frame_checks() {
+        let blob = frame(0x1234, b"payload");
+        assert_eq!(unframe(&blob, 0x1234).unwrap(), b"payload");
+        assert_eq!(
+            unframe(&blob, 0x9999).unwrap_err(),
+            SnapError::FingerprintMismatch { found: 0x1234, expected: 0x9999 }
+        );
+        let mut bad = blob.clone();
+        bad[0] = b'X';
+        assert_eq!(unframe(&bad, 0x1234).unwrap_err(), SnapError::BadMagic);
+        let mut v2 = blob.clone();
+        v2[8] = 99;
+        assert_eq!(
+            unframe(&v2, 0x1234).unwrap_err(),
+            SnapError::VersionMismatch { found: 99, expected: VERSION }
+        );
+        assert_eq!(
+            unframe(&blob[..10], 0x1234).unwrap_err(),
+            SnapError::Truncated { what: "config fingerprint" }
+        );
+    }
+
+    #[test]
+    fn fnv1a_known_values() {
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        // Differing inputs diverge.
+        assert_ne!(fnv1a(b"a"), fnv1a(b"b"));
+    }
+}

@@ -21,6 +21,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::metrics::SimReport;
+use crate::scenario::{Scenario, ScenarioEngine, WorkloadClass};
 
 /// Resolve a thread-count request: 0 → available parallelism.
 pub fn resolve_threads(threads: usize) -> usize {
@@ -116,6 +117,198 @@ pub fn sweep_grid(
     points
 }
 
+/// Validity contract of a warm-start sweep (DESIGN.md §13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WarmStart {
+    /// Require a rate-invariant warm-up prefix: every grid point's
+    /// arrival-rate trajectory must equal the warm run's on
+    /// `[0, warm_s)`. With that prefix the forked runs are
+    /// *bit-identical* to cold runs (the warm segment replays the
+    /// exact same draws). Panics when the prefix is not invariant.
+    Exact,
+    /// Documented approximation: fork the warm checkpoint even when
+    /// the grid varies the rate from t = 0. The warm-up transient is
+    /// then simulated at the *reference* (first) grid point's rate;
+    /// steady-state metrics converge to the cold sweep's as
+    /// `warm_s / horizon → 0`, but the runs are not bit-identical.
+    Forced,
+}
+
+/// `true` when two classes offer the same arrival rate at every
+/// instant of `[0, warm_s)`. Rates are piecewise-constant, so it
+/// suffices to compare at 0 and at both schedules' breakpoints below
+/// `warm_s`. Bitwise f64 equality on purpose — the warm-start exactness
+/// contract is bit-identity, not approximate equality.
+fn rate_prefix_invariant(a: &WorkloadClass, b: &WorkloadClass, warm_s: f64) -> bool {
+    let mut ts: Vec<f64> = vec![0.0];
+    ts.extend(a.rate_phases.iter().map(|p| p.t_start).filter(|&t| t < warm_s));
+    ts.extend(b.rate_phases.iter().map(|p| p.t_start).filter(|&t| t < warm_s));
+    ts.iter().all(|&t| a.rate_at(t) == b.rate_at(t))
+}
+
+/// Warm-start grid sweep: per seed, simulate **one** warm-up segment
+/// to `warm_s`, snapshot it, then fork the checkpoint across all
+/// `xs` rate points and simulate only the remainder of each run.
+///
+/// `make(x, seed)` must build the scenario for rate point `x` — the
+/// same pure function a cold [`sweep_grid`] closure would wrap. All
+/// grid points of a seed must be snapshot-compatible (identical in
+/// everything but arrival rates; [`ScenarioEngine::from_snapshot`]
+/// enforces this via the config fingerprint). The warm segment runs at
+/// `xs[0]`'s rates; see [`WarmStart`] for when the forked runs are
+/// bit-identical to cold ones.
+///
+/// Replications merge in seed order exactly like [`sweep_grid`], so a
+/// warm sweep with an invariant prefix is bit-identical to the cold
+/// sweep, point for point — just without re-simulating the warm-up
+/// `xs.len()` times.
+pub fn sweep_grid_warm(
+    xs: &[f64],
+    seeds: &[u64],
+    warm_s: f64,
+    threads: usize,
+    mode: WarmStart,
+    make: impl Fn(f64, u64) -> Scenario + Sync,
+) -> Vec<GridPoint> {
+    assert!(!xs.is_empty(), "warm sweep needs at least one rate point");
+    assert!(!seeds.is_empty(), "sweep needs at least one seed");
+    assert!(warm_s.is_finite() && warm_s >= 0.0, "warm_s must be finite and >= 0");
+
+    if mode == WarmStart::Exact {
+        // One representative seed suffices: rates are config, not
+        // seed-dependent draws.
+        let reference = make(xs[0], seeds[0]);
+        for &x in &xs[1..] {
+            let other = make(x, seeds[0]);
+            let ok = reference.classes.len() == other.classes.len()
+                && reference
+                    .classes
+                    .iter()
+                    .zip(other.classes.iter())
+                    .all(|(a, b)| rate_prefix_invariant(a, b, warm_s));
+            assert!(
+                ok,
+                "WarmStart::Exact requires every grid point to share the \
+                 warm-up rate trajectory on [0, {warm_s}s); point x = {x} \
+                 diverges (use WarmStart::Forced to accept the approximation)"
+            );
+        }
+    }
+
+    // Phase 1 — one warm segment per seed, in parallel.
+    let blobs: Vec<Vec<u8>> = run_parallel(seeds, threads, |&s| {
+        let sc = make(xs[0], s);
+        let mut eng = ScenarioEngine::new(&sc);
+        eng.run_to(warm_s);
+        eng.snapshot()
+    });
+
+    // Phase 2 — fork each seed's checkpoint across the rate axis.
+    let jobs: Vec<(usize, usize)> = (0..xs.len())
+        .flat_map(|xi| (0..seeds.len()).map(move |si| (xi, si)))
+        .collect();
+    let reports = run_parallel(&jobs, threads, |&(xi, si)| {
+        let sc = make(xs[xi], seeds[si]);
+        let mut eng = ScenarioEngine::from_snapshot(&sc, &blobs[si]).unwrap_or_else(|e| {
+            panic!(
+                "warm snapshot rejected at x = {}, seed = {}: {e} \
+                 (grid points must differ only in arrival rates)",
+                xs[xi], seeds[si]
+            )
+        });
+        eng.run_to(f64::INFINITY);
+        eng.finish().report
+    });
+
+    let mut points = Vec::with_capacity(xs.len());
+    let mut it = reports.into_iter();
+    for &x in xs {
+        let mut agg: Option<SimReport> = None;
+        for _ in seeds {
+            let r = it.next().expect("grid/report length mismatch");
+            agg = Some(match agg {
+                None => r,
+                Some(mut a) => {
+                    a.merge(&r);
+                    a
+                }
+            });
+        }
+        points.push(GridPoint { x, report: agg.unwrap(), n_reps: seeds.len() as u32 });
+    }
+    points
+}
+
+/// Paired A/B comparison under common random numbers.
+#[derive(Debug, Clone)]
+pub struct AbReport {
+    /// The shared seed list (one paired replication each).
+    pub seeds: Vec<u64>,
+    /// Per-seed metric of config A, in seed order.
+    pub a: Vec<f64>,
+    /// Per-seed metric of config B, in seed order.
+    pub b: Vec<f64>,
+    /// Per-seed paired differences `b[i] - a[i]`.
+    pub deltas: Vec<f64>,
+    pub mean_a: f64,
+    pub mean_b: f64,
+    /// Mean of the paired differences (`mean_b - mean_a`).
+    pub delta_mean: f64,
+    /// Half-width of the 95% CI on `delta_mean` (normal approximation
+    /// `1.96·s/√n` over the paired deltas; 0 when n < 2). Pairing on
+    /// seed cancels the common simulation noise, so this is typically
+    /// far tighter than the unpaired CI on `mean_b - mean_a`.
+    pub delta_ci95: f64,
+}
+
+impl AbReport {
+    /// `true` when the 95% CI on the paired delta excludes zero.
+    pub fn significant(&self) -> bool {
+        self.delta_ci95 > 0.0 && self.delta_mean.abs() > self.delta_ci95
+    }
+}
+
+/// Run configs A and B once per seed — the *same* seed on both sides,
+/// so every replication pair shares its random numbers (CRN) — and
+/// reduce the per-seed metric pairs into paired-delta statistics.
+///
+/// `metric_a`/`metric_b` must be pure functions of the seed (e.g. "run
+/// scenario A at this seed, return satisfaction"). All `2·n` runs
+/// execute in parallel; the reduction is in seed order and therefore
+/// deterministic.
+pub fn sweep_ab(
+    seeds: &[u64],
+    threads: usize,
+    metric_a: impl Fn(u64) -> f64 + Sync,
+    metric_b: impl Fn(u64) -> f64 + Sync,
+) -> AbReport {
+    assert!(!seeds.is_empty(), "A/B comparison needs at least one seed");
+    let jobs: Vec<(u64, bool)> =
+        seeds.iter().flat_map(|&s| [(s, false), (s, true)]).collect();
+    let vals = run_parallel(&jobs, threads, |&(s, is_b)| {
+        if is_b {
+            metric_b(s)
+        } else {
+            metric_a(s)
+        }
+    });
+    let a: Vec<f64> = vals.iter().step_by(2).copied().collect();
+    let b: Vec<f64> = vals.iter().skip(1).step_by(2).copied().collect();
+    let deltas: Vec<f64> = a.iter().zip(b.iter()).map(|(x, y)| y - x).collect();
+    let n = deltas.len() as f64;
+    let mean_a = a.iter().sum::<f64>() / n;
+    let mean_b = b.iter().sum::<f64>() / n;
+    let delta_mean = deltas.iter().sum::<f64>() / n;
+    let delta_ci95 = if deltas.len() >= 2 {
+        let var = deltas.iter().map(|d| (d - delta_mean).powi(2)).sum::<f64>()
+            / (n - 1.0);
+        1.96 * (var / n).sqrt()
+    } else {
+        0.0
+    };
+    AbReport { seeds: seeds.to_vec(), a, b, deltas, mean_a, mean_b, delta_mean, delta_ci95 }
+}
+
 /// The replication seed list the coordinator sweeps use:
 /// `base, base+1000, base+2000, …` (kept stable so pre-existing
 /// results reproduce).
@@ -171,6 +364,37 @@ mod tests {
         assert_eq!(replication_seeds(1, 3), vec![1, 1001, 2001]);
     }
 
+    #[test]
+    fn ab_pairs_by_seed_and_reduces_deterministically() {
+        // metric_a = seed, metric_b = seed + 2 → every paired delta is
+        // exactly 2 with zero variance.
+        let seeds = [3u64, 5, 9];
+        for threads in [1, 4] {
+            let r = sweep_ab(&seeds, threads, |s| s as f64, |s| s as f64 + 2.0);
+            assert_eq!(r.seeds, seeds);
+            assert_eq!(r.a, vec![3.0, 5.0, 9.0]);
+            assert_eq!(r.b, vec![5.0, 7.0, 11.0]);
+            assert_eq!(r.deltas, vec![2.0, 2.0, 2.0]);
+            assert_eq!(r.delta_mean, 2.0);
+            assert_eq!(r.delta_ci95, 0.0);
+            assert!((r.mean_b - r.mean_a - 2.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn ab_ci_covers_known_spread() {
+        // deltas = [0, 2] → mean 1, s = √2, CI = 1.96·√(2/2) = 1.96.
+        let r = sweep_ab(&[0, 1], 1, |_| 0.0, |s| 2.0 * s as f64);
+        assert!((r.delta_mean - 1.0).abs() < 1e-12);
+        assert!((r.delta_ci95 - 1.96).abs() < 1e-12);
+        assert!(!r.significant());
+        // a one-sided shift with no noise is significant
+        let r = sweep_ab(&[1, 2, 3], 1, |_| 0.0, |s| 1.0 + 1e-6 * s as f64);
+        assert!(r.significant());
+    }
+
     // sweep_grid's serial ≡ parallel bit-identity over real scenario
-    // runs lives in tests/integration_sweep.rs (needs whole-sim runs).
+    // runs lives in tests/integration_sweep.rs (needs whole-sim runs);
+    // sweep_grid_warm's warm ≡ cold bit-identity lives in
+    // tests/integration_snapshot.rs.
 }

@@ -166,6 +166,13 @@ pub fn scale_metrics(text: &str) -> anyhow::Result<Vec<(String, f64)>> {
                     ));
                 }
             }
+            // The warm-start row gates the cold/warm wall-clock ratio
+            // (machine-independent), not an absolute wall time.
+            "sweep_warm" => {
+                if let Some(s) = row.get("speedup").and_then(|x| x.as_f64()) {
+                    out.push(("scale/sweep_warm/speedup".to_string(), s));
+                }
+            }
             sweep if sweep.starts_with("sweep_") => {
                 if let Some(w) = row.get("wall_s").and_then(|x| x.as_f64()) {
                     out.push((format!("scale/{sweep}/wall_s"), w));

@@ -59,6 +59,17 @@ impl Welford {
         1.96 * self.std_dev() / (self.n as f64).sqrt()
     }
 
+    /// Raw accumulator state `(n, mean, m2, min, max)` for engine
+    /// snapshots.
+    pub fn raw(&self) -> (u64, f64, f64, f64, f64) {
+        (self.n, self.mean, self.m2, self.min, self.max)
+    }
+
+    /// Rebuild an accumulator from [`Welford::raw`] output.
+    pub fn from_raw(n: u64, mean: f64, m2: f64, min: f64, max: f64) -> Self {
+        Self { n, mean, m2, min, max }
+    }
+
     pub fn merge(&mut self, other: &Welford) {
         if other.n == 0 {
             return;

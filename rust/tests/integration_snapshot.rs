@@ -1,0 +1,461 @@
+//! Snapshot/restore integration tests: the checkpointing invariants.
+//!
+//! 1. **Bit-identity** — `run_to(t) → snapshot → restore → run_to(∞)`
+//!    reproduces an uninterrupted run bit for bit, across thread
+//!    counts and both parallel cell schedulers, with every subsystem
+//!    live (coupled radios, mobility, handover, node churn,
+//!    continuous batching).
+//! 2. **Robustness** — garbage, truncated, version-skewed, and
+//!    wrong-config blobs are rejected with the specific [`SnapError`]
+//!    each deserves, and a serialize → restore → serialize cycle is
+//!    byte-stable.
+//! 3. **Warm-start sweeps** — a warm sweep over a rate-invariant
+//!    prefix merges to the *identical* per-point reports as the cold
+//!    sweep ([`WarmStart::Exact`]).
+//! 4. **Re-dispatch repricing** — a job re-dispatched to a different
+//!    GPU tier runs at the destination roofline (DESIGN.md §11).
+//! 5. **Rate-phase boundaries** — phases at the horizon, zero-rate
+//!    phases, and single-phase schedules behave exactly as documented.
+
+use icc6g::config::SchemeConfig;
+use icc6g::llm::{CostModel, GpuSpec};
+use icc6g::metrics::JobFate;
+use icc6g::prop_assert;
+use icc6g::scenario::{
+    CellSpec, CellSync, ClusterSpec, ExecutionModel, HandoverSpec, MobilitySpec,
+    NodeChurnSpec, RoutingPolicy, Scenario, ScenarioBuilder, ScenarioEngine,
+    ScenarioResult, ServiceModelKind, SiteLayout, TokenDist, TopologySpec,
+    WorkloadClass,
+};
+use icc6g::snapshot::{SnapError, MAGIC, VERSION};
+use icc6g::sweep::{sweep_grid, sweep_grid_warm, WarmStart};
+use icc6g::util::proptest::check;
+use icc6g::util::tomlmini::Document;
+
+fn gpu() -> GpuSpec {
+    GpuSpec::gh200_nvl2().scaled(2.0)
+}
+
+/// Every subsystem at once: 3 coupled cells with moving UEs and A3
+/// handover, a churning sequential node plus a continuous-batching
+/// node behind the elastic control plane, token-sampled service.
+/// The hardest state a snapshot has to capture.
+fn rich(seed: u64, threads: usize, sync: CellSync) -> Scenario {
+    let churn = NodeChurnSpec { mtbf: 1.5, mttr: 0.4, spinup: 0.1 };
+    ScenarioBuilder::new()
+        .scheme(SchemeConfig::icc())
+        .horizon(4.0)
+        .warmup(0.5)
+        .seed(seed)
+        .threads(threads)
+        .cell_sync(sync)
+        .service_kind(ServiceModelKind::TokenSampled)
+        .workload(WorkloadClass::chat())
+        .workload(WorkloadClass::translation())
+        .cells(3, CellSpec::new(5))
+        .topology(TopologySpec { layout: SiteLayout::Hex, isd_m: 200.0 })
+        .mobility(MobilitySpec::fixed(30.0))
+        .handover(HandoverSpec::default())
+        .node(gpu(), 1)
+        .node_churn(churn)
+        .node_exec(gpu(), 1, ExecutionModel::ContinuousBatching {
+            max_batch: 4,
+            kv_budget: 0.0,
+        })
+        .cluster(ClusterSpec { retry_budget: 1, ..Default::default() })
+        .build()
+}
+
+fn assert_results_identical(a: &ScenarioResult, b: &ScenarioResult, ctx: &str) {
+    assert_eq!(a.events, b.events, "{ctx}: event counts diverged");
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{ctx}: job counts diverged");
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert!(
+            x.job_id == y.job_id
+                && x.class_id == y.class_id
+                && x.cell_id == y.cell_id
+                && x.t_gen.to_bits() == y.t_gen.to_bits()
+                && x.t_comm.to_bits() == y.t_comm.to_bits()
+                && x.t_queue.to_bits() == y.t_queue.to_bits()
+                && x.t_service.to_bits() == y.t_service.to_bits()
+                && x.ttft.to_bits() == y.ttft.to_bits()
+                && x.tpot.to_bits() == y.tpot.to_bits()
+                && x.tokens == y.tokens
+                && x.fate == y.fate,
+            "{ctx}: job diverged\n  cold:    {x:?}\n  resumed: {y:?}"
+        );
+    }
+    // The reports are pure functions of the outcomes plus the radio
+    // and cluster sections — the JSON covers all of them.
+    assert_eq!(a.report.to_json(), b.report.to_json(), "{ctx}: reports diverged");
+}
+
+/// Run `rich` uninterrupted, then again with a snapshot/restore cycle
+/// at `cut`, and demand bit-identity.
+fn roundtrip_at(seed: u64, threads: usize, sync: CellSync, cut: f64) {
+    let ctx = format!("seed {seed}, threads {threads}, sync {sync:?}, cut {cut}");
+    let cold = rich(seed, threads, sync).run();
+
+    let donor_sc = rich(seed, threads, sync);
+    let mut donor = ScenarioEngine::new(&donor_sc);
+    donor.run_to(cut);
+    let blob = donor.snapshot();
+    drop(donor);
+
+    // Restore into a *fresh* scenario value: nothing may leak from the
+    // donor engine besides the blob itself.
+    let host_sc = rich(seed, threads, sync);
+    let mut eng = ScenarioEngine::from_snapshot(&host_sc, &blob)
+        .unwrap_or_else(|e| panic!("{ctx}: restore failed: {e}"));
+    eng.run_to(f64::INFINITY);
+    assert_results_identical(&cold, &eng.finish(), &ctx);
+}
+
+#[test]
+fn snapshot_resume_is_bit_identical_across_threads() {
+    for threads in [1usize, 2, 4, 8] {
+        roundtrip_at(7, threads, CellSync::Frontier, 1.7);
+    }
+    // Barrier scheduler and a cut inside the warmup window.
+    roundtrip_at(7, 4, CellSync::Barrier, 0.3);
+}
+
+#[test]
+fn snapshot_cut_points_never_change_results() {
+    // Property: any cut — early, mid-run, near the horizon, or past
+    // it (a drained engine) — restores bit-identically.
+    check(4, |g| {
+        let seed = g.u64_below(500);
+        let cut = [0.05, 0.9, 2.2, 3.9, 4.5][g.usize_range(0, 4)];
+        roundtrip_at(seed, 1, CellSync::Frontier, cut);
+        Ok(())
+    });
+}
+
+#[test]
+fn snapshot_segmented_advance_matches_single_run() {
+    // Several run_to segments before and after the checkpoint.
+    let cold = rich(3, 2, CellSync::Frontier).run();
+    let sc = rich(3, 2, CellSync::Frontier);
+    let mut eng = ScenarioEngine::new(&sc);
+    eng.run_to(0.4);
+    eng.run_to(1.1);
+    eng.run_to(1.1); // idempotent at the same bound
+    let blob = eng.snapshot();
+    drop(eng);
+    let sc2 = rich(3, 2, CellSync::Frontier);
+    let mut eng = ScenarioEngine::from_snapshot(&sc2, &blob).unwrap();
+    eng.run_to(2.6);
+    eng.run_to(f64::INFINITY);
+    assert_results_identical(&cold, &eng.finish(), "segmented");
+}
+
+#[test]
+fn snapshot_restore_snapshot_is_byte_stable() {
+    let sc = rich(11, 1, CellSync::Frontier);
+    let mut eng = ScenarioEngine::new(&sc);
+    eng.run_to(1.3);
+    let blob = eng.snapshot();
+    drop(eng);
+    let eng = ScenarioEngine::from_snapshot(&sc, &blob).unwrap();
+    assert_eq!(blob, eng.snapshot(), "restore must not perturb a single byte");
+}
+
+#[test]
+fn snapshot_rejects_garbage_with_clear_errors() {
+    let sc = rich(5, 1, CellSync::Frontier);
+    let mut eng = ScenarioEngine::new(&sc);
+    eng.run_to(1.0);
+    let blob = eng.snapshot();
+    drop(eng);
+
+    // Wrong magic.
+    let mut bad = blob.clone();
+    bad[0] ^= 0xff;
+    assert_eq!(ScenarioEngine::from_snapshot(&sc, &bad).err(), Some(SnapError::BadMagic));
+    assert_eq!(
+        ScenarioEngine::from_snapshot(&sc, b"not a snapshot").err(),
+        Some(SnapError::BadMagic)
+    );
+
+    // Version skew (bytes 8..12, little-endian after the 8-byte magic).
+    let mut bad = blob.clone();
+    bad[MAGIC.len()..MAGIC.len() + 4].copy_from_slice(&(VERSION + 9).to_le_bytes());
+    assert_eq!(
+        ScenarioEngine::from_snapshot(&sc, &bad).err(),
+        Some(SnapError::VersionMismatch { found: VERSION + 9, expected: VERSION })
+    );
+
+    // Structurally different scenario: one more node.
+    let other = ScenarioBuilder::new()
+        .scheme(SchemeConfig::icc())
+        .horizon(4.0)
+        .seed(5)
+        .workload(WorkloadClass::chat())
+        .node(gpu(), 1)
+        .node(gpu(), 1)
+        .build();
+    assert!(matches!(
+        ScenarioEngine::from_snapshot(&other, &blob).err(),
+        Some(SnapError::FingerprintMismatch { .. })
+    ));
+
+    // Every truncation must be rejected (never panic, never succeed).
+    for len in (0..blob.len()).step_by(7).chain(blob.len() - 3..blob.len()) {
+        match ScenarioEngine::from_snapshot(&sc, &blob[..len]).err() {
+            Some(
+                SnapError::Truncated { .. } | SnapError::Corrupt { .. } | SnapError::BadMagic,
+            ) => {}
+            other => panic!("truncation to {len} bytes: {other:?}"),
+        }
+    }
+
+    // Trailing junk is corruption, not padding.
+    let mut bad = blob.clone();
+    bad.push(0);
+    assert!(matches!(
+        ScenarioEngine::from_snapshot(&sc, &bad).err(),
+        Some(SnapError::Corrupt { .. })
+    ));
+
+    // The pristine blob still restores after all of the above.
+    assert!(ScenarioEngine::from_snapshot(&sc, &blob).is_ok());
+}
+
+/// Fixed-population scenario whose arrival rate steps to `x` at t = 2
+/// after a shared constant prefix — the shape a warm-started sweep
+/// forks across.
+fn phased(x: f64, seed: u64) -> Scenario {
+    ScenarioBuilder::new()
+        .scheme(SchemeConfig::icc())
+        .horizon(6.0)
+        .warmup(0.5)
+        .seed(seed)
+        .workload(WorkloadClass::translation().with_rate(0.8).with_rate_phase(2.0, x))
+        .cells(2, CellSpec::new(6))
+        .node(gpu(), 1)
+        .node(gpu(), 1)
+        .build()
+}
+
+#[test]
+fn warm_sweep_is_bit_identical_to_cold_on_invariant_prefix() {
+    let xs = [0.8, 1.6, 2.4];
+    let seeds = [11u64, 1011];
+    let cold = sweep_grid(&xs, &seeds, 2, |x, s| phased(x, s).run().report);
+    let warm = sweep_grid_warm(&xs, &seeds, 2.0, 2, WarmStart::Exact, phased);
+    assert_eq!(cold.len(), warm.len());
+    for (c, w) in cold.iter().zip(&warm) {
+        assert_eq!(c.x.to_bits(), w.x.to_bits());
+        assert_eq!(c.n_reps, w.n_reps);
+        assert_eq!(
+            c.report.to_json(),
+            w.report.to_json(),
+            "x = {}: warm point diverged from cold",
+            c.x
+        );
+    }
+}
+
+#[test]
+#[should_panic(expected = "WarmStart::Exact requires")]
+fn warm_sweep_exact_rejects_varying_prefix() {
+    // The rate already differs inside [0, 2): Exact must refuse.
+    let make = |x: f64, seed: u64| {
+        ScenarioBuilder::new()
+            .scheme(SchemeConfig::icc())
+            .horizon(4.0)
+            .seed(seed)
+            .workload(WorkloadClass::translation().with_rate(x))
+            .node(gpu(), 1)
+            .build()
+    };
+    sweep_grid_warm(&[0.5, 1.0], &[1], 2.0, 1, WarmStart::Exact, make);
+}
+
+#[test]
+fn redispatch_reprices_on_destination_tier() {
+    // Two *different* GPU tiers behind least-loaded routing. Node 0
+    // (the fast tier) fails early and never repairs, so its queue is
+    // re-dispatched to the slow tier. Deterministic roofline service
+    // on fixed token counts means every tier has exactly one legal
+    // service time — and the per-tier outcome counts must reconcile
+    // with the cluster ledger's per-node `served` counters, which they
+    // only do when a re-dispatched job is re-priced on the
+    // *destination* roofline (DESIGN.md §11).
+    let class = WorkloadClass::translation()
+        .with_rate(2.0)
+        .with_input(TokenDist::Fixed(256))
+        .with_output(TokenDist::Fixed(128))
+        .with_budget(5.0);
+    let fast = gpu();
+    let slow = GpuSpec::a100().scaled(8.0);
+    let spec = class.job_spec(256, 128);
+    let s_fast = CostModel::new(fast).total_latency(&spec);
+    let s_slow = CostModel::new(slow).total_latency(&spec);
+    assert_ne!(s_fast.to_bits(), s_slow.to_bits(), "tiers must price differently");
+
+    let res = ScenarioBuilder::new()
+        .scheme(SchemeConfig::icc())
+        .horizon(6.0)
+        .warmup(0.0)
+        .seed(13)
+        .routing(RoutingPolicy::LeastLoaded)
+        .service_kind(ServiceModelKind::Roofline)
+        .workload(class)
+        .cell(CellSpec::new(16))
+        .node(fast, 1)
+        .node_churn(NodeChurnSpec { mtbf: 0.5, mttr: 1e9, spinup: 0.0 })
+        .node(slow, 1)
+        .cluster(ClusterSpec { retry_budget: 1, ..Default::default() })
+        .build()
+        .run();
+
+    let cl = &res.report.cluster;
+    assert!(!cl.is_empty());
+    let failures: u64 = cl.nodes.iter().map(|n| n.failures).sum();
+    let redispatched: u64 = cl.nodes.iter().map(|n| n.redispatched).sum();
+    assert!(failures >= 1, "the fast tier never failed — the test exercises nothing");
+    assert!(redispatched >= 1, "no job crossed tiers — the test exercises nothing");
+
+    let completed: Vec<_> =
+        res.outcomes.iter().filter(|o| o.fate == JobFate::Completed).collect();
+    assert!(!completed.is_empty());
+    let n_fast =
+        completed.iter().filter(|o| o.t_service.to_bits() == s_fast.to_bits()).count() as u64;
+    let n_slow =
+        completed.iter().filter(|o| o.t_service.to_bits() == s_slow.to_bits()).count() as u64;
+    // Every completed job carries exactly one tier's roofline…
+    assert_eq!(
+        n_fast + n_slow,
+        completed.len() as u64,
+        "a completed job carries a service time priced on neither tier"
+    );
+    // …and the tier is the one that actually served it.
+    assert_eq!(n_fast, cl.nodes[0].served, "fast-tier pricing vs fast-tier serves");
+    assert_eq!(n_slow, cl.nodes[1].served, "slow-tier pricing vs slow-tier serves");
+}
+
+/// Single-cell, single-node scenario with an arbitrary workload class
+/// — the rate-phase boundary rig.
+fn one_class(class: WorkloadClass, seed: u64, horizon: f64) -> Scenario {
+    ScenarioBuilder::new()
+        .scheme(SchemeConfig::icc())
+        .horizon(horizon)
+        .warmup(0.0)
+        .seed(seed)
+        .workload(class)
+        .cell(CellSpec::new(8))
+        .node(gpu(), 1)
+        .build()
+}
+
+#[test]
+fn rate_phase_at_horizon_never_takes_effect() {
+    // Arrivals at t >= horizon are discarded, so a phase starting
+    // exactly at the horizon must not change one bit.
+    check(4, |g| {
+        let seed = g.u64_below(500);
+        let plain = one_class(WorkloadClass::translation(), seed, 3.0).run();
+        let phased =
+            one_class(WorkloadClass::translation().with_rate_phase(3.0, 50.0), seed, 3.0)
+                .run();
+        prop_assert!(plain.events == phased.events, "seed {seed}: event counts diverged");
+        prop_assert!(
+            plain.report.to_json() == phased.report.to_json(),
+            "seed {seed}: a phase at the horizon changed the results"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn single_phase_from_zero_equals_constant_rate() {
+    // A one-phase schedule starting at t = 0 is the constant rate it
+    // names: the draws must match bit for bit regardless of the
+    // (never in force) base rate.
+    check(4, |g| {
+        let seed = g.u64_below(500);
+        let constant = one_class(WorkloadClass::translation().with_rate(1.3), seed, 3.0).run();
+        let scheduled = one_class(
+            WorkloadClass::translation().with_rate(0.2).with_rate_phase(0.0, 1.3),
+            seed,
+            3.0,
+        )
+        .run();
+        prop_assert!(
+            constant.events == scheduled.events
+                && constant.report.to_json() == scheduled.report.to_json(),
+            "seed {seed}: single-phase schedule diverged from the constant rate"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn zero_rate_phase_silences_then_resumes() {
+    // rate 2.0 on [0, 1.5), silent on [1.5, 3.5), rate 2.0 after.
+    let class = WorkloadClass::translation()
+        .with_rate(2.0)
+        .with_rate_phase(1.5, 0.0)
+        .with_rate_phase(3.5, 2.0);
+    let res = one_class(class.clone(), 19, 6.0).run();
+    // Deterministic replay through the deferral path.
+    let res2 = one_class(class, 19, 6.0).run();
+    assert_eq!(res.events, res2.events);
+    assert_eq!(res.report.to_json(), res2.report.to_json());
+
+    let before = res.outcomes.iter().filter(|o| o.t_gen < 1.5).count();
+    let during = res.outcomes.iter().filter(|o| o.t_gen >= 1.5 && o.t_gen < 3.5).count();
+    let after = res.outcomes.iter().filter(|o| o.t_gen >= 3.5).count();
+    assert!(before > 0, "no arrivals before the silence");
+    assert!(after > 0, "the class never resumed after the zero phase");
+    // At most one already-armed arrival per (UE, class) stream may
+    // leak into the silent window (documented discretization).
+    assert!(during <= 8, "{during} arrivals during a zero-rate phase (8 streams)");
+}
+
+#[test]
+fn zero_rate_tail_goes_permanently_silent() {
+    // A final zero phase with no positive phase after it: the stream
+    // must stop without drawing (and the run must still terminate).
+    let class = WorkloadClass::translation().with_rate(2.0).with_rate_phase(1.0, 0.0);
+    let res = one_class(class, 23, 6.0).run();
+    let late = res.outcomes.iter().filter(|o| o.t_gen >= 1.0).count();
+    assert!(late <= 8, "{late} arrivals after a permanent silence (8 streams)");
+    assert!(res.outcomes.iter().any(|o| o.t_gen < 1.0));
+}
+
+#[test]
+fn toml_rate_phase_accepts_zero_and_rejects_negative() {
+    let base = r#"
+[[workload]]
+name = "w"
+rate_per_ue = 1.0
+
+[[workload.rate_phase]]
+class = "w"
+t_start = 2.0
+rate_per_ue = 0.0
+"#;
+    let doc = Document::parse(base).unwrap();
+    let sc = ScenarioBuilder::new()
+        .scheme(SchemeConfig::icc())
+        .horizon(3.0)
+        .node(gpu(), 1)
+        .apply_toml(&doc)
+        .expect("zero-rate phase is legal")
+        .try_build()
+        .expect("zero-rate phase must build");
+    assert_eq!(sc.classes()[0].rate_at(2.5), 0.0);
+
+    let doc = Document::parse(&base.replace("rate_per_ue = 0.0", "rate_per_ue = -1.0"))
+        .unwrap();
+    let err = ScenarioBuilder::new()
+        .scheme(SchemeConfig::icc())
+        .node(gpu(), 1)
+        .apply_toml(&doc)
+        .err()
+        .expect("negative phase rate must be rejected");
+    assert!(err.to_string().contains("rate_per_ue >= 0"), "{err}");
+}

@@ -106,6 +106,8 @@ fn bench_batch_engine(out: &mut Vec<BenchResult>) {
                     c_llm: 14e9,
                     m_llm: 14e9,
                     kv_bytes_per_token: 524_288.0,
+                    prefix_id: 0,
+                    prefix_tokens: 0,
                 },
                 0.0,
                 &mut events,

@@ -141,6 +141,67 @@ fn main() {
         )
     };
 
+    // Multi-model row: the zoo-routing + shared-prefix admission hot
+    // path — two classes with quality floors over two batching nodes
+    // hosting different model tiers, bulk jobs declaring a shared
+    // prefix. Gated via `scale/multi_model/...` so the RouteCtx model
+    // views and prefix-block bookkeeping cannot silently slow the loop.
+    let multi_model_json = {
+        use icc6g::llm::ModelSpec;
+        use icc6g::scenario::ExecutionModel;
+        let n_ues_total = 600u32;
+        let run = || {
+            ScenarioBuilder::new()
+                .scheme(bench_scheme())
+                .horizon(2.0)
+                .warmup(0.2)
+                .seed(1)
+                .routing(RoutingPolicy::ClassAffinity)
+                .workload(
+                    WorkloadClass::chat()
+                        .with_rate(10.0 / n_ues_total as f64)
+                        .with_models(&["70b"]),
+                )
+                .workload(
+                    WorkloadClass::translation()
+                        .with_rate(10.0 / n_ues_total as f64)
+                        .with_models(&["7b", "70b"])
+                        .with_prefix_tokens(8),
+                )
+                .cell(CellSpec::new(n_ues_total))
+                .model(ModelSpec::llama_70b().with_resident_bytes(140e9))
+                .model(ModelSpec::llama_7b().with_resident_bytes(14e9))
+                .node_exec(
+                    GpuSpec::gh200_nvl2().scaled(2.0),
+                    1,
+                    ExecutionModel::ContinuousBatching { max_batch: 32, kv_budget: 80e9 },
+                )
+                .node_models(&["70b"])
+                .node_exec(
+                    GpuSpec::gh200_nvl2().scaled(2.0),
+                    1,
+                    ExecutionModel::ContinuousBatching { max_batch: 32, kv_budget: 80e9 },
+                )
+                .node_models(&["7b"])
+                .build()
+                .run()
+        };
+        let _ = run(); // warmup
+        let t0 = Instant::now();
+        let res = run();
+        let wall = t0.elapsed().as_secs_f64();
+        let eps = res.events as f64 / wall.max(1e-12);
+        println!(
+            "multi-model   {:>6} UEs / 2 classes x 2 tiers {:>12.0} ev/s ({} jobs)",
+            n_ues_total, eps, res.report.n_jobs,
+        );
+        format!(
+            ",\n  {{\"name\": \"multi_model\", \"n_ues\": {n_ues_total}, \"events\": {}, \
+             \"jobs\": {}, \"wall_s\": {wall:.4}, \"events_per_sec\": {eps:.1}}}",
+            res.events, res.report.n_jobs,
+        )
+    };
+
     // Conservative-PDES rows: the coupled-radio pipeline sharded over
     // 16 and 64 hex cells with mobility + handover, stepped on all
     // cores under the frontier scheduler vs the legacy per-slot
@@ -297,6 +358,7 @@ fn main() {
         );
     }
     js.push_str(&coupled_json);
+    js.push_str(&multi_model_json);
     js.push_str(&pdes_json);
     js.push_str(&warm_json);
     js.push_str(&sweep_json);

@@ -13,6 +13,11 @@
 //!   the KV budget: a job reserves `(N_input + N_output) ·
 //!   kv_bytes_per_token` for its whole lifetime (vLLM-style
 //!   conservative reservation, which keeps admission deterministic).
+//!   Jobs carrying a shared system-prompt prefix (`prefix_tokens > 0`)
+//!   reserve only their private suffix when the prefix block is
+//!   already resident: the block itself is refcounted and freed when
+//!   the last referencing job leaves the batch, and a warm admission
+//!   prefills only the non-shared input tokens.
 //! * **One iteration** = the prefills of newly admitted jobs plus one
 //!   batched decode step for every already-prefilled job:
 //!   `τ = Σ prefill_j + max(Σ C_LLM,j / G_comp, max M_LLM,j / G_membw)`
@@ -87,6 +92,13 @@ pub struct BatchJob {
     pub m_llm: f64,
     /// KV-cache bytes reserved per token of context.
     pub kv_bytes_per_token: f64,
+    /// Shared-prefix block key (system-prompt identity); meaningful
+    /// only when `prefix_tokens > 0`.
+    pub prefix_id: u64,
+    /// Leading tokens of `n_input` shared with every other job
+    /// carrying the same `prefix_id` (0 = no shared prefix; such jobs
+    /// take the legacy admission path unchanged).
+    pub prefix_tokens: u32,
 }
 
 impl BatchJob {
@@ -95,9 +107,21 @@ impl BatchJob {
         self.deadline - self.t_comm
     }
 
-    /// KV bytes this job reserves while admitted.
+    /// KV bytes this job reserves while admitted (full context — the
+    /// cold-prefix / no-prefix reservation).
     pub fn kv_bytes(&self) -> f64 {
         (self.n_input + self.n_output) as f64 * self.kv_bytes_per_token
+    }
+
+    /// KV bytes of the shared prefix block.
+    pub fn prefix_kv_bytes(&self) -> f64 {
+        self.prefix_tokens as f64 * self.kv_bytes_per_token
+    }
+
+    /// KV bytes private to this job when its prefix block is already
+    /// resident: the non-shared input suffix plus the output tokens.
+    pub fn suffix_kv_bytes(&self) -> f64 {
+        (self.n_input - self.prefix_tokens + self.n_output) as f64 * self.kv_bytes_per_token
     }
 
     /// Lower bound on remaining service (prefill + lone decode).
@@ -132,6 +156,10 @@ struct Active {
     tokens_left: u32,
     /// Prefill iteration completed → decodes one token per step.
     prefilled: bool,
+    /// KV bytes this job reserved at admission (full context, or the
+    /// private suffix only when its prefix block was already
+    /// resident); released exactly once at finish/evict.
+    kv_reserved: f64,
 }
 
 /// The continuous-batching execution engine of one compute node.
@@ -144,6 +172,10 @@ pub struct BatchEngine {
     kv_used: f64,
     queue: ReadyQueue<BatchJob>,
     active: Vec<Active>,
+    /// Resident shared-prefix blocks: `(prefix_id, bytes, refcount)`.
+    /// Linear scan — a node serves a handful of system-prompt classes,
+    /// and the Vec keeps insertion order deterministic for snapshots.
+    prefixes: Vec<(u64, f64, u32)>,
     /// A [`BatchEvent::StepAt`] is outstanding.
     running: bool,
     /// Running count of dropped jobs.
@@ -162,6 +194,7 @@ impl BatchEngine {
             kv_used: 0.0,
             queue: ReadyQueue::new(discipline),
             active: Vec::new(),
+            prefixes: Vec::new(),
             running: false,
             dropped: 0,
         }
@@ -180,6 +213,21 @@ impl BatchEngine {
     /// KV bytes currently reserved.
     pub fn kv_used(&self) -> f64 {
         self.kv_used
+    }
+
+    /// Free KV bytes under the admission budget.
+    pub fn kv_headroom(&self) -> f64 {
+        (self.kv_budget - self.kv_used).max(0.0)
+    }
+
+    /// Is the shared-prefix block `key` resident?
+    pub fn prefix_resident(&self, key: u64) -> bool {
+        self.prefixes.iter().any(|p| p.0 == key)
+    }
+
+    /// Live references on prefix block `key` (0 when absent).
+    pub fn prefix_refs(&self, key: u64) -> u32 {
+        self.prefixes.iter().find(|p| p.0 == key).map_or(0, |p| p.2)
     }
 
     /// Nothing queued or admitted (a draining node at this point can
@@ -201,24 +249,34 @@ impl BatchEngine {
         }
         self.queue.drain_into(out);
         self.kv_used = 0.0;
+        self.prefixes.clear();
         self.running = false;
     }
 
     /// Engine-snapshot view of the dynamic state: `(kv_used, running,
-    /// dropped, active batch as (job, tokens_left, prefilled) triples
-    /// in stored order, waiting queue)`. The active-batch order is
-    /// preserved verbatim — it determines the prefill/decode sweep
-    /// order of the next iteration.
+    /// dropped, active batch as (job, tokens_left, prefilled,
+    /// kv_reserved) tuples in stored order, waiting queue, resident
+    /// prefix blocks)`. The active-batch order is preserved verbatim —
+    /// it determines the prefill/decode sweep order of the next
+    /// iteration; the prefix-block order is the residency order.
     #[allow(clippy::type_complexity)]
     pub(crate) fn snapshot_state(
         &self,
-    ) -> (f64, bool, u64, Vec<(BatchJob, u32, bool)>, (u64, Vec<(f64, u64, BatchJob)>)) {
+    ) -> (
+        f64,
+        bool,
+        u64,
+        Vec<(BatchJob, u32, bool, f64)>,
+        (u64, Vec<(f64, u64, BatchJob)>),
+        Vec<(u64, f64, u32)>,
+    ) {
         (
             self.kv_used,
             self.running,
             self.dropped,
-            self.active.iter().map(|a| (a.job, a.tokens_left, a.prefilled)).collect(),
+            self.active.iter().map(|a| (a.job, a.tokens_left, a.prefilled, a.kv_reserved)).collect(),
             self.queue.snapshot_entries(),
+            self.prefixes.clone(),
         )
     }
 
@@ -233,9 +291,10 @@ impl BatchEngine {
         kv_used: f64,
         running: bool,
         dropped: u64,
-        active: Vec<(BatchJob, u32, bool)>,
+        active: Vec<(BatchJob, u32, bool, f64)>,
         queue_seq: u64,
         queue_entries: Vec<(f64, u64, BatchJob)>,
+        prefixes: Vec<(u64, f64, u32)>,
     ) -> Self {
         let mut e = Self::new(discipline, gpu, max_batch, kv_budget);
         e.kv_used = kv_used;
@@ -243,9 +302,15 @@ impl BatchEngine {
         e.dropped = dropped;
         e.active = active
             .into_iter()
-            .map(|(job, tokens_left, prefilled)| Active { job, tokens_left, prefilled })
+            .map(|(job, tokens_left, prefilled, kv_reserved)| Active {
+                job,
+                tokens_left,
+                prefilled,
+                kv_reserved,
+            })
             .collect();
         e.queue = ReadyQueue::restore(discipline, queue_seq, queue_entries);
+        e.prefixes = prefixes;
         e
     }
 
@@ -280,9 +345,18 @@ impl BatchEngine {
                 events.push(BatchEvent::FirstToken { job_id: a.job.job_id });
             }
             if a.tokens_left == 0 {
-                self.kv_used -= a.job.kv_bytes();
-                events.push(BatchEvent::Finished { job_id: a.job.job_id });
+                // `kv_reserved` is the exact f64 added at admission
+                // (bit-identical to recomputing `kv_bytes()` on the
+                // legacy no-prefix path).
+                let reserved = a.kv_reserved;
+                let job_id = a.job.job_id;
+                let (pid, ptok) = (a.job.prefix_id, a.job.prefix_tokens);
+                self.kv_used -= reserved;
+                events.push(BatchEvent::Finished { job_id });
                 self.active.swap_remove(i);
+                if ptok > 0 {
+                    self.release_prefix(pid);
+                }
                 disturbed = true;
             } else {
                 i += 1;
@@ -298,6 +372,21 @@ impl BatchEngine {
         self.advance(now, events);
     }
 
+    /// Release one reference on prefix block `key`, freeing its bytes
+    /// when the last referencing job leaves the batch.
+    fn release_prefix(&mut self, key: u64) {
+        let i = self
+            .prefixes
+            .iter()
+            .position(|p| p.0 == key)
+            .expect("release of a non-resident prefix block");
+        self.prefixes[i].2 -= 1;
+        if self.prefixes[i].2 == 0 {
+            self.kv_used -= self.prefixes[i].1;
+            self.prefixes.remove(i);
+        }
+    }
+
     /// Admit from the queue and schedule the next iteration boundary.
     fn advance(&mut self, now: f64, events: &mut Vec<BatchEvent>) {
         loop {
@@ -305,10 +394,23 @@ impl BatchEngine {
                 break;
             }
             let Some(head) = self.queue.peek() else { break };
-            let kv_need = head.kv_bytes();
-            if kv_need > self.kv_budget {
-                // Could never be admitted — drop instead of wedging
-                // the queue head forever.
+            // Shared-prefix reuse: a job whose prefix block is already
+            // resident reserves only its private suffix and prefills
+            // only the non-shared tokens. `prefix_tokens == 0` jobs
+            // take the legacy reservation arithmetic unchanged.
+            let prefix_warm =
+                head.prefix_tokens > 0 && self.prefixes.iter().any(|p| p.0 == head.prefix_id);
+            let kv_need = if head.prefix_tokens == 0 {
+                head.kv_bytes()
+            } else if prefix_warm {
+                head.suffix_kv_bytes()
+            } else {
+                head.prefix_kv_bytes() + head.suffix_kv_bytes()
+            };
+            if head.kv_bytes() > self.kv_budget {
+                // Could never be admitted (a resident prefix is carved
+                // from the same budget) — drop instead of wedging the
+                // queue head forever.
                 let job = self.queue.pop().unwrap();
                 self.dropped += 1;
                 events.push(BatchEvent::Dropped { job_id: job.job_id });
@@ -317,7 +419,12 @@ impl BatchEngine {
             if self.kv_used + kv_need > self.kv_budget {
                 break;
             }
-            let job = self.queue.pop().unwrap();
+            let mut job = self.queue.pop().unwrap();
+            if prefix_warm {
+                // Only the non-shared suffix is prefilled; the charge
+                // scales linearly with the remaining input tokens.
+                job.prefill_time *= (job.n_input - job.prefix_tokens) as f64 / job.n_input as f64;
+            }
             if self.discipline.drops_hopeless()
                 && now + job.min_service_time() > job.deadline
             {
@@ -325,9 +432,34 @@ impl BatchEngine {
                 events.push(BatchEvent::Dropped { job_id: job.job_id });
                 continue;
             }
-            self.kv_used += kv_need;
+            // Every += below is matched by a later -= of the *same*
+            // stored f64 (job `kv_reserved`, block bytes), so release
+            // arithmetic mirrors reservation arithmetic exactly.
+            let kv_reserved = if job.prefix_tokens == 0 {
+                self.kv_used += kv_need;
+                kv_need
+            } else if prefix_warm {
+                let p = self.prefixes.iter_mut().find(|p| p.0 == job.prefix_id).unwrap();
+                p.2 += 1;
+                self.kv_used += kv_need;
+                kv_need
+            } else {
+                // Cold prefix: materialize the refcounted block; the
+                // job itself owns only its private suffix, the block
+                // owns the shared tokens.
+                let (pb, sb) = (job.prefix_kv_bytes(), job.suffix_kv_bytes());
+                self.prefixes.push((job.prefix_id, pb, 1));
+                self.kv_used += pb;
+                self.kv_used += sb;
+                sb
+            };
             events.push(BatchEvent::Admitted { job_id: job.job_id });
-            self.active.push(Active { job, tokens_left: job.n_output, prefilled: false });
+            self.active.push(Active {
+                job,
+                tokens_left: job.n_output,
+                prefilled: false,
+                kv_reserved,
+            });
         }
         if self.active.is_empty() {
             return; // idle; the next enqueue restarts the engine
@@ -380,6 +512,8 @@ mod tests {
             c_llm: spec.c_llm,
             m_llm: spec.m_llm,
             kv_bytes_per_token: KV_PER_TOKEN,
+            prefix_id: 0,
+            prefix_tokens: 0,
         }
     }
 
@@ -641,5 +775,163 @@ mod tests {
                 "job {id}: batch {finish} vs sequential {seq_finish}"
             );
         }
+    }
+
+    /// Like `run`, but also report the peak KV reservation observed
+    /// across every engine interaction.
+    fn run_peak(
+        engine: &mut BatchEngine,
+        arrivals: &[(f64, BatchJob)],
+    ) -> (std::collections::BTreeMap<u64, (f64, f64)>, f64) {
+        let mut out = std::collections::BTreeMap::new();
+        let mut first = std::collections::BTreeMap::new();
+        let mut events = Vec::new();
+        let mut pending_step: Option<f64> = None;
+        let mut arrivals = arrivals.to_vec();
+        arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut ai = 0;
+        let mut peak = 0.0f64;
+        loop {
+            let next_arr = arrivals.get(ai).map(|a| a.0);
+            let (now, is_arrival) = match (next_arr, pending_step) {
+                (Some(a), Some(s)) if a <= s => (a, true),
+                (_, Some(s)) => (s, false),
+                (Some(a), None) => (a, true),
+                (None, None) => break,
+            };
+            events.clear();
+            if is_arrival {
+                let (_, j) = arrivals[ai];
+                ai += 1;
+                engine.enqueue(j, now, &mut events);
+            } else {
+                pending_step = None;
+                engine.step(now, &mut events);
+            }
+            peak = peak.max(engine.kv_used());
+            for ev in &events {
+                match *ev {
+                    BatchEvent::StepAt { at } => pending_step = Some(at),
+                    BatchEvent::FirstToken { job_id } => {
+                        first.insert(job_id, now);
+                    }
+                    BatchEvent::Finished { job_id } => {
+                        out.insert(job_id, (first[&job_id], now));
+                    }
+                    _ => {}
+                }
+            }
+        }
+        (out, peak)
+    }
+
+    #[test]
+    fn prefix_refcount_frees_only_on_last_release() {
+        let gpu = GpuSpec::a100();
+        let mut e = BatchEngine::new(Discipline::Fifo, gpu, 8, 1e9);
+        let mut events = Vec::new();
+        // job 0 decodes 2 tokens, job 1 decodes 15 → job 0 leaves the
+        // batch first and must not tear down the shared block.
+        let a = BatchJob { prefix_id: 7, prefix_tokens: 20, ..job(0, 0.0, 10.0, 2, &gpu) };
+        let b = BatchJob { prefix_id: 7, prefix_tokens: 20, ..job(1, 0.0, 10.0, 15, &gpu) };
+        e.enqueue(a, 0.0, &mut events);
+        // job 0 admitted cold: block + private suffix reserved
+        assert_eq!(e.prefix_refs(7), 1);
+        assert_eq!(e.kv_used(), a.prefix_kv_bytes() + a.suffix_kv_bytes());
+        e.enqueue(b, 0.0, &mut events);
+        let mut pending: Option<f64> = events.iter().find_map(|ev| match ev {
+            BatchEvent::StepAt { at } => Some(*at),
+            _ => None,
+        });
+        let mut max_refs = e.prefix_refs(7);
+        let mut peak_kv = e.kv_used();
+        let mut saw_first_release = false;
+        while let Some(now) = pending {
+            events.clear();
+            e.step(now, &mut events);
+            pending = events.iter().find_map(|ev| match ev {
+                BatchEvent::StepAt { at } => Some(*at),
+                _ => None,
+            });
+            max_refs = max_refs.max(e.prefix_refs(7));
+            peak_kv = peak_kv.max(e.kv_used());
+            if events.iter().any(|ev| matches!(ev, BatchEvent::Finished { job_id: 0 })) {
+                saw_first_release = true;
+                assert!(e.prefix_resident(7), "live prefix must survive a release");
+                assert_eq!(e.prefix_refs(7), 1);
+                assert!(e.kv_used() > 0.0);
+            }
+        }
+        assert!(saw_first_release);
+        assert_eq!(max_refs, 2, "second job re-references the warm block");
+        // warm second job reserved only its suffix
+        assert_eq!(peak_kv, a.prefix_kv_bytes() + a.suffix_kv_bytes() + b.suffix_kv_bytes());
+        assert!(peak_kv < a.kv_bytes() + b.kv_bytes(), "reuse must reserve less");
+        assert!(!e.prefix_resident(7), "last release frees the block");
+        assert_eq!(e.prefix_refs(7), 0);
+        assert_eq!(e.kv_used(), 0.0);
+    }
+
+    #[test]
+    fn prefix_reuse_peak_kv_and_makespan_never_exceed_no_reuse() {
+        let gpu = GpuSpec::a100();
+        let mk = |id: u64, pfx: u32| BatchJob {
+            prefix_id: 3,
+            prefix_tokens: pfx,
+            ..job(id, 0.0, 10.0, 15, &gpu)
+        };
+        let shared: Vec<(f64, BatchJob)> =
+            (0..6).map(|i| (0.001 * i as f64, mk(i as u64, 20))).collect();
+        let raw: Vec<(f64, BatchJob)> =
+            (0..6).map(|i| (0.001 * i as f64, mk(i as u64, 0))).collect();
+        let (t_with, peak_with) =
+            run_peak(&mut BatchEngine::new(Discipline::Fifo, gpu, 8, 1e9), &shared);
+        let (t_without, peak_without) =
+            run_peak(&mut BatchEngine::new(Discipline::Fifo, gpu, 8, 1e9), &raw);
+        assert_eq!(t_with.len(), 6);
+        assert_eq!(t_without.len(), 6);
+        assert!(peak_with < peak_without, "peak {peak_with} vs {peak_without}");
+        let ms = |t: &std::collections::BTreeMap<u64, (f64, f64)>| {
+            t.values().map(|&(_, f)| f).fold(0.0, f64::max)
+        };
+        // shared prefills shrink the iterations, so the whole run ends
+        // sooner too
+        assert!(ms(&t_with) < ms(&t_without), "makespan {} vs {}", ms(&t_with), ms(&t_without));
+    }
+
+    #[test]
+    fn prefix_reuse_admits_more_under_tight_budget() {
+        let gpu = GpuSpec::a100();
+        // Table-1 jobs: 45-token full context, 25-token suffix after a
+        // 20-token shared prefix. Budget 100 tokens → without reuse
+        // two jobs fit (90); with reuse three do (45 + 25 + 25 = 95).
+        let budget = 100.0 * KV_PER_TOKEN;
+        let mut with = BatchEngine::new(Discipline::Fifo, gpu, 8, budget);
+        let mut without = BatchEngine::new(Discipline::Fifo, gpu, 8, budget);
+        let mut ev_with = Vec::new();
+        let mut ev_without = Vec::new();
+        for i in 0..3u64 {
+            let pj = BatchJob { prefix_id: 1, prefix_tokens: 20, ..job(i, 0.0, 10.0, 15, &gpu) };
+            with.enqueue(pj, 0.0, &mut ev_with);
+            without.enqueue(job(i, 0.0, 10.0, 15, &gpu), 0.0, &mut ev_without);
+        }
+        // Admission happens at iteration boundaries: drive one step on
+        // each engine so the queued jobs get their admission pass.
+        let at = |evs: &[BatchEvent]| {
+            evs.iter()
+                .find_map(|ev| match ev {
+                    BatchEvent::StepAt { at } => Some(*at),
+                    _ => None,
+                })
+                .unwrap()
+        };
+        let (tw, two) = (at(&ev_with), at(&ev_without));
+        ev_with.clear();
+        ev_without.clear();
+        with.step(tw, &mut ev_with);
+        without.step(two, &mut ev_without);
+        assert_eq!(with.batch_len(), 3, "prefix reuse fits a third job");
+        assert_eq!(without.batch_len(), 2);
+        assert_eq!(without.queue_len(), 1);
     }
 }

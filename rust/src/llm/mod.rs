@@ -44,6 +44,102 @@ pub fn kv_bytes_per_token(m_llm: f64) -> f64 {
     2.0 * layers * d_model * BYTES_PER_VALUE
 }
 
+/// One model tier of a serving zoo: parameter count, roofline demand
+/// profile, per-token KV footprint, and HBM residency. A scenario's
+/// `[[model]]` tables build these; nodes host a subset and routing
+/// picks one per job (DESIGN.md §14).
+///
+/// The KV bytes/token value is owned here: an explicit override and
+/// the [`kv_bytes_per_token`] heuristic can never disagree, because
+/// every consumer reads [`ModelSpec::kv_bytes_per_token`] and the
+/// override is private.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    /// Catalog name (`"7b"`, `"70b"`, …) — referenced by node resident
+    /// sets and workload accept-lists.
+    pub name: String,
+    /// Parameter count (e.g. `7e9`).
+    pub params: f64,
+    /// FLOPs per token of matmul work (defaults to `2 × params`).
+    pub c_llm: f64,
+    /// Bytes streamed from memory per forward pass (defaults to
+    /// `2 × params`, FP16).
+    pub m_llm: f64,
+    /// Explicit KV bytes/token; `None` derives from `m_llm` via the
+    /// dense-transformer heuristic.
+    kv_override: Option<f64>,
+    /// Resident HBM footprint of the weights in bytes (defaults to
+    /// `m_llm` — FP16 weights are exactly the streamed bytes).
+    pub resident_bytes: f64,
+}
+
+impl ModelSpec {
+    /// A dense FP16 model of `params` parameters with the default
+    /// demand profile (`c = m = 2 × params`, heuristic KV, weights
+    /// resident at `m_llm` bytes).
+    pub fn new(name: &str, params: f64) -> Self {
+        Self {
+            name: name.to_string(),
+            params,
+            c_llm: 2.0 * params,
+            m_llm: 2.0 * params,
+            kv_override: None,
+            resident_bytes: 2.0 * params,
+        }
+    }
+
+    /// The Table-I 7B tier (Llama-2-7B FP16).
+    pub fn llama_7b() -> Self {
+        Self::new("7b", 7e9)
+    }
+
+    /// The 70B quality tier motivating the zoo split.
+    pub fn llama_70b() -> Self {
+        Self::new("70b", 70e9)
+    }
+
+    /// Override the per-token FLOP demand.
+    pub fn with_c_llm(mut self, c_llm: f64) -> Self {
+        self.c_llm = c_llm;
+        self
+    }
+
+    /// Override the per-pass byte demand. Does not touch an explicit
+    /// KV override; without one the heuristic follows the new `m_llm`.
+    pub fn with_m_llm(mut self, m_llm: f64) -> Self {
+        self.m_llm = m_llm;
+        self
+    }
+
+    /// Pin KV bytes/token explicitly (GQA/MQA models cache less than
+    /// the dense heuristic predicts).
+    pub fn with_kv_bytes_per_token(mut self, kv: f64) -> Self {
+        self.kv_override = Some(kv);
+        self
+    }
+
+    /// Override the resident weight footprint (quantized weights,
+    /// shared embeddings).
+    pub fn with_resident_bytes(mut self, bytes: f64) -> Self {
+        self.resident_bytes = bytes;
+        self
+    }
+
+    /// KV-cache bytes per context token: the explicit override when
+    /// set, the [`kv_bytes_per_token`] heuristic over `m_llm`
+    /// otherwise. The single source of truth for this model's KV
+    /// footprint.
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        self.kv_override.unwrap_or_else(|| kv_bytes_per_token(self.m_llm))
+    }
+
+    /// Whether the KV footprint was pinned explicitly (TOML
+    /// round-trips need to re-emit only explicit overrides).
+    pub fn kv_is_explicit(&self) -> bool {
+        self.kv_override.is_some()
+    }
+}
+
 impl JobSpec {
     /// Table I workload: Llama-2-7B FP16, 15 input / 15 output tokens,
     /// 80 ms end-to-end budget.
@@ -224,6 +320,31 @@ mod tests {
         let kv70 = kv_bytes_per_token(140e9);
         assert!(kv70 > kv && kv70 < 10.0 * kv, "kv70 = {kv70}");
         assert!((JobSpec::table1().kv_bytes_per_token() - kv).abs() < 1.0);
+    }
+
+    #[test]
+    fn model_spec_owns_kv_resolution() {
+        let m = ModelSpec::llama_7b();
+        assert_eq!(m.name, "7b");
+        assert!((m.c_llm - 14e9).abs() < 1.0);
+        assert!((m.m_llm - 14e9).abs() < 1.0);
+        assert!((m.resident_bytes - 14e9).abs() < 1.0);
+        // heuristic path: identical to the free function
+        assert!(!m.kv_is_explicit());
+        assert!((m.kv_bytes_per_token() - kv_bytes_per_token(14e9)).abs() < 1e-9);
+        // explicit override wins and survives an m_llm change
+        let gqa = ModelSpec::llama_70b()
+            .with_kv_bytes_per_token(0.1e6)
+            .with_m_llm(140e9);
+        assert!(gqa.kv_is_explicit());
+        assert!((gqa.kv_bytes_per_token() - 0.1e6).abs() < 1e-9);
+        // without an override the heuristic follows m_llm
+        let dense = ModelSpec::llama_70b().with_m_llm(140e9);
+        assert!((dense.kv_bytes_per_token() - kv_bytes_per_token(140e9)).abs() < 1e-9);
+        // resident override is independent of demand
+        let q4 = ModelSpec::llama_70b().with_resident_bytes(35e9);
+        assert!((q4.resident_bytes - 35e9).abs() < 1.0);
+        assert!((q4.m_llm - 140e9).abs() < 1.0);
     }
 
     #[test]

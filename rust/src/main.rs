@@ -712,6 +712,35 @@ fn cmd_scenario(argv: &[String]) -> i32 {
     }
     t.print();
     let _ = t.write_csv("scenario_classes.csv");
+    if !res.report.per_model.is_empty() {
+        let mut mt = Table::new(
+            "per-model breakdown (zoo runs; jobs judged by their class budgets)",
+            &[
+                "model",
+                "jobs",
+                "dropped",
+                "satisfaction",
+                "avg_comp_ms",
+                "avg_e2e_ms",
+                "avg_tok_per_s",
+                "ttft_p95",
+            ],
+        );
+        for c in &res.report.per_model {
+            mt.row(&[
+                c.name.clone(),
+                c.n_jobs.to_string(),
+                c.n_dropped.to_string(),
+                cell(c.satisfaction_rate(), 4),
+                cell(c.comp.mean() * 1e3, 2),
+                cell(c.e2e.mean() * 1e3, 2),
+                cell(c.tokens_per_sec.mean(), 1),
+                cell(c.ttft_percentile(95.0) * 1e3, 2),
+            ]);
+        }
+        mt.print();
+        let _ = mt.write_csv("scenario_models.csv");
+    }
     if res.report.per_cell.len() > 1 {
         let mut ct = Table::new(
             "per-cell breakdown (originating gNB; jobs judged by their class budgets)",

@@ -25,6 +25,9 @@ pub struct JobOutcome {
     pub job_id: u64,
     /// Workload class the job belongs to (0 for single-class runs).
     pub class_id: u32,
+    /// Zoo model the job was served on; `u32::MAX` when the run had no
+    /// model zoo (or the job was never dispatched to a node).
+    pub model_id: u32,
     /// Originating cell (gNB) of the job (0 for single-cell runs).
     pub cell_id: u32,
     /// Generation time at the UE.
@@ -418,6 +421,12 @@ pub struct SimReport {
     /// no duplicate sample sets. Each job is judged by its own class
     /// policy, exactly as in `per_class`.
     pub per_cell: Vec<ClassReport>,
+    /// Per-model breakdown of a model-zoo run, one slice per `[[model]]`
+    /// entry in zoo order (named by model name). Populated via
+    /// [`SimReport::bucket_per_model`]; empty for single-model runs.
+    /// Each job is judged by its own class policy, exactly as in
+    /// `per_class`; jobs that never reached a model contribute nothing.
+    pub per_model: Vec<ClassReport>,
     /// Per-cell radio-layer stats (handover counts, applied IoT) of a
     /// coupled-radio run, indexed by cell. Empty for legacy
     /// fixed-margin runs; merges element-wise across replications with
@@ -480,6 +489,30 @@ impl SimReport {
         r
     }
 
+    /// Re-bucket the same outcomes by served model (model-zoo runs):
+    /// one slice per zoo entry, in zoo order, each job judged by its
+    /// own class policy exactly as in `per_class`. Jobs carrying
+    /// `model_id == u32::MAX` (no zoo, or never dispatched) are
+    /// skipped, so the slices need not sum to the overall totals.
+    pub fn bucket_per_model(
+        outcomes: &[JobOutcome],
+        model_names: &[String],
+        classes: &[(String, LatencyManagement)],
+    ) -> Vec<ClassReport> {
+        let mut per: Vec<ClassReport> =
+            model_names.iter().map(|n| ClassReport::new(n.clone())).collect();
+        for j in outcomes {
+            if j.model_id == u32::MAX {
+                continue;
+            }
+            let m = j.model_id as usize;
+            assert!(m < per.len(), "outcome model {m} out of range");
+            let cls = j.class_id as usize;
+            per[m].observe(j, &classes[cls].1);
+        }
+        per
+    }
+
     /// Fold one per-class slice into the overall totals.
     fn absorb(&mut self, cr: &ClassReport) {
         self.n_jobs += cr.n_jobs;
@@ -539,6 +572,21 @@ impl SimReport {
         } else {
             self.per_cell.clear();
         }
+        // Per-model slices: matching zoos merge slice-wise, mismatched
+        // zoos clear the breakdown (same rule as per_class/per_cell).
+        let models_match = self.per_model.len() == other.per_model.len()
+            && self
+                .per_model
+                .iter()
+                .zip(&other.per_model)
+                .all(|(a, b)| a.name == b.name);
+        if models_match {
+            for (a, b) in self.per_model.iter_mut().zip(&other.per_model) {
+                a.merge(b);
+            }
+        } else {
+            self.per_model.clear();
+        }
         // Radio slices: element-wise on matching topologies, cleared
         // on mismatch.
         if self.radio.len() == other.radio.len() {
@@ -565,6 +613,7 @@ impl SimReport {
             tpot: Welford::new(),
             per_class: Vec::new(),
             per_cell: Vec::new(),
+            per_model: Vec::new(),
             radio: Vec::new(),
             cluster: ClusterReport::default(),
         }
@@ -660,6 +709,36 @@ impl SimReport {
             out.push('}');
         }
         if !self.per_cell.is_empty() {
+            out.push_str("\n  ");
+        }
+        out.push_str("],\n  \"per_model\": [");
+        for (i, c) in self.per_model.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("\n    {");
+            out.push_str(&format!("\"name\": \"{}\", ", jstr(&c.name)));
+            out.push_str(&format!("\"n_jobs\": {}, ", c.n_jobs));
+            out.push_str(&format!("\"n_satisfied\": {}, ", c.n_satisfied));
+            out.push_str(&format!("\"n_dropped\": {}, ", c.n_dropped));
+            out.push_str(&format!(
+                "\"satisfaction_rate\": {}, ",
+                jnum(c.satisfaction_rate())
+            ));
+            out.push_str(&format!("\"avg_comp_ms\": {}, ", jnum(c.comp.mean() * 1e3)));
+            out.push_str(&format!("\"avg_e2e_ms\": {}, ", jnum(c.e2e.mean() * 1e3)));
+            out.push_str(&format!(
+                "\"avg_tokens_per_sec\": {}, ",
+                jnum(c.tokens_per_sec.mean())
+            ));
+            out.push_str(&format!(
+                "\"ttft_ms\": {{\"mean\": {}, \"p95\": {}}}",
+                jnum(c.ttft.mean() * 1e3),
+                jnum(c.ttft_percentile(95.0) * 1e3),
+            ));
+            out.push('}');
+        }
+        if !self.per_model.is_empty() {
             out.push_str("\n  ");
         }
         out.push_str("],\n  \"per_cell_radio\": [");
@@ -763,6 +842,7 @@ mod tests {
         JobOutcome {
             job_id: 0,
             class_id: 0,
+            model_id: u32::MAX,
             cell_id: 0,
             t_gen: 0.0,
             t_comm,
@@ -1094,6 +1174,58 @@ mod tests {
         assert_eq!(ecl.get("nodes").and_then(|x| x.as_arr()).unwrap().len(), 0);
         assert_eq!(ecl.get("classes").and_then(|x| x.as_arr()).unwrap().len(), 0);
         assert_eq!(ecl.get("capacity_per_dollar"), Some(&Value::Null));
+    }
+
+    /// Satellite: per-model slices bucket by `model_id` under each
+    /// job's own class policy, skip never-dispatched jobs, merge
+    /// slice-wise across matching zoos, clear on mismatch, and ride in
+    /// the JSON report.
+    #[test]
+    fn per_model_slices_bucket_judge_and_merge() {
+        let classes = vec![
+            ("tight".to_string(), LatencyManagement::Joint { b_total: 0.070 }),
+            ("loose".to_string(), LatencyManagement::Joint { b_total: 0.100 }),
+        ];
+        let names = vec!["70b".to_string(), "7b".to_string()];
+        let mk = |specs: &[(u32, u32)]| {
+            let outcomes: Vec<JobOutcome> = specs
+                .iter()
+                .map(|&(cls, model)| JobOutcome {
+                    class_id: cls,
+                    model_id: model,
+                    ..done(0.010, 0.030, 0.035) // e2e = 80 ms
+                })
+                .collect();
+            let mut r = SimReport::from_outcomes_per_class(&outcomes, &classes, 1);
+            r.per_model = SimReport::bucket_per_model(&outcomes, &names, &classes);
+            r
+        };
+        // class 0 (tight) fails its 70 ms budget at 80 ms; class 1
+        // (loose) passes — the same job is judged per its own class
+        // whichever model served it.
+        let mut a = mk(&[(0, 0), (1, 0), (1, 1), (0, u32::MAX)]);
+        assert_eq!(a.per_model.len(), 2);
+        assert_eq!(a.per_model[0].name, "70b");
+        assert_eq!(a.per_model[0].n_jobs, 2);
+        assert_eq!(a.per_model[0].n_satisfied, 1);
+        assert_eq!(a.per_model[1].n_jobs, 1);
+        // the u32::MAX job is counted overall but in no model slice
+        let sliced: u64 = a.per_model.iter().map(|c| c.n_jobs).sum();
+        assert_eq!(a.n_jobs, 4);
+        assert_eq!(sliced, 3);
+        // matching zoos merge slice-wise
+        a.merge(&mk(&[(1, 1)]));
+        assert_eq!(a.per_model[1].n_jobs, 2);
+        // JSON carries the section and stays balanced
+        let js = a.to_json();
+        assert!(js.contains("\"per_model\""));
+        assert!(js.contains("\"name\": \"70b\""));
+        assert_eq!(js.matches('{').count(), js.matches('}').count());
+        // a different zoo clears the breakdown instead of lying
+        let mut b = mk(&[(0, 0)]);
+        b.per_model.pop();
+        a.merge(&b);
+        assert!(a.per_model.is_empty());
     }
 
     #[test]

@@ -63,7 +63,7 @@ use super::cells::{
     cell_seed, CellRt, CellRtState, CellSync, FrontierPool, StepDriver, StepPool, StepRec,
     UeGeoSnap, UeSnap,
 };
-use super::routing::{NodeView, Routing};
+use super::routing::{ModelView, NodeView, RouteCtx, Routing};
 use super::workload::WorkloadClass;
 use super::{NodeSpec, Scenario};
 
@@ -152,9 +152,15 @@ struct JobState {
     /// Times this job was re-dispatched after losing its node (cluster
     /// runs only; compared against the retry budget).
     retries: u32,
+    /// Zoo model serving this job (`u32::MAX` = none: zoo-free run or
+    /// model-unconstrained class). Re-set on every (re-)dispatch.
+    model: u32,
     fate: JobFate,
     measured: bool,
 }
+
+/// `JobState.model` sentinel: no zoo model attached.
+const NO_MODEL: u32 = u32::MAX;
 
 /// Per-node runtime: the legacy sequential server bank or the
 /// continuous-batching engine.
@@ -166,21 +172,83 @@ enum NodeRt {
 impl NodeRt {
     fn view(&self, spec: &NodeSpec) -> NodeView {
         match self {
-            NodeRt::Seq(n) => NodeView {
-                queue_len: n.queue_len(),
-                busy_servers: n.busy_servers(),
-                n_servers: spec.n_servers,
-                gpu: spec.gpu,
-            },
-            NodeRt::Batch(e) => NodeView {
-                queue_len: e.queue_len(),
-                busy_servers: e.batch_len() as u32,
-                n_servers: match spec.execution {
+            NodeRt::Seq(n) => {
+                NodeView::new(n.queue_len(), n.busy_servers(), spec.n_servers, spec.gpu)
+            }
+            NodeRt::Batch(e) => NodeView::new(
+                e.queue_len(),
+                e.batch_len() as u32,
+                match spec.execution {
                     ExecutionModel::ContinuousBatching { max_batch, .. } => max_batch,
                     ExecutionModel::Sequential => spec.n_servers,
                 },
-                gpu: spec.gpu,
-            },
+                spec.gpu,
+            )
+            .with_kv_headroom(e.kv_headroom()),
+        }
+    }
+}
+
+/// Per-model state of one node for the router (zoo runs only): which
+/// resident models are warm and how many admitted jobs each serves.
+/// `warm`/`model_active` are the engine's flattened `node × zoo` rows.
+fn model_views(
+    spec: &NodeSpec,
+    node: usize,
+    n_models: usize,
+    warm: &[bool],
+    model_active: &[u32],
+) -> Vec<ModelView> {
+    (0..n_models)
+        .filter(|&m| spec.hosts_model(m))
+        .map(|m| {
+            let ix = node * n_models + m;
+            ModelView::new(m, warm[ix], model_active[ix])
+        })
+        .collect()
+}
+
+/// Count admitted jobs per (node, model) from a sequential node's
+/// event batch (zoo runs only; jobs without a model are not tracked).
+fn track_seq_models(
+    node: usize,
+    events: &[NodeEvent],
+    jobs: &[JobState],
+    model_active: &mut [u32],
+    n_models: usize,
+) {
+    for ev in events {
+        if let NodeEvent::Started { job, .. } = *ev {
+            let m = jobs[job.job_id as usize].model;
+            if m != NO_MODEL {
+                model_active[node * n_models + m as usize] += 1;
+            }
+        }
+    }
+}
+
+/// Same per-(node, model) accounting over a batch engine's events.
+fn track_batch_models(
+    node: usize,
+    events: &[BatchEvent],
+    jobs: &[JobState],
+    model_active: &mut [u32],
+    n_models: usize,
+) {
+    for ev in events {
+        let (job_id, up) = match *ev {
+            BatchEvent::Admitted { job_id } => (job_id, true),
+            BatchEvent::Finished { job_id } => (job_id, false),
+            _ => continue,
+        };
+        let m = jobs[job_id as usize].model;
+        if m != NO_MODEL {
+            let slot = &mut model_active[node * n_models + m as usize];
+            if up {
+                *slot += 1;
+            } else {
+                *slot -= 1;
+            }
         }
     }
 }
@@ -440,6 +508,16 @@ struct EngineState {
     views: Vec<NodeView>,
     node_ev: Vec<NodeEvent>,
     batch_ev: Vec<BatchEvent>,
+    /// Per-class accept-lists resolved to zoo indices (config-derived;
+    /// empty inner list = any model).
+    class_model_ids: Vec<Vec<usize>>,
+    /// Flattened `node × zoo` warm flags: model was activated on the
+    /// node since run start (or its last failure). Empty without a zoo
+    /// — the legacy path never touches it.
+    warm: Vec<bool>,
+    /// Flattened `node × zoo` admitted-job counts (router telemetry).
+    /// Empty without a zoo.
+    model_active: Vec<u32>,
     /// Cell-slot steps merged so far (counted into `events`).
     slot_events: u64,
     radio_coupling: bool,
@@ -684,6 +762,9 @@ impl<'a> ScenarioEngine<'a> {
             views: Vec::with_capacity(n_nodes),
             node_ev: Vec::with_capacity(16),
             batch_ev: Vec::with_capacity(64),
+            class_model_ids: sc.class_model_ids(),
+            warm: vec![false; n_nodes * sc.models.len()],
+            model_active: vec![0; n_nodes * sc.models.len()],
             slot_events: 0,
             radio_coupling,
             tick_s,
@@ -809,9 +890,13 @@ fn event_loop_to(
         views,
         node_ev,
         batch_ev,
+        class_model_ids,
+        warm,
+        model_active,
         slot_events,
         ..
     } = st;
+    let n_models = sc.models.len();
 
     let mut t_slot = next_slot_time(cells);
 
@@ -906,6 +991,7 @@ fn event_loop_to(
                         prefill_time: 0.0,
                         decode_time: 0.0,
                         retries: 0,
+                        model: NO_MODEL,
                         fate: JobFate::InFlight,
                         measured: now >= cfg.warmup,
                     });
@@ -1033,8 +1119,9 @@ fn event_loop_to(
                     )
                 };
                 let spec = &sc.classes[class_id];
+                let allowed: &[usize] = &class_model_ids[class_id];
                 views.clear();
-                let target = match cluster_rt.as_ref() {
+                let (target, model) = match cluster_rt.as_ref() {
                     Some(cl) => {
                         // Routing sees only `Up` nodes; the pick maps
                         // back to a real tier index.
@@ -1044,7 +1131,18 @@ fn event_loop_to(
                         {
                             if cl.eligible(i) {
                                 eligible_ix.push(i);
-                                views.push(rt.view(s));
+                                let v = rt.view(s);
+                                views.push(if n_models > 0 {
+                                    v.with_models(model_views(
+                                        s,
+                                        i,
+                                        n_models,
+                                        warm,
+                                        model_active,
+                                    ))
+                                } else {
+                                    v
+                                });
                             }
                         }
                         if views.is_empty() {
@@ -1057,30 +1155,68 @@ fn event_loop_to(
                             );
                             continue;
                         }
-                        let t = router.pick(class_id, cell_id, views);
+                        let ctx =
+                            RouteCtx::new(class_id, cell_id, now, views, allowed);
+                        let d = router.pick(&ctx);
                         assert!(
-                            t < views.len(),
-                            "Routing::pick returned {t} for {} nodes",
+                            d.node < views.len(),
+                            "Routing::pick returned node {} for {} nodes",
+                            d.node,
                             views.len()
                         );
-                        eligible_ix[t]
+                        let model = d.model.or_else(|| ctx.model_for(d.node));
+                        (eligible_ix[d.node], model)
                     }
                     None => {
-                        views.extend(
-                            nodes.iter().zip(sc.nodes.iter()).map(|(rt, s)| rt.view(s)),
-                        );
-                        let t = router.pick(class_id, cell_id, views);
+                        for (i, (rt, s)) in
+                            nodes.iter().zip(sc.nodes.iter()).enumerate()
+                        {
+                            let v = rt.view(s);
+                            views.push(if n_models > 0 {
+                                v.with_models(model_views(
+                                    s,
+                                    i,
+                                    n_models,
+                                    warm,
+                                    model_active,
+                                ))
+                            } else {
+                                v
+                            });
+                        }
+                        let ctx =
+                            RouteCtx::new(class_id, cell_id, now, views, allowed);
+                        let d = router.pick(&ctx);
                         // A routing bug must fail loudly: silently
                         // clamping would report single-node results as
                         // multi-node.
                         assert!(
-                            t < nodes.len(),
-                            "Routing::pick returned {t} for {} nodes",
+                            d.node < nodes.len(),
+                            "Routing::pick returned node {} for {} nodes",
+                            d.node,
                             nodes.len()
                         );
-                        t
+                        (d.node, d.model.or_else(|| ctx.model_for(d.node)))
                     }
                 };
+                // A model-constrained class is always priced on one of
+                // its accepted models, best-first, even when the router
+                // placed it on a node hosting none of them.
+                let model = match model {
+                    None if !allowed.is_empty() => Some(allowed[0]),
+                    other => other,
+                };
+                if let Some(m) = model {
+                    assert!(
+                        m < n_models,
+                        "RouteDecision.model {m} out of range ({n_models} zoo models)"
+                    );
+                    assert!(
+                        allowed.is_empty() || allowed.contains(&m),
+                        "RouteDecision.model {m} violates class '{}' accept-list",
+                        spec.name
+                    );
+                }
                 // Service realizations draw from the originating cell's
                 // stream, in that cell's delivery order — so each cell
                 // of an N-cell run matches an independent single-cell
@@ -1094,19 +1230,61 @@ fn event_loop_to(
                 // instead of the dead node's (DESIGN.md §11). A
                 // same-tier retry reproduces the stored demand
                 // bit-for-bit.
-                let demand = if retry {
-                    let js = &jobs[job as usize];
-                    sc.service.reprice(spec, js.n_input, js.n_output, &sc.nodes[target].gpu)
+                let model_spec = model.map(|m| &sc.models[m]);
+                let demand = match (retry, model_spec) {
+                    (true, Some(ms)) => {
+                        let js = &jobs[job as usize];
+                        sc.service.reprice_on(
+                            spec,
+                            ms,
+                            js.n_input,
+                            js.n_output,
+                            &sc.nodes[target].gpu,
+                        )
+                    }
+                    (true, None) => {
+                        let js = &jobs[job as usize];
+                        sc.service.reprice(spec, js.n_input, js.n_output, &sc.nodes[target].gpu)
+                    }
+                    (false, Some(ms)) => {
+                        let mut c = cells[cell_id].lock().unwrap();
+                        sc.service.realize_on(
+                            spec,
+                            ms,
+                            n_input,
+                            &sc.nodes[target].gpu,
+                            &mut c.rng_svc,
+                        )
+                    }
+                    (false, None) => {
+                        let mut c = cells[cell_id].lock().unwrap();
+                        sc.service.realize(spec, n_input, &sc.nodes[target].gpu, &mut c.rng_svc)
+                    }
+                };
+                // First activation of a cold model on a node pays the
+                // weight-swap latency, charged to this job's prefill.
+                // Warm flags persist until the node fails (NodeFail
+                // resets its row), so steady state pays nothing.
+                let mut swap = 0.0;
+                if let Some(m) = model {
+                    let w = &mut warm[target * n_models + m];
+                    if !*w {
+                        *w = true;
+                        swap = sc.nodes[target].swap_s;
+                    }
+                }
+                let prefill_time = if swap > 0.0 {
+                    demand.prefill_time + swap
                 } else {
-                    let mut c = cells[cell_id].lock().unwrap();
-                    sc.service.realize(spec, n_input, &sc.nodes[target].gpu, &mut c.rng_svc)
+                    demand.prefill_time
                 };
                 {
                     let js = &mut jobs[job as usize];
                     js.n_output = demand.n_output;
-                    js.prefill_time = demand.prefill_time;
+                    js.prefill_time = prefill_time;
                     js.decode_time = demand.decode_time;
                     js.t_node_arrival = Some(now);
+                    js.model = model.map_or(NO_MODEL, |m| m as u32);
                 }
                 let deadline = t_gen + spec.b_total;
                 let epoch = cluster_rt.as_ref().map_or(0, |c| c.epoch(target));
@@ -1117,7 +1295,11 @@ fn event_loop_to(
                             t_gen,
                             t_comm,
                             deadline,
-                            service_time: demand.service_time(),
+                            service_time: if swap > 0.0 {
+                                demand.service_time() + swap
+                            } else {
+                                demand.service_time()
+                            },
                         };
                         node_ev.clear();
                         n.enqueue(cj, now, node_ev);
@@ -1131,8 +1313,27 @@ fn event_loop_to(
                             now,
                             track.then(|| &mut inflight_seq[target]),
                         );
+                        if n_models > 0 {
+                            track_seq_models(target, node_ev, jobs, model_active, n_models);
+                        }
                     }
                     NodeRt::Batch(e) => {
+                        // Prefix blocks may only be shared by jobs with
+                        // identical per-token KV footprint and identical
+                        // shared text: the key therefore spans
+                        // (model, class, effective prefix length).
+                        let (prefix_id, prefix_tokens) = if spec.prefix_tokens > 0 {
+                            let eff = spec.prefix_tokens.min(n_input);
+                            let mb = model.map_or(0xFFFF, |m| m as u64);
+                            (
+                                (mb << 48)
+                                    | (((class_id as u64) & 0xFFFF) << 32)
+                                    | eff as u64,
+                                eff,
+                            )
+                        } else {
+                            (0, 0)
+                        };
                         let bj = BatchJob {
                             job_id: job,
                             t_gen,
@@ -1140,15 +1341,21 @@ fn event_loop_to(
                             deadline,
                             n_input,
                             n_output: demand.n_output,
-                            prefill_time: demand.prefill_time,
+                            prefill_time,
                             decode_time: demand.decode_time,
-                            c_llm: spec.c_llm,
-                            m_llm: spec.m_llm,
-                            kv_bytes_per_token: spec.kv_bytes_per_token,
+                            c_llm: model_spec.map_or(spec.c_llm, |ms| ms.c_llm),
+                            m_llm: model_spec.map_or(spec.m_llm, |ms| ms.m_llm),
+                            kv_bytes_per_token: model_spec
+                                .map_or(spec.kv_bytes_per_token, |ms| ms.kv_bytes_per_token()),
+                            prefix_id,
+                            prefix_tokens,
                         };
                         batch_ev.clear();
                         e.enqueue(bj, now, batch_ev);
                         apply_batch_events(target, epoch, batch_ev, jobs, q, now);
+                        if n_models > 0 {
+                            track_batch_models(target, batch_ev, jobs, model_active, n_models);
+                        }
                         if let Some(cl) = cluster_rt.as_mut() {
                             observe_batch_completions(target, batch_ev, jobs, cl);
                         }
@@ -1165,6 +1372,13 @@ fn event_loop_to(
                     let js = &mut jobs[job as usize];
                     js.fate = JobFate::Completed;
                     js.t_done = Some(now);
+                }
+                if n_models > 0 {
+                    let m = jobs[job as usize].model;
+                    if m != NO_MODEL {
+                        let slot = &mut model_active[node * n_models + m as usize];
+                        *slot = slot.saturating_sub(1);
+                    }
                 }
                 if let Some(cl) = cluster_rt.as_mut() {
                     let js = &jobs[job as usize];
@@ -1191,6 +1405,9 @@ fn event_loop_to(
                     now,
                     track.then(|| &mut inflight_seq[node]),
                 );
+                if n_models > 0 {
+                    track_seq_models(node, node_ev, jobs, model_active, n_models);
+                }
             }
             Ev::BatchStep { node, epoch } => {
                 if cluster_rt.as_ref().map_or(false, |c| !c.event_live(node, epoch)) {
@@ -1203,6 +1420,9 @@ fn event_loop_to(
                 batch_ev.clear();
                 e.step(now, batch_ev);
                 apply_batch_events(node, epoch, batch_ev, jobs, q, now);
+                if n_models > 0 {
+                    track_batch_models(node, batch_ev, jobs, model_active, n_models);
+                }
                 if let Some(cl) = cluster_rt.as_mut() {
                     observe_batch_completions(node, batch_ev, jobs, cl);
                 }
@@ -1256,6 +1476,13 @@ fn event_loop_to(
                         e.evict(batch_evicted);
                         evicted_ids.extend(batch_evicted.iter().map(|j| j.job_id));
                     }
+                }
+                if n_models > 0 {
+                    // The node lost its HBM contents: every model goes
+                    // cold again (next activation re-pays swap_s) and
+                    // its in-flight per-model counts reset.
+                    warm[node * n_models..(node + 1) * n_models].fill(false);
+                    model_active[node * n_models..(node + 1) * n_models].fill(0);
                 }
                 let budget = cl.spec().retry_budget;
                 for &job in evicted_ids.iter() {
@@ -1353,6 +1580,7 @@ impl<'a> ScenarioEngine<'a> {
                 JobOutcome {
                     job_id: id as u64,
                     class_id: j.class as u32,
+                    model_id: j.model,
                     cell_id: j.cell,
                     t_gen: j.t_gen,
                     t_comm: j.t_comm.unwrap_or(0.0),
@@ -1374,6 +1602,12 @@ impl<'a> ScenarioEngine<'a> {
             .collect();
         let mut report =
             SimReport::from_outcomes_per_class(&outcomes, &class_policies, sc.cells.len());
+        if !sc.models.is_empty() {
+            let model_names: Vec<String> =
+                sc.models.iter().map(|m| m.name.clone()).collect();
+            report.per_model =
+                SimReport::bucket_per_model(&outcomes, &model_names, &class_policies);
+        }
         if sc.topology.is_some() {
             report.radio = self
                 .cells
@@ -1530,6 +1764,7 @@ fn enc_job(e: &mut Enc, j: &JobState) {
     e.f64(j.prefill_time);
     e.f64(j.decode_time);
     e.u32(j.retries);
+    e.u32(j.model);
     e.u8(fate_to_u8(j.fate));
     e.bool(j.measured);
 }
@@ -1549,6 +1784,7 @@ fn dec_job(d: &mut Dec<'_>) -> Result<JobState, SnapError> {
         prefill_time: d.f64("job prefill")?,
         decode_time: d.f64("job decode")?,
         retries: d.u32("job retries")?,
+        model: d.u32("job model")?,
         fate: fate_from_u8(d.u8("job fate")?)?,
         measured: d.bool("job measured")?,
     })
@@ -1793,6 +2029,8 @@ fn enc_bjob(e: &mut Enc, j: &BatchJob) {
     e.f64(j.c_llm);
     e.f64(j.m_llm);
     e.f64(j.kv_bytes_per_token);
+    e.u64(j.prefix_id);
+    e.u32(j.prefix_tokens);
 }
 
 fn dec_bjob(d: &mut Dec<'_>) -> Result<BatchJob, SnapError> {
@@ -1808,6 +2046,8 @@ fn dec_bjob(d: &mut Dec<'_>) -> Result<BatchJob, SnapError> {
         c_llm: d.f64("bjob c_llm")?,
         m_llm: d.f64("bjob m_llm")?,
         kv_bytes_per_token: d.f64("bjob kv bytes")?,
+        prefix_id: d.u64("bjob prefix id")?,
+        prefix_tokens: d.u32("bjob prefix tokens")?,
     })
 }
 
@@ -1828,16 +2068,17 @@ fn enc_node(e: &mut Enc, rt: &NodeRt) {
         }
         NodeRt::Batch(b) => {
             e.u8(1);
-            let (kv_used, running, dropped, active, (queue_seq, entries)) =
+            let (kv_used, running, dropped, active, (queue_seq, entries), prefixes) =
                 b.snapshot_state();
             e.f64(kv_used);
             e.bool(running);
             e.u64(dropped);
             e.usize(active.len());
-            for (j, tokens_left, prefilled) in &active {
+            for (j, tokens_left, prefilled, kv_reserved) in &active {
                 enc_bjob(e, j);
                 e.u32(*tokens_left);
                 e.bool(*prefilled);
+                e.f64(*kv_reserved);
             }
             e.u64(queue_seq);
             e.usize(entries.len());
@@ -1845,6 +2086,12 @@ fn enc_node(e: &mut Enc, rt: &NodeRt) {
                 e.f64(*key);
                 e.u64(*seq);
                 enc_bjob(e, j);
+            }
+            e.usize(prefixes.len());
+            for (key, bytes, refs) in &prefixes {
+                e.u64(*key);
+                e.f64(*bytes);
+                e.u32(*refs);
             }
         }
     }
@@ -1890,6 +2137,7 @@ fn dec_node(
                     dec_bjob(d)?,
                     d.u32("batch tokens left")?,
                     d.bool("batch prefilled")?,
+                    d.f64("batch kv reserved")?,
                 ));
             }
             let queue_seq = d.u64("batch queue seq")?;
@@ -1900,6 +2148,15 @@ fn dec_node(
                     d.f64("batch queue key")?,
                     d.u64("batch queue seq no")?,
                     dec_bjob(d)?,
+                ));
+            }
+            let n_prefix = d.len("batch prefix len")?;
+            let mut prefixes = Vec::with_capacity(n_prefix);
+            for _ in 0..n_prefix {
+                prefixes.push((
+                    d.u64("batch prefix key")?,
+                    d.f64("batch prefix bytes")?,
+                    d.u32("batch prefix refs")?,
                 ));
             }
             Ok(NodeRt::Batch(BatchEngine::restore(
@@ -1913,6 +2170,7 @@ fn dec_node(
                 active,
                 queue_seq,
                 entries,
+                prefixes,
             )))
         }
         _ => Err(SnapError::Corrupt { what: "node kind" }),
@@ -2076,6 +2334,14 @@ impl<'a> ScenarioEngine<'a> {
             }
         }
         e.u64(self.st.slot_events);
+        e.usize(self.st.warm.len());
+        for &w in &self.st.warm {
+            e.bool(w);
+        }
+        e.usize(self.st.model_active.len());
+        for &v in &self.st.model_active {
+            e.u32(v);
+        }
         snap::frame(self.sc.fingerprint(), &e.into_bytes())
     }
 
@@ -2173,6 +2439,24 @@ impl<'a> ScenarioEngine<'a> {
         }
 
         eng.st.slot_events = d.u64("slot event counter")?;
+
+        // Warm flags and per-model in-flight counters (flattened
+        // node × zoo; both empty without a model zoo — the fingerprint
+        // already pins the zoo itself).
+        let n_warm = d.len("warm flag count")?;
+        if n_warm != eng.st.warm.len() {
+            return Err(SnapError::Corrupt { what: "warm flag count" });
+        }
+        for slot in eng.st.warm.iter_mut() {
+            *slot = d.bool("warm flag")?;
+        }
+        let n_ma = d.len("model active count")?;
+        if n_ma != eng.st.model_active.len() {
+            return Err(SnapError::Corrupt { what: "model active count" });
+        }
+        for slot in eng.st.model_active.iter_mut() {
+            *slot = d.u32("model active")?;
+        }
         if !d.is_empty() {
             return Err(SnapError::Corrupt { what: "trailing bytes" });
         }

@@ -54,7 +54,8 @@ pub mod workload;
 pub use cells::{cell_seed, CellSpec, CellSync, HandoverSpec};
 pub use engine::{discipline_of, management_of, ScenarioEngine, ScenarioResult};
 pub use routing::{
-    CellAffinity, ClassAffinity, LeastLoaded, NodeView, RoundRobin, Routing, RoutingPolicy,
+    CellAffinity, ClassAffinity, LeastLoaded, ModelView, NodeView, RouteCtx,
+    RouteDecision, RoundRobin, Routing, RoutingPolicy,
 };
 pub use service::{
     RooflineService, ServiceDemand, ServiceModel, ServiceModelKind, TokenSampledService,
@@ -63,6 +64,7 @@ pub use workload::{workloads_from_toml, workloads_to_toml, TokenDist, WorkloadCl
 
 pub use crate::cluster::{AutoscalerKind, ClusterSpec, NodeChurnSpec};
 pub use crate::compute::ExecutionModel;
+pub use crate::llm::ModelSpec;
 pub use crate::dess::EventListKind;
 pub use crate::phy::geometry::{SiteLayout, TopologySpec};
 pub use crate::phy::mobility::{MobilityModel, MobilitySpec};
@@ -80,6 +82,23 @@ pub struct NodeSpec {
     pub gpu: GpuSpec,
     pub n_servers: u32,
     pub execution: ExecutionModel,
+    /// Bitmask of zoo models resident on this node (bit `i` = model
+    /// `i` of [`Scenario::models`]). `0` = the legacy "hosts every
+    /// model" default, which also keeps zoo-free scenarios
+    /// bit-identical to the seed. Capped at 64 zoo models.
+    pub resident_models: u64,
+    /// Model-swap latency (s) charged to the first job that activates
+    /// a cold resident model on this node (weights already in HBM;
+    /// this prices CUDA-graph/page-table activation, not PCIe loads).
+    pub swap_s: f64,
+}
+
+impl NodeSpec {
+    /// Whether zoo model `m` can serve on this node (an empty resident
+    /// set hosts everything — the legacy single-model default).
+    pub fn hosts_model(&self, m: usize) -> bool {
+        self.resident_models == 0 || (self.resident_models >> m) & 1 == 1
+    }
 }
 
 /// Factory producing a fresh router per run (routers may keep per-run
@@ -98,6 +117,10 @@ pub struct Scenario {
     /// single-cell scenario has exactly one, mirrored from `base`).
     pub(crate) cells: Vec<CellSpec>,
     pub(crate) nodes: Vec<NodeSpec>,
+    /// The model zoo (`[[model]]` tables / [`ScenarioBuilder::model`]).
+    /// Empty = legacy single-model semantics: every class prices on its
+    /// own `c_llm`/`m_llm` and routing is model-blind, bit for bit.
+    pub(crate) models: Vec<ModelSpec>,
     pub(crate) service: Box<dyn ServiceModel>,
     pub(crate) routing: RoutingPolicy,
     pub(crate) router_factory: Option<RouterFactory>,
@@ -132,6 +155,7 @@ impl std::fmt::Debug for Scenario {
             .field("classes", &self.classes)
             .field("cells", &self.cells)
             .field("nodes", &self.nodes)
+            .field("models", &self.models)
             .field("service", &self.service)
             .field("routing", &self.routing)
             .field("custom_router", &self.router_factory.is_some())
@@ -215,6 +239,31 @@ impl Scenario {
         &self.nodes
     }
 
+    /// The model zoo (empty = legacy single-model semantics).
+    pub fn models(&self) -> &[ModelSpec] {
+        &self.models
+    }
+
+    /// Per-class accept-lists resolved to zoo indices (best model
+    /// first, as declared). Empty inner list = class accepts any
+    /// model. Names were validated at build time.
+    pub(crate) fn class_model_ids(&self) -> Vec<Vec<usize>> {
+        self.classes
+            .iter()
+            .map(|c| {
+                c.models
+                    .iter()
+                    .map(|name| {
+                        self.models
+                            .iter()
+                            .position(|m| &m.name == name)
+                            .expect("class model validated at build time")
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
     pub fn scheme(&self) -> &SchemeConfig {
         &self.base.scheme
     }
@@ -273,11 +322,12 @@ impl Scenario {
         }
         let _ = write!(
             s,
-            "cells={:?};nodes={:?};routing={:?};custom_router={};service={:?};\
+            "cells={:?};nodes={:?};models={:?};routing={:?};custom_router={};service={:?};\
              topology={:?};mobility={:?};handover={:?};event_queue={:?};\
              cluster={:?};churn={:?};",
             self.cells,
             self.nodes,
+            self.models,
             self.routing,
             self.router_factory.is_some(),
             self.service,
@@ -300,6 +350,11 @@ pub struct ScenarioBuilder {
     classes: Vec<WorkloadClass>,
     cells: Vec<CellSpec>,
     nodes: Vec<NodeSpec>,
+    models: Vec<ModelSpec>,
+    /// Per-node resident-model *names*, parallel to `nodes`; resolved
+    /// to `NodeSpec::resident_models` bitmasks at build time so nodes
+    /// may be declared before (or without) the zoo they reference.
+    node_models: Vec<Vec<String>>,
     service: Box<dyn ServiceModel>,
     routing: RoutingPolicy,
     router_factory: Option<RouterFactory>,
@@ -320,6 +375,8 @@ impl std::fmt::Debug for ScenarioBuilder {
             .field("classes", &self.classes)
             .field("cells", &self.cells)
             .field("nodes", &self.nodes)
+            .field("models", &self.models)
+            .field("node_models", &self.node_models)
             .field("service", &self.service)
             .field("routing", &self.routing)
             .field("custom_router", &self.router_factory.is_some())
@@ -348,6 +405,8 @@ impl ScenarioBuilder {
             classes: Vec::new(),
             cells: Vec::new(),
             nodes: Vec::new(),
+            models: Vec::new(),
+            node_models: Vec::new(),
             service: Box::new(RooflineService),
             routing: RoutingPolicy::LeastLoaded,
             router_factory: None,
@@ -377,7 +436,11 @@ impl ScenarioBuilder {
                 gpu: cfg.gpu,
                 n_servers: cfg.n_gpus,
                 execution: ExecutionModel::Sequential,
+                resident_models: 0,
+                swap_s: 0.0,
             }],
+            models: Vec::new(),
+            node_models: vec![Vec::new()],
             service: Box::new(RooflineService),
             routing: RoutingPolicy::LeastLoaded,
             router_factory: None,
@@ -508,8 +571,51 @@ impl ScenarioBuilder {
         execution: ExecutionModel,
     ) -> Self {
         assert!(n_servers >= 1);
-        self.nodes.push(NodeSpec { gpu, n_servers, execution });
+        self.nodes.push(NodeSpec {
+            gpu,
+            n_servers,
+            execution,
+            resident_models: 0,
+            swap_s: 0.0,
+        });
         self.node_churn.push(NodeChurnSpec::default());
+        self.node_models.push(Vec::new());
+        self
+    }
+
+    /// Add one model tier to the zoo. Zoo order is catalog order:
+    /// classes and nodes reference models by name, reports slice by
+    /// it. An empty zoo keeps legacy single-model semantics bit for
+    /// bit.
+    pub fn model(mut self, spec: ModelSpec) -> Self {
+        self.models.push(spec);
+        self
+    }
+
+    /// Restrict the most recently added node to a resident model set
+    /// (call after [`ScenarioBuilder::node`]; names resolve against
+    /// the zoo at build time). Without this call a node hosts every
+    /// model.
+    pub fn node_models<S: AsRef<str>>(mut self, names: &[S]) -> Self {
+        let i = self
+            .nodes
+            .len()
+            .checked_sub(1)
+            .expect("node_models() must follow a node()");
+        self.node_models[i] = names.iter().map(|s| s.as_ref().to_string()).collect();
+        self
+    }
+
+    /// Model-swap latency for the most recently added node (call after
+    /// [`ScenarioBuilder::node`]): charged once per cold-model
+    /// activation.
+    pub fn node_swap_s(mut self, swap_s: f64) -> Self {
+        let i = self
+            .nodes
+            .len()
+            .checked_sub(1)
+            .expect("node_swap_s() must follow a node()");
+        self.nodes[i].swap_s = swap_s;
         self
     }
 
@@ -576,6 +682,9 @@ impl ScenarioBuilder {
                 ("workload.", "workload"),
                 ("node.", "node"),
                 ("cell.", "cell"),
+                // no collision with [mobility] model: that key is
+                // "mobility.model", which does not start with "model."
+                ("model.", "model"),
             ]
             .into_iter()
             .find_map(|(p, name)| key.strip_prefix(p).map(|rest| (rest, name)));
@@ -894,10 +1003,66 @@ impl ScenarioBuilder {
         if !workloads.is_empty() {
             self.classes = workloads;
         }
+        // [[model]]: the serving zoo. Parsed before [[node]] so node
+        // resident sets can reference the names (resolution itself is
+        // deferred to build time either way).
+        let n_models = doc.array_len("model");
+        if n_models > 0 {
+            self.models.clear();
+            for i in 0..n_models {
+                let prefix = format!("model.{i}.");
+                let mut name: Option<&str> = None;
+                let mut params_b: Option<f64> = None;
+                let mut c_llm: Option<f64> = None;
+                let mut m_llm: Option<f64> = None;
+                let mut kv_bpt: Option<f64> = None;
+                let mut resident_gb: Option<f64> = None;
+                for key in doc.keys().filter(|k| k.starts_with(prefix.as_str())) {
+                    let field = &key[prefix.len()..];
+                    let missing = || anyhow::anyhow!("bad value for '{key}'");
+                    let pos_f64 = || -> anyhow::Result<f64> {
+                        let v = doc.f64(key).ok_or_else(missing)?;
+                        if !(v > 0.0 && v.is_finite()) {
+                            anyhow::bail!("'{key}' must be positive and finite, got {v}");
+                        }
+                        Ok(v)
+                    };
+                    match field {
+                        "name" => name = Some(doc.str(key).ok_or_else(missing)?),
+                        "params_b" => params_b = Some(pos_f64()?),
+                        "c_llm" => c_llm = Some(pos_f64()?),
+                        "m_llm" => m_llm = Some(pos_f64()?),
+                        "kv_bytes_per_token" => kv_bpt = Some(pos_f64()?),
+                        "resident_gb" => resident_gb = Some(pos_f64()?),
+                        other => anyhow::bail!("unknown model key '{other}'"),
+                    }
+                }
+                let name = name
+                    .ok_or_else(|| anyhow::anyhow!("model {i}: 'name' is required"))?;
+                let params_b = params_b.ok_or_else(|| {
+                    anyhow::anyhow!("model {i} ('{name}'): 'params_b' is required")
+                })?;
+                let mut spec = ModelSpec::new(name, params_b * 1e9);
+                if let Some(c) = c_llm {
+                    spec = spec.with_c_llm(c);
+                }
+                if let Some(m) = m_llm {
+                    spec = spec.with_m_llm(m);
+                }
+                if let Some(kv) = kv_bpt {
+                    spec = spec.with_kv_bytes_per_token(kv);
+                }
+                if let Some(g) = resident_gb {
+                    spec = spec.with_resident_bytes(g * 1e9);
+                }
+                self.models.push(spec);
+            }
+        }
         let n_nodes = doc.array_len("node");
         if n_nodes > 0 {
             self.nodes.clear();
             self.node_churn.clear();
+            self.node_models.clear();
             for i in 0..n_nodes {
                 let prefix = format!("node.{i}.");
                 let mut gpu_name: Option<&str> = None;
@@ -907,6 +1072,8 @@ impl ScenarioBuilder {
                 let mut max_batch: Option<u32> = None;
                 let mut kv_budget_gb: Option<f64> = None;
                 let mut churn = NodeChurnSpec::default();
+                let mut resident: Vec<String> = Vec::new();
+                let mut swap_s = 0.0_f64;
                 for key in doc.keys().filter(|k| k.starts_with(prefix.as_str())) {
                     let field = &key[prefix.len()..];
                     let missing = || anyhow::anyhow!("bad value for '{key}'");
@@ -961,6 +1128,29 @@ impl ScenarioBuilder {
                             }
                             churn.spinup = v;
                         }
+                        "models" => {
+                            // comma-separated zoo names, e.g. "7b,70b"
+                            resident = doc
+                                .str(key)
+                                .ok_or_else(missing)?
+                                .split(',')
+                                .map(str::trim)
+                                .filter(|s| !s.is_empty())
+                                .map(str::to_string)
+                                .collect();
+                            if resident.is_empty() {
+                                anyhow::bail!(
+                                    "'{key}' must name at least one model"
+                                );
+                            }
+                        }
+                        "swap_s" => {
+                            let v = doc.f64(key).ok_or_else(missing)?;
+                            if v < 0.0 || !v.is_finite() {
+                                anyhow::bail!("'{key}' must be >= 0 and finite, got {v}");
+                            }
+                            swap_s = v;
+                        }
                         other => anyhow::bail!("unknown node key '{other}'"),
                     }
                 }
@@ -992,8 +1182,15 @@ impl ScenarioBuilder {
                     }
                     ExecutionModel::Sequential
                 };
-                self.nodes.push(NodeSpec { gpu, n_servers: servers, execution });
+                self.nodes.push(NodeSpec {
+                    gpu,
+                    n_servers: servers,
+                    execution,
+                    resident_models: 0,
+                    swap_s,
+                });
                 self.node_churn.push(churn);
+                self.node_models.push(resident);
             }
         }
         Ok(self)
@@ -1121,11 +1318,15 @@ impl ScenarioBuilder {
                 gpu: self.base.gpu,
                 n_servers: self.base.n_gpus,
                 execution: ExecutionModel::Sequential,
+                resident_models: 0,
+                swap_s: 0.0,
             });
         }
-        // Every node carries a churn spec (default: never fails); the
+        // Every node carries a churn spec (default: never fails) and a
+        // resident-model name list (default: hosts everything); the
         // builder paths keep the lists parallel, this covers defaults.
         self.node_churn.resize(self.nodes.len(), NodeChurnSpec::default());
+        self.node_models.resize(self.nodes.len(), Vec::new());
         for (i, churn) in self.node_churn.iter().enumerate() {
             if churn.mtbf.is_nan() || churn.mtbf <= 0.0 {
                 anyhow::bail!("node {i}: mtbf must be positive");
@@ -1230,11 +1431,122 @@ impl ScenarioBuilder {
                 }
             }
         }
+        // Model-zoo resolution and validation (all of it gated on the
+        // zoo so zoo-free scenarios never reach this code).
+        if self.models.is_empty() {
+            if let Some(c) = self.classes.iter().find(|c| !c.models.is_empty()) {
+                anyhow::bail!(
+                    "class '{}' names accepted models but the scenario declares \
+                     no [[model]] zoo",
+                    c.name,
+                );
+            }
+            if let Some(i) = self.node_models.iter().position(|m| !m.is_empty()) {
+                anyhow::bail!(
+                    "node {i} names resident models but the scenario declares \
+                     no [[model]] zoo"
+                );
+            }
+        } else {
+            if self.models.len() > 64 {
+                anyhow::bail!(
+                    "at most 64 [[model]] tiers are supported, got {}",
+                    self.models.len()
+                );
+            }
+            for (i, m) in self.models.iter().enumerate() {
+                if m.name.is_empty() {
+                    anyhow::bail!("model {i}: name must be non-empty");
+                }
+                if self.models[..i].iter().any(|o| o.name == m.name) {
+                    anyhow::bail!("duplicate model name '{}'", m.name);
+                }
+            }
+            let resolve = |name: &str| -> anyhow::Result<usize> {
+                self.models
+                    .iter()
+                    .position(|m| m.name == name)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("unknown model '{name}' (not in the [[model]] zoo)")
+                    })
+            };
+            for (i, names) in self.node_models.iter().enumerate() {
+                let mut mask = 0u64;
+                for name in names {
+                    mask |= 1u64 << resolve(name)?;
+                }
+                self.nodes[i].resident_models = mask;
+                if !(self.nodes[i].swap_s >= 0.0 && self.nodes[i].swap_s.is_finite()) {
+                    anyhow::bail!("node {i}: swap_s must be >= 0 and finite");
+                }
+                // All resident weights live in HBM simultaneously (the
+                // swap prices activation, not reload): Σ resident ≤ mem,
+                // and on batching nodes the KV budget must still fit
+                // beside them.
+                let resident_sum: f64 = self
+                    .models
+                    .iter()
+                    .enumerate()
+                    .filter(|(m, _)| self.nodes[i].hosts_model(*m))
+                    .map(|(_, spec)| spec.resident_bytes)
+                    .sum();
+                let mem = self.nodes[i].gpu.mem_bytes;
+                if resident_sum > mem {
+                    anyhow::bail!(
+                        "node {i} {}: resident models need {:.1} GB but only \
+                         {:.1} GB HBM is available",
+                        self.nodes[i].gpu.display_name(),
+                        resident_sum / 1e9,
+                        mem / 1e9,
+                    );
+                }
+                if let ExecutionModel::ContinuousBatching { kv_budget, .. } =
+                    self.nodes[i].execution
+                {
+                    if resident_sum + kv_budget > mem {
+                        anyhow::bail!(
+                            "node {i} {}: resident models ({:.1} GB) + KV budget \
+                             ({:.1} GB) exceed {:.1} GB HBM (set kv_budget_gb \
+                             explicitly for multi-model nodes)",
+                            self.nodes[i].gpu.display_name(),
+                            resident_sum / 1e9,
+                            kv_budget / 1e9,
+                            mem / 1e9,
+                        );
+                    }
+                }
+            }
+            for class in &self.classes {
+                let mut ids = Vec::with_capacity(class.models.len());
+                for name in &class.models {
+                    let id = resolve(name)?;
+                    if ids.contains(&id) {
+                        anyhow::bail!(
+                            "class '{}': duplicate accepted model '{name}'",
+                            class.name,
+                        );
+                    }
+                    ids.push(id);
+                }
+                if !ids.is_empty()
+                    && !self
+                        .nodes
+                        .iter()
+                        .any(|n| ids.iter().any(|&m| n.hosts_model(m)))
+                {
+                    anyhow::bail!(
+                        "class '{}': no node hosts any of its accepted models",
+                        class.name,
+                    );
+                }
+            }
+        }
         Ok(Scenario {
             base: self.base,
             classes: self.classes,
             cells: self.cells,
             nodes: self.nodes,
+            models: self.models,
             service: self.service,
             routing: self.routing,
             router_factory: self.router_factory,
@@ -1334,8 +1646,8 @@ mod tests {
             fn name(&self) -> &'static str {
                 "pin_to_last"
             }
-            fn pick(&mut self, _class_id: usize, _cell_id: usize, nodes: &[NodeView]) -> usize {
-                nodes.len().saturating_sub(1)
+            fn pick(&mut self, ctx: &RouteCtx<'_>) -> RouteDecision {
+                ctx.decide(ctx.nodes().len().saturating_sub(1))
             }
         }
         let s = small(
@@ -1815,6 +2127,105 @@ mod tests {
             (
                 "[cluster]\nmin_nodes = 3\n[[node]]\ngpu = \"a100\"",
                 "min_nodes",
+            ),
+        ] {
+            let doc = Document::parse(bad).unwrap();
+            let err = ScenarioBuilder::new()
+                .apply_toml(&doc)
+                .unwrap()
+                .try_build()
+                .unwrap_err();
+            assert!(err.to_string().contains(needle), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn toml_model_tables_assemble_the_zoo() {
+        let doc = Document::parse(
+            "[[model]]\nname = \"7b\"\nparams_b = 7\n\
+             [[model]]\nname = \"70b\"\nparams_b = 70\nresident_gb = 70\n\
+             kv_bytes_per_token = 262144\n\
+             [[node]]\ngpu = \"h200\"\nmodels = \"7b,70b\"\nswap_s = 0.05\n\
+             [[node]]\ngpu = \"a100\"\nmodels = \"7b\"\n\
+             [[workload]]\nname = \"chat\"\nrate_per_ue = 0.4\nmodels = \"70b,7b\"\n",
+        )
+        .unwrap();
+        let s = ScenarioBuilder::new().apply_toml(&doc).unwrap().build();
+        assert_eq!(s.models().len(), 2);
+        assert_eq!(s.models()[0].name, "7b");
+        assert!((s.models()[0].m_llm - 14e9).abs() < 1e-3);
+        assert!((s.models()[1].resident_bytes - 70e9).abs() < 1e-3);
+        assert_eq!(s.models()[1].kv_bytes_per_token(), 262144.0);
+        // node 0 hosts both tiers, node 1 only the 7B
+        assert_eq!(s.nodes()[0].resident_models, 0b11);
+        assert_eq!(s.nodes()[0].swap_s, 0.05);
+        assert_eq!(s.nodes()[1].resident_models, 0b01);
+        assert!(s.nodes()[1].hosts_model(0) && !s.nodes()[1].hosts_model(1));
+        assert_eq!(s.classes()[0].models, vec!["70b", "7b"]);
+        assert_eq!(s.class_model_ids(), vec![vec![1, 0]]);
+        // the zoo shapes the snapshot fingerprint
+        let plain = ScenarioBuilder::new().build();
+        assert_ne!(s.fingerprint(), plain.fingerprint());
+    }
+
+    #[test]
+    fn model_zoo_strictly_validated() {
+        for bad in [
+            // name/params required, unknown keys rejected
+            "[[model]]\nparams_b = 7",
+            "[[model]]\nname = \"7b\"",
+            "[[model]]\nname = \"7b\"\nparams_b = 7\nfrobnicate = 1",
+            "[[model]]\nname = \"7b\"\nparams_b = -7",
+            // single-bracket table must error loudly
+            "[model]\nname = \"7b\"",
+            // node 'models' must not be empty
+            "[[model]]\nname = \"7b\"\nparams_b = 7\n[[node]]\ngpu = \"a100\"\nmodels = \",\"",
+        ] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(
+                ScenarioBuilder::new().apply_toml(&doc).is_err(),
+                "accepted: {bad}"
+            );
+        }
+        // build-time coherence checks
+        for (bad, needle) in [
+            // references without a zoo
+            (
+                "[[workload]]\nname = \"chat\"\nrate_per_ue = 0.4\nmodels = \"7b\"",
+                "no [[model]] zoo",
+            ),
+            ("[[node]]\ngpu = \"a100\"\nmodels = \"7b\"", "no [[model]] zoo"),
+            // unknown / duplicate names
+            (
+                "[[model]]\nname = \"7b\"\nparams_b = 7\n\
+                 [[node]]\ngpu = \"a100\"\nmodels = \"13b\"",
+                "unknown model",
+            ),
+            (
+                "[[model]]\nname = \"7b\"\nparams_b = 7\n\
+                 [[model]]\nname = \"7b\"\nparams_b = 7",
+                "duplicate model name",
+            ),
+            (
+                "[[model]]\nname = \"7b\"\nparams_b = 7\n\
+                 [[workload]]\nname = \"chat\"\nrate_per_ue = 0.4\nmodels = \"7b,7b\"",
+                "duplicate accepted model",
+            ),
+            // residency exceeds HBM (2 x 70 GB on a 141 GB H200 is
+            // fine, on an 80 GB A100 it is not)
+            (
+                "[[model]]\nname = \"a\"\nparams_b = 35\n\
+                 [[model]]\nname = \"b\"\nparams_b = 35\n\
+                 [[node]]\ngpu = \"a100\"\nmodels = \"a,b\"",
+                "resident models",
+            ),
+            // a class whose accept-list no node hosts
+            (
+                "[[model]]\nname = \"7b\"\nparams_b = 7\n\
+                 [[model]]\nname = \"70b\"\nparams_b = 70\n\
+                 [[node]]\ngpu = \"h200\"\nmodels = \"7b\"\n\
+                 [[workload]]\nname = \"chat\"\nrate_per_ue = 0.4\nmodels = \"70b\"",
+                "no node hosts",
             ),
         ] {
             let doc = Document::parse(bad).unwrap();

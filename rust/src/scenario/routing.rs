@@ -1,42 +1,242 @@
 //! Routing policies over a multi-node compute tier.
 //!
 //! The legacy SLS owned exactly one `ComputeNode`; a scenario owns N
-//! and a [`Routing`] policy decides which node serves each delivered
-//! prompt. Policies see only cheap per-node load summaries
-//! ([`NodeView`]), mirroring what an edge orchestrator can actually
-//! observe per decision.
+//! and a [`Routing`] policy decides which node (and, with a model zoo
+//! configured, which model) serves each delivered prompt. Policies see
+//! only cheap per-node load summaries ([`NodeView`]) bundled into a
+//! [`RouteCtx`], mirroring what an edge orchestrator can actually
+//! observe per decision. The context object is the extension point:
+//! future routing axes (cost, energy, locality) add accessors to
+//! `RouteCtx`/`NodeView` instead of churning every implementor's
+//! `pick` signature again.
 
 use crate::llm::GpuSpec;
 
-/// Snapshot of one node's load at routing time. For a
-/// continuous-batching node, `busy_servers` is the current batch size
-/// and `n_servers` its `max_batch` slot cap.
+/// One resident model's state at a node, as visible to routers:
+/// whether its weights are warm (no swap latency on the next job) and
+/// how many admitted jobs are currently running against it.
 #[derive(Debug, Clone, Copy)]
+pub struct ModelView {
+    model: usize,
+    warm: bool,
+    active_jobs: u32,
+}
+
+impl ModelView {
+    pub fn new(model: usize, warm: bool, active_jobs: u32) -> Self {
+        Self { model, warm, active_jobs }
+    }
+
+    /// Index into the scenario's model zoo.
+    pub fn model(&self) -> usize {
+        self.model
+    }
+
+    /// `true` once the node has activated this model (its next job
+    /// pays no swap latency).
+    pub fn warm(&self) -> bool {
+        self.warm
+    }
+
+    /// Jobs currently admitted against this model at the node.
+    pub fn active_jobs(&self) -> u32 {
+        self.active_jobs
+    }
+}
+
+/// Snapshot of one node's load at routing time. For a
+/// continuous-batching node, `busy_servers()` is the current batch
+/// size and `n_servers()` its `max_batch` slot cap. Fields are
+/// private — policies read through accessors so the engine can evolve
+/// what it tracks without breaking implementors.
+#[derive(Debug, Clone)]
 pub struct NodeView {
-    pub queue_len: usize,
-    pub busy_servers: u32,
-    pub n_servers: u32,
-    /// The node's accelerator pool (capacity-aware custom routers;
-    /// `gpu.display_name()` is the label to log).
-    pub gpu: GpuSpec,
+    queue_len: usize,
+    busy_servers: u32,
+    n_servers: u32,
+    gpu: GpuSpec,
+    kv_headroom: f64,
+    models: Vec<ModelView>,
 }
 
 impl NodeView {
+    pub fn new(queue_len: usize, busy_servers: u32, n_servers: u32, gpu: GpuSpec) -> Self {
+        Self { queue_len, busy_servers, n_servers, gpu, kv_headroom: f64::INFINITY, models: Vec::new() }
+    }
+
+    /// Attach the node's free KV-cache bytes (batching nodes).
+    pub fn with_kv_headroom(mut self, bytes: f64) -> Self {
+        self.kv_headroom = bytes;
+        self
+    }
+
+    /// Attach the node's resident-model states (model-zoo scenarios;
+    /// stays empty — zero allocation — on the single-model path).
+    pub fn with_models(mut self, models: Vec<ModelView>) -> Self {
+        self.models = models;
+        self
+    }
+
+    /// Jobs waiting in the node's queue.
+    pub fn queue_len(&self) -> usize {
+        self.queue_len
+    }
+
+    /// Jobs in service (batch size for a continuous-batching node).
+    pub fn busy_servers(&self) -> u32 {
+        self.busy_servers
+    }
+
+    /// Service slots (`max_batch` for a continuous-batching node).
+    pub fn n_servers(&self) -> u32 {
+        self.n_servers
+    }
+
+    /// The node's accelerator pool (capacity-aware custom routers;
+    /// `gpu().display_name()` is the label to log).
+    pub fn gpu(&self) -> &GpuSpec {
+        &self.gpu
+    }
+
+    /// Owned copy of the accelerator spec (convenience for callers
+    /// that need a `GpuSpec` by value).
+    pub fn gpu_spec(&self) -> GpuSpec {
+        self.gpu
+    }
+
     /// Jobs in the system at this node (queued + in service).
     pub fn load(&self) -> usize {
         self.queue_len + self.busy_servers as usize
     }
+
+    /// Free KV-cache bytes at this node (`f64::INFINITY` for
+    /// sequential nodes, which reserve no KV).
+    pub fn kv_headroom(&self) -> f64 {
+        self.kv_headroom
+    }
+
+    /// Per-model states at this node (empty when no zoo is configured).
+    pub fn models(&self) -> &[ModelView] {
+        &self.models
+    }
+
+    /// Does this node host model `m` (zoo index)? Nodes without model
+    /// state (single-model path) host everything.
+    pub fn hosts(&self, m: usize) -> bool {
+        self.models.is_empty() || self.models.iter().any(|v| v.model == m)
+    }
+
+    /// Is model `m` warm at this node? Model-less nodes are always
+    /// warm (the single-model path charges no swap latency).
+    pub fn is_warm(&self, m: usize) -> bool {
+        self.models.is_empty() || self.models.iter().any(|v| v.model == m && v.warm)
+    }
+
+    /// Admitted jobs currently running model `m` at this node.
+    pub fn model_jobs(&self, m: usize) -> u32 {
+        self.models.iter().find(|v| v.model == m).map_or(0, |v| v.active_jobs)
+    }
+}
+
+/// Everything a policy may consult for one routing decision. Borrowed
+/// from the engine for the duration of the call; construct with
+/// [`RouteCtx::new`] in tests and custom harnesses.
+#[derive(Debug)]
+pub struct RouteCtx<'a> {
+    class_id: usize,
+    cell_id: usize,
+    now: f64,
+    nodes: &'a [NodeView],
+    models: &'a [usize],
+}
+
+impl<'a> RouteCtx<'a> {
+    /// `models` is the job's acceptable model set (zoo indices, class
+    /// preference order, best first); empty means "no constraint" —
+    /// the single-model path.
+    pub fn new(
+        class_id: usize,
+        cell_id: usize,
+        now: f64,
+        nodes: &'a [NodeView],
+        models: &'a [usize],
+    ) -> Self {
+        Self { class_id, cell_id, now, nodes, models }
+    }
+
+    /// Workload class of the job being routed.
+    pub fn class_id(&self) -> usize {
+        self.class_id
+    }
+
+    /// Originating cell (gNB) of the job.
+    pub fn cell_id(&self) -> usize {
+        self.cell_id
+    }
+
+    /// Simulation time of the routing decision.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Candidate nodes, indexed `0..nodes().len()`.
+    pub fn nodes(&self) -> &[NodeView] {
+        self.nodes
+    }
+
+    /// Acceptable models for this job (zoo indices, best first; empty
+    /// = unconstrained).
+    pub fn models(&self) -> &[usize] {
+        self.models
+    }
+
+    /// Can node `i` serve this job at all (hosts at least one
+    /// acceptable model)? Always true on the single-model path.
+    pub fn eligible(&self, i: usize) -> bool {
+        self.models.is_empty() || self.models.iter().any(|&m| self.nodes[i].hosts(m))
+    }
+
+    /// The model this job would run on node `i`: the first acceptable
+    /// model (class preference order) the node hosts, preferring a
+    /// warm copy over a cold one when both tiers are resident.
+    pub fn model_for(&self, i: usize) -> Option<usize> {
+        if self.models.is_empty() {
+            return None;
+        }
+        self.models
+            .iter()
+            .copied()
+            .find(|&m| self.nodes[i].hosts(m) && self.nodes[i].is_warm(m))
+            .or_else(|| self.models.iter().copied().find(|&m| self.nodes[i].hosts(m)))
+    }
+
+    /// Package node `i` as a decision, resolving the model choice via
+    /// [`RouteCtx::model_for`].
+    pub fn decide(&self, node: usize) -> RouteDecision {
+        RouteDecision { node, model: self.model_for(node) }
+    }
+}
+
+/// A policy's answer: the node index, and (when a zoo is configured)
+/// the zoo index of the model to run. `model = None` on the
+/// single-model path, or when the chosen node hosts no acceptable
+/// model (the engine then falls back to the class's first choice for
+/// pricing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RouteDecision {
+    pub node: usize,
+    pub model: Option<usize>,
 }
 
 /// A routing decision maker. Policies may keep state (e.g. the
-/// round-robin cursor); the engine calls `pick` once per job with the
-/// job's workload class and originating cell (gNB).
+/// round-robin cursor); the engine calls `pick` once per job with a
+/// [`RouteCtx`] describing the job and the candidate tier.
 pub trait Routing: std::fmt::Debug {
     fn name(&self) -> &'static str;
 
-    /// Choose a node index in `0..nodes.len()` for a job of `class_id`
-    /// generated in cell `cell_id`.
-    fn pick(&mut self, class_id: usize, cell_id: usize, nodes: &[NodeView]) -> usize;
+    /// Choose a `(node, model)` pair for the job described by `ctx`;
+    /// `decision.node` must index `0..ctx.nodes().len()`.
+    fn pick(&mut self, ctx: &RouteCtx<'_>) -> RouteDecision;
 
     /// Opaque per-run policy state, captured by engine snapshots (the
     /// round-robin cursor). Stateless policies keep the defaults;
@@ -51,7 +251,8 @@ pub trait Routing: std::fmt::Debug {
 }
 
 /// Send each job to the node with the fewest jobs in system (ties go
-/// to the lowest index, keeping runs deterministic).
+/// to the lowest index, keeping runs deterministic), considering only
+/// nodes that host an acceptable model.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct LeastLoaded;
 
@@ -60,17 +261,27 @@ impl Routing for LeastLoaded {
         "least_loaded"
     }
 
-    fn pick(&mut self, _class_id: usize, _cell_id: usize, nodes: &[NodeView]) -> usize {
-        nodes
+    fn pick(&mut self, ctx: &RouteCtx<'_>) -> RouteDecision {
+        let node = ctx
+            .nodes()
             .iter()
             .enumerate()
+            .filter(|(i, _)| ctx.eligible(*i))
             .min_by_key(|(_, n)| n.load())
             .map(|(i, _)| i)
-            .unwrap_or(0)
+            // No node hosts an acceptable model: fall back to the
+            // least-loaded node overall so the job still lands
+            // somewhere deterministic (the engine prices on the
+            // class's first-choice model).
+            .or_else(|| {
+                ctx.nodes().iter().enumerate().min_by_key(|(_, n)| n.load()).map(|(i, _)| i)
+            })
+            .unwrap_or(0);
+        ctx.decide(node)
     }
 }
 
-/// Cycle through nodes regardless of load.
+/// Cycle through eligible nodes regardless of load.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct RoundRobin {
     next: usize,
@@ -81,13 +292,21 @@ impl Routing for RoundRobin {
         "round_robin"
     }
 
-    fn pick(&mut self, _class_id: usize, _cell_id: usize, nodes: &[NodeView]) -> usize {
+    fn pick(&mut self, ctx: &RouteCtx<'_>) -> RouteDecision {
+        let nodes = ctx.nodes();
         if nodes.is_empty() {
-            return 0;
+            return RouteDecision { node: 0, model: None };
         }
-        let i = self.next % nodes.len();
+        // Advance the cursor over the full tier (so the cadence is
+        // independent of per-class constraints), then walk forward to
+        // the first eligible node from the cursor position.
+        let start = self.next % nodes.len();
         self.next = (self.next + 1) % nodes.len();
-        i
+        let node = (0..nodes.len())
+            .map(|k| (start + k) % nodes.len())
+            .find(|&i| ctx.eligible(i))
+            .unwrap_or(start);
+        ctx.decide(node)
     }
 
     fn cursor(&self) -> u64 {
@@ -100,7 +319,9 @@ impl Routing for RoundRobin {
 }
 
 /// Pin each workload class to one node (`class % n_nodes`) — the
-/// placement that keeps per-class KV/weight state warm.
+/// placement that keeps per-class KV/weight state warm. With a model
+/// zoo, an ineligible home node defers to the next eligible index
+/// (wrapping), so the pinning stays deterministic per class.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ClassAffinity;
 
@@ -109,21 +330,28 @@ impl Routing for ClassAffinity {
         "class_affinity"
     }
 
-    fn pick(&mut self, class_id: usize, _cell_id: usize, nodes: &[NodeView]) -> usize {
+    fn pick(&mut self, ctx: &RouteCtx<'_>) -> RouteDecision {
+        let nodes = ctx.nodes();
         if nodes.is_empty() {
-            return 0;
+            return RouteDecision { node: 0, model: None };
         }
-        class_id % nodes.len()
+        let home = ctx.class_id() % nodes.len();
+        let node = (0..nodes.len())
+            .map(|k| (home + k) % nodes.len())
+            .find(|&i| ctx.eligible(i))
+            .unwrap_or(home);
+        ctx.decide(node)
     }
 }
 
 /// ICC placement: serve each job at its originating gNB's node
-/// (`cell % n_nodes`), spilling to the least-loaded neighbor only when
-/// the home node's queue exceeds `spill_queue` pending jobs
+/// (`cell % n_nodes`), spilling to the least-loaded eligible neighbor
+/// only when the home node's queue exceeds `spill_queue` pending jobs
 /// (`u32::MAX` = never spill — strict cell isolation). This is the
 /// topology knob that makes ICC-vs-MEC comparisons expressible: ICC
 /// pins compute at the RAN node that received the prompt, while a MEC
-/// pool behaves like [`LeastLoaded`] over the shared site.
+/// pool behaves like [`LeastLoaded`] over the shared site. An
+/// ineligible home node (model zoo) spills immediately.
 #[derive(Debug, Clone, Copy)]
 pub struct CellAffinity {
     /// Home-node queue length above which jobs spill to neighbors.
@@ -145,23 +373,26 @@ impl Routing for CellAffinity {
         "cell_affinity"
     }
 
-    fn pick(&mut self, _class_id: usize, cell_id: usize, nodes: &[NodeView]) -> usize {
+    fn pick(&mut self, ctx: &RouteCtx<'_>) -> RouteDecision {
+        let nodes = ctx.nodes();
         if nodes.is_empty() {
-            return 0;
+            return RouteDecision { node: 0, model: None };
         }
-        let home = cell_id % nodes.len();
-        if nodes[home].queue_len <= self.spill_queue as usize {
-            return home;
+        let home = ctx.cell_id() % nodes.len();
+        if ctx.eligible(home) && nodes[home].queue_len() <= self.spill_queue as usize {
+            return ctx.decide(home);
         }
-        // Spill: least-loaded neighbor (ties to the lowest index);
-        // degenerate single-node tiers fall back to the home node.
-        nodes
+        // Spill: least-loaded eligible neighbor (ties to the lowest
+        // index); degenerate single-node tiers fall back to the home
+        // node.
+        let node = nodes
             .iter()
             .enumerate()
-            .filter(|(i, _)| *i != home)
+            .filter(|(i, _)| *i != home && ctx.eligible(*i))
             .min_by_key(|(_, n)| n.load())
             .map(|(i, _)| i)
-            .unwrap_or(home)
+            .unwrap_or(home);
+        ctx.decide(node)
     }
 }
 
@@ -215,30 +446,26 @@ mod tests {
     use super::*;
 
     fn views(loads: &[(usize, u32)]) -> Vec<NodeView> {
-        loads
-            .iter()
-            .map(|&(q, b)| NodeView {
-                queue_len: q,
-                busy_servers: b,
-                n_servers: 2,
-                gpu: GpuSpec::a100(),
-            })
-            .collect()
+        loads.iter().map(|&(q, b)| NodeView::new(q, b, 2, GpuSpec::a100())).collect()
+    }
+
+    fn pick_node(r: &mut dyn Routing, class_id: usize, cell_id: usize, v: &[NodeView]) -> usize {
+        r.pick(&RouteCtx::new(class_id, cell_id, 0.0, v, &[])).node
     }
 
     #[test]
     fn least_loaded_picks_min_with_stable_ties() {
         let mut r = LeastLoaded;
-        assert_eq!(r.pick(0, 0, &views(&[(3, 2), (0, 1), (2, 0)])), 1);
+        assert_eq!(pick_node(&mut r, 0, 0, &views(&[(3, 2), (0, 1), (2, 0)])), 1);
         // tie between 0 and 2 → lowest index
-        assert_eq!(r.pick(0, 0, &views(&[(1, 0), (5, 1), (1, 0)])), 0);
+        assert_eq!(pick_node(&mut r, 0, 0, &views(&[(1, 0), (5, 1), (1, 0)])), 0);
     }
 
     #[test]
     fn round_robin_cycles() {
         let mut r = RoundRobin::default();
         let v = views(&[(0, 0), (0, 0), (0, 0)]);
-        let picks: Vec<usize> = (0..6).map(|_| r.pick(0, 0, &v)).collect();
+        let picks: Vec<usize> = (0..6).map(|_| pick_node(&mut r, 0, 0, &v)).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
     }
 
@@ -246,9 +473,9 @@ mod tests {
     fn class_affinity_pins_classes() {
         let mut r = ClassAffinity;
         let v = views(&[(9, 2), (0, 0)]);
-        assert_eq!(r.pick(0, 1, &v), 0, "affinity ignores load and cell");
-        assert_eq!(r.pick(1, 0, &v), 1);
-        assert_eq!(r.pick(2, 0, &v), 0);
+        assert_eq!(pick_node(&mut r, 0, 1, &v), 0, "affinity ignores load and cell");
+        assert_eq!(pick_node(&mut r, 1, 0, &v), 1);
+        assert_eq!(pick_node(&mut r, 2, 0, &v), 0);
     }
 
     #[test]
@@ -256,18 +483,18 @@ mod tests {
         let mut r = CellAffinity { spill_queue: 2 };
         // home queue within threshold → stay home, whatever the load
         let v = views(&[(2, 2), (0, 0), (0, 0)]);
-        assert_eq!(r.pick(0, 0, &v), 0);
-        assert_eq!(r.pick(5, 1, &v), 1, "cell 1 maps to node 1");
-        assert_eq!(r.pick(0, 4, &v), 1, "cells wrap modulo the tier size");
+        assert_eq!(pick_node(&mut r, 0, 0, &v), 0);
+        assert_eq!(pick_node(&mut r, 5, 1, &v), 1, "cell 1 maps to node 1");
+        assert_eq!(pick_node(&mut r, 0, 4, &v), 1, "cells wrap modulo the tier size");
         // home queue above threshold → spill to least-loaded neighbor
         let v = views(&[(3, 2), (1, 1), (0, 1)]);
-        assert_eq!(r.pick(0, 0, &v), 2);
+        assert_eq!(pick_node(&mut r, 0, 0, &v), 2);
         // never-spill configuration pins regardless of backlog
         let mut strict = CellAffinity { spill_queue: u32::MAX };
-        assert_eq!(strict.pick(0, 0, &v), 0);
+        assert_eq!(pick_node(&mut strict, 0, 0, &v), 0);
         // single-node tier cannot spill anywhere
         let v1 = views(&[(100, 2)]);
-        assert_eq!(r.pick(0, 0, &v1), 0);
+        assert_eq!(pick_node(&mut r, 0, 0, &v1), 0);
     }
 
     #[test]
@@ -288,5 +515,78 @@ mod tests {
         ] {
             assert_eq!(p.build().name(), p.name());
         }
+    }
+
+    // --- model-aware routing ---
+
+    fn model_views() -> Vec<NodeView> {
+        // node 0 hosts model 0 (warm); node 1 hosts models {0, 1}
+        // (1 warm, 0 cold); node 2 carries no model state (hosts all).
+        vec![
+            NodeView::new(0, 0, 2, GpuSpec::a100()).with_models(vec![ModelView::new(0, true, 3)]),
+            NodeView::new(0, 0, 2, GpuSpec::a100())
+                .with_models(vec![ModelView::new(0, false, 0), ModelView::new(1, true, 1)]),
+            NodeView::new(0, 0, 2, GpuSpec::a100()),
+        ]
+    }
+
+    #[test]
+    fn node_view_accessors_expose_model_state() {
+        let v = model_views();
+        assert!(v[0].hosts(0) && !v[0].hosts(1));
+        assert!(v[0].is_warm(0));
+        assert_eq!(v[0].model_jobs(0), 3);
+        assert!(v[1].hosts(1) && !v[1].is_warm(0) && v[1].is_warm(1));
+        // model-less views host everything and are always warm
+        assert!(v[2].hosts(7) && v[2].is_warm(7));
+        assert_eq!(v[2].model_jobs(7), 0);
+        assert_eq!(v[0].load(), 0);
+        assert!(v[0].kv_headroom().is_infinite());
+        let k = NodeView::new(1, 1, 2, GpuSpec::a100()).with_kv_headroom(42.0);
+        assert_eq!(k.kv_headroom(), 42.0);
+        assert_eq!(k.load(), 2);
+        assert_eq!(k.gpu().display_name(), GpuSpec::a100().display_name());
+    }
+
+    #[test]
+    fn eligibility_filters_nodes_and_model_for_prefers_warm() {
+        let v = model_views();
+        let want = [1usize]; // only model 1 acceptable
+        let ctx = RouteCtx::new(0, 0, 0.0, &v, &want);
+        assert!(!ctx.eligible(0));
+        assert!(ctx.eligible(1));
+        assert!(ctx.eligible(2), "model-less nodes serve any model");
+        assert_eq!(ctx.model_for(1), Some(1));
+        // preference order 0-then-1, but node 1 only has model 1 warm
+        // → warm copy wins over the cold preferred tier.
+        let pref = [0usize, 1];
+        let ctx = RouteCtx::new(0, 0, 0.0, &v, &pref);
+        assert_eq!(ctx.model_for(1), Some(1));
+        assert_eq!(ctx.model_for(0), Some(0));
+        // no constraint → no model in the decision
+        let ctx = RouteCtx::new(0, 0, 0.0, &v, &[]);
+        assert_eq!(ctx.model_for(1), None);
+        assert_eq!(ctx.decide(1), RouteDecision { node: 1, model: None });
+    }
+
+    #[test]
+    fn builtins_respect_model_constraints() {
+        let v = model_views();
+        let want = [1usize];
+        // least-loaded skips node 0 (doesn't host model 1)
+        let d = LeastLoaded.pick(&RouteCtx::new(0, 0, 0.0, &v, &want));
+        assert_eq!(d.node, 1);
+        assert_eq!(d.model, Some(1));
+        // round-robin walks past ineligible nodes but keeps cadence
+        let mut rr = RoundRobin::default();
+        let picks: Vec<usize> =
+            (0..3).map(|_| rr.pick(&RouteCtx::new(0, 0, 0.0, &v, &want)).node).collect();
+        assert_eq!(picks, vec![1, 1, 2]);
+        // class-affinity defers an ineligible home to the next index
+        let d = ClassAffinity.pick(&RouteCtx::new(0, 0, 0.0, &v, &want));
+        assert_eq!(d.node, 1);
+        // cell-affinity spills off an ineligible home immediately
+        let d = CellAffinity { spill_queue: u32::MAX }.pick(&RouteCtx::new(0, 0, 0.0, &v, &want));
+        assert_eq!(d.node, 1);
     }
 }

@@ -20,7 +20,7 @@
 //! while the continuous-batching engine admits the prefill and batches
 //! the decode steps (and both derive TTFT/TPOT from the split).
 
-use crate::llm::{CostModel, GpuSpec};
+use crate::llm::{CostModel, GpuSpec, ModelSpec};
 use crate::rng::Rng;
 
 use super::workload::WorkloadClass;
@@ -80,6 +80,39 @@ pub trait ServiceModel: std::fmt::Debug {
     ) -> ServiceDemand {
         price(class, n_input, n_output, gpu)
     }
+
+    /// Realize one job against an explicit zoo model: the demand uses
+    /// `model`'s FLOP/byte profile instead of the class's single-model
+    /// constants. The default realizes through [`ServiceModel::realize`]
+    /// (so the output-length draw — and RNG consumption — is exactly
+    /// the single-model one) and re-prices the realized counts on the
+    /// model; custom implementations that already price per model can
+    /// override.
+    fn realize_on(
+        &self,
+        class: &WorkloadClass,
+        model: &ModelSpec,
+        n_input: u32,
+        gpu: &GpuSpec,
+        rng: &mut Rng,
+    ) -> ServiceDemand {
+        let d = self.realize(class, n_input, gpu, rng);
+        price_on(class, model, n_input, d.n_output, gpu)
+    }
+
+    /// Re-price an already-realized job on the destination node's
+    /// chosen zoo model (cluster re-dispatch may land on a node that
+    /// hosts a different tier). Deterministic, consumes no randomness.
+    fn reprice_on(
+        &self,
+        class: &WorkloadClass,
+        model: &ModelSpec,
+        n_input: u32,
+        n_output: u32,
+        gpu: &GpuSpec,
+    ) -> ServiceDemand {
+        price_on(class, model, n_input, n_output, gpu)
+    }
 }
 
 /// Shared pricing tail: assert the documented "model must fit" rule
@@ -105,6 +138,36 @@ pub(crate) fn price(
         "model of class '{}' ({:.1} GB) does not fit {} ({:.1} GB)",
         class.name,
         spec.m_llm / 1e9,
+        gpu.display_name(),
+        gpu.mem_bytes / 1e9,
+    );
+    ServiceDemand {
+        n_output,
+        prefill_time: m.prefill_latency(&spec),
+        decode_time: m.tokengen_latency(&spec),
+    }
+}
+
+/// Model-zoo pricing: the class supplies the token counts and budget,
+/// the [`ModelSpec`] supplies the FLOP/byte demand profile. Same
+/// fit-assertion and roofline as [`price`].
+pub(crate) fn price_on(
+    class: &WorkloadClass,
+    model: &ModelSpec,
+    n_input: u32,
+    n_output: u32,
+    gpu: &GpuSpec,
+) -> ServiceDemand {
+    let mut spec = class.job_spec(n_input, n_output);
+    spec.c_llm = model.c_llm;
+    spec.m_llm = model.m_llm;
+    let m = CostModel::new(*gpu);
+    assert!(
+        m.fits(&spec),
+        "model '{}' ({:.1} GB) of class '{}' does not fit {} ({:.1} GB)",
+        model.name,
+        spec.m_llm / 1e9,
+        class.name,
         gpu.display_name(),
         gpu.mem_bytes / 1e9,
     );
@@ -242,6 +305,35 @@ mod tests {
         let gpu = GpuSpec::l40s();
         let mut rng = Rng::new(1);
         RooflineService.realize(&class, 15, &gpu, &mut rng);
+    }
+
+    #[test]
+    fn realize_on_prices_the_zoo_model_with_legacy_rng_consumption() {
+        let class = table1_class();
+        let gpu = GpuSpec::gh200_nvl2().scaled(4.0);
+        let small = ModelSpec::llama_7b();
+        let big = ModelSpec::llama_70b();
+        let mut rng = Rng::new(3);
+        let before = rng.clone().u64();
+        let d7 = RooflineService.realize_on(&class, &small, 15, &gpu, &mut rng);
+        assert_eq!(rng.clone().u64(), before, "roofline consumes no randomness");
+        let d70 = RooflineService.realize_on(&class, &big, 15, &gpu, &mut rng);
+        assert!(
+            d70.service_time() > d7.service_time(),
+            "the 70B tier must cost more than the 7B tier"
+        );
+        // re-pricing the realized counts on the same model reproduces
+        // the demand bit for bit
+        let r = RooflineService.reprice_on(&class, &big, 15, d70.n_output, &gpu);
+        assert_eq!(r, d70);
+        // token-sampled realization consumes exactly one draw, same as
+        // the single-model path
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        let sa = TokenSampledService.realize(&class, 15, &gpu, &mut a);
+        let sb = TokenSampledService.realize_on(&class, &small, 15, &gpu, &mut b);
+        assert_eq!(sa.n_output, sb.n_output, "same draw, same output length");
+        assert_eq!(a.u64(), b.u64(), "RNG streams stay in lockstep");
     }
 
     #[test]

@@ -129,6 +129,17 @@ pub struct WorkloadClass {
     /// continuous batching. Defaults to the dense-FP16 heuristic
     /// [`crate::llm::kv_bytes_per_token`]; override for GQA/MQA models.
     pub kv_bytes_per_token: f64,
+    /// Acceptable models from the scenario zoo, by name, best first —
+    /// the class's quality floor. Empty = unconstrained: the class
+    /// runs on its own `c_llm`/`m_llm` constants (the single-model
+    /// legacy path). Names are resolved against the `[[model]]` zoo
+    /// at scenario build.
+    pub models: Vec<String>,
+    /// Leading prompt tokens every job of this class shares (a common
+    /// system prompt). Jobs carry a shared-prefix block keyed by
+    /// `(class, effective prefix length)`, enabling KV-cache reuse at
+    /// continuous-batching nodes. 0 disables prefix reuse.
+    pub prefix_tokens: u32,
     /// End-to-end latency budget (seconds).
     pub b_total: f64,
 }
@@ -150,6 +161,8 @@ impl WorkloadClass {
             c_llm: j.c_llm,
             m_llm: j.m_llm,
             kv_bytes_per_token: kv_bytes_per_token(j.m_llm),
+            models: Vec::new(),
+            prefix_tokens: 0,
             b_total: j.b_total,
         }
     }
@@ -197,6 +210,8 @@ impl WorkloadClass {
             c_llm: job.c_llm,
             m_llm: job.m_llm,
             kv_bytes_per_token: kv_bytes_per_token(job.m_llm),
+            models: Vec::new(),
+            prefix_tokens: 0,
             b_total: job.b_total,
         }
     }
@@ -277,6 +292,22 @@ impl WorkloadClass {
         self
     }
 
+    /// Restrict this class to the given zoo models by name, best
+    /// first (the quality floor). Scenario build resolves the names
+    /// against the configured `[[model]]` zoo and rejects unknowns.
+    pub fn with_models<S: AsRef<str>>(mut self, names: &[S]) -> Self {
+        self.models = names.iter().map(|s| s.as_ref().to_string()).collect();
+        self
+    }
+
+    /// Declare the class's shared system-prompt length. Jobs reserve
+    /// (and prefill) only their non-shared suffix when the class's
+    /// prefix block is already resident at the serving node.
+    pub fn with_prefix_tokens(mut self, tokens: u32) -> Self {
+        self.prefix_tokens = tokens;
+        self
+    }
+
     /// Uplink bytes of one request with a realized prompt length.
     /// Saturating: absurd token × byte configurations clamp at
     /// `u32::MAX` instead of wrapping to a tiny SDU.
@@ -318,6 +349,13 @@ pub fn workloads_to_toml(classes: &[WorkloadClass]) -> String {
         out.push_str(&format!("c_llm = {}\n", c.c_llm));
         out.push_str(&format!("m_llm = {}\n", c.m_llm));
         out.push_str(&format!("kv_bytes_per_token = {}\n", c.kv_bytes_per_token));
+        if !c.models.is_empty() {
+            let names: Vec<String> = c.models.iter().map(|m| clean(m)).collect();
+            out.push_str(&format!("models = \"{}\"\n", names.join(",")));
+        }
+        if c.prefix_tokens > 0 {
+            out.push_str(&format!("prefix_tokens = {}\n", c.prefix_tokens));
+        }
         out.push_str(&format!("b_total = {}\n\n", c.b_total));
     }
     for c in classes {
@@ -381,6 +419,15 @@ pub fn workloads_from_toml(doc: &Document) -> anyhow::Result<Vec<WorkloadClass>>
                     w.kv_bytes_per_token = doc.f64(key).ok_or_else(missing)?;
                     kv_explicit = true;
                 }
+                "models" => {
+                    let s = doc.str(key).ok_or_else(missing)?;
+                    w.models = s
+                        .split(',')
+                        .map(|m| m.trim().to_string())
+                        .filter(|m| !m.is_empty())
+                        .collect();
+                }
+                "prefix_tokens" => w.prefix_tokens = u32_field(doc, key, 0, 1_000_000)?,
                 "b_total" => w.b_total = doc.f64(key).ok_or_else(missing)?,
                 other => anyhow::bail!("unknown workload key '{other}'"),
             }
@@ -502,8 +549,11 @@ mod tests {
 
     #[test]
     fn workload_toml_round_trip() {
-        let classes =
-            vec![WorkloadClass::chat(), WorkloadClass::translation(), WorkloadClass::summarization()];
+        let classes = vec![
+            WorkloadClass::chat().with_models(&["7b", "70b"]).with_prefix_tokens(12),
+            WorkloadClass::translation(),
+            WorkloadClass::summarization().with_models(&["70b"]),
+        ];
         let text = workloads_to_toml(&classes);
         let doc = Document::parse(&text).unwrap();
         let back = workloads_from_toml(&doc).unwrap();

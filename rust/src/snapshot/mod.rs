@@ -24,7 +24,9 @@ use std::fmt;
 pub const MAGIC: [u8; 8] = *b"ICC6GSNP";
 
 /// Current snapshot format version. Bump on any payload layout change.
-pub const VERSION: u32 = 1;
+/// v2: model-zoo fields (job model id, batch prefix blocks and KV
+/// reservations, warm flags, per-model in-flight counters).
+pub const VERSION: u32 = 2;
 
 /// Why a snapshot blob was rejected.
 #[derive(Debug, Clone, PartialEq)]

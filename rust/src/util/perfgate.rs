@@ -143,13 +143,13 @@ pub fn scale_metrics(text: &str) -> anyhow::Result<Vec<(String, f64)>> {
                     out.push((format!("scale/speedup_vs_dense/{}", n_ues as u64), s));
                 }
             }
-            "coupled_radio" => {
+            "coupled_radio" | "multi_model" => {
                 if let (Some(n_ues), Some(eps)) = (
                     row.get("n_ues").and_then(|x| x.as_f64()),
                     row.get("events_per_sec").and_then(|x| x.as_f64()),
                 ) {
                     out.push((
-                        format!("scale/coupled_radio/{}/events_per_sec", n_ues as u64),
+                        format!("scale/{name}/{}/events_per_sec", n_ues as u64),
                         eps,
                     ));
                 }
@@ -414,17 +414,21 @@ mod tests {
         let m = hotpath_metrics(hot).unwrap();
         assert_eq!(m, vec![("hotpath/dess: 10k schedule+pop/mean_ns".to_string(), 100.0)]);
 
-        let scale = "[\n  {\"name\": \"sls_scale\", \"n_ues\": 1000, \"mode\": \"active_set\", \"events\": 5, \"jobs\": 2, \"wall_s\": 0.1, \"events_per_sec\": 50.0},\n  {\"name\": \"speedup_vs_dense\", \"n_ues\": 1000, \"speedup\": 3.5},\n  {\"name\": \"coupled_radio\", \"n_ues\": 1000, \"events\": 9, \"jobs\": 4, \"wall_s\": 0.2, \"events_per_sec\": 45.0},\n  {\"name\": \"pdes\", \"cells\": 16, \"sync\": \"frontier\", \"events\": 7, \"jobs\": 3, \"wall_s\": 0.3, \"events_per_sec\": 33.0},\n  {\"name\": \"sweep_parallel\", \"points\": 4, \"seeds\": 3, \"wall_s\": 1.25}\n]";
+        let scale = "[\n  {\"name\": \"sls_scale\", \"n_ues\": 1000, \"mode\": \"active_set\", \"events\": 5, \"jobs\": 2, \"wall_s\": 0.1, \"events_per_sec\": 50.0},\n  {\"name\": \"speedup_vs_dense\", \"n_ues\": 1000, \"speedup\": 3.5},\n  {\"name\": \"coupled_radio\", \"n_ues\": 1000, \"events\": 9, \"jobs\": 4, \"wall_s\": 0.2, \"events_per_sec\": 45.0},\n  {\"name\": \"multi_model\", \"n_ues\": 600, \"events\": 8, \"jobs\": 4, \"wall_s\": 0.2, \"events_per_sec\": 40.0},\n  {\"name\": \"pdes\", \"cells\": 16, \"sync\": \"frontier\", \"events\": 7, \"jobs\": 3, \"wall_s\": 0.3, \"events_per_sec\": 33.0},\n  {\"name\": \"sweep_parallel\", \"points\": 4, \"seeds\": 3, \"wall_s\": 1.25}\n]";
         let m = scale_metrics(scale).unwrap();
-        assert_eq!(m.len(), 5);
+        assert_eq!(m.len(), 6);
         assert_eq!(m[0].0, "scale/sls_scale/1000/active_set/events_per_sec");
         assert_eq!(m[1], ("scale/speedup_vs_dense/1000".to_string(), 3.5));
         assert_eq!(
             m[2],
             ("scale/coupled_radio/1000/events_per_sec".to_string(), 45.0)
         );
-        assert_eq!(m[3], ("scale/pdes/16/frontier/events_per_sec".to_string(), 33.0));
-        assert_eq!(m[4], ("scale/sweep_parallel/wall_s".to_string(), 1.25));
+        assert_eq!(
+            m[3],
+            ("scale/multi_model/600/events_per_sec".to_string(), 40.0)
+        );
+        assert_eq!(m[4], ("scale/pdes/16/frontier/events_per_sec".to_string(), 33.0));
+        assert_eq!(m[5], ("scale/sweep_parallel/wall_s".to_string(), 1.25));
     }
 
     #[test]

@@ -266,6 +266,83 @@ fn main() {
         js
     };
 
+    // Hybrid-fidelity rows (DESIGN.md §15): a 128-cell hex grid with
+    // the center site + ring 1 kept per-UE and the far rings fluid,
+    // against the all-per-UE dense run at equal cell count.
+    // `equiv_events_per_sec` divides the dense run's event count by the
+    // hybrid wall clock — the throughput an equally-faithful dense run
+    // would need — and `speedup_vs_dense` is the machine-independent
+    // wall ratio, asserted >= 3x here and floored in the baseline. The
+    // 256-cell row is hybrid-only (the dense reference gets too slow to
+    // re-run per gate) and floors raw hybrid events/s.
+    let fluid_json = {
+        use icc6g::scenario::FluidSpec;
+        let run = |n_cells: usize, fluid: bool| {
+            let ues_per_cell = 8u32;
+            let n_ues_total = n_cells as u32 * ues_per_cell;
+            let mut b = ScenarioBuilder::new()
+                .scheme(bench_scheme())
+                .horizon(1.0)
+                .warmup(0.2)
+                .seed(1)
+                .threads(0)
+                .cell_sync(CellSync::Frontier)
+                .routing(RoutingPolicy::LeastLoaded)
+                .workload(
+                    WorkloadClass::translation().with_rate(20.0 / n_ues_total as f64),
+                )
+                .topology(TopologySpec::hex(400.0))
+                .node(GpuSpec::gh200_nvl2().scaled(4.0), 2);
+            for _ in 0..n_cells {
+                b = b.cell(CellSpec::new(ues_per_cell));
+            }
+            if fluid {
+                b = b.fluid(FluidSpec { focus: vec![0], rings: 1, ..Default::default() });
+            }
+            b.build().run()
+        };
+        let mut js = String::new();
+        let time = |n_cells: usize, fluid: bool| {
+            let _ = run(n_cells, fluid); // warmup
+            let t0 = Instant::now();
+            let res = run(n_cells, fluid);
+            (res, t0.elapsed().as_secs_f64())
+        };
+        let (dense, dense_wall) = time(128, false);
+        let (hybrid, wall) = time(128, true);
+        let n_fluid = hybrid.fluid.as_ref().map_or(0, |f| f.cells.len());
+        assert!(n_fluid > 100, "expected a fluid far ring, got {n_fluid} cells");
+        let eps = hybrid.events as f64 / wall.max(1e-12);
+        let eeps = dense.events as f64 / wall.max(1e-12);
+        let speedup = dense_wall / wall.max(1e-12);
+        println!(
+            "fluid hybrid  128 cells ({n_fluid} fluid)  {eps:>12.0} ev/s  \
+             equiv {eeps:>12.0} ev/s  speedup {speedup:>6.1}x vs dense"
+        );
+        assert!(
+            speedup >= 3.0,
+            "hybrid tier must be >= 3x faster than dense at 128 cells, got {speedup:.2}x"
+        );
+        let _ = write!(
+            js,
+            ",\n  {{\"name\": \"fluid\", \"cells\": 128, \"events\": {}, \"jobs\": {}, \
+             \"wall_s\": {wall:.4}, \"events_per_sec\": {eps:.1}, \"dense_events\": {}, \
+             \"dense_wall_s\": {dense_wall:.4}, \"equiv_events_per_sec\": {eeps:.1}, \
+             \"speedup_vs_dense\": {speedup:.2}}}",
+            hybrid.events, hybrid.report.n_jobs, dense.events,
+        );
+        let (big, wall) = time(256, true);
+        let eps = big.events as f64 / wall.max(1e-12);
+        println!("fluid hybrid  256 cells  {eps:>12.0} ev/s ({} jobs)", big.report.n_jobs);
+        let _ = write!(
+            js,
+            ",\n  {{\"name\": \"fluid\", \"cells\": 256, \"events\": {}, \"jobs\": {}, \
+             \"wall_s\": {wall:.4}, \"events_per_sec\": {eps:.1}}}",
+            big.events, big.report.n_jobs,
+        );
+        js
+    };
+
     // Warm-start sweep: one shared warm-up segment per seed vs
     // re-simulating it at every rate point. Warm-up-heavy grid (4 s
     // warm-up of a 5 s horizon, 6 rate points), serial so the wall
@@ -360,6 +437,7 @@ fn main() {
     js.push_str(&coupled_json);
     js.push_str(&multi_model_json);
     js.push_str(&pdes_json);
+    js.push_str(&fluid_json);
     js.push_str(&warm_json);
     js.push_str(&sweep_json);
     js.push_str("\n]\n");

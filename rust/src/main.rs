@@ -391,6 +391,7 @@ fn cmd_scenario(argv: &[String]) -> i32 {
         OptSpec { name: "layout", help: "site layout with --isd: hex | linear", takes_value: true, default: Some("hex") },
         OptSpec { name: "speed", help: "UE speed in m/s with --isd (fixed-velocity motion; 0 = static)", takes_value: true, default: Some("0") },
         OptSpec { name: "handover", help: "enable A3 handover between coupled cells (3 dB / 160 ms defaults; tune via [handover] in --config)", takes_value: false, default: None },
+        OptSpec { name: "fluid-rings", help: "hybrid fidelity with --isd > 0: keep per-UE simulation within this many rings of the focus cells (default focus: cell 0) and run every farther cell as a fluid mean-field source; tune via [fluid] in --config", takes_value: true, default: None },
         OptSpec { name: "autoscale", help: "elastic control plane policy: fixed | queue_depth | ttft_slo (tune via [cluster] in --config)", takes_value: true, default: None },
         OptSpec { name: "churn", help: "per-node failure process MTBF:MTTR[:SPINUP] in seconds, applied to every demo node (implies --autoscale fixed)", takes_value: true, default: None },
         OptSpec { name: "horizon", help: "simulated seconds", takes_value: true, default: Some("12") },
@@ -493,8 +494,19 @@ fn cmd_scenario(argv: &[String]) -> i32 {
             return 2;
         }
     };
-    if isd == 0.0 && (speed > 0.0 || args.flag("handover")) {
-        eprintln!("--speed/--handover require --isd > 0 (a site topology)");
+    let fluid_rings = match args.get_u64("fluid-rings") {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if isd == 0.0 && (speed > 0.0 || args.flag("handover") || fluid_rings.is_some()) {
+        eprintln!("--speed/--handover/--fluid-rings require --isd > 0 (a site topology)");
+        return 2;
+    }
+    if fluid_rings.is_some_and(|r| r > 64) {
+        eprintln!("--fluid-rings must be in 0..=64");
         return 2;
     }
     let autoscale = match args.get("autoscale") {
@@ -544,6 +556,12 @@ fn cmd_scenario(argv: &[String]) -> i32 {
         }
         if args.flag("handover") {
             b = b.handover(icc6g::scenario::HandoverSpec::default());
+        }
+        if let Some(r) = fluid_rings {
+            b = b.fluid(icc6g::scenario::FluidSpec {
+                rings: r as u32,
+                ..Default::default()
+            });
         }
     }
     for _ in 0..n_nodes {
@@ -650,6 +668,16 @@ fn cmd_scenario(argv: &[String]) -> i32 {
             t.isd_m,
             if scenario.handover().is_some() { ", A3 handover" } else { "" },
         );
+        if let Some(f) = scenario.fluid() {
+            let n_fluid =
+                (0..scenario.cells().len()).filter(|&k| f.is_fluid(t, k)).count();
+            println!(
+                "fluid tier   : {} focus cell(s) per-UE, {} far-ring cell(s) fluid (rings = {})",
+                scenario.cells().len() - n_fluid,
+                n_fluid,
+                f.rings,
+            );
+        }
     }
     println!(
         "routing      : {} over {} node(s)",
@@ -759,6 +787,32 @@ fn cmd_scenario(argv: &[String]) -> i32 {
         }
         ct.print();
         let _ = ct.write_csv("scenario_cells.csv");
+    }
+    if let Some(fl) = &res.fluid {
+        let mut ft = Table::new(
+            "fluid tier (far-ring cells: mean-field activity + Eq 3-6 closed forms)",
+            &["class", "lambda_per_cell", "mean_sojourn_ms", "satisfaction"],
+        );
+        for c in &fl.classes {
+            ft.row(&[
+                c.name.clone(),
+                cell(c.lambda_per_cell, 2),
+                c.mean_sojourn.map(|s| cell(s * 1e3, 2)).unwrap_or_else(|| "unstable".into()),
+                cell(c.satisfaction, 4),
+            ]);
+        }
+        ft.print();
+        let _ = ft.write_csv("scenario_fluid.csv");
+        let mean_act = if fl.cells.is_empty() {
+            0.0
+        } else {
+            fl.cells.iter().map(|c| c.mean_activity).sum::<f64>() / fl.cells.len() as f64
+        };
+        println!(
+            "fluid load   : mean activity {mean_act:.3} over {} cell(s), background rho {:.3}/node",
+            fl.cells.len(),
+            fl.node_rho,
+        );
     }
     if !res.report.radio.is_empty() {
         let mut rt = Table::new(

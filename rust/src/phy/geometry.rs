@@ -73,6 +73,24 @@ impl TopologySpec {
         Self { layout: SiteLayout::Linear, isd_m }
     }
 
+    /// Ring (graph) distance between sites `a` and `b`: hex distance
+    /// on the spiral's axial coordinates for [`SiteLayout::Hex`]
+    /// (ring `r` of the spiral is exactly the set at distance `r`
+    /// from cell 0), index distance for [`SiteLayout::Linear`]. The
+    /// fluid-tier focus classification is defined in terms of this
+    /// metric, not Euclidean meters, so it is ISD-independent.
+    pub fn ring_distance(&self, a: usize, b: usize) -> u64 {
+        match self.layout {
+            SiteLayout::Linear => a.abs_diff(b) as u64,
+            SiteLayout::Hex => {
+                let (qa, ra) = hex_axial(a);
+                let (qb, rb) = hex_axial(b);
+                let (dq, dr) = (qa - qb, ra - rb);
+                ((dq.abs() + dr.abs() + (dq + dr).abs()) / 2) as u64
+            }
+        }
+    }
+
     /// Global position of site `k`.
     pub fn site_position(&self, k: usize) -> Position {
         match self.layout {
@@ -348,6 +366,43 @@ mod tests {
             assert!(!seen.contains(&key), "site {k} collides");
             seen.push(key);
         }
+    }
+
+    #[test]
+    fn ring_distance_matches_spiral_rings() {
+        let t = TopologySpec::hex(500.0);
+        // spiral ring r = hex distance r from the center
+        for k in 1..=6 {
+            assert_eq!(t.ring_distance(0, k), 1, "site {k}");
+        }
+        for k in 7..=18 {
+            assert_eq!(t.ring_distance(0, k), 2, "site {k}");
+        }
+        for k in 19..=36 {
+            assert_eq!(t.ring_distance(0, k), 3, "site {k}");
+        }
+        // symmetric, zero on the diagonal
+        for a in 0..19 {
+            assert_eq!(t.ring_distance(a, a), 0);
+            for b in 0..19 {
+                assert_eq!(t.ring_distance(a, b), t.ring_distance(b, a));
+            }
+        }
+        // triangle inequality over the first two rings
+        for a in 0..19 {
+            for b in 0..19 {
+                for c in 0..19 {
+                    assert!(
+                        t.ring_distance(a, c)
+                            <= t.ring_distance(a, b) + t.ring_distance(b, c)
+                    );
+                }
+            }
+        }
+        let l = TopologySpec::linear(500.0);
+        assert_eq!(l.ring_distance(2, 5), 3);
+        assert_eq!(l.ring_distance(5, 2), 3);
+        assert_eq!(l.ring_distance(4, 4), 0);
     }
 
     #[test]

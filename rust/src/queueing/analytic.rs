@@ -127,6 +127,23 @@ pub fn disjoint_satisfaction(
     truncated_sum_prob(p.mu1 - lambda, p.mu2 - lambda, t, c1, c2)
 }
 
+/// Server utilization `λ/μ` of one M/M/1 stage (the fluid tier's
+/// per-node background load is expressed in these units). Returns
+/// `f64::INFINITY` for a zero-rate server.
+pub fn utilization(lambda: f64, mu: f64) -> f64 {
+    if mu <= 0.0 { f64::INFINITY } else { lambda / mu }
+}
+
+/// Mean end-to-end sojourn `E[X + Y] = 1/(μ₁−λ) + 1/(μ₂−λ)` of the
+/// tandem network (Lemma 1 gives independent exponential stage
+/// sojourns in steady state). `None` outside the stability region.
+pub fn tandem_mean_sojourn(p: &SystemParams, lambda: f64) -> Option<f64> {
+    if lambda < 0.0 || lambda >= p.stability_limit() {
+        return None;
+    }
+    Some(1.0 / (p.mu1 - lambda) + 1.0 / (p.mu2 - lambda))
+}
+
 /// Satisfaction probability of an arbitrary [`Scheme`].
 pub fn scheme_satisfaction(p: &SystemParams, scheme: &Scheme, lambda: f64) -> f64 {
     match scheme.policy {
@@ -288,6 +305,32 @@ mod tests {
         // budget consumed entirely by wireline → unsatisfiable
         assert_eq!(joint_satisfaction(&p, 0.0, 0.085), 0.0);
         assert_eq!(disjoint_satisfaction(&p, 0.0, 0.030, 0.024, 0.056), 0.0);
+    }
+
+    #[test]
+    fn tandem_mean_sojourn_basics() {
+        let p = SystemParams::paper();
+        // λ → 0: mean sojourn is the sum of the bare service times.
+        let s0 = tandem_mean_sojourn(&p, 0.0).unwrap();
+        assert!((s0 - (1.0 / 900.0 + 1.0 / 100.0)).abs() < 1e-12);
+        // strictly increasing in λ, diverging toward the limit
+        let mut prev = 0.0;
+        for i in 0..100 {
+            let s = tandem_mean_sojourn(&p, i as f64).unwrap();
+            assert!(s > prev, "λ={i}: {s} <= {prev}");
+            prev = s;
+        }
+        // outside the stability region there is no steady state
+        assert_eq!(tandem_mean_sojourn(&p, 100.0), None);
+        assert_eq!(tandem_mean_sojourn(&p, 250.0), None);
+        assert_eq!(tandem_mean_sojourn(&p, -1.0), None);
+    }
+
+    #[test]
+    fn utilization_is_lambda_over_mu() {
+        assert_eq!(utilization(30.0, 100.0), 0.3);
+        assert_eq!(utilization(0.0, 100.0), 0.0);
+        assert_eq!(utilization(5.0, 0.0), f64::INFINITY);
     }
 
     #[test]

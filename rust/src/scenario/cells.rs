@@ -220,6 +220,11 @@ pub(crate) struct CellRt {
     /// Handover counters (UEs migrated into / out of this cell).
     pub(crate) ho_in: u64,
     pub(crate) ho_out: u64,
+    /// Fluid-tier background cell (DESIGN.md §15): no UEs, no slot
+    /// clock. Its `itf_out` row holds the analytic mean-activity
+    /// interference the engine's `FluidTick` refreshes; the slot
+    /// pipeline never steps it.
+    pub(crate) fluid: bool,
 }
 
 impl CellRt {
@@ -284,6 +289,7 @@ impl CellRt {
             iot_stats: Welford::new(),
             ho_in: 0,
             ho_out: 0,
+            fluid: false,
         }
     }
 
@@ -353,11 +359,16 @@ impl CellRt {
     /// A3 evaluation over this cell's UEs: push `(tag, from, to)`
     /// migration orders for every UE whose best coupled neighbor has
     /// beaten the serving cell by the hysteresis for `ttt_ticks`
-    /// consecutive radio ticks. Engine-serial.
+    /// consecutive radio ticks. `target_ok[j]` gates cell `j` as a
+    /// migration target — the engine masks out fluid-tier cells, which
+    /// interfere but hold no per-UE state to migrate into (without a
+    /// fluid tier the mask is all-true, so A3 is unchanged).
+    /// Engine-serial.
     pub(crate) fn evaluate_handover(
         &mut self,
         hysteresis_db: f64,
         ttt_ticks: u32,
+        target_ok: &[bool],
         out: &mut Vec<(u64, usize, usize)>,
     ) {
         let Some(geo) = self.geo.as_mut() else { return };
@@ -366,7 +377,7 @@ impl CellRt {
             let cl_s = gu.links[serving].cl_db;
             let (mut best, mut best_cl) = (usize::MAX, f64::INFINITY);
             for (j, &on) in geo.coupled.iter().enumerate() {
-                if on && gu.links[j].cl_db < best_cl {
+                if on && target_ok[j] && gu.links[j].cl_db < best_cl {
                     best_cl = gu.links[j].cl_db;
                     best = j;
                 }
@@ -898,7 +909,11 @@ impl<'a> FrontierPool<'a> {
                 // row when the pool is recreated mid-run by a
                 // `run_to` segment, so a resumed frontier run prices
                 // exactly the interference the serial merge would.
-                let row = if c.ticking && !c.itf_out.is_empty() {
+                // Fluid cells never step but always radiate: their
+                // analytic row rides in `itf_out` (both generations
+                // carry it, so the lag rule picks it regardless of the
+                // neighbor's boundary).
+                let row = if (c.ticking || c.fluid) && !c.itf_out.is_empty() {
                     c.itf_out.clone()
                 } else {
                     vec![0.0; n]
@@ -1046,34 +1061,93 @@ impl<'a> FrontierPool<'a> {
         }
     }
 
-    /// Engine side: publish the new bound (the calendar head), help
-    /// step until quiescence — no eligible boundary below the bound
-    /// and nothing in flight — then merge every buffered record in
-    /// `(t_bits, cell)` order. On return the engine has exclusive cell
-    /// access (workers are parked under the bound) and the calendar
-    /// matches the serial run's insertion sequence.
-    pub(crate) fn advance_to(&self, bound: f64, merge: &mut dyn FnMut(StepRec)) {
+    /// Raise the steppable bound (monotone; lowering is a no-op) and
+    /// wake the workers. Under the bounded-lag merge rule (DESIGN.md
+    /// §12) the engine raises the bound to the earliest *cell-writing*
+    /// calendar event — not the calendar head — so workers keep
+    /// stepping boundaries in `[head, bound)` while the engine handles
+    /// cell-neutral events (compute, control, churn) concurrently.
+    pub(crate) fn raise_bound(&self, bound: f64) {
         let mut inner = self.inner.lock().unwrap();
-        inner.bound = bound;
-        self.work.notify_all();
+        if bound > inner.bound {
+            inner.bound = bound;
+            self.work.notify_all();
+        }
+    }
+
+    /// Help step until every boundary strictly below `cut` has
+    /// committed (an in-flight claim at boundary `t` holds
+    /// `frontier[cell] == t` until commit, so `min frontier >= cut`
+    /// implies nothing below `cut` is running), then merge exactly the
+    /// records below `cut` in `(t_bits, cell)` order — the serial
+    /// calendar-insertion sequence. Records at or above `cut` stay
+    /// buffered for a later merge; workers may keep producing them
+    /// concurrently, bounded by the current `raise_bound` value.
+    pub(crate) fn merge_below(&self, cut: f64, merge: &mut dyn FnMut(StepRec)) {
+        let cut_bits = cut.to_bits();
+        let mut inner = self.inner.lock().unwrap();
+        debug_assert!(
+            cut <= inner.bound,
+            "merge cut {cut} above the bound {} would under-merge",
+            inner.bound
+        );
         loop {
+            let min_f =
+                inner.frontier.iter().copied().fold(f64::INFINITY, f64::min);
+            if !(min_f < cut) {
+                break;
+            }
             if let Some((k, t, i_mw)) = self.try_claim(&mut inner) {
                 drop(inner);
                 let out = self.exec_step(k, t, i_mw);
                 inner = self.inner.lock().unwrap();
                 self.commit(&mut inner, k, out);
             } else if inner.inflight == 0 {
+                // Nothing runnable and nothing running: the remaining
+                // sub-cut frontiers sit beyond the drain limit (or are
+                // capped by the current bound) and will never step.
                 break;
             } else {
                 inner = self.idle.wait(inner).unwrap();
             }
         }
-        let mut records = std::mem::take(&mut inner.records);
+        let mut below = Vec::new();
+        let mut i = 0;
+        while i < inner.records.len() {
+            if inner.records[i].t_bits < cut_bits {
+                below.push(inner.records.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
         drop(inner);
-        records.sort_unstable_by_key(|r| (r.t_bits, r.cell));
-        for rec in records {
+        below.sort_unstable_by_key(|r| (r.t_bits, r.cell));
+        for rec in below {
             merge(rec);
         }
+    }
+
+    /// Full quiescence at `bound`: no boundary below it is running or
+    /// unmerged. On return the engine has exclusive access to every
+    /// cell below the bound — the contract cell-writing event handlers
+    /// (arrivals, radio ticks, fluid ticks) rely on.
+    pub(crate) fn advance_to(&self, bound: f64, merge: &mut dyn FnMut(StepRec)) {
+        self.raise_bound(bound);
+        self.merge_below(bound, merge);
+    }
+
+    /// Replace fluid cell `k`'s published interference row (both
+    /// generations, at the `t = 0` sentinel version, so the lag rule
+    /// always selects it). Only called from the engine's `FluidTick`
+    /// handler at full quiescence — no worker is pricing concurrently.
+    pub(crate) fn set_fluid_row(&self, k: usize, row: &[f64]) {
+        if !self.coupling {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let p = &mut inner.pubs[k];
+        p[0] = PubRow { t_bits: 0, row: row.to_vec() };
+        p[1] = PubRow { t_bits: 0, row: row.to_vec() };
     }
 
     /// Release the workers to exit (call once, after the event loop).
@@ -1292,5 +1366,88 @@ mod tests {
         let mut extra = 0usize;
         pool.advance_to(3.9 * slot, &mut |_| extra += 1);
         assert_eq!(extra, 0, "no boundary below the new bound remains");
+    }
+
+    #[test]
+    fn bounded_lag_merge_retains_records_above_the_cut() {
+        let cells: Vec<Mutex<CellRt>> =
+            (0..2).map(|k| Mutex::new(rt(k, 11))).collect();
+        let slot = cells[0].lock().unwrap().slot_dur;
+        let pool = FrontierPool::new(&cells, 3.0, false);
+        // Bound well past the merge cut: the help-step loop advances
+        // every boundary it needs for quiescence below the cut, but
+        // only sub-cut records surface now.
+        pool.raise_bound(4.5 * slot);
+        let mut first: Vec<(u64, u32)> = Vec::new();
+        pool.merge_below(2.5 * slot, &mut |rec| first.push((rec.t_bits, rec.cell)));
+        assert_eq!(first.len(), 4, "2 cells x boundaries {{1,2}} below the cut");
+        let mut sorted = first.clone();
+        sorted.sort_unstable();
+        assert_eq!(first, sorted, "sub-cut records merge in (time, cell) order");
+        assert!(
+            first.iter().all(|&(tb, _)| f64::from_bits(tb) < 2.5 * slot),
+            "no record at or above the cut may surface early"
+        );
+        // The retained records surface at the next cut, still ordered.
+        let mut rest: Vec<(u64, u32)> = Vec::new();
+        pool.merge_below(4.5 * slot, &mut |rec| rest.push((rec.t_bits, rec.cell)));
+        assert_eq!(rest.len(), 4, "boundaries {{3,4}} were retained");
+        let mut sorted = rest.clone();
+        sorted.sort_unstable();
+        assert_eq!(rest, sorted);
+        assert!(first.last().unwrap() < rest.first().unwrap());
+        // lowering the bound is a no-op
+        pool.raise_bound(1.0 * slot);
+        let mut extra = 0usize;
+        pool.merge_below(4.5 * slot, &mut |_| extra += 1);
+        assert_eq!(extra, 0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn fluid_cells_publish_their_row_without_stepping() {
+        let mut cfg = SimConfig::table1();
+        cfg.seed = 3;
+        cfg.horizon = 1.0;
+        let spec = CellSpec::new(4);
+        let mut a = CellRt::new(0, &spec, &cfg, 1);
+        // a fluid background cell: no UEs, clock stopped
+        let mut b = CellRt::new(1, &CellSpec { n_ues: 0, ..spec }, &cfg, 1);
+        let sites =
+            vec![Position { x: 0.0, y: 0.0 }, Position { x: 500.0, y: 0.0 }];
+        a.init_geometry(0, &sites, vec![false, true], cell_seed(3, 0), cfg.cell_r_max, None);
+        b.init_geometry(1, &sites, vec![true, false], cell_seed(3, 1), cfg.cell_r_max, None);
+        b.fluid = true;
+        b.ticking = false;
+        b.next_slot = f64::INFINITY;
+        b.itf_out = vec![2.5e-12, 0.0];
+        let cells = vec![Mutex::new(a), Mutex::new(b)];
+        let pool = FrontierPool::new(&cells, 3.0, true);
+        let slot = cells[0].lock().unwrap().slot_dur;
+        let mut n = 0usize;
+        pool.advance_to(1.5 * slot, &mut |_| n += 1);
+        assert_eq!(n, 1, "only the per-UE cell steps");
+        {
+            let a = cells[0].lock().unwrap();
+            // the fluid neighbor's row priced into cell 0's first slot
+            let expect = crate::phy::link::iot_db_from_linear(
+                2.5e-12,
+                a.noise_floor_mw,
+            );
+            assert!(
+                (a.iot_db - expect).abs() < 1e-12,
+                "{} vs {expect}",
+                a.iot_db
+            );
+        }
+        // the engine refreshes the row at a fluid tick; later slots
+        // price the new value
+        pool.set_fluid_row(1, &[5.0e-12, 0.0]);
+        pool.advance_to(2.5 * slot, &mut |_| n += 1);
+        let a = cells[0].lock().unwrap();
+        let expect =
+            crate::phy::link::iot_db_from_linear(5.0e-12, a.noise_floor_mw);
+        assert!((a.iot_db - expect).abs() < 1e-12);
+        pool.shutdown();
     }
 }

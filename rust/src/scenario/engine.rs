@@ -41,6 +41,8 @@
 //! restored engine replays the exact trajectory of an uninterrupted
 //! run.
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 use std::sync::Mutex;
 
 use crate::cluster::{ClusterRt, ClusterRtState};
@@ -55,6 +57,9 @@ use crate::metrics::{CellRadioReport, JobFate, JobOutcome, LatencyManagement, Si
 use crate::phy::channel::{LargeScale, Position};
 use crate::phy::link::iot_db_from_linear;
 use crate::phy::mobility::MobilitySpec;
+use crate::queueing::analytic::{
+    disjoint_satisfaction, joint_satisfaction, tandem_mean_sojourn, SystemParams,
+};
 use crate::rng::Rng;
 use crate::snapshot::{self as snap, Dec, Enc, SnapError};
 use crate::sweep::resolve_threads;
@@ -63,9 +68,12 @@ use super::cells::{
     cell_seed, CellRt, CellRtState, CellSync, FrontierPool, StepDriver, StepPool, StepRec,
     UeGeoSnap, UeSnap,
 };
+use super::fluid::{
+    self, FluidCell, FluidCellReport, FluidClassReport, FluidReport, FluidRt,
+};
 use super::routing::{ModelView, NodeView, RouteCtx, Routing};
 use super::workload::WorkloadClass;
-use super::{NodeSpec, Scenario};
+use super::{CellSpec, NodeSpec, Scenario};
 
 /// Map a scheme to the node queue discipline.
 pub fn discipline_of(scheme: &SchemeConfig) -> Discipline {
@@ -97,6 +105,8 @@ pub struct ScenarioResult {
     pub events: u64,
     /// Simulated seconds per wall-clock second.
     pub speedup: f64,
+    /// Fluid-tier summary (hybrid-fidelity runs only, DESIGN.md §15).
+    pub fluid: Option<FluidReport>,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -125,6 +135,32 @@ enum Ev {
     NodeRepair { node: usize },
     /// Node `node` finishes spin-up and starts serving.
     NodeUp { node: usize, epoch: u32 },
+    /// Coarse fluid-tier tick: relax far-ring cell activities and
+    /// republish their interference rows (DESIGN.md §15).
+    FluidTick,
+}
+
+/// Events that mutate per-cell state (UE banks, geometry, fluid rows)
+/// and therefore bound how far cells may step ahead of the calendar
+/// under the bounded-lag frontier merge (DESIGN.md §12). Everything
+/// else (compute, control-plane, churn) is cell-neutral: it may pop
+/// and execute while workers keep stepping cells concurrently.
+fn is_writer(ev: &Ev) -> bool {
+    matches!(
+        ev,
+        Ev::JobArrival { .. } | Ev::BgArrival { .. } | Ev::RadioTick | Ev::FluidTick
+    )
+}
+
+/// Rebuild the writer-time min-heap by scanning the calendar (at
+/// construction and on snapshot restore).
+fn writer_heap(q: &EventQueue<Ev>) -> BinaryHeap<Reverse<u64>> {
+    let (_, _, _, entries) = q.snapshot_entries();
+    entries
+        .iter()
+        .filter(|(_, _, ev)| is_writer(ev))
+        .map(|(t, _, _)| Reverse(t.to_bits()))
+        .collect()
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -520,6 +556,15 @@ struct EngineState {
     model_active: Vec<u32>,
     /// Cell-slot steps merged so far (counted into `events`).
     slot_events: u64,
+    /// Fluid background tier (None = every cell runs per-UE).
+    fluid_rt: Option<FluidRt>,
+    /// Min-heap over `f64::to_bits` of every scheduled cell-writing
+    /// event (see [`is_writer`]) — the bounded-lag frontier bound.
+    /// Derived from the calendar, rebuilt on restore.
+    writers: BinaryHeap<Reverse<u64>>,
+    /// Per-cell handover-target mask (false = fluid cell, which has
+    /// no per-UE state to hand into). Config-derived.
+    ho_ok: Vec<bool>,
     radio_coupling: bool,
     tick_s: f64,
     ttt_ticks: u32,
@@ -568,11 +613,38 @@ impl<'a> ScenarioEngine<'a> {
         assert!(!sc.nodes.is_empty(), "scenario needs at least one compute node");
         assert!(!sc.cells.is_empty(), "scenario needs at least one cell (build() defaults one)");
 
+        // Hybrid-fidelity classification (DESIGN.md §15): cells with
+        // no focus site within `rings` hops run the fluid mean-field
+        // tier instead of the per-UE pipeline. Ring distance is a
+        // site-layout notion, so the tier only arms under a topology;
+        // `fluid = None` (or a focus set covering every cell) leaves
+        // the engine bit-identical to the dense build.
+        let is_fluid: Vec<bool> = match (&sc.fluid, &sc.topology) {
+            (Some(f), Some(topo)) => {
+                (0..sc.cells.len()).map(|k| f.is_fluid(topo, k)).collect()
+            }
+            _ => vec![false; sc.cells.len()],
+        };
+
         let cells: Vec<Mutex<CellRt>> = sc
             .cells
             .iter()
             .enumerate()
-            .map(|(k, spec)| Mutex::new(CellRt::new(k, spec, &sc.base, n_classes)))
+            .map(|(k, spec)| {
+                if is_fluid[k] {
+                    // Fluid cells carry no per-UE state: build over an
+                    // empty population (no arrival streams, no bank)
+                    // and stop the slot clock for good.
+                    let mut c =
+                        CellRt::new(k, &CellSpec { n_ues: 0, ..*spec }, &sc.base, n_classes);
+                    c.fluid = true;
+                    c.ticking = false;
+                    c.next_slot = f64::INFINITY;
+                    Mutex::new(c)
+                } else {
+                    Mutex::new(CellRt::new(k, spec, &sc.base, n_classes))
+                }
+            })
             .collect();
 
         // Coupled-radio geometry: place the sites, build each cell's
@@ -621,7 +693,13 @@ impl<'a> ScenarioEngine<'a> {
         let router = sc.make_router();
         let t_wireline = cfg.scheme.deployment.wireline_latency();
 
-        let total_ues: usize = sc.cells.iter().map(|c| c.n_ues as usize).sum();
+        // Effective per-UE populations: fluid cells host none.
+        let total_ues: usize = sc
+            .cells
+            .iter()
+            .enumerate()
+            .map(|(k, c)| if is_fluid[k] { 0 } else { c.n_ues as usize })
+            .sum();
         let jobs: Vec<JobState> = Vec::with_capacity(4096);
         // Pre-size the calendar: priming schedules one arrival per
         // (cell, UE, class) plus one background event per UE, and at
@@ -639,9 +717,13 @@ impl<'a> ScenarioEngine<'a> {
                 ExecutionModel::ContinuousBatching { .. } => 1,
             })
             .sum();
+        // One slot each for the self-re-arming coarse ticks (radio,
+        // control, fluid) plus one pending failure event per churning
+        // node, so tick-heavy low-UE runs don't re-allocate either.
+        let tick_evs = 3 + if sc.cluster.is_some() { sc.nodes.len() } else { 0 };
         let mut q: EventQueue<Ev> = EventQueue::with_kind(
             sc.event_queue,
-            total_ues * (n_classes + 1) + inflight + 64,
+            total_ues * (n_classes + 1) + inflight + tick_evs + 64,
         );
 
         // Handover bookkeeping: stable global UE ids (tags) and the
@@ -653,9 +735,10 @@ impl<'a> ScenarioEngine<'a> {
         let prefix: Vec<usize> = {
             let mut acc = 0usize;
             let mut v = Vec::with_capacity(sc.cells.len());
-            for c in &sc.cells {
+            for (k, c) in sc.cells.iter().enumerate() {
                 v.push(acc);
-                acc += c.n_ues as usize;
+                // Fluid cells occupy no tag range (empty population).
+                acc += if is_fluid[k] { 0 } else { c.n_ues as usize };
             }
             v
         };
@@ -672,11 +755,13 @@ impl<'a> ScenarioEngine<'a> {
         } else {
             None
         };
-        let itf: Vec<Vec<f64>> = if radio_coupling {
+        let mut itf: Vec<Vec<f64>> = if radio_coupling {
             (0..cells.len()).map(|_| vec![0.0; cells.len()]).collect()
         } else {
             Vec::new()
         };
+        // Handover can only target cells with per-UE state.
+        let ho_ok: Vec<bool> = is_fluid.iter().map(|&f| !f).collect();
         let tick_s = sc
             .mobility
             .as_ref()
@@ -705,6 +790,55 @@ impl<'a> ScenarioEngine<'a> {
         let bg_rate = 1.0 / cfg.background.mean_interval();
         let bg_bytes = cfg.background.packet_bytes;
 
+        // Fluid tier runtime: per-cell capacity and unit interference
+        // row priced once at a representative annulus radius, then
+        // activities seeded at their t = 0 targets and the initial
+        // rows published, so focus cells price far-ring interference
+        // from the very first slot (DESIGN.md §15).
+        let mut fluid_rt: Option<FluidRt> = None;
+        if is_fluid.iter().any(|&f| f) {
+            let (fs, topo) = (sc.fluid.as_ref().unwrap(), sc.topology.as_ref().unwrap());
+            let d_rep = fluid::representative_radius(cfg.cell_r_min, cfg.cell_r_max);
+            let fcells: Vec<FluidCell> = is_fluid
+                .iter()
+                .enumerate()
+                .filter(|&(_, &f)| f)
+                .map(|(k, _)| {
+                    let c = cells[k].lock().unwrap();
+                    FluidCell {
+                        cell: k,
+                        n_ues: sc.cells[k].n_ues,
+                        capacity_bps: fluid::cell_capacity_bytes_per_s(
+                            &c.scheduler.carrier,
+                            &c.scheduler.pc,
+                            &c.scheduler.rx,
+                            d_rep,
+                        ),
+                        unit_itf: fluid::unit_interference_row(
+                            topo,
+                            k,
+                            sc.cells.len(),
+                            &c.scheduler.carrier,
+                            &c.scheduler.pc,
+                            d_rep,
+                        ),
+                        activity: 0.0,
+                        act_sum: 0.0,
+                    }
+                })
+                .collect();
+            let mut rt = FluidRt::new(fs, fcells);
+            rt.init_activities(&sc.classes, bg_rate, f64::from(bg_bytes));
+            for fc in &rt.cells {
+                let row = fc.row();
+                if radio_coupling {
+                    itf[fc.cell].copy_from_slice(&row);
+                }
+                cells[fc.cell].lock().unwrap().itf_out.copy_from_slice(&row);
+            }
+            fluid_rt = Some(rt);
+        }
+
         // Prime arrival processes (per cell, same per-UE order as the
         // legacy engine). Time-varying classes prime at their t = 0
         // rate; a class whose t = 0 rate is zero defers to its first
@@ -730,6 +864,11 @@ impl<'a> ScenarioEngine<'a> {
             q.schedule_at(tick_s, Ev::RadioTick);
         }
 
+        // Prime the fluid tick.
+        if let Some(rt) = &fluid_rt {
+            q.schedule_at(rt.tick_s, Ev::FluidTick);
+        }
+
         // Prime the control plane: one failure event per churning node
         // (infinite-MTBF nodes draw nothing) and the first control tick.
         if let Some(cl) = cluster_rt.as_mut() {
@@ -740,6 +879,10 @@ impl<'a> ScenarioEngine<'a> {
             }
             q.schedule_at(cl.spec().tick_s, Ev::ControlTick);
         }
+
+        // Seed the bounded-lag writer bound from the primed calendar
+        // (every arrival plus the coarse ticks).
+        let writers = writer_heap(&q);
 
         let n_nodes = sc.nodes.len();
         let st = EngineState {
@@ -766,6 +909,9 @@ impl<'a> ScenarioEngine<'a> {
             warm: vec![false; n_nodes * sc.models.len()],
             model_active: vec![0; n_nodes * sc.models.len()],
             slot_events: 0,
+            fluid_rt,
+            writers,
+            ho_ok,
             radio_coupling,
             tick_s,
             ttt_ticks,
@@ -894,6 +1040,9 @@ fn event_loop_to(
         warm,
         model_active,
         slot_events,
+        fluid_rt,
+        writers,
+        ho_ok,
         ..
     } = st;
     let n_models = sc.models.len();
@@ -903,16 +1052,31 @@ fn event_loop_to(
     loop {
         let t_q = q.peek_time().unwrap_or(f64::INFINITY);
         if let StepDriver::Frontier(fp) = &driver {
-            // Conservative mode: let the frontier advance every cell
-            // strictly below the calendar head (events at the head pop
-            // first — the serial tie rule) and never past the cut,
-            // then merge the committed step records in (slot-time,
-            // cell) order. The merge reproduces the serial
-            // calendar-insertion sequence, so downstream pops are
-            // bit-identical. `above(b_eff)` makes the exclusive
-            // frontier bound inclusive of slots exactly at the cut —
-            // the same slots the serial driver steps.
-            fp.advance_to(t_q.min(above(b_eff)), &mut |rec: StepRec| {
+            // Bounded-lag mode: cells may step ahead of the calendar
+            // head as long as they stay strictly below the earliest
+            // pending *writer* event — the only events that mutate
+            // per-cell state (arrivals into banks, radio geometry,
+            // fluid rows). Cell-neutral events (compute, control,
+            // churn) pop and execute while workers keep stepping.
+            // When the head itself is a writer, `t_w == t_q` and the
+            // bound collapses onto the cut: the merge below then
+            // drains to full quiescence before the handler runs —
+            // exactly the old drain-to-quiescence behavior, now paid
+            // only when exclusive cell ownership is actually needed.
+            let t_w = writers
+                .peek()
+                .map(|w| f64::from_bits(w.0))
+                .unwrap_or(f64::INFINITY);
+            debug_assert!(t_w >= t_q || !t_q.is_finite(), "writer heap behind calendar head");
+            fp.raise_bound(t_w.min(above(b_eff)));
+            // Merge the committed step records strictly below the
+            // calendar head in (slot-time, cell) order (events at the
+            // head pop first — the serial tie rule). The merge
+            // reproduces the serial calendar-insertion sequence, so
+            // downstream pops are bit-identical. `above(b_eff)` makes
+            // the exclusive frontier bound inclusive of slots exactly
+            // at the cut — the same slots the serial driver steps.
+            fp.merge_below(t_q.min(above(b_eff)), &mut |rec: StepRec| {
                 *slot_events += 1;
                 for &job_id in &rec.jobs {
                     let js = &mut jobs[job_id as usize];
@@ -957,6 +1121,11 @@ fn event_loop_to(
             }
         }
         let (now, ev) = q.pop().unwrap();
+        if is_writer(&ev) {
+            let w = writers.pop();
+            debug_assert_eq!(w.map(|r| r.0), Some(now.to_bits()), "writer heap desynced");
+            drop(w);
+        }
         match ev {
             Ev::JobArrival { cell, ue, class } => {
                 if now < cfg.horizon {
@@ -1024,6 +1193,9 @@ fn event_loop_to(
                         });
                     }
                     if let Some(t) = next {
+                        // Mirror the calendar's `at.max(now)` clamp so
+                        // the heap entry matches the stored time bits.
+                        writers.push(Reverse(t.max(now).to_bits()));
                         q.schedule_at(t, Ev::JobArrival { cell, ue, class });
                     }
                 }
@@ -1054,6 +1226,7 @@ fn event_loop_to(
                             t_arrival: now,
                         });
                     }
+                    writers.push(Reverse((now + gap).max(now).to_bits()));
                     q.schedule_in(gap, Ev::BgArrival { cell, ue });
                 }
             }
@@ -1082,6 +1255,7 @@ fn event_loop_to(
                         cm.lock().unwrap().evaluate_handover(
                             ho.hysteresis_db,
                             ttt_ticks,
+                            ho_ok,
                             pending_ho,
                         );
                     }
@@ -1103,7 +1277,61 @@ fn event_loop_to(
                     }
                 }
                 if now < cfg.horizon {
+                    writers.push(Reverse((now + tick_s).to_bits()));
                     q.schedule_in(tick_s, Ev::RadioTick);
+                }
+            }
+            Ev::FluidTick => {
+                // FluidTick is a writer event, so the frontier is at
+                // full quiescence here: every cell frontier sits at or
+                // above `now` with no step in flight — safe to
+                // republish rows that the next slot batch prices.
+                if let Some(frt) = fluid_rt.as_mut() {
+                    frt.tick(now, &sc.classes, bg_rate, f64::from(bg_bytes));
+                    for fc in &frt.cells {
+                        let row = fc.row();
+                        cells[fc.cell].lock().unwrap().itf_out.copy_from_slice(&row);
+                        if radio_coupling {
+                            itf[fc.cell].copy_from_slice(&row);
+                        }
+                        if let StepDriver::Frontier(fp) = &driver {
+                            fp.set_fluid_row(fc.cell, &row);
+                        }
+                    }
+                    // Mean fluid compute load per up node — the Eq 3–6
+                    // offered load the far rings push into the tier,
+                    // exposed to custom routers via
+                    // `NodeView::background_rho`.
+                    let lam = frt.lambda_total(&sc.classes, now);
+                    let n_up = match cluster_rt.as_ref() {
+                        Some(cl) => {
+                            (0..cl.n_nodes()).filter(|&i| cl.eligible(i)).count().max(1)
+                        }
+                        None => nodes.len().max(1),
+                    };
+                    let mut s_sum = 0.0;
+                    let mut r_sum = 0.0;
+                    for class in &sc.classes {
+                        let r = class.rate_at(now);
+                        if r <= 0.0 {
+                            continue;
+                        }
+                        let d = sc.service.reprice(
+                            class,
+                            class.input_tokens.mean().round().max(1.0) as u32,
+                            class.output_tokens.mean().round().max(1.0) as u32,
+                            &sc.nodes[0].gpu,
+                        );
+                        s_sum += r * d.service_time();
+                        r_sum += r;
+                    }
+                    frt.node_rho =
+                        if r_sum > 0.0 { lam * (s_sum / r_sum) / n_up as f64 } else { 0.0 };
+                    if now < cfg.horizon {
+                        let t_next = now + frt.tick_s;
+                        writers.push(Reverse(t_next.to_bits()));
+                        q.schedule_at(t_next, Ev::FluidTick);
+                    }
                 }
             }
             Ev::ComputeEnqueue { job } => {
@@ -1120,6 +1348,9 @@ fn event_loop_to(
                 };
                 let spec = &sc.classes[class_id];
                 let allowed: &[usize] = &class_model_ids[class_id];
+                // Far-ring offered compute load (0.0 without a fluid
+                // tier — `with_background_rho(0.0)` is the identity).
+                let bg_rho = fluid_rt.as_ref().map_or(0.0, |f| f.node_rho);
                 views.clear();
                 let (target, model) = match cluster_rt.as_ref() {
                     Some(cl) => {
@@ -1131,7 +1362,7 @@ fn event_loop_to(
                         {
                             if cl.eligible(i) {
                                 eligible_ix.push(i);
-                                let v = rt.view(s);
+                                let v = rt.view(s).with_background_rho(bg_rho);
                                 views.push(if n_models > 0 {
                                     v.with_models(model_views(
                                         s,
@@ -1171,7 +1402,7 @@ fn event_loop_to(
                         for (i, (rt, s)) in
                             nodes.iter().zip(sc.nodes.iter()).enumerate()
                         {
-                            let v = rt.view(s);
+                            let v = rt.view(s).with_background_rho(bg_rho);
                             views.push(if n_models > 0 {
                                 v.with_models(model_views(
                                     s,
@@ -1629,6 +1860,72 @@ impl<'a> ScenarioEngine<'a> {
             let names: Vec<String> = sc.classes.iter().map(|c| c.name.clone()).collect();
             report.cluster = cl.report(&names);
         }
+
+        // Fluid-tier summary: final + time-averaged activities per
+        // far-ring cell, and per-class Eq 3–6 closed forms at the mean
+        // fluid cell (λ at the horizon rate phase; μ₁ from the mean
+        // air-interface capacity over the mean request size, μ₂ from
+        // the deterministic repriced service demand).
+        let fluid_report = self.st.fluid_rt.as_ref().map(|frt| {
+            let t_end = cfg.horizon;
+            let cells_rep: Vec<FluidCellReport> = frt
+                .cells
+                .iter()
+                .map(|fc| FluidCellReport {
+                    cell: fc.cell,
+                    lambda_jobs: FluidRt::lambda_cell(fc.n_ues, &sc.classes, t_end),
+                    activity: fc.activity,
+                    mean_activity: if frt.ticks > 0 {
+                        fc.act_sum / frt.elapsed()
+                    } else {
+                        fc.activity
+                    },
+                })
+                .collect();
+            let n_f = frt.cells.len().max(1) as f64;
+            let mean_cap = frt.cells.iter().map(|c| c.capacity_bps).sum::<f64>() / n_f;
+            let mean_pop = frt.cells.iter().map(|c| f64::from(c.n_ues)).sum::<f64>() / n_f;
+            let classes_rep: Vec<FluidClassReport> = sc
+                .classes
+                .iter()
+                .map(|class| {
+                    let lambda = mean_pop * class.rate_at(t_end);
+                    let mean_req =
+                        class.request_bytes(class.input_tokens.mean().round() as u32);
+                    let d = sc.service.reprice(
+                        class,
+                        class.input_tokens.mean().round().max(1.0) as u32,
+                        class.output_tokens.mean().round().max(1.0) as u32,
+                        &sc.nodes[0].gpu,
+                    );
+                    let p = SystemParams {
+                        mu1: if mean_req > 0 { mean_cap / f64::from(mean_req) } else { 0.0 },
+                        mu2: 1.0 / d.service_time(),
+                        b_total: class.b_total,
+                    };
+                    let satisfaction = match management_of(&cfg.scheme, class.b_total) {
+                        LatencyManagement::Joint { .. } => {
+                            joint_satisfaction(&p, lambda, self.st.t_wireline)
+                        }
+                        LatencyManagement::Disjoint { b_comm, b_comp, .. } => disjoint_satisfaction(
+                            &p,
+                            lambda,
+                            self.st.t_wireline,
+                            b_comm,
+                            b_comp,
+                        ),
+                    };
+                    FluidClassReport {
+                        name: class.name.clone(),
+                        lambda_per_cell: lambda,
+                        mean_sojourn: tandem_mean_sojourn(&p, lambda),
+                        satisfaction,
+                    }
+                })
+                .collect();
+            FluidReport { cells: cells_rep, node_rho: frt.node_rho, classes: classes_rep }
+        });
+
         ScenarioResult {
             outcomes,
             report,
@@ -1638,6 +1935,7 @@ impl<'a> ScenarioEngine<'a> {
             } else {
                 f64::INFINITY
             },
+            fluid: fluid_report,
         }
     }
 }
@@ -1714,6 +2012,7 @@ fn enc_ev(e: &mut Enc, ev: &Ev) {
             e.usize(node);
             e.u32(epoch);
         }
+        Ev::FluidTick => e.u8(10),
     }
 }
 
@@ -1746,6 +2045,7 @@ fn dec_ev(d: &mut Dec<'_>) -> Result<Ev, SnapError> {
             node: d.usize("event node")?,
             epoch: d.u32("event epoch")?,
         },
+        10 => Ev::FluidTick,
         _ => return Err(SnapError::Corrupt { what: "event tag" }),
     })
 }
@@ -2342,6 +2642,23 @@ impl<'a> ScenarioEngine<'a> {
         for &v in &self.st.model_active {
             e.u32(v);
         }
+        // v3: fluid-tier state. Capacities, unit rows and populations
+        // are config-derived; only the evolving activities (and their
+        // integrals), the tick counter and the derived node load are
+        // serialized.
+        match &self.st.fluid_rt {
+            None => e.bool(false),
+            Some(frt) => {
+                e.bool(true);
+                e.u64(frt.ticks);
+                e.f64(frt.node_rho);
+                e.usize(frt.cells.len());
+                for fc in &frt.cells {
+                    e.f64(fc.activity);
+                    e.f64(fc.act_sum);
+                }
+            }
+        }
         snap::frame(self.sc.fingerprint(), &e.into_bytes())
     }
 
@@ -2457,9 +2774,33 @@ impl<'a> ScenarioEngine<'a> {
         for slot in eng.st.model_active.iter_mut() {
             *slot = d.u32("model active")?;
         }
+
+        // v3: fluid-tier state (flag must agree with the config — the
+        // fingerprint already pins the [fluid] table, so a mismatch
+        // here means a corrupt blob, not a config drift).
+        let has_fluid = d.bool("fluid flag")?;
+        if has_fluid != eng.st.fluid_rt.is_some() {
+            return Err(SnapError::Corrupt { what: "fluid flag" });
+        }
+        if let Some(frt) = eng.st.fluid_rt.as_mut() {
+            frt.ticks = d.u64("fluid tick counter")?;
+            frt.node_rho = d.f64("fluid node rho")?;
+            let n_f = d.len("fluid cell count")?;
+            if n_f != frt.cells.len() {
+                return Err(SnapError::Corrupt { what: "fluid cell count" });
+            }
+            for fc in frt.cells.iter_mut() {
+                fc.activity = d.f64("fluid activity")?;
+                fc.act_sum = d.f64("fluid activity integral")?;
+            }
+        }
         if !d.is_empty() {
             return Err(SnapError::Corrupt { what: "trailing bytes" });
         }
+
+        // The bounded-lag writer bound is derived from the calendar:
+        // rescan the restored queue.
+        eng.st.writers = writer_heap(&eng.st.q);
 
         // Rebuild the interference exchange rows from the restored cell
         // state (same seeding rule the frontier pool uses): a ticking
@@ -2468,7 +2809,7 @@ impl<'a> ScenarioEngine<'a> {
         let n = eng.cells.len();
         for (k, cm) in eng.cells.iter().enumerate() {
             let c = cm.lock().unwrap();
-            eng.st.itf[k] = if c.ticking && !c.itf_out.is_empty() {
+            eng.st.itf[k] = if (c.ticking || c.fluid) && !c.itf_out.is_empty() {
                 c.itf_out.clone()
             } else {
                 vec![0.0; n]

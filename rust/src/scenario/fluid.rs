@@ -1,0 +1,412 @@
+//! Fluid (mean-field) far-ring cell tier — DESIGN.md §15.
+//!
+//! Cells far from the configured focus set drop their per-UE MAC/PHY
+//! pipeline entirely. Each fluid cell keeps two scalars of state — a
+//! mean *activity* (granted-PRB fraction) relaxing toward the offered
+//! load / capacity ratio, and its time integral for reporting — plus a
+//! precomputed activity-1.0 interference row. On every coarse
+//! `FluidTick` the engine scales that unit row by the current activity
+//! and republishes it through the *same* `itf_out` exchange the
+//! focus cells' slot pipeline consumes (§10 coupling contract), and
+//! accounts the tier's mean offered compute load against the node pool
+//! via the paper's Eq 3–6 closed forms.
+//!
+//! Documented approximations (the fidelity contract, §15):
+//! - the cell population collapses to one representative UE at the
+//!   mean drop radius with deterministic LOS and zero shadowing;
+//! - inter-site loss is priced center-to-center, NLOS, zero shadowing;
+//! - offered load uses distribution means (token means, Poisson rates
+//!   in force at the tick) — no per-UE burstiness, no HARQ, no
+//!   handover into or out of the fluid tier.
+
+use crate::phy::channel::{los_probability, LargeScale, Position};
+use crate::phy::geometry::{link_loss_db, TopologySpec};
+use crate::phy::link::{
+    mean_sinr_db, sinr_to_cqi, tbs_bytes, tx_power_prb_dbm, PowerControl, Receiver,
+};
+use crate::phy::numerology::Carrier;
+
+use super::workload::WorkloadClass;
+
+/// Configuration of the hybrid-fidelity background tier. Present on a
+/// [`super::Scenario`] it splits the cell set in two: cells within
+/// `rings` ring-distance of any focus site keep the full per-UE DES
+/// pipeline; everything farther becomes a fluid cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FluidSpec {
+    /// Focus sites (cell indices) kept at per-UE fidelity, together
+    /// with their `rings`-neighborhood.
+    pub focus: Vec<usize>,
+    /// Ring radius of the per-UE neighborhood around each focus site
+    /// ([`TopologySpec::ring_distance`] metric).
+    pub rings: u32,
+    /// Fluid tick period (seconds) — the coarse clock that refreshes
+    /// activities, interference rows, and the background compute load.
+    pub tick_s: f64,
+    /// Activity relaxation time constant (seconds): per tick the
+    /// activity moves a `1 − e^{−tick_s/relax_s}` fraction of the way
+    /// to its target, so step responses settle in a few `relax_s`.
+    pub relax_s: f64,
+}
+
+impl Default for FluidSpec {
+    fn default() -> Self {
+        Self { focus: vec![0], rings: 1, tick_s: 0.01, relax_s: 0.1 }
+    }
+}
+
+impl FluidSpec {
+    /// Is `cell` in the fluid (background) tier? Fluid iff its ring
+    /// distance to *every* focus site exceeds `rings`.
+    pub fn is_fluid(&self, topo: &TopologySpec, cell: usize) -> bool {
+        !self
+            .focus
+            .iter()
+            .any(|&f| topo.ring_distance(f, cell) <= u64::from(self.rings))
+    }
+}
+
+/// Mean drop radius of a UE dropped uniformly on the annulus
+/// `[r_min, r_max]`: `E[r] = 2(r_max³−r_min³) / (3(r_max²−r_min²))`.
+/// The fluid tier's representative UE sits here.
+pub(crate) fn representative_radius(r_min: f64, r_max: f64) -> f64 {
+    2.0 * (r_max.powi(3) - r_min.powi(3)) / (3.0 * (r_max.powi(2) - r_min.powi(2)))
+}
+
+/// Large-scale state of the representative UE: mean radius,
+/// deterministic LOS (majority outcome at that distance), no shadowing.
+pub(crate) fn representative_ue(d_rep: f64) -> LargeScale {
+    LargeScale {
+        pos: Position { x: d_rep, y: 0.0 },
+        los: los_probability(d_rep) >= 0.5,
+        shadow_db: 0.0,
+    }
+}
+
+/// Uplink air-interface capacity (bytes/s) of a fluid cell: the full
+/// carrier granted every slot to the representative UE at its
+/// link-adapted CQI.
+pub(crate) fn cell_capacity_bytes_per_s(
+    carrier: &Carrier,
+    pc: &PowerControl,
+    rx: &Receiver,
+    d_rep: f64,
+) -> f64 {
+    let ls = representative_ue(d_rep);
+    let cqi = sinr_to_cqi(mean_sinr_db(&ls, carrier, pc, rx, carrier.n_prb));
+    f64::from(tbs_bytes(carrier, cqi, carrier.n_prb)) / carrier.numerology.slot_duration()
+}
+
+/// Activity-1.0 interference row of fluid cell `k`: `row[j]` is the
+/// per-PRB power (linear mW) site `j` receives from cell `k`'s uplink
+/// when the cell is fully loaded. Transmit power prices the
+/// representative UE's own-cell coupling loss through the same
+/// open-loop PC formula the per-UE publisher uses; the cross-site loss
+/// is center-to-center NLOS with zero shadowing. Scaling by the
+/// current activity gives the published row.
+pub(crate) fn unit_interference_row(
+    topo: &TopologySpec,
+    k: usize,
+    n_cells: usize,
+    carrier: &Carrier,
+    pc: &PowerControl,
+    d_rep: f64,
+) -> Vec<f64> {
+    let cl_own = representative_ue(d_rep).coupling_loss_db(carrier.freq_hz);
+    let p_tx_dbm = tx_power_prb_dbm(cl_own, pc, carrier.n_prb);
+    let own = topo.site_position(k);
+    let mut row = vec![0.0; n_cells];
+    for (j, slot) in row.iter_mut().enumerate() {
+        if j == k {
+            continue;
+        }
+        let cl_to_j = link_loss_db(own, topo.site_position(j), carrier.freq_hz, false, 0.0);
+        *slot = 10f64.powf((p_tx_dbm - cl_to_j) / 10.0);
+    }
+    row
+}
+
+/// Runtime state of one fluid cell.
+#[derive(Debug, Clone)]
+pub(crate) struct FluidCell {
+    /// Cell index in the scenario's cell list.
+    pub(crate) cell: usize,
+    /// Population the cell represents (the spec's `n_ues`; the
+    /// per-UE runtime holds zero).
+    pub(crate) n_ues: u32,
+    /// Uplink capacity (bytes/s) at the representative UE.
+    pub(crate) capacity_bps: f64,
+    /// Interference row at activity 1.0 (mW per PRB into each site).
+    pub(crate) unit_itf: Vec<f64>,
+    /// Current mean granted-PRB fraction in `[0, 1]`.
+    pub(crate) activity: f64,
+    /// `∫ activity dt` — divides by elapsed time for the mean.
+    pub(crate) act_sum: f64,
+}
+
+impl FluidCell {
+    /// The interference row to publish at the current activity.
+    pub(crate) fn row(&self) -> Vec<f64> {
+        self.unit_itf.iter().map(|v| v * self.activity).collect()
+    }
+}
+
+/// Runtime state of the whole fluid tier (owned by the engine; stepped
+/// by the `FluidTick` handler at full frontier quiescence).
+#[derive(Debug)]
+pub(crate) struct FluidRt {
+    pub(crate) tick_s: f64,
+    pub(crate) relax_s: f64,
+    /// Ticks processed (snapshot-restored; `ticks × tick_s` is the
+    /// elapsed fluid time that normalizes `act_sum`).
+    pub(crate) ticks: u64,
+    pub(crate) cells: Vec<FluidCell>,
+    /// Mean background utilization each up node carries for the fluid
+    /// tier (`Σ λ_fluid × s̄ / n_up`); refreshed every tick and exposed
+    /// to custom routers through `NodeView::background_rho`.
+    pub(crate) node_rho: f64,
+}
+
+impl FluidRt {
+    pub(crate) fn new(spec: &FluidSpec, cells: Vec<FluidCell>) -> Self {
+        Self { tick_s: spec.tick_s, relax_s: spec.relax_s, ticks: 0, cells, node_rho: 0.0 }
+    }
+
+    /// Mean uplink bytes/s one UE offers at time `t`: every class at
+    /// its rate in force times its mean request size, plus the
+    /// background stream.
+    pub(crate) fn offered_bytes_per_ue(
+        classes: &[WorkloadClass],
+        bg_rate: f64,
+        bg_bytes: f64,
+        t: f64,
+    ) -> f64 {
+        let mut bytes = bg_rate * bg_bytes;
+        for c in classes {
+            let mean_request =
+                c.input_tokens.mean() * f64::from(c.bytes_per_token) + f64::from(c.overhead_bytes);
+            bytes += c.rate_at(t) * mean_request;
+        }
+        bytes
+    }
+
+    /// Target activity of a cell with `n_ues` UEs: offered / capacity,
+    /// saturating at 1 (an overloaded fluid cell transmits on every
+    /// PRB it has, exactly like a saturated per-UE cell).
+    fn target_activity(n_ues: u32, capacity_bps: f64, per_ue_bytes: f64) -> f64 {
+        if capacity_bps <= 0.0 {
+            return 1.0;
+        }
+        (f64::from(n_ues) * per_ue_bytes / capacity_bps).min(1.0)
+    }
+
+    /// Seed activities at their `t = 0` targets so a run starts in the
+    /// steady state the DES population would warm into.
+    pub(crate) fn init_activities(&mut self, classes: &[WorkloadClass], bg_rate: f64, bg_bytes: f64) {
+        let per_ue = Self::offered_bytes_per_ue(classes, bg_rate, bg_bytes, 0.0);
+        for fc in &mut self.cells {
+            fc.activity = Self::target_activity(fc.n_ues, fc.capacity_bps, per_ue);
+        }
+    }
+
+    /// Advance every cell one tick at simulation time `t`: exponential
+    /// relaxation toward the current offered/capacity target.
+    pub(crate) fn tick(&mut self, t: f64, classes: &[WorkloadClass], bg_rate: f64, bg_bytes: f64) {
+        let per_ue = Self::offered_bytes_per_ue(classes, bg_rate, bg_bytes, t);
+        let blend = 1.0 - (-self.tick_s / self.relax_s).exp();
+        for fc in &mut self.cells {
+            let target = Self::target_activity(fc.n_ues, fc.capacity_bps, per_ue);
+            fc.activity += blend * (target - fc.activity);
+            fc.act_sum += fc.activity * self.tick_s;
+        }
+        self.ticks += 1;
+    }
+
+    /// Job arrival rate (jobs/s, all classes) one fluid cell offers at
+    /// time `t`.
+    pub(crate) fn lambda_cell(n_ues: u32, classes: &[WorkloadClass], t: f64) -> f64 {
+        f64::from(n_ues) * classes.iter().map(|c| c.rate_at(t)).sum::<f64>()
+    }
+
+    /// Total job arrival rate of the whole tier at time `t`.
+    pub(crate) fn lambda_total(&self, classes: &[WorkloadClass], t: f64) -> f64 {
+        self.cells
+            .iter()
+            .map(|fc| Self::lambda_cell(fc.n_ues, classes, t))
+            .sum()
+    }
+
+    /// Elapsed fluid time (seconds) — normalizes `act_sum`.
+    pub(crate) fn elapsed(&self) -> f64 {
+        self.ticks as f64 * self.tick_s
+    }
+}
+
+/// Per-fluid-cell summary on [`super::engine::ScenarioResult`].
+#[derive(Debug, Clone)]
+pub struct FluidCellReport {
+    /// Cell index in the scenario's cell list.
+    pub cell: usize,
+    /// Job arrival rate (jobs/s) the cell offered at end of run.
+    pub lambda_jobs: f64,
+    /// Final mean granted-PRB fraction.
+    pub activity: f64,
+    /// Time-averaged activity over the run.
+    pub mean_activity: f64,
+}
+
+/// Per-class analytic (Eq 3–6) summary of the fluid tier's load.
+#[derive(Debug, Clone)]
+pub struct FluidClassReport {
+    pub name: String,
+    /// Mean per-fluid-cell arrival rate of the class (jobs/s).
+    pub lambda_per_cell: f64,
+    /// M/M/1 tandem mean sojourn at that rate (`None` = unstable).
+    pub mean_sojourn: Option<f64>,
+    /// Closed-form satisfaction probability under the scenario's
+    /// latency-management scheme.
+    pub satisfaction: f64,
+}
+
+/// Fluid-tier section of a scenario result (present iff the scenario
+/// configured a [`FluidSpec`] and at least one cell classified fluid).
+#[derive(Debug, Clone)]
+pub struct FluidReport {
+    pub cells: Vec<FluidCellReport>,
+    /// Background utilization each up node carried at end of run.
+    pub node_rho: f64,
+    pub classes: Vec<FluidClassReport>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classification_follows_ring_distance() {
+        let topo = TopologySpec::hex(500.0);
+        let spec = FluidSpec { focus: vec![0], rings: 1, ..FluidSpec::default() };
+        // 19-site hex spiral: ring 0 = {0}, ring 1 = {1..=6}, ring 2 = {7..=18}.
+        for k in 0..19 {
+            assert_eq!(spec.is_fluid(&topo, k), k > 6, "cell {k}");
+        }
+        let wide = FluidSpec { focus: vec![0], rings: 2, ..FluidSpec::default() };
+        assert!((0..19).all(|k| !wide.is_fluid(&topo, k)));
+        // A second focus site pulls its own neighborhood back to per-UE.
+        let two = FluidSpec { focus: vec![0, 18], rings: 0, ..FluidSpec::default() };
+        assert!(!two.is_fluid(&topo, 0));
+        assert!(!two.is_fluid(&topo, 18));
+        assert!(two.is_fluid(&topo, 3));
+    }
+
+    #[test]
+    fn representative_radius_is_annulus_mean() {
+        // Full disc of radius r: E[r] = 2r/3.
+        let d = representative_radius(0.0, 300.0);
+        assert!((d - 200.0).abs() < 1e-9, "{d}");
+        // Thin annulus: mean ≈ the ring radius.
+        let d = representative_radius(249.0, 251.0);
+        assert!((d - 250.0).abs() < 0.1, "{d}");
+        // Monotone in both edges, inside the annulus.
+        let d = representative_radius(35.0, 250.0);
+        assert!(d > 35.0 && d < 250.0, "{d}");
+    }
+
+    #[test]
+    fn capacity_positive_and_decays_with_distance() {
+        let carrier = Carrier::table1();
+        let (pc, rx) = (PowerControl::default(), Receiver::default());
+        let near = cell_capacity_bytes_per_s(&carrier, &pc, &rx, 80.0);
+        let far = cell_capacity_bytes_per_s(&carrier, &pc, &rx, 800.0);
+        assert!(near > 0.0 && far > 0.0);
+        assert!(near >= far, "capacity must not grow with distance: {near} < {far}");
+    }
+
+    #[test]
+    fn unit_row_prices_neighbors_only() {
+        let topo = TopologySpec::hex(500.0);
+        let carrier = Carrier::table1();
+        let pc = PowerControl::default();
+        let row = unit_interference_row(&topo, 0, 7, &carrier, &pc, 150.0);
+        assert_eq!(row.len(), 7);
+        assert_eq!(row[0], 0.0, "no self-interference");
+        // Ring-1 sites are equidistant from the center: identical power.
+        for j in 2..7 {
+            assert!((row[j] - row[1]).abs() < 1e-18, "site {j}: {} vs {}", row[j], row[1]);
+        }
+        assert!(row[1] > 0.0);
+        // A farther publisher injects less into a fixed victim.
+        let far = unit_interference_row(&topo, 18, 19, &carrier, &pc, 150.0);
+        let near = unit_interference_row(&topo, 1, 19, &carrier, &pc, 150.0);
+        assert!(far[0] < near[0]);
+    }
+
+    #[test]
+    fn activity_relaxes_to_target_and_integrates() {
+        let spec = FluidSpec { tick_s: 0.01, relax_s: 0.05, ..FluidSpec::default() };
+        let classes = vec![WorkloadClass::translation()];
+        let capacity = 1.0e7;
+        let mut rt = FluidRt::new(
+            &spec,
+            vec![FluidCell {
+                cell: 7,
+                n_ues: 50,
+                capacity_bps: capacity,
+                unit_itf: vec![1.0e-12, 0.0],
+                activity: 0.0,
+                act_sum: 0.0,
+            }],
+        );
+        let per_ue = FluidRt::offered_bytes_per_ue(&classes, 0.0, 0.0, 0.0);
+        assert!(per_ue > 0.0);
+        let target = (50.0 * per_ue / capacity).min(1.0);
+        for i in 0..200 {
+            rt.tick(i as f64 * spec.tick_s, &classes, 0.0, 0.0);
+        }
+        let fc = &rt.cells[0];
+        assert!((fc.activity - target).abs() < 1e-9 * target.max(1e-12), "after 40 time constants");
+        assert_eq!(rt.ticks, 200);
+        assert!((rt.elapsed() - 2.0).abs() < 1e-12);
+        // The mean sits between start (0) and target, and the row scales.
+        let mean = fc.act_sum / rt.elapsed();
+        assert!(mean > 0.0 && mean <= target + 1e-12);
+        assert!((fc.row()[0] - fc.activity * 1.0e-12).abs() < 1e-24);
+        assert_eq!(fc.row()[1], 0.0);
+    }
+
+    #[test]
+    fn saturated_cell_clamps_at_full_activity() {
+        let spec = FluidSpec { tick_s: 0.01, relax_s: 0.01, ..FluidSpec::default() };
+        let classes = vec![WorkloadClass::translation()];
+        let mut rt = FluidRt::new(
+            &spec,
+            vec![FluidCell {
+                cell: 9,
+                n_ues: 10_000,
+                capacity_bps: 1.0,
+                unit_itf: vec![0.0],
+                activity: 0.0,
+                act_sum: 0.0,
+            }],
+        );
+        rt.init_activities(&classes, 1.0, 1500.0);
+        assert_eq!(rt.cells[0].activity, 1.0);
+        for _ in 0..10 {
+            rt.tick(0.0, &classes, 1.0, 1500.0);
+        }
+        assert!(rt.cells[0].activity <= 1.0);
+        assert!((rt.cells[0].activity - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lambda_scales_with_population_and_rate_phases() {
+        let classes = vec![
+            WorkloadClass::translation().with_rate(0.5).with_rate_phase(10.0, 2.0),
+            WorkloadClass::chat().with_rate(0.1),
+        ];
+        let early = FluidRt::lambda_cell(20, &classes, 0.0);
+        assert!((early - 20.0 * 0.6).abs() < 1e-12, "{early}");
+        let late = FluidRt::lambda_cell(20, &classes, 11.0);
+        assert!((late - 20.0 * 2.1).abs() < 1e-12, "{late}");
+    }
+}

@@ -47,12 +47,14 @@
 
 pub mod cells;
 mod engine;
+pub mod fluid;
 pub mod routing;
 pub mod service;
 pub mod workload;
 
 pub use cells::{cell_seed, CellSpec, CellSync, HandoverSpec};
 pub use engine::{discipline_of, management_of, ScenarioEngine, ScenarioResult};
+pub use fluid::{FluidCellReport, FluidClassReport, FluidReport, FluidSpec};
 pub use routing::{
     CellAffinity, ClassAffinity, LeastLoaded, ModelView, NodeView, RouteCtx,
     RouteDecision, RoundRobin, Routing, RoutingPolicy,
@@ -138,6 +140,10 @@ pub struct Scenario {
     pub(crate) mobility: Option<MobilitySpec>,
     /// A3 handover (requires a topology).
     pub(crate) handover: Option<HandoverSpec>,
+    /// Hybrid-fidelity background tier (requires a topology): cells
+    /// beyond the focus neighborhood run the fluid mean-field model
+    /// of DESIGN.md §15 instead of the per-UE slot pipeline.
+    pub(crate) fluid: Option<fluid::FluidSpec>,
     /// Event-list backend of the engine's calendar.
     pub(crate) event_queue: EventListKind,
     /// Elastic control plane (`None` = static always-healthy tier; the
@@ -164,6 +170,7 @@ impl std::fmt::Debug for Scenario {
             .field("topology", &self.topology)
             .field("mobility", &self.mobility)
             .field("handover", &self.handover)
+            .field("fluid", &self.fluid)
             .field("event_queue", &self.event_queue)
             .field("cluster", &self.cluster)
             .field("node_churn", &self.node_churn)
@@ -218,6 +225,12 @@ impl Scenario {
 
     pub fn handover(&self) -> Option<&HandoverSpec> {
         self.handover.as_ref()
+    }
+
+    /// The hybrid-fidelity background tier (`None` = every cell runs
+    /// the full per-UE pipeline).
+    pub fn fluid(&self) -> Option<&fluid::FluidSpec> {
+        self.fluid.as_ref()
     }
 
     /// The engine's event-list backend.
@@ -323,7 +336,7 @@ impl Scenario {
         let _ = write!(
             s,
             "cells={:?};nodes={:?};models={:?};routing={:?};custom_router={};service={:?};\
-             topology={:?};mobility={:?};handover={:?};event_queue={:?};\
+             topology={:?};mobility={:?};handover={:?};fluid={:?};event_queue={:?};\
              cluster={:?};churn={:?};",
             self.cells,
             self.nodes,
@@ -334,6 +347,7 @@ impl Scenario {
             self.topology,
             self.mobility,
             self.handover,
+            self.fluid,
             self.event_queue,
             self.cluster,
             self.node_churn,
@@ -363,6 +377,7 @@ pub struct ScenarioBuilder {
     topology: Option<TopologySpec>,
     mobility: Option<MobilitySpec>,
     handover: Option<HandoverSpec>,
+    fluid: Option<fluid::FluidSpec>,
     event_queue: EventListKind,
     cluster: Option<ClusterSpec>,
     node_churn: Vec<NodeChurnSpec>,
@@ -385,6 +400,7 @@ impl std::fmt::Debug for ScenarioBuilder {
             .field("topology", &self.topology)
             .field("mobility", &self.mobility)
             .field("handover", &self.handover)
+            .field("fluid", &self.fluid)
             .field("event_queue", &self.event_queue)
             .field("cluster", &self.cluster)
             .field("node_churn", &self.node_churn)
@@ -415,6 +431,7 @@ impl ScenarioBuilder {
             topology: None,
             mobility: None,
             handover: None,
+            fluid: None,
             // near-sorted slot/arrival schedules are the calendar
             // queue's home turf; pop order (and hence every result) is
             // backend-independent
@@ -449,6 +466,7 @@ impl ScenarioBuilder {
             topology: None,
             mobility: None,
             handover: None,
+            fluid: None,
             event_queue: EventListKind::Calendar,
             cluster: None,
             node_churn: vec![NodeChurnSpec::default()],
@@ -545,6 +563,17 @@ impl ScenarioBuilder {
     /// [`ScenarioBuilder::topology`]).
     pub fn handover(mut self, ho: HandoverSpec) -> Self {
         self.handover = Some(ho);
+        self
+    }
+
+    /// Enable the hybrid-fidelity background tier (requires
+    /// [`ScenarioBuilder::topology`]): cells farther than
+    /// `spec.rings` ring-distance from every focus site run the fluid
+    /// mean-field model of DESIGN.md §15 instead of the per-UE slot
+    /// pipeline. A focus set covering every cell is bit-identical to
+    /// no fluid tier at all.
+    pub fn fluid(mut self, spec: fluid::FluidSpec) -> Self {
+        self.fluid = Some(spec);
         self
     }
 
@@ -714,7 +743,9 @@ impl ScenarioBuilder {
                 | "mobility.speed" | "mobility.v_min" | "mobility.v_max"
                 | "mobility.tick_s" | "mobility.shadow_corr_m"
                 | "handover.hysteresis_db" | "handover.ttt_s"
-                | "handover.interruption_slots" | "cluster.policy"
+                | "handover.interruption_slots"
+                | "fluid.focus" | "fluid.rings" | "fluid.tick_s"
+                | "fluid.relax_s" | "cluster.policy"
                 | "cluster.tick_s" | "cluster.min_nodes" | "cluster.max_nodes"
                 | "cluster.retry_budget" | "cluster.ttft_slo"
                 | "cluster.queue_high" | "cluster.queue_low"
@@ -874,6 +905,49 @@ impl ScenarioBuilder {
                 ho.interruption_slots = v as u64;
             }
             self.handover = Some(ho);
+        }
+        // [fluid]: hybrid-fidelity background tier; any key enables it.
+        if doc.get("fluid.focus").is_some()
+            || doc.get("fluid.rings").is_some()
+            || doc.get("fluid.tick_s").is_some()
+            || doc.get("fluid.relax_s").is_some()
+        {
+            let mut spec = self.fluid.unwrap_or_default();
+            if let Some(s) = typed_str(doc, "fluid.focus")? {
+                // comma-separated cell indices, e.g. "0,3,7"
+                spec.focus = s
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|t| !t.is_empty())
+                    .map(|t| {
+                        t.parse::<usize>().map_err(|_| {
+                            anyhow::anyhow!("'fluid.focus': bad cell index '{t}'")
+                        })
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?;
+                if spec.focus.is_empty() {
+                    anyhow::bail!("'fluid.focus' must name at least one cell");
+                }
+            }
+            if let Some(v) = typed_i64(doc, "fluid.rings")? {
+                if !(0..=64).contains(&v) {
+                    anyhow::bail!("'fluid.rings' must be in 0..=64, got {v}");
+                }
+                spec.rings = v as u32;
+            }
+            if let Some(v) = typed_f64(doc, "fluid.tick_s")? {
+                if !(1e-4..=10.0).contains(&v) {
+                    anyhow::bail!("'fluid.tick_s' must be in 0.0001..=10 s, got {v}");
+                }
+                spec.tick_s = v;
+            }
+            if let Some(v) = typed_f64(doc, "fluid.relax_s")? {
+                if !(1e-4..=1e4).contains(&v) {
+                    anyhow::bail!("'fluid.relax_s' must be in 0.0001..=1e4 s, got {v}");
+                }
+                spec.relax_s = v;
+            }
+            self.fluid = Some(spec);
         }
         // [cluster]: elastic control plane; any key enables it.
         const CLUSTER_KEYS: [&str; 9] = [
@@ -1304,6 +1378,28 @@ impl ScenarioBuilder {
             if self.handover.is_some() {
                 anyhow::bail!("[handover] requires a [topology] (site layout)");
             }
+            if self.fluid.is_some() {
+                anyhow::bail!("[fluid] requires a [topology] (site layout)");
+            }
+        }
+        if let Some(spec) = &self.fluid {
+            if spec.focus.is_empty() {
+                anyhow::bail!("[fluid] focus must name at least one cell");
+            }
+            for &f in &spec.focus {
+                if f >= self.cells.len() {
+                    anyhow::bail!(
+                        "[fluid] focus cell {f} out of range (scenario has {} cells)",
+                        self.cells.len(),
+                    );
+                }
+            }
+            if !(spec.tick_s > 0.0 && spec.tick_s.is_finite()) {
+                anyhow::bail!("[fluid] tick_s must be positive and finite");
+            }
+            if !(spec.relax_s > 0.0 && spec.relax_s.is_finite()) {
+                anyhow::bail!("[fluid] relax_s must be positive and finite");
+            }
         }
         // The scheme owns job-aware prioritization — same sync rule as
         // `SimConfig::with_scheme`, applied to every cell.
@@ -1555,6 +1651,7 @@ impl ScenarioBuilder {
             topology: self.topology,
             mobility: self.mobility,
             handover: self.handover,
+            fluid: self.fluid,
             event_queue: self.event_queue,
             cluster: self.cluster,
             node_churn: self.node_churn,

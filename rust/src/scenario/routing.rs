@@ -57,16 +57,33 @@ pub struct NodeView {
     gpu: GpuSpec,
     kv_headroom: f64,
     models: Vec<ModelView>,
+    background_rho: f64,
 }
 
 impl NodeView {
     pub fn new(queue_len: usize, busy_servers: u32, n_servers: u32, gpu: GpuSpec) -> Self {
-        Self { queue_len, busy_servers, n_servers, gpu, kv_headroom: f64::INFINITY, models: Vec::new() }
+        Self {
+            queue_len,
+            busy_servers,
+            n_servers,
+            gpu,
+            kv_headroom: f64::INFINITY,
+            models: Vec::new(),
+            background_rho: 0.0,
+        }
     }
 
     /// Attach the node's free KV-cache bytes (batching nodes).
     pub fn with_kv_headroom(mut self, bytes: f64) -> Self {
         self.kv_headroom = bytes;
+        self
+    }
+
+    /// Attach the mean offered load of the fluid background tier at
+    /// this node, as a server utilization (`λ·s̄` per node). Zero
+    /// without a fluid tier.
+    pub fn with_background_rho(mut self, rho: f64) -> Self {
+        self.background_rho = rho;
         self
     }
 
@@ -135,6 +152,14 @@ impl NodeView {
     /// Admitted jobs currently running model `m` at this node.
     pub fn model_jobs(&self, m: usize) -> u32 {
         self.models.iter().find(|v| v.model == m).map_or(0, |v| v.active_jobs)
+    }
+
+    /// Mean fluid-tier background load at this node (utilization
+    /// units, `0.0` when no fluid tier is configured). The built-in
+    /// policies ignore it; capacity-aware custom routers can subtract
+    /// it from the node's effective headroom.
+    pub fn background_rho(&self) -> f64 {
+        self.background_rho
     }
 }
 

@@ -26,7 +26,9 @@ pub const MAGIC: [u8; 8] = *b"ICC6GSNP";
 /// Current snapshot format version. Bump on any payload layout change.
 /// v2: model-zoo fields (job model id, batch prefix blocks and KV
 /// reservations, warm flags, per-model in-flight counters).
-pub const VERSION: u32 = 2;
+/// v3: fluid-tier state (per-cell activities and activity integrals,
+/// tick counter, per-node background load).
+pub const VERSION: u32 = 3;
 
 /// Why a snapshot blob was rejected.
 #[derive(Debug, Clone, PartialEq)]

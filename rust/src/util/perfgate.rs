@@ -166,6 +166,34 @@ pub fn scale_metrics(text: &str) -> anyhow::Result<Vec<(String, f64)>> {
                     ));
                 }
             }
+            // Hybrid-fidelity rows: the 128-cell row carries the
+            // equivalent-dense throughput (dense event count over the
+            // hybrid wall) and the machine-independent wall ratio; the
+            // 256-cell row only the raw hybrid events/s.
+            "fluid" => {
+                if let Some(cells) = row.get("cells").and_then(|x| x.as_f64()) {
+                    if let Some(eq) =
+                        row.get("equiv_events_per_sec").and_then(|x| x.as_f64())
+                    {
+                        out.push((
+                            format!("scale/fluid/{}/equiv_events_per_sec", cells as u64),
+                            eq,
+                        ));
+                    }
+                    if let Some(s) = row.get("speedup_vs_dense").and_then(|x| x.as_f64()) {
+                        out.push((
+                            format!("scale/fluid/{}/speedup_vs_dense", cells as u64),
+                            s,
+                        ));
+                    }
+                    if let Some(eps) = row.get("events_per_sec").and_then(|x| x.as_f64()) {
+                        out.push((
+                            format!("scale/fluid/{}/events_per_sec", cells as u64),
+                            eps,
+                        ));
+                    }
+                }
+            }
             // The warm-start row gates the cold/warm wall-clock ratio
             // (machine-independent), not an absolute wall time.
             "sweep_warm" => {
@@ -414,9 +442,9 @@ mod tests {
         let m = hotpath_metrics(hot).unwrap();
         assert_eq!(m, vec![("hotpath/dess: 10k schedule+pop/mean_ns".to_string(), 100.0)]);
 
-        let scale = "[\n  {\"name\": \"sls_scale\", \"n_ues\": 1000, \"mode\": \"active_set\", \"events\": 5, \"jobs\": 2, \"wall_s\": 0.1, \"events_per_sec\": 50.0},\n  {\"name\": \"speedup_vs_dense\", \"n_ues\": 1000, \"speedup\": 3.5},\n  {\"name\": \"coupled_radio\", \"n_ues\": 1000, \"events\": 9, \"jobs\": 4, \"wall_s\": 0.2, \"events_per_sec\": 45.0},\n  {\"name\": \"multi_model\", \"n_ues\": 600, \"events\": 8, \"jobs\": 4, \"wall_s\": 0.2, \"events_per_sec\": 40.0},\n  {\"name\": \"pdes\", \"cells\": 16, \"sync\": \"frontier\", \"events\": 7, \"jobs\": 3, \"wall_s\": 0.3, \"events_per_sec\": 33.0},\n  {\"name\": \"sweep_parallel\", \"points\": 4, \"seeds\": 3, \"wall_s\": 1.25}\n]";
+        let scale = "[\n  {\"name\": \"sls_scale\", \"n_ues\": 1000, \"mode\": \"active_set\", \"events\": 5, \"jobs\": 2, \"wall_s\": 0.1, \"events_per_sec\": 50.0},\n  {\"name\": \"speedup_vs_dense\", \"n_ues\": 1000, \"speedup\": 3.5},\n  {\"name\": \"coupled_radio\", \"n_ues\": 1000, \"events\": 9, \"jobs\": 4, \"wall_s\": 0.2, \"events_per_sec\": 45.0},\n  {\"name\": \"multi_model\", \"n_ues\": 600, \"events\": 8, \"jobs\": 4, \"wall_s\": 0.2, \"events_per_sec\": 40.0},\n  {\"name\": \"pdes\", \"cells\": 16, \"sync\": \"frontier\", \"events\": 7, \"jobs\": 3, \"wall_s\": 0.3, \"events_per_sec\": 33.0},\n  {\"name\": \"sweep_parallel\", \"points\": 4, \"seeds\": 3, \"wall_s\": 1.25},\n  {\"name\": \"fluid\", \"cells\": 128, \"events\": 7, \"jobs\": 3, \"wall_s\": 0.1, \"events_per_sec\": 70.0, \"dense_events\": 21, \"dense_wall_s\": 0.4, \"equiv_events_per_sec\": 210.0, \"speedup_vs_dense\": 4.0},\n  {\"name\": \"fluid\", \"cells\": 256, \"events\": 6, \"jobs\": 2, \"wall_s\": 0.2, \"events_per_sec\": 30.0}\n]";
         let m = scale_metrics(scale).unwrap();
-        assert_eq!(m.len(), 6);
+        assert_eq!(m.len(), 10);
         assert_eq!(m[0].0, "scale/sls_scale/1000/active_set/events_per_sec");
         assert_eq!(m[1], ("scale/speedup_vs_dense/1000".to_string(), 3.5));
         assert_eq!(
@@ -429,6 +457,13 @@ mod tests {
         );
         assert_eq!(m[4], ("scale/pdes/16/frontier/events_per_sec".to_string(), 33.0));
         assert_eq!(m[5], ("scale/sweep_parallel/wall_s".to_string(), 1.25));
+        assert_eq!(
+            m[6],
+            ("scale/fluid/128/equiv_events_per_sec".to_string(), 210.0)
+        );
+        assert_eq!(m[7], ("scale/fluid/128/speedup_vs_dense".to_string(), 4.0));
+        assert_eq!(m[8], ("scale/fluid/128/events_per_sec".to_string(), 70.0));
+        assert_eq!(m[9], ("scale/fluid/256/events_per_sec".to_string(), 30.0));
     }
 
     #[test]

@@ -1,0 +1,276 @@
+//! Hybrid-fidelity (fluid far-ring tier) integration tests — DESIGN.md §15.
+//!
+//! 1. **Analytic cross-check** — on a symmetric hex grid the fluid
+//!    tier's per-cell offered job rate is exactly `n_ues × Σ class
+//!    rates`, its activities stay in `[0, 1]`, the Eq 3–6 closed forms
+//!    are proper probabilities, and the interference a focus cell
+//!    observes from fluid neighbors lands within an order of magnitude
+//!    (linear) of the all-per-UE DES steady state.
+//! 2. **Snapshot round-trip** — with the fluid tier live, a
+//!    serialize → restore → serialize cycle is byte-stable and a run
+//!    resumed from a mid-horizon snapshot finishes bit-identical to an
+//!    uninterrupted one.
+//! 3. **Bounded-lag determinism** — with fluid off (or the focus set
+//!    covering every cell, which must build the identical engine) the
+//!    bounded-lag frontier merge is bit-identical across worker-thread
+//!    counts {1, 2, 4, 8} and both parallel cell schedulers; a hybrid
+//!    run is likewise thread-invariant.
+
+use icc6g::config::SchemeConfig;
+use icc6g::scenario::{
+    CellSpec, CellSync, FluidSpec, MobilitySpec, RoutingPolicy, Scenario,
+    ScenarioBuilder, ScenarioEngine, ScenarioResult, ServiceModelKind,
+    TopologySpec, WorkloadClass,
+};
+
+fn gpu() -> icc6g::llm::GpuSpec {
+    icc6g::llm::GpuSpec::gh200_nvl2().scaled(2.0)
+}
+
+/// 19-site hex grid, focus on the center cell only: cell 0 keeps the
+/// per-UE pipeline (plus ring 1 when `rings` = 1), the far ring goes
+/// fluid. With `fluid` = `None` every cell is per-UE.
+fn hex19(
+    ues_per_cell: u32,
+    fluid: Option<FluidSpec>,
+    threads: usize,
+    sync: CellSync,
+    seed: u64,
+) -> Scenario {
+    let mut b = ScenarioBuilder::new()
+        .scheme(SchemeConfig::icc())
+        .horizon(1.0)
+        .warmup(0.2)
+        .seed(seed)
+        .threads(threads)
+        .cell_sync(sync)
+        .routing(RoutingPolicy::LeastLoaded)
+        .service_kind(ServiceModelKind::TokenSampled)
+        .workload(WorkloadClass::chat())
+        .workload(WorkloadClass::translation())
+        .cells(19, CellSpec::new(ues_per_cell))
+        .topology(TopologySpec::hex(300.0))
+        .node(gpu(), 1)
+        .node(gpu(), 1);
+    if let Some(f) = fluid {
+        b = b.fluid(f);
+    }
+    b.build()
+}
+
+fn focus_center(rings: u32) -> FluidSpec {
+    FluidSpec { focus: vec![0], rings, ..FluidSpec::default() }
+}
+
+#[test]
+fn fluid_report_matches_closed_forms_on_symmetric_grid() {
+    let res = hex19(6, Some(focus_center(0)), 1, CellSync::Frontier, 7).run();
+    let fl = res.fluid.as_ref().expect("fluid tier configured but not reported");
+
+    // Ring 0 of the 19-site spiral is just cell 0: 18 fluid cells.
+    assert_eq!(fl.cells.len(), 18);
+    let sc = hex19(6, Some(focus_center(0)), 1, CellSync::Frontier, 7);
+    let rate_sum: f64 = sc.classes().iter().map(|c| c.rate_at(1.0)).sum();
+    for fc in &fl.cells {
+        assert!(fc.cell >= 1 && fc.cell <= 18, "cell 0 must stay per-UE");
+        // λ per cell is exactly population × Σ rates (no sampling).
+        let expect = 6.0 * rate_sum;
+        assert!(
+            (fc.lambda_jobs - expect).abs() <= 1e-12 * expect,
+            "cell {}: λ {} vs {}",
+            fc.cell,
+            fc.lambda_jobs,
+            expect
+        );
+        assert!((0.0..=1.0).contains(&fc.activity), "activity {}", fc.activity);
+        assert!(
+            (0.0..=1.0).contains(&fc.mean_activity),
+            "mean activity {}",
+            fc.mean_activity
+        );
+        // The symmetric grid gives every fluid cell the same capacity
+        // and population, hence the same activity trajectory.
+        assert_eq!(
+            fc.activity.to_bits(),
+            fl.cells[0].activity.to_bits(),
+            "asymmetric activity on a symmetric grid"
+        );
+    }
+    assert!(fl.node_rho >= 0.0 && fl.node_rho.is_finite());
+    assert_eq!(fl.classes.len(), 2);
+    for cr in &fl.classes {
+        assert!(
+            (0.0..=1.0).contains(&cr.satisfaction),
+            "{}: satisfaction {}",
+            cr.name,
+            cr.satisfaction
+        );
+        assert!(cr.lambda_per_cell > 0.0);
+        if let Some(w) = cr.mean_sojourn {
+            assert!(w > 0.0 && w.is_finite(), "{}: sojourn {w}", cr.name);
+        }
+    }
+    // The focus cell still simulates jobs per-UE.
+    assert!(res.report.n_jobs > 0);
+    assert_eq!(res.report.per_cell.iter().map(|c| c.n_jobs).sum::<u64>(), res.report.n_jobs);
+    for c in &res.report.per_cell[1..] {
+        assert_eq!(c.n_jobs, 0, "a fluid cell generated per-UE jobs");
+    }
+}
+
+#[test]
+fn fluid_interference_tracks_per_ue_des_steady_state() {
+    // Same symmetric grid, every neighbor of cell 0 replaced by its
+    // fluid counterpart vs the all-per-UE reference. The IoT cell 0
+    // observes is the sum of the neighbors' published rows, so the
+    // mean-field approximation must land within an order of magnitude
+    // (linear power) of the DES steady state: |Δ mean IoT| ≤ 10 dB.
+    let dense = hex19(6, None, 1, CellSync::Frontier, 11).run();
+    let hybrid = hex19(6, Some(focus_center(0)), 1, CellSync::Frontier, 11).run();
+    let d = dense.report.radio[0].iot_db.mean();
+    let h = hybrid.report.radio[0].iot_db.mean();
+    assert!(d.is_finite() && h.is_finite(), "IoT means: dense {d}, hybrid {h}");
+    assert!(d > 0.0, "per-UE neighbors raised no interference at the focus cell");
+    assert!(h > 0.0, "fluid neighbors raised no interference at the focus cell");
+    assert!(
+        (d - h).abs() <= 10.0,
+        "fluid IoT {h:.2} dB vs per-UE {d:.2} dB — more than 10 dB apart"
+    );
+}
+
+fn assert_bit_identical(a: &ScenarioResult, b: &ScenarioResult, tag: &str) {
+    assert_eq!(a.events, b.events, "{tag}: event counts diverged");
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{tag}: job counts diverged");
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert!(
+            x.job_id == y.job_id
+                && x.cell_id == y.cell_id
+                && x.class_id == y.class_id
+                && x.t_gen.to_bits() == y.t_gen.to_bits()
+                && x.t_comm.to_bits() == y.t_comm.to_bits()
+                && x.t_queue.to_bits() == y.t_queue.to_bits()
+                && x.t_service.to_bits() == y.t_service.to_bits()
+                && x.ttft.to_bits() == y.ttft.to_bits()
+                && x.fate == y.fate,
+            "{tag}: job diverged\n  a: {x:?}\n  b: {y:?}"
+        );
+    }
+    assert_eq!(a.report.to_json(), b.report.to_json(), "{tag}: reports diverged");
+    match (&a.fluid, &b.fluid) {
+        (None, None) => {}
+        (Some(fa), Some(fb)) => {
+            assert_eq!(fa.cells.len(), fb.cells.len(), "{tag}");
+            for (x, y) in fa.cells.iter().zip(&fb.cells) {
+                assert_eq!(x.cell, y.cell, "{tag}");
+                assert_eq!(x.activity.to_bits(), y.activity.to_bits(), "{tag}");
+                assert_eq!(
+                    x.mean_activity.to_bits(),
+                    y.mean_activity.to_bits(),
+                    "{tag}"
+                );
+            }
+            assert_eq!(fa.node_rho.to_bits(), fb.node_rho.to_bits(), "{tag}");
+        }
+        _ => panic!("{tag}: fluid section present on one side only"),
+    }
+}
+
+#[test]
+fn fluid_snapshot_roundtrip_is_byte_stable_and_bit_identical() {
+    let mk = || hex19(5, Some(focus_center(1)), 2, CellSync::Frontier, 13);
+    let cold = mk().run();
+    assert!(cold.fluid.is_some());
+
+    let donor_sc = mk();
+    let mut donor = ScenarioEngine::new(&donor_sc);
+    donor.run_to(0.6);
+    let blob = donor.snapshot();
+    drop(donor);
+
+    // serialize → restore → serialize must not perturb a single byte.
+    let host_sc = mk();
+    let eng = ScenarioEngine::from_snapshot(&host_sc, &blob).expect("restore failed");
+    assert_eq!(blob, eng.snapshot(), "fluid snapshot not byte-stable");
+    drop(eng);
+
+    // ... and the resumed run finishes bit-identical to the cold one.
+    let host_sc = mk();
+    let mut eng = ScenarioEngine::from_snapshot(&host_sc, &blob).unwrap();
+    eng.run_to(f64::INFINITY);
+    assert_bit_identical(&cold, &eng.finish(), "fluid resume");
+
+    // A scenario without the fluid tier must refuse the blob.
+    let plain = hex19(5, None, 2, CellSync::Frontier, 13);
+    assert!(
+        ScenarioEngine::from_snapshot(&plain, &blob).is_err(),
+        "a fluid snapshot restored into a fluid-less scenario"
+    );
+}
+
+#[test]
+fn fluid_off_and_focus_all_are_bit_identical_across_threads_and_schedulers() {
+    // The fidelity contract's off switch: no [fluid] section, and a
+    // focus set whose neighborhood covers the whole grid, both run the
+    // plain per-UE engine — bit-identical to serial at every worker
+    // count and under both parallel schedulers. Mobility keeps the
+    // RadioTick writer live so the bounded-lag merge is exercised.
+    let mk = |fluid: Option<FluidSpec>, threads: usize, sync: CellSync| {
+        let mut b = ScenarioBuilder::new()
+            .scheme(SchemeConfig::icc())
+            .horizon(1.5)
+            .warmup(0.3)
+            .seed(17)
+            .threads(threads)
+            .cell_sync(sync)
+            .service_kind(ServiceModelKind::TokenSampled)
+            .workload(WorkloadClass::chat())
+            .cells(7, CellSpec::new(4))
+            .topology(TopologySpec::hex(300.0))
+            .mobility(MobilitySpec::fixed(30.0))
+            .node(gpu(), 1)
+            .node(gpu(), 1);
+        if let Some(f) = fluid {
+            b = b.fluid(f);
+        }
+        b.build().run()
+    };
+    let serial = mk(None, 1, CellSync::Frontier);
+    assert!(serial.report.n_jobs > 0);
+    // Focus-all classifies zero cells fluid: same engine, same bits,
+    // and no fluid section on the result.
+    let all = mk(Some(focus_center(64)), 1, CellSync::Frontier);
+    assert!(all.fluid.is_none(), "focus-all must disable the fluid tier");
+    assert_bit_identical(&serial, &all, "focus-all serial");
+    // CI's pdes-matrix job pins a single worker count per leg via
+    // ICC6G_PDES_THREADS; a plain `cargo test` sweeps all of them.
+    let counts: Vec<usize> = match std::env::var("ICC6G_PDES_THREADS") {
+        Ok(v) => vec![v.parse().expect("ICC6G_PDES_THREADS must be a worker count")],
+        Err(_) => vec![2, 4, 8],
+    };
+    for threads in counts {
+        for sync in [CellSync::Frontier, CellSync::Barrier] {
+            let tag = format!("{sync:?} x{threads}");
+            assert_bit_identical(&serial, &mk(None, threads, sync), &format!("off {tag}"));
+            assert_bit_identical(
+                &serial,
+                &mk(Some(focus_center(64)), threads, sync),
+                &format!("focus-all {tag}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn hybrid_run_is_thread_invariant() {
+    // Fluid tier live (FluidTick writer in the calendar): the
+    // bounded-lag frontier merge must still be bit-identical to the
+    // serial engine at every worker count.
+    let serial = hex19(5, Some(focus_center(1)), 1, CellSync::Frontier, 19).run();
+    assert!(serial.fluid.is_some());
+    for threads in [2usize, 4, 8] {
+        let par = hex19(5, Some(focus_center(1)), threads, CellSync::Frontier, 19).run();
+        assert_bit_identical(&serial, &par, &format!("hybrid x{threads}"));
+    }
+    let barrier = hex19(5, Some(focus_center(1)), 4, CellSync::Barrier, 19).run();
+    assert_bit_identical(&serial, &barrier, "hybrid barrier x4");
+}
